@@ -1,0 +1,117 @@
+//! Compression-as-a-service demo: a std-thread worker pool (the offline
+//! substitute for a tokio runtime) serves evaluation requests against a
+//! GETA-compressed model with bounded queues for backpressure.
+//!
+//! Layer-3 owns the event loop and process topology: a leader thread
+//! accepts synthetic requests, routes them to workers over an mpsc
+//! channel, each worker owns its own PJRT engine (thread-confined, no
+//! locks on the hot path), and results stream back with latency stats.
+//!
+//! Run: `cargo run --release --example compression_service`
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use geta::config::ExperimentConfig;
+use geta::data::BatchIter;
+use geta::runtime::Engine;
+
+const WORKERS: usize = 2;
+const REQUESTS: usize = 24;
+const QUEUE_DEPTH: usize = 4; // backpressure bound
+
+struct Request {
+    id: usize,
+    idxs: Vec<usize>,
+    sent: Instant,
+}
+
+struct Response {
+    id: usize,
+    loss: f32,
+    latency_ms: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let art = std::path::Path::new("artifacts");
+    let exp = ExperimentConfig::defaults_for("mlp_tiny");
+    // shared dataset (read-only)
+    let (_, eval) = geta::data::SynthData::for_model(
+        &Engine::load(art, "mlp_tiny")?.manifest.config,
+        64,
+        512,
+        3,
+    );
+    let eval = std::sync::Arc::new(eval);
+
+    let (req_tx, req_rx) = mpsc::sync_channel::<Request>(QUEUE_DEPTH);
+    let req_rx = std::sync::Arc::new(std::sync::Mutex::new(req_rx));
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+
+    let mut handles = Vec::new();
+    for w in 0..WORKERS {
+        let rx = req_rx.clone();
+        let tx = resp_tx.clone();
+        let eval = eval.clone();
+        let exp = exp.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            // each worker owns its engine + weights (no shared mutable state)
+            let engine = Engine::load(std::path::Path::new("artifacts"), "mlp_tiny")?;
+            let params = engine.init_params(exp.seed);
+            let q = engine.init_qparams(&params, 8.0);
+            loop {
+                let req = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(req) = req else { break };
+                let (x, y) = eval.batch(&req.idxs);
+                let out = engine.eval_step(&params, &q, &x, &y)?;
+                tx.send(Response {
+                    id: req.id,
+                    loss: out.loss,
+                    latency_ms: req.sent.elapsed().as_secs_f64() * 1e3,
+                })
+                .ok();
+            }
+            println!("worker {w} drained");
+            Ok(())
+        }));
+    }
+    drop(resp_tx);
+
+    // leader: submit requests (sync_channel blocks when queue is full —
+    // that IS the backpressure)
+    let t0 = Instant::now();
+    let mut it = BatchIter::new(eval.len(), 32, 5);
+    for id in 0..REQUESTS {
+        let idxs = it.next_batch();
+        req_tx
+            .send(Request {
+                id,
+                idxs,
+                sent: Instant::now(),
+            })
+            .unwrap();
+    }
+    drop(req_tx);
+
+    let mut lat: Vec<f64> = Vec::new();
+    for resp in resp_rx {
+        lat.push(resp.latency_ms);
+        println!("resp {:>3}: loss {:.4}  latency {:.1} ms", resp.id, resp.loss, resp.latency_ms);
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = t0.elapsed().as_secs_f64();
+    println!(
+        "\nserved {REQUESTS} requests in {:.2}s  ({:.1} req/s)  p50 {:.1} ms  p95 {:.1} ms",
+        total,
+        REQUESTS as f64 / total,
+        lat[lat.len() / 2],
+        lat[(lat.len() * 95 / 100).min(lat.len() - 1)]
+    );
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart — the paper's "Framework Usage" sketch, in Rust:
+//!
+//! ```python
+//! geta = GETA(model); optimizer = geta.qasso()
+//! optimizer.step(); geta.construct_subnet()
+//! ```
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use geta::config::ExperimentConfig;
+use geta::coordinator::{GetaCompressor, Trainer};
+use geta::graph;
+use geta::optim::qasso::StageMask;
+use geta::subnet;
+
+fn main() -> anyhow::Result<()> {
+    let art = std::path::Path::new("artifacts");
+
+    // 1. GETA(model): load the AOT-compiled model + build its QADG search space
+    let mut exp = ExperimentConfig::defaults_for("mlp_tiny");
+    exp.scale_steps(0.5);
+    exp.qasso.target_group_sparsity = 0.4;
+    let t = Trainer::new(art, exp)?;
+    let space = graph::search_space_for(&t.engine.manifest.config)?;
+    println!(
+        "model mlp_tiny: {} params, {} prunable groups, {} quant sites",
+        t.engine.manifest.param_count,
+        space.groups.len(),
+        t.engine.manifest.qsites.len()
+    );
+
+    // 2. optimizer = geta.qasso(); train as normal
+    let mut geta_c = GetaCompressor::new(&t.engine, &t.exp, StageMask::default())?;
+    let r = t.run(&mut geta_c)?;
+    println!(
+        "trained: acc {:.1}%  group sparsity {:.0}%  avg bits {:.1}  rel BOPs {:.2}%",
+        r.accuracy,
+        r.group_sparsity * 100.0,
+        r.avg_bits,
+        r.rel_bops
+    );
+
+    // 3. geta.construct_subnet(): physical slicing + packed quant weights
+    let params = t.engine.init_params(t.exp.seed); // illustrative re-init
+    let costs = geta::metrics::layer_costs(&t.engine.manifest.config)?;
+    let q = t.engine.init_qparams(&params, 8.0);
+    let ngroups = space.groups.len();
+    let pruned = vec![false; ngroups];
+    let cm = subnet::construct(&params, &space.groups, &pruned, &costs, &t.engine.site_specs(), &q);
+    println!(
+        "subnet: {} -> {} params, fp32 {}B -> packed {}B",
+        cm.params_before, cm.params_after, cm.size_fp32_before, cm.size_after
+    );
+    Ok(())
+}

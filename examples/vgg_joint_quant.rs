@@ -1,0 +1,67 @@
+//! Joint weight+activation quantization on VGG7-mini (the Table-4
+//! scenario): GETA's white-box targets vs a DJPQ-like black-box
+//! regularizer on the same substrate. Demonstrates activation-quant sites
+//! flowing through the whole stack (inserted branches in the QADG, the
+//! act rows of the q array, BOPs with learned activation bits).
+//!
+//! Run: `cargo run --release --example vgg_joint_quant`
+
+use geta::baselines;
+use geta::config::ExperimentConfig;
+use geta::coordinator::{GetaCompressor, Trainer};
+use geta::graph;
+use geta::optim::qasso::StageMask;
+
+fn main() -> anyhow::Result<()> {
+    let art = std::path::Path::new("artifacts");
+    let mut exp = ExperimentConfig::defaults_for("vgg7_mini");
+    exp.scale_steps(0.5);
+    exp.qasso.target_group_sparsity = 0.5;
+    let t = Trainer::new(art, exp)?;
+    let nsites = t.engine.manifest.qsites.len();
+    let nact = t
+        .engine
+        .manifest
+        .qsites
+        .iter()
+        .filter(|s| s.param.is_none())
+        .count();
+    println!("vgg7_mini: {nsites} quant sites ({nact} activation sites)");
+
+    println!("\n-- GETA (explicit sparsity=0.5, bits [4,16]) --");
+    let mut g = GetaCompressor::new(&t.engine, &t.exp, StageMask::default())?;
+    let rg = t.run(&mut g)?;
+    println!(
+        "acc {:.2}%  rel BOPs {:.2}%  avg bits {:.1}  achieved sparsity {:.2}",
+        rg.accuracy, rg.rel_bops, rg.avg_bits, rg.group_sparsity
+    );
+
+    println!("\n-- DJPQ-like (black-box: sparsity emerges from lambda) --");
+    let space = graph::search_space_for(&t.engine.manifest.config)?;
+    let params = t.engine.init_params(t.exp.seed);
+    let mut d = baselines::RegularizedJoint::new(
+        0.5,
+        0.02,
+        0.02,
+        4.0,
+        16.0,
+        baselines::base_opt(&t.exp),
+        t.exp.total_steps(),
+        space.groups,
+        &params,
+        false,
+        "DJPQ-like",
+    );
+    let rd = t.run(&mut d)?;
+    println!(
+        "acc {:.2}%  rel BOPs {:.2}%  avg bits {:.1}  achieved sparsity {:.2} (uncontrolled)",
+        rd.accuracy, rd.rel_bops, rd.avg_bits, rd.group_sparsity
+    );
+
+    println!(
+        "\nwhite-box vs black-box: GETA hit its 0.50 target exactly ({:.2}); \
+         the regularizer landed wherever lambda took it ({:.2}).",
+        rg.group_sparsity, rd.group_sparsity
+    );
+    Ok(())
+}

@@ -1,0 +1,139 @@
+"""AOT lowering: JAX train/eval steps -> HLO text + JSON manifests.
+
+This is the ONLY place Python runs in the whole system, and it runs once
+(`make artifacts`). For every model config in configs/models/ it lowers
+
+    train_step(*params, q, x, y) -> (loss, *grads, qgrad, metric)
+    eval_step(*params, q, x, y)  -> task-specific outputs
+
+to HLO **text** (not serialized HloModuleProto: the xla crate's
+xla_extension 0.5.1 rejects jax>=0.5 64-bit instruction ids; the text
+parser reassigns ids — see /opt/xla-example/README.md) plus a manifest
+describing every input/output so the Rust runtime packs literals without
+any hardcoded knowledge of the model.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models a,b,c]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models as M
+
+CONFIG_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "configs", "models")
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple so the Rust
+    side unwraps one tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def load_configs(names=None):
+    cfgs = []
+    for fn in sorted(os.listdir(CONFIG_DIR)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(CONFIG_DIR, fn)) as f:
+            cfg = json.load(f)
+        if names is None or cfg["name"] in names:
+            cfgs.append(cfg)
+    return cfgs
+
+
+def specs_for(model):
+    (xshape, xdt), (yshape, ydt) = model.batch_shapes()
+    param_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for (_, s) in model.param_specs]
+    q_spec = jax.ShapeDtypeStruct((max(model.n_sites(), 1), 3), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct(xshape, DTYPES[xdt])
+    y_spec = jax.ShapeDtypeStruct(yshape, DTYPES[ydt])
+    return param_specs, q_spec, x_spec, y_spec
+
+
+def eval_output_names(cfg):
+    task = cfg["task"]
+    if task == "image_cls":
+        return ["loss", "correct"]
+    if task == "span_qa":
+        return ["loss", "correct", "pred_start", "pred_end"]
+    if task == "lm":
+        return ["loss", "correct", "mask_count"]
+    raise ValueError(task)
+
+
+def lower_model(cfg, out_dir):
+    model = M.build(cfg)
+    name = cfg["name"]
+    param_specs, q_spec, x_spec, y_spec = specs_for(model)
+    args = (*param_specs, q_spec, x_spec, y_spec)
+
+    train_hlo = to_hlo_text(jax.jit(model.train_step).lower(*args))
+    eval_hlo = to_hlo_text(jax.jit(model.eval_step).lower(*args))
+
+    train_path = f"{name}_train.hlo.txt"
+    eval_path = f"{name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, train_path), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(out_dir, eval_path), "w") as f:
+        f.write(eval_hlo)
+
+    (xshape, xdt), (yshape, ydt) = model.batch_shapes()
+    manifest = {
+        "model": name,
+        "config": cfg,
+        "train_hlo": train_path,
+        "eval_hlo": eval_path,
+        "params": [{"name": n, "shape": list(s)} for (n, s) in model.param_specs],
+        "qsites": model.qsites,
+        "q_shape": [max(model.n_sites(), 1), 3],
+        "batch": {"x": {"shape": list(xshape), "dtype": xdt},
+                  "y": {"shape": list(yshape), "dtype": ydt}},
+        "train_outputs": (["loss"] + [f"grad:{n}" for (n, _) in model.param_specs]
+                          + ["qgrad", "metric"]),
+        "eval_outputs": eval_output_names(cfg),
+        "param_count": int(sum(int(np.prod(s)) for (_, s) in model.param_specs)),
+    }
+    mpath = os.path.join(out_dir, f"{name}.manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = manifest["param_count"]
+    print(f"  {name}: {total} params, {model.n_sites()} qsites, "
+          f"train={len(train_hlo)//1024}KiB eval={len(eval_hlo)//1024}KiB")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = set(args.models.split(",")) if args.models else None
+    cfgs = load_configs(names)
+    if not cfgs:
+        print("no configs matched", file=sys.stderr)
+        sys.exit(1)
+    index = []
+    for cfg in cfgs:
+        print(f"lowering {cfg['name']} ({cfg['family']}/{cfg['task']})")
+        man = lower_model(cfg, args.out_dir)
+        index.append({"model": man["model"], "manifest": f"{man['model']}.manifest.json"})
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump({"models": index}, f, indent=1)
+    print(f"wrote {len(index)} models to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

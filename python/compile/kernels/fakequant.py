@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernels: parameterized fake-quantization, eqs. (1)-(6).
+
+The quantizer is the compute hot spot of quantization-aware training — it
+runs elementwise over every quantized weight and activation tensor on every
+forward AND backward pass. Two kernels:
+
+* ``fakequant_fwd`` — eq. (1) nonlinear clip-pow map + eq. (2) uniform
+  round-to-step, fused in one pass.
+* ``fakequant_bwd`` — the three STE partial derivatives (eqs. (4)-(6)) plus
+  the clipped pass-through mask for dx, fused in one pass so the backward
+  reads x once.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the tensor is flattened
+and tiled with a 1-D BlockSpec so each grid step streams one VMEM-resident
+block of ``BLOCK`` elements; the scalar quant parameters (d, t, q_m) ride
+along as (1,1) blocks replicated to every grid step (scalar-prefetch
+pattern), so a single compiled kernel serves every layer. The op is
+elementwise (no MXU work): the roofline is memory-bound, and the fusion of
+all four backward outputs into one kernel is what buys back bandwidth.
+
+On this image Pallas runs ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); interpret mode lowers to plain HLO at trace time so
+the AOT artifact contains ordinary fused elementwise HLO while the BlockSpec
+structure is preserved for real-TPU compilation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+# Block size: 2048 f32 = 8 KiB per operand block. VMEM per fwd grid step is
+# in(8KiB) + out(8KiB) + scalars — far under the ~16 MiB VMEM budget; chosen
+# small enough that tiny layers (hundreds of params) don't over-pad and big
+# enough that the HBM stream is sequential. See EXPERIMENTS.md §Perf.
+BLOCK = 2048
+
+
+def _fwd_kernel(x_ref, d_ref, t_ref, qm_ref, o_ref):
+    """Fused eq.(1)+(2): o = d * round(sgn(x)*clip_pow(|x|)/d)."""
+    x = x_ref[...]
+    d = d_ref[0]
+    t = t_ref[0]
+    qm = qm_ref[0]
+    ax = jnp.abs(x)
+    safe = jnp.maximum(ax, _EPS)
+    c = jnp.where(ax <= qm, jnp.exp(t * jnp.log(safe)),
+                  jnp.exp(t * jnp.log(jnp.maximum(qm, _EPS))))
+    xt = jnp.sign(x) * c
+    o_ref[...] = d * jnp.round(xt / d)
+
+
+def _bwd_kernel(x_ref, d_ref, t_ref, qm_ref, gd_ref, gt_ref, gqm_ref, mask_ref):
+    """Fused eqs.(4)-(6) + STE mask, one read of x."""
+    x = x_ref[...]
+    d = d_ref[0]
+    t = t_ref[0]
+    qm = qm_ref[0]
+    ax = jnp.abs(x)
+    inside = ax <= qm
+    sgn = jnp.sign(x)
+    safe_ax = jnp.maximum(ax, _EPS)
+    safe_qm = jnp.maximum(qm, _EPS)
+    log_ax = jnp.log(safe_ax)
+    log_qm = jnp.log(safe_qm)
+    # clip_pow (eq. 13) shared by eq. (4) and eq. (5)
+    c = jnp.where(inside, jnp.exp(t * log_ax), jnp.exp(t * log_qm))
+    cd = c / d
+    # eq. (4): sgn(x) * (round(c/d) - c/d)
+    gd_ref[...] = sgn * (jnp.round(cd) - cd)
+    # eq. (5): sgn(x) * c * log(.), zero at exact zeros
+    gt = jnp.where(inside, c * log_ax, c * log_qm)
+    gt_ref[...] = sgn * jnp.where(ax <= _EPS, 0.0, gt)
+    # eq. (6): zero inside, sgn(x)*t*qm^(t-1) outside
+    gqm_ref[...] = jnp.where(inside, 0.0, sgn * t * jnp.exp((t - 1.0) * log_qm))
+    # clipped STE pass-through mask for dx
+    mask_ref[...] = jnp.where(inside, 1.0, 0.0)
+
+
+def _pad_len(n):
+    return (n + BLOCK - 1) // BLOCK * BLOCK
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fakequant_fwd(x, d, t, qm):
+    """Pallas forward fake-quant over a tensor of any shape.
+
+    ``d``, ``t``, ``qm`` are scalars (one quantization site). Returns x^Q
+    with the same shape/dtype as x.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    npad = _pad_len(n)
+    flat = jnp.pad(flat, (0, npad - n))
+    scal = lambda v: jnp.asarray(v, flat.dtype).reshape(1)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(npad // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), flat.dtype),
+        interpret=True,
+    )(flat, scal(d), scal(t), scal(qm))
+    return out[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fakequant_bwd(x, d, t, qm):
+    """Pallas backward: returns (grad_d_elem, grad_t_elem, grad_qm_elem,
+    ste_mask), each with the shape of x. The caller contracts the first
+    three against the upstream cotangent to get scalar (d, t, qm) grads.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    npad = _pad_len(n)
+    flat = jnp.pad(flat, (0, npad - n))
+    scal = lambda v: jnp.asarray(v, flat.dtype).reshape(1)
+    outs = pl.pallas_call(
+        _bwd_kernel,
+        grid=(npad // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))] * 4,
+        out_shape=[jax.ShapeDtypeStruct((npad,), flat.dtype)] * 4,
+        interpret=True,
+    )(flat, scal(d), scal(t), scal(qm))
+    return tuple(o[:n].reshape(shape) for o in outs)

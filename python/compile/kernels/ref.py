@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for the parameterized fake-quantizer.
+
+Implements eqs. (1)-(6) and (13)-(14) of the GETA paper exactly, with no
+Pallas involvement. The Pallas kernels in ``fakequant.py`` are validated
+against these functions by ``python/tests/test_kernel.py``; the Rust-side
+reimplementation (``rust/src/quant``) is validated against vectors exported
+from here (see ``python/tests/test_vectors.py``).
+
+All functions are elementwise over ``x`` with scalar quantization
+parameters ``d`` (step size), ``t`` (exponent), ``q_m`` (clip max).
+"""
+
+import jax.numpy as jnp
+
+# Guard for |x|**t at x == 0 (t may drift below 1 during training; the
+# gradient |x|**t * log|x| is undefined at 0 — the paper's STE treats the
+# 0-element contribution as 0).
+_EPS = 1e-12
+
+
+def clip_pow(x, t, q_m):
+    """Eq. (13): clip_{q_m}^t(|x|) — the nonlinearly mapped magnitude."""
+    ax = jnp.abs(x)
+    return jnp.where(ax <= q_m, jnp.power(jnp.maximum(ax, _EPS), t),
+                     jnp.power(jnp.maximum(q_m, _EPS), t))
+
+
+def nonlinear_map(x, t, q_m):
+    """Eq. (1): x-tilde = sgn(x) * clip_pow(x)."""
+    return jnp.sign(x) * clip_pow(x, t, q_m)
+
+
+def fake_quant(x, d, t, q_m):
+    """Eqs. (1)+(2): x^Q = d * round(x-tilde / d)."""
+    xt = nonlinear_map(x, t, q_m)
+    return d * jnp.round(xt / d)
+
+
+def residual(x, d, t, q_m):
+    """Eq. (14): R(x) = round(c/d) - c/d where c = clip_pow(x)."""
+    c = clip_pow(x, t, q_m)
+    return jnp.round(c / d) - c / d
+
+
+def bit_width(d, t, q_m):
+    """Eq. (3): b = log2((q_m^t)/d + 1) + 1."""
+    return jnp.log2(jnp.power(jnp.maximum(q_m, _EPS), t) / d + 1.0) + 1.0
+
+
+def grad_d(x, d, t, q_m):
+    """Eq. (4): dx^Q/dd = sgn(x) * (round(c/d) - c/d) = sgn(x)*R(x)."""
+    return jnp.sign(x) * residual(x, d, t, q_m)
+
+
+def grad_t(x, d, t, q_m):
+    """Eq. (5): dx^Q/dt = sgn(x) * c * log(|x| or q_m) (STE through round)."""
+    ax = jnp.abs(x)
+    inside = jnp.power(jnp.maximum(ax, _EPS), t) * jnp.log(jnp.maximum(ax, _EPS))
+    outside = jnp.power(jnp.maximum(q_m, _EPS), t) * jnp.log(jnp.maximum(q_m, _EPS))
+    g = jnp.where(ax <= q_m, inside, outside)
+    # zero contribution from exact zeros (log undefined there)
+    return jnp.sign(x) * jnp.where(ax <= _EPS, 0.0, g)
+
+
+def grad_qm(x, d, t, q_m):
+    """Eq. (6): dx^Q/dq_m = 0 inside the clip range, sgn(x)*t*q_m^(t-1) outside."""
+    ax = jnp.abs(x)
+    return jnp.where(ax <= q_m, 0.0,
+                     jnp.sign(x) * t * jnp.power(jnp.maximum(q_m, _EPS), t - 1.0))
+
+
+def grad_x_ste(x, d, t, q_m):
+    """Straight-through estimator for dx^Q/dx: pass-through inside the clip
+    range, zero outside (clipped STE, standard for parameterized quantizers
+    [61]; the paper does not specify dx and inherits this choice)."""
+    return jnp.where(jnp.abs(x) <= q_m, 1.0, 0.0)

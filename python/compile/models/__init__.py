@@ -1,0 +1,121 @@
+"""Model registry: config dict -> ModelDef with lowerable train/eval steps.
+
+A ModelDef packages everything aot.py needs:
+  * ``param_specs``  — ordered (name, shape) list; the HLO input order.
+  * ``qsites``       — ordered quantization sites; row i of the q array.
+  * ``init_params``  — numpy initialization (seeded, deterministic).
+  * ``train_step(*params, q, x, y)`` -> (loss, *grads, qgrad, metric)
+  * ``eval_step(*params, q, x, y)``  -> task-specific outputs (see below)
+
+Eval outputs per task:
+  image_cls : (loss, correct_count)
+  span_qa   : (loss, correct_count, pred_start[B], pred_end[B])
+  lm        : (loss, correct_tokens, mask_count)
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from . import cnn, transformer as tfm
+
+BATCH = {"image_cls": 32, "span_qa": 16, "lm": 16}
+
+
+class ModelDef:
+    def __init__(self, cfg, plan, apply_fn, loss_fn, pred_fn=None):
+        self.cfg = cfg
+        self.plan = plan
+        self.apply_fn = apply_fn
+        self.loss_fn = loss_fn
+        self.pred_fn = pred_fn
+        self.param_specs = [(n, s) for (n, s, _) in plan.param_specs]
+        self.qsites = plan.qsites
+        self.names = [n for (n, _, _) in plan.param_specs]
+
+    # ------------------------------------------------------------ shapes
+    def batch_shapes(self):
+        cfg, task = self.cfg, self.cfg["task"]
+        B = BATCH[task]
+        if task == "image_cls":
+            img = cfg["image"]
+            return ((B, img["size"], img["size"], img["channels"]), "f32"), ((B,), "i32")
+        if task == "span_qa":
+            return ((B, cfg["seq_len"]), "i32"), ((B, 2), "i32")
+        if task == "lm":
+            return ((B, cfg["seq_len"]), "i32"), ((B, cfg["seq_len"]), "i32")
+        raise ValueError(task)
+
+    def n_sites(self):
+        return len(self.qsites)
+
+    # -------------------------------------------------------------- init
+    def init_params(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {n: init(rng, shape) for (n, shape, init) in self.plan.param_specs}
+
+    # -------------------------------------------------------------- steps
+    def _pack(self, arrays):
+        return dict(zip(self.names, arrays))
+
+    def _loss(self, params, q, x, y):
+        out = self.apply_fn(params, q, x)
+        return self.loss_fn(out, y)
+
+    def train_step(self, *args):
+        n = len(self.names)
+        params = self._pack(args[:n])
+        q, x, y = args[n], args[n + 1], args[n + 2]
+
+        def f(params, q):
+            loss, metric = self._loss(params, q, x, y)
+            return loss, metric
+
+        (loss, metric), (gp, gq) = jax.value_and_grad(f, argnums=(0, 1), has_aux=True)(params, q)
+        grads = [gp[name] for name in self.names]
+        return (loss, *grads, gq, metric)
+
+    def eval_step(self, *args):
+        n = len(self.names)
+        params = self._pack(args[:n])
+        q, x, y = args[n], args[n + 1], args[n + 2]
+        out = self.apply_fn(params, q, x)
+        loss, metric = self.loss_fn(out, y)
+        res = [loss, metric]
+        if self.cfg["task"] == "span_qa":
+            ps, pe = tfm.bert_preds(out)
+            res += [ps, pe]
+        if self.cfg["task"] == "lm":
+            res += [jnp.sum((y >= 0).astype(jnp.float32))]
+        return tuple(res)
+
+
+def _cls_loss(logits, y):
+    return C.softmax_xent(logits, y), C.correct_count(logits, y)
+
+
+def build(cfg):
+    fam = cfg["family"]
+    if fam == "mlp":
+        plan = cnn.plan_mlp(cfg)
+        return ModelDef(cfg, plan, cnn.make_apply_mlp(cfg, plan), _cls_loss)
+    if fam == "vgg":
+        plan = cnn.plan_vgg(cfg)
+        return ModelDef(cfg, plan, cnn.make_apply_vgg(cfg, plan), _cls_loss)
+    if fam == "resnet":
+        plan = cnn.plan_resnet(cfg)
+        return ModelDef(cfg, plan, cnn.make_apply_resnet(cfg, plan), _cls_loss)
+    if fam == "bert":
+        plan = tfm.plan_bert(cfg)
+        return ModelDef(cfg, plan, tfm.make_apply_bert(cfg, plan), tfm.bert_loss)
+    if fam == "gpt":
+        plan = tfm.plan_gpt(cfg)
+        return ModelDef(cfg, plan, tfm.make_apply_gpt(cfg, plan), tfm.lm_loss)
+    if fam == "vit":
+        plan = tfm.plan_vit(cfg)
+        return ModelDef(cfg, plan, tfm.make_apply_vit(cfg, plan), _cls_loss)
+    if fam == "swin":
+        plan = tfm.plan_swin(cfg)
+        return ModelDef(cfg, plan, tfm.make_apply_swin(cfg, plan), _cls_loss)
+    raise ValueError(f"unknown family {fam}")

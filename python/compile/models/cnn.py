@@ -1,0 +1,144 @@
+"""CNN families: MLP (quickstart), VGG7-mini, ResNet-mini.
+
+Each family exposes ``plan(cfg) -> Plan`` and ``make_apply(cfg, plan) ->
+apply(params, q, x)``. Shapes follow the conventions in common.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+
+
+# ------------------------------------------------------------------- MLP
+def plan_mlp(cfg):
+    p = C.Plan(cfg)
+    img = cfg["image"]
+    din = img["size"] * img["size"] * img["channels"]
+    dims = [din] + list(cfg["hidden"])
+    for i in range(len(cfg["hidden"])):
+        C.plan_linear(p, f"fc{i}", dims[i], dims[i + 1])
+        C.plan_act_site(p, f"fc{i}.act")
+    C.plan_linear(p, "head", dims[-1], cfg["num_classes"])
+    return p
+
+
+def make_apply_mlp(cfg, plan):
+    idx = plan.site_index()
+
+    def apply(params, q, x):
+        env = C.QEnv(q, idx)
+        B = x.shape[0]
+        h = x.reshape(B, -1)
+        for i in range(len(cfg["hidden"])):
+            h = C.linear(env, params, f"fc{i}", h)
+            h = jax.nn.relu(h)
+            h = env.apply(f"fc{i}.act", h)
+        return C.linear(env, params, "head", h)
+
+    return apply
+
+
+# ------------------------------------------------------------------- VGG
+def plan_vgg(cfg):
+    p = C.Plan(cfg)
+    cin = cfg["image"]["channels"]
+    for i, cout in enumerate(cfg["conv_channels"]):
+        C.plan_conv(p, f"features.{i}", cin, cout)
+        C.plan_norm(p, f"features.{i}.bn", cout)
+        C.plan_act_site(p, f"features.{i}.act")
+        cin = cout
+    npool = len(cfg["conv_channels"]) // cfg["pool_every"]
+    fmap = cfg["image"]["size"] >> npool
+    din = cin * fmap * fmap
+    dims = [din] + list(cfg["fc_dims"])
+    for i in range(len(cfg["fc_dims"])):
+        C.plan_linear(p, f"fc{i}", dims[i], dims[i + 1])
+        C.plan_act_site(p, f"fc{i}.act")
+    C.plan_linear(p, "head", dims[-1], cfg["num_classes"])
+    return p
+
+
+def make_apply_vgg(cfg, plan):
+    idx = plan.site_index()
+
+    def apply(params, q, x):
+        env = C.QEnv(q, idx)
+        h = x
+        for i in range(len(cfg["conv_channels"])):
+            h = C.conv2d(env, params, f"features.{i}", h)
+            h = C.batchnorm(params, f"features.{i}.bn", h)
+            h = jax.nn.relu(h)
+            h = env.apply(f"features.{i}.act", h)
+            if (i + 1) % cfg["pool_every"] == 0:
+                h = C.maxpool2(h)
+        B = h.shape[0]
+        h = h.reshape(B, -1)
+        for i in range(len(cfg["fc_dims"])):
+            h = C.linear(env, params, f"fc{i}", h)
+            h = jax.nn.relu(h)
+            h = env.apply(f"fc{i}.act", h)
+        return C.linear(env, params, "head", h)
+
+    return apply
+
+
+# ---------------------------------------------------------------- ResNet
+def _stage_plan(p, sname, cin, cout, blocks, stride):
+    for b in range(blocks):
+        s = stride if b == 0 else 1
+        proj = (s != 1) or (cin != cout)
+        C.plan_conv(p, f"{sname}.{b}.conv1", cin, cout)
+        C.plan_norm(p, f"{sname}.{b}.bn1", cout)
+        C.plan_conv(p, f"{sname}.{b}.conv2", cout, cout)
+        C.plan_norm(p, f"{sname}.{b}.bn2", cout)
+        if proj:
+            C.plan_conv(p, f"{sname}.{b}.proj", cin, cout, k=1)
+            C.plan_norm(p, f"{sname}.{b}.bnp", cout)
+        cin = cout
+    return cin
+
+
+def plan_resnet(cfg):
+    p = C.Plan(cfg)
+    C.plan_conv(p, "stem", cfg["image"]["channels"], cfg["stem_channels"])
+    C.plan_norm(p, "stem.bn", cfg["stem_channels"])
+    cin = cfg["stem_channels"]
+    for si, cout in enumerate(cfg["stage_channels"]):
+        stride = 1 if si == 0 else 2
+        cin = _stage_plan(p, f"stage{si}", cin, cout, cfg["blocks_per_stage"], stride)
+    C.plan_linear(p, "head", cin, cfg["num_classes"])
+    return p
+
+
+def make_apply_resnet(cfg, plan):
+    idx = plan.site_index()
+
+    def block(env, params, name, h, cin, cout, stride):
+        proj = (stride != 1) or (cin != cout)
+        y = C.conv2d(env, params, name + ".conv1", h, stride)
+        y = C.batchnorm(params, name + ".bn1", y)
+        y = jax.nn.relu(y)
+        y = C.conv2d(env, params, name + ".conv2", y)
+        y = C.batchnorm(params, name + ".bn2", y)
+        if proj:
+            h = C.conv2d(env, params, name + ".proj", h, stride)
+            h = C.batchnorm(params, name + ".bnp", h)
+        return jax.nn.relu(h + y)
+
+    def apply(params, q, x):
+        env = C.QEnv(q, idx)
+        h = C.conv2d(env, params, "stem", x)
+        h = C.batchnorm(params, "stem.bn", h)
+        h = jax.nn.relu(h)
+        cin = cfg["stem_channels"]
+        for si, cout in enumerate(cfg["stage_channels"]):
+            stride = 1 if si == 0 else 2
+            for b in range(cfg["blocks_per_stage"]):
+                s = stride if b == 0 else 1
+                h = block(env, params, f"stage{si}.{b}", h, cin, cout, s)
+                cin = cout
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        return C.linear(env, params, "head", h)
+
+    return apply

@@ -1,0 +1,205 @@
+"""Shared functional layers for the JAX model zoo (Layer 2).
+
+Models are pure functions over a ``params`` dict (name -> array) and a
+``q`` array of shape [n_sites, 3] holding one (d, t, q_m) row per
+quantization site. Site order is fixed at plan time and exported in the
+AOT manifest so the Rust coordinator indexes rows identically.
+
+Weight layout conventions (mirrored by rust/src/graph/builders.rs):
+  conv    : HWIO  [kh, kw, cin, cout]   (prunable dim = cout = axis 3)
+  linear  : [din, dout]                 (prunable dim = dout = axis 1)
+  bn/ln   : gamma/beta [c]
+  embed   : [vocab, dim]
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..quantizer import fake_quant
+
+
+class Plan:
+    """Collects parameter specs and quantization sites in a fixed order."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.param_specs = []   # (name, shape)
+        self.qsites = []        # {name, kind, param}
+        self._seen = set()
+
+    def param(self, name, shape, init):
+        assert name not in self._seen, f"duplicate param {name}"
+        self._seen.add(name)
+        self.param_specs.append((name, tuple(int(s) for s in shape), init))
+        return name
+
+    def qsite(self, name, kind, param=None):
+        self.qsites.append({"name": name, "kind": kind, "param": param})
+
+    def site_index(self):
+        return {s["name"]: i for i, s in enumerate(self.qsites)}
+
+
+class QEnv:
+    """Runtime quantization context: applies fake-quant at registered sites."""
+
+    def __init__(self, q, site_index):
+        self.q = q
+        self.idx = site_index
+
+    def apply(self, site, x):
+        if site not in self.idx:
+            return x
+        i = self.idx[site]
+        return fake_quant(x, self.q[i, 0], self.q[i, 1], self.q[i, 2])
+
+
+# ---------------------------------------------------------------- inits
+def he_conv(rng, shape):
+    kh, kw, cin, _ = shape
+    std = np.sqrt(2.0 / (kh * kw * cin))
+    return (rng.normal(size=shape) * std).astype(np.float32)
+
+
+def glorot_linear(rng, shape):
+    din, dout = shape
+    std = np.sqrt(2.0 / (din + dout))
+    return (rng.normal(size=shape) * std).astype(np.float32)
+
+
+def zeros(rng, shape):
+    return np.zeros(shape, np.float32)
+
+
+def ones(rng, shape):
+    return np.ones(shape, np.float32)
+
+
+def embed_init(rng, shape):
+    return (rng.normal(size=shape) * 0.02).astype(np.float32)
+
+
+# ---------------------------------------------------------------- layers
+def conv2d(env, params, name, x, stride=1):
+    """3x3/1x1 conv, NHWC, SAME padding, weight-quantized at site <name>."""
+    w = env.apply(name + ".weight", params[name + ".weight"])
+    b = params[name + ".bias"]
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def linear(env, params, name, x):
+    w = env.apply(name + ".weight", params[name + ".weight"])
+    b = params[name + ".bias"]
+    return x @ w + b
+
+
+def batchnorm(params, name, x, eps=1e-5):
+    """Batch-statistics normalization over (N, H, W); stateless (see
+    DESIGN.md decision 3)."""
+    axes = tuple(range(x.ndim - 1))
+    mu = jnp.mean(x, axis=axes, keepdims=True)
+    var = jnp.var(x, axis=axes, keepdims=True)
+    xhat = (x - mu) * lax.rsqrt(var + eps)
+    return xhat * params[name + ".gamma"] + params[name + ".beta"]
+
+
+def layernorm(params, name, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xhat = (x - mu) * lax.rsqrt(var + eps)
+    return xhat * params[name + ".gamma"] + params[name + ".beta"]
+
+
+def maxpool2(x):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def attention(env, params, name, x, heads, causal=False):
+    """Multi-head self-attention; q/k/v/o projection weights are quant sites.
+
+    Head structure is what makes per-channel pruning insufficient (paper
+    §1.1): the Rust dependency analysis groups the per-head slices of
+    wq/wk/wv/wo jointly.
+    """
+    B, S, D = x.shape
+    hd = D // heads
+    q = linear(env, params, name + ".wq", x)
+    k = linear(env, params, name + ".wk", x)
+    v = linear(env, params, name + ".wv", x)
+
+    def split(t):
+        return t.reshape(B, S, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(B, S, D)
+    return linear(env, params, name + ".wo", y)
+
+
+def transformer_block(env, params, name, x, heads, mlp_ratio, causal=False):
+    """Pre-LN transformer block."""
+    h = layernorm(params, name + ".ln1", x)
+    x = x + attention(env, params, name + ".attn", h, heads, causal)
+    h = layernorm(params, name + ".ln2", x)
+    h = linear(env, params, name + ".fc1", h)
+    h = jax.nn.gelu(h)
+    h = linear(env, params, name + ".fc2", h)
+    return x + h
+
+
+# ------------------------------------------------- plan-side constructors
+def plan_conv(plan, name, cin, cout, k=3, quant=True):
+    plan.param(name + ".weight", (k, k, cin, cout), he_conv)
+    plan.param(name + ".bias", (cout,), zeros)
+    if quant and plan.cfg["quant"]["weight"]:
+        plan.qsite(name + ".weight", "weight", name + ".weight")
+
+
+def plan_linear(plan, name, din, dout, quant=True):
+    plan.param(name + ".weight", (din, dout), glorot_linear)
+    plan.param(name + ".bias", (dout,), zeros)
+    if quant and plan.cfg["quant"]["weight"]:
+        plan.qsite(name + ".weight", "weight", name + ".weight")
+
+
+def plan_norm(plan, name, c):
+    plan.param(name + ".gamma", (c,), ones)
+    plan.param(name + ".beta", (c,), zeros)
+
+
+def plan_act_site(plan, name):
+    if plan.cfg["quant"].get("act", False):
+        plan.qsite(name, "act", None)
+
+
+def plan_attn(plan, name, dim, quant=True):
+    for p in ("wq", "wk", "wv", "wo"):
+        plan_linear(plan, f"{name}.{p}", dim, dim, quant)
+
+
+def plan_block(plan, name, dim, mlp_ratio, quant=True):
+    plan_norm(plan, name + ".ln1", dim)
+    plan_attn(plan, name + ".attn", dim, quant)
+    plan_norm(plan, name + ".ln2", dim)
+    plan_linear(plan, name + ".fc1", dim, dim * mlp_ratio, quant)
+    plan_linear(plan, name + ".fc2", dim * mlp_ratio, dim, quant)
+
+
+# ---------------------------------------------------------------- losses
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def correct_count(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,201 @@
+"""Transformer families: BERT-mini (span QA), GPT-mini (causal LM),
+ViT-mini / SimpleViT-mini (image classification), Swin-mini (hierarchical).
+
+The attention-head dependency structure (per-head slices of wq/wk/wv tied
+to the corresponding wo rows) is exactly what the paper's QADG handles and
+per-channel schemes (DJPQ/BB) cannot — the Rust graph builders mirror these
+layouts to build head-granular pruning groups.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+
+
+# ------------------------------------------------------------------ BERT
+def plan_bert(cfg):
+    p = C.Plan(cfg)
+    p.param("embed.tok", (cfg["vocab"], cfg["dim"]), C.embed_init)
+    p.param("embed.pos", (cfg["seq_len"], cfg["dim"]), C.embed_init)
+    C.plan_norm(p, "embed.ln", cfg["dim"])
+    for b in range(cfg["blocks"]):
+        C.plan_block(p, f"block{b}", cfg["dim"], cfg["mlp_ratio"])
+    C.plan_norm(p, "final.ln", cfg["dim"])
+    C.plan_linear(p, "span_head", cfg["dim"], 2)
+    return p
+
+
+def make_apply_bert(cfg, plan):
+    idx = plan.site_index()
+
+    def apply(params, q, x):
+        env = C.QEnv(q, idx)
+        h = params["embed.tok"][x] + params["embed.pos"][None, :, :]
+        h = C.layernorm(params, "embed.ln", h)
+        for b in range(cfg["blocks"]):
+            h = C.transformer_block(env, params, f"block{b}", h,
+                                    cfg["heads"], cfg["mlp_ratio"])
+        h = C.layernorm(params, "final.ln", h)
+        logits = C.linear(env, params, "span_head", h)  # [B, S, 2]
+        return logits[..., 0], logits[..., 1]           # start, end
+
+    return apply
+
+
+def bert_loss(outputs, y):
+    """y: [B, 2] gold (start, end) token indices."""
+    start_logits, end_logits = outputs
+    loss = C.softmax_xent(start_logits, y[:, 0]) + C.softmax_xent(end_logits, y[:, 1])
+    metric = (C.correct_count(start_logits, y[:, 0]) +
+              C.correct_count(end_logits, y[:, 1]))
+    return loss, metric
+
+
+def bert_preds(outputs):
+    start_logits, end_logits = outputs
+    return (jnp.argmax(start_logits, axis=-1).astype(jnp.int32),
+            jnp.argmax(end_logits, axis=-1).astype(jnp.int32))
+
+
+# ------------------------------------------------------------------- GPT
+def plan_gpt(cfg):
+    p = C.Plan(cfg)
+    p.param("embed.tok", (cfg["vocab"], cfg["dim"]), C.embed_init)
+    p.param("embed.pos", (cfg["seq_len"], cfg["dim"]), C.embed_init)
+    for b in range(cfg["blocks"]):
+        C.plan_block(p, f"block{b}", cfg["dim"], cfg["mlp_ratio"])
+    C.plan_norm(p, "final.ln", cfg["dim"])
+    C.plan_linear(p, "lm_head", cfg["dim"], cfg["vocab"])
+    return p
+
+
+def make_apply_gpt(cfg, plan):
+    idx = plan.site_index()
+
+    def apply(params, q, x):
+        env = C.QEnv(q, idx)
+        h = params["embed.tok"][x] + params["embed.pos"][None, :, :]
+        for b in range(cfg["blocks"]):
+            h = C.transformer_block(env, params, f"block{b}", h,
+                                    cfg["heads"], cfg["mlp_ratio"], causal=True)
+        h = C.layernorm(params, "final.ln", h)
+        return C.linear(env, params, "lm_head", h)  # [B, S, V]
+
+    return apply
+
+
+def lm_loss(logits, y):
+    """y: [B, S] next-token targets; positions with y < 0 are masked."""
+    mask = (y >= 0).astype(jnp.float32)
+    labels = jnp.maximum(y, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    correct = jnp.sum((jnp.argmax(logits, -1) == labels).astype(jnp.float32) * mask)
+    return loss, correct
+
+
+# ------------------------------------------------------------------- ViT
+def plan_vit(cfg):
+    p = C.Plan(cfg)
+    ps, dim = cfg["patch"], cfg["dim"]
+    C.plan_conv(p, "patch_embed", cfg["image"]["channels"], dim, k=ps)
+    ntok = (cfg["image"]["size"] // ps) ** 2
+    if cfg["pool"] == "cls":
+        p.param("cls_token", (1, 1, dim), C.zeros)
+        ntok += 1
+    p.param("pos_embed", (ntok, dim), C.embed_init)
+    for b in range(cfg["blocks"]):
+        C.plan_block(p, f"block{b}", dim, cfg["mlp_ratio"])
+    C.plan_norm(p, "final.ln", dim)
+    C.plan_linear(p, "head", dim, cfg["num_classes"])
+    return p
+
+
+def make_apply_vit(cfg, plan):
+    idx = plan.site_index()
+    ps = cfg["patch"]
+
+    def apply(params, q, x):
+        env = C.QEnv(q, idx)
+        w = env.apply("patch_embed.weight", params["patch_embed.weight"])
+        h = jax.lax.conv_general_dilated(
+            x, w, window_strides=(ps, ps), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = h + params["patch_embed.bias"]
+        B = h.shape[0]
+        h = h.reshape(B, -1, cfg["dim"])  # [B, T, D]
+        if cfg["pool"] == "cls":
+            cls = jnp.broadcast_to(params["cls_token"], (B, 1, cfg["dim"]))
+            h = jnp.concatenate([cls, h], axis=1)
+        h = h + params["pos_embed"][None, :, :]
+        for b in range(cfg["blocks"]):
+            h = C.transformer_block(env, params, f"block{b}", h,
+                                    cfg["heads"], cfg["mlp_ratio"])
+        h = C.layernorm(params, "final.ln", h)
+        h = h[:, 0] if cfg["pool"] == "cls" else jnp.mean(h, axis=1)
+        return C.linear(env, params, "head", h)
+
+    return apply
+
+
+# ------------------------------------------------------------------ Swin
+def plan_swin(cfg):
+    """Hierarchical ViT: stages with patch merging between them. Attention
+    is full within a stage (at mini scale the whole map fits one window;
+    documented substitution in DESIGN.md)."""
+    p = C.Plan(cfg)
+    ps = cfg["patch"]
+    C.plan_conv(p, "patch_embed", cfg["image"]["channels"], cfg["stage_dims"][0], k=ps)
+    side = cfg["image"]["size"] // ps
+    p.param("pos_embed", (side * side, cfg["stage_dims"][0]), C.embed_init)
+    for si, dim in enumerate(cfg["stage_dims"]):
+        for b in range(cfg["stage_blocks"][si]):
+            C.plan_block(p, f"stage{si}.block{b}", dim, cfg["mlp_ratio"])
+        if si + 1 < len(cfg["stage_dims"]):
+            # patch merging: concat 2x2 -> linear to next dim
+            C.plan_linear(p, f"merge{si}", dim * 4, cfg["stage_dims"][si + 1])
+            C.plan_norm(p, f"merge{si}.ln", dim * 4)
+    C.plan_norm(p, "final.ln", cfg["stage_dims"][-1])
+    C.plan_linear(p, "head", cfg["stage_dims"][-1], cfg["num_classes"])
+    return p
+
+
+def make_apply_swin(cfg, plan):
+    idx = plan.site_index()
+    ps = cfg["patch"]
+
+    def merge(env, params, name, h, side, dim):
+        B = h.shape[0]
+        g = h.reshape(B, side, side, dim)
+        g = jnp.concatenate([g[:, 0::2, 0::2], g[:, 1::2, 0::2],
+                             g[:, 0::2, 1::2], g[:, 1::2, 1::2]], axis=-1)
+        g = g.reshape(B, (side // 2) * (side // 2), dim * 4)
+        g = C.layernorm(params, name + ".ln", g)
+        return C.linear(env, params, name, g)
+
+    def apply(params, q, x):
+        env = C.QEnv(q, idx)
+        w = env.apply("patch_embed.weight", params["patch_embed.weight"])
+        h = jax.lax.conv_general_dilated(
+            x, w, window_strides=(ps, ps), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = h + params["patch_embed.bias"]
+        B = h.shape[0]
+        side = cfg["image"]["size"] // ps
+        h = h.reshape(B, side * side, cfg["stage_dims"][0])
+        h = h + params["pos_embed"][None, :, :]
+        for si, dim in enumerate(cfg["stage_dims"]):
+            for b in range(cfg["stage_blocks"][si]):
+                h = C.transformer_block(env, params, f"stage{si}.block{b}", h,
+                                        cfg["heads"], cfg["mlp_ratio"])
+            if si + 1 < len(cfg["stage_dims"]):
+                h = merge(env, params, f"merge{si}", h, side, dim)
+                side //= 2
+        h = C.layernorm(params, "final.ln", h)
+        h = jnp.mean(h, axis=1)
+        return C.linear(env, params, "head", h)
+
+    return apply

@@ -1,0 +1,56 @@
+"""Differentiable parameterized quantizer (Layer-2 glue over the L1 kernel).
+
+``fake_quant(x, d, t, qm)`` behaves like eqs. (1)-(2) in the forward pass
+and routes the backward pass through the straight-through-estimator partial
+derivatives of eqs. (4)-(6), computed by the fused Pallas backward kernel.
+
+The custom VJP is what lets one jitted ``train_step`` produce gradients for
+both the weights and the quantization parameters — which is exactly the
+interface the Rust QASSO optimizer consumes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fakequant as fk
+
+
+@jax.custom_vjp
+def fake_quant(x, d, t, qm):
+    """Quantize tensor ``x`` with scalar site parameters (d, t, q_m)."""
+    return fk.fakequant_fwd(x, d, t, qm)
+
+
+def _fq_fwd(x, d, t, qm):
+    y = fk.fakequant_fwd(x, d, t, qm)
+    return y, (x, d, t, qm)
+
+
+def _fq_bwd(res, g):
+    x, d, t, qm = res
+    gd_e, gt_e, gqm_e, mask = fk.fakequant_bwd(x, d, t, qm)
+    # scalar quant-param grads: contract elementwise partials with cotangent
+    gd = jnp.sum(g * gd_e)
+    gt = jnp.sum(g * gt_e)
+    gqm = jnp.sum(g * gqm_e)
+    gx = g * mask  # clipped STE
+    return gx, gd, gt, gqm
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def init_qparams(w, target_bits):
+    """Paper Appendix C initialization: t = 1, q_m = max|w|, d chosen so the
+    initial bit width equals ``target_bits`` via inverting eq. (3):
+    d = q_m^t / (2^(b-1) - 1)."""
+    qm = float(jnp.max(jnp.abs(w)))
+    qm = max(qm, 1e-3)
+    t = 1.0
+    d = (qm ** t) / (2.0 ** (target_bits - 1) - 1.0)
+    return d, t, qm
+
+
+def bit_width(d, t, qm):
+    """Eq. (3)."""
+    return jnp.log2(jnp.power(jnp.maximum(qm, 1e-12), t) / d + 1.0) + 1.0

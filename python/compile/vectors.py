@@ -1,0 +1,54 @@
+"""Export golden quantizer vectors for the Rust-side reimplementation.
+
+rust/src/quant implements eqs. (1)-(6), (13)-(14) natively (the QASSO joint
+stage needs x^Q, clip and R(x) on the Rust hot path). This script dumps the
+oracle's outputs for a grid of (x, d, t, q_m) so `cargo test` can validate
+the Rust math bit-for-bit against Layer 1's oracle.
+
+Usage: python -m compile.vectors --out ../artifacts/quant_vectors.json
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "quant_vectors.json"))
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(42)
+    cases = []
+    for (d, t, qm) in [(0.1, 1.0, 1.0), (0.05, 1.2, 0.8), (0.02, 0.9, 2.0),
+                       (0.25, 1.0, 0.5), (0.004, 1.05, 1.5)]:
+        x = np.concatenate([
+            rng.normal(scale=0.7, size=24),
+            np.array([0.0, qm, -qm, qm * 1.5, -qm * 2.0, d / 2, -d / 2]),
+        ]).astype(np.float32)
+        xj = jnp.asarray(x)
+        cases.append({
+            "d": d, "t": t, "qm": qm,
+            "x": x.tolist(),
+            "xq": np.asarray(ref.fake_quant(xj, d, t, qm)).tolist(),
+            "clip": np.asarray(ref.clip_pow(xj, t, qm)).tolist(),
+            "residual": np.asarray(ref.residual(xj, d, t, qm)).tolist(),
+            "grad_d": np.asarray(ref.grad_d(xj, d, t, qm)).tolist(),
+            "grad_t": np.asarray(ref.grad_t(xj, d, t, qm)).tolist(),
+            "grad_qm": np.asarray(ref.grad_qm(xj, d, t, qm)).tolist(),
+            "bit_width": float(ref.bit_width(d, t, qm)),
+        })
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"wrote {len(cases)} vector cases to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

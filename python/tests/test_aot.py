@@ -1,0 +1,57 @@
+"""AOT pipeline: manifests agree with the live models, HLO text is sane.
+
+Requires `make artifacts` to have run (skips otherwise) — this is the
+contract test between Layer 2 and the Rust runtime."""
+
+import json
+import os
+
+import pytest
+
+from compile import models as M
+from compile.aot import load_configs, eval_output_names
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "index.json")),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+def manifests():
+    with open(os.path.join(ART, "index.json")) as f:
+        idx = json.load(f)
+    for entry in idx["models"]:
+        with open(os.path.join(ART, entry["manifest"])) as f:
+            yield json.load(f)
+
+
+def test_index_lists_all_configs():
+    built = {m["model"] for m in manifests()}
+    want = {c["name"] for c in load_configs()}
+    assert built == want
+
+
+@pytest.mark.parametrize("man", list(manifests()), ids=lambda m: m["model"])
+def test_manifest_matches_model(man):
+    model = M.build(man["config"])
+    assert [p["name"] for p in man["params"]] == model.names
+    for p, (name, shape) in zip(man["params"], model.param_specs):
+        assert tuple(p["shape"]) == tuple(shape), name
+    assert man["qsites"] == model.qsites
+    assert man["train_outputs"][0] == "loss"
+    assert man["train_outputs"][-2:] == ["qgrad", "metric"]
+    assert man["eval_outputs"] == eval_output_names(man["config"])
+    assert man["q_shape"][0] == max(model.n_sites(), 1)
+
+
+@pytest.mark.parametrize("man", list(manifests()), ids=lambda m: m["model"])
+def test_hlo_text_present_and_parseable_shape(man):
+    for key in ("train_hlo", "eval_hlo"):
+        path = os.path.join(ART, man[key])
+        assert os.path.exists(path), path
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text
+        # the entry computation must take params + q + x + y inputs
+        nparams = len(man["params"])
+        assert text.count("parameter(") >= nparams + 3

@@ -1,0 +1,120 @@
+"""Layer-1 correctness: Pallas fake-quant kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel layer: hypothesis sweeps
+shapes and parameter regimes; every output is asserted allclose against
+kernels/ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fakequant as fk
+from compile.kernels import ref
+
+ATOL = 1e-5
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", [(7,), (64,), (2048,), (2049,), (33, 65), (4, 5, 6)])
+def test_fwd_matches_ref_shapes(shape):
+    x = _rand(shape, 0)
+    d, t, qm = 0.05, 1.1, 1.2
+    got = fk.fakequant_fwd(x, d, t, qm)
+    want = ref.fake_quant(x, d, t, qm)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+@pytest.mark.parametrize("shape", [(5,), (130,), (2048,), (3000,), (17, 19)])
+def test_bwd_matches_ref_shapes(shape):
+    x = _rand(shape, 1)
+    d, t, qm = 0.03, 0.95, 0.9
+    gd, gt, gqm, mask = fk.fakequant_bwd(x, d, t, qm)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(ref.grad_d(x, d, t, qm)), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(gt), np.asarray(ref.grad_t(x, d, t, qm)), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(gqm), np.asarray(ref.grad_qm(x, d, t, qm)), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(mask), np.asarray(ref.grad_x_ste(x, d, t, qm)), atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=512),
+    d=st.floats(min_value=1e-3, max_value=0.5),
+    t=st.floats(min_value=0.7, max_value=1.4),
+    qm=st.floats(min_value=0.1, max_value=4.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_fwd_hypothesis_sweep(n, d, t, qm, seed):
+    x = _rand((n,), seed, scale=qm)
+    got = fk.fakequant_fwd(x, d, t, qm)
+    want = ref.fake_quant(x, d, t, qm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4 * max(1.0, qm), rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=256),
+    d=st.floats(min_value=1e-3, max_value=0.3),
+    t=st.floats(min_value=0.8, max_value=1.3),
+    qm=st.floats(min_value=0.2, max_value=2.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_bwd_hypothesis_sweep(n, d, t, qm, seed):
+    x = _rand((n,), seed, scale=qm)
+    gd, gt, gqm, mask = fk.fakequant_bwd(x, d, t, qm)
+    # grad_d = sgn*(round(c/d) - c/d): the kernel computes c = exp(t*log x)
+    # while the oracle uses power(x, t); a 1-ulp difference in c is
+    # amplified by 1/d and can flip the round, shifting the residual by
+    # exactly +-1. Compare modulo 1 with a c/d-scale-aware tolerance.
+    diff = np.asarray(gd) - np.asarray(ref.grad_d(x, d, t, qm))
+    tol = max(1e-4, 32 * np.finfo(np.float32).eps * (qm ** t) / d)
+    assert np.max(np.abs(diff - np.round(diff))) < tol
+    np.testing.assert_allclose(np.asarray(gt), np.asarray(ref.grad_t(x, d, t, qm)), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gqm), np.asarray(ref.grad_qm(x, d, t, qm)), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(mask), np.asarray(ref.grad_x_ste(x, d, t, qm)), atol=ATOL)
+
+
+# ---------------------------------------------------------- oracle sanity
+def test_quantized_values_are_multiples_of_d():
+    x = _rand((257,), 3)
+    d = 0.125
+    y = np.asarray(ref.fake_quant(x, d, 1.0, 1.0))
+    ratio = y / d
+    np.testing.assert_allclose(ratio, np.round(ratio), atol=1e-5)
+
+
+def test_clip_saturates_beyond_qm():
+    d, t, qm = 0.1, 1.0, 0.5
+    big = jnp.asarray([10.0, -10.0, 0.6])
+    y = np.asarray(ref.fake_quant(big, d, t, qm))
+    sat = d * np.round(qm / d)
+    np.testing.assert_allclose(np.abs(y), sat, atol=1e-6)
+
+
+def test_bit_width_eq3_roundtrip():
+    # d chosen for b bits must give back b via eq. (3)
+    for b in [2, 4, 8, 16]:
+        qm, t = 1.7, 1.0
+        d = qm**t / (2.0 ** (b - 1) - 1)
+        got = float(ref.bit_width(d, t, qm))
+        assert abs(got - b) < 1e-6, (b, got)
+
+
+def test_grad_qm_zero_inside_clip():
+    x = jnp.asarray([0.1, -0.2, 0.3])
+    g = np.asarray(ref.grad_qm(x, 0.05, 1.0, 1.0))
+    np.testing.assert_allclose(g, 0.0)
+
+
+def test_grad_d_bounded_by_half():
+    # round(c/d) - c/d is always in [-0.5, 0.5]
+    x = _rand((1000,), 7, scale=3.0)
+    g = np.asarray(ref.grad_d(x, 0.07, 1.1, 1.0))
+    assert np.all(np.abs(g) <= 0.5 + 1e-6)

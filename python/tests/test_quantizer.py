@@ -1,0 +1,68 @@
+"""Layer-2 quantizer glue: custom_vjp gradients match the analytic STE
+formulas (eqs. 4-6) and the init/bit-width helpers invert eq. (3)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import quantizer
+from compile.kernels import ref
+
+
+def _x(shape=(41,), seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(np.float32))
+
+
+def test_vjp_scalar_grads_match_analytic():
+    x = _x((23, 7), 5)
+    d, t, qm = 0.04, 1.05, 1.3
+    cot = _x((23, 7), 6)  # arbitrary upstream cotangent
+
+    def f(x, d, t, qm):
+        return jnp.sum(quantizer.fake_quant(x, d, t, qm) * cot)
+
+    gx, gd, gt, gqm = jax.grad(f, argnums=(0, 1, 2, 3))(x, d, t, qm)
+    np.testing.assert_allclose(float(gd), float(jnp.sum(cot * ref.grad_d(x, d, t, qm))), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(gt), float(jnp.sum(cot * ref.grad_t(x, d, t, qm))), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(gqm), float(jnp.sum(cot * ref.grad_qm(x, d, t, qm))), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(cot * ref.grad_x_ste(x, d, t, qm)), atol=1e-5)
+
+
+def test_vjp_inside_jit_and_grad_of_loss():
+    x = _x((64,), 9)
+
+    @jax.jit
+    def loss(x, d, t, qm):
+        y = quantizer.fake_quant(x, d, t, qm)
+        return jnp.mean((y - x) ** 2)
+
+    g = jax.grad(loss, argnums=(1, 2, 3))(x, 0.05, 1.0, 1.0)
+    assert all(np.isfinite(float(v)) for v in g)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16, 32])
+def test_init_qparams_hits_target_bits(bits):
+    w = _x((100,), 11, scale=0.5)
+    d, t, qm = quantizer.init_qparams(w, bits)
+    got = float(quantizer.bit_width(d, t, qm))
+    assert abs(got - bits) < 1e-4
+    assert t == 1.0
+    assert abs(qm - float(jnp.max(jnp.abs(w)))) < 1e-6
+
+
+def test_init_qparams_degenerate_weight():
+    # all-zero weight must not produce inf/nan params
+    w = jnp.zeros((10,))
+    d, t, qm = quantizer.init_qparams(w, 8)
+    assert np.isfinite(d) and d > 0 and qm > 0
+
+
+def test_fake_quant_idempotent_on_grid():
+    # quantizing an already-quantized tensor (t=1) is identity
+    x = _x((200,), 13)
+    d, t, qm = 0.1, 1.0, 1.0
+    y1 = quantizer.fake_quant(x, d, t, qm)
+    y2 = quantizer.fake_quant(y1, d, t, qm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)

@@ -1,0 +1,47 @@
+//! End-to-end steps/second per paper-table workload: the full
+//! PJRT-step + QASSO-update loop each table's runs are made of. One bench
+//! per table family (table2/3/4/5/6, fig3), reduced to a short measured
+//! window.
+
+use geta::config::ExperimentConfig;
+use geta::coordinator::{Compressor, GetaCompressor, Trainer};
+use geta::data::BatchIter;
+use geta::optim::qasso::StageMask;
+use geta::util::bench::Bencher;
+
+fn main() {
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !art.join("index.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new(2, 10);
+    let table_models = [
+        ("table2", "resnet_mini"),
+        ("table3", "bert_mini"),
+        ("table4", "vgg7_mini"),
+        ("table5", "resnet_mini_l"),
+        ("table6", "vit_mini"),
+        ("fig3", "gpt_mini"),
+    ];
+    for (table, model) in table_models {
+        let mut exp = ExperimentConfig::defaults_for(model);
+        exp.n_train = 256;
+        exp.n_eval = 64;
+        let t = Trainer::new(&art, exp).unwrap();
+        let mut params = t.engine.init_params(0);
+        let mut q = t.engine.init_qparams(&params, t.exp.qasso.init_bits);
+        let mut geta_c = GetaCompressor::new(&t.engine, &t.exp, StageMask::default()).unwrap();
+        let mut iter = BatchIter::new(t.train_data.len(), t.batch_size(), 3);
+        let mut step = 0usize;
+        b.bench(&format!("{table}_train_step/{model}"), || {
+            let idxs = iter.next_batch();
+            let (x, y) = t.train_data.batch(&idxs);
+            let out = t.engine.train_step(&params, &q, &x, &y).unwrap();
+            geta_c.step(&mut params, &mut q, &out.grads, &out.qgrads, 0.01, step);
+            step += 1;
+        });
+    }
+    std::fs::create_dir_all("reports").ok();
+    b.write_log(std::path::Path::new("reports/bench_e2e.json")).ok();
+}

@@ -1,0 +1,31 @@
+//! Graph-analysis latency: QADNN trace build, QADG (Algorithm 1) and
+//! dependency analysis per model family. These run once per training job,
+//! so the target is "negligible vs one PJRT step" (see EXPERIMENTS.md §Perf).
+
+use geta::graph::{self, builders, qadg};
+use geta::util::bench::Bencher;
+use geta::util::json;
+
+fn main() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/models");
+    let mut b = Bencher::new(3, 30);
+    for model in [
+        "mlp_tiny", "vgg7_mini", "resnet_mini", "bert_mini", "gpt_mini", "vit_mini", "swin_mini",
+    ] {
+        let cfg = json::parse_file(&root.join(format!("{model}.json"))).unwrap();
+        b.bench(&format!("trace_build/{model}"), || {
+            builders::build_trace(&cfg, true).unwrap()
+        });
+        let traced = builders::build_trace(&cfg, true).unwrap();
+        b.bench(&format!("qadg/{model}"), || qadg::qadg_analysis(&traced));
+        let reduced = qadg::qadg_analysis(&traced);
+        b.bench(&format!("depgraph/{model}"), || {
+            graph::analyze(&reduced).unwrap()
+        });
+        b.bench(&format!("full_pipeline/{model}"), || {
+            graph::search_space_for(&cfg).unwrap()
+        });
+    }
+    std::fs::create_dir_all("reports").ok();
+    b.write_log(std::path::Path::new("reports/bench_graph.json")).ok();
+}

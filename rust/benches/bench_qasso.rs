@@ -1,0 +1,65 @@
+//! QASSO optimizer-step latency (the Layer-3 hot path, no PJRT): joint-
+//! stage steps over each model's real search space with synthetic grads.
+//! Target: ≪ one PJRT train step so the coordinator is never the
+//! bottleneck (EXPERIMENTS.md §Perf).
+
+use geta::graph;
+use geta::optim::qasso::{Qasso, QassoConfig, SiteSpec, StageMask};
+use geta::optim::Sgd;
+use geta::quant::QParams;
+use geta::runtime::Manifest;
+use geta::tensor::{ParamStore, Tensor};
+use geta::util::bench::Bencher;
+use geta::util::rng::Rng;
+
+fn store_for(man: &Manifest, rng: &mut Rng) -> ParamStore {
+    let mut s = ParamStore::new();
+    for (name, shape) in &man.params {
+        let mut data = vec![0.0f32; shape.iter().product()];
+        rng.fill_normal(&mut data, 0.1);
+        s.push(Tensor::from_vec(name, shape, data));
+    }
+    s
+}
+
+fn main() {
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !art.join("index.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new(5, 40);
+    for model in ["mlp_tiny", "vgg7_mini", "resnet_mini", "bert_mini"] {
+        let man = Manifest::load(&art, model).unwrap();
+        let space = graph::search_space_for(&man.config).unwrap();
+        let mut rng = Rng::new(1);
+        let mut params = store_for(&man, &mut rng);
+        let mut grads = store_for(&man, &mut rng);
+        for t in grads.tensors.iter_mut() {
+            for v in t.data.iter_mut() {
+                *v *= 0.01;
+            }
+        }
+        let sites: Vec<SiteSpec> = man.qsites.clone();
+        let mut q: Vec<QParams> = sites.iter().map(|_| QParams::init(1.0, 16.0)).collect();
+        let qg = vec![(0.001f32, 0.001f32, 0.001f32); sites.len()];
+        // put the optimizer inside the joint stage (the expensive one)
+        let cfg = QassoConfig {
+            warmup_steps: 0,
+            proj_periods: 0,
+            proj_steps: 0,
+            prune_periods: 1,
+            prune_steps: 1_000_000,
+            cooldown_steps: 0,
+            target_group_sparsity: 0.4,
+            ..Default::default()
+        };
+        let mut opt = Qasso::new(cfg, space.groups, &sites, Box::new(Sgd::plain()), &params);
+        opt.mask = StageMask::default();
+        b.bench(&format!("qasso_joint_step/{model}"), || {
+            opt.step(&mut params, &mut q, &grads, &qg, 0.01);
+        });
+    }
+    std::fs::create_dir_all("reports").ok();
+    b.write_log(std::path::Path::new("reports/bench_qasso.json")).ok();
+}

@@ -1,0 +1,35 @@
+//! PJRT step latency per model (train + eval) — the Layer-1/2 runtime
+//! cost that dominates wall clock. Table workloads' steps/s derive from
+//! these numbers.
+
+use geta::config::ExperimentConfig;
+use geta::coordinator::Trainer;
+use geta::util::bench::Bencher;
+
+fn main() {
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !art.join("index.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new(3, 15);
+    for model in [
+        "mlp_tiny", "vgg7_mini", "resnet_mini", "resnet_mini_l",
+        "bert_mini", "gpt_mini", "vit_mini", "swin_mini",
+    ] {
+        let exp = ExperimentConfig::defaults_for(model);
+        let t = Trainer::new(&art, exp).unwrap();
+        let params = t.engine.init_params(0);
+        let q = t.engine.init_qparams(&params, 8.0);
+        let idxs: Vec<usize> = (0..t.batch_size()).collect();
+        let (x, y) = t.train_data.batch(&idxs);
+        b.bench(&format!("train_step/{model}"), || {
+            t.engine.train_step(&params, &q, &x, &y).unwrap()
+        });
+        b.bench(&format!("eval_step/{model}"), || {
+            t.engine.eval_step(&params, &q, &x, &y).unwrap()
+        });
+    }
+    std::fs::create_dir_all("reports").ok();
+    b.write_log(std::path::Path::new("reports/bench_runtime.json")).ok();
+}

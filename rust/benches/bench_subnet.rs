@@ -1,0 +1,39 @@
+//! Subnet construction latency: KeptMap build, slicing, packing, BOPs —
+//! runs once at the end of a job; benched per model for the §Perf log.
+
+use geta::graph;
+use geta::metrics;
+use geta::quant::QParams;
+use geta::runtime::Manifest;
+use geta::subnet;
+use geta::tensor::{ParamStore, Tensor};
+use geta::util::bench::Bencher;
+use geta::util::rng::Rng;
+
+fn main() {
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !art.join("index.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new(2, 20);
+    for model in ["vgg7_mini", "resnet_mini", "bert_mini", "resnet_mini_l"] {
+        let man = Manifest::load(&art, model).unwrap();
+        let space = graph::search_space_for(&man.config).unwrap();
+        let costs = metrics::layer_costs(&man.config).unwrap();
+        let mut rng = Rng::new(2);
+        let mut params = ParamStore::new();
+        for (name, shape) in &man.params {
+            let mut data = vec![0.0f32; shape.iter().product()];
+            rng.fill_normal(&mut data, 0.1);
+            params.push(Tensor::from_vec(name, shape, data));
+        }
+        let q: Vec<QParams> = man.qsites.iter().map(|_| QParams::init(1.0, 6.0)).collect();
+        let pruned: Vec<bool> = (0..space.groups.len()).map(|i| i % 3 == 0).collect();
+        b.bench(&format!("construct_subnet/{model}"), || {
+            subnet::construct(&params, &space.groups, &pruned, &costs, &man.qsites, &q)
+        });
+    }
+    std::fs::create_dir_all("reports").ok();
+    b.write_log(std::path::Path::new("reports/bench_subnet.json")).ok();
+}

@@ -1,0 +1,174 @@
+//! Experiment configuration: defaults per model family, JSON overrides,
+//! CLI overrides — the white-box control surface the paper argues for
+//! (explicit sparsity + bit-range targets instead of penalty tuning).
+
+use crate::optim::qasso::QassoConfig;
+use crate::optim::Schedule;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub model: String,
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_eval: usize,
+    pub optimizer: String,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub lr: f32,
+    pub lr_decay_every: usize,
+    pub lr_decay_gamma: f32,
+    pub qasso: QassoConfig,
+    /// Log every k steps.
+    pub log_every: usize,
+}
+
+impl ExperimentConfig {
+    /// Paper Appendix C-inspired defaults, scaled to the mini models
+    /// (units are steps; the paper's Table 7 uses epochs).
+    pub fn defaults_for(model: &str) -> ExperimentConfig {
+        let is_transformer = model.starts_with("bert")
+            || model.starts_with("gpt")
+            || model.contains("vit")
+            || model.starts_with("swin");
+        let qasso = QassoConfig {
+            warmup_steps: 60,
+            proj_periods: 4,
+            proj_steps: 15,
+            prune_periods: 5,
+            prune_steps: 20,
+            cooldown_steps: 180,
+            bit_reduction: if is_transformer { 1.0 } else { 4.0 },
+            b_l: 4.0,
+            b_u: 16.0,
+            init_bits: if is_transformer { 8.0 } else { 32.0 },
+            target_group_sparsity: 0.35,
+            ..Default::default()
+        };
+        ExperimentConfig {
+            model: model.to_string(),
+            seed: 0,
+            n_train: 1024,
+            n_eval: 512,
+            optimizer: if is_transformer { "adamw".into() } else { "sgd".into() },
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            lr: if is_transformer { 3e-3 } else { 5e-2 },
+            lr_decay_every: 150,
+            lr_decay_gamma: 0.3,
+            qasso,
+            log_every: 25,
+        }
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        Schedule::Step {
+            lr: self.lr,
+            gamma: self.lr_decay_gamma,
+            every: self.lr_decay_every,
+        }
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.qasso.total_steps()
+    }
+
+    /// Scale all stage lengths by `f` (fast smoke runs / long full runs).
+    pub fn scale_steps(&mut self, f: f64) {
+        let s = |v: usize| ((v as f64 * f).round() as usize).max(1);
+        self.qasso.warmup_steps = s(self.qasso.warmup_steps);
+        self.qasso.proj_steps = s(self.qasso.proj_steps);
+        self.qasso.prune_steps = s(self.qasso.prune_steps);
+        self.qasso.cooldown_steps = s(self.qasso.cooldown_steps);
+        self.lr_decay_every = s(self.lr_decay_every);
+    }
+
+    /// Apply `--key value` CLI overrides.
+    pub fn apply_args(&mut self, a: &Args) {
+        self.seed = a.usize_or("seed", self.seed as usize) as u64;
+        self.n_train = a.usize_or("n-train", self.n_train);
+        self.n_eval = a.usize_or("n-eval", self.n_eval);
+        self.lr = a.f64_or("lr", self.lr as f64) as f32;
+        self.qasso.target_group_sparsity =
+            a.f64_or("sparsity", self.qasso.target_group_sparsity);
+        self.qasso.b_l = a.f64_or("b-l", self.qasso.b_l as f64) as f32;
+        self.qasso.b_u = a.f64_or("b-u", self.qasso.b_u as f64) as f32;
+        self.qasso.init_bits = a.f64_or("init-bits", self.qasso.init_bits as f64) as f32;
+        if let Some(v) = a.opt("steps-scale") {
+            if let Ok(f) = v.parse::<f64>() {
+                self.scale_steps(f);
+            }
+        }
+        if let Some(o) = a.opt("optimizer") {
+            self.optimizer = o.to_string();
+        }
+    }
+
+    /// Apply overrides from a JSON object (experiment files).
+    pub fn apply_json(&mut self, j: &Json) {
+        self.seed = j.usize_or("seed", self.seed as usize) as u64;
+        self.n_train = j.usize_or("n_train", self.n_train);
+        self.n_eval = j.usize_or("n_eval", self.n_eval);
+        self.lr = j.f64_or("lr", self.lr as f64) as f32;
+        let q = &mut self.qasso;
+        q.target_group_sparsity = j.f64_or("sparsity", q.target_group_sparsity);
+        q.b_l = j.f64_or("b_l", q.b_l as f64) as f32;
+        q.b_u = j.f64_or("b_u", q.b_u as f64) as f32;
+        q.init_bits = j.f64_or("init_bits", q.init_bits as f64) as f32;
+        q.warmup_steps = j.usize_or("warmup_steps", q.warmup_steps);
+        q.proj_periods = j.usize_or("proj_periods", q.proj_periods);
+        q.proj_steps = j.usize_or("proj_steps", q.proj_steps);
+        q.prune_periods = j.usize_or("prune_periods", q.prune_periods);
+        q.prune_steps = j.usize_or("prune_steps", q.prune_steps);
+        q.cooldown_steps = j.usize_or("cooldown_steps", q.cooldown_steps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_differ_by_family() {
+        let cnn = ExperimentConfig::defaults_for("resnet_mini");
+        let tfm = ExperimentConfig::defaults_for("bert_mini");
+        assert_eq!(cnn.optimizer, "sgd");
+        assert_eq!(tfm.optimizer, "adamw");
+        assert_eq!(cnn.qasso.init_bits, 32.0);
+        assert_eq!(tfm.qasso.init_bits, 8.0);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = ExperimentConfig::defaults_for("resnet_mini");
+        let a = Args::parse(&[
+            "train".into(),
+            "--sparsity".into(),
+            "0.6".into(),
+            "--b-l".into(),
+            "2".into(),
+        ]);
+        c.apply_args(&a);
+        assert_eq!(c.qasso.target_group_sparsity, 0.6);
+        assert_eq!(c.qasso.b_l, 2.0);
+    }
+
+    #[test]
+    fn scale_steps_shrinks() {
+        let mut c = ExperimentConfig::defaults_for("resnet_mini");
+        let before = c.total_steps();
+        c.scale_steps(0.25);
+        assert!(c.total_steps() < before / 2);
+        assert!(c.qasso.warmup_steps >= 1);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = ExperimentConfig::defaults_for("resnet_mini");
+        let j = crate::util::json::parse(r#"{"sparsity": 0.7, "prune_periods": 9}"#).unwrap();
+        c.apply_json(&j);
+        assert_eq!(c.qasso.target_group_sparsity, 0.7);
+        assert_eq!(c.qasso.prune_periods, 9);
+    }
+}

@@ -1,0 +1,438 @@
+//! Deterministic synthetic datasets (offline substitutes for CIFAR10 /
+//! ImageNet / SQuAD / common-sense suites — see DESIGN.md substitutions).
+//!
+//! Every generator is seeded and class-separable-but-noisy so accuracy
+//! degrades smoothly as capacity is removed — the property the paper's
+//! relative accuracy/BOPs comparisons need.
+
+use crate::runtime::{BatchSpec, HostArray};
+use crate::util::rng::Rng;
+
+/// Synthetic image classification: each class is a mixture of a spatial
+/// frequency pattern and a color bias, plus Gaussian noise.
+pub struct SynthImages {
+    pub size: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+}
+
+impl SynthImages {
+    /// `class_seed` fixes the class signatures (shared between the train
+    /// and eval splits); `sample_seed` varies the draws.
+    pub fn generate(n: usize, size: usize, channels: usize, classes: usize, noise: f32, class_seed: u64, sample_seed: u64) -> SynthImages {
+        let mut sig_rng = Rng::new(class_seed);
+        // per-class signature: frequency pair, phase, color vector
+        let sigs: Vec<(f64, f64, f64, Vec<f32>)> = (0..classes)
+            .map(|_| {
+                let fx = 1.0 + sig_rng.uniform() * 3.0;
+                let fy = 1.0 + sig_rng.uniform() * 3.0;
+                let ph = sig_rng.uniform() * std::f64::consts::TAU;
+                let color: Vec<f32> = (0..channels).map(|_| sig_rng.normal_f32(0.5)).collect();
+                (fx, fy, ph, color)
+            })
+            .collect();
+        let mut rng = Rng::new(sample_seed);
+        let mut images = Vec::with_capacity(n * size * size * channels);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cls = rng.below(classes);
+            let (fx, fy, ph, color) = &sigs[cls];
+            labels.push(cls as i32);
+            for h in 0..size {
+                for w in 0..size {
+                    let arg = std::f64::consts::TAU
+                        * (fx * h as f64 / size as f64 + fy * w as f64 / size as f64)
+                        + ph;
+                    let pat = arg.sin() as f32;
+                    for c in 0..channels {
+                        images.push(pat * 0.8 + color[c] + rng.normal_f32(noise));
+                    }
+                }
+            }
+        }
+        SynthImages {
+            size,
+            channels,
+            classes,
+            images,
+            labels,
+            n,
+        }
+    }
+
+    fn sample_numel(&self) -> usize {
+        self.size * self.size * self.channels
+    }
+
+    pub fn batch(&self, idxs: &[usize]) -> (HostArray, HostArray) {
+        let k = self.sample_numel();
+        let mut x = Vec::with_capacity(idxs.len() * k);
+        let mut y = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            x.extend_from_slice(&self.images[i * k..(i + 1) * k]);
+            y.push(self.labels[i]);
+        }
+        (HostArray::F32(x), HostArray::I32(y))
+    }
+}
+
+/// Synthetic span extraction ("SQuAD-mini"): sequences of random tokens;
+/// a trigger token opens the answer span, a close token ends it; the gold
+/// label is (start, end) of the span between them. The model must learn to
+/// point at the delimiters — positional + lexical reasoning.
+pub struct SynthSpans {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+    pub spans: Vec<(i32, i32)>,
+    pub n: usize,
+}
+
+impl SynthSpans {
+    pub const TRIGGER: i32 = 1;
+    pub const CLOSE: i32 = 2;
+
+    pub fn generate(n: usize, vocab: usize, seq_len: usize, seed: u64) -> SynthSpans {
+        let mut rng = Rng::new(seed);
+        let mut tokens = Vec::with_capacity(n * seq_len);
+        let mut spans = Vec::with_capacity(n);
+        for _ in 0..n {
+            // real span: gold = (first TRIGGER, first CLOSE after it).
+            // Decoy CLOSE tokens *before* the trigger and decoy TRIGGER
+            // tokens *after* the close force order-sensitive reasoning —
+            // a bag-of-tokens shortcut cannot solve the task.
+            let start = 3 + rng.below(seq_len - 8);
+            let len = 1 + rng.below((seq_len - start - 4).min(5));
+            let end = start + len;
+            let mut row = vec![0i32; seq_len];
+            for (pos, slot) in row.iter_mut().enumerate() {
+                *slot = if pos == start {
+                    Self::TRIGGER
+                } else if pos == end {
+                    Self::CLOSE
+                } else {
+                    // body tokens from 3..vocab (0 is pad, 1/2 reserved)
+                    3 + rng.below(vocab - 3) as i32
+                };
+            }
+            // decoy CLOSE strictly before the trigger
+            if start >= 2 {
+                row[rng.below(start - 1) + 1] = Self::CLOSE;
+            }
+            // decoy TRIGGER strictly after the close
+            if end + 2 < seq_len {
+                row[end + 1 + rng.below(seq_len - end - 2) + 1 - 1] = Self::TRIGGER;
+            }
+            tokens.extend_from_slice(&row);
+            spans.push((start as i32, end as i32));
+        }
+        SynthSpans {
+            vocab,
+            seq_len,
+            tokens,
+            spans,
+            n,
+        }
+    }
+
+    pub fn batch(&self, idxs: &[usize]) -> (HostArray, HostArray) {
+        let s = self.seq_len;
+        let mut x = Vec::with_capacity(idxs.len() * s);
+        let mut y = Vec::with_capacity(idxs.len() * 2);
+        for &i in idxs {
+            x.extend_from_slice(&self.tokens[i * s..(i + 1) * s]);
+            y.push(self.spans[i].0);
+            y.push(self.spans[i].1);
+        }
+        (HostArray::I32(x), HostArray::I32(y))
+    }
+
+    pub fn gold(&self, idxs: &[usize]) -> Vec<(i32, i32)> {
+        idxs.iter().map(|&i| self.spans[i]).collect()
+    }
+}
+
+/// Synthetic language modelling with `families` distinct affine rules
+/// (next = (a*prev + b) mod (vocab-8) + 8, with noise). Each family is a
+/// "task" for the Fig. 3 common-sense-suite analog: per-family next-token
+/// accuracy plays the role of per-benchmark scores.
+pub struct SynthLm {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub families: usize,
+    pub tokens: Vec<i32>,
+    pub family_of: Vec<usize>,
+    pub n: usize,
+}
+
+impl SynthLm {
+    pub fn generate(n: usize, vocab: usize, seq_len: usize, families: usize, noise: f64, rule_seed: u64, sample_seed: u64) -> SynthLm {
+        let mut rule_rng = Rng::new(rule_seed);
+        let body = vocab - 8;
+        let rules: Vec<(usize, usize)> = (0..families)
+            .map(|_| (1 + 2 * rule_rng.below(body / 2 - 1), rule_rng.below(body)))
+            .collect();
+        let mut rng = Rng::new(sample_seed);
+        let mut tokens = Vec::with_capacity(n * seq_len);
+        let mut family_of = Vec::with_capacity(n);
+        for _ in 0..n {
+            let fam = rng.below(families);
+            family_of.push(fam);
+            let (a, b) = rules[fam];
+            // first token encodes the family (like a task prompt)
+            let mut prev = rng.below(body);
+            tokens.push((fam % 8) as i32);
+            for _ in 1..seq_len {
+                prev = if rng.uniform() < noise {
+                    rng.below(body)
+                } else {
+                    (a * prev + b) % body
+                };
+                tokens.push((prev + 8) as i32);
+            }
+        }
+        SynthLm {
+            vocab,
+            seq_len,
+            families,
+            tokens,
+            family_of,
+            n,
+        }
+    }
+
+    /// x = tokens, y = next-token targets (shift left; last position masked).
+    pub fn batch(&self, idxs: &[usize]) -> (HostArray, HostArray) {
+        let s = self.seq_len;
+        let mut x = Vec::with_capacity(idxs.len() * s);
+        let mut y = Vec::with_capacity(idxs.len() * s);
+        for &i in idxs {
+            let row = &self.tokens[i * s..(i + 1) * s];
+            x.extend_from_slice(row);
+            y.extend_from_slice(&row[1..]);
+            y.push(-1); // mask final position
+        }
+        (HostArray::I32(x), HostArray::I32(y))
+    }
+}
+
+/// Task-agnostic dataset wrapper the coordinator consumes.
+pub enum SynthData {
+    Images(SynthImages),
+    Spans(SynthSpans),
+    Lm(SynthLm),
+}
+
+impl SynthData {
+    /// Build train+eval splits for a model config (see configs/models/).
+    pub fn for_model(cfg: &crate::util::json::Json, n_train: usize, n_eval: usize, seed: u64) -> (SynthData, SynthData) {
+        let task = cfg.str_or("task", "image_cls");
+        match task.as_str() {
+            "image_cls" => {
+                let img = cfg.get("image").cloned().unwrap_or(crate::util::json::Json::Null);
+                let size = img.usize_or("size", 16);
+                let ch = img.usize_or("channels", 3);
+                let classes = cfg.usize_or("num_classes", 10);
+                (
+                    SynthData::Images(SynthImages::generate(n_train, size, ch, classes, 1.0, seed, seed ^ 1)),
+                    SynthData::Images(SynthImages::generate(n_eval, size, ch, classes, 1.0, seed, seed ^ 0xEEE)),
+                )
+            }
+            "span_qa" => {
+                let v = cfg.usize_or("vocab", 128);
+                let s = cfg.usize_or("seq_len", 32);
+                (
+                    SynthData::Spans(SynthSpans::generate(n_train, v, s, seed)),
+                    SynthData::Spans(SynthSpans::generate(n_eval, v, s, seed ^ 0xEEE)),
+                )
+            }
+            "lm" => {
+                let v = cfg.usize_or("vocab", 128);
+                let s = cfg.usize_or("seq_len", 32);
+                (
+                    SynthData::Lm(SynthLm::generate(n_train, v, s, 7, 0.15, seed, seed ^ 1)),
+                    SynthData::Lm(SynthLm::generate(n_eval, v, s, 7, 0.15, seed, seed ^ 0xEEE)),
+                )
+            }
+            other => panic!("unknown task {other}"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            SynthData::Images(d) => d.n,
+            SynthData::Spans(d) => d.n,
+            SynthData::Lm(d) => d.n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn batch(&self, idxs: &[usize]) -> (HostArray, HostArray) {
+        match self {
+            SynthData::Images(d) => d.batch(idxs),
+            SynthData::Spans(d) => d.batch(idxs),
+            SynthData::Lm(d) => d.batch(idxs),
+        }
+    }
+
+    /// Per-example metric denominator of one batch (for metric averaging):
+    /// images: 1 per example; spans: 2 (start+end); lm: unmasked tokens.
+    pub fn metric_denom(&self, idxs: &[usize]) -> f64 {
+        match self {
+            SynthData::Images(_) => idxs.len() as f64,
+            SynthData::Spans(_) => 2.0 * idxs.len() as f64,
+            SynthData::Lm(d) => (idxs.len() * (d.seq_len - 1)) as f64,
+        }
+    }
+}
+
+/// Epoch-shuffled batch index iterator.
+pub struct BatchIter {
+    order: Vec<usize>,
+    pos: usize,
+    bs: usize,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, bs: usize, seed: u64) -> BatchIter {
+        let mut rng = Rng::new(seed);
+        let order = rng.permutation(n);
+        BatchIter {
+            order,
+            pos: 0,
+            bs,
+            rng,
+        }
+    }
+
+    /// Next batch of indices (reshuffles at epoch boundaries; always full).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        if self.pos + self.bs > self.order.len() {
+            let n = self.order.len();
+            self.order = self.rng.permutation(n);
+            self.pos = 0;
+        }
+        let out = self.order[self.pos..self.pos + self.bs].to_vec();
+        self.pos += self.bs;
+        out
+    }
+
+    /// Sequential non-shuffled coverage (for eval): full batches only.
+    pub fn eval_batches(n: usize, bs: usize) -> Vec<Vec<usize>> {
+        (0..n / bs).map(|b| (b * bs..(b + 1) * bs).collect()).collect()
+    }
+}
+
+/// Sanity helper: does a batch match the manifest's spec?
+pub fn check_batch(spec: &BatchSpec, x: &HostArray, y: &HostArray) -> bool {
+    let xn: usize = spec.x_shape.iter().product();
+    let yn: usize = spec.y_shape.iter().product();
+    x.len() == xn && y.len() == yn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_shapes_and_determinism() {
+        let d1 = SynthImages::generate(40, 8, 3, 10, 0.3, 7, 9);
+        let d2 = SynthImages::generate(40, 8, 3, 10, 0.3, 7, 9);
+        assert_eq!(d1.images, d2.images);
+        assert_eq!(d1.images.len(), 40 * 8 * 8 * 3);
+        assert!(d1.labels.iter().all(|&l| (0..10).contains(&l)));
+        let (x, y) = d1.batch(&[0, 5, 39]);
+        assert_eq!(x.len(), 3 * 8 * 8 * 3);
+        assert_eq!(y.len(), 3);
+    }
+
+    #[test]
+    fn images_classes_are_separable() {
+        // nearest-centroid accuracy must beat chance by a wide margin
+        let d = SynthImages::generate(400, 8, 3, 4, 0.3, 11, 12);
+        let k = 8 * 8 * 3;
+        let mut centroids = vec![vec![0.0f64; k]; 4];
+        let mut counts = [0usize; 4];
+        for i in 0..200 {
+            let c = d.labels[i] as usize;
+            counts[c] += 1;
+            for j in 0..k {
+                centroids[c][j] += d.images[i * k + j] as f64;
+            }
+        }
+        for c in 0..4 {
+            for v in centroids[c].iter_mut() {
+                *v /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 200..400 {
+            let mut best = (f64::MAX, 0);
+            for c in 0..4 {
+                let mut dist = 0.0;
+                for j in 0..k {
+                    let dd = d.images[i * k + j] as f64 - centroids[c][j];
+                    dist += dd * dd;
+                }
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == d.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / 200.0;
+        assert!(acc > 0.6, "nearest-centroid acc {acc}");
+    }
+
+    #[test]
+    fn spans_are_recoverable_from_delimiters() {
+        let d = SynthSpans::generate(50, 64, 32, 3);
+        for i in 0..50 {
+            let (s, e) = d.spans[i];
+            assert_eq!(d.tokens[i * 32 + s as usize], SynthSpans::TRIGGER);
+            assert_eq!(d.tokens[i * 32 + e as usize], SynthSpans::CLOSE);
+            assert!(s < e && (e as usize) < 32);
+        }
+        let (x, y) = d.batch(&[1, 2]);
+        assert_eq!(x.len(), 64);
+        assert_eq!(y.len(), 4);
+    }
+
+    #[test]
+    fn lm_rules_are_predictive() {
+        let d = SynthLm::generate(20, 128, 32, 4, 0.0, 5, 6);
+        // with zero noise the sequence is deterministic given the rule
+        let (x, y) = d.batch(&[0]);
+        let (HostArray::I32(xs), HostArray::I32(ys)) = (&x, &y) else {
+            panic!()
+        };
+        for p in 0..31 {
+            assert_eq!(ys[p], xs[p + 1]);
+        }
+        assert_eq!(ys[31], -1);
+    }
+
+    #[test]
+    fn batch_iter_epochs() {
+        let mut it = BatchIter::new(10, 4, 1);
+        let mut seen = Vec::new();
+        for _ in 0..5 {
+            let b = it.next_batch();
+            assert_eq!(b.len(), 4);
+            seen.extend(b);
+        }
+        assert!(seen.iter().all(|&i| i < 10));
+        let ev = BatchIter::eval_batches(10, 4);
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[1], vec![4, 5, 6, 7]);
+    }
+}

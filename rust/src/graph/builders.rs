@@ -1,0 +1,492 @@
+//! Model-family trace-graph builders.
+//!
+//! Each builder mirrors the corresponding JAX plan function in
+//! `python/compile/models/` node-for-node and name-for-name — the config
+//! JSON under `configs/models/` is the single source of truth for both
+//! sides, and `rust/tests/test_manifest_graph.rs` cross-checks the AOT
+//! manifest against these graphs.
+//!
+//! With `with_quant = true` the builder emits the *quantization-aware*
+//! trace graph: every quantized weight grows an attached branch
+//! (QParam -> QPow -> QClip -> QRound -> QScale -> consumer) and every
+//! activation-quant site threads an inserted branch between the activation
+//! and its consumers — the structures Algorithm 1 must merge away.
+
+use anyhow::Result;
+
+use super::ir::{NodeId, Op, TraceGraph};
+use crate::util::json::Json;
+
+/// Build the trace graph for a model config.
+pub fn build_trace(cfg: &Json, with_quant: bool) -> Result<TraceGraph> {
+    let family = cfg.req("family")?.as_str().unwrap_or_default().to_string();
+    let mut b = Builder {
+        g: TraceGraph::new(),
+        cfg: cfg.clone(),
+        with_quant,
+        quant_weight: cfg
+            .get("quant")
+            .map(|q| q.bool_or("weight", false))
+            .unwrap_or(false),
+        quant_act: cfg
+            .get("quant")
+            .map(|q| q.bool_or("act", false))
+            .unwrap_or(false),
+        qsites: Vec::new(),
+    };
+    match family.as_str() {
+        "mlp" => b.mlp()?,
+        "vgg" => b.vgg()?,
+        "resnet" => b.resnet()?,
+        "bert" => b.bert()?,
+        "gpt" => b.gpt()?,
+        "vit" => b.vit()?,
+        "swin" => b.swin()?,
+        other => anyhow::bail!("unknown family {other}"),
+    }
+    Ok(b.g)
+}
+
+/// Ordered quant sites of a config (must match the python plan order).
+pub fn quant_sites(cfg: &Json) -> Result<Vec<(String, String)>> {
+    let mut b = Builder {
+        g: TraceGraph::new(),
+        cfg: cfg.clone(),
+        with_quant: true,
+        quant_weight: cfg
+            .get("quant")
+            .map(|q| q.bool_or("weight", false))
+            .unwrap_or(false),
+        quant_act: cfg
+            .get("quant")
+            .map(|q| q.bool_or("act", false))
+            .unwrap_or(false),
+        qsites: Vec::new(),
+    };
+    match cfg.req("family")?.as_str().unwrap_or_default() {
+        "mlp" => b.mlp()?,
+        "vgg" => b.vgg()?,
+        "resnet" => b.resnet()?,
+        "bert" => b.bert()?,
+        "gpt" => b.gpt()?,
+        "vit" => b.vit()?,
+        "swin" => b.swin()?,
+        other => anyhow::bail!("unknown family {other}"),
+    }
+    Ok(b.qsites)
+}
+
+struct Builder {
+    g: TraceGraph,
+    cfg: Json,
+    with_quant: bool,
+    quant_weight: bool,
+    quant_act: bool,
+    /// (site name, kind) in plan order.
+    qsites: Vec<(String, String)>,
+}
+
+impl Builder {
+    // ------------------------------------------------------- quant plumbing
+    /// Attach a weight-quant branch to layer node `layer` for site `name`.
+    fn attach_weight_quant(&mut self, layer: NodeId, site: &str) {
+        if self.quant_weight {
+            self.qsites.push((site.to_string(), "weight".into()));
+        }
+        if !(self.with_quant && self.quant_weight) {
+            return;
+        }
+        let p = self.g.add(&format!("{site}.qparam"), Op::QParam { site: site.into() });
+        let pow = self.g.chain(p, &format!("{site}.qpow"), Op::QPow);
+        let clip = self.g.chain(pow, &format!("{site}.qclip"), Op::QClip);
+        let rnd = self.g.chain(clip, &format!("{site}.qround"), Op::QRound);
+        let sc = self.g.chain(rnd, &format!("{site}.qscale"), Op::QScale);
+        self.g.edge(sc, layer);
+    }
+
+    /// Insert an activation-quant branch after node `act` and return the
+    /// node consumers should connect from.
+    fn insert_act_quant(&mut self, act: NodeId, site: &str) -> NodeId {
+        if self.quant_act {
+            self.qsites.push((site.to_string(), "act".into()));
+        }
+        if !(self.with_quant && self.quant_act) {
+            return act;
+        }
+        let m = self
+            .g
+            .chain(act, &format!("{site}.qmark"), Op::QActMark { site: site.into() });
+        let pow = self.g.chain(m, &format!("{site}.qpow"), Op::QPow);
+        let clip = self.g.chain(pow, &format!("{site}.qclip"), Op::QClip);
+        let rnd = self.g.chain(clip, &format!("{site}.qround"), Op::QRound);
+        self.g.chain(rnd, &format!("{site}.qscale"), Op::QScale)
+    }
+
+    fn conv(&mut self, prev: NodeId, name: &str, cin: usize, cout: usize, k: usize, stride: usize) -> NodeId {
+        let id = self.g.chain(
+            prev,
+            name,
+            Op::Conv {
+                cin,
+                cout,
+                k,
+                stride,
+                param: format!("{name}.weight"),
+            },
+        );
+        self.attach_weight_quant(id, &format!("{name}.weight"));
+        id
+    }
+
+    fn linear(&mut self, prev: NodeId, name: &str, din: usize, dout: usize) -> NodeId {
+        let id = self.g.chain(
+            prev,
+            name,
+            Op::Linear {
+                din,
+                dout,
+                param: format!("{name}.weight"),
+            },
+        );
+        self.attach_weight_quant(id, &format!("{name}.weight"));
+        id
+    }
+
+    fn bn(&mut self, prev: NodeId, name: &str, c: usize) -> NodeId {
+        self.g.chain(prev, name, Op::BatchNorm { c, param: name.into() })
+    }
+
+    fn ln(&mut self, prev: NodeId, name: &str, c: usize) -> NodeId {
+        self.g.chain(prev, name, Op::LayerNorm { c, param: name.into() })
+    }
+
+    // ------------------------------------------------------------ families
+    fn mlp(&mut self) -> Result<()> {
+        let img = self.cfg.req("image")?.clone();
+        let din0 = img.usize_or("size", 8).pow(2) * img.usize_or("channels", 3);
+        let hidden = self.cfg.usize_arr("hidden");
+        let ncls = self.cfg.usize_or("num_classes", 10);
+        let inp = self.g.add("input", Op::Input);
+        let mut prev = self
+            .g
+            .chain(inp, "flatten", Op::Flatten { spatial: 1 });
+        let mut din = din0;
+        for (i, &dout) in hidden.iter().enumerate() {
+            prev = self.linear(prev, &format!("fc{i}"), din, dout);
+            prev = self.g.chain(prev, &format!("fc{i}.relu"), Op::Relu);
+            prev = self.insert_act_quant(prev, &format!("fc{i}.act"));
+            din = dout;
+        }
+        let head = self.linear(prev, "head", din, ncls);
+        self.g.chain(head, "output", Op::Output);
+        Ok(())
+    }
+
+    fn vgg(&mut self) -> Result<()> {
+        let img = self.cfg.req("image")?.clone();
+        let mut cin = img.usize_or("channels", 3);
+        let mut size = img.usize_or("size", 16);
+        let channels = self.cfg.usize_arr("conv_channels");
+        let pool_every = self.cfg.usize_or("pool_every", 2);
+        let fc_dims = self.cfg.usize_arr("fc_dims");
+        let ncls = self.cfg.usize_or("num_classes", 10);
+        let inp = self.g.add("input", Op::Input);
+        let mut prev = inp;
+        for (i, &cout) in channels.iter().enumerate() {
+            prev = self.conv(prev, &format!("features.{i}"), cin, cout, 3, 1);
+            prev = self.bn(prev, &format!("features.{i}.bn"), cout);
+            prev = self.g.chain(prev, &format!("features.{i}.relu"), Op::Relu);
+            prev = self.insert_act_quant(prev, &format!("features.{i}.act"));
+            if (i + 1) % pool_every == 0 {
+                prev = self.g.chain(prev, &format!("pool{i}"), Op::MaxPool);
+                size /= 2;
+            }
+            cin = cout;
+        }
+        prev = self.g.chain(
+            prev,
+            "flatten",
+            Op::Flatten { spatial: size * size },
+        );
+        let mut din = cin * size * size;
+        for (i, &dout) in fc_dims.iter().enumerate() {
+            prev = self.linear(prev, &format!("fc{i}"), din, dout);
+            prev = self.g.chain(prev, &format!("fc{i}.relu"), Op::Relu);
+            prev = self.insert_act_quant(prev, &format!("fc{i}.act"));
+            din = dout;
+        }
+        let head = self.linear(prev, "head", din, ncls);
+        self.g.chain(head, "output", Op::Output);
+        Ok(())
+    }
+
+    fn resnet(&mut self) -> Result<()> {
+        let img = self.cfg.req("image")?.clone();
+        let stem_c = self.cfg.usize_or("stem_channels", 8);
+        let stages = self.cfg.usize_arr("stage_channels");
+        let blocks = self.cfg.usize_or("blocks_per_stage", 2);
+        let ncls = self.cfg.usize_or("num_classes", 10);
+        let inp = self.g.add("input", Op::Input);
+        let mut prev = self.conv(inp, "stem", img.usize_or("channels", 3), stem_c, 3, 1);
+        prev = self.bn(prev, "stem.bn", stem_c);
+        prev = self.g.chain(prev, "stem.relu", Op::Relu);
+        let mut cin = stem_c;
+        for (si, &cout) in stages.iter().enumerate() {
+            let stage_stride = if si == 0 { 1 } else { 2 };
+            for b in 0..blocks {
+                let s = if b == 0 { stage_stride } else { 1 };
+                let name = format!("stage{si}.{b}");
+                let proj_needed = s != 1 || cin != cout;
+                let y1 = self.conv(prev, &format!("{name}.conv1"), cin, cout, 3, s);
+                let y1 = self.bn(y1, &format!("{name}.bn1"), cout);
+                let y1 = self.g.chain(y1, &format!("{name}.relu1"), Op::Relu);
+                let y2 = self.conv(y1, &format!("{name}.conv2"), cout, cout, 3, 1);
+                let y2 = self.bn(y2, &format!("{name}.bn2"), cout);
+                let skip = if proj_needed {
+                    let p = self.conv(prev, &format!("{name}.proj"), cin, cout, 1, s);
+                    self.bn(p, &format!("{name}.bnp"), cout)
+                } else {
+                    prev
+                };
+                let add = self.g.add(&format!("{name}.add"), Op::Add);
+                self.g.edge(y2, add);
+                self.g.edge(skip, add);
+                prev = self.g.chain(add, &format!("{name}.relu2"), Op::Relu);
+                cin = cout;
+            }
+        }
+        prev = self.g.chain(prev, "gap", Op::GlobalAvgPool);
+        let head = self.linear(prev, "head", cin, ncls);
+        self.g.chain(head, "output", Op::Output);
+        Ok(())
+    }
+
+    /// Shared pre-LN transformer block; returns the new residual node.
+    fn transformer_block(&mut self, x: NodeId, name: &str, dim: usize, heads: usize, mlp_ratio: usize) -> NodeId {
+        let ln1 = self.ln(x, &format!("{name}.ln1"), dim);
+        let wq = self.linear(ln1, &format!("{name}.attn.wq"), dim, dim);
+        let wk = self.linear(ln1, &format!("{name}.attn.wk"), dim, dim);
+        let wv = self.linear(ln1, &format!("{name}.attn.wv"), dim, dim);
+        let join = self.g.add(
+            &format!("{name}.attn.join"),
+            Op::AttentionJoin {
+                heads,
+                head_dim: dim / heads,
+            },
+        );
+        self.g.edge(wq, join);
+        self.g.edge(wk, join);
+        self.g.edge(wv, join);
+        let wo = self.linear(join, &format!("{name}.attn.wo"), dim, dim);
+        let add1 = self.g.add(&format!("{name}.add1"), Op::Add);
+        self.g.edge(x, add1);
+        self.g.edge(wo, add1);
+        let ln2 = self.ln(add1, &format!("{name}.ln2"), dim);
+        let fc1 = self.linear(ln2, &format!("{name}.fc1"), dim, dim * mlp_ratio);
+        let gelu = self.g.chain(fc1, &format!("{name}.gelu"), Op::Gelu);
+        let fc2 = self.linear(gelu, &format!("{name}.fc2"), dim * mlp_ratio, dim);
+        let add2 = self.g.add(&format!("{name}.add2"), Op::Add);
+        self.g.edge(add1, add2);
+        self.g.edge(fc2, add2);
+        add2
+    }
+
+    fn bert(&mut self) -> Result<()> {
+        let dim = self.cfg.usize_or("dim", 64);
+        let heads = self.cfg.usize_or("heads", 4);
+        let blocks = self.cfg.usize_or("blocks", 2);
+        let ratio = self.cfg.usize_or("mlp_ratio", 4);
+        let inp = self.g.add("input", Op::Input);
+        let mut prev = self.g.chain(
+            inp,
+            "embed",
+            Op::Embedding {
+                dim,
+                param: "embed.tok".into(),
+            },
+        );
+        prev = self.ln(prev, "embed.ln", dim);
+        for b in 0..blocks {
+            prev = self.transformer_block(prev, &format!("block{b}"), dim, heads, ratio);
+        }
+        prev = self.ln(prev, "final.ln", dim);
+        let head = self.linear(prev, "span_head", dim, 2);
+        self.g.chain(head, "output", Op::Output);
+        Ok(())
+    }
+
+    fn gpt(&mut self) -> Result<()> {
+        let dim = self.cfg.usize_or("dim", 64);
+        let heads = self.cfg.usize_or("heads", 4);
+        let blocks = self.cfg.usize_or("blocks", 2);
+        let ratio = self.cfg.usize_or("mlp_ratio", 4);
+        let vocab = self.cfg.usize_or("vocab", 128);
+        let inp = self.g.add("input", Op::Input);
+        let mut prev = self.g.chain(
+            inp,
+            "embed",
+            Op::Embedding {
+                dim,
+                param: "embed.tok".into(),
+            },
+        );
+        for b in 0..blocks {
+            prev = self.transformer_block(prev, &format!("block{b}"), dim, heads, ratio);
+        }
+        prev = self.ln(prev, "final.ln", dim);
+        let head = self.linear(prev, "lm_head", dim, vocab);
+        self.g.chain(head, "output", Op::Output);
+        Ok(())
+    }
+
+    fn vit(&mut self) -> Result<()> {
+        let img = self.cfg.req("image")?.clone();
+        let dim = self.cfg.usize_or("dim", 48);
+        let heads = self.cfg.usize_or("heads", 4);
+        let blocks = self.cfg.usize_or("blocks", 2);
+        let ratio = self.cfg.usize_or("mlp_ratio", 4);
+        let patch = self.cfg.usize_or("patch", 4);
+        let ncls = self.cfg.usize_or("num_classes", 10);
+        let inp = self.g.add("input", Op::Input);
+        // Patch embedding = conv(k=patch, stride=patch); its output space
+        // joins the residual stream (frozen by the pos-embed addition).
+        let mut prev = self.conv(inp, "patch_embed", img.usize_or("channels", 3), dim, patch, patch);
+        // pos-embed add couples the stream with a parameter table => the
+        // depgraph treats Embedding spaces as frozen.
+        let pos = self.g.add(
+            "pos_embed",
+            Op::Embedding {
+                dim,
+                param: "pos_embed".into(),
+            },
+        );
+        let add = self.g.add("embed.add", Op::Add);
+        self.g.edge(prev, add);
+        self.g.edge(pos, add);
+        prev = add;
+        for b in 0..blocks {
+            prev = self.transformer_block(prev, &format!("block{b}"), dim, heads, ratio);
+        }
+        prev = self.ln(prev, "final.ln", dim);
+        prev = self.g.chain(prev, "pool", Op::TokenPool);
+        let head = self.linear(prev, "head", dim, ncls);
+        self.g.chain(head, "output", Op::Output);
+        Ok(())
+    }
+
+    fn swin(&mut self) -> Result<()> {
+        let img = self.cfg.req("image")?.clone();
+        let dims = self.cfg.usize_arr("stage_dims");
+        let stage_blocks = self.cfg.usize_arr("stage_blocks");
+        let heads = self.cfg.usize_or("heads", 4);
+        let ratio = self.cfg.usize_or("mlp_ratio", 2);
+        let patch = self.cfg.usize_or("patch", 2);
+        let ncls = self.cfg.usize_or("num_classes", 10);
+        let inp = self.g.add("input", Op::Input);
+        let mut prev = self.conv(inp, "patch_embed", img.usize_or("channels", 3), dims[0], patch, patch);
+        let pos = self.g.add(
+            "pos_embed",
+            Op::Embedding {
+                dim: dims[0],
+                param: "pos_embed".into(),
+            },
+        );
+        let add = self.g.add("embed.add", Op::Add);
+        self.g.edge(prev, add);
+        self.g.edge(pos, add);
+        prev = add;
+        for (si, &dim) in dims.iter().enumerate() {
+            for b in 0..stage_blocks[si] {
+                prev = self.transformer_block(prev, &format!("stage{si}.block{b}"), dim, heads, ratio);
+            }
+            if si + 1 < dims.len() {
+                // patch merging: 2x2 channel concat then linear projection
+                let cat = self
+                    .g
+                    .chain(prev, &format!("merge{si}.cat"), Op::ConcatReplicate { k: 4 });
+                let mln = self.ln(cat, &format!("merge{si}.ln"), dim * 4);
+                prev = self.linear(mln, &format!("merge{si}"), dim * 4, dims[si + 1]);
+            }
+        }
+        prev = self.ln(prev, "final.ln", *dims.last().unwrap());
+        prev = self.g.chain(prev, "pool", Op::TokenPool);
+        let head = self.linear(prev, "head", *dims.last().unwrap(), ncls);
+        self.g.chain(head, "output", Op::Output);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn cfg(name: &str) -> Json {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/models")
+            .join(format!("{name}.json"));
+        json::parse_file(&path).unwrap()
+    }
+
+    #[test]
+    fn all_families_build_both_modes() {
+        for name in [
+            "mlp_tiny", "vgg7_mini", "resnet_mini", "resnet_mini_l",
+            "bert_mini", "gpt_mini", "vit_mini", "simplevit_mini", "swin_mini",
+        ] {
+            let c = cfg(name);
+            let plain = build_trace(&c, false).unwrap();
+            let quant = build_trace(&c, true).unwrap();
+            assert!(plain.topo_order().is_ok(), "{name}");
+            assert!(quant.topo_order().is_ok(), "{name}");
+            assert_eq!(plain.count_quant_vertices(), 0, "{name}");
+            assert!(quant.count_quant_vertices() > 0, "{name}");
+            assert!(quant.len() > plain.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn vgg_has_act_and_weight_branches() {
+        let q = build_trace(&cfg("vgg7_mini"), true).unwrap();
+        let marks = q
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::QActMark { .. }))
+            .count();
+        let wparams = q
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::QParam { .. }))
+            .count();
+        assert_eq!(marks, 6); // one per conv relu
+        assert_eq!(wparams, 7); // 6 convs + head
+    }
+
+    #[test]
+    fn site_order_matches_python_convention() {
+        // python plan order for vgg7: conv weights and act sites interleaved
+        let sites = quant_sites(&cfg("vgg7_mini")).unwrap();
+        assert_eq!(sites[0].0, "features.0.weight");
+        assert_eq!(sites[1].0, "features.0.act");
+        assert_eq!(sites.last().unwrap().0, "head.weight");
+        assert_eq!(sites.len(), 13);
+    }
+
+    #[test]
+    fn resnet_residual_adds_present() {
+        let g = build_trace(&cfg("resnet_mini"), false).unwrap();
+        let adds = g.nodes.iter().filter(|n| matches!(n.op, Op::Add)).count();
+        assert_eq!(adds, 6); // 3 stages x 2 blocks
+    }
+
+    #[test]
+    fn bert_attention_joins() {
+        let g = build_trace(&cfg("bert_mini"), false).unwrap();
+        let joins = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::AttentionJoin { .. }))
+            .count();
+        assert_eq!(joins, 2);
+    }
+}

@@ -1,0 +1,517 @@
+//! Dependency-graph analysis: derive the pruning search space (minimally
+//! removable structures) from a QADG-reduced trace graph.
+//!
+//! The analysis propagates **channel spaces** through the graph in
+//! topological order (the OTOv2-style analysis the paper's Line 15 defers
+//! to), with the extensions the GETA model zoo needs:
+//!
+//! * residual `Add` joins union the participating spaces (ResNet stages
+//!   prune jointly, including projection convs);
+//! * `AttentionJoin` unions the q/k/v projection spaces and raises the
+//!   space granularity to `head_dim`, producing per-head groups — the
+//!   structure per-channel schemes (DJPQ, BB) cannot express;
+//! * `Flatten`/`ConcatReplicate` record a copy-major replication so
+//!   consumers' input rows map back to producer channels (conv→fc flatten,
+//!   Swin patch merging);
+//! * `Embedding` spaces and the logits space are frozen (not prunable),
+//!   freezing anything they union with (the transformer residual stream).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::ir::{Op, TraceGraph};
+
+/// Which side of a layer a member touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    /// Output structure: zeroed during training, removed at slicing.
+    Out,
+    /// Input structure: untouched during training (upstream zeros make it
+    /// dead), removed at slicing.
+    In,
+}
+
+/// One tensor slice belonging to a prune group: the elements of `tensor`
+/// whose coordinate along `axis` is in `indices`.
+#[derive(Debug, Clone)]
+pub struct Member {
+    pub tensor: String,
+    pub axis: usize,
+    pub indices: Vec<usize>,
+    pub side: Side,
+}
+
+/// A minimally removable structure.
+#[derive(Debug, Clone)]
+pub struct PruneGroup {
+    pub id: usize,
+    pub label: String,
+    pub members: Vec<Member>,
+}
+
+impl PruneGroup {
+    pub fn out_members(&self) -> impl Iterator<Item = &Member> {
+        self.members.iter().filter(|m| m.side == Side::Out)
+    }
+}
+
+#[derive(Debug)]
+pub struct SearchSpace {
+    pub groups: Vec<PruneGroup>,
+    /// Channel spaces that exist but are frozen (diagnostics).
+    pub frozen_spaces: usize,
+}
+
+// ---------------------------------------------------------------- internals
+
+#[derive(Debug, Clone)]
+struct View {
+    space: usize,
+    /// copy-major replication: physical channel index = m*C + j.
+    copies: usize,
+}
+
+struct Uf {
+    parent: Vec<usize>,
+    granularity: Vec<usize>,
+    frozen: Vec<bool>,
+    size: Vec<usize>,
+    label: Vec<String>,
+}
+
+impl Uf {
+    fn new() -> Uf {
+        Uf {
+            parent: Vec::new(),
+            granularity: Vec::new(),
+            frozen: Vec::new(),
+            size: Vec::new(),
+            label: Vec::new(),
+        }
+    }
+
+    fn fresh(&mut self, channels: usize, frozen: bool, label: &str) -> usize {
+        let id = self.parent.len();
+        self.parent.push(id);
+        self.granularity.push(1);
+        self.frozen.push(frozen);
+        self.size.push(channels);
+        self.label.push(label.to_string());
+        id
+    }
+
+    fn find(&mut self, x: usize) -> usize {
+        if self.parent[x] != x {
+            let r = self.find(self.parent[x]);
+            self.parent[x] = r;
+        }
+        self.parent[x]
+    }
+
+    fn union(&mut self, a: usize, b: usize) -> Result<usize> {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return Ok(ra);
+        }
+        if self.size[ra] != self.size[rb] {
+            anyhow::bail!(
+                "space size mismatch in union: {} ({}) vs {} ({})",
+                self.label[ra], self.size[ra], self.label[rb], self.size[rb]
+            );
+        }
+        self.parent[rb] = ra;
+        self.granularity[ra] = self.granularity[ra].max(self.granularity[rb]);
+        self.frozen[ra] = self.frozen[ra] || self.frozen[rb];
+        Ok(ra)
+    }
+
+    fn freeze(&mut self, x: usize) {
+        let r = self.find(x);
+        self.frozen[r] = true;
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Attach {
+    /// Conv weight HWIO: out axis 3; in axis 2.
+    ConvOut { tensor: String },
+    ConvIn { tensor: String },
+    /// Linear weight [din, dout]: out axis 1; in axis 0 with replication.
+    LinearOut { tensor: String },
+    LinearIn { tensor: String, copies: usize },
+    /// 1-D channel tensors (bias, gamma, beta): axis 0.
+    Channel { tensor: String },
+}
+
+/// Run the dependency analysis on a (QADG-reduced) trace graph.
+pub fn analyze(g: &TraceGraph) -> Result<SearchSpace> {
+    let order = g.topo_order()?;
+    let mut uf = Uf::new();
+    let mut views: BTreeMap<usize, View> = BTreeMap::new(); // node -> output view
+    let mut attachments: Vec<(usize, Attach)> = Vec::new(); // (space, attach)
+
+    let input_space = usize::MAX; // sentinel: image/token inputs have no space
+
+    for &id in &order {
+        let node = g.node(id);
+        let pred_view = |views: &BTreeMap<usize, View>| -> Option<View> {
+            g.preds[id].first().and_then(|p| views.get(p).cloned())
+        };
+        match &node.op {
+            Op::Input => {
+                views.insert(id, View { space: input_space, copies: 1 });
+            }
+            Op::Output => {
+                if let Some(v) = pred_view(&views) {
+                    if v.space != input_space {
+                        uf.freeze(v.space);
+                    }
+                }
+            }
+            Op::Conv { cout, param, .. } => {
+                let sp = uf.fresh(*cout, false, &node.name);
+                attachments.push((sp, Attach::ConvOut { tensor: param.clone() }));
+                let bias = param.replace(".weight", ".bias");
+                attachments.push((sp, Attach::Channel { tensor: bias }));
+                if let Some(v) = pred_view(&views) {
+                    if v.space != input_space {
+                        attachments.push((
+                            v.space,
+                            Attach::ConvIn { tensor: param.clone() },
+                        ));
+                    }
+                }
+                views.insert(id, View { space: sp, copies: 1 });
+            }
+            Op::Linear { dout, param, .. } => {
+                let sp = uf.fresh(*dout, false, &node.name);
+                attachments.push((sp, Attach::LinearOut { tensor: param.clone() }));
+                let bias = param.replace(".weight", ".bias");
+                attachments.push((sp, Attach::Channel { tensor: bias }));
+                if let Some(v) = pred_view(&views) {
+                    if v.space != input_space {
+                        attachments.push((
+                            v.space,
+                            Attach::LinearIn { tensor: param.clone(), copies: v.copies },
+                        ));
+                    }
+                }
+                views.insert(id, View { space: sp, copies: 1 });
+            }
+            Op::Embedding { dim, param } => {
+                // Embedding tables define the residual stream; frozen.
+                let sp = uf.fresh(*dim, true, &node.name);
+                attachments.push((sp, Attach::LinearOut { tensor: param.clone() }));
+                views.insert(id, View { space: sp, copies: 1 });
+            }
+            Op::BatchNorm { param, .. } | Op::LayerNorm { param, .. } => {
+                let v = pred_view(&views)
+                    .ok_or_else(|| anyhow::anyhow!("{}: norm without input", node.name))?;
+                if v.space != input_space {
+                    // gamma/beta have one entry per *physical* channel; with
+                    // replication the same space channel owns `copies`
+                    // entries — recorded per group at emission time.
+                    attachments.push((v.space, Attach::Channel { tensor: format!("{param}.gamma") }));
+                    attachments.push((v.space, Attach::Channel { tensor: format!("{param}.beta") }));
+                }
+                views.insert(id, v);
+            }
+            Op::Relu | Op::Gelu | Op::Softmax | Op::MaxPool | Op::GlobalAvgPool | Op::TokenPool => {
+                let v = pred_view(&views)
+                    .ok_or_else(|| anyhow::anyhow!("{}: passthrough without input", node.name))?;
+                views.insert(id, v);
+            }
+            Op::Flatten { spatial } => {
+                let v = pred_view(&views)
+                    .ok_or_else(|| anyhow::anyhow!("{}: flatten without input", node.name))?;
+                let copies = if v.space == input_space { 1 } else { v.copies * spatial };
+                views.insert(id, View { space: v.space, copies });
+            }
+            Op::ConcatReplicate { k } => {
+                let v = pred_view(&views)
+                    .ok_or_else(|| anyhow::anyhow!("{}: concat without input", node.name))?;
+                views.insert(id, View { space: v.space, copies: v.copies * k });
+            }
+            Op::Add => {
+                let mut it = g.preds[id].iter().filter_map(|p| views.get(p).cloned());
+                let first = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("{}: add without inputs", node.name))?;
+                let mut root = first.space;
+                for v in it {
+                    if v.space == input_space || root == input_space {
+                        anyhow::bail!("{}: add over raw input", node.name);
+                    }
+                    if v.copies != first.copies {
+                        anyhow::bail!("{}: add with mismatched replication", node.name);
+                    }
+                    root = uf.union(root, v.space)?;
+                }
+                views.insert(id, View { space: root, copies: first.copies });
+            }
+            Op::AttentionJoin { head_dim, .. } => {
+                // union q/k/v spaces; per-head granularity
+                let spaces: Vec<usize> = g.preds[id]
+                    .iter()
+                    .filter_map(|p| views.get(p).map(|v| v.space))
+                    .collect();
+                anyhow::ensure!(spaces.len() == 3, "{}: attention needs q,k,v", node.name);
+                let mut root = spaces[0];
+                for s in &spaces[1..] {
+                    root = uf.union(root, *s)?;
+                }
+                let r = uf.find(root);
+                uf.granularity[r] = uf.granularity[r].max(*head_dim);
+                views.insert(id, View { space: root, copies: 1 });
+            }
+            Op::QParam { .. } | Op::QPow | Op::QClip | Op::QRound | Op::QScale | Op::QActMark { .. } => {
+                anyhow::bail!(
+                    "{}: quant vertex reached dependency analysis — run qadg_analysis first",
+                    node.name
+                );
+            }
+            Op::Merged { .. } => {
+                let v = pred_view(&views)
+                    .ok_or_else(|| anyhow::anyhow!("{}: merged without input", node.name))?;
+                views.insert(id, v);
+            }
+        }
+    }
+
+    // ------------------------------------------------ emit prune groups
+    // group attachments by space root
+    let mut by_space: BTreeMap<usize, Vec<Attach>> = BTreeMap::new();
+    let nspaces = uf.parent.len();
+    for (sp, at) in attachments {
+        let r = uf.find(sp);
+        by_space.entry(r).or_default().push(at);
+    }
+    // replication per (space, consumer) is already encoded in LinearIn.
+
+    let mut groups = Vec::new();
+    let mut frozen_spaces = 0;
+    for root in 0..nspaces {
+        if uf.find(root) != root {
+            continue;
+        }
+        if uf.frozen[root] {
+            frozen_spaces += 1;
+            continue;
+        }
+        let channels = uf.size[root];
+        let gran = uf.granularity[root];
+        if channels % gran != 0 {
+            anyhow::bail!(
+                "space {}: channels {} not divisible by granularity {}",
+                uf.label[root], channels, gran
+            );
+        }
+        let attaches = match by_space.get(&root) {
+            Some(a) => a,
+            None => continue,
+        };
+        // canonical label: lexicographically-first creator tensor — stable
+        // under traversal-order differences between plain and QADG-reduced
+        // graphs (union roots depend on pred visit order, names don't).
+        let label_base = attaches
+            .iter()
+            .filter_map(|a| match a {
+                Attach::ConvOut { tensor } | Attach::LinearOut { tensor } => {
+                    Some(tensor.trim_end_matches(".weight").to_string())
+                }
+                _ => None,
+            })
+            .min()
+            .unwrap_or_else(|| uf.label[root].clone());
+        for gi in 0..(channels / gran) {
+            let chans: Vec<usize> = (gi * gran..(gi + 1) * gran).collect();
+            let mut members = Vec::new();
+            for at in attaches {
+                match at {
+                    Attach::ConvOut { tensor } => members.push(Member {
+                        tensor: tensor.clone(),
+                        axis: 3,
+                        indices: chans.clone(),
+                        side: Side::Out,
+                    }),
+                    Attach::LinearOut { tensor } => members.push(Member {
+                        tensor: tensor.clone(),
+                        axis: 1,
+                        indices: chans.clone(),
+                        side: Side::Out,
+                    }),
+                    Attach::Channel { tensor } => members.push(Member {
+                        tensor: tensor.clone(),
+                        axis: 0,
+                        indices: chans.clone(),
+                        side: Side::Out,
+                    }),
+                    Attach::ConvIn { tensor } => members.push(Member {
+                        tensor: tensor.clone(),
+                        axis: 2,
+                        indices: chans.clone(),
+                        side: Side::In,
+                    }),
+                    Attach::LinearIn { tensor, copies } => {
+                        let mut idx = Vec::with_capacity(chans.len() * copies);
+                        for m in 0..*copies {
+                            for &j in &chans {
+                                idx.push(m * channels + j);
+                            }
+                        }
+                        members.push(Member {
+                            tensor: tensor.clone(),
+                            axis: 0,
+                            indices: idx,
+                            side: Side::In,
+                        });
+                    }
+                }
+            }
+            let label = if gran > 1 {
+                format!("{label_base}:head{gi}")
+            } else {
+                format!("{label_base}:ch{gi}")
+            };
+            groups.push(PruneGroup {
+                id: groups.len(),
+                label,
+                members,
+            });
+        }
+    }
+    Ok(SearchSpace {
+        groups,
+        frozen_spaces,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builders::build_trace;
+    use crate::graph::qadg::qadg_analysis;
+    use crate::util::json::{self, Json};
+
+    fn cfg(name: &str) -> Json {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/models")
+            .join(format!("{name}.json"));
+        json::parse_file(&path).unwrap()
+    }
+
+    fn space(name: &str) -> SearchSpace {
+        let t = build_trace(&cfg(name), true).unwrap();
+        analyze(&qadg_analysis(&t)).unwrap()
+    }
+
+    #[test]
+    fn mlp_groups_are_hidden_neurons() {
+        let s = space("mlp_tiny");
+        assert_eq!(s.groups.len(), 64 + 32);
+        // head output space must be frozen
+        assert!(s.groups.iter().all(|g| !g.label.starts_with("head")));
+    }
+
+    #[test]
+    fn vgg_groups_per_conv_channel() {
+        let s = space("vgg7_mini");
+        // 16+16+32+32+64+64 conv channels; head frozen
+        assert_eq!(s.groups.len(), 224);
+        // last conv's groups must carry flatten-expanded head input rows
+        let g = s
+            .groups
+            .iter()
+            .find(|g| g.label.starts_with("features.5"))
+            .unwrap();
+        let head_in = g
+            .members
+            .iter()
+            .find(|m| m.tensor == "head.weight" && m.side == Side::In)
+            .expect("flatten-coupled head input member");
+        // spatial 2x2 = 4 copies of channel index
+        assert_eq!(head_in.indices.len(), 4);
+    }
+
+    #[test]
+    fn resnet_residual_joint_groups() {
+        let s = space("resnet_mini");
+        // joint stage spaces: stem+stage0 (8), stage1 (16), stage2 (32);
+        // inner conv1 spaces: 8,8,16,16,32,32
+        let joint0 = s.groups.iter().filter(|g| g.label.contains("stem")
+            || g.label.contains("stage0.0.add") || g.label.contains("stage0")).count();
+        assert!(joint0 > 0);
+        let total: usize = s.groups.len();
+        assert_eq!(total, 8 + 16 + 32 + (8 + 8 + 16 + 16 + 32 + 32));
+        // a joint group must contain members from multiple convs + bns
+        let g = s.groups.iter().find(|g| {
+            g.members.iter().any(|m| m.tensor == "stem.weight")
+        }).unwrap();
+        assert!(g.members.iter().any(|m| m.tensor == "stage0.0.conv2.weight"));
+        assert!(g.members.iter().any(|m| m.tensor == "stem.bn.gamma"));
+    }
+
+    #[test]
+    fn bert_head_and_neuron_groups() {
+        let s = space("bert_mini");
+        let heads: Vec<_> = s.groups.iter().filter(|g| g.label.contains("head")).collect();
+        assert_eq!(heads.len(), 2 * 4); // 2 blocks x 4 heads
+        // each head group ties wq/wk/wv outs and wo ins
+        let h = &heads[0];
+        for t in ["wq", "wk", "wv"] {
+            assert!(
+                h.members.iter().any(|m| m.tensor.contains(t) && m.side == Side::Out),
+                "missing {t}"
+            );
+        }
+        assert!(h.members.iter().any(|m| m.tensor.contains("wo") && m.side == Side::In));
+        // fc1 neuron groups
+        let neurons = s.groups.iter().filter(|g| g.label.contains("fc1")).count();
+        assert_eq!(neurons, 2 * 256);
+        assert_eq!(s.groups.len(), 8 + 512);
+    }
+
+    #[test]
+    fn swin_merge_replication() {
+        let s = space("swin_mini");
+        // stage0 attention space groups exist and merge0 input rows are
+        // 4-way replicated
+        let g = s
+            .groups
+            .iter()
+            .find(|g| g.members.iter().any(|m| m.tensor == "merge0.weight" && m.side == Side::In));
+        // stage0 residual stream is frozen (pos embed), so merge0 input
+        // comes from the frozen space — no group should reference it.
+        assert!(g.is_none());
+        // but stage attention + fc1 groups exist
+        assert!(s.groups.iter().any(|g| g.label.contains("attn")));
+        assert!(s.groups.iter().any(|g| g.label.contains("fc1")));
+    }
+
+    #[test]
+    fn quant_graph_same_groups_as_plain() {
+        for name in ["vgg7_mini", "resnet_mini", "bert_mini", "vit_mini"] {
+            let mut plain = analyze(&build_trace(&cfg(name), false).unwrap()).unwrap();
+            let mut quant =
+                analyze(&qadg_analysis(&build_trace(&cfg(name), true).unwrap())).unwrap();
+            assert_eq!(plain.groups.len(), quant.groups.len(), "{name}");
+            // group emission order follows space-creation (topo) order,
+            // which legitimately differs when QParam roots exist; the
+            // *set* of structures must be identical.
+            plain.groups.sort_by(|a, b| a.label.cmp(&b.label));
+            quant.groups.sort_by(|a, b| a.label.cmp(&b.label));
+            for (a, b) in plain.groups.iter().zip(quant.groups.iter()) {
+                assert_eq!(a.label, b.label, "{name}");
+                assert_eq!(a.members.len(), b.members.len(), "{name}: {}", a.label);
+            }
+        }
+    }
+
+    #[test]
+    fn depgraph_rejects_unreduced_quant_graph() {
+        let t = build_trace(&cfg("vgg7_mini"), true).unwrap();
+        assert!(analyze(&t).is_err());
+    }
+}

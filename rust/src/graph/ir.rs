@@ -1,0 +1,272 @@
+//! Trace-graph intermediate representation of a quantization-aware DNN.
+//!
+//! Nodes mirror the operators the JAX model zoo emits, *including* the
+//! quantizer sub-graphs: weight quantization hangs an **attached branch**
+//! (QParam -> QPow -> QClip -> QRound -> QScale) off its consumer layer,
+//! and activation quantization threads an **inserted branch** between an
+//! activation and its consumer (paper Fig. 2). These branches contain
+//! weight-sharing and shape-ambiguous vertices that break plain dependency
+//! analysis — exactly the problem QADG (Algorithm 1) solves.
+
+pub type NodeId = usize;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Graph input (image or token batch).
+    Input,
+    /// Graph output (logits).
+    Output,
+    /// Convolution, weight layout HWIO. `param` is the weight tensor name
+    /// (bias is `<param minus .weight>.bias`).
+    Conv {
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        param: String,
+    },
+    /// Dense layer, weight [din, dout].
+    Linear {
+        din: usize,
+        dout: usize,
+        param: String,
+    },
+    /// Batch normalization (gamma/beta under `param` prefix).
+    BatchNorm { c: usize, param: String },
+    LayerNorm { c: usize, param: String },
+    Relu,
+    Gelu,
+    Softmax,
+    /// Elementwise sum (residual join).
+    Add,
+    /// Channel-replicating concat: output = k copies of the input space
+    /// stacked channelwise (Swin patch merging).
+    ConcatReplicate { k: usize },
+    MaxPool,
+    GlobalAvgPool,
+    /// Flatten NHWC -> N,(H*W*C); `spatial` = H*W expansion factor.
+    Flatten { spatial: usize },
+    /// Token / position embedding lookup-add; creates the residual stream.
+    Embedding { dim: usize, param: String },
+    /// Multi-head attention joint: unions the q/k/v spaces with per-head
+    /// granularity; its output is read by the `wo` projection.
+    AttentionJoin { heads: usize, head_dim: usize },
+    /// Mean over tokens / cls-token select (passthrough for channels).
+    TokenPool,
+
+    // ----- parameterized-quantizer vertices (the QADNN additions) -----
+    /// Raw weight tensor vertex — root of an attached branch. Weight
+    /// sharing: the same `site` may feed several QPow chains.
+    QParam { site: String },
+    /// Nonlinear power map |x|^t (shape-ambiguous: scalar exponent
+    /// broadcast).
+    QPow,
+    /// Clip at q_m.
+    QClip,
+    /// Round-to-step (not differentiable; STE).
+    QRound,
+    /// Rescale by d.
+    QScale,
+    /// Activation-quant entry marker carrying the site name.
+    QActMark { site: String },
+    /// Result of QADG merging — behaves like the op it wraps.
+    Merged { label: String, inner: Box<Op> },
+}
+
+impl Op {
+    /// Does this op create a fresh channel space (vs pass one through)?
+    pub fn creates_space(&self) -> bool {
+        matches!(
+            self,
+            Op::Conv { .. } | Op::Linear { .. } | Op::Embedding { .. }
+        )
+    }
+
+    pub fn param_name(&self) -> Option<&str> {
+        match self {
+            Op::Conv { param, .. }
+            | Op::Linear { param, .. }
+            | Op::BatchNorm { param, .. }
+            | Op::LayerNorm { param, .. }
+            | Op::Embedding { param, .. } => Some(param),
+            Op::Merged { inner, .. } => inner.param_name(),
+            _ => None,
+        }
+    }
+
+    pub fn is_quant_vertex(&self) -> bool {
+        matches!(
+            self,
+            Op::QParam { .. }
+                | Op::QPow
+                | Op::QClip
+                | Op::QRound
+                | Op::QScale
+                | Op::QActMark { .. }
+        )
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+}
+
+/// Directed multigraph with adjacency kept in both directions.
+#[derive(Debug, Clone, Default)]
+pub struct TraceGraph {
+    pub nodes: Vec<Node>,
+    pub succs: Vec<Vec<NodeId>>,
+    pub preds: Vec<Vec<NodeId>>,
+}
+
+impl TraceGraph {
+    pub fn new() -> TraceGraph {
+        Default::default()
+    }
+
+    pub fn add(&mut self, name: &str, op: Op) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            op,
+        });
+        self.succs.push(Vec::new());
+        self.preds.push(Vec::new());
+        id
+    }
+
+    pub fn edge(&mut self, from: NodeId, to: NodeId) {
+        self.succs[from].push(to);
+        self.preds[to].push(from);
+    }
+
+    /// Convenience: add node with a single predecessor, return its id.
+    pub fn chain(&mut self, prev: NodeId, name: &str, op: Op) -> NodeId {
+        let id = self.add(name, op);
+        self.edge(prev, id);
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn find_by_name(&self, name: &str) -> Option<NodeId> {
+        self.nodes.iter().find(|n| n.name == name).map(|n| n.id)
+    }
+
+    /// Depth-first traversal order from all roots (nodes with no preds).
+    pub fn dfs_order(&self) -> Vec<NodeId> {
+        let mut order = Vec::with_capacity(self.len());
+        let mut seen = vec![false; self.len()];
+        let mut stack: Vec<NodeId> = (0..self.len())
+            .filter(|&i| self.preds[i].is_empty())
+            .rev()
+            .collect();
+        while let Some(id) = stack.pop() {
+            if seen[id] {
+                continue;
+            }
+            seen[id] = true;
+            order.push(id);
+            for &s in self.succs[id].iter().rev() {
+                if !seen[s] {
+                    stack.push(s);
+                }
+            }
+        }
+        order
+    }
+
+    /// Topological order (Kahn). Errors on cycles — trace graphs are DAGs
+    /// by construction, so a cycle means a builder bug.
+    pub fn topo_order(&self) -> anyhow::Result<Vec<NodeId>> {
+        let mut indeg: Vec<usize> = self.preds.iter().map(|p| p.len()).collect();
+        let mut q: Vec<NodeId> = (0..self.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(id) = q.pop() {
+            order.push(id);
+            for &s in &self.succs[id] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    q.push(s);
+                }
+            }
+        }
+        if order.len() != self.len() {
+            anyhow::bail!("trace graph has a cycle");
+        }
+        Ok(order)
+    }
+
+    pub fn count_quant_vertices(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.is_quant_vertex()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TraceGraph {
+        let mut g = TraceGraph::new();
+        let i = g.add("in", Op::Input);
+        let c = g.chain(
+            i,
+            "conv",
+            Op::Conv {
+                cin: 3,
+                cout: 8,
+                k: 3,
+                stride: 1,
+                param: "conv.weight".into(),
+            },
+        );
+        let r = g.chain(c, "relu", Op::Relu);
+        g.chain(r, "out", Op::Output);
+        g
+    }
+
+    #[test]
+    fn builds_and_orders() {
+        let g = tiny();
+        assert_eq!(g.len(), 4);
+        let topo = g.topo_order().unwrap();
+        assert_eq!(topo.len(), 4);
+        let pos = |n: &str| topo.iter().position(|&i| g.node(i).name == n).unwrap();
+        assert!(pos("in") < pos("conv"));
+        assert!(pos("conv") < pos("relu"));
+    }
+
+    #[test]
+    fn dfs_visits_all() {
+        let g = tiny();
+        assert_eq!(g.dfs_order().len(), 4);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = tiny();
+        g.edge(3, 0);
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn quant_vertex_class() {
+        assert!(Op::QPow.is_quant_vertex());
+        assert!(Op::QParam { site: "s".into() }.is_quant_vertex());
+        assert!(!Op::Relu.is_quant_vertex());
+    }
+}

@@ -1,0 +1,27 @@
+//! Trace-graph IR, QADG analysis (paper Algorithm 1) and dependency-group
+//! analysis (the pruning search space).
+//!
+//! Pipeline: `builders` constructs the quantization-aware trace graph of a
+//! model (mirroring the JAX model zoo layer-for-layer, including the
+//! attached/inserted quantizer branches that parameterized quantization
+//! introduces); `qadg` merges those branches per Algorithm 1; `depgraph`
+//! then derives the minimally-removable structures (PruneGroups) that the
+//! QASSO optimizer partitions into important/redundant sets.
+
+pub mod ir;
+pub mod builders;
+pub mod qadg;
+pub mod depgraph;
+
+pub use depgraph::{analyze, Member, PruneGroup, SearchSpace, Side};
+pub use ir::{Node, NodeId, Op, TraceGraph};
+pub use qadg::qadg_analysis;
+
+use crate::util::json::Json;
+
+/// Full pipeline: config -> traced QADNN -> QADG -> pruning search space.
+pub fn search_space_for(cfg: &Json) -> anyhow::Result<SearchSpace> {
+    let traced = builders::build_trace(cfg, true)?;
+    let reduced = qadg_analysis(&traced);
+    analyze(&reduced)
+}

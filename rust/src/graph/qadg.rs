@@ -1,0 +1,259 @@
+//! Quantization-Aware Dependency Graph analysis — paper Algorithm 1.
+//!
+//! Parameterized quantization rewrites the trace graph in two ways that
+//! break classic dependency analysis:
+//!
+//! * **attached branches** (weight quantization, Fig. 2a): the raw weight
+//!   becomes its own vertex feeding a QPow→QClip→QRound→QScale chain into
+//!   the consumer layer. The chain contains weight-sharing (QParam) and
+//!   shape-ambiguous (scalar-broadcast QPow/QScale) vertices.
+//! * **inserted branches** (activation quantization, Fig. 2b): a
+//!   QActMark→…→QScale chain is threaded between an activation and its
+//!   consumer, splitting what used to be a direct pruning dependency.
+//!
+//! Algorithm 1 merges each branch into a single vertex and reconnects the
+//! graph, after which the standard dependency analysis ([12], implemented
+//! in `depgraph.rs`) applies. We realize "merge + replace" by absorbing
+//! each branch into its root (weight case) or end (activation case) vertex
+//! and recording the absorption in a merge log.
+
+use std::collections::BTreeMap;
+
+use super::ir::{Op, TraceGraph};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum MergeKind {
+    /// Attached (weight-quant) branch absorbed into its consumer layer.
+    Attached,
+    /// Inserted (act-quant) branch absorbed into its end vertex, with the
+    /// root (activation) reconnected to it.
+    Inserted,
+}
+
+#[derive(Debug, Clone)]
+pub struct MergeRecord {
+    pub site: String,
+    pub kind: MergeKind,
+    /// Name of the vertex that absorbed the branch.
+    pub into: String,
+    /// Number of vertices merged away.
+    pub merged_vertices: usize,
+}
+
+#[derive(Debug)]
+pub struct QadgResult {
+    pub graph: TraceGraph,
+    pub log: Vec<MergeRecord>,
+}
+
+/// Run Algorithm 1 and return the reduced graph.
+pub fn qadg_analysis(g: &TraceGraph) -> TraceGraph {
+    qadg_analysis_logged(g).graph
+}
+
+pub fn qadg_analysis_logged(g: &TraceGraph) -> QadgResult {
+    let n = g.len();
+    let mut delete = vec![false; n];
+    let mut log = Vec::new();
+
+    // ---- Lines 3-8: weight-quant attached branches.
+    // Roots of attached branches are QParam vertices (V_root^weight); the
+    // branch is the maximal quant-vertex chain they feed. Each branch's
+    // final QScale feeds the consumer layer, which absorbs the merge.
+    for id in 0..n {
+        if let Op::QParam { site } = &g.node(id).op {
+            let mut branch = vec![id];
+            let mut cur = id;
+            // follow the single-successor quant chain
+            loop {
+                let next: Vec<_> = g.succs[cur]
+                    .iter()
+                    .copied()
+                    .filter(|&s| g.node(s).op.is_quant_vertex())
+                    .collect();
+                if next.len() != 1 {
+                    break;
+                }
+                cur = next[0];
+                branch.push(cur);
+            }
+            // consumer(s) = non-quant successors of the chain tail
+            let consumers: Vec<_> = g.succs[cur]
+                .iter()
+                .copied()
+                .filter(|&s| !g.node(s).op.is_quant_vertex())
+                .collect();
+            for b in &branch {
+                delete[*b] = true;
+            }
+            log.push(MergeRecord {
+                site: site.clone(),
+                kind: MergeKind::Attached,
+                into: consumers
+                    .first()
+                    .map(|&c| g.node(c).name.clone())
+                    .unwrap_or_default(),
+                merged_vertices: branch.len(),
+            });
+        }
+    }
+
+    // ---- Lines 9-14: activation-quant inserted branches.
+    // Root vertices (V_root^act) are the predecessors of QActMark; end
+    // vertices (V_end^act) are the non-quant consumers of the chain tail.
+    // The chain is merged into the end vertex and the root reconnected —
+    // realized below by transitive edge resolution through deleted nodes.
+    for id in 0..n {
+        if let Op::QActMark { site } = &g.node(id).op {
+            let mut branch = vec![id];
+            let mut cur = id;
+            loop {
+                let next: Vec<_> = g.succs[cur]
+                    .iter()
+                    .copied()
+                    .filter(|&s| g.node(s).op.is_quant_vertex())
+                    .collect();
+                if next.len() != 1 {
+                    break;
+                }
+                cur = next[0];
+                branch.push(cur);
+            }
+            let ends: Vec<_> = g.succs[cur]
+                .iter()
+                .copied()
+                .filter(|&s| !g.node(s).op.is_quant_vertex())
+                .collect();
+            for b in &branch {
+                delete[*b] = true;
+            }
+            log.push(MergeRecord {
+                site: site.clone(),
+                kind: MergeKind::Inserted,
+                into: ends
+                    .first()
+                    .map(|&c| g.node(c).name.clone())
+                    .unwrap_or_default(),
+                merged_vertices: branch.len(),
+            });
+        }
+    }
+
+    // ---- Rebuild: keep non-deleted vertices; resolve edges transitively
+    // through deleted ones (this is the "replace + reconnect" of lines
+    // 7 and 12-13 in one pass).
+    let mut remap: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut out = TraceGraph::new();
+    for id in 0..n {
+        if !delete[id] {
+            let node = g.node(id);
+            let nid = out.add(&node.name, node.op.clone());
+            remap.insert(id, nid);
+        }
+    }
+    // kept ancestors of a node, walking back through deleted vertices
+    fn kept_sources(g: &TraceGraph, delete: &[bool], id: usize, acc: &mut Vec<usize>) {
+        for &p in &g.preds[id] {
+            if delete[p] {
+                kept_sources(g, delete, p, acc);
+            } else {
+                acc.push(p);
+            }
+        }
+    }
+    for id in 0..n {
+        if delete[id] {
+            continue;
+        }
+        let mut srcs = Vec::new();
+        kept_sources(g, &delete, id, &mut srcs);
+        srcs.sort_unstable();
+        srcs.dedup();
+        for s in srcs {
+            out.edge(remap[&s], remap[&id]);
+        }
+    }
+    QadgResult { graph: out, log }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builders::build_trace;
+    use crate::util::json;
+
+    fn cfg(name: &str) -> json::Json {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/models")
+            .join(format!("{name}.json"));
+        json::parse_file(&path).unwrap()
+    }
+
+    #[test]
+    fn removes_all_quant_vertices_every_model() {
+        for name in [
+            "mlp_tiny", "vgg7_mini", "resnet_mini", "bert_mini",
+            "gpt_mini", "vit_mini", "swin_mini",
+        ] {
+            let q = build_trace(&cfg(name), true).unwrap();
+            let reduced = qadg_analysis(&q);
+            assert_eq!(reduced.count_quant_vertices(), 0, "{name}");
+            assert!(reduced.topo_order().is_ok(), "{name}");
+        }
+    }
+
+    /// The central QADG invariant: after Algorithm 1, the reduced graph is
+    /// isomorphic (names, ops, edges) to the trace of the *plain* model —
+    /// i.e. quantization no longer perturbs the pruning search space.
+    #[test]
+    fn reduced_graph_matches_plain_trace() {
+        for name in ["vgg7_mini", "resnet_mini", "bert_mini", "swin_mini"] {
+            let c = cfg(name);
+            let plain = build_trace(&c, false).unwrap();
+            let reduced = qadg_analysis(&build_trace(&c, true).unwrap());
+            assert_eq!(plain.len(), reduced.len(), "{name}: vertex count");
+            for (a, b) in plain.nodes.iter().zip(reduced.nodes.iter()) {
+                assert_eq!(a.name, b.name, "{name}");
+                assert_eq!(a.op, b.op, "{name}: {}", a.name);
+            }
+            // edge sets must match as (name, name) pairs
+            let edges = |g: &TraceGraph| {
+                let mut e: Vec<(String, String)> = (0..g.len())
+                    .flat_map(|i| {
+                        g.succs[i]
+                            .iter()
+                            .map(move |&s| (i, s))
+                            .collect::<Vec<_>>()
+                    })
+                    .map(|(i, s)| (g.node(i).name.clone(), g.node(s).name.clone()))
+                    .collect();
+                e.sort();
+                e.dedup();
+                e
+            };
+            assert_eq!(edges(&plain), edges(&reduced), "{name}: edges");
+        }
+    }
+
+    #[test]
+    fn merge_log_accounts_for_every_site() {
+        let q = build_trace(&cfg("vgg7_mini"), true).unwrap();
+        let res = qadg_analysis_logged(&q);
+        let attached = res.log.iter().filter(|r| r.kind == MergeKind::Attached).count();
+        let inserted = res.log.iter().filter(|r| r.kind == MergeKind::Inserted).count();
+        assert_eq!(attached, 7); // 6 conv + head weights
+        assert_eq!(inserted, 6); // 6 act sites
+        // attached branches merge into their consumer layers
+        let conv0 = res.log.iter().find(|r| r.site == "features.0.weight").unwrap();
+        assert_eq!(conv0.into, "features.0");
+        assert_eq!(conv0.merged_vertices, 5); // QParam,QPow,QClip,QRound,QScale
+    }
+
+    #[test]
+    fn noop_on_plain_graph() {
+        let plain = build_trace(&cfg("resnet_mini"), false).unwrap();
+        let res = qadg_analysis_logged(&plain);
+        assert!(res.log.is_empty());
+        assert_eq!(res.graph.len(), plain.len());
+    }
+}

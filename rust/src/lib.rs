@@ -1,0 +1,35 @@
+//! GETA — General and Efficient Training framework that Automates joint
+//! structured pruning and quantization-aware training.
+//!
+//! Reproduction of "Automatic Joint Structured Pruning and Quantization for
+//! Efficient Neural Network Training and Compression" (Qu et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's algorithmic contribution:
+//!   quantization-aware dependency graph (QADG) construction, the QASSO
+//!   four-stage optimizer (warm-up / projection / joint / cool-down), the
+//!   PPSG bit-width projection, saliency-driven group partitioning, subnet
+//!   construction, BOPs accounting, baselines, and the training coordinator.
+//! * **Layer 2 (python/compile/model.py + models/)** — JAX forward/backward
+//!   of each model family with parameterized fake-quantization, lowered once
+//!   to HLO text by `python/compile/aot.py`.
+//! * **Layer 1 (python/compile/kernels/)** — the fake-quant hot spot as a
+//!   Pallas kernel (interpret=True on CPU), checked against a pure-jnp
+//!   oracle.
+//!
+//! Python never runs on the training path: the Rust binary loads the AOT
+//! artifacts through PJRT (`runtime` module) and owns every update rule.
+
+pub mod util;
+pub mod tensor;
+pub mod graph;
+pub mod quant;
+pub mod optim;
+pub mod runtime;
+pub mod data;
+pub mod metrics;
+pub mod subnet;
+pub mod baselines;
+pub mod coordinator;
+pub mod config;
+pub mod report;

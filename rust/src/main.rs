@@ -1,0 +1,185 @@
+//! `geta` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   geta graph  --model <name>                 inspect QADG + search space
+//!   geta train  --model <name> [--sparsity ..] run GETA on one model
+//!   geta repro  <table2|table3|table4|table5|table6|fig3|fig4a|fig4b|table1|all>
+//!   geta bench  [--iters N]                    runtime micro-benchmarks
+//!   geta models                                list AOT artifacts
+
+use anyhow::Result;
+
+use geta::config::ExperimentConfig;
+use geta::coordinator::{GetaCompressor, Trainer};
+use geta::optim::qasso::StageMask;
+use geta::report::ReportCtx;
+use geta::runtime::Manifest;
+use geta::util::cli::Args;
+
+fn art_dir(a: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(a.opt_or("artifacts", "artifacts"))
+}
+
+fn main() -> Result<()> {
+    let a = Args::from_env();
+    match a.subcommand.as_deref() {
+        Some("models") => cmd_models(&a),
+        Some("graph") => cmd_graph(&a),
+        Some("train") => cmd_train(&a),
+        Some("repro") => cmd_repro(&a),
+        Some("bench") => cmd_bench(&a),
+        _ => {
+            println!(
+                "geta — joint structured pruning + quantization-aware training\n\n\
+                 usage: geta <models|graph|train|repro|bench> [options]\n\
+                   geta graph --model vgg7_mini\n\
+                   geta train --model resnet_mini --sparsity 0.35 --verbose\n\
+                   geta repro all [--steps-scale 0.2]\n\
+                   geta bench --iters 20"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_models(a: &Args) -> Result<()> {
+    let dir = art_dir(a);
+    for m in Manifest::list_models(&dir)? {
+        let man = Manifest::load(&dir, &m)?;
+        println!(
+            "{:<16} task={:<10} params={:<8} qsites={}",
+            man.model,
+            man.task,
+            man.param_count,
+            man.qsites.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_graph(a: &Args) -> Result<()> {
+    let model = a.opt_or("model", "vgg7_mini");
+    let dir = art_dir(a);
+    let man = Manifest::load(&dir, &model)?;
+    let traced = geta::graph::builders::build_trace(&man.config, true)?;
+    let res = geta::graph::qadg::qadg_analysis_logged(&traced);
+    let space = geta::graph::analyze(&res.graph)?;
+    println!("model {model}");
+    println!(
+        "  QADNN trace: {} vertices ({} quantizer vertices)",
+        traced.len(),
+        traced.count_quant_vertices()
+    );
+    println!(
+        "  QADG: merged {} branches -> {} vertices",
+        res.log.len(),
+        res.graph.len()
+    );
+    println!(
+        "  search space: {} prunable groups, {} frozen spaces",
+        space.groups.len(),
+        space.frozen_spaces
+    );
+    if a.flag("verbose") {
+        for g in space.groups.iter().take(12) {
+            println!("    {:<28} {} members", g.label, g.members.len());
+        }
+        if space.groups.len() > 12 {
+            println!("    ... {} more", space.groups.len() - 12);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let model = a.opt_or("model", "mlp_tiny");
+    let mut exp = ExperimentConfig::defaults_for(&model);
+    exp.apply_args(a);
+    let mut t = Trainer::new(&art_dir(a), exp)?;
+    t.verbose = a.flag("verbose");
+    println!(
+        "training {model} on {} samples (platform {}), {} steps",
+        t.train_data.len(),
+        t.engine.platform(),
+        t.exp.total_steps()
+    );
+    let mut geta_c = GetaCompressor::new(&t.engine, &t.exp, StageMask::default())?;
+    let r = t.run(&mut geta_c)?;
+    println!(
+        "\nresult: acc {:.2}%  rel BOPs {:.2}%  avg bits {:.1}  group sparsity {:.2}  param sparsity {:.2}",
+        r.accuracy, r.rel_bops, r.avg_bits, r.group_sparsity, r.param_sparsity
+    );
+    Ok(())
+}
+
+fn cmd_repro(a: &Args) -> Result<()> {
+    let which = a
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let scale = a.f64_or("steps-scale", 1.0);
+    let mut ctx = ReportCtx::new(&art_dir(a), scale, a.flag("verbose"));
+    let all = which == "all";
+    if all || which == "table1" {
+        ctx.table1();
+    }
+    if all || which == "table2" {
+        ctx.table2()?;
+    }
+    if all || which == "table3" {
+        ctx.table3()?;
+    }
+    if all || which == "table4" {
+        ctx.table4()?;
+    }
+    if all || which == "table5" {
+        ctx.table5()?;
+    }
+    if all || which == "table6" {
+        ctx.table6()?;
+    }
+    if all || which == "fig3" {
+        ctx.fig3()?;
+    }
+    if all || which == "fig4a" {
+        ctx.fig4a()?;
+    }
+    if all || which == "fig4b" {
+        ctx.fig4b()?;
+    }
+    ctx.write_markdown(std::path::Path::new("reports"))?;
+    println!("\nmarkdown written to reports/");
+    Ok(())
+}
+
+fn cmd_bench(a: &Args) -> Result<()> {
+    let iters = a.usize_or("iters", 15);
+    let dir = art_dir(a);
+    let mut b = geta::util::bench::Bencher::new(3, iters);
+    // graph analysis latency per model
+    for model in ["vgg7_mini", "resnet_mini", "bert_mini"] {
+        let man = Manifest::load(&dir, model)?;
+        b.bench(&format!("qadg+depgraph/{model}"), || {
+            geta::graph::search_space_for(&man.config).unwrap()
+        });
+    }
+    // PJRT step latency
+    for model in ["mlp_tiny", "resnet_mini", "bert_mini"] {
+        let exp = ExperimentConfig::defaults_for(model);
+        let t = Trainer::new(&dir, exp)?;
+        let params = t.engine.init_params(0);
+        let q = t.engine.init_qparams(&params, 16.0);
+        let idxs: Vec<usize> = (0..t.batch_size()).collect();
+        let (x, y) = t.train_data.batch(&idxs);
+        b.bench(&format!("pjrt_train_step/{model}"), || {
+            t.engine.train_step(&params, &q, &x, &y).unwrap()
+        });
+        b.bench(&format!("pjrt_eval_step/{model}"), || {
+            t.engine.eval_step(&params, &q, &x, &y).unwrap()
+        });
+    }
+    std::fs::create_dir_all("reports").ok();
+    b.write_log(std::path::Path::new("reports/bench_cli.json")).ok();
+    Ok(())
+}

@@ -1,0 +1,301 @@
+//! BOPs (bit-operations) accounting — the paper's efficiency metric.
+//!
+//! BOPs(layer) = MACs · b_w · b_a (DJPQ's definition), summed over the
+//! parameterized layers. The relative BOPs of a compressed model divides
+//! by the full-precision (32×32) baseline of the same architecture.
+//! Structured pruning scales a layer's MACs by the retained input and
+//! output fractions; learned bit widths set b_w (weight site) and b_a
+//! (the quant site of the layer's *input* activation, 32 when absent).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    /// Weight tensor name ("<layer>.weight").
+    pub param: String,
+    /// Multiply-accumulates per sample at full width.
+    pub macs: f64,
+    pub cin: usize,
+    pub cout: usize,
+    /// Activation-quant site feeding this layer (None = fp32 input).
+    pub act_in_site: Option<String>,
+}
+
+/// Derive per-layer MAC counts from a model config (mirrors the builders'
+/// spatial bookkeeping; embedding lookups are excluded — they are not
+/// multiply ops).
+pub fn layer_costs(cfg: &Json) -> Result<Vec<LayerCost>> {
+    let fam = cfg.req("family")?.as_str().unwrap_or_default();
+    let mut out = Vec::new();
+    let img_size = cfg
+        .get("image")
+        .map(|i| i.usize_or("size", 16))
+        .unwrap_or(16);
+    let img_ch = cfg
+        .get("image")
+        .map(|i| i.usize_or("channels", 3))
+        .unwrap_or(3);
+    let ncls = cfg.usize_or("num_classes", 10);
+    let mut push = |name: &str, macs: f64, cin: usize, cout: usize, act: Option<String>| {
+        out.push(LayerCost {
+            param: format!("{name}.weight"),
+            macs,
+            cin,
+            cout,
+            act_in_site: act,
+        });
+    };
+    match fam {
+        "mlp" => {
+            let mut din = img_size * img_size * img_ch;
+            let hidden = cfg.usize_arr("hidden");
+            let mut act: Option<String> = None;
+            for (i, &dout) in hidden.iter().enumerate() {
+                push(&format!("fc{i}"), (din * dout) as f64, din, dout, act.clone());
+                act = Some(format!("fc{i}.act"));
+                din = dout;
+            }
+            push("head", (din * ncls) as f64, din, ncls, act);
+        }
+        "vgg" => {
+            let channels = cfg.usize_arr("conv_channels");
+            let pool_every = cfg.usize_or("pool_every", 2);
+            let mut size = img_size;
+            let mut cin = img_ch;
+            let mut act: Option<String> = None;
+            for (i, &cout) in channels.iter().enumerate() {
+                let macs = (size * size * 9 * cin * cout) as f64;
+                push(&format!("features.{i}"), macs, cin, cout, act.clone());
+                act = Some(format!("features.{i}.act"));
+                if (i + 1) % pool_every == 0 {
+                    size /= 2;
+                }
+                cin = cout;
+            }
+            let mut din = cin * size * size;
+            for (i, &dout) in cfg.usize_arr("fc_dims").iter().enumerate() {
+                push(&format!("fc{i}"), (din * dout) as f64, din, dout, act.clone());
+                act = Some(format!("fc{i}.act"));
+                din = dout;
+            }
+            push("head", (din * ncls) as f64, din, ncls, act);
+        }
+        "resnet" => {
+            let stem_c = cfg.usize_or("stem_channels", 8);
+            let stages = cfg.usize_arr("stage_channels");
+            let blocks = cfg.usize_or("blocks_per_stage", 2);
+            let mut size = img_size;
+            push("stem", (size * size * 9 * img_ch * stem_c) as f64, img_ch, stem_c, None);
+            let mut cin = stem_c;
+            for (si, &cout) in stages.iter().enumerate() {
+                if si > 0 {
+                    size /= 2; // stage-entry stride
+                }
+                for b in 0..blocks {
+                    let n = format!("stage{si}.{b}");
+                    push(&format!("{n}.conv1"), (size * size * 9 * cin * cout) as f64, cin, cout, None);
+                    push(&format!("{n}.conv2"), (size * size * 9 * cout * cout) as f64, cout, cout, None);
+                    if b == 0 && (si > 0 || cin != cout) {
+                        push(&format!("{n}.proj"), (size * size * cin * cout) as f64, cin, cout, None);
+                    }
+                    cin = cout;
+                }
+            }
+            push("head", (cin * ncls) as f64, cin, ncls, None);
+        }
+        "bert" | "gpt" => {
+            let dim = cfg.usize_or("dim", 64);
+            let s = cfg.usize_or("seq_len", 32);
+            let blocks = cfg.usize_or("blocks", 2);
+            let ratio = cfg.usize_or("mlp_ratio", 4);
+            for b in 0..blocks {
+                for p in ["wq", "wk", "wv", "wo"] {
+                    push(&format!("block{b}.attn.{p}"), (s * dim * dim) as f64, dim, dim, None);
+                }
+                push(&format!("block{b}.fc1"), (s * dim * dim * ratio) as f64, dim, dim * ratio, None);
+                push(&format!("block{b}.fc2"), (s * dim * ratio * dim) as f64, dim * ratio, dim, None);
+            }
+            if fam == "bert" {
+                push("span_head", (s * dim * 2) as f64, dim, 2, None);
+            } else {
+                let vocab = cfg.usize_or("vocab", 128);
+                push("lm_head", (s * dim * vocab) as f64, dim, vocab, None);
+            }
+        }
+        "vit" => {
+            let dim = cfg.usize_or("dim", 48);
+            let patch = cfg.usize_or("patch", 4);
+            let blocks = cfg.usize_or("blocks", 2);
+            let ratio = cfg.usize_or("mlp_ratio", 4);
+            let grid = img_size / patch;
+            let mut t = grid * grid;
+            push("patch_embed", (t * patch * patch * img_ch * dim) as f64, img_ch, dim, None);
+            if cfg.str_or("pool", "cls") == "cls" {
+                t += 1;
+            }
+            for b in 0..blocks {
+                for p in ["wq", "wk", "wv", "wo"] {
+                    push(&format!("block{b}.attn.{p}"), (t * dim * dim) as f64, dim, dim, None);
+                }
+                push(&format!("block{b}.fc1"), (t * dim * dim * ratio) as f64, dim, dim * ratio, None);
+                push(&format!("block{b}.fc2"), (t * dim * ratio * dim) as f64, dim * ratio, dim, None);
+            }
+            push("head", (dim * ncls) as f64, dim, ncls, None);
+        }
+        "swin" => {
+            let dims = cfg.usize_arr("stage_dims");
+            let stage_blocks = cfg.usize_arr("stage_blocks");
+            let patch = cfg.usize_or("patch", 2);
+            let ratio = cfg.usize_or("mlp_ratio", 2);
+            let mut side = img_size / patch;
+            push("patch_embed", (side * side * patch * patch * img_ch * dims[0]) as f64, img_ch, dims[0], None);
+            for (si, &dim) in dims.iter().enumerate() {
+                let t = side * side;
+                for b in 0..stage_blocks[si] {
+                    let n = format!("stage{si}.block{b}");
+                    for p in ["wq", "wk", "wv", "wo"] {
+                        push(&format!("{n}.attn.{p}"), (t * dim * dim) as f64, dim, dim, None);
+                    }
+                    push(&format!("{n}.fc1"), (t * dim * dim * ratio) as f64, dim, dim * ratio, None);
+                    push(&format!("{n}.fc2"), (t * dim * ratio * dim) as f64, dim * ratio, dim, None);
+                }
+                if si + 1 < dims.len() {
+                    side /= 2;
+                    push(&format!("merge{si}"), (side * side * dim * 4 * dims[si + 1]) as f64, dim * 4, dims[si + 1], None);
+                }
+            }
+            push("head", (dims[dims.len() - 1] * ncls) as f64, dims[dims.len() - 1], ncls, None);
+        }
+        other => anyhow::bail!("unknown family {other}"),
+    }
+    Ok(out)
+}
+
+#[derive(Debug, Clone)]
+pub struct BopsReport {
+    pub full: f64,
+    pub compressed: f64,
+}
+
+impl BopsReport {
+    /// Relative BOPs in percent (the paper's "Rel. BOPs (%)" column).
+    pub fn rel_percent(&self) -> f64 {
+        100.0 * self.compressed / self.full.max(1.0)
+    }
+}
+
+/// Compute full vs compressed BOPs.
+///
+/// * `kept`: per weight tensor, (input fraction, output fraction) retained
+///   after structured pruning (1.0, 1.0 when absent).
+/// * `wbits`: learned weight bit width per site (tensor name); 32 default.
+/// * `abits`: learned activation bit width per act site; 32 default.
+/// * `unstructured_density`: extra multiplicative MAC density for
+///   unstructured baselines (1.0 for structured methods — their savings
+///   are in `kept`).
+pub fn bops(
+    costs: &[LayerCost],
+    kept: &BTreeMap<String, (f64, f64)>,
+    wbits: &BTreeMap<String, f32>,
+    abits: &BTreeMap<String, f32>,
+    unstructured_density: f64,
+) -> BopsReport {
+    let mut full = 0.0;
+    let mut comp = 0.0;
+    for c in costs {
+        full += c.macs * 32.0 * 32.0;
+        let (fin, fout) = kept.get(&c.param).copied().unwrap_or((1.0, 1.0));
+        let bw = wbits.get(&c.param).copied().unwrap_or(32.0) as f64;
+        let ba = c
+            .act_in_site
+            .as_ref()
+            .and_then(|s| abits.get(s))
+            .copied()
+            .unwrap_or(32.0) as f64;
+        comp += c.macs * fin * fout * unstructured_density * bw * ba;
+    }
+    BopsReport {
+        full,
+        compressed: comp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn cfg(name: &str) -> Json {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/models")
+            .join(format!("{name}.json"));
+        json::parse_file(&p).unwrap()
+    }
+
+    #[test]
+    fn costs_cover_all_weight_sites() {
+        for name in [
+            "mlp_tiny", "vgg7_mini", "resnet_mini", "bert_mini",
+            "gpt_mini", "vit_mini", "swin_mini",
+        ] {
+            let c = cfg(name);
+            let costs = layer_costs(&c).unwrap();
+            let sites = crate::graph::builders::quant_sites(&c).unwrap();
+            let weight_sites: Vec<_> = sites
+                .iter()
+                .filter(|(_, k)| k == "weight")
+                .map(|(n, _)| n.clone())
+                .collect();
+            let cost_params: Vec<_> = costs.iter().map(|l| l.param.clone()).collect();
+            for w in &weight_sites {
+                assert!(cost_params.contains(w), "{name}: missing cost for {w}");
+            }
+            assert!(costs.iter().all(|l| l.macs > 0.0), "{name}");
+        }
+    }
+
+    #[test]
+    fn full_precision_baseline_is_100_percent() {
+        let costs = layer_costs(&cfg("vgg7_mini")).unwrap();
+        let r = bops(&costs, &BTreeMap::new(), &BTreeMap::new(), &BTreeMap::new(), 1.0);
+        assert!((r.rel_percent() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bits_and_pruning_compose() {
+        let costs = layer_costs(&cfg("mlp_tiny")).unwrap();
+        let mut kept = BTreeMap::new();
+        let mut wbits = BTreeMap::new();
+        for c in &costs {
+            kept.insert(c.param.clone(), (1.0, 0.5));
+            wbits.insert(c.param.clone(), 8.0);
+        }
+        let r = bops(&costs, &kept, &wbits, &BTreeMap::new(), 1.0);
+        // 0.5 output fraction * 8/32 weight bits = 12.5% — input fractions
+        // of downstream layers stay 1.0 here so this is exact
+        assert!((r.rel_percent() - 12.5).abs() < 1e-6, "{}", r.rel_percent());
+    }
+
+    #[test]
+    fn act_bits_apply_to_consumer_layer() {
+        let costs = layer_costs(&cfg("vgg7_mini")).unwrap();
+        // features.1 consumes features.0.act
+        let l = costs.iter().find(|c| c.param == "features.1.weight").unwrap();
+        assert_eq!(l.act_in_site.as_deref(), Some("features.0.act"));
+        let mut abits = BTreeMap::new();
+        abits.insert("features.0.act".to_string(), 4.0f32);
+        let r = bops(&costs, &BTreeMap::new(), &BTreeMap::new(), &abits, 1.0);
+        assert!(r.rel_percent() < 100.0);
+    }
+
+    #[test]
+    fn vgg_macs_match_hand_count() {
+        let costs = layer_costs(&cfg("vgg7_mini")).unwrap();
+        let c0 = &costs[0]; // 16x16 * 9 * 3 * 16
+        assert_eq!(c0.macs, (16 * 16 * 9 * 3 * 16) as f64);
+    }
+}

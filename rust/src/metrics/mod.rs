@@ -1,0 +1,130 @@
+//! Evaluation metrics: BOPs accounting, accuracy, EM/F1, loss curves.
+
+pub mod bops;
+
+pub use bops::{layer_costs, BopsReport, LayerCost};
+
+/// Span-extraction exact match + token-overlap F1 (the SQuAD metrics).
+pub fn span_em_f1(pred: &[(i32, i32)], gold: &[(i32, i32)]) -> (f64, f64) {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut em = 0.0;
+    let mut f1 = 0.0;
+    for (&(ps, pe), &(gs, ge)) in pred.iter().zip(gold) {
+        if ps == gs && pe == ge {
+            em += 1.0;
+        }
+        // token overlap of closed intervals [s, e]
+        let (ps, pe) = (ps.min(pe), ps.max(pe));
+        let inter = ((pe.min(ge) - ps.max(gs)) + 1).max(0) as f64;
+        let p_len = (pe - ps + 1).max(1) as f64;
+        let g_len = (ge - gs + 1).max(1) as f64;
+        if inter > 0.0 {
+            let prec = inter / p_len;
+            let rec = inter / g_len;
+            f1 += 2.0 * prec * rec / (prec + rec);
+        }
+    }
+    let n = pred.len() as f64;
+    (100.0 * em / n, 100.0 * f1 / n)
+}
+
+/// Streaming mean-loss / accuracy accumulator for an eval sweep.
+#[derive(Debug, Default, Clone)]
+pub struct EvalAccum {
+    pub loss_sum: f64,
+    pub metric_sum: f64,
+    pub denom: f64,
+    pub batches: usize,
+}
+
+impl EvalAccum {
+    pub fn add(&mut self, loss: f32, metric: f32, denom: f64) {
+        self.loss_sum += loss as f64;
+        self.metric_sum += metric as f64;
+        self.denom += denom;
+        self.batches += 1;
+    }
+
+    pub fn loss(&self) -> f64 {
+        self.loss_sum / self.batches.max(1) as f64
+    }
+
+    /// Accuracy in percent.
+    pub fn accuracy(&self) -> f64 {
+        100.0 * self.metric_sum / self.denom.max(1.0)
+    }
+}
+
+/// Loss/metric trace of one training run (dumped for EXPERIMENTS.md).
+#[derive(Debug, Default, Clone)]
+pub struct TrainTrace {
+    pub steps: Vec<usize>,
+    pub losses: Vec<f32>,
+    pub stages: Vec<&'static str>,
+}
+
+impl TrainTrace {
+    pub fn push(&mut self, step: usize, loss: f32, stage: &'static str) {
+        self.steps.push(step);
+        self.losses.push(loss);
+        self.stages.push(stage);
+    }
+
+    /// Mean loss over the last `k` recorded points.
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let k = k.min(n);
+        self.losses[n - k..].iter().map(|&l| l as f64).sum::<f64>() / k as f64
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = String::from("step,loss,stage\n");
+        for i in 0..self.steps.len() {
+            s.push_str(&format!("{},{},{}\n", self.steps[i], self.losses[i], self.stages[i]));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn em_f1_exact_and_partial() {
+        let (em, f1) = span_em_f1(&[(3, 5)], &[(3, 5)]);
+        assert_eq!((em, f1), (100.0, 100.0));
+        // pred [2,4] vs gold [3,5]: overlap {3,4}=2, p_len 3, g_len 3
+        let (em, f1) = span_em_f1(&[(2, 4)], &[(3, 5)]);
+        assert_eq!(em, 0.0);
+        assert!((f1 - 100.0 * (2.0 / 3.0)).abs() < 1e-9);
+        // disjoint
+        let (em, f1) = span_em_f1(&[(0, 1)], &[(5, 6)]);
+        assert_eq!((em, f1), (0.0, 0.0));
+    }
+
+    #[test]
+    fn accum_averages() {
+        let mut a = EvalAccum::default();
+        a.add(1.0, 10.0, 16.0);
+        a.add(3.0, 6.0, 16.0);
+        assert!((a.loss() - 2.0).abs() < 1e-9);
+        assert!((a.accuracy() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_tail() {
+        let mut t = TrainTrace::default();
+        for i in 0..10 {
+            t.push(i, i as f32, "warmup");
+        }
+        assert!((t.tail_mean(2) - 8.5).abs() < 1e-9);
+        assert!(t.csv().lines().count() == 11);
+    }
+}

@@ -1,0 +1,251 @@
+//! Optimizers and learning-rate schedules.
+//!
+//! `qasso` is the paper's contribution (Algorithm 2); the base optimizers
+//! here supply the "SGD or any of its variants" steps that QASSO's
+//! warm-up/important-group updates delegate to (eq. 8).
+
+pub mod saliency;
+pub mod qasso;
+
+pub use qasso::{Qasso, QassoConfig, Stage};
+
+use crate::tensor::ParamStore;
+
+/// Pluggable base optimizer over a ParamStore.
+pub trait Optimizer: Send {
+    fn step(&mut self, params: &mut ParamStore, grads: &ParamStore, lr: f32);
+    fn name(&self) -> &'static str;
+}
+
+/// SGD with optional momentum and decoupled weight decay.
+pub struct Sgd {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Option<ParamStore>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32, weight_decay: f32) -> Sgd {
+        Sgd {
+            momentum,
+            weight_decay,
+            velocity: None,
+        }
+    }
+
+    pub fn plain() -> Sgd {
+        Sgd::new(0.0, 0.0)
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut ParamStore, grads: &ParamStore, lr: f32) {
+        if self.momentum != 0.0 && self.velocity.is_none() {
+            self.velocity = Some(params.zeros_like());
+        }
+        for (pi, p) in params.tensors.iter_mut().enumerate() {
+            let g = &grads.tensors[pi];
+            debug_assert_eq!(p.name, g.name);
+            if self.momentum != 0.0 {
+                let v = &mut self.velocity.as_mut().unwrap().tensors[pi];
+                for i in 0..p.data.len() {
+                    let grad = g.data[i] + self.weight_decay * p.data[i];
+                    v.data[i] = self.momentum * v.data[i] + grad;
+                    p.data[i] -= lr * v.data[i];
+                }
+            } else {
+                for i in 0..p.data.len() {
+                    let grad = g.data[i] + self.weight_decay * p.data[i];
+                    p.data[i] -= lr * grad;
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Adam / AdamW (decoupled weight decay when `decoupled_wd` is set).
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub decoupled_wd: bool,
+    t: u64,
+    m: Option<ParamStore>,
+    v: Option<ParamStore>,
+}
+
+impl Adam {
+    pub fn new(weight_decay: f32) -> Adam {
+        Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            decoupled_wd: false,
+            t: 0,
+            m: None,
+            v: None,
+        }
+    }
+
+    pub fn adamw(weight_decay: f32) -> Adam {
+        let mut a = Adam::new(weight_decay);
+        a.decoupled_wd = true;
+        a
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut ParamStore, grads: &ParamStore, lr: f32) {
+        if self.m.is_none() {
+            self.m = Some(params.zeros_like());
+            self.v = Some(params.zeros_like());
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let m = self.m.as_mut().unwrap();
+        let v = self.v.as_mut().unwrap();
+        for (pi, p) in params.tensors.iter_mut().enumerate() {
+            let g = &grads.tensors[pi];
+            let mt = &mut m.tensors[pi];
+            let vt = &mut v.tensors[pi];
+            for i in 0..p.data.len() {
+                let mut grad = g.data[i];
+                if !self.decoupled_wd {
+                    grad += self.weight_decay * p.data[i];
+                }
+                mt.data[i] = self.beta1 * mt.data[i] + (1.0 - self.beta1) * grad;
+                vt.data[i] = self.beta2 * vt.data[i] + (1.0 - self.beta2) * grad * grad;
+                let mhat = mt.data[i] / bc1;
+                let vhat = vt.data[i] / bc2;
+                let mut upd = mhat / (vhat.sqrt() + self.eps);
+                if self.decoupled_wd {
+                    upd += self.weight_decay * p.data[i];
+                }
+                p.data[i] -= lr * upd;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        if self.decoupled_wd {
+            "adamw"
+        } else {
+            "adam"
+        }
+    }
+}
+
+pub fn make_optimizer(name: &str, weight_decay: f32, momentum: f32) -> Box<dyn Optimizer> {
+    match name {
+        "sgd" => Box::new(Sgd::new(momentum, weight_decay)),
+        "adam" => Box::new(Adam::new(weight_decay)),
+        "adamw" => Box::new(Adam::adamw(weight_decay)),
+        other => panic!("unknown optimizer {other}"),
+    }
+}
+
+/// Learning-rate schedules (paper Appendix C uses StepLR / constant).
+#[derive(Debug, Clone)]
+pub enum Schedule {
+    Const(f32),
+    /// lr * gamma^(step / every)
+    Step { lr: f32, gamma: f32, every: usize },
+    /// half-cosine from lr to lr*floor over total steps
+    Cosine { lr: f32, floor: f32, total: usize },
+}
+
+impl Schedule {
+    pub fn lr(&self, step: usize) -> f32 {
+        match self {
+            Schedule::Const(lr) => *lr,
+            Schedule::Step { lr, gamma, every } => lr * gamma.powi((step / every) as i32),
+            Schedule::Cosine { lr, floor, total } => {
+                let p = (step as f32 / (*total).max(1) as f32).min(1.0);
+                floor + (lr - floor) * 0.5 * (1.0 + (std::f32::consts::PI * p).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn store(vals: &[f32]) -> ParamStore {
+        let mut s = ParamStore::new();
+        s.push(Tensor::from_vec("w", &[vals.len()], vals.to_vec()));
+        s
+    }
+
+    #[test]
+    fn sgd_plain_step() {
+        let mut p = store(&[1.0, 2.0]);
+        let g = store(&[0.5, -0.5]);
+        Sgd::plain().step(&mut p, &g, 0.1);
+        assert_eq!(p.tensors[0].data, vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let mut p = store(&[0.0]);
+        let g = store(&[1.0]);
+        let mut opt = Sgd::new(0.9, 0.0);
+        opt.step(&mut p, &g, 0.1);
+        let x1 = p.tensors[0].data[0]; // -0.1
+        opt.step(&mut p, &g, 0.1);
+        let x2 = p.tensors[0].data[0]; // -0.1 - 0.19
+        assert!((x1 + 0.1).abs() < 1e-6);
+        assert!((x2 + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize (x-3)^2 with adam
+        let mut p = store(&[0.0]);
+        let mut opt = Adam::new(0.0);
+        for _ in 0..500 {
+            let x = p.tensors[0].data[0];
+            let g = store(&[2.0 * (x - 3.0)]);
+            opt.step(&mut p, &g, 0.05);
+        }
+        assert!((p.tensors[0].data[0] - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn adamw_decay_differs_from_adam() {
+        let run = |decoupled: bool| {
+            let mut p = store(&[1.0]);
+            let mut opt = Adam::new(0.1);
+            opt.decoupled_wd = decoupled;
+            let g = store(&[0.0]);
+            for _ in 0..10 {
+                opt.step(&mut p, &g, 0.01);
+            }
+            p.tensors[0].data[0]
+        };
+        // decoupled decay shrinks weight even with zero grad
+        assert!(run(true) < 1.0);
+        assert_ne!(run(true), run(false));
+    }
+
+    #[test]
+    fn schedules() {
+        let s = Schedule::Step { lr: 1.0, gamma: 0.1, every: 10 };
+        assert_eq!(s.lr(0), 1.0);
+        assert!((s.lr(10) - 0.1).abs() < 1e-6);
+        assert!((s.lr(25) - 0.01).abs() < 1e-6);
+        let c = Schedule::Cosine { lr: 1.0, floor: 0.0, total: 100 };
+        assert!((c.lr(0) - 1.0).abs() < 1e-6);
+        assert!(c.lr(50) < 0.6 && c.lr(50) > 0.4);
+        assert!(c.lr(100) < 1e-6);
+        assert_eq!(Schedule::Const(0.3).lr(99), 0.3);
+    }
+}

@@ -1,0 +1,744 @@
+//! QASSO — Quantization-Aware Structured Sparse Optimizer (Algorithm 2).
+//!
+//! Four sequential stages driven by the global step counter:
+//!
+//! 1. **Warm-up** (line 2): `K_w` base-optimizer steps over everything.
+//! 2. **Projection** (lines 3-9): `B` periods of `K_b` steps; the upper
+//!    bit bound decays `b_u ← b_u − b_r` each period (starting from the
+//!    initialization bit width) and every (d,t,q_m) SGD update is followed
+//!    by the PPSG projection of `d` (Algorithm 3).
+//! 3. **Joint** (lines 10-21): `P` pruning periods of `K_p` steps. At each
+//!    period start, saliency (line 11, [13]) partitions groups into
+//!    important G_I / redundant G_R. Per step: (t,q_m) SGD (line 14), the
+//!    forget rate γ per group via eq. (16), step size d per site via
+//!    eq. (17) plus the Algorithm-4 adaptive correction, then the weight
+//!    updates eq. (8)/(9) with the quantized forget term x^Q (eq. 12).
+//!    Period ends hard-zero that period's redundant groups.
+//! 4. **Cool-down** (line 22): quant params frozen, pruned groups pinned
+//!    to zero, plain training of the surviving weights.
+
+use std::collections::BTreeMap;
+
+use crate::graph::PruneGroup;
+use crate::optim::saliency::{self, GroupIndex, SaliencyWeights};
+use crate::optim::Optimizer;
+use crate::quant::{self, QParams};
+use crate::tensor::ParamStore;
+
+#[derive(Debug, Clone)]
+pub struct QassoConfig {
+    pub warmup_steps: usize,
+    /// B — projection periods.
+    pub proj_periods: usize,
+    /// K_b — steps per projection period.
+    pub proj_steps: usize,
+    /// P — pruning periods.
+    pub prune_periods: usize,
+    /// K_p — steps per pruning period.
+    pub prune_steps: usize,
+    pub cooldown_steps: usize,
+    /// b_r — bit-width reduction per projection period.
+    pub bit_reduction: f32,
+    /// [b_l, b_u] — the target bit range of eq. (7c).
+    pub b_l: f32,
+    pub b_u: f32,
+    /// Bit width the quantizers are initialized at (32 CNN / 8 BERT).
+    pub init_bits: f32,
+    /// K as a fraction of prunable groups (eq. 7b).
+    pub target_group_sparsity: f64,
+    pub eta: f32,
+    pub xi: f32,
+    pub eps_clip: f32,
+    /// Algorithm 4 shrink factor β.
+    pub beta: f32,
+    /// Learning rate for quantization parameters (Appendix C: 1e-4).
+    pub lr_q: f32,
+    pub saliency: SaliencyWeights,
+}
+
+impl Default for QassoConfig {
+    fn default() -> Self {
+        QassoConfig {
+            warmup_steps: 20,
+            proj_periods: 4,
+            proj_steps: 20,
+            prune_periods: 4,
+            prune_steps: 20,
+            cooldown_steps: 60,
+            bit_reduction: 6.0,
+            b_l: 4.0,
+            b_u: 16.0,
+            init_bits: 32.0,
+            target_group_sparsity: 0.5,
+            eta: 0.9,
+            xi: 0.999,
+            eps_clip: 1e-8,
+            beta: 0.5,
+            lr_q: 1e-4,
+            saliency: SaliencyWeights::default(),
+        }
+    }
+}
+
+impl QassoConfig {
+    pub fn total_steps(&self) -> usize {
+        self.warmup_steps
+            + self.proj_periods * self.proj_steps
+            + self.prune_periods * self.prune_steps
+            + self.cooldown_steps
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Warmup,
+    Projection,
+    Joint,
+    Cooldown,
+    Done,
+}
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Warmup => "warmup",
+            Stage::Projection => "projection",
+            Stage::Joint => "joint",
+            Stage::Cooldown => "cooldown",
+            Stage::Done => "done",
+        }
+    }
+}
+
+/// Which stages run (for the Fig. 4a ablation).
+#[derive(Debug, Clone, Copy)]
+pub struct StageMask {
+    pub warmup: bool,
+    pub projection: bool,
+    pub joint: bool,
+    pub cooldown: bool,
+}
+
+impl Default for StageMask {
+    fn default() -> Self {
+        StageMask {
+            warmup: true,
+            projection: true,
+            joint: true,
+            cooldown: true,
+        }
+    }
+}
+
+pub struct Qasso {
+    pub cfg: QassoConfig,
+    pub mask: StageMask,
+    groups: Vec<PruneGroup>,
+    gi: GroupIndex,
+    /// Per group, aligned with gi.elems: the quant-site row of each element
+    /// (-1 when the element's tensor is not a quant site).
+    elem_site: Vec<Vec<i32>>,
+    base: Box<dyn Optimizer>,
+    step_count: usize,
+    /// Projection-stage decaying upper bound (starts at init_bits).
+    bu_cur: f32,
+    pruned: Vec<bool>,
+    /// Groups being forgotten during the current pruning period.
+    redundant: Vec<usize>,
+    /// eq. (16) γ per group (sparse: only redundant groups set).
+    gamma: Vec<f32>,
+    /// Algorithm 4 per-site γ scale for the current step.
+    gamma_scale: Vec<f32>,
+    // scratch buffers (allocation-free hot loop)
+    buf_g: Vec<f32>,
+    buf_b: Vec<f32>,
+}
+
+/// Everything the joint stage needs to know about a quant site.
+#[derive(Debug, Clone)]
+pub struct SiteSpec {
+    pub name: String,
+    /// Param tensor quantized at this site (None for activation sites).
+    pub param: Option<String>,
+}
+
+impl Qasso {
+    pub fn new(
+        cfg: QassoConfig,
+        groups: Vec<PruneGroup>,
+        sites: &[SiteSpec],
+        base: Box<dyn Optimizer>,
+        params: &ParamStore,
+    ) -> Qasso {
+        let gi = GroupIndex::build(&groups, params);
+        let site_of_tensor: BTreeMap<&str, i32> = sites
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.param.as_deref().map(|p| (p, i as i32)))
+            .collect();
+        // tensor index -> site
+        let mut tensor_site = vec![-1i32; params.len()];
+        for (name, site) in &site_of_tensor {
+            if let Some(ti) = params.idx(name) {
+                tensor_site[ti] = *site;
+            }
+        }
+        let elem_site = gi
+            .elems
+            .iter()
+            .map(|list| list.iter().map(|&(ti, _)| tensor_site[ti as usize]).collect())
+            .collect();
+        let ngroups = groups.len();
+        Qasso {
+            bu_cur: cfg.init_bits,
+            cfg,
+            mask: StageMask::default(),
+            groups,
+            gi,
+            elem_site,
+            base,
+            step_count: 0,
+            pruned: vec![false; ngroups],
+            redundant: Vec::new(),
+            gamma: vec![0.0; ngroups],
+            gamma_scale: vec![1.0; sites.len().max(1)],
+            buf_g: Vec::new(),
+            buf_b: Vec::new(),
+        }
+    }
+
+    pub fn stage(&self) -> Stage {
+        self.stage_at(self.step_count)
+    }
+
+    fn stage_at(&self, step: usize) -> Stage {
+        let c = &self.cfg;
+        let mut s = step;
+        if s < c.warmup_steps {
+            return Stage::Warmup;
+        }
+        s -= c.warmup_steps;
+        if s < c.proj_periods * c.proj_steps {
+            return Stage::Projection;
+        }
+        s -= c.proj_periods * c.proj_steps;
+        if s < c.prune_periods * c.prune_steps {
+            return Stage::Joint;
+        }
+        s -= c.prune_periods * c.prune_steps;
+        if s < c.cooldown_steps {
+            return Stage::Cooldown;
+        }
+        Stage::Done
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step_count
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn pruned_count(&self) -> usize {
+        self.pruned.iter().filter(|&&p| p).count()
+    }
+
+    pub fn group_sparsity(&self) -> f64 {
+        if self.groups.is_empty() {
+            return 0.0;
+        }
+        self.pruned_count() as f64 / self.groups.len() as f64
+    }
+
+    pub fn pruned_mask(&self) -> &[bool] {
+        &self.pruned
+    }
+
+    pub fn groups(&self) -> &[PruneGroup] {
+        &self.groups
+    }
+
+    pub fn group_index(&self) -> &GroupIndex {
+        &self.gi
+    }
+
+    /// Average learned bit width over sites (reporting).
+    pub fn avg_bits(q: &[QParams]) -> f32 {
+        if q.is_empty() {
+            return 32.0;
+        }
+        q.iter().map(|s| s.bit_width()).sum::<f32>() / q.len() as f32
+    }
+
+    // ------------------------------------------------------------ stepping
+    /// One QASSO step. `qgrads[i] = (∂f/∂d, ∂f/∂t, ∂f/∂q_m)` for site i
+    /// (the summed STE gradients the AOT train step returns).
+    pub fn step(
+        &mut self,
+        params: &mut ParamStore,
+        q: &mut [QParams],
+        grads: &ParamStore,
+        qgrads: &[(f32, f32, f32)],
+        lr: f32,
+    ) {
+        let stage = self.stage();
+        match stage {
+            Stage::Warmup => {
+                self.base.step(params, grads, lr);
+                if self.mask.warmup {
+                    // ablation: without warm-up the quant params stay at
+                    // their initialization until the projection stage.
+                    self.sgd_q(q, qgrads, true, true, true);
+                }
+            }
+            Stage::Projection => {
+                let off = self.step_count - self.cfg.warmup_steps;
+                let period = off / self.cfg.proj_steps.max(1);
+                if self.mask.projection {
+                    // line 4: decay the upper bound at each period start
+                    if off % self.cfg.proj_steps.max(1) == 0 {
+                        let target = self.cfg.init_bits
+                            - self.cfg.bit_reduction * (period as f32 + 1.0);
+                        self.bu_cur = target.max(self.cfg.b_u);
+                    }
+                    self.base.step(params, grads, lr);
+                    self.sgd_q(q, qgrads, true, true, true);
+                    for site in q.iter_mut() {
+                        quant::ppsg_project(site, self.cfg.b_l, self.bu_cur);
+                    }
+                } else {
+                    // ablation: plain training, constraint enforced at once
+                    // when the joint stage begins (bu snaps to b_u there)
+                    self.base.step(params, grads, lr);
+                    self.sgd_q(q, qgrads, true, true, true);
+                }
+            }
+            Stage::Joint => {
+                // after projection the operative range is [b_l, b_u]
+                self.bu_cur = self.bu_cur.min(self.cfg.b_u).max(self.cfg.b_l);
+                if self.mask.joint {
+                    self.joint_step(params, q, grads, qgrads, lr);
+                } else {
+                    // ablation: skip forgetting; prune abruptly at the end
+                    self.base.step(params, grads, lr);
+                    for site in q.iter_mut() {
+                        quant::ppsg_project(site, self.cfg.b_l, self.cfg.b_u);
+                    }
+                    let off = self.step_count
+                        - self.cfg.warmup_steps
+                        - self.cfg.proj_periods * self.cfg.proj_steps;
+                    if off + 1 == self.cfg.prune_periods * self.cfg.prune_steps {
+                        self.one_shot_prune(params, grads);
+                    }
+                }
+                self.pin_pruned(params);
+            }
+            Stage::Cooldown | Stage::Done => {
+                if self.mask.cooldown || stage == Stage::Done {
+                    // line 22: fixed quant params, train surviving weights
+                    self.base.step(params, grads, lr);
+                    self.pin_pruned(params);
+                } // ablation: no cooldown — do nothing (training ends)
+            }
+        }
+        self.step_count += 1;
+    }
+
+    /// SGD on the quantization parameters (selected components).
+    fn sgd_q(&self, q: &mut [QParams], qgrads: &[(f32, f32, f32)], upd_d: bool, upd_t: bool, upd_qm: bool) {
+        let lr = self.cfg.lr_q;
+        for (site, g) in q.iter_mut().zip(qgrads) {
+            if upd_d {
+                site.d = (site.d - lr * g.0).max(1e-8);
+            }
+            if upd_t {
+                site.t = (site.t - lr * g.1).clamp(0.5, 2.0);
+            }
+            if upd_qm {
+                site.qm = (site.qm - lr * g.2).max(1e-3);
+            }
+        }
+    }
+
+    /// Hard-zero every already-pruned group (idempotent).
+    fn pin_pruned(&self, params: &mut ParamStore) {
+        for g in 0..self.groups.len() {
+            if self.pruned[g] {
+                self.gi.zero_group(g, params);
+            }
+        }
+    }
+
+    /// Fallback for the no-joint-stage ablation: magnitude one-shot prune.
+    fn one_shot_prune(&mut self, params: &mut ParamStore, grads: &ParamStore) {
+        let scores = saliency::scores(&self.gi, params, grads, self.cfg.saliency);
+        let eligible: Vec<bool> = self.pruned.iter().map(|p| !p).collect();
+        let k = (self.cfg.target_group_sparsity * self.groups.len() as f64).round() as usize;
+        for g in saliency::select_redundant(&scores, &eligible, k) {
+            self.pruned[g] = true;
+            self.gi.zero_group(g, params);
+        }
+    }
+
+    // ------------------------------------------------------ the joint stage
+    fn joint_step(
+        &mut self,
+        params: &mut ParamStore,
+        q: &mut [QParams],
+        grads: &ParamStore,
+        qgrads: &[(f32, f32, f32)],
+        lr: f32,
+    ) {
+        let c = self.cfg.clone();
+        let off = self.step_count - c.warmup_steps - c.proj_periods * c.proj_steps;
+        let period = off / c.prune_steps.max(1);
+        let k = off % c.prune_steps.max(1);
+
+        // ---- period start: lines 11-12, saliency partition
+        if k == 0 {
+            let scores = saliency::scores(&self.gi, params, grads, c.saliency);
+            let eligible: Vec<bool> = self.pruned.iter().map(|p| !p).collect();
+            let total_target =
+                (c.target_group_sparsity * self.groups.len() as f64).round() as usize;
+            let cumulative =
+                (total_target as f64 * (period as f64 + 1.0) / c.prune_periods as f64).round()
+                    as usize;
+            let already = self.pruned_count();
+            let need = cumulative.saturating_sub(already);
+            self.redundant = saliency::select_redundant(&scores, &eligible, need);
+        }
+
+        // ---- line 14: SGD on (t, q_m); d is rule-driven (eq. 17)
+        self.sgd_q(q, qgrads, false, true, true);
+
+        // ---- eq. (15)+(16): per-group clip mean, angle, forget rate γ
+        let mut zero_now: Vec<usize> = Vec::new();
+        for &g in &self.redundant.clone() {
+            let (clip_mean, cos_gamma, norm_grad, norm_clipvec) =
+                self.group_geometry(g, params, grads, q);
+            let gamma = if clip_mean <= c.eps_clip as f64 {
+                // negligible knowledge in the group: project to zero now
+                zero_now.push(g);
+                0.0
+            } else if cos_gamma >= 0.0 {
+                // uniform forgetting over the remaining steps of the period
+                1.0 / (c.prune_steps - k) as f32
+            } else {
+                // descent-preserving magnitude (eq. 16 third branch)
+                (-(1.0 - c.eta) as f64 * lr as f64 * norm_grad
+                    / (cos_gamma * norm_clipvec).min(-1e-12)) as f32
+            };
+            self.gamma[g] = gamma.clamp(0.0, 1.0);
+        }
+        for g in zero_now {
+            self.gi.zero_group(g, params);
+        }
+
+        // ---- eq. (17) + Algorithm 4: per-site step size d and γ scale
+        self.update_site_d(params, grads, q, lr);
+
+        // keep all sites feasible under (t,q_m) drift
+        for site in q.iter_mut() {
+            quant::ppsg_project(site, c.b_l, c.b_u);
+        }
+
+        // ---- eq. (8): base step on everything (the -α∇ part of eq. (9))
+        self.base.step(params, grads, lr);
+
+        // ---- eq. (9) second term: forget quantized knowledge in G_R
+        for &g in &self.redundant {
+            let gamma = self.gamma[g];
+            if gamma == 0.0 {
+                continue;
+            }
+            for (idx, &(ti, ei)) in self.gi.elems[g].iter().enumerate() {
+                let site = self.elem_site[g][idx];
+                let x = params.tensors[ti as usize].data[ei as usize];
+                let (xq, scale) = if site >= 0 {
+                    (
+                        quant::fake_quant(x, &q[site as usize]),
+                        self.gamma_scale[site as usize],
+                    )
+                } else {
+                    (x, 1.0) // unquantized member: forget raw value
+                };
+                params.tensors[ti as usize].data[ei as usize] = x - gamma * scale * xq;
+            }
+        }
+
+        // ---- period end: commit this period's redundant set
+        if k + 1 == c.prune_steps {
+            for &g in &self.redundant.clone() {
+                self.pruned[g] = true;
+                self.gi.zero_group(g, params);
+            }
+            self.redundant.clear();
+        }
+    }
+
+    /// Gather group g and compute (mean clip, cos θ_γ, ||∇_g||, ||sgn·clip_g||).
+    fn group_geometry(
+        &mut self,
+        g: usize,
+        params: &ParamStore,
+        grads: &ParamStore,
+        q: &[QParams],
+    ) -> (f64, f64, f64, f64) {
+        self.buf_g.clear();
+        self.buf_b.clear();
+        let mut clip_sum = 0.0f64;
+        for (idx, &(ti, ei)) in self.gi.elems[g].iter().enumerate() {
+            let x = params.tensors[ti as usize].data[ei as usize];
+            let gr = grads.tensors[ti as usize].data[ei as usize];
+            let site = self.elem_site[g][idx];
+            let clip = if site >= 0 {
+                quant::clip_pow(x, &q[site as usize])
+            } else {
+                x.abs()
+            };
+            clip_sum += clip as f64;
+            self.buf_g.push(gr);
+            self.buf_b.push(quant::sign(x) * clip);
+        }
+        let n = self.gi.elems[g].len().max(1);
+        let cos = crate::tensor::cosine(&self.buf_g, &self.buf_b);
+        (
+            clip_sum / n as f64,
+            cos,
+            crate::tensor::norm2(&self.buf_g),
+            crate::tensor::norm2(&self.buf_b),
+        )
+    }
+
+    /// Eq. (17) per quant site over its redundant elements, then the
+    /// Algorithm-4 adjustment keeping the bit width in range. Sites with
+    /// no redundant elements this period keep their current d.
+    fn update_site_d(
+        &mut self,
+        params: &ParamStore,
+        grads: &ParamStore,
+        q: &mut [QParams],
+        lr: f32,
+    ) {
+        let c = &self.cfg;
+        for s in self.gamma_scale.iter_mut() {
+            *s = 1.0;
+        }
+        if q.is_empty() {
+            return;
+        }
+        // collect redundant elements per site
+        let mut per_site: BTreeMap<usize, (Vec<f32>, Vec<f32>, f64, usize)> = BTreeMap::new();
+        for &g in &self.redundant {
+            let gamma = self.gamma[g] as f64;
+            for (idx, &(ti, ei)) in self.gi.elems[g].iter().enumerate() {
+                let site = self.elem_site[g][idx];
+                if site < 0 {
+                    continue;
+                }
+                let x = params.tensors[ti as usize].data[ei as usize];
+                let gr = grads.tensors[ti as usize].data[ei as usize];
+                let r = quant::sign(x) * quant::residual(x, &q[site as usize]);
+                let e = per_site.entry(site as usize).or_insert_with(|| {
+                    (Vec::new(), Vec::new(), 0.0, 0)
+                });
+                e.0.push(gr);
+                e.1.push(r);
+                e.2 += gamma;
+                e.3 += 1;
+            }
+        }
+        for (site, (gvec, rvec, gamma_sum, cnt)) in per_site {
+            let cos_d = crate::tensor::cosine(&gvec, &rvec);
+            let qm_t = q[site].qm.max(1e-12).powf(q[site].t);
+            let gamma_bar = (gamma_sum / cnt.max(1) as f64).max(1e-8);
+            let d_new = if cos_d >= 0.0 {
+                // low-bit choice: d such that b == b_l (eq. 17 first branch)
+                qm_t / (2f32.powf(c.b_l - 1.0) - 1.0)
+            } else {
+                let norm_g = crate::tensor::norm2(&gvec);
+                let norm_r = crate::tensor::norm2(&rvec).max(1e-12);
+                ((-(c.xi as f64) * c.eta as f64 * lr as f64 * norm_g)
+                    / (gamma_bar * cos_d * norm_r)) as f32
+            };
+            if d_new.is_finite() && d_new > 0.0 {
+                q[site].d = d_new;
+            }
+            // Algorithm 4: keep the bit width feasible, scaling γ along
+            let (scale, _) = quant::adaptive_adjust(1.0, &mut q[site], c.b_l, c.b_u, c.beta);
+            self.gamma_scale[site] = scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Member, Side};
+    use crate::optim::Sgd;
+    use crate::tensor::Tensor;
+
+    fn toy() -> (ParamStore, Vec<PruneGroup>, Vec<SiteSpec>, Vec<QParams>) {
+        let mut params = ParamStore::new();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut w = vec![0.0f32; 4 * 6];
+        rng.fill_normal(&mut w, 0.5);
+        params.push(Tensor::from_vec("w", &[4, 6], w));
+        let groups = (0..6)
+            .map(|j| PruneGroup {
+                id: j,
+                label: format!("w:ch{j}"),
+                members: vec![Member {
+                    tensor: "w".into(),
+                    axis: 1,
+                    indices: vec![j],
+                    side: Side::Out,
+                }],
+            })
+            .collect();
+        let sites = vec![SiteSpec {
+            name: "w".into(),
+            param: Some("w".into()),
+        }];
+        let q = vec![QParams::init(1.0, 16.0)];
+        (params, groups, sites, q)
+    }
+
+    fn cfg_small() -> QassoConfig {
+        QassoConfig {
+            warmup_steps: 2,
+            proj_periods: 2,
+            proj_steps: 3,
+            prune_periods: 2,
+            prune_steps: 4,
+            cooldown_steps: 3,
+            bit_reduction: 4.0,
+            b_l: 4.0,
+            b_u: 8.0,
+            init_bits: 16.0,
+            target_group_sparsity: 0.5,
+            ..Default::default()
+        }
+    }
+
+    fn run(mask: StageMask) -> (Qasso, ParamStore, Vec<QParams>) {
+        let (mut params, groups, sites, mut q) = toy();
+        let cfg = cfg_small();
+        let mut opt = Qasso::new(cfg.clone(), groups, &sites, Box::new(Sgd::plain()), &params);
+        opt.mask = mask;
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..cfg.total_steps() {
+            let mut grads = params.zeros_like();
+            // pseudo-gradients pulling weights toward zero + noise
+            for (ti, t) in params.tensors.iter().enumerate() {
+                for (i, &x) in t.data.iter().enumerate() {
+                    grads.tensors[ti].data[i] = 0.1 * x + rng.normal_f32(0.02);
+                }
+            }
+            let qg = vec![(rng.normal_f32(0.01), rng.normal_f32(0.01), rng.normal_f32(0.01))];
+            opt.step(&mut params, &mut q, &grads, &qg, 0.05);
+        }
+        (opt, params, q)
+    }
+
+    #[test]
+    fn stages_progress_in_order() {
+        let (mut params, groups, sites, mut q) = toy();
+        let cfg = cfg_small();
+        let mut opt = Qasso::new(cfg.clone(), groups, &sites, Box::new(Sgd::plain()), &params);
+        let grads = params.zeros_like();
+        let mut seen = Vec::new();
+        for _ in 0..cfg.total_steps() {
+            let s = opt.stage();
+            if seen.last() != Some(&s) {
+                seen.push(s);
+            }
+            opt.step(&mut params, &mut q, &grads, &[(0.0, 0.0, 0.0)], 0.01);
+        }
+        assert_eq!(
+            seen,
+            vec![Stage::Warmup, Stage::Projection, Stage::Joint, Stage::Cooldown]
+        );
+        assert_eq!(opt.stage(), Stage::Done);
+    }
+
+    #[test]
+    fn sparsity_target_reached_and_groups_zeroed() {
+        let (opt, params, _) = run(StageMask::default());
+        assert_eq!(opt.pruned_count(), 3); // 50% of 6
+        for (g, &pruned) in opt.pruned_mask().iter().enumerate() {
+            if pruned {
+                assert!(opt.group_index().group_norm(g, &params) < 1e-9, "group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_constraint_satisfied_after_projection() {
+        let (_, _, q) = run(StageMask::default());
+        for site in &q {
+            let b = site.bit_width();
+            assert!(
+                (cfg_small().b_l - 1e-2..=cfg_small().b_u + 1e-2).contains(&b),
+                "b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn surviving_groups_keep_signal() {
+        let (opt, params, _) = run(StageMask::default());
+        let mut live = 0;
+        for g in 0..opt.n_groups() {
+            if !opt.pruned_mask()[g] && opt.group_index().group_norm(g, &params) > 1e-6 {
+                live += 1;
+            }
+        }
+        assert_eq!(live, 3);
+    }
+
+    #[test]
+    fn ablation_no_joint_still_hits_sparsity() {
+        let (opt, params, _) = run(StageMask {
+            joint: false,
+            ..Default::default()
+        });
+        assert_eq!(opt.pruned_count(), 3);
+        for g in 0..opt.n_groups() {
+            if opt.pruned_mask()[g] {
+                assert!(opt.group_index().group_norm(g, &params) < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_stays_in_unit_interval() {
+        let (opt, _, _) = run(StageMask::default());
+        for &g in &opt.gamma {
+            assert!((0.0..=1.0).contains(&g), "gamma={g}");
+        }
+    }
+
+    #[test]
+    fn pruned_groups_stay_zero_through_cooldown() {
+        // gradients try to regrow pruned weights; pinning must hold
+        let (mut params, groups, sites, mut q) = toy();
+        let cfg = cfg_small();
+        let mut opt = Qasso::new(cfg.clone(), groups, &sites, Box::new(Sgd::plain()), &params);
+        for _ in 0..cfg.total_steps() {
+            let mut grads = params.zeros_like();
+            for t in grads.tensors.iter_mut() {
+                for v in t.data.iter_mut() {
+                    *v = -1.0; // constant push away from zero
+                }
+            }
+            opt.step(&mut params, &mut q, &grads, &[(0.0, 0.0, 0.0)], 0.05);
+        }
+        for g in 0..opt.n_groups() {
+            if opt.pruned_mask()[g] {
+                assert!(opt.group_index().group_norm(g, &params) < 1e-9);
+            }
+        }
+    }
+}

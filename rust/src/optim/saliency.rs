@@ -1,0 +1,221 @@
+//! Group saliency scoring (HESSO-style, paper line 11 / [13]).
+//!
+//! Each prune group receives a score combining two normalized criteria:
+//!
+//! * **magnitude**: RMS of the group's output-side weights — small weights
+//!   contribute little to the forward signal;
+//! * **gradient flow**: |<x_g, ∇_g f>| — the first-order Taylor estimate of
+//!   the loss change if the group is removed (x_g -> 0).
+//!
+//! Scores are min-max normalized per criterion and blended; the K lowest
+//! scores become the redundant set G_R (Algorithm 2 line 12).
+
+use crate::graph::{PruneGroup, Side};
+use crate::tensor::ParamStore;
+
+/// Precomputed flat element indices per group (output-side members only),
+/// built once per search space so the per-period scoring is index walks.
+#[derive(Debug, Clone)]
+pub struct GroupIndex {
+    /// per group: (tensor index in store, flat element index)
+    pub elems: Vec<Vec<(u32, u32)>>,
+}
+
+impl GroupIndex {
+    pub fn build(groups: &[PruneGroup], params: &ParamStore) -> GroupIndex {
+        let mut elems = Vec::with_capacity(groups.len());
+        for g in groups {
+            let mut list = Vec::new();
+            for m in &g.members {
+                if m.side != Side::Out {
+                    continue;
+                }
+                let Some(ti) = params.idx(&m.tensor) else {
+                    continue; // tensor may be absent (e.g. model without bias)
+                };
+                let t = &params.tensors[ti];
+                let shape = &t.shape;
+                debug_assert!(m.axis < shape.len(), "{}: axis {}", m.tensor, m.axis);
+                // stride of the member axis and total outer repeats
+                let axis_len = shape[m.axis];
+                let inner: usize = shape[m.axis + 1..].iter().product();
+                let outer: usize = shape[..m.axis].iter().product();
+                for &idx in &m.indices {
+                    debug_assert!(idx < axis_len, "{}: idx {} >= {}", m.tensor, idx, axis_len);
+                    for o in 0..outer {
+                        let base = o * axis_len * inner + idx * inner;
+                        for k in 0..inner {
+                            list.push((ti as u32, (base + k) as u32));
+                        }
+                    }
+                }
+            }
+            elems.push(list);
+        }
+        GroupIndex { elems }
+    }
+
+    pub fn zero_group(&self, g: usize, params: &mut ParamStore) {
+        for &(ti, ei) in &self.elems[g] {
+            params.tensors[ti as usize].data[ei as usize] = 0.0;
+        }
+    }
+
+    pub fn group_norm(&self, g: usize, params: &ParamStore) -> f64 {
+        let mut s = 0.0f64;
+        for &(ti, ei) in &self.elems[g] {
+            let v = params.tensors[ti as usize].data[ei as usize] as f64;
+            s += v * v;
+        }
+        s.sqrt()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SaliencyWeights {
+    pub magnitude: f64,
+    pub grad_flow: f64,
+}
+
+impl Default for SaliencyWeights {
+    fn default() -> Self {
+        SaliencyWeights {
+            magnitude: 0.5,
+            grad_flow: 0.5,
+        }
+    }
+}
+
+/// Score every group; higher = more important.
+pub fn scores(
+    gi: &GroupIndex,
+    params: &ParamStore,
+    grads: &ParamStore,
+    w: SaliencyWeights,
+) -> Vec<f64> {
+    let n = gi.elems.len();
+    let mut mag = vec![0.0f64; n];
+    let mut flow = vec![0.0f64; n];
+    for g in 0..n {
+        let (mut m2, mut fl) = (0.0f64, 0.0f64);
+        for &(ti, ei) in &gi.elems[g] {
+            let x = params.tensors[ti as usize].data[ei as usize] as f64;
+            let gr = grads.tensors[ti as usize].data[ei as usize] as f64;
+            m2 += x * x;
+            fl += x * gr;
+        }
+        let cnt = gi.elems[g].len().max(1) as f64;
+        mag[g] = (m2 / cnt).sqrt(); // RMS: joint groups aren't penalized for size
+        flow[g] = fl.abs();
+    }
+    normalize(&mut mag);
+    normalize(&mut flow);
+    (0..n)
+        .map(|g| w.magnitude * mag[g] + w.grad_flow * flow[g])
+        .collect()
+}
+
+fn normalize(v: &mut [f64]) {
+    let max = v.iter().cloned().fold(0.0f64, f64::max);
+    if max > 0.0 {
+        for x in v.iter_mut() {
+            *x /= max;
+        }
+    }
+}
+
+/// Pick the `k` lowest-scoring groups among `eligible` (not yet pruned).
+pub fn select_redundant(scores: &[f64], eligible: &[bool], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).filter(|&i| eligible[i]).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Member;
+    use crate::tensor::Tensor;
+
+    fn setup() -> (Vec<PruneGroup>, ParamStore, ParamStore) {
+        // linear [2,3]: groups = output columns
+        let mut params = ParamStore::new();
+        params.push(Tensor::from_vec(
+            "w",
+            &[2, 3],
+            vec![1.0, 0.0, 5.0, 1.0, 0.0, 5.0],
+        ));
+        let mut grads = params.zeros_like();
+        grads.tensors[0].data = vec![0.1, 0.0, 0.9, 0.1, 0.0, 0.9];
+        let groups = (0..3)
+            .map(|j| PruneGroup {
+                id: j,
+                label: format!("w:ch{j}"),
+                members: vec![Member {
+                    tensor: "w".into(),
+                    axis: 1,
+                    indices: vec![j],
+                    side: Side::Out,
+                }],
+            })
+            .collect();
+        (groups, params, grads)
+    }
+
+    #[test]
+    fn index_maps_columns() {
+        let (groups, params, _) = setup();
+        let gi = GroupIndex::build(&groups, &params);
+        // column 2 = flat indices 2 and 5
+        assert_eq!(gi.elems[2], vec![(0, 2), (0, 5)]);
+    }
+
+    #[test]
+    fn zero_group_zeroes_only_its_column() {
+        let (groups, mut params, _) = setup();
+        let gi = GroupIndex::build(&groups, &params);
+        gi.zero_group(0, &mut params);
+        assert_eq!(params.tensors[0].data, vec![0.0, 0.0, 5.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn saliency_orders_by_importance() {
+        let (groups, params, grads) = setup();
+        let gi = GroupIndex::build(&groups, &params);
+        let s = scores(&gi, &params, &grads, SaliencyWeights::default());
+        // col1 (zeros) < col0 (small) < col2 (large)
+        assert!(s[1] < s[0] && s[0] < s[2], "{s:?}");
+        let red = select_redundant(&s, &[true, true, true], 2);
+        assert_eq!(red, vec![1, 0]);
+    }
+
+    #[test]
+    fn eligible_mask_respected() {
+        let (groups, params, grads) = setup();
+        let gi = GroupIndex::build(&groups, &params);
+        let s = scores(&gi, &params, &grads, SaliencyWeights::default());
+        let red = select_redundant(&s, &[true, false, true], 1);
+        assert_eq!(red, vec![0]); // col1 excluded despite lowest score
+    }
+
+    #[test]
+    fn conv_axis3_indexing() {
+        // HWIO [1,1,2,2], prune cout 1 -> flat 1,3
+        let mut params = ParamStore::new();
+        params.push(Tensor::from_vec("c", &[1, 1, 2, 2], vec![1., 2., 3., 4.]));
+        let groups = vec![PruneGroup {
+            id: 0,
+            label: "c:ch1".into(),
+            members: vec![Member {
+                tensor: "c".into(),
+                axis: 3,
+                indices: vec![1],
+                side: Side::Out,
+            }],
+        }];
+        let gi = GroupIndex::build(&groups, &params);
+        assert_eq!(gi.elems[0], vec![(0, 1), (0, 3)]);
+        assert!((gi.group_norm(0, &params) - (4.0f64 + 16.0).sqrt()).abs() < 1e-9);
+    }
+}

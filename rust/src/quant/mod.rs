@@ -1,0 +1,205 @@
+//! Rust-native quantizer math — eqs. (1)-(6), (13)-(14) and eq. (3).
+//!
+//! The QASSO joint stage needs x^Q, clip and R(x) on the optimizer hot
+//! path (eq. 9's forget term and the eq. 16/17 angle rules), so the
+//! quantizer is reimplemented here and validated bit-for-bit against the
+//! Layer-1 oracle via the golden vectors `artifacts/quant_vectors.json`
+//! (see rust/tests/test_quant_vectors.rs).
+
+pub mod ppsg;
+
+pub use ppsg::{adaptive_adjust, d_range_for_bits, ppsg_project};
+
+const EPS: f32 = 1e-12;
+
+/// Per-site learnable quantization parameters (one row of the q array).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub d: f32,
+    pub t: f32,
+    pub qm: f32,
+}
+
+impl QParams {
+    /// Paper Appendix C init: t = 1, q_m = max|w|, d inverted from eq. (3)
+    /// for the requested initial bit width.
+    pub fn init(max_abs_w: f32, target_bits: f32) -> QParams {
+        let qm = max_abs_w.max(1e-3);
+        let t = 1.0;
+        let d = qm.powf(t) / (2f32.powf(target_bits - 1.0) - 1.0);
+        QParams { d, t, qm }
+    }
+
+    /// Eq. (3): b = log2(q_m^t / d + 1) + 1.
+    pub fn bit_width(&self) -> f32 {
+        bit_width(self.d, self.t, self.qm)
+    }
+}
+
+pub fn bit_width(d: f32, t: f32, qm: f32) -> f32 {
+    (qm.max(EPS).powf(t) / d + 1.0).log2() + 1.0
+}
+
+/// Eq. (13): clip_{q_m}^t(|x|).
+#[inline]
+pub fn clip_pow(x: f32, q: &QParams) -> f32 {
+    let ax = x.abs();
+    if ax <= q.qm {
+        ax.max(EPS).powf(q.t)
+    } else {
+        q.qm.max(EPS).powf(q.t)
+    }
+}
+
+/// Eqs. (1)+(2): the full fake-quantization map x -> x^Q.
+#[inline]
+pub fn fake_quant(x: f32, q: &QParams) -> f32 {
+    let c = clip_pow(x, q);
+    let s = sign(x);
+    q.d * (s * c / q.d).round()
+}
+
+/// Eq. (14): R(x) = round(c/d) - c/d.
+#[inline]
+pub fn residual(x: f32, q: &QParams) -> f32 {
+    let cd = clip_pow(x, q) / q.d;
+    cd.round() - cd
+}
+
+/// Eq. (12) decomposition check: x^Q = sgn(x)*clip + d*sgn(x)*R(x).
+#[inline]
+pub fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Eq. (4): dx^Q/dd (per element).
+pub fn grad_d(x: f32, q: &QParams) -> f32 {
+    sign(x) * residual(x, q)
+}
+
+/// Eq. (5): dx^Q/dt (per element).
+pub fn grad_t(x: f32, q: &QParams) -> f32 {
+    let ax = x.abs();
+    if ax <= EPS {
+        return 0.0;
+    }
+    let g = if ax <= q.qm {
+        ax.max(EPS).powf(q.t) * ax.max(EPS).ln()
+    } else {
+        q.qm.max(EPS).powf(q.t) * q.qm.max(EPS).ln()
+    };
+    sign(x) * g
+}
+
+/// Eq. (6): dx^Q/dq_m (per element).
+pub fn grad_qm(x: f32, q: &QParams) -> f32 {
+    if x.abs() <= q.qm {
+        0.0
+    } else {
+        sign(x) * q.t * q.qm.max(EPS).powf(q.t - 1.0)
+    }
+}
+
+/// Vectorized fake-quant into a reusable output buffer (joint-stage hot path).
+pub fn fake_quant_slice(xs: &[f32], q: &QParams, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| fake_quant(x, q)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(d: f32, t: f32, qm: f32) -> QParams {
+        QParams { d, t, qm }
+    }
+
+    #[test]
+    fn eq12_decomposition_holds() {
+        // x^Q == sgn(x)*clip + d*sgn(x)*R(x) — the identity the joint
+        // stage's angle rules rely on.
+        let qp = q(0.05, 1.1, 1.2);
+        for &x in &[-2.0f32, -1.0, -0.3, 0.0, 0.2, 0.9, 1.3, 5.0] {
+            let lhs = fake_quant(x, &qp);
+            let rhs = sign(x) * clip_pow(x, &qp) + qp.d * sign(x) * residual(x, &qp);
+            assert!((lhs - rhs).abs() < 1e-5, "x={x}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn init_hits_target_bits() {
+        for bits in [2.0f32, 4.0, 8.0, 16.0, 32.0] {
+            let qp = QParams::init(0.73, bits);
+            assert!((qp.bit_width() - bits).abs() < 1e-3, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn quant_output_on_grid() {
+        let qp = q(0.25, 1.0, 1.0);
+        for &x in &[0.1f32, -0.6, 0.77, 2.0] {
+            let y = fake_quant(x, &qp);
+            let ratio = y / qp.d;
+            assert!((ratio - ratio.round()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn saturation_beyond_qm() {
+        let qp = q(0.1, 1.0, 0.5);
+        assert_eq!(fake_quant(10.0, &qp), fake_quant(0.6, &qp));
+        assert_eq!(fake_quant(-10.0, &qp), -fake_quant(10.0, &qp));
+    }
+
+    #[test]
+    fn grad_d_is_residual_identity() {
+        // eq. (4) is exactly sgn(x) * R(x) — the STE form, NOT the plain
+        // derivative of d*round(c/d) (which would be round(c/d)).
+        let qp = q(0.1, 1.1, 1.0);
+        for &x in &[-1.3f32, -0.437, 0.2, 0.437, 2.0] {
+            assert_eq!(grad_d(x, &qp), sign(x) * residual(x, &qp));
+            assert!(grad_d(x, &qp).abs() <= 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn grad_qm_matches_finite_difference_outside_clip() {
+        // outside the clip range x^Q = d*round(qm^t/d) is smooth in qm
+        // between round jumps; eq. (6) matches the STE-smoothed value
+        // t*qm^(t-1) there.
+        let qp = q(0.001, 1.1, 1.0);
+        // h spans many round jumps so the staircase averages out:
+        // fd error is +-d/(2h) = +-0.01
+        let h = 0.05f32;
+        let fd = (fake_quant(2.0, &q(qp.d, qp.t, qp.qm + h))
+            - fake_quant(2.0, &q(qp.d, qp.t, qp.qm - h)))
+            / (2.0 * h);
+        assert!((grad_qm(2.0, &qp) - fd).abs() < 0.05, "{} vs {fd}", grad_qm(2.0, &qp));
+        assert_eq!(grad_qm(0.3, &qp), 0.0);
+    }
+
+    #[test]
+    fn grad_t_zero_at_origin() {
+        let qp = q(0.1, 0.9, 1.0);
+        assert_eq!(grad_t(0.0, &qp), 0.0);
+        assert!(grad_t(0.5, &qp) < 0.0); // |x|<1 => log negative, sgn +
+        assert!(grad_t(-0.5, &qp) > 0.0);
+    }
+
+    #[test]
+    fn slice_matches_scalar() {
+        let qp = q(0.07, 1.05, 0.9);
+        let xs = [-1.5f32, -0.2, 0.0, 0.4, 2.2];
+        let mut out = Vec::new();
+        fake_quant_slice(&xs, &qp, &mut out);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(out[i], fake_quant(x, &qp));
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! PPSG — Partial Projected Stochastic Gradient (paper Algorithm 3) and
+//! the adaptive (γ, d) rule (paper Algorithm 4).
+//!
+//! The bit-width constraint b_i ∈ [b_l, b_u] (eq. 7c / 10b) has no
+//! closed-form joint projection over (d, t, q_m); projecting q_m or t
+//! destabilizes training through the exponential terms in eqs. (5)-(6).
+//! PPSG therefore projects **only d**: inverting eq. (3),
+//!
+//! ```text
+//! b ∈ [b_l, b_u]  ⇔  d ∈ [ q_m^t/(2^(b_u-1)-1),  q_m^t/(2^(b_l-1)-1) ]
+//! ```
+
+use super::{bit_width, QParams};
+
+/// Feasible step-size interval [d_min, d_max] for bit range [b_l, b_u]
+/// given the current (q_m, t) — Algorithm 3 line 3.
+pub fn d_range_for_bits(qm: f32, t: f32, b_l: f32, b_u: f32) -> (f32, f32) {
+    debug_assert!(b_u >= b_l);
+    let top = qm.max(1e-12).powf(t);
+    let d_min = top / (2f32.powf(b_u - 1.0) - 1.0);
+    let d_max = top / (2f32.powf(b_l - 1.0) - 1.0);
+    (d_min, d_max)
+}
+
+/// Algorithm 3 lines 3-4: project d onto the feasible interval after the
+/// (d, t, q_m) SGD update has been applied. Returns the projected d.
+pub fn ppsg_project(q: &mut QParams, b_l: f32, b_u: f32) -> f32 {
+    let (d_min, d_max) = d_range_for_bits(q.qm, q.t, b_l, b_u);
+    q.d = q.d.clamp(d_min, d_max);
+    q.d
+}
+
+/// Algorithm 4: adaptively rescale the forget rate γ and step size d until
+/// the computed bit width lies in [b_l, b_u]. Descent is preserved: when
+/// the bit width is too high, γ shrinks by β while d grows by 1/β (their
+/// product — the eq. (9) forget magnitude bound — is invariant); when too
+/// low, d alone shrinks. Returns the adjusted (γ, d).
+pub fn adaptive_adjust(mut gamma: f32, q: &mut QParams, b_l: f32, b_u: f32, beta: f32) -> (f32, f32) {
+    debug_assert!((0.0..1.0).contains(&beta) && beta > 0.0);
+    let mut iters = 0;
+    loop {
+        let b = bit_width(q.d, q.t, q.qm);
+        if (b_l..=b_u).contains(&b) {
+            break;
+        }
+        if b > b_u {
+            gamma *= beta;
+            q.d /= beta;
+        } else {
+            q.d *= beta;
+        }
+        iters += 1;
+        // β-geometric steps always converge; the bound is defensive.
+        if iters > 10_000 {
+            // fall back to the exact projection
+            ppsg_project(q, b_l, b_u);
+            break;
+        }
+    }
+    (gamma, q.d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn d_range_matches_eq3_inversion() {
+        let (qm, t) = (1.5f32, 1.1f32);
+        let (d_min, d_max) = d_range_for_bits(qm, t, 4.0, 16.0);
+        assert!((bit_width(d_min, t, qm) - 16.0).abs() < 1e-3);
+        assert!((bit_width(d_max, t, qm) - 4.0).abs() < 1e-3);
+        assert!(d_min < d_max);
+    }
+
+    #[test]
+    fn projection_enforces_constraint() {
+        let mut q = QParams { d: 1e-6, t: 1.0, qm: 1.0 }; // ~21 bits
+        ppsg_project(&mut q, 4.0, 8.0);
+        let b = q.bit_width();
+        assert!((4.0..=8.0).contains(&b), "b={b}");
+        // feasible d untouched
+        let mut q2 = QParams::init(1.0, 6.0);
+        let before = q2.d;
+        ppsg_project(&mut q2, 4.0, 8.0);
+        assert_eq!(before, q2.d);
+    }
+
+    #[test]
+    fn adaptive_converges_both_directions() {
+        // too many bits
+        let mut q = QParams { d: 1e-5, t: 1.0, qm: 1.0 };
+        let (g, _) = adaptive_adjust(0.1, &mut q, 4.0, 8.0, 0.5);
+        assert!((4.0..=8.0).contains(&q.bit_width()));
+        assert!(g < 0.1); // gamma shrank
+        // too few bits
+        let mut q = QParams { d: 2.0, t: 1.0, qm: 1.0 };
+        let (g, _) = adaptive_adjust(0.1, &mut q, 4.0, 8.0, 0.5);
+        assert!((4.0..=8.0).contains(&q.bit_width()));
+        assert_eq!(g, 0.1); // gamma untouched when raising bits
+    }
+
+    #[test]
+    fn prop_projection_always_feasible() {
+        prop::check(
+            100,
+            |g| {
+                (
+                    g.f32_in(1e-6, 2.0),  // d
+                    g.f32_in(0.7, 1.4),   // t
+                    g.f32_in(0.05, 4.0),  // qm
+                    g.f32_in(2.0, 6.0),   // b_l
+                    g.f32_in(0.5, 10.0),  // b_u - b_l
+                )
+            },
+            |(d, t, qm, bl, span)| {
+                let bu = bl + span.max(1.0);
+                let mut q = QParams { d: *d, t: *t, qm: *qm };
+                ppsg_project(&mut q, *bl, bu);
+                let b = q.bit_width();
+                // allow f32 slack at interval edges
+                if b >= bl - 1e-3 && b <= bu + 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("b={b} outside [{bl}, {bu}]"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_adaptive_gamma_d_product_bounded() {
+        // when bits are reduced, gamma*d never grows (descent preservation)
+        prop::check(
+            60,
+            |g| (g.f32_in(1e-6, 1e-3), g.f32_in(0.5, 2.0), g.f32_in(0.01, 0.5)),
+            |(d, qm, gamma0)| {
+                let mut q = QParams { d: *d, t: 1.0, qm: *qm };
+                let before = (*gamma0 as f64) * (*d as f64);
+                let (g1, d1) = adaptive_adjust(*gamma0, &mut q, 4.0, 8.0, 0.5);
+                let after = g1 as f64 * d1 as f64;
+                if after <= before * 1.0001 {
+                    Ok(())
+                } else {
+                    Err(format!("gamma*d grew: {before} -> {after}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,418 @@
+//! Paper-table / figure reproduction harnesses.
+//!
+//! One function per table/figure of the evaluation section (see DESIGN.md
+//! per-experiment index). Each runs the relevant methods on the shared
+//! substrate, prints the table, and returns markdown for EXPERIMENTS.md.
+//! `--steps-scale` shrinks runs for smoke testing; default scale targets
+//! single-core CPU wall clocks of a few minutes per table.
+
+use anyhow::Result;
+
+use crate::baselines::{self, LlmPruneStyle};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{GetaCompressor, RunResult, Trainer};
+use crate::graph;
+use crate::optim::qasso::StageMask;
+use crate::util::table::Table;
+
+pub struct ReportCtx {
+    pub art_dir: std::path::PathBuf,
+    pub scale: f64,
+    pub verbose: bool,
+    pub markdown: Vec<(String, String)>,
+}
+
+impl ReportCtx {
+    pub fn new(art_dir: &std::path::Path, scale: f64, verbose: bool) -> ReportCtx {
+        ReportCtx {
+            art_dir: art_dir.to_path_buf(),
+            scale,
+            verbose,
+            markdown: Vec::new(),
+        }
+    }
+
+    fn exp(&self, model: &str) -> ExperimentConfig {
+        let mut e = ExperimentConfig::defaults_for(model);
+        e.scale_steps(self.scale);
+        e
+    }
+
+    fn trainer(&self, exp: ExperimentConfig) -> Result<Trainer> {
+        let mut t = Trainer::new(&self.art_dir, exp)?;
+        t.verbose = self.verbose;
+        t
+            .engine
+            .platform(); // touch
+        Ok(t)
+    }
+
+    fn geta(&self, t: &Trainer) -> Result<GetaCompressor> {
+        GetaCompressor::new(&t.engine, &t.exp, StageMask::default())
+    }
+
+    fn finish(&mut self, id: &str, tbl: Table) {
+        tbl.print();
+        self.markdown.push((id.to_string(), tbl.markdown()));
+    }
+
+    // ----------------------------------------------------------- table 1
+    /// Qualitative capability matrix (paper Table 1) — self-reported from
+    /// what this codebase implements.
+    pub fn table1(&mut self) {
+        let mut t = Table::new(
+            "Table 1 — method capabilities",
+            &["property", "GETA", "BB", "DJPQ", "QST", "Clip-Q", "ANNC"],
+        );
+        let row = |p: &str, v: [&str; 6]| {
+            let mut cells = vec![p.to_string()];
+            cells.extend(v.iter().map(|s| s.to_string()));
+            cells
+        };
+        t.row(row("structured prune", ["yes", "yes", "yes", "no", "no", "no"]));
+        t.row(row("one-shot", ["yes", "no", "no", "yes", "yes", "no"]));
+        t.row(row("white-box", ["yes", "no", "no", "yes", "no", "yes"]));
+        t.row(row("generalization", ["yes", "no", "no", "no", "no", "no"]));
+        self.finish("table1", t);
+    }
+
+    // ----------------------------------------------------------- table 2
+    /// ResNet20/CIFAR10 analog: GETA structured vs unstructured joint
+    /// baselines (ANNC / QST-B analogs), weight quant only.
+    pub fn table2(&mut self) -> Result<Vec<RunResult>> {
+        let mut exp = self.exp("resnet_mini");
+        // paper: 35% sparsity with learned bits collapsing toward b_l —
+        // mirror that with a tighter upper bound for the joint run
+        exp.qasso.target_group_sparsity = 0.5;
+        exp.qasso.b_u = 8.0;
+        exp.qasso.bit_reduction = 6.0;
+        let t = self.trainer(exp)?;
+        let mut rows = Vec::new();
+
+        // full-precision baseline (uniform "32-bit QAT" = plain training)
+        let steps = t.exp.total_steps();
+        let mut base = baselines::UniformQat::new(32.0, baselines::base_opt(&t.exp), steps);
+        rows.push(t.run(&mut base)?);
+
+        let mut annc = baselines::UnstructuredJoint::new(
+            0.5, 4.0, 16.0, baselines::base_opt(&t.exp), steps, "ANNC-like (unstructured)",
+        );
+        rows.push(t.run(&mut annc)?);
+
+        let mut qst = baselines::UnstructuredJoint::new(
+            0.35, 4.0, 16.0, baselines::base_opt(&t.exp), steps, "QST-B-like (unstructured)",
+        );
+        rows.push(t.run(&mut qst)?);
+
+        let mut geta = self.geta(&t)?;
+        rows.push(t.run(&mut geta)?);
+
+        let mut tbl = Table::new(
+            "Table 2 — resnet_mini / synth-CIFAR (weight quant only)",
+            &["method", "pruning", "acc %", "rel BOPs %", "avg bits"],
+        );
+        for r in &rows {
+            let kind = if r.method.contains("unstructured") {
+                "unstructured"
+            } else if r.method == "GETA" {
+                "structured"
+            } else {
+                "none"
+            };
+            tbl.row(vec![
+                r.method.clone(),
+                kind.into(),
+                format!("{:.2}", r.accuracy),
+                format!("{:.2}", r.rel_bops),
+                format!("{:.1}", r.avg_bits),
+            ]);
+        }
+        self.finish("table2", tbl);
+        Ok(rows)
+    }
+
+    // ----------------------------------------------------------- table 3
+    /// BERT/SQuAD analog: GETA vs prune-then-PTQ at 10/30/50/70% sparsity.
+    pub fn table3(&mut self) -> Result<Vec<RunResult>> {
+        let mut rows = Vec::new();
+        let mut tbl = Table::new(
+            "Table 3 — bert_mini / synth-span-QA",
+            &["method", "sparsity", "EM %", "F1 %", "rel BOPs %"],
+        );
+        for &sp in &[0.1, 0.3, 0.5, 0.7] {
+            let mut exp = self.exp("bert_mini");
+            // tighter data budget: the paper's SQuAD models are far from
+            // overparameterized on their task; mirror that regime
+            exp.n_train = 512;
+            exp.qasso.target_group_sparsity = sp;
+            let t = self.trainer(exp)?;
+            // sequential baseline: HESSO-prune then 8-bit PTQ
+            let space = graph::search_space_for(&t.engine.manifest.config)?;
+            let params = t.engine.init_params(t.exp.seed);
+            let mut seq = baselines::PruneThenPtq::new(
+                t.exp.qasso.clone(),
+                space.groups,
+                t.engine.site_specs(),
+                baselines::base_opt(&t.exp),
+                &params,
+                8.0,
+                "HESSO+8b-PTQ",
+            );
+            let r1 = t.run(&mut seq)?;
+            let mut geta = self.geta(&t)?;
+            let r2 = t.run(&mut geta)?;
+            for r in [r1, r2] {
+                tbl.row(vec![
+                    r.method.clone(),
+                    format!("{:.0}%", sp * 100.0),
+                    format!("{:.2}", r.em.unwrap_or(0.0)),
+                    format!("{:.2}", r.f1.unwrap_or(0.0)),
+                    format!("{:.2}", r.rel_bops),
+                ]);
+                rows.push(r);
+            }
+        }
+        self.finish("table3", tbl);
+        Ok(rows)
+    }
+
+    // ----------------------------------------------------------- table 4
+    /// VGG7/CIFAR10 analog, weight+act quant: GETA vs DJPQ-like, BB-like.
+    pub fn table4(&mut self) -> Result<Vec<RunResult>> {
+        let mut exp = self.exp("vgg7_mini");
+        exp.qasso.target_group_sparsity = 0.5;
+        let t = self.trainer(exp)?;
+        let steps = t.exp.total_steps();
+        let mut rows = Vec::new();
+
+        let mut base = baselines::UniformQat::new(32.0, baselines::base_opt(&t.exp), steps);
+        rows.push(t.run(&mut base)?);
+
+        let space = graph::search_space_for(&t.engine.manifest.config)?;
+        let params = t.engine.init_params(t.exp.seed);
+        let mut djpq = baselines::RegularizedJoint::new(
+            0.5, 0.02, 0.02, 4.0, 16.0,
+            baselines::base_opt(&t.exp), steps,
+            space.groups.clone(), &params, false, "DJPQ-like",
+        );
+        rows.push(t.run(&mut djpq)?);
+
+        let mut bb = baselines::RegularizedJoint::new(
+            0.8, 0.03, 0.03, 2.0, 16.0,
+            baselines::base_opt(&t.exp), steps,
+            space.groups, &params, true, "BB-like",
+        );
+        rows.push(t.run(&mut bb)?);
+
+        let mut geta = self.geta(&t)?;
+        rows.push(t.run(&mut geta)?);
+
+        let mut tbl = Table::new(
+            "Table 4 — vgg7_mini / synth-CIFAR (weight+act quant)",
+            &["method", "acc %", "rel BOPs %", "avg bits", "grp sparsity"],
+        );
+        for r in &rows {
+            tbl.row(vec![
+                r.method.clone(),
+                format!("{:.2}", r.accuracy),
+                format!("{:.2}", r.rel_bops),
+                format!("{:.1}", r.avg_bits),
+                format!("{:.2}", r.group_sparsity),
+            ]);
+        }
+        self.finish("table4", tbl);
+        Ok(rows)
+    }
+
+    // ----------------------------------------------------------- table 5
+    /// ResNet50/ImageNet analog: GETA vs OBC-like, Clip-Q-like.
+    pub fn table5(&mut self) -> Result<Vec<RunResult>> {
+        let mut exp = self.exp("resnet_mini_l");
+        exp.n_train = 2048;
+        exp.qasso.target_group_sparsity = 0.4;
+        let t = self.trainer(exp)?;
+        let steps = t.exp.total_steps();
+        let mut rows = Vec::new();
+
+        let mut base = baselines::UniformQat::new(32.0, baselines::base_opt(&t.exp), steps);
+        rows.push(t.run(&mut base)?);
+
+        let mut obc = baselines::PostTrainPruneQuant::new(
+            0.5, 6.0, baselines::base_opt(&t.exp), steps, t.engine.site_specs(), "OBC-like",
+        );
+        rows.push(t.run(&mut obc)?);
+
+        let mut clipq = baselines::ClipQLike::new(0.5, 6.0, baselines::base_opt(&t.exp), steps);
+        rows.push(t.run(&mut clipq)?);
+
+        for &sp in &[0.4, 0.5] {
+            let mut exp = self.exp("resnet_mini_l");
+            exp.n_train = 2048;
+            exp.qasso.target_group_sparsity = sp;
+            let t2 = self.trainer(exp)?;
+            let mut geta = self.geta(&t2)?;
+            let mut r = t2.run(&mut geta)?;
+            r.method = format!("GETA ({:.0}% sparsity)", sp * 100.0);
+            rows.push(r);
+        }
+
+        let mut tbl = Table::new(
+            "Table 5 — resnet_mini_l / synth-ImageNet-100c",
+            &["method", "acc %", "rel BOPs %", "avg bits"],
+        );
+        for r in &rows {
+            tbl.row(vec![
+                r.method.clone(),
+                format!("{:.2}", r.accuracy),
+                format!("{:.2}", r.rel_bops),
+                format!("{:.1}", r.avg_bits),
+            ]);
+        }
+        self.finish("table5", tbl);
+        Ok(rows)
+    }
+
+    // ----------------------------------------------------------- table 6
+    /// Vision transformers: GETA across ViT variants.
+    pub fn table6(&mut self) -> Result<Vec<RunResult>> {
+        let mut rows = Vec::new();
+        let mut tbl = Table::new(
+            "Table 6 — vision transformer variants",
+            &["model", "base acc %", "acc %", "rel BOPs %"],
+        );
+        for model in ["simplevit_mini", "vit_mini", "swin_mini"] {
+            let exp = self.exp(model);
+            let t = self.trainer(exp)?;
+            let steps = t.exp.total_steps();
+            let mut base = baselines::UniformQat::new(32.0, baselines::base_opt(&t.exp), steps);
+            let rb = t.run(&mut base)?;
+            let mut geta = self.geta(&t)?;
+            let rg = t.run(&mut geta)?;
+            tbl.row(vec![
+                model.into(),
+                format!("{:.2}", rb.accuracy),
+                format!("{:.2}", rg.accuracy),
+                format!("{:.2}", rg.rel_bops),
+            ]);
+            rows.push(rb);
+            rows.push(rg);
+        }
+        self.finish("table6", tbl);
+        Ok(rows)
+    }
+
+    // ------------------------------------------------------------- fig 3
+    /// Phi2 common-sense analog: gpt_mini, GETA (avg ~8 bits) vs three
+    /// LLM prune-then-PTQ pipelines, per-family task scores.
+    pub fn fig3(&mut self) -> Result<Vec<RunResult>> {
+        let mut exp = self.exp("gpt_mini");
+        exp.qasso.target_group_sparsity = 0.3;
+        exp.qasso.b_l = 4.0;
+        exp.qasso.b_u = 8.0;
+        let t = self.trainer(exp)?;
+        let steps = t.exp.total_steps();
+        let space = graph::search_space_for(&t.engine.manifest.config)?;
+        let params = t.engine.init_params(t.exp.seed);
+        let mut rows = Vec::new();
+        for style in [LlmPruneStyle::Slice, LlmPruneStyle::Shear, LlmPruneStyle::GradMag] {
+            let mut m = baselines::LlmPruneThenPtq::new(
+                style, 0.3, 8.0,
+                baselines::base_opt(&t.exp), steps,
+                space.groups.clone(), &params, t.engine.site_specs(),
+            );
+            rows.push(t.run(&mut m)?);
+        }
+        let mut geta = self.geta(&t)?;
+        rows.push(t.run(&mut geta)?);
+
+        let nfam = rows[0].per_family.len();
+        let mut headers: Vec<String> = vec!["method".into(), "avg acc %".into()];
+        headers.extend((0..nfam).map(|f| format!("task{f}")));
+        let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut tbl = Table::new("Fig. 3 — gpt_mini / synth common-sense suite", &hrefs);
+        for r in &rows {
+            let avg = r.per_family.iter().sum::<f64>() / r.per_family.len().max(1) as f64;
+            let mut cells = vec![r.method.clone(), format!("{avg:.2}")];
+            cells.extend(r.per_family.iter().map(|a| format!("{a:.1}")));
+            tbl.row(cells);
+        }
+        self.finish("fig3", tbl);
+        Ok(rows)
+    }
+
+    // ------------------------------------------------------------ fig 4a
+    /// Stage ablation: disable each QASSO stage in turn.
+    pub fn fig4a(&mut self) -> Result<Vec<RunResult>> {
+        let masks: Vec<(&str, StageMask)> = vec![
+            ("full", StageMask::default()),
+            ("-warmup", StageMask { warmup: false, ..Default::default() }),
+            ("-projection", StageMask { projection: false, ..Default::default() }),
+            ("-joint", StageMask { joint: false, ..Default::default() }),
+            ("-cooldown", StageMask { cooldown: false, ..Default::default() }),
+        ];
+        let mut rows = Vec::new();
+        let mut tbl = Table::new(
+            "Fig. 4a — QASSO stage ablation",
+            &["variant", "resnet_mini acc %", "gpt_mini acc %"],
+        );
+        for (label, mask) in &masks {
+            let mut accs = Vec::new();
+            for model in ["resnet_mini", "gpt_mini"] {
+                let mut exp = self.exp(model);
+                exp.qasso.target_group_sparsity = 0.35;
+                let t = self.trainer(exp)?;
+                let mut geta = GetaCompressor::new(&t.engine, &t.exp, *mask)?;
+                let mut r = t.run(&mut geta)?;
+                r.method = format!("GETA {label}");
+                accs.push(r.accuracy);
+                rows.push(r);
+            }
+            tbl.row(vec![
+                label.to_string(),
+                format!("{:.2}", accs[0]),
+                format!("{:.2}", accs[1]),
+            ]);
+        }
+        self.finish("fig4a", tbl);
+        Ok(rows)
+    }
+
+    // ------------------------------------------------------------ fig 4b
+    /// Sparsity × bit-range frontier on resnet_mini.
+    pub fn fig4b(&mut self) -> Result<Vec<RunResult>> {
+        let sparsities = [0.3, 0.45, 0.6, 0.75];
+        let ranges = [(2.0, 4.0), (4.0, 6.0), (6.0, 8.0)];
+        let mut rows = Vec::new();
+        let mut tbl = Table::new(
+            "Fig. 4b — sparsity x bit-range frontier (resnet_mini acc %)",
+            &["sparsity", "bits [2,4]", "bits [4,6]", "bits [6,8]"],
+        );
+        for &sp in &sparsities {
+            let mut cells = vec![format!("{sp:.2}")];
+            for &(bl, bu) in &ranges {
+                let mut exp = self.exp("resnet_mini");
+                exp.qasso.target_group_sparsity = sp;
+                exp.qasso.b_l = bl;
+                exp.qasso.b_u = bu;
+                let t = self.trainer(exp)?;
+                let mut geta = self.geta(&t)?;
+                let mut r = t.run(&mut geta)?;
+                r.method = format!("GETA sp={sp} b=[{bl},{bu}]");
+                cells.push(format!("{:.2}", r.accuracy));
+                rows.push(r);
+            }
+            tbl.row(cells);
+        }
+        self.finish("fig4b", tbl);
+        Ok(rows)
+    }
+
+    /// Write accumulated markdown to reports/.
+    pub fn write_markdown(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (id, md) in &self.markdown {
+            std::fs::write(dir.join(format!("{id}.md")), md)?;
+        }
+        Ok(())
+    }
+}

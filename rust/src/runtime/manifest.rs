@@ -1,0 +1,183 @@
+//! AOT manifest loader — the contract between `python/compile/aot.py` and
+//! the Rust runtime/coordinator.
+
+use anyhow::{Context, Result};
+
+use crate::optim::qasso::SiteSpec;
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct BatchSpec {
+    pub x_shape: Vec<usize>,
+    pub x_dtype: String,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: String,
+}
+
+impl BatchSpec {
+    pub fn batch_size(&self) -> usize {
+        *self.x_shape.first().unwrap_or(&1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    /// The model config embedded at lowering time.
+    pub config: Json,
+    pub task: String,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    /// (name, shape) in HLO input order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub qsites: Vec<SiteSpec>,
+    /// Rows of the q input array (max(n_sites, 1)).
+    pub q_rows: usize,
+    pub batch: BatchSpec,
+    pub eval_outputs: Vec<String>,
+    pub param_count: usize,
+}
+
+impl Manifest {
+    pub fn load(art_dir: &std::path::Path, model: &str) -> Result<Manifest> {
+        let path = art_dir.join(format!("{model}.manifest.json"));
+        let j = json::parse_file(&path)?;
+        Self::from_json(&j).with_context(|| format!("manifest {}", path.display()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let params = j
+            .req("params")?
+            .as_arr()
+            .context("params array")?
+            .iter()
+            .map(|p| {
+                Ok((
+                    p.req("name")?.as_str().context("name")?.to_string(),
+                    p.req("shape")?
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let qsites: Vec<SiteSpec> = j
+            .req("qsites")?
+            .as_arr()
+            .context("qsites")?
+            .iter()
+            .map(|s| SiteSpec {
+                name: s.str_or("name", ""),
+                param: s.get("param").and_then(|p| p.as_str()).map(String::from),
+            })
+            .collect();
+        let batch = j.req("batch")?;
+        let bspec = |key: &str| -> Result<(Vec<usize>, String)> {
+            let b = batch.req(key)?;
+            Ok((
+                b.req("shape")?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+                b.str_or("dtype", "f32"),
+            ))
+        };
+        let (x_shape, x_dtype) = bspec("x")?;
+        let (y_shape, y_dtype) = bspec("y")?;
+        let config = j.req("config")?.clone();
+        Ok(Manifest {
+            model: j.str_or("model", ""),
+            task: config.str_or("task", ""),
+            config,
+            train_hlo: j.str_or("train_hlo", ""),
+            eval_hlo: j.str_or("eval_hlo", ""),
+            params,
+            qsites,
+            q_rows: j
+                .req("q_shape")?
+                .as_arr()
+                .and_then(|a| a.first())
+                .and_then(|v| v.as_usize())
+                .unwrap_or(1),
+            batch: BatchSpec {
+                x_shape,
+                x_dtype,
+                y_shape,
+                y_dtype,
+            },
+            eval_outputs: j
+                .req("eval_outputs")?
+                .as_arr()
+                .context("eval_outputs")?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+            param_count: j.usize_or("param_count", 0),
+        })
+    }
+
+    /// All models listed in artifacts/index.json.
+    pub fn list_models(art_dir: &std::path::Path) -> Result<Vec<String>> {
+        let idx = json::parse_file(&art_dir.join("index.json"))?;
+        Ok(idx
+            .req("models")?
+            .as_arr()
+            .context("models")?
+            .iter()
+            .filter_map(|m| m.get("model").and_then(|v| v.as_str()).map(String::from))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("index.json").exists()
+    }
+
+    #[test]
+    fn loads_every_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let models = Manifest::list_models(&art_dir()).unwrap();
+        assert!(models.len() >= 9, "{models:?}");
+        for m in &models {
+            let man = Manifest::load(&art_dir(), m).unwrap();
+            assert_eq!(&man.model, m);
+            assert!(!man.params.is_empty());
+            assert!(man.param_count > 0);
+            assert!(art_dir().join(&man.train_hlo).exists());
+            assert!(art_dir().join(&man.eval_hlo).exists());
+            let total: usize = man.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+            assert_eq!(total, man.param_count, "{m}");
+        }
+    }
+
+    #[test]
+    fn qsites_align_with_rust_graph() {
+        if !have_artifacts() {
+            return;
+        }
+        // site order in the manifest must equal the Rust builders' order
+        for m in Manifest::list_models(&art_dir()).unwrap() {
+            let man = Manifest::load(&art_dir(), &m).unwrap();
+            let sites = crate::graph::builders::quant_sites(&man.config).unwrap();
+            assert_eq!(man.qsites.len(), sites.len(), "{m}");
+            for (a, (bname, _)) in man.qsites.iter().zip(&sites) {
+                assert_eq!(&a.name, bname, "{m}");
+            }
+        }
+    }
+}

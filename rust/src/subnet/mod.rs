@@ -1,0 +1,383 @@
+//! Subnet construction — `geta.construct_subnet()` of the paper's usage
+//! sketch: turn a trained, group-zeroed, quantized model into a compressed
+//! deliverable.
+//!
+//! Produces (1) per-tensor retained-channel maps (the slicing plan), (2)
+//! packed integer weights at the learned bit widths, and (3) the size /
+//! BOPs report. Training-time pruning only *zeroes* groups (forward-
+//! equivalent to slicing — proven by `slicing_equivalence` tests); this
+//! module performs the physical removal.
+
+use std::collections::BTreeMap;
+
+use crate::graph::PruneGroup;
+use crate::metrics::bops::{self, LayerCost};
+use crate::optim::qasso::SiteSpec;
+use crate::quant::{self, QParams};
+use crate::tensor::ParamStore;
+
+/// Per-tensor axis retention after pruning.
+#[derive(Debug, Clone, Default)]
+pub struct KeptMap {
+    /// tensor -> axis -> sorted removed indices
+    pub removed: BTreeMap<String, BTreeMap<usize, Vec<usize>>>,
+}
+
+impl KeptMap {
+    pub fn from_groups(groups: &[PruneGroup], pruned: &[bool]) -> KeptMap {
+        let mut removed: BTreeMap<String, BTreeMap<usize, Vec<usize>>> = BTreeMap::new();
+        for (g, grp) in groups.iter().enumerate() {
+            if !pruned[g] {
+                continue;
+            }
+            for m in &grp.members {
+                let e = removed
+                    .entry(m.tensor.clone())
+                    .or_default()
+                    .entry(m.axis)
+                    .or_default();
+                e.extend(&m.indices);
+            }
+        }
+        for axes in removed.values_mut() {
+            for idx in axes.values_mut() {
+                idx.sort_unstable();
+                idx.dedup();
+            }
+        }
+        KeptMap { removed }
+    }
+
+    /// (input fraction, output fraction) retained for a weight tensor.
+    pub fn frac(&self, tensor: &str, shape: &[usize]) -> (f64, f64) {
+        let out_axis = shape.len() - 1;
+        let in_axis = out_axis.saturating_sub(1);
+        let f = |axis: usize| -> f64 {
+            let total = shape[axis] as f64;
+            let gone = self
+                .removed
+                .get(tensor)
+                .and_then(|m| m.get(&axis))
+                .map(|v| v.len())
+                .unwrap_or(0) as f64;
+            (total - gone) / total
+        };
+        if shape.len() < 2 {
+            return (1.0, f(0));
+        }
+        (f(in_axis), f(out_axis))
+    }
+
+    /// Physically slice a tensor: drop the removed indices on each axis.
+    pub fn slice(&self, t: &crate::tensor::Tensor) -> crate::tensor::Tensor {
+        let Some(axes) = self.removed.get(&t.name) else {
+            return t.clone();
+        };
+        let mut shape = t.shape.clone();
+        let mut data = t.data.clone();
+        // remove axes one at a time, highest axis first (strides stay valid)
+        let mut order: Vec<_> = axes.keys().copied().collect();
+        order.sort_unstable_by(|a, b| b.cmp(a));
+        for axis in order {
+            let rm = &axes[&axis];
+            let keep: Vec<usize> = (0..shape[axis]).filter(|i| !rm.contains(i)).collect();
+            let inner: usize = shape[axis + 1..].iter().product();
+            let outer: usize = shape[..axis].iter().product();
+            let mut out = Vec::with_capacity(outer * keep.len() * inner);
+            for o in 0..outer {
+                for &k in &keep {
+                    let base = o * shape[axis] * inner + k * inner;
+                    out.extend_from_slice(&data[base..base + inner]);
+                }
+            }
+            shape[axis] = keep.len();
+            data = out;
+        }
+        crate::tensor::Tensor::from_vec(&t.name, &shape, data)
+    }
+}
+
+/// One packed, quantized weight tensor.
+#[derive(Debug)]
+pub struct PackedTensor {
+    pub name: String,
+    pub bits: u32,
+    pub numel: usize,
+    /// Signed quantization levels round(sgn·clip/d) (carrier i32; the
+    /// size accounting uses `bits`).
+    pub levels: Vec<i32>,
+    pub q: QParams,
+}
+
+impl PackedTensor {
+    pub fn size_bytes(&self) -> usize {
+        (self.numel * self.bits as usize).div_ceil(8)
+    }
+
+    /// Reconstruct the fake-quantized values (levels * d).
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.levels.iter().map(|&l| l as f32 * self.q.d).collect()
+    }
+}
+
+#[derive(Debug)]
+pub struct CompressedModel {
+    pub kept: KeptMap,
+    pub sliced: ParamStore,
+    pub packed: Vec<PackedTensor>,
+    pub params_before: usize,
+    pub params_after: usize,
+    pub size_fp32_before: usize,
+    pub size_after: usize,
+    pub avg_bits: f32,
+    pub bops: bops::BopsReport,
+}
+
+impl CompressedModel {
+    pub fn param_sparsity(&self) -> f64 {
+        1.0 - self.params_after as f64 / self.params_before.max(1) as f64
+    }
+}
+
+/// Build the compressed deliverable.
+pub fn construct(
+    params: &ParamStore,
+    groups: &[PruneGroup],
+    pruned: &[bool],
+    costs: &[LayerCost],
+    sites: &[SiteSpec],
+    q: &[QParams],
+) -> CompressedModel {
+    let kept = KeptMap::from_groups(groups, pruned);
+    let mut sliced = ParamStore::new();
+    for t in &params.tensors {
+        sliced.push(kept.slice(t));
+    }
+    // pack quantized weight sites from the sliced tensors
+    let mut packed = Vec::new();
+    let mut wbits: BTreeMap<String, f32> = BTreeMap::new();
+    let mut abits: BTreeMap<String, f32> = BTreeMap::new();
+    for (i, s) in sites.iter().enumerate() {
+        let qp = q[i];
+        let b = qp.bit_width().round().max(2.0);
+        match &s.param {
+            Some(pname) => {
+                wbits.insert(pname.clone(), b);
+                if let Some(t) = sliced.get(pname) {
+                    let levels = t
+                        .data
+                        .iter()
+                        .map(|&x| (quant::sign(x) * quant::clip_pow(x, &qp) / qp.d).round() as i32)
+                        .collect();
+                    packed.push(PackedTensor {
+                        name: pname.clone(),
+                        bits: b as u32,
+                        numel: t.numel(),
+                        levels,
+                        q: qp,
+                    });
+                }
+            }
+            None => {
+                abits.insert(s.name.clone(), b);
+            }
+        }
+    }
+    let mut kept_fracs = BTreeMap::new();
+    for t in &params.tensors {
+        kept_fracs.insert(t.name.clone(), kept.frac(&t.name, &t.shape));
+    }
+    let bops_report = bops::bops(costs, &kept_fracs, &wbits, &abits, 1.0);
+    let params_before = params.total_params();
+    let params_after = sliced.total_params();
+    // compressed size: packed sites at learned bits + the rest fp32
+    let packed_names: Vec<&str> = packed.iter().map(|p| p.name.as_str()).collect();
+    let rest_fp32: usize = sliced
+        .tensors
+        .iter()
+        .filter(|t| !packed_names.contains(&t.name.as_str()))
+        .map(|t| t.numel() * 4)
+        .sum();
+    let size_after = rest_fp32 + packed.iter().map(|p| p.size_bytes()).sum::<usize>();
+    let avg_bits = if q.is_empty() {
+        32.0
+    } else {
+        q.iter().map(|s| s.bit_width()).sum::<f32>() / q.len() as f32
+    };
+    CompressedModel {
+        kept,
+        sliced,
+        packed,
+        params_before,
+        params_after,
+        size_fp32_before: params_before * 4,
+        size_after,
+        avg_bits,
+        bops: bops_report,
+    }
+}
+
+// ----------------------------------------------------------------- tests
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Member, Side};
+    use crate::tensor::Tensor;
+
+    /// Plain dense MLP forward (rust-native) used to prove zeroing ≡ slicing.
+    fn mlp_forward(w1: &Tensor, w2: &Tensor, x: &[f32]) -> Vec<f32> {
+        let (din, dh) = (w1.shape[0], w1.shape[1]);
+        let dout = w2.shape[1];
+        let mut h = vec![0.0f32; dh];
+        for j in 0..dh {
+            let mut s = 0.0;
+            for i in 0..din {
+                s += x[i] * w1.data[i * dh + j];
+            }
+            h[j] = s.max(0.0); // relu
+        }
+        let mut y = vec![0.0f32; dout];
+        for j in 0..dout {
+            let mut s = 0.0;
+            for i in 0..dh {
+                s += h[i] * w2.data[i * dout + j];
+            }
+            y[j] = s;
+        }
+        y
+    }
+
+    fn toy_mlp() -> (ParamStore, Vec<PruneGroup>) {
+        let mut rng = crate::util::rng::Rng::new(17);
+        let mut w1 = vec![0.0f32; 4 * 6];
+        let mut w2 = vec![0.0f32; 6 * 3];
+        rng.fill_normal(&mut w1, 1.0);
+        rng.fill_normal(&mut w2, 1.0);
+        let mut params = ParamStore::new();
+        params.push(Tensor::from_vec("fc1.weight", &[4, 6], w1));
+        params.push(Tensor::from_vec("fc2.weight", &[6, 3], w2));
+        // groups: hidden neurons — out col of fc1 + in row of fc2
+        let groups = (0..6)
+            .map(|j| PruneGroup {
+                id: j,
+                label: format!("h{j}"),
+                members: vec![
+                    Member {
+                        tensor: "fc1.weight".into(),
+                        axis: 1,
+                        indices: vec![j],
+                        side: Side::Out,
+                    },
+                    Member {
+                        tensor: "fc2.weight".into(),
+                        axis: 0,
+                        indices: vec![j],
+                        side: Side::In,
+                    },
+                ],
+            })
+            .collect();
+        (params, groups)
+    }
+
+    #[test]
+    fn slicing_equivalence_zeroed_vs_sliced_forward() {
+        let (mut params, groups) = toy_mlp();
+        let pruned = vec![false, true, false, true, true, false];
+        // zero the pruned groups' OUT members (training-time behaviour)
+        let gi = crate::optim::saliency::GroupIndex::build(&groups, &params);
+        for (g, &p) in pruned.iter().enumerate() {
+            if p {
+                gi.zero_group(g, &mut params);
+            }
+        }
+        let x = [0.3f32, -0.7, 1.1, 0.5];
+        let y_zeroed = mlp_forward(
+            params.get("fc1.weight").unwrap(),
+            params.get("fc2.weight").unwrap(),
+            &x,
+        );
+        let kept = KeptMap::from_groups(&groups, &pruned);
+        let w1s = kept.slice(params.get("fc1.weight").unwrap());
+        let w2s = kept.slice(params.get("fc2.weight").unwrap());
+        assert_eq!(w1s.shape, vec![4, 3]);
+        assert_eq!(w2s.shape, vec![3, 3]);
+        let y_sliced = mlp_forward(&w1s, &w2s, &x);
+        for (a, b) in y_zeroed.iter().zip(&y_sliced) {
+            assert!((a - b).abs() < 1e-5, "{y_zeroed:?} vs {y_sliced:?}");
+        }
+    }
+
+    #[test]
+    fn kept_fractions() {
+        let (_, groups) = toy_mlp();
+        let pruned = vec![false, true, false, true, true, false];
+        let kept = KeptMap::from_groups(&groups, &pruned);
+        let (fin, fout) = kept.frac("fc1.weight", &[4, 6]);
+        assert_eq!((fin, fout), (1.0, 0.5));
+        let (fin, fout) = kept.frac("fc2.weight", &[6, 3]);
+        assert_eq!((fin, fout), (0.5, 1.0));
+    }
+
+    #[test]
+    fn construct_reports_compression() {
+        let (mut params, groups) = toy_mlp();
+        let pruned = vec![false, true, false, true, true, false];
+        let gi = crate::optim::saliency::GroupIndex::build(&groups, &params);
+        for (g, &p) in pruned.iter().enumerate() {
+            if p {
+                gi.zero_group(g, &mut params);
+            }
+        }
+        let costs = vec![
+            LayerCost {
+                param: "fc1.weight".into(),
+                macs: 24.0,
+                cin: 4,
+                cout: 6,
+                act_in_site: None,
+            },
+            LayerCost {
+                param: "fc2.weight".into(),
+                macs: 18.0,
+                cin: 6,
+                cout: 3,
+                act_in_site: None,
+            },
+        ];
+        let sites = vec![
+            SiteSpec {
+                name: "fc1.weight".into(),
+                param: Some("fc1.weight".into()),
+            },
+            SiteSpec {
+                name: "fc2.weight".into(),
+                param: Some("fc2.weight".into()),
+            },
+        ];
+        let q = vec![QParams::init(1.0, 8.0), QParams::init(1.0, 8.0)];
+        let cm = construct(&params, &groups, &pruned, &costs, &sites, &q);
+        assert_eq!(cm.params_before, 42);
+        assert_eq!(cm.params_after, 4 * 3 + 3 * 3);
+        assert!(cm.param_sparsity() > 0.4);
+        // 50% pruned + 8/32 bits => rel bops = 0.5 * 0.25 = 12.5%
+        assert!((cm.bops.rel_percent() - 12.5).abs() < 1e-6);
+        assert!(cm.size_after < cm.size_fp32_before / 4);
+        assert_eq!(cm.packed.len(), 2);
+        // packed levels fit in the bit budget
+        for p in &cm.packed {
+            let cap = 1i64 << (p.bits - 1);
+            assert!(p.levels.iter().all(|&l| (l as i64).abs() <= cap));
+        }
+    }
+
+    #[test]
+    fn slice_noop_without_pruning() {
+        let (params, groups) = toy_mlp();
+        let kept = KeptMap::from_groups(&groups, &[false; 6]);
+        let t = params.get("fc1.weight").unwrap();
+        let s = kept.slice(t);
+        assert_eq!(s.shape, t.shape);
+        assert_eq!(s.data, t.data);
+    }
+}

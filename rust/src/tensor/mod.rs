@@ -1,0 +1,181 @@
+//! Dense f32 tensors and the named parameter store.
+//!
+//! All QASSO state (weights, momenta, quantized copies) lives here as flat
+//! f32 buffers with shapes; the numeric helpers (norms, dot, cosine, axpy)
+//! are the Layer-3 hot-path primitives profiled in EXPERIMENTS.md §Perf.
+
+pub mod ops;
+
+pub use ops::*;
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(name: &str, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(name: &str, shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "{name}: shape/data mismatch");
+        Tensor {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Number of "output structures" along the prunable axis.
+    /// conv HWIO: axis 3 (cout); linear [din, dout]: axis 1; 1-D: axis 0.
+    pub fn out_dim(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    /// Stride between consecutive elements of the same output index.
+    /// With the prunable axis last (HWIO cout / linear dout), elements of
+    /// output j are data[j], data[j + D], data[j + 2D]... where D = out_dim.
+    pub fn out_stride(&self) -> usize {
+        self.out_dim()
+    }
+
+    /// Iterate (and mutate) the slice of weights feeding output index `j`.
+    pub fn for_output_mut(&mut self, j: usize, mut f: impl FnMut(&mut f32)) {
+        let d = self.out_dim();
+        let mut i = j;
+        while i < self.data.len() {
+            f(&mut self.data[i]);
+            i += d;
+        }
+    }
+
+    pub fn for_output(&self, j: usize, mut f: impl FnMut(f32)) {
+        let d = self.out_dim();
+        let mut i = j;
+        while i < self.data.len() {
+            f(self.data[i]);
+            i += d;
+        }
+    }
+}
+
+/// Ordered, name-indexed collection of tensors. Order matches the AOT
+/// manifest so packing into PJRT literals is a zip.
+#[derive(Debug, Clone, Default)]
+pub struct ParamStore {
+    pub tensors: Vec<Tensor>,
+    index: std::collections::BTreeMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    pub fn push(&mut self, t: Tensor) {
+        assert!(
+            !self.index.contains_key(&t.name),
+            "duplicate tensor {}",
+            t.name
+        );
+        self.index.insert(t.name.clone(), self.tensors.len());
+        self.tensors.push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        let i = *self.index.get(name)?;
+        Some(&mut self.tensors[i])
+    }
+
+    pub fn idx(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Zero-initialized clone with the same names/shapes (momentum buffers).
+    pub fn zeros_like(&self) -> ParamStore {
+        let mut s = ParamStore::new();
+        for t in &self.tensors {
+            s.push(Tensor::zeros(&t.name, &t.shape));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_slice_iteration_linear() {
+        // linear [din=3, dout=2]: data row-major [d0o0 d0o1 d1o0 d1o1 d2o0 d2o1]
+        let t = Tensor::from_vec("w", &[3, 2], vec![1., 10., 2., 20., 3., 30.]);
+        let mut got = vec![];
+        t.for_output(1, |v| got.push(v));
+        assert_eq!(got, vec![10., 20., 30.]);
+    }
+
+    #[test]
+    fn out_slice_iteration_conv() {
+        // conv HWIO [1,1,2,3]: cout=3
+        let t = Tensor::from_vec("w", &[1, 1, 2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut got = vec![];
+        t.for_output(2, |v| got.push(v));
+        assert_eq!(got, vec![3., 6.]);
+    }
+
+    #[test]
+    fn for_output_mut_zeroes_structure() {
+        let mut t = Tensor::from_vec("w", &[2, 2], vec![1., 2., 3., 4.]);
+        t.for_output_mut(0, |v| *v = 0.0);
+        assert_eq!(t.data, vec![0., 2., 0., 4.]);
+    }
+
+    #[test]
+    fn store_roundtrip() {
+        let mut s = ParamStore::new();
+        s.push(Tensor::zeros("a", &[2, 3]));
+        s.push(Tensor::zeros("b", &[4]));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get("b").unwrap().numel(), 4);
+        assert_eq!(s.idx("a"), Some(0));
+        assert_eq!(s.total_params(), 10);
+        let z = s.zeros_like();
+        assert_eq!(z.tensors[1].name, "b");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_names_rejected() {
+        let mut s = ParamStore::new();
+        s.push(Tensor::zeros("a", &[1]));
+        s.push(Tensor::zeros("a", &[1]));
+    }
+}

@@ -1,0 +1,166 @@
+//! Flat-buffer numeric kernels for the QASSO hot path.
+//!
+//! These run once per optimizer step over every parameter, so they are
+//! written as straight loops over slices (auto-vectorizable; no bounds
+//! checks in the hot loops after the explicit `assert_eq!` length pins).
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// y = alpha * y + beta * x   (in-place scaled blend)
+pub fn scale_add(alpha: f32, y: &mut [f32], beta: f32, x: &[f32]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..y.len() {
+        y[i] = alpha * y[i] + beta * x[i];
+    }
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut s = 0.0f64;
+    for i in 0..x.len() {
+        s += x[i] as f64 * y[i] as f64;
+    }
+    s
+}
+
+pub fn norm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+pub fn mean_abs(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|v| v.abs() as f64).sum::<f64>() / x.len() as f64
+}
+
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// cos of the angle between -a and -b (== angle between a and b).
+/// Returns 0 when either vector is ~zero (the paper's rules then take the
+/// "any positive value" branch, which is what 0 selects).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = norm2(a);
+    let nb = norm2(b);
+    if na < 1e-12 || nb < 1e-12 {
+        return 0.0;
+    }
+    (dot(a, b) / (na * nb)).clamp(-1.0, 1.0)
+}
+
+pub fn zero(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = 0.0;
+    }
+}
+
+/// Strided view helpers for "structure" slices (one output channel of a
+/// tensor whose prunable axis is last). Gathers into `out` (reused buffer).
+pub fn gather_strided(data: &[f32], start: usize, stride: usize, out: &mut Vec<f32>) {
+    out.clear();
+    let mut i = start;
+    while i < data.len() {
+        out.push(data[i]);
+        i += stride;
+    }
+}
+
+pub fn scatter_strided(data: &mut [f32], start: usize, stride: usize, vals: &[f32]) {
+    let mut i = start;
+    let mut k = 0;
+    while i < data.len() {
+        data[i] = vals[k];
+        i += stride;
+        k += 1;
+    }
+    assert_eq!(k, vals.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 10.0]);
+    }
+
+    #[test]
+    fn cosine_signs() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-9);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-9);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-9);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert!((mean_abs(&[-1.0, 3.0]) - 2.0).abs() < 1e-9);
+        assert_eq!(max_abs(&[-5.0, 2.0]), 5.0);
+        assert_eq!(mean_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn strided_roundtrip() {
+        let data = vec![0., 1., 2., 3., 4., 5.];
+        let mut buf = Vec::new();
+        gather_strided(&data, 1, 2, &mut buf);
+        assert_eq!(buf, vec![1., 3., 5.]);
+        let mut d2 = data.clone();
+        scatter_strided(&mut d2, 1, 2, &[10., 30., 50.]);
+        assert_eq!(d2, vec![0., 10., 2., 30., 4., 50.]);
+    }
+
+    #[test]
+    fn prop_cauchy_schwarz() {
+        prop::check(
+            50,
+            |g| {
+                let n = g.size(64);
+                (g.vec_normal(n, 2.0), g.vec_normal(n, 2.0))
+            },
+            |(a, b)| {
+                let c = cosine(a, b);
+                if (-1.0..=1.0).contains(&c) {
+                    Ok(())
+                } else {
+                    Err(format!("cosine out of range: {c}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_axpy_linear() {
+        prop::check(
+            30,
+            |g| {
+                let n = g.size(32);
+                (g.vec_normal(n, 1.0), g.vec_normal(n, 1.0), g.f32_in(-2.0, 2.0))
+            },
+            |(x, y, a)| {
+                let mut y1 = y.clone();
+                axpy(*a, x, &mut y1);
+                for i in 0..x.len() {
+                    let want = y[i] + a * x[i];
+                    if (y1[i] - want).abs() > 1e-5 {
+                        return Err(format!("i={i}: {} vs {want}", y1[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

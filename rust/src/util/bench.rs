@@ -1,0 +1,128 @@
+//! Micro-benchmark harness (criterion replacement).
+//!
+//! Warmup + timed iterations with mean / p50 / p95 / throughput reporting.
+//! Used both by `cargo bench` targets (with `harness = false`) and by the
+//! `geta bench` CLI subcommand. Results can be appended to a JSON log so
+//! the perf pass (EXPERIMENTS.md §Perf) has a machine-readable trail.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_us", Json::Num(self.mean.as_secs_f64() * 1e6)),
+            ("p50_us", Json::Num(self.p50.as_secs_f64() * 1e6)),
+            ("p95_us", Json::Num(self.p95.as_secs_f64() * 1e6)),
+            ("min_us", Json::Num(self.min.as_secs_f64() * 1e6)),
+        ])
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 3,
+            iters: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher {
+            warmup,
+            iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` and report. The closure's return value is black-boxed to
+    /// keep the optimizer from deleting the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean,
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+            min: samples[0],
+        };
+        println!(
+            "{:<44} mean {:>10.1?}  p50 {:>10.1?}  p95 {:>10.1?}  min {:>10.1?}",
+            res.name, res.mean, res.p50, res.p95, res.min
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    pub fn write_log(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        std::fs::write(path, arr.to_string())?;
+        Ok(())
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(1, 5);
+        let r = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn json_log_shape() {
+        let mut b = Bencher::new(0, 2);
+        b.bench("x", || 1 + 1);
+        let j = b.results[0].to_json();
+        assert!(j.get("mean_us").unwrap().as_f64().unwrap() >= 0.0);
+    }
+}

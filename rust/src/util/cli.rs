@@ -1,0 +1,99 @@
+//! Tiny CLI argument parser (clap replacement).
+//!
+//! Grammar: `geta <subcommand> [positional...] [--flag] [--key value]`.
+//! Flags may also be written `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.options.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else if a.subcommand.is_none() {
+                a.subcommand = Some(tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(&sv(&["train", "cfgA", "--steps", "100", "--fast", "--lr=0.1"]));
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["cfgA"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.f64_or("lr", 0.0), 0.1);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&sv(&["bench", "--verbose"]));
+        assert!(a.flag("verbose"));
+        assert!(a.opt("verbose").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]));
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.opt_or("x", "d"), "d");
+    }
+}

@@ -1,0 +1,14 @@
+//! In-repo infrastructure substrates.
+//!
+//! The build environment is fully offline: only the `xla` crate's
+//! dependency closure exists in the cargo cache, so the usual ecosystem
+//! crates (serde/serde_json, clap, rand, criterion, proptest, tokio) are
+//! unavailable. Each submodule here is a small, well-tested replacement
+//! for the slice of functionality this project needs.
+
+pub mod json;
+pub mod rng;
+pub mod cli;
+pub mod bench;
+pub mod prop;
+pub mod table;

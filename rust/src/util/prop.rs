@@ -1,0 +1,105 @@
+//! Property-testing helper (proptest replacement).
+//!
+//! `check(cases, gen, prop)` runs `prop` against `cases` generated inputs
+//! and, on failure, retries with progressively "smaller" regenerated
+//! inputs (shrink-by-regeneration: the generator receives a shrink factor
+//! in (0, 1] it can use to scale sizes/magnitudes). Failures report the
+//! seed so the exact case replays.
+
+use crate::util::rng::Rng;
+
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// 1.0 for the initial attempt; reduced toward 0 while shrinking.
+    pub scale: f64,
+}
+
+impl<'a> Gen<'a> {
+    pub fn size(&mut self, max: usize) -> usize {
+        let m = ((max as f64 * self.scale).ceil() as usize).max(1);
+        1 + self.rng.below(m)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo as f64, hi as f64) as f32
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v, scale * self.scale as f32);
+        v
+    }
+}
+
+/// Run a property with shrinking. Panics with the failing seed on failure.
+pub fn check<I: std::fmt::Debug>(
+    cases: usize,
+    mut generate: impl FnMut(&mut Gen) -> I,
+    mut prop: impl FnMut(&I) -> Result<(), String>,
+) {
+    let base_seed = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64 * 0x9E37);
+        let mut rng = Rng::new(seed);
+        let input = generate(&mut Gen {
+            rng: &mut rng,
+            scale: 1.0,
+        });
+        if let Err(msg) = prop(&input) {
+            // shrink: regenerate same-seed inputs at smaller scales and
+            // report the smallest still-failing one.
+            let mut best: (f64, String, String) = (1.0, msg, format!("{input:?}"));
+            for k in 1..=6 {
+                let scale = 1.0 / (1 << k) as f64;
+                let mut rng = Rng::new(seed);
+                let small = generate(&mut Gen {
+                    rng: &mut rng,
+                    scale,
+                });
+                if let Err(m) = prop(&small) {
+                    best = (scale, m, format!("{small:?}"));
+                }
+            }
+            panic!(
+                "property failed (seed={seed:#x}, case {case}, shrink scale {}):\n  {}\n  input: {}",
+                best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            25,
+            |g| {
+                let n = g.size(16);
+                g.vec_normal(n, 1.0)
+            },
+            |v: &Vec<f32>| {
+                count += 1;
+                if v.iter().all(|x| x.is_finite()) {
+                    Ok(())
+                } else {
+                    Err("non-finite".into())
+                }
+            },
+        );
+        assert!(count >= 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            10,
+            |g| g.size(100),
+            |n: &usize| if *n < 1 { Ok(()) } else { Err(format!("n={n}")) },
+        );
+    }
+}

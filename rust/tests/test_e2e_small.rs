@@ -1,0 +1,126 @@
+//! End-to-end integration: full GETA runs (heavily step-scaled) plus the
+//! sequential baseline, over the real artifacts. These are the contract
+//! tests for "all layers compose".
+
+use geta::baselines;
+use geta::config::ExperimentConfig;
+use geta::coordinator::{GetaCompressor, Trainer};
+use geta::graph;
+use geta::optim::qasso::StageMask;
+
+fn art() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("index.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts`");
+        None
+    }
+}
+
+fn small_exp(model: &str, sparsity: f64) -> ExperimentConfig {
+    let mut e = ExperimentConfig::defaults_for(model);
+    e.scale_steps(0.12);
+    e.n_train = 256;
+    e.n_eval = 128;
+    e.qasso.target_group_sparsity = sparsity;
+    e
+}
+
+#[test]
+fn geta_mlp_learns_and_compresses() {
+    let Some(dir) = art() else { return };
+    let t = Trainer::new(&dir, small_exp("mlp_tiny", 0.4)).unwrap();
+    let mut g = GetaCompressor::new(&t.engine, &t.exp, StageMask::default()).unwrap();
+    let r = t.run(&mut g).unwrap();
+    assert!(r.accuracy > 60.0, "acc {}", r.accuracy);
+    assert!((r.group_sparsity - 0.4).abs() < 0.02, "sparsity {}", r.group_sparsity);
+    assert!(r.rel_bops < 60.0, "rel bops {}", r.rel_bops);
+    assert!(
+        r.avg_bits >= t.exp.qasso.b_l as f64 - 0.1 && r.avg_bits <= t.exp.qasso.b_u as f64 + 0.1,
+        "bits {}",
+        r.avg_bits
+    );
+    // loss decreased over training
+    assert!(r.final_loss < r.trace.losses[0] as f64, "no learning");
+}
+
+#[test]
+fn geta_bert_span_task() {
+    let Some(dir) = art() else { return };
+    let t = Trainer::new(&dir, small_exp("bert_mini", 0.3)).unwrap();
+    let mut g = GetaCompressor::new(&t.engine, &t.exp, StageMask::default()).unwrap();
+    let r = t.run(&mut g).unwrap();
+    assert!(r.em.is_some() && r.f1.is_some());
+    assert!(r.f1.unwrap() >= r.em.unwrap() - 1e-9); // F1 dominates EM
+    assert!((r.group_sparsity - 0.3).abs() < 0.05);
+}
+
+#[test]
+fn prune_then_ptq_baseline_runs() {
+    let Some(dir) = art() else { return };
+    let t = Trainer::new(&dir, small_exp("mlp_tiny", 0.4)).unwrap();
+    let space = graph::search_space_for(&t.engine.manifest.config).unwrap();
+    let params = t.engine.init_params(0);
+    let mut m = baselines::PruneThenPtq::new(
+        t.exp.qasso.clone(),
+        space.groups,
+        t.engine.site_specs(),
+        baselines::base_opt(&t.exp),
+        &params,
+        8.0,
+        "HESSO+PTQ",
+    );
+    let r = t.run(&mut m).unwrap();
+    // PTQ pins every site to 8 bits
+    assert!((r.avg_bits - 8.0).abs() < 0.2, "bits {}", r.avg_bits);
+    assert!(r.group_sparsity > 0.3);
+}
+
+#[test]
+fn unstructured_baseline_density_accounting() {
+    let Some(dir) = art() else { return };
+    let t = Trainer::new(&dir, small_exp("mlp_tiny", 0.0)).unwrap();
+    let steps = t.exp.total_steps();
+    let mut m = baselines::UnstructuredJoint::new(
+        0.5, 4.0, 16.0, baselines::base_opt(&t.exp), steps, "unstructured",
+    );
+    let r = t.run(&mut m).unwrap();
+    // BOPs must reflect the 0.5 density even though no groups are pruned
+    assert_eq!(r.group_sparsity, 0.0);
+    assert!(r.rel_bops < 60.0, "rel bops {}", r.rel_bops);
+}
+
+#[test]
+fn stage_ablation_variants_run() {
+    let Some(dir) = art() else { return };
+    let t = Trainer::new(&dir, small_exp("mlp_tiny", 0.4)).unwrap();
+    for mask in [
+        StageMask { warmup: false, ..Default::default() },
+        StageMask { projection: false, ..Default::default() },
+        StageMask { joint: false, ..Default::default() },
+        StageMask { cooldown: false, ..Default::default() },
+    ] {
+        let mut g = GetaCompressor::new(&t.engine, &t.exp, mask).unwrap();
+        let r = t.run(&mut g).unwrap();
+        // sparsity target must hold even without the joint stage (one-shot
+        // fallback) — the whole point of white-box control
+        assert!(
+            (r.group_sparsity - 0.4).abs() < 0.05,
+            "mask {mask:?}: sparsity {}",
+            r.group_sparsity
+        );
+    }
+}
+
+#[test]
+fn seeds_change_data_but_not_contract() {
+    let Some(dir) = art() else { return };
+    let mut e1 = small_exp("mlp_tiny", 0.4);
+    e1.seed = 11;
+    let t = Trainer::new(&dir, e1).unwrap();
+    let mut g = GetaCompressor::new(&t.engine, &t.exp, StageMask::default()).unwrap();
+    let r = t.run(&mut g).unwrap();
+    assert!((r.group_sparsity - 0.4).abs() < 0.02);
+    assert!(r.accuracy > 50.0);
+}

@@ -1,0 +1,132 @@
+//! Cross-layer contract tests: the AOT manifests (Layer 2's exported
+//! interface) vs the Rust trace graphs / search spaces (Layer 3's view of
+//! the same models). A drift between python/compile/models and
+//! rust/src/graph/builders fails here.
+
+use geta::graph;
+use geta::runtime::Manifest;
+
+fn art() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("index.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn every_group_member_tensor_exists_in_manifest() {
+    let Some(dir) = art() else { return };
+    for model in Manifest::list_models(&dir).unwrap() {
+        let man = Manifest::load(&dir, &model).unwrap();
+        let names: std::collections::BTreeSet<&str> =
+            man.params.iter().map(|(n, _)| n.as_str()).collect();
+        let shapes: std::collections::BTreeMap<&str, &Vec<usize>> =
+            man.params.iter().map(|(n, s)| (n.as_str(), s)).collect();
+        let space = graph::search_space_for(&man.config).unwrap();
+        assert!(!space.groups.is_empty(), "{model}: empty search space");
+        for g in &space.groups {
+            for m in &g.members {
+                assert!(
+                    names.contains(m.tensor.as_str()),
+                    "{model}: group {} references unknown tensor {}",
+                    g.label,
+                    m.tensor
+                );
+                let shape = shapes[m.tensor.as_str()];
+                assert!(m.axis < shape.len(), "{model}: {} axis {}", m.tensor, m.axis);
+                for &i in &m.indices {
+                    assert!(
+                        i < shape[m.axis],
+                        "{model}: {} idx {i} >= {}",
+                        m.tensor,
+                        shape[m.axis]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn groups_partition_without_out_overlap() {
+    // No element may belong to two groups' OUT members — groups are
+    // minimally removable structures, removal must be independent.
+    let Some(dir) = art() else { return };
+    for model in Manifest::list_models(&dir).unwrap() {
+        let man = Manifest::load(&dir, &model).unwrap();
+        let space = graph::search_space_for(&man.config).unwrap();
+        let mut seen: std::collections::BTreeSet<(String, usize, usize)> =
+            std::collections::BTreeSet::new();
+        for g in &space.groups {
+            for m in g.out_members() {
+                for &i in &m.indices {
+                    let key = (m.tensor.clone(), m.axis, i);
+                    assert!(
+                        seen.insert(key),
+                        "{model}: duplicate out member {}:{}:{} (group {})",
+                        m.tensor,
+                        m.axis,
+                        i,
+                        g.label
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn weight_sites_map_to_real_params() {
+    let Some(dir) = art() else { return };
+    for model in Manifest::list_models(&dir).unwrap() {
+        let man = Manifest::load(&dir, &model).unwrap();
+        let names: std::collections::BTreeSet<&str> =
+            man.params.iter().map(|(n, _)| n.as_str()).collect();
+        for s in &man.qsites {
+            if let Some(p) = &s.param {
+                assert!(names.contains(p.as_str()), "{model}: site {} -> missing {p}", s.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn layer_costs_cover_params_proportionally() {
+    // every weight-carrying 2D/4D tensor should appear in the BOPs model
+    let Some(dir) = art() else { return };
+    for model in Manifest::list_models(&dir).unwrap() {
+        let man = Manifest::load(&dir, &model).unwrap();
+        let costs = geta::metrics::layer_costs(&man.config).unwrap();
+        let cost_names: std::collections::BTreeSet<&str> =
+            costs.iter().map(|c| c.param.as_str()).collect();
+        for (name, shape) in &man.params {
+            let is_weight = name.ends_with(".weight") && shape.len() >= 2;
+            if is_weight {
+                assert!(
+                    cost_names.contains(name.as_str()),
+                    "{model}: no MAC cost for {name}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn attention_models_have_head_groups() {
+    let Some(dir) = art() else { return };
+    for model in ["bert_mini", "gpt_mini", "vit_mini", "swin_mini"] {
+        let man = Manifest::load(&dir, model).unwrap();
+        let space = graph::search_space_for(&man.config).unwrap();
+        let heads = space
+            .groups
+            .iter()
+            .filter(|g| g.label.contains(":head"))
+            .count();
+        assert!(heads > 0, "{model}: no head-granular groups");
+        let heads_cfg = man.config.usize_or("heads", 0);
+        assert_eq!(heads % heads_cfg, 0, "{model}");
+    }
+}

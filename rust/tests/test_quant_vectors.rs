@@ -1,0 +1,81 @@
+//! Golden-vector validation: the Rust quantizer (rust/src/quant) against
+//! the Layer-1 jnp oracle's exported vectors (artifacts/quant_vectors.json,
+//! written by `python -m compile.vectors` during `make artifacts`).
+
+use geta::quant::{self, QParams};
+use geta::util::json;
+
+fn vectors() -> Option<json::Json> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/quant_vectors.json");
+    if !p.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(json::parse_file(&p).unwrap())
+}
+
+fn check_case(case: &json::Json) {
+    let d = case.f64_or("d", 0.0) as f32;
+    let t = case.f64_or("t", 0.0) as f32;
+    let qm = case.f64_or("qm", 0.0) as f32;
+    let q = QParams { d, t, qm };
+    let x = case.get("x").unwrap().f32_arr();
+    let want_xq = case.get("xq").unwrap().f32_arr();
+    let want_clip = case.get("clip").unwrap().f32_arr();
+    let want_res = case.get("residual").unwrap().f32_arr();
+    let want_gd = case.get("grad_d").unwrap().f32_arr();
+    let want_gt = case.get("grad_t").unwrap().f32_arr();
+    let want_gqm = case.get("grad_qm").unwrap().f32_arr();
+    // exp/pow orderings differ between jnp and rust: a 1-ulp c difference
+    // scaled by 1/d can flip a round — accept fp-grade tolerances plus
+    // round-flip (+-1) deltas on residual-derived quantities.
+    let tol = 1e-4 * (1.0 + qm.powf(t) / d * f32::EPSILON * 64.0);
+    for i in 0..x.len() {
+        let xi = x[i];
+        assert!(
+            (quant::fake_quant(xi, &q) - want_xq[i]).abs() <= tol.max(d * 1.0 + 1e-5),
+            "xq[{i}]: {} vs {} (d={d},t={t},qm={qm},x={xi})",
+            quant::fake_quant(xi, &q),
+            want_xq[i]
+        );
+        assert!(
+            (quant::clip_pow(xi, &q) - want_clip[i]).abs() <= 1e-4,
+            "clip[{i}]"
+        );
+        let dres = quant::residual(xi, &q) - want_res[i];
+        assert!(
+            (dres - dres.round()).abs() <= 1e-3,
+            "residual[{i}]: {} vs {}",
+            quant::residual(xi, &q),
+            want_res[i]
+        );
+        let dgd = quant::grad_d(xi, &q) - want_gd[i];
+        assert!((dgd - dgd.round()).abs() <= 1e-3, "grad_d[{i}]");
+        assert!(
+            (quant::grad_t(xi, &q) - want_gt[i]).abs() <= 1e-3 * (1.0 + want_gt[i].abs()),
+            "grad_t[{i}]: {} vs {}",
+            quant::grad_t(xi, &q),
+            want_gt[i]
+        );
+        assert!(
+            (quant::grad_qm(xi, &q) - want_gqm[i]).abs() <= 1e-4,
+            "grad_qm[{i}]"
+        );
+    }
+    let want_b = case.f64_or("bit_width", 0.0) as f32;
+    assert!(
+        (q.bit_width() - want_b).abs() < 1e-3,
+        "bit width {} vs {want_b}",
+        q.bit_width()
+    );
+}
+
+#[test]
+fn rust_quant_matches_jnp_oracle() {
+    let Some(v) = vectors() else { return };
+    let cases = v.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 5);
+    for case in cases {
+        check_case(case);
+    }
+}

@@ -1,0 +1,31 @@
+#!/usr/bin/env python3
+"""Splice the measured tables (reports/*.md) into EXPERIMENTS.md at the
+<!-- MEASURED:id --> markers. Run after `geta repro all`."""
+
+import re
+import sys
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(exp_path).read()
+
+    def repl(m):
+        key = m.group(1)
+        path = os.path.join(ROOT, "reports", f"{key}.md")
+        if not os.path.exists(path):
+            return m.group(0)
+        body = open(path).read().strip()
+        return f"<!-- MEASURED:{key} -->\n\n{body}\n"
+
+    out = re.sub(r"<!-- MEASURED:(\w+) -->\n?", repl, text)
+    open(exp_path, "w").write(out)
+    filled = len(re.findall(r"<!-- MEASURED:\w+ -->\n\n\|", out))
+    print(f"filled {filled} measured sections")
+
+
+if __name__ == "__main__":
+    main()
