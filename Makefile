@@ -1,0 +1,23 @@
+# Build-time artifact generation (optional): lowers the JAX model zoo to
+# HLO text + manifests for the PJRT backend. Needs python3 with jax/numpy.
+# The Rust build and tests do NOT need this — the native reference backend
+# covers the hermetic path (see README.md §Backends).
+
+.PHONY: artifacts vectors test build clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+	cd python && python3 -m compile.vectors --out ../artifacts/quant_vectors.json
+
+# regenerate the checked-in golden vectors (numpy only, no JAX)
+vectors:
+	python3 scripts/gen_quant_vectors.py
+
+clean:
+	rm -rf artifacts reports target

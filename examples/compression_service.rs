@@ -4,8 +4,10 @@
 //!
 //! Layer-3 owns the event loop and process topology: a leader thread
 //! accepts synthetic requests, routes them to workers over an mpsc
-//! channel, each worker owns its own PJRT engine (thread-confined, no
-//! locks on the hot path), and results stream back with latency stats.
+//! channel, each worker owns its own backend (thread-confined, no locks
+//! on the hot path), and results stream back with latency stats. Works
+//! against both backends: PJRT when artifacts exist, NativeEngine
+//! otherwise.
 //!
 //! Run: `cargo run --release --example compression_service`
 
@@ -14,7 +16,7 @@ use std::time::Instant;
 
 use geta::config::ExperimentConfig;
 use geta::data::BatchIter;
-use geta::runtime::Engine;
+use geta::runtime::{load_backend, Backend as _};
 
 const WORKERS: usize = 2;
 const REQUESTS: usize = 24;
@@ -37,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     let exp = ExperimentConfig::defaults_for("mlp_tiny");
     // shared dataset (read-only)
     let (_, eval) = geta::data::SynthData::for_model(
-        &Engine::load(art, "mlp_tiny")?.manifest.config,
+        &load_backend(art, "mlp_tiny")?.manifest().config,
         64,
         512,
         3,
@@ -56,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         let exp = exp.clone();
         handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
             // each worker owns its engine + weights (no shared mutable state)
-            let engine = Engine::load(std::path::Path::new("artifacts"), "mlp_tiny")?;
+            let engine = load_backend(std::path::Path::new("artifacts"), "mlp_tiny")?;
             let params = engine.init_params(exp.seed);
             let q = engine.init_qparams(&params, 8.0);
             loop {

@@ -8,6 +8,7 @@
 //! Run: `cargo run --release --example e2e_bert_squad`
 //! The loss curve lands in reports/e2e_bert_loss.csv (EXPERIMENTS.md §E2E).
 
+use geta::runtime::Backend as _;
 use geta::config::ExperimentConfig;
 use geta::coordinator::{GetaCompressor, Trainer};
 use geta::graph;
@@ -20,11 +21,17 @@ fn main() -> anyhow::Result<()> {
     exp.qasso.target_group_sparsity = 0.5;
     exp.n_train = 2048;
     exp.n_eval = 512;
-    let mut t = Trainer::new(art, exp)?;
+    let mut t = match Trainer::new(art, exp) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bert_mini needs AOT artifacts (run `make artifacts`, build with --features pjrt): {e}");
+            return Ok(());
+        }
+    };
     t.verbose = true;
     println!(
         "e2e: bert_mini ({} params) on {} synthetic QA examples, {} steps, platform {}",
-        t.engine.manifest.param_count,
+        t.engine.manifest().param_count,
         t.train_data.len(),
         t.exp.total_steps(),
         t.engine.platform()
@@ -48,10 +55,10 @@ fn main() -> anyhow::Result<()> {
     println!("loss curve: reports/e2e_bert_loss.csv ({} points)", r.trace.steps.len());
 
     // subnet sanity: attention heads physically removed
-    let space = graph::search_space_for(&t.engine.manifest.config)?;
+    let space = graph::search_space_for(&t.engine.manifest().config)?;
     let params = t.engine.init_params(t.exp.seed);
     let q = t.engine.init_qparams(&params, 8.0);
-    let costs = geta::metrics::layer_costs(&t.engine.manifest.config)?;
+    let costs = geta::metrics::layer_costs(&t.engine.manifest().config)?;
     let pruned: Vec<bool> = (0..space.groups.len()).map(|i| i % 2 == 0).collect();
     let cm = subnet::construct(&params, &space.groups, &pruned, &costs, &t.engine.site_specs(), &q);
     let wq = cm.sliced.get("block0.attn.wq.weight").unwrap();

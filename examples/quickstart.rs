@@ -5,8 +5,10 @@
 //! optimizer.step(); geta.construct_subnet()
 //! ```
 //!
-//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+//! Run: `cargo run --release --example quickstart` — no artifacts needed:
+//! without them the mlp_tiny pipeline runs on the native reference backend.
 
+use geta::runtime::Backend as _;
 use geta::config::ExperimentConfig;
 use geta::coordinator::{GetaCompressor, Trainer};
 use geta::graph;
@@ -16,17 +18,17 @@ use geta::subnet;
 fn main() -> anyhow::Result<()> {
     let art = std::path::Path::new("artifacts");
 
-    // 1. GETA(model): load the AOT-compiled model + build its QADG search space
+    // 1. GETA(model): load the model backend + build its QADG search space
     let mut exp = ExperimentConfig::defaults_for("mlp_tiny");
     exp.scale_steps(0.5);
     exp.qasso.target_group_sparsity = 0.4;
     let t = Trainer::new(art, exp)?;
-    let space = graph::search_space_for(&t.engine.manifest.config)?;
+    let space = graph::search_space_for(&t.engine.manifest().config)?;
     println!(
         "model mlp_tiny: {} params, {} prunable groups, {} quant sites",
-        t.engine.manifest.param_count,
+        t.engine.manifest().param_count,
         space.groups.len(),
-        t.engine.manifest.qsites.len()
+        t.engine.manifest().qsites.len()
     );
 
     // 2. optimizer = geta.qasso(); train as normal
@@ -42,7 +44,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. geta.construct_subnet(): physical slicing + packed quant weights
     let params = t.engine.init_params(t.exp.seed); // illustrative re-init
-    let costs = geta::metrics::layer_costs(&t.engine.manifest.config)?;
+    let costs = geta::metrics::layer_costs(&t.engine.manifest().config)?;
     let q = t.engine.init_qparams(&params, 8.0);
     let ngroups = space.groups.len();
     let pruned = vec![false; ngroups];

@@ -6,6 +6,7 @@
 //!
 //! Run: `cargo run --release --example vgg_joint_quant`
 
+use geta::runtime::Backend as _;
 use geta::baselines;
 use geta::config::ExperimentConfig;
 use geta::coordinator::{GetaCompressor, Trainer};
@@ -17,11 +18,17 @@ fn main() -> anyhow::Result<()> {
     let mut exp = ExperimentConfig::defaults_for("vgg7_mini");
     exp.scale_steps(0.5);
     exp.qasso.target_group_sparsity = 0.5;
-    let t = Trainer::new(art, exp)?;
-    let nsites = t.engine.manifest.qsites.len();
+    let t = match Trainer::new(art, exp) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("vgg7_mini needs AOT artifacts (run `make artifacts`, build with --features pjrt): {e}");
+            return Ok(());
+        }
+    };
+    let nsites = t.engine.manifest().qsites.len();
     let nact = t
         .engine
-        .manifest
+        .manifest()
         .qsites
         .iter()
         .filter(|s| s.param.is_none())
@@ -37,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     println!("\n-- DJPQ-like (black-box: sparsity emerges from lambda) --");
-    let space = graph::search_space_for(&t.engine.manifest.config)?;
+    let space = graph::search_space_for(&t.engine.manifest().config)?;
     let params = t.engine.init_params(t.exp.seed);
     let mut d = baselines::RegularizedJoint::new(
         0.5,

@@ -3,6 +3,7 @@
 //! per table family (table2/3/4/5/6, fig3), reduced to a short measured
 //! window.
 
+use geta::runtime::Backend as _;
 use geta::config::ExperimentConfig;
 use geta::coordinator::{Compressor, GetaCompressor, Trainer};
 use geta::data::BatchIter;
@@ -11,12 +12,9 @@ use geta::util::bench::Bencher;
 
 fn main() {
     let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !art.join("index.json").exists() {
-        eprintln!("run `make artifacts` first");
-        return;
-    }
     let mut b = Bencher::new(2, 10);
     let table_models = [
+        ("e2e", "mlp_tiny"),
         ("table2", "resnet_mini"),
         ("table3", "bert_mini"),
         ("table4", "vgg7_mini"),
@@ -28,7 +26,13 @@ fn main() {
         let mut exp = ExperimentConfig::defaults_for(model);
         exp.n_train = 256;
         exp.n_eval = 64;
-        let t = Trainer::new(&art, exp).unwrap();
+        let t = match Trainer::new(&art, exp) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("skipping {table}/{model}: {e}");
+                continue;
+            }
+        };
         let mut params = t.engine.init_params(0);
         let mut q = t.engine.init_qparams(&params, t.exp.qasso.init_bits);
         let mut geta_c = GetaCompressor::new(&t.engine, &t.exp, StageMask::default()).unwrap();

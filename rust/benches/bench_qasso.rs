@@ -24,13 +24,10 @@ fn store_for(man: &Manifest, rng: &mut Rng) -> ParamStore {
 
 fn main() {
     let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !art.join("index.json").exists() {
-        eprintln!("run `make artifacts` first");
-        return;
-    }
     let mut b = Bencher::new(5, 40);
     for model in ["mlp_tiny", "vgg7_mini", "resnet_mini", "bert_mini"] {
-        let man = Manifest::load(&art, model).unwrap();
+        // artifact manifest when present, natively synthesized otherwise
+        let man = geta::runtime::manifest_for(&art, model).unwrap();
         let space = graph::search_space_for(&man.config).unwrap();
         let mut rng = Rng::new(1);
         let mut params = store_for(&man, &mut rng);

@@ -4,7 +4,6 @@
 use geta::graph;
 use geta::metrics;
 use geta::quant::QParams;
-use geta::runtime::Manifest;
 use geta::subnet;
 use geta::tensor::{ParamStore, Tensor};
 use geta::util::bench::Bencher;
@@ -12,13 +11,10 @@ use geta::util::rng::Rng;
 
 fn main() {
     let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !art.join("index.json").exists() {
-        eprintln!("run `make artifacts` first");
-        return;
-    }
     let mut b = Bencher::new(2, 20);
     for model in ["vgg7_mini", "resnet_mini", "bert_mini", "resnet_mini_l"] {
-        let man = Manifest::load(&art, model).unwrap();
+        // artifact manifest when present, natively synthesized otherwise
+        let man = geta::runtime::manifest_for(&art, model).unwrap();
         let space = graph::search_space_for(&man.config).unwrap();
         let costs = metrics::layer_costs(&man.config).unwrap();
         let mut rng = Rng::new(2);

@@ -1,9 +1,10 @@
 //! Training coordinator: the Layer-3 event loop.
 //!
-//! A `Trainer` owns the PJRT engine, the synthetic dataset and the QASSO
-//! optimizer state and drives the full GETA pipeline:
+//! A `Trainer` owns an execution backend (PJRT or native — see
+//! `runtime::Backend`), the synthetic dataset and the QASSO optimizer
+//! state and drives the full GETA pipeline:
 //!
-//!   batch -> AOT train_step (loss+grads via PJRT) -> QASSO update ->
+//!   batch -> backend train_step (loss+grads) -> QASSO update ->
 //!   stage transitions -> eval sweeps -> subnet construction -> report.
 //!
 //! Baselines (rust/src/baselines/) reuse the same loop through the
@@ -19,7 +20,7 @@ use crate::metrics::{self, bops::LayerCost, EvalAccum, TrainTrace};
 use crate::optim::qasso::{Qasso, StageMask};
 use crate::optim::make_optimizer;
 use crate::quant::QParams;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::subnet;
 use crate::tensor::ParamStore;
 
@@ -63,8 +64,12 @@ pub struct GetaCompressor {
 }
 
 impl GetaCompressor {
-    pub fn new(engine: &Engine, exp: &ExperimentConfig, mask: StageMask) -> Result<GetaCompressor> {
-        let space = graph::search_space_for(&engine.manifest.config)?;
+    pub fn new(
+        engine: &dyn Backend,
+        exp: &ExperimentConfig,
+        mask: StageMask,
+    ) -> Result<GetaCompressor> {
+        let space = graph::search_space_for(&engine.manifest().config)?;
         let params = engine.init_params(exp.seed);
         let base = make_optimizer(&exp.optimizer, exp.weight_decay, exp.momentum);
         let mut qasso = Qasso::new(
@@ -129,7 +134,7 @@ pub struct RunResult {
 }
 
 pub struct Trainer {
-    pub engine: Engine,
+    pub engine: Box<dyn Backend>,
     pub exp: ExperimentConfig,
     pub train_data: SynthData,
     pub eval_data: SynthData,
@@ -139,10 +144,10 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(art_dir: &std::path::Path, exp: ExperimentConfig) -> Result<Trainer> {
-        let engine = Engine::load(art_dir, &exp.model)?;
+        let engine = crate::runtime::load_backend(art_dir, &exp.model)?;
         let (train_data, eval_data) =
-            SynthData::for_model(&engine.manifest.config, exp.n_train, exp.n_eval, exp.seed + 1);
-        let costs = metrics::layer_costs(&engine.manifest.config)?;
+            SynthData::for_model(&engine.manifest().config, exp.n_train, exp.n_eval, exp.seed + 1);
+        let costs = metrics::layer_costs(&engine.manifest().config)?;
         Ok(Trainer {
             engine,
             exp,
@@ -154,7 +159,7 @@ impl Trainer {
     }
 
     pub fn batch_size(&self) -> usize {
-        self.engine.manifest.batch.batch_size()
+        self.engine.manifest().batch.batch_size()
     }
 
     /// Run a compression method end to end and report.
@@ -198,7 +203,7 @@ impl Trainer {
     ) -> Result<RunResult> {
         let eval = self.evaluate(&params, &q)?;
         // compression accounting
-        let space = graph::search_space_for(&self.engine.manifest.config)?;
+        let space = graph::search_space_for(&self.engine.manifest().config)?;
         let ngroups = space.groups.len();
         let default_mask = vec![false; ngroups];
         let pruned = method.pruned_mask().unwrap_or(&default_mask);

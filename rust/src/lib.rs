@@ -17,8 +17,20 @@
 //!   Pallas kernel (interpret=True on CPU), checked against a pure-jnp
 //!   oracle.
 //!
-//! Python never runs on the training path: the Rust binary loads the AOT
-//! artifacts through PJRT (`runtime` module) and owns every update rule.
+//! Python never runs on the training path: the Rust binary owns every
+//! update rule and drives one of two execution backends behind the
+//! `runtime::Backend` trait:
+//!
+//! * **NativeEngine** (always available) — a pure-Rust reference
+//!   forward/backward of the `mlp` family with per-site fake-quantization
+//!   and STE quant-parameter gradients, plus natively synthesized
+//!   manifests for every model config. This is what makes
+//!   `cargo build --release && cargo test -q` hermetic: no Python, JAX or
+//!   XLA anywhere.
+//! * **PJRT engine** (`--features pjrt`) — loads the AOT artifacts
+//!   produced by `make artifacts` and executes the compiled HLO of all
+//!   nine zoo models. The `xla` dependency defaults to a vendored stub;
+//!   point it at real bindings to run artifacts (see README.md).
 
 pub mod util;
 pub mod tensor;

@@ -9,11 +9,11 @@
 
 use anyhow::Result;
 
+use geta::runtime::Backend as _;
 use geta::config::ExperimentConfig;
 use geta::coordinator::{GetaCompressor, Trainer};
 use geta::optim::qasso::StageMask;
 use geta::report::ReportCtx;
-use geta::runtime::Manifest;
 use geta::util::cli::Args;
 
 fn art_dir(a: &Args) -> std::path::PathBuf {
@@ -44,14 +44,16 @@ fn main() -> Result<()> {
 
 fn cmd_models(a: &Args) -> Result<()> {
     let dir = art_dir(a);
-    for m in Manifest::list_models(&dir)? {
-        let man = Manifest::load(&dir, &m)?;
+    for m in geta::runtime::available_models(&dir) {
+        let man = geta::runtime::manifest_for(&dir, &m)?;
+        let aot = geta::runtime::uses_artifact(&dir, &m);
         println!(
-            "{:<16} task={:<10} params={:<8} qsites={}",
+            "{:<16} task={:<10} params={:<8} qsites={:<4} ({})",
             man.model,
             man.task,
             man.param_count,
-            man.qsites.len()
+            man.qsites.len(),
+            if aot { "aot" } else { "native manifest" },
         );
     }
     Ok(())
@@ -60,7 +62,7 @@ fn cmd_models(a: &Args) -> Result<()> {
 fn cmd_graph(a: &Args) -> Result<()> {
     let model = a.opt_or("model", "vgg7_mini");
     let dir = art_dir(a);
-    let man = Manifest::load(&dir, &model)?;
+    let man = geta::runtime::manifest_for(&dir, &model)?;
     let traced = geta::graph::builders::build_trace(&man.config, true)?;
     let res = geta::graph::qadg::qadg_analysis_logged(&traced);
     let space = geta::graph::analyze(&res.graph)?;
@@ -159,23 +161,30 @@ fn cmd_bench(a: &Args) -> Result<()> {
     let mut b = geta::util::bench::Bencher::new(3, iters);
     // graph analysis latency per model
     for model in ["vgg7_mini", "resnet_mini", "bert_mini"] {
-        let man = Manifest::load(&dir, model)?;
+        let man = geta::runtime::manifest_for(&dir, model)?;
         b.bench(&format!("qadg+depgraph/{model}"), || {
             geta::graph::search_space_for(&man.config).unwrap()
         });
     }
-    // PJRT step latency
+    // backend step latency (models without a usable backend are skipped)
     for model in ["mlp_tiny", "resnet_mini", "bert_mini"] {
         let exp = ExperimentConfig::defaults_for(model);
-        let t = Trainer::new(&dir, exp)?;
+        let t = match Trainer::new(&dir, exp) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("skipping {model}: {e}");
+                continue;
+            }
+        };
+        let platform = t.engine.platform();
         let params = t.engine.init_params(0);
         let q = t.engine.init_qparams(&params, 16.0);
         let idxs: Vec<usize> = (0..t.batch_size()).collect();
         let (x, y) = t.train_data.batch(&idxs);
-        b.bench(&format!("pjrt_train_step/{model}"), || {
+        b.bench(&format!("{platform}_train_step/{model}"), || {
             t.engine.train_step(&params, &q, &x, &y).unwrap()
         });
-        b.bench(&format!("pjrt_eval_step/{model}"), || {
+        b.bench(&format!("{platform}_eval_step/{model}"), || {
             t.engine.eval_step(&params, &q, &x, &y).unwrap()
         });
     }

@@ -202,4 +202,66 @@ mod tests {
             assert_eq!(out[i], fake_quant(x, &qp));
         }
     }
+
+    #[test]
+    fn prop_fake_quant_idempotent_at_t1() {
+        // with t = 1 (the Appendix-C init value, held by PTQ and uniform
+        // QAT) the quantizer output is a fixed point: quantizing an
+        // already-quantized value changes nothing. (For t != 1 the
+        // nonlinear power map re-warps the grid, so idempotence is not
+        // expected and not asserted.)
+        crate::util::prop::check(
+            120,
+            |g| {
+                (
+                    g.f32_in(1e-3, 0.5),  // d
+                    g.f32_in(0.1, 3.0),   // qm
+                    g.f32_in(-4.0, 4.0),  // x
+                )
+            },
+            |(d, qm, x)| {
+                let qp = QParams { d: *d, t: 1.0, qm: *qm };
+                let once = fake_quant(*x, &qp);
+                let twice = fake_quant(once, &qp);
+                if twice == once {
+                    Ok(())
+                } else {
+                    Err(format!("fake_quant not idempotent: {once} -> {twice}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_projection_keeps_bits_in_bounds_under_drift() {
+        // simulate the joint stage: random SGD-style drift on (d, t, q_m)
+        // followed by the PPSG projection must keep eq. (3) inside
+        // [b_l, b_u] at every step
+        crate::util::prop::check(
+            60,
+            |g| {
+                (
+                    g.f32_in(0.05, 2.0), // init max|w|
+                    g.f32_in(2.0, 6.0),  // b_l
+                    g.f32_in(1.0, 10.0), // b_u - b_l
+                    g.vec_normal(24, 0.05),
+                )
+            },
+            |(maxw, bl, span, drift)| {
+                let bu = bl + span.max(1.0);
+                let mut qp = QParams::init(*maxw, (bl + bu) * 0.5);
+                for ch in drift.chunks(3) {
+                    qp.d = (qp.d + ch[0] * qp.d).max(1e-8);
+                    qp.t = (qp.t + ch.get(1).copied().unwrap_or(0.0)).clamp(0.5, 2.0);
+                    qp.qm = (qp.qm + ch.get(2).copied().unwrap_or(0.0)).max(1e-3);
+                    ppsg_project(&mut qp, *bl, bu);
+                    let b = qp.bit_width();
+                    if b < bl - 1e-2 || b > bu + 1e-2 {
+                        return Err(format!("b={b} outside [{bl}, {bu}] after drift"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }

@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use crate::baselines::{self, LlmPruneStyle};
 use crate::config::ExperimentConfig;
+use crate::runtime::Backend as _;
 use crate::coordinator::{GetaCompressor, RunResult, Trainer};
 use crate::graph;
 use crate::optim::qasso::StageMask;
@@ -147,7 +148,7 @@ impl ReportCtx {
             exp.qasso.target_group_sparsity = sp;
             let t = self.trainer(exp)?;
             // sequential baseline: HESSO-prune then 8-bit PTQ
-            let space = graph::search_space_for(&t.engine.manifest.config)?;
+            let space = graph::search_space_for(&t.engine.manifest().config)?;
             let params = t.engine.init_params(t.exp.seed);
             let mut seq = baselines::PruneThenPtq::new(
                 t.exp.qasso.clone(),
@@ -188,7 +189,7 @@ impl ReportCtx {
         let mut base = baselines::UniformQat::new(32.0, baselines::base_opt(&t.exp), steps);
         rows.push(t.run(&mut base)?);
 
-        let space = graph::search_space_for(&t.engine.manifest.config)?;
+        let space = graph::search_space_for(&t.engine.manifest().config)?;
         let params = t.engine.init_params(t.exp.seed);
         let mut djpq = baselines::RegularizedJoint::new(
             0.5, 0.02, 0.02, 4.0, 16.0,
@@ -311,7 +312,7 @@ impl ReportCtx {
         exp.qasso.b_u = 8.0;
         let t = self.trainer(exp)?;
         let steps = t.exp.total_steps();
-        let space = graph::search_space_for(&t.engine.manifest.config)?;
+        let space = graph::search_space_for(&t.engine.manifest().config)?;
         let params = t.engine.init_params(t.exp.seed);
         let mut rows = Vec::new();
         for style in [LlmPruneStyle::Slice, LlmPruneStyle::Shear, LlmPruneStyle::GradMag] {

@@ -1,20 +1,33 @@
-//! PJRT runtime: load AOT artifacts, execute train/eval steps.
+//! Execution backends: the contract between the Layer-3 coordinator and
+//! whatever actually runs the model's forward/backward pass.
 //!
-//! Python runs only at build time (`make artifacts`); this module is the
-//! entire runtime bridge. An `Engine` owns one PJRT CPU client plus the
-//! compiled train/eval executables of one model, and the manifest emitted
-//! by `python/compile/aot.py` drives all input packing / output unpacking
-//! — the Rust side has zero hardcoded model knowledge.
+//! Two implementations exist:
 //!
-//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax>=0.5
-//! serialized protos with 64-bit instruction ids; the text parser
-//! reassigns ids — see /opt/xla-example/README.md).
+//! * [`native::NativeEngine`] — a pure-Rust reference backend (currently
+//!   the `mlp` family) that synthesizes its own in-memory [`Manifest`] and
+//!   computes forward/backward with per-site fake-quantization and STE
+//!   gradients for (d, t, q_m). It needs no Python, JAX or XLA, which is
+//!   what makes `cargo test` hermetic on a clean machine.
+//! * `pjrt::Engine` (behind the `pjrt` cargo feature) — loads the AOT
+//!   artifacts produced by `make artifacts` (python/compile/aot.py) and
+//!   executes the compiled HLO through a PJRT CPU client. This covers every
+//!   model family the JAX zoo lowers.
+//!
+//! The coordinator, QASSO, subnet construction and BOPs accounting all run
+//! on the [`Backend`] trait and cannot tell the two apart: the manifest is
+//! the single interface in both directions.
 
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use manifest::{BatchSpec, Manifest};
+pub use native::NativeEngine;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Engine;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::optim::qasso::SiteSpec;
 use crate::quant::QParams;
@@ -39,15 +52,6 @@ impl HostArray {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
-
-    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            HostArray::F32(v) => xla::Literal::vec1(v),
-            HostArray::I32(v) => xla::Literal::vec1(v),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
 }
 
 #[derive(Debug)]
@@ -68,190 +72,186 @@ pub struct EvalOut {
     pub extra: Vec<Vec<f32>>,
 }
 
-pub struct Engine {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    train_exe: xla::PjRtLoadedExecutable,
-    eval_exe: xla::PjRtLoadedExecutable,
-}
+/// One model's execution engine: everything the coordinator needs to run
+/// train/eval steps and to set up parameters and quantizers.
+///
+/// Deliberately NOT `Send`-bounded: real PJRT client handles may be
+/// thread-confined, so worker pools construct their backend inside each
+/// thread instead of moving one across (examples/compression_service).
+pub trait Backend {
+    /// The manifest driving input packing and search-space construction.
+    fn manifest(&self) -> &Manifest;
 
-impl Engine {
-    /// Load and compile the artifacts of `model` from `art_dir`.
-    pub fn load(art_dir: &std::path::Path, model: &str) -> Result<Engine> {
-        let manifest = Manifest::load(art_dir, model)?;
-        let client = xla::PjRtClient::cpu().context("PJRT cpu client")?;
-        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = art_dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path utf-8")?,
-            )
-            .with_context(|| format!("parse {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        let train_exe = compile(&manifest.train_hlo)?;
-        let eval_exe = compile(&manifest.eval_hlo)?;
-        Ok(Engine {
-            manifest,
-            client,
-            train_exe,
-            eval_exe,
-        })
-    }
+    /// Human-readable execution platform (e.g. "cpu" under PJRT, "native").
+    fn platform(&self) -> String;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    /// Execute one training step: loss, per-param grads, per-site quant
+    /// grads, task metric.
+    fn train_step(
+        &self,
+        params: &ParamStore,
+        q: &[QParams],
+        x: &HostArray,
+        y: &HostArray,
+    ) -> Result<TrainOut>;
+
+    /// Execute one evaluation step.
+    fn eval_step(
+        &self,
+        params: &ParamStore,
+        q: &[QParams],
+        x: &HostArray,
+        y: &HostArray,
+    ) -> Result<EvalOut>;
 
     /// Initialize parameters per the layer-name conventions shared with the
     /// JAX zoo (he for conv, glorot for linear, 0.02-normal embeddings,
     /// ones/zeros for norms and biases). Distribution-faithful rather than
     /// bit-identical to the numpy init — all experiments train from this.
-    pub fn init_params(&self, seed: u64) -> ParamStore {
-        let mut rng = Rng::new(seed);
-        let mut store = ParamStore::new();
-        for (name, shape) in &self.manifest.params {
-            let n: usize = shape.iter().product();
-            let mut data = vec![0.0f32; n];
-            if name.ends_with(".bias") || name.ends_with(".beta") || name == "cls_token" {
-                // zeros
-            } else if name.ends_with(".gamma") {
-                data.iter_mut().for_each(|v| *v = 1.0);
-            } else if name.contains("embed.tok") || name.contains("pos_embed") {
-                rng.fill_normal(&mut data, 0.02);
-            } else if shape.len() == 4 {
-                // conv HWIO: He with fan_in = kh*kw*cin
-                let fan_in = (shape[0] * shape[1] * shape[2]) as f32;
-                rng.fill_normal(&mut data, (2.0 / fan_in).sqrt());
-            } else if shape.len() == 2 {
-                let std = (2.0 / (shape[0] + shape[1]) as f32).sqrt();
-                rng.fill_normal(&mut data, std);
-            } else {
-                rng.fill_normal(&mut data, 0.02);
-            }
-            store.push(Tensor::from_vec(name, shape, data));
-        }
-        store
+    fn init_params(&self, seed: u64) -> ParamStore {
+        init_params_for(self.manifest(), seed)
     }
 
     /// Quantizer init (paper Appendix C): weight sites from max|w| at the
     /// configured bit width; activation sites with q_m = 4 (post-ReLU
     /// scale; learned thereafter).
-    pub fn init_qparams(&self, params: &ParamStore, init_bits: f32) -> Vec<QParams> {
-        self.manifest
-            .qsites
-            .iter()
-            .map(|s| match &s.param {
-                Some(p) => {
-                    let w = params
-                        .get(p)
-                        .map(|t| crate::tensor::max_abs(&t.data))
-                        .unwrap_or(1.0);
-                    QParams::init(w, init_bits)
-                }
-                None => QParams::init(4.0, init_bits),
-            })
-            .collect()
+    fn init_qparams(&self, params: &ParamStore, init_bits: f32) -> Vec<QParams> {
+        init_qparams_for(self.manifest(), params, init_bits)
     }
 
-    pub fn site_specs(&self) -> Vec<SiteSpec> {
-        self.manifest.qsites.clone()
+    fn site_specs(&self) -> Vec<SiteSpec> {
+        self.manifest().qsites.clone()
     }
+}
 
-    // ------------------------------------------------------------ stepping
-    fn pack_inputs(
-        &self,
-        params: &ParamStore,
-        q: &[QParams],
-        x: &HostArray,
-        y: &HostArray,
-    ) -> Result<Vec<xla::Literal>> {
-        let m = &self.manifest;
-        anyhow::ensure!(params.len() == m.params.len(), "param count mismatch");
-        let mut lits = Vec::with_capacity(params.len() + 3);
-        for (t, (name, shape)) in params.tensors.iter().zip(&m.params) {
-            debug_assert_eq!(&t.name, name);
-            lits.push(HostArray::F32(t.data.clone()).to_literal(shape)?);
+/// Shared parameter initialization (see [`Backend::init_params`]).
+pub fn init_params_for(manifest: &Manifest, seed: u64) -> ParamStore {
+    let mut rng = Rng::new(seed);
+    let mut store = ParamStore::new();
+    for (name, shape) in &manifest.params {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        if name.ends_with(".bias") || name.ends_with(".beta") || name == "cls_token" {
+            // zeros
+        } else if name.ends_with(".gamma") {
+            data.iter_mut().for_each(|v| *v = 1.0);
+        } else if name.contains("embed.tok") || name.contains("embed.pos") || name.contains("pos_embed") {
+            rng.fill_normal(&mut data, 0.02);
+        } else if shape.len() == 4 {
+            // conv HWIO: He with fan_in = kh*kw*cin
+            let fan_in = (shape[0] * shape[1] * shape[2]) as f32;
+            rng.fill_normal(&mut data, (2.0 / fan_in).sqrt());
+        } else if shape.len() == 2 {
+            let std = (2.0 / (shape[0] + shape[1]) as f32).sqrt();
+            rng.fill_normal(&mut data, std);
+        } else {
+            rng.fill_normal(&mut data, 0.02);
         }
-        // q array [max(nsites,1), 3]
-        let rows = m.q_rows.max(1);
-        let mut qdata = vec![0.0f32; rows * 3];
-        for (i, s) in q.iter().enumerate() {
-            qdata[i * 3] = s.d;
-            qdata[i * 3 + 1] = s.t;
-            qdata[i * 3 + 2] = s.qm;
-        }
-        lits.push(HostArray::F32(qdata).to_literal(&[rows, 3])?);
-        lits.push(x.to_literal(&m.batch.x_shape)?);
-        lits.push(y.to_literal(&m.batch.y_shape)?);
-        Ok(lits)
+        store.push(Tensor::from_vec(name, shape, data));
     }
+    store
+}
 
-    fn scalar(lit: &xla::Literal) -> Result<f32> {
-        Ok(lit.to_vec::<f32>()?.first().copied().unwrap_or(f32::NAN))
-    }
-
-    /// Execute one training step: loss, per-param grads, per-site quant
-    /// grads, task metric.
-    pub fn train_step(
-        &self,
-        params: &ParamStore,
-        q: &[QParams],
-        x: &HostArray,
-        y: &HostArray,
-    ) -> Result<TrainOut> {
-        let inputs = self.pack_inputs(params, q, x, y)?;
-        let result = self.train_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        let m = &self.manifest;
-        anyhow::ensure!(
-            outs.len() == 1 + m.params.len() + 2,
-            "train outputs: got {}, want {}",
-            outs.len(),
-            1 + m.params.len() + 2
-        );
-        let loss = Self::scalar(&outs[0])?;
-        let mut grads = ParamStore::new();
-        for (i, (name, shape)) in m.params.iter().enumerate() {
-            let data = outs[1 + i].to_vec::<f32>()?;
-            grads.push(Tensor::from_vec(name, shape, data));
-        }
-        let qflat = outs[1 + m.params.len()].to_vec::<f32>()?;
-        let qgrads = (0..m.qsites.len())
-            .map(|i| (qflat[i * 3], qflat[i * 3 + 1], qflat[i * 3 + 2]))
-            .collect();
-        let metric = Self::scalar(&outs[1 + m.params.len() + 1])?;
-        Ok(TrainOut {
-            loss,
-            grads,
-            qgrads,
-            metric,
+/// Shared quantizer initialization (see [`Backend::init_qparams`]).
+pub fn init_qparams_for(manifest: &Manifest, params: &ParamStore, init_bits: f32) -> Vec<QParams> {
+    manifest
+        .qsites
+        .iter()
+        .map(|s| match &s.param {
+            Some(p) => {
+                let w = params
+                    .get(p)
+                    .map(|t| crate::tensor::max_abs(&t.data))
+                    .unwrap_or(1.0);
+                QParams::init(w, init_bits)
+            }
+            None => QParams::init(4.0, init_bits),
         })
-    }
+        .collect()
+}
 
-    /// Execute one evaluation step.
-    pub fn eval_step(
-        &self,
-        params: &ParamStore,
-        q: &[QParams],
-        x: &HostArray,
-        y: &HostArray,
-    ) -> Result<EvalOut> {
-        let inputs = self.pack_inputs(params, q, x, y)?;
-        let result = self.eval_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        anyhow::ensure!(outs.len() == self.manifest.eval_outputs.len(), "eval arity");
-        let loss = Self::scalar(&outs[0])?;
-        let metric = Self::scalar(&outs[1])?;
-        let mut extra = Vec::new();
-        for o in outs.iter().skip(2) {
-            // predictions may be i32 (span argmax) or f32 (mask counts)
-            let v = o.to_vec::<f32>().or_else(|_| {
-                o.to_vec::<i32>()
-                    .map(|iv| iv.into_iter().map(|x| x as f32).collect())
-            })?;
-            extra.push(v);
+/// Pick the best available backend for `model`.
+///
+/// With the `pjrt` feature and AOT artifacts present, the compiled-HLO
+/// engine wins; otherwise the native reference backend is used. Model
+/// families the native backend does not implement produce an error naming
+/// the fix (`make artifacts` + `--features pjrt`).
+pub fn load_backend(art_dir: &std::path::Path, model: &str) -> Result<Box<dyn Backend>> {
+    // per-model gate, matching `manifest_for`: a partial artifacts dir
+    // (subset `make artifacts` run) must not shadow natively served models
+    let have_artifacts = has_artifact(art_dir, model);
+    #[cfg(feature = "pjrt")]
+    {
+        if have_artifacts {
+            match pjrt::Engine::load(art_dir, model) {
+                Ok(e) => return Ok(Box::new(e)),
+                // a failing PJRT engine (e.g. the vendored xla stub is
+                // linked) falls back to the native backend when it can
+                // serve the model; otherwise surface the PJRT error
+                Err(err) => match native::NativeEngine::new(model) {
+                    Ok(e) => {
+                        eprintln!(
+                            "pjrt engine unavailable ({err}); using the native backend for {model}"
+                        );
+                        return Ok(Box::new(e));
+                    }
+                    Err(_) => return Err(err),
+                },
+            }
         }
-        Ok(EvalOut { loss, metric, extra })
     }
+    match native::NativeEngine::new(model) {
+        Ok(e) => Ok(Box::new(e)),
+        Err(e) if have_artifacts => Err(e.context(
+            "AOT artifacts exist but this build omits the `pjrt` feature \
+             (rebuild with `cargo build --features pjrt`)",
+        )),
+        Err(e) => Err(e),
+    }
+}
+
+/// True when `model` has a usable AOT artifact (index + its own manifest).
+pub fn has_artifact(art_dir: &std::path::Path, model: &str) -> bool {
+    art_dir.join("index.json").exists()
+        && art_dir.join(format!("{model}.manifest.json")).exists()
+}
+
+/// True when this build would actually *use* `model`'s AOT artifact —
+/// the single decision point behind [`load_backend`], [`manifest_for`]
+/// and the `geta models` provenance label.
+pub fn uses_artifact(art_dir: &std::path::Path, model: &str) -> bool {
+    cfg!(feature = "pjrt") && has_artifact(art_dir, model)
+}
+
+/// Load a model's manifest from the source [`load_backend`] would use:
+/// the AOT export only when a `pjrt` build would run it, the native
+/// synthesis otherwise — so the manifest and the engine always describe
+/// the same model plan. Artifact manifests still serve as a fallback for
+/// models missing from the embedded config set.
+pub fn manifest_for(art_dir: &std::path::Path, model: &str) -> Result<Manifest> {
+    if uses_artifact(art_dir, model) {
+        return Manifest::load(art_dir, model);
+    }
+    match native::synth_manifest_for(model) {
+        Ok(m) => Ok(m),
+        Err(_) if has_artifact(art_dir, model) => Manifest::load(art_dir, model),
+        Err(e) => Err(e),
+    }
+}
+
+/// Every model this build can describe: the artifact index (when present)
+/// unioned with the embedded config set, so a partial artifacts dir does
+/// not hide natively describable models.
+pub fn available_models(art_dir: &std::path::Path) -> Vec<String> {
+    let mut models = if art_dir.join("index.json").exists() {
+        Manifest::list_models(art_dir).unwrap_or_default()
+    } else {
+        Vec::new()
+    };
+    for m in native::model_names() {
+        if !models.contains(&m) {
+            models.push(m);
+        }
+    }
+    models
 }

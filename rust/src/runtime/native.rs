@@ -1,0 +1,761 @@
+//! Native reference backend: pure-Rust forward/backward with per-site
+//! fake-quantization, no Python/JAX/XLA anywhere.
+//!
+//! Two capabilities live here:
+//!
+//! 1. **Manifest synthesis** for every model family. The model configs
+//!    under `configs/models/` are embedded into the binary at compile time
+//!    and expanded into [`Manifest`]s by mirroring the plan functions of
+//!    `python/compile/models/` name-for-name and shape-for-shape (the same
+//!    contract `python/compile/aot.py` exports). This lets the graph /
+//!    search-space / BOPs contract tests run with zero artifacts.
+//! 2. **`NativeEngine`** — a reference implementation of the `mlp` family
+//!    (dense layers + ReLU + softmax cross-entropy) matching
+//!    `python/compile/models/cnn.py::make_apply_mlp`: weights fake-quantized
+//!    at their sites on the forward pass, activations quantized after each
+//!    ReLU, and the backward pass producing clipped-STE weight gradients
+//!    plus the eq. (4)-(6) scalar (d, t, q_m) gradients per site — exactly
+//!    the `TrainOut` contract of the PJRT engine, so QASSO, subnet
+//!    construction and BOPs accounting run unchanged on top of it.
+
+use anyhow::{Context, Result};
+
+use super::{Backend, BatchSpec, EvalOut, HostArray, Manifest, TrainOut};
+use crate::graph::builders;
+use crate::optim::qasso::SiteSpec;
+use crate::quant::{self, QParams};
+use crate::tensor::{ParamStore, Tensor};
+use crate::util::json::{self, Json};
+
+/// Batch sizes per task, mirroring python/compile/models/__init__.py BATCH.
+fn batch_size_for(task: &str) -> usize {
+    match task {
+        "image_cls" => 32,
+        _ => 16, // span_qa, lm
+    }
+}
+
+/// Model configs embedded at compile time (configs/models/*.json).
+const EMBEDDED_CONFIGS: &[(&str, &str)] = &[
+    ("bert_mini", include_str!("../../../configs/models/bert_mini.json")),
+    ("gpt_mini", include_str!("../../../configs/models/gpt_mini.json")),
+    ("mlp_tiny", include_str!("../../../configs/models/mlp_tiny.json")),
+    ("resnet_mini", include_str!("../../../configs/models/resnet_mini.json")),
+    ("resnet_mini_l", include_str!("../../../configs/models/resnet_mini_l.json")),
+    ("simplevit_mini", include_str!("../../../configs/models/simplevit_mini.json")),
+    ("swin_mini", include_str!("../../../configs/models/swin_mini.json")),
+    ("vgg7_mini", include_str!("../../../configs/models/vgg7_mini.json")),
+    ("vit_mini", include_str!("../../../configs/models/vit_mini.json")),
+];
+
+/// Names of all embedded model configs.
+pub fn model_names() -> Vec<String> {
+    EMBEDDED_CONFIGS.iter().map(|(n, _)| n.to_string()).collect()
+}
+
+/// Parse the embedded config of `model`.
+pub fn embedded_config(model: &str) -> Option<Json> {
+    EMBEDDED_CONFIGS
+        .iter()
+        .find(|(n, _)| *n == model)
+        .and_then(|(_, text)| json::parse(text).ok())
+}
+
+// ------------------------------------------------------- manifest synthesis
+
+/// Ordered (name, shape) collector mirroring python's `Plan`.
+struct PlanParams {
+    specs: Vec<(String, Vec<usize>)>,
+}
+
+impl PlanParams {
+    fn new() -> PlanParams {
+        PlanParams { specs: Vec::new() }
+    }
+
+    fn param(&mut self, name: &str, shape: &[usize]) {
+        self.specs.push((name.to_string(), shape.to_vec()));
+    }
+
+    fn linear(&mut self, name: &str, din: usize, dout: usize) {
+        self.param(&format!("{name}.weight"), &[din, dout]);
+        self.param(&format!("{name}.bias"), &[dout]);
+    }
+
+    fn conv(&mut self, name: &str, cin: usize, cout: usize, k: usize) {
+        self.param(&format!("{name}.weight"), &[k, k, cin, cout]);
+        self.param(&format!("{name}.bias"), &[cout]);
+    }
+
+    fn norm(&mut self, name: &str, c: usize) {
+        self.param(&format!("{name}.gamma"), &[c]);
+        self.param(&format!("{name}.beta"), &[c]);
+    }
+
+    fn block(&mut self, name: &str, dim: usize, ratio: usize) {
+        self.norm(&format!("{name}.ln1"), dim);
+        for p in ["wq", "wk", "wv", "wo"] {
+            self.linear(&format!("{name}.attn.{p}"), dim, dim);
+        }
+        self.norm(&format!("{name}.ln2"), dim);
+        self.linear(&format!("{name}.fc1"), dim, dim * ratio);
+        self.linear(&format!("{name}.fc2"), dim * ratio, dim);
+    }
+}
+
+/// Parameter specs of a config, in the python plan order (the HLO input
+/// order the AOT manifests export).
+fn param_specs(cfg: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    let fam = cfg.req("family")?.as_str().unwrap_or_default();
+    let img = |key: &str, default: usize| -> usize {
+        cfg.get("image").map(|i| i.usize_or(key, default)).unwrap_or(default)
+    };
+    let ncls = cfg.usize_or("num_classes", 10);
+    let mut p = PlanParams::new();
+    match fam {
+        "mlp" => {
+            let mut din = img("size", 8) * img("size", 8) * img("channels", 3);
+            for (i, &dout) in cfg.usize_arr("hidden").iter().enumerate() {
+                p.linear(&format!("fc{i}"), din, dout);
+                din = dout;
+            }
+            p.linear("head", din, ncls);
+        }
+        "vgg" => {
+            let channels = cfg.usize_arr("conv_channels");
+            let mut cin = img("channels", 3);
+            for (i, &cout) in channels.iter().enumerate() {
+                p.conv(&format!("features.{i}"), cin, cout, 3);
+                p.norm(&format!("features.{i}.bn"), cout);
+                cin = cout;
+            }
+            let npool = channels.len() / cfg.usize_or("pool_every", 2);
+            let fmap = img("size", 16) >> npool;
+            let mut din = cin * fmap * fmap;
+            for (i, &dout) in cfg.usize_arr("fc_dims").iter().enumerate() {
+                p.linear(&format!("fc{i}"), din, dout);
+                din = dout;
+            }
+            p.linear("head", din, ncls);
+        }
+        "resnet" => {
+            let stem = cfg.usize_or("stem_channels", 8);
+            p.conv("stem", img("channels", 3), stem, 3);
+            p.norm("stem.bn", stem);
+            let mut cin = stem;
+            for (si, &cout) in cfg.usize_arr("stage_channels").iter().enumerate() {
+                let stride = if si == 0 { 1 } else { 2 };
+                for b in 0..cfg.usize_or("blocks_per_stage", 2) {
+                    let s = if b == 0 { stride } else { 1 };
+                    let name = format!("stage{si}.{b}");
+                    p.conv(&format!("{name}.conv1"), cin, cout, 3);
+                    p.norm(&format!("{name}.bn1"), cout);
+                    p.conv(&format!("{name}.conv2"), cout, cout, 3);
+                    p.norm(&format!("{name}.bn2"), cout);
+                    if s != 1 || cin != cout {
+                        p.conv(&format!("{name}.proj"), cin, cout, 1);
+                        p.norm(&format!("{name}.bnp"), cout);
+                    }
+                    cin = cout;
+                }
+            }
+            p.linear("head", cin, ncls);
+        }
+        "bert" | "gpt" => {
+            let dim = cfg.usize_or("dim", 64);
+            p.param("embed.tok", &[cfg.usize_or("vocab", 128), dim]);
+            p.param("embed.pos", &[cfg.usize_or("seq_len", 32), dim]);
+            if fam == "bert" {
+                p.norm("embed.ln", dim);
+            }
+            for b in 0..cfg.usize_or("blocks", 2) {
+                p.block(&format!("block{b}"), dim, cfg.usize_or("mlp_ratio", 4));
+            }
+            p.norm("final.ln", dim);
+            if fam == "bert" {
+                p.linear("span_head", dim, 2);
+            } else {
+                p.linear("lm_head", dim, cfg.usize_or("vocab", 128));
+            }
+        }
+        "vit" => {
+            let dim = cfg.usize_or("dim", 48);
+            let patch = cfg.usize_or("patch", 4);
+            p.conv("patch_embed", img("channels", 3), dim, patch);
+            let mut ntok = (img("size", 16) / patch).pow(2);
+            if cfg.str_or("pool", "cls") == "cls" {
+                p.param("cls_token", &[1, 1, dim]);
+                ntok += 1;
+            }
+            p.param("pos_embed", &[ntok, dim]);
+            for b in 0..cfg.usize_or("blocks", 2) {
+                p.block(&format!("block{b}"), dim, cfg.usize_or("mlp_ratio", 4));
+            }
+            p.norm("final.ln", dim);
+            p.linear("head", dim, ncls);
+        }
+        "swin" => {
+            let dims = cfg.usize_arr("stage_dims");
+            let stage_blocks = cfg.usize_arr("stage_blocks");
+            let patch = cfg.usize_or("patch", 2);
+            p.conv("patch_embed", img("channels", 3), dims[0], patch);
+            let side = img("size", 16) / patch;
+            p.param("pos_embed", &[side * side, dims[0]]);
+            for (si, &dim) in dims.iter().enumerate() {
+                for b in 0..stage_blocks[si] {
+                    p.block(&format!("stage{si}.block{b}"), dim, cfg.usize_or("mlp_ratio", 2));
+                }
+                if si + 1 < dims.len() {
+                    p.linear(&format!("merge{si}"), dim * 4, dims[si + 1]);
+                    p.norm(&format!("merge{si}.ln"), dim * 4);
+                }
+            }
+            p.norm("final.ln", *dims.last().unwrap());
+            p.linear("head", *dims.last().unwrap(), ncls);
+        }
+        other => anyhow::bail!("unknown family {other}"),
+    }
+    Ok(p.specs)
+}
+
+/// Synthesize the manifest the AOT pipeline would export for `cfg`,
+/// without running Python: params from the plan mirror above, quant sites
+/// from the Rust trace-graph builders, batch/eval specs from the task.
+pub fn synth_manifest(cfg: &Json) -> Result<Manifest> {
+    let task = cfg.str_or("task", "image_cls");
+    let params = param_specs(cfg)?;
+    let qsites: Vec<SiteSpec> = builders::quant_sites(cfg)?
+        .into_iter()
+        .map(|(name, kind)| SiteSpec {
+            param: (kind == "weight").then(|| name.clone()),
+            name,
+        })
+        .collect();
+    let bsz = batch_size_for(&task);
+    let seq = cfg.usize_or("seq_len", 32);
+    let (x_shape, x_dtype, y_shape, y_dtype) = match task.as_str() {
+        "image_cls" => {
+            let img = cfg.req("image")?;
+            let s = img.usize_or("size", 8);
+            let c = img.usize_or("channels", 3);
+            (vec![bsz, s, s, c], "f32", vec![bsz], "i32")
+        }
+        "span_qa" => (vec![bsz, seq], "i32", vec![bsz, 2], "i32"),
+        "lm" => (vec![bsz, seq], "i32", vec![bsz, seq], "i32"),
+        other => anyhow::bail!("unknown task {other}"),
+    };
+    let eval_outputs: Vec<String> = match task.as_str() {
+        "image_cls" => vec!["loss", "correct"],
+        "span_qa" => vec!["loss", "correct", "pred_start", "pred_end"],
+        "lm" => vec!["loss", "correct", "mask_count"],
+        _ => unreachable!(),
+    }
+    .into_iter()
+    .map(String::from)
+    .collect();
+    let param_count = params.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    Ok(Manifest {
+        model: cfg.str_or("name", ""),
+        task,
+        config: cfg.clone(),
+        train_hlo: String::new(),
+        eval_hlo: String::new(),
+        q_rows: qsites.len().max(1),
+        params,
+        qsites,
+        batch: BatchSpec {
+            x_shape,
+            x_dtype: x_dtype.to_string(),
+            y_shape,
+            y_dtype: y_dtype.to_string(),
+        },
+        eval_outputs,
+        param_count,
+    })
+}
+
+/// [`synth_manifest`] for an embedded config by model name.
+pub fn synth_manifest_for(model: &str) -> Result<Manifest> {
+    let cfg = embedded_config(model)
+        .with_context(|| format!("no embedded config for model `{model}`"))?;
+    synth_manifest(&cfg)
+}
+
+// ------------------------------------------------------------ NativeEngine
+
+fn param_shape<'m>(manifest: &'m Manifest, name: &str) -> Result<&'m Vec<usize>> {
+    manifest
+        .params
+        .iter()
+        .find(|(p, _)| p == name)
+        .map(|(_, s)| s)
+        .with_context(|| format!("manifest missing {name}"))
+}
+
+/// Pure-Rust MLP engine (see module docs). One instance per model.
+pub struct NativeEngine {
+    manifest: Manifest,
+    /// Layer widths `[din, hidden..., num_classes]`.
+    dims: Vec<usize>,
+    /// Per linear layer (incl. head): quant-site row of its weight.
+    weight_site: Vec<Option<usize>>,
+    /// Per hidden layer: quant-site row of its post-ReLU activation.
+    act_site: Vec<Option<usize>>,
+    /// Per linear layer: parameter names ("fcN"/"head").
+    layer_names: Vec<String>,
+}
+
+impl NativeEngine {
+    pub fn new(model: &str) -> Result<NativeEngine> {
+        let cfg = embedded_config(model)
+            .with_context(|| format!("no embedded config for model `{model}`"))?;
+        let family = cfg.str_or("family", "");
+        anyhow::ensure!(
+            family == "mlp",
+            "native backend implements family `mlp` only (got `{family}` for `{model}`); \
+             run `make artifacts` and build with `--features pjrt` for the full zoo"
+        );
+        let manifest = synth_manifest(&cfg)?;
+        let mut layer_names: Vec<String> = (0..cfg.usize_arr("hidden").len())
+            .map(|i| format!("fc{i}"))
+            .collect();
+        layer_names.push("head".to_string());
+        // derive the layer widths from the manifest's own weight shapes so
+        // the engine cannot desync from the params it just planned
+        let mut dims = vec![param_shape(&manifest, &format!("{}.weight", layer_names[0]))?[0]];
+        for n in &layer_names {
+            dims.push(param_shape(&manifest, &format!("{n}.weight"))?[1]);
+        }
+        let site_idx = |name: &str| -> Option<usize> {
+            manifest.qsites.iter().position(|s| s.name == name)
+        };
+        let weight_site = layer_names
+            .iter()
+            .map(|n| site_idx(&format!("{n}.weight")))
+            .collect();
+        let act_site = (0..layer_names.len() - 1)
+            .map(|i| site_idx(&format!("fc{i}.act")))
+            .collect();
+        Ok(NativeEngine {
+            manifest,
+            dims,
+            weight_site,
+            act_site,
+            layer_names,
+        })
+    }
+
+    fn weight<'a>(&self, params: &'a ParamStore, layer: usize) -> Result<&'a Tensor> {
+        params
+            .get(&format!("{}.weight", self.layer_names[layer]))
+            .with_context(|| format!("missing weight for layer {}", self.layer_names[layer]))
+    }
+
+    fn bias<'a>(&self, params: &'a ParamStore, layer: usize) -> Result<&'a Tensor> {
+        params
+            .get(&format!("{}.bias", self.layer_names[layer]))
+            .with_context(|| format!("missing bias for layer {}", self.layer_names[layer]))
+    }
+
+    /// Forward (and optionally backward) over one batch.
+    fn run(
+        &self,
+        params: &ParamStore,
+        q: &[QParams],
+        x: &HostArray,
+        y: &HostArray,
+        with_grads: bool,
+    ) -> Result<(f32, f32, Option<(ParamStore, Vec<(f32, f32, f32)>)>)> {
+        let m = &self.manifest;
+        let nl = self.dims.len() - 1; // linear layers incl. head
+        let b = m.batch.batch_size();
+        let ncls = self.dims[nl];
+        let HostArray::F32(xv) = x else {
+            anyhow::bail!("mlp expects f32 inputs")
+        };
+        let HostArray::I32(yv) = y else {
+            anyhow::bail!("mlp expects i32 labels")
+        };
+        anyhow::ensure!(xv.len() == b * self.dims[0], "x size mismatch");
+        anyhow::ensure!(yv.len() == b, "y size mismatch");
+        anyhow::ensure!(q.len() == m.qsites.len(), "qparam count mismatch");
+
+        // ---- fake-quantized weights per site (eq. 1-2 on the fwd pass)
+        let mut wq: Vec<Vec<f32>> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let w = &self.weight(params, l)?.data;
+            wq.push(match self.weight_site[l] {
+                Some(s) => w.iter().map(|&v| quant::fake_quant(v, &q[s])).collect(),
+                None => w.clone(),
+            });
+        }
+
+        // ---- forward
+        // inputs[l] = the (quantized) activations feeding layer l
+        let mut inputs: Vec<Vec<f32>> = Vec::with_capacity(nl);
+        inputs.push(xv.clone());
+        // post-ReLU, pre-act-quant activations of each hidden layer
+        let mut relu_out: Vec<Vec<f32>> = Vec::with_capacity(nl - 1);
+        for l in 0..nl - 1 {
+            let bias = &self.bias(params, l)?.data;
+            let mut z = affine(&inputs[l], &wq[l], bias, b, self.dims[l], self.dims[l + 1]);
+            for v in z.iter_mut() {
+                *v = v.max(0.0);
+            }
+            let aq = match self.act_site[l] {
+                Some(s) => z.iter().map(|&v| quant::fake_quant(v, &q[s])).collect(),
+                None => z.clone(),
+            };
+            relu_out.push(z);
+            inputs.push(aq);
+        }
+        let head_bias = &self.bias(params, nl - 1)?.data;
+        let logits = affine(
+            &inputs[nl - 1],
+            &wq[nl - 1],
+            head_bias,
+            b,
+            self.dims[nl - 1],
+            ncls,
+        );
+
+        // ---- softmax cross-entropy + correct count
+        let mut probs = logits;
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f32;
+        for i in 0..b {
+            let row = &mut probs[i * ncls..(i + 1) * ncls];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f64;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v as f64;
+            }
+            for v in row.iter_mut() {
+                *v = (*v as f64 / sum) as f32;
+            }
+            let mut argmax = 0;
+            for j in 1..ncls {
+                if row[j] > row[argmax] {
+                    argmax = j;
+                }
+            }
+            let label = yv[i] as usize;
+            anyhow::ensure!(label < ncls, "label {label} out of range");
+            loss -= (row[label].max(1e-12) as f64).ln();
+            if argmax == label {
+                correct += 1.0;
+            }
+        }
+        let loss = (loss / b as f64) as f32;
+        if !with_grads {
+            return Ok((loss, correct, None));
+        }
+
+        // ---- backward
+        let mut grads = params.zeros_like();
+        let mut qgrads = vec![(0.0f32, 0.0f32, 0.0f32); m.qsites.len()];
+        // d loss / d logits
+        let mut cot = probs;
+        for i in 0..b {
+            cot[i * ncls + yv[i] as usize] -= 1.0;
+        }
+        let scale = 1.0 / b as f32;
+        for v in cot.iter_mut() {
+            *v *= scale;
+        }
+        for l in (0..nl).rev() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            // grads wrt the *quantized* weight, then STE back to the raw one
+            let mut gw = grad_weights(&inputs[l], &cot, b, din, dout);
+            if let Some(s) = self.weight_site[l] {
+                let w = &self.weight(params, l)?.data;
+                let qg = &mut qgrads[s];
+                for (i, &wi) in w.iter().enumerate() {
+                    let g = gw[i];
+                    qg.0 += g * quant::grad_d(wi, &q[s]);
+                    qg.1 += g * quant::grad_t(wi, &q[s]);
+                    qg.2 += g * quant::grad_qm(wi, &q[s]);
+                    // clipped STE: pass-through inside the clip range only
+                    if wi.abs() > q[s].qm {
+                        gw[i] = 0.0;
+                    }
+                }
+            }
+            let name = &self.layer_names[l];
+            grads
+                .get_mut(&format!("{name}.weight"))
+                .with_context(|| format!("grad store missing {name}.weight"))?
+                .data
+                .copy_from_slice(&gw);
+            let gb = &mut grads
+                .get_mut(&format!("{name}.bias"))
+                .with_context(|| format!("grad store missing {name}.bias"))?
+                .data;
+            for i in 0..b {
+                for j in 0..dout {
+                    gb[j] += cot[i * dout + j];
+                }
+            }
+            if l == 0 {
+                break;
+            }
+            // propagate to the layer input: cot @ wq^T
+            let mut gh = matmul_nt(&cot, &wq[l], b, dout, din);
+            // through the activation fake-quant (contract before masking:
+            // the site grads use the cotangent wrt the quantizer *output*)
+            if let Some(s) = self.act_site[l - 1] {
+                let a = &relu_out[l - 1];
+                let qg = &mut qgrads[s];
+                for (i, &ai) in a.iter().enumerate() {
+                    let g = gh[i];
+                    qg.0 += g * quant::grad_d(ai, &q[s]);
+                    qg.1 += g * quant::grad_t(ai, &q[s]);
+                    qg.2 += g * quant::grad_qm(ai, &q[s]);
+                    if ai.abs() > q[s].qm {
+                        gh[i] = 0.0;
+                    }
+                }
+            }
+            // through the ReLU
+            for (i, &ai) in relu_out[l - 1].iter().enumerate() {
+                if ai <= 0.0 {
+                    gh[i] = 0.0;
+                }
+            }
+            cot = gh;
+        }
+        Ok((loss, correct, Some((grads, qgrads))))
+    }
+}
+
+impl Backend for NativeEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn platform(&self) -> String {
+        "native".to_string()
+    }
+
+    fn train_step(
+        &self,
+        params: &ParamStore,
+        q: &[QParams],
+        x: &HostArray,
+        y: &HostArray,
+    ) -> Result<TrainOut> {
+        let (loss, metric, g) = self.run(params, q, x, y, true)?;
+        let (grads, qgrads) = g.expect("grads requested");
+        Ok(TrainOut {
+            loss,
+            grads,
+            qgrads,
+            metric,
+        })
+    }
+
+    fn eval_step(
+        &self,
+        params: &ParamStore,
+        q: &[QParams],
+        x: &HostArray,
+        y: &HostArray,
+    ) -> Result<EvalOut> {
+        let (loss, metric, _) = self.run(params, q, x, y, false)?;
+        Ok(EvalOut {
+            loss,
+            metric,
+            extra: Vec::new(),
+        })
+    }
+}
+
+// ----------------------------------------------------------- dense kernels
+
+/// `x[b, din] @ w[din, dout] + bias[dout]` (row-major flat buffers).
+fn affine(x: &[f32], w: &[f32], bias: &[f32], b: usize, din: usize, dout: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * din);
+    debug_assert_eq!(w.len(), din * dout);
+    let mut out = vec![0.0f32; b * dout];
+    for i in 0..b {
+        let xrow = &x[i * din..(i + 1) * din];
+        let orow = &mut out[i * dout..(i + 1) * dout];
+        orow.copy_from_slice(bias);
+        for (k, &xk) in xrow.iter().enumerate() {
+            if xk == 0.0 {
+                continue;
+            }
+            let wrow = &w[k * dout..(k + 1) * dout];
+            crate::tensor::axpy(xk, wrow, orow);
+        }
+    }
+    out
+}
+
+/// `x[b, din]^T @ cot[b, dout]` -> grads `[din, dout]`.
+fn grad_weights(x: &[f32], cot: &[f32], b: usize, din: usize, dout: usize) -> Vec<f32> {
+    let mut gw = vec![0.0f32; din * dout];
+    for i in 0..b {
+        let xrow = &x[i * din..(i + 1) * din];
+        let crow = &cot[i * dout..(i + 1) * dout];
+        for (k, &xk) in xrow.iter().enumerate() {
+            if xk == 0.0 {
+                continue;
+            }
+            crate::tensor::axpy(xk, crow, &mut gw[k * dout..(k + 1) * dout]);
+        }
+    }
+    gw
+}
+
+/// `cot[b, dout] @ w[din, dout]^T` -> `[b, din]`.
+fn matmul_nt(cot: &[f32], w: &[f32], b: usize, dout: usize, din: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * din];
+    for i in 0..b {
+        let crow = &cot[i * dout..(i + 1) * dout];
+        let orow = &mut out[i * din..(i + 1) * din];
+        for k in 0..din {
+            orow[k] = crate::tensor::dot(crow, &w[k * dout..(k + 1) * dout]) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Backend;
+
+    fn engine() -> NativeEngine {
+        NativeEngine::new("mlp_tiny").unwrap()
+    }
+
+    fn batch(e: &NativeEngine, seed: u64) -> (HostArray, HostArray) {
+        let m = e.manifest();
+        let (train, _) = crate::data::SynthData::for_model(&m.config, 64, 32, seed);
+        let idxs: Vec<usize> = (0..m.batch.batch_size()).collect();
+        train.batch(&idxs)
+    }
+
+    #[test]
+    fn synth_manifests_match_aot_contract() {
+        for model in model_names() {
+            let man = synth_manifest_for(&model).unwrap();
+            assert_eq!(man.model, model);
+            assert!(!man.params.is_empty(), "{model}");
+            assert!(man.param_count > 0, "{model}");
+            let total: usize = man.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+            assert_eq!(total, man.param_count, "{model}");
+            // site order must equal the Rust builders' order (the same
+            // invariant the AOT manifests are tested for)
+            let sites = builders::quant_sites(&man.config).unwrap();
+            assert_eq!(man.qsites.len(), sites.len(), "{model}");
+            for (a, (bname, kind)) in man.qsites.iter().zip(&sites) {
+                assert_eq!(&a.name, bname, "{model}");
+                assert_eq!(a.param.is_some(), kind == "weight", "{model}");
+            }
+        }
+    }
+
+    #[test]
+    fn native_gradients_match_finite_differences() {
+        let e = engine();
+        let params = e.init_params(3);
+        // 16-bit quantizers: d is tiny, so central differences spanning many
+        // rounding steps recover the smooth slope the STE gradient models
+        let q = e.init_qparams(&params, 16.0);
+        let (x, y) = batch(&e, 5);
+        let out = e.train_step(&params, &q, &x, &y).unwrap();
+        let h = 1e-2f32;
+        let mut checked = 0;
+        for (ti, t) in params.tensors.iter().enumerate() {
+            let site = e
+                .manifest()
+                .qsites
+                .iter()
+                .position(|s| s.param.as_deref() == Some(t.name.as_str()));
+            for &ei in &[0usize, t.data.len() / 2, t.data.len() - 1] {
+                // near the clip boundary the STE and the true slope
+                // legitimately disagree — skip those probes
+                if let Some(s) = site {
+                    if t.data[ei].abs() + h >= q[s].qm {
+                        continue;
+                    }
+                }
+                let mut p1 = params.clone();
+                p1.tensors[ti].data[ei] += h;
+                let l1 = e.eval_step(&p1, &q, &x, &y).unwrap().loss;
+                let mut p2 = params.clone();
+                p2.tensors[ti].data[ei] -= h;
+                let l2 = e.eval_step(&p2, &q, &x, &y).unwrap().loss;
+                let fd = (l1 - l2) / (2.0 * h);
+                let an = out.grads.tensors[ti].data[ei];
+                assert!(
+                    (an - fd).abs() < 0.02 + 0.1 * an.abs().max(fd.abs()),
+                    "{}[{ei}]: analytic {an} vs fd {fd}",
+                    t.name
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 12, "only {checked} probes ran");
+    }
+
+    #[test]
+    fn native_sgd_reduces_loss() {
+        // mirror of python/tests/test_models.py::test_sgd_reduces_loss
+        let e = engine();
+        let mut params = e.init_params(0);
+        let q = e.init_qparams(&params, 16.0);
+        let (x, y) = batch(&e, 7);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..6 {
+            let out = e.train_step(&params, &q, &x, &y).unwrap();
+            first.get_or_insert(out.loss);
+            last = out.loss;
+            for (ti, t) in out.grads.tensors.iter().enumerate() {
+                for (i, g) in t.data.iter().enumerate() {
+                    params.tensors[ti].data[i] -= 0.05 * g;
+                }
+            }
+        }
+        assert!(last < first.unwrap(), "{first:?} -> {last}");
+    }
+
+    #[test]
+    fn quant_param_gradients_are_live() {
+        let e = engine();
+        let params = e.init_params(1);
+        // coarse quantizer => large rounding residuals => nonzero d-grads
+        let q = e.init_qparams(&params, 4.0);
+        let (x, y) = batch(&e, 9);
+        let out = e.train_step(&params, &q, &x, &y).unwrap();
+        assert_eq!(out.qgrads.len(), e.manifest().qsites.len());
+        let live = out
+            .qgrads
+            .iter()
+            .any(|g| g.0.abs() + g.1.abs() + g.2.abs() > 0.0);
+        assert!(live, "all quant-param gradients zero: {:?}", out.qgrads);
+    }
+
+    #[test]
+    fn bits_change_the_loss() {
+        let e = engine();
+        let params = e.init_params(2);
+        let (x, y) = batch(&e, 11);
+        let hi = e.init_qparams(&params, 16.0);
+        let lo = e.init_qparams(&params, 2.0);
+        let l_hi = e.eval_step(&params, &hi, &x, &y).unwrap().loss;
+        let l_lo = e.eval_step(&params, &lo, &x, &y).unwrap().loss;
+        assert!((l_hi - l_lo).abs() > 1e-6, "{l_hi} vs {l_lo}");
+    }
+
+    #[test]
+    fn unsupported_family_reports_fix() {
+        let err = NativeEngine::new("bert_mini").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        assert!(NativeEngine::new("nope").is_err());
+    }
+}

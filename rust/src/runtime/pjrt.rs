@@ -1,0 +1,166 @@
+//! PJRT runtime: load AOT artifacts, execute train/eval steps.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire runtime bridge. An `Engine` owns one PJRT CPU client plus the
+//! compiled train/eval executables of one model, and the manifest emitted
+//! by `python/compile/aot.py` drives all input packing / output unpacking
+//! — the Rust side has zero hardcoded model knowledge.
+//!
+//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax>=0.5
+//! serialized protos with 64-bit instruction ids; the text parser
+//! reassigns ids — see /opt/xla-example/README.md).
+//!
+//! Gated behind the `pjrt` cargo feature: default builds use the native
+//! reference backend instead (`super::native`), so a machine without the
+//! XLA toolchain still builds and tests the full pipeline.
+
+use anyhow::{Context, Result};
+
+use super::{Backend, EvalOut, HostArray, Manifest, TrainOut};
+use crate::quant::QParams;
+use crate::tensor::{ParamStore, Tensor};
+
+fn to_literal(arr: &HostArray, shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = match arr {
+        HostArray::F32(v) => xla::Literal::vec1(v),
+        HostArray::I32(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Load and compile the artifacts of `model` from `art_dir`.
+    pub fn load(art_dir: &std::path::Path, model: &str) -> Result<Engine> {
+        let manifest = Manifest::load(art_dir, model)?;
+        let client = xla::PjRtClient::cpu().context("PJRT cpu client")?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = art_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path utf-8")?,
+            )
+            .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let train_exe = compile(&manifest.train_hlo)?;
+        let eval_exe = compile(&manifest.eval_hlo)?;
+        Ok(Engine {
+            manifest,
+            client,
+            train_exe,
+            eval_exe,
+        })
+    }
+
+    // ------------------------------------------------------------ stepping
+    fn pack_inputs(
+        &self,
+        params: &ParamStore,
+        q: &[QParams],
+        x: &HostArray,
+        y: &HostArray,
+    ) -> Result<Vec<xla::Literal>> {
+        let m = &self.manifest;
+        anyhow::ensure!(params.len() == m.params.len(), "param count mismatch");
+        let mut lits = Vec::with_capacity(params.len() + 3);
+        for (t, (name, shape)) in params.tensors.iter().zip(&m.params) {
+            debug_assert_eq!(&t.name, name);
+            lits.push(to_literal(&HostArray::F32(t.data.clone()), shape)?);
+        }
+        // q array [max(nsites,1), 3]
+        let rows = m.q_rows.max(1);
+        let mut qdata = vec![0.0f32; rows * 3];
+        for (i, s) in q.iter().enumerate() {
+            qdata[i * 3] = s.d;
+            qdata[i * 3 + 1] = s.t;
+            qdata[i * 3 + 2] = s.qm;
+        }
+        lits.push(to_literal(&HostArray::F32(qdata), &[rows, 3])?);
+        lits.push(to_literal(x, &m.batch.x_shape)?);
+        lits.push(to_literal(y, &m.batch.y_shape)?);
+        Ok(lits)
+    }
+
+    fn scalar(lit: &xla::Literal) -> Result<f32> {
+        Ok(lit.to_vec::<f32>()?.first().copied().unwrap_or(f32::NAN))
+    }
+}
+
+impl Backend for Engine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn train_step(
+        &self,
+        params: &ParamStore,
+        q: &[QParams],
+        x: &HostArray,
+        y: &HostArray,
+    ) -> Result<TrainOut> {
+        let inputs = self.pack_inputs(params, q, x, y)?;
+        let result = self.train_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let m = &self.manifest;
+        anyhow::ensure!(
+            outs.len() == 1 + m.params.len() + 2,
+            "train outputs: got {}, want {}",
+            outs.len(),
+            1 + m.params.len() + 2
+        );
+        let loss = Self::scalar(&outs[0])?;
+        let mut grads = ParamStore::new();
+        for (i, (name, shape)) in m.params.iter().enumerate() {
+            let data = outs[1 + i].to_vec::<f32>()?;
+            grads.push(Tensor::from_vec(name, shape, data));
+        }
+        let qflat = outs[1 + m.params.len()].to_vec::<f32>()?;
+        let qgrads = (0..m.qsites.len())
+            .map(|i| (qflat[i * 3], qflat[i * 3 + 1], qflat[i * 3 + 2]))
+            .collect();
+        let metric = Self::scalar(&outs[1 + m.params.len() + 1])?;
+        Ok(TrainOut {
+            loss,
+            grads,
+            qgrads,
+            metric,
+        })
+    }
+
+    fn eval_step(
+        &self,
+        params: &ParamStore,
+        q: &[QParams],
+        x: &HostArray,
+        y: &HostArray,
+    ) -> Result<EvalOut> {
+        let inputs = self.pack_inputs(params, q, x, y)?;
+        let result = self.eval_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == self.manifest.eval_outputs.len(), "eval arity");
+        let loss = Self::scalar(&outs[0])?;
+        let metric = Self::scalar(&outs[1])?;
+        let mut extra = Vec::new();
+        for o in outs.iter().skip(2) {
+            // predictions may be i32 (span argmax) or f32 (mask counts)
+            let v = o.to_vec::<f32>().or_else(|_| {
+                o.to_vec::<i32>()
+                    .map(|iv| iv.into_iter().map(|x| x as f32).collect())
+            })?;
+            extra.push(v);
+        }
+        Ok(EvalOut { loss, metric, extra })
+    }
+}

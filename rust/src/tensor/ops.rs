@@ -143,6 +143,73 @@ mod tests {
     }
 
     #[test]
+    fn empty_slices_are_no_ops() {
+        let mut y: Vec<f32> = vec![];
+        axpy(2.0, &[], &mut y);
+        scale_add(0.5, &mut y, 2.0, &[]);
+        assert!(y.is_empty());
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(norm2(&[]), 0.0);
+        assert_eq!(max_abs(&[]), 0.0);
+        let mut buf = vec![1.0f32];
+        gather_strided(&[], 0, 3, &mut buf);
+        assert!(buf.is_empty());
+        scatter_strided(&mut [], 0, 3, &[]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_length_mismatch_panics() {
+        let mut y = vec![0.0f32; 3];
+        axpy(1.0, &[1.0, 2.0], &mut y);
+    }
+
+    #[test]
+    #[should_panic]
+    fn scale_add_length_mismatch_panics() {
+        let mut y = vec![0.0f32; 2];
+        scale_add(1.0, &mut y, 1.0, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dot_length_mismatch_panics() {
+        dot(&[1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn scale_add_blends() {
+        let mut y = vec![1.0f32, -2.0];
+        scale_add(0.5, &mut y, 2.0, &[3.0, 4.0]);
+        assert_eq!(y, vec![6.5, 7.0]);
+    }
+
+    #[test]
+    fn dot_accumulates_in_f64_on_large_inputs() {
+        // 1M summands of 1e-2: an f32 accumulator drifts by ~1e-4 relative
+        // once the partial sum dwarfs each term; the f64 path stays exact
+        // to ~1e-12 relative.
+        let n = 1_000_000usize;
+        let v = vec![0.1f32; n];
+        let got = dot(&v, &v);
+        let want = (0.1f32 as f64) * (0.1f32 as f64) * n as f64;
+        assert!(
+            (got - want).abs() / want < 1e-9,
+            "f64 accumulation broken: {got} vs {want}"
+        );
+        // norm2 inherits the same accumulator
+        let norm_want = want.sqrt();
+        assert!((norm2(&v) - norm_want).abs() / norm_want < 1e-9);
+        // cancellation: big + many smalls - big must recover the smalls
+        let mut w = vec![1.0f32; n + 2];
+        w[0] = 1.0e8;
+        w[n + 1] = -1.0e8;
+        let ones = vec![1.0f32; n + 2];
+        let got = dot(&w, &ones);
+        assert!((got - n as f64).abs() < 1e-3, "cancellation lost: {got}");
+    }
+
+    #[test]
     fn prop_axpy_linear() {
         prop::check(
             30,

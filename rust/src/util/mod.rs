@@ -1,8 +1,8 @@
 //! In-repo infrastructure substrates.
 //!
-//! The build environment is fully offline: only the `xla` crate's
-//! dependency closure exists in the cargo cache, so the usual ecosystem
-//! crates (serde/serde_json, clap, rand, criterion, proptest, tokio) are
+//! The build environment is fully offline: every dependency is a vendored
+//! path crate (rust/vendor/), so the usual ecosystem crates
+//! (serde/serde_json, clap, rand, criterion, proptest, tokio) are
 //! unavailable. Each submodule here is a small, well-tested replacement
 //! for the slice of functionality this project needs.
 

@@ -1,20 +1,35 @@
 //! End-to-end integration: full GETA runs (heavily step-scaled) plus the
-//! sequential baseline, over the real artifacts. These are the contract
-//! tests for "all layers compose".
+//! sequential baseline. These are the contract tests for "all layers
+//! compose".
+//!
+//! Backend selection is automatic: with AOT artifacts (and the `pjrt`
+//! feature) the compiled-HLO engine runs; without them the mlp workloads
+//! run on the native reference backend, so `cargo test` exercises the
+//! warm-up → projection → joint → cool-down pipeline on every machine.
+//! Model families the native backend does not implement (bert here) skip
+//! only when no backend can serve them.
 
+mod common;
+
+use common::art_dir;
+use geta::runtime::Backend as _;
 use geta::baselines;
 use geta::config::ExperimentConfig;
 use geta::coordinator::{GetaCompressor, Trainer};
 use geta::graph;
 use geta::optim::qasso::StageMask;
 
-fn art() -> Option<std::path::PathBuf> {
-    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if p.join("index.json").exists() {
-        Some(p)
-    } else {
-        eprintln!("skipping: run `make artifacts`");
-        None
+/// Build a trainer with whatever backend is available; `None` (with a
+/// skip note) only when no backend can serve the model — see
+/// `common::skip_or_panic` for the policy.
+fn trainer(exp: ExperimentConfig) -> Option<Trainer> {
+    let model = exp.model.clone();
+    match Trainer::new(&art_dir(), exp) {
+        Ok(t) => Some(t),
+        Err(e) => {
+            common::skip_or_panic(&model, &e);
+            None
+        }
     }
 }
 
@@ -29,9 +44,9 @@ fn small_exp(model: &str, sparsity: f64) -> ExperimentConfig {
 
 #[test]
 fn geta_mlp_learns_and_compresses() {
-    let Some(dir) = art() else { return };
-    let t = Trainer::new(&dir, small_exp("mlp_tiny", 0.4)).unwrap();
-    let mut g = GetaCompressor::new(&t.engine, &t.exp, StageMask::default()).unwrap();
+    // never skipped: mlp_tiny always has the native backend
+    let t = trainer(small_exp("mlp_tiny", 0.4)).expect("mlp backend is always available");
+    let mut g = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default()).unwrap();
     let r = t.run(&mut g).unwrap();
     assert!(r.accuracy > 60.0, "acc {}", r.accuracy);
     assert!((r.group_sparsity - 0.4).abs() < 0.02, "sparsity {}", r.group_sparsity);
@@ -47,9 +62,8 @@ fn geta_mlp_learns_and_compresses() {
 
 #[test]
 fn geta_bert_span_task() {
-    let Some(dir) = art() else { return };
-    let t = Trainer::new(&dir, small_exp("bert_mini", 0.3)).unwrap();
-    let mut g = GetaCompressor::new(&t.engine, &t.exp, StageMask::default()).unwrap();
+    let Some(t) = trainer(small_exp("bert_mini", 0.3)) else { return };
+    let mut g = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default()).unwrap();
     let r = t.run(&mut g).unwrap();
     assert!(r.em.is_some() && r.f1.is_some());
     assert!(r.f1.unwrap() >= r.em.unwrap() - 1e-9); // F1 dominates EM
@@ -58,9 +72,8 @@ fn geta_bert_span_task() {
 
 #[test]
 fn prune_then_ptq_baseline_runs() {
-    let Some(dir) = art() else { return };
-    let t = Trainer::new(&dir, small_exp("mlp_tiny", 0.4)).unwrap();
-    let space = graph::search_space_for(&t.engine.manifest.config).unwrap();
+    let Some(t) = trainer(small_exp("mlp_tiny", 0.4)) else { return };
+    let space = graph::search_space_for(&t.engine.manifest().config).unwrap();
     let params = t.engine.init_params(0);
     let mut m = baselines::PruneThenPtq::new(
         t.exp.qasso.clone(),
@@ -79,8 +92,7 @@ fn prune_then_ptq_baseline_runs() {
 
 #[test]
 fn unstructured_baseline_density_accounting() {
-    let Some(dir) = art() else { return };
-    let t = Trainer::new(&dir, small_exp("mlp_tiny", 0.0)).unwrap();
+    let Some(t) = trainer(small_exp("mlp_tiny", 0.0)) else { return };
     let steps = t.exp.total_steps();
     let mut m = baselines::UnstructuredJoint::new(
         0.5, 4.0, 16.0, baselines::base_opt(&t.exp), steps, "unstructured",
@@ -93,15 +105,14 @@ fn unstructured_baseline_density_accounting() {
 
 #[test]
 fn stage_ablation_variants_run() {
-    let Some(dir) = art() else { return };
-    let t = Trainer::new(&dir, small_exp("mlp_tiny", 0.4)).unwrap();
+    let Some(t) = trainer(small_exp("mlp_tiny", 0.4)) else { return };
     for mask in [
         StageMask { warmup: false, ..Default::default() },
         StageMask { projection: false, ..Default::default() },
         StageMask { joint: false, ..Default::default() },
         StageMask { cooldown: false, ..Default::default() },
     ] {
-        let mut g = GetaCompressor::new(&t.engine, &t.exp, mask).unwrap();
+        let mut g = GetaCompressor::new(&*t.engine, &t.exp, mask).unwrap();
         let r = t.run(&mut g).unwrap();
         // sparsity target must hold even without the joint stage (one-shot
         // fallback) — the whole point of white-box control
@@ -115,11 +126,10 @@ fn stage_ablation_variants_run() {
 
 #[test]
 fn seeds_change_data_but_not_contract() {
-    let Some(dir) = art() else { return };
     let mut e1 = small_exp("mlp_tiny", 0.4);
     e1.seed = 11;
-    let t = Trainer::new(&dir, e1).unwrap();
-    let mut g = GetaCompressor::new(&t.engine, &t.exp, StageMask::default()).unwrap();
+    let t = trainer(e1).expect("mlp backend is always available");
+    let mut g = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default()).unwrap();
     let r = t.run(&mut g).unwrap();
     assert!((r.group_sparsity - 0.4).abs() < 0.02);
     assert!(r.accuracy > 50.0);

@@ -1,26 +1,36 @@
-//! Cross-layer contract tests: the AOT manifests (Layer 2's exported
+//! Cross-layer contract tests: the model manifests (Layer 2's exported
 //! interface) vs the Rust trace graphs / search spaces (Layer 3's view of
 //! the same models). A drift between python/compile/models and
 //! rust/src/graph/builders fails here.
+//!
+//! Runs on every machine: with `make artifacts` the AOT-exported manifests
+//! are checked; without them the natively synthesized manifests (same
+//! plan-mirroring contract, see runtime/native.rs) stand in, so the
+//! manifest ↔ graph invariants are asserted for all nine models either way.
 
+mod common;
+
+use common::art_dir;
 use geta::graph;
-use geta::runtime::Manifest;
+use geta::runtime::{available_models, manifest_for, Manifest};
 
-fn art() -> Option<std::path::PathBuf> {
-    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if p.join("index.json").exists() {
-        Some(p)
-    } else {
-        eprintln!("skipping: run `make artifacts`");
-        None
-    }
+/// All model manifests, from artifacts when present, else synthesized.
+/// `available_models` unions the artifact index with the embedded config
+/// set, so all nine models are always covered here.
+fn manifests() -> Vec<Manifest> {
+    let dir = art_dir();
+    let models = available_models(&dir);
+    assert!(models.len() >= 9, "model set too small: {models:?}");
+    models
+        .iter()
+        .map(|m| manifest_for(&dir, m).unwrap())
+        .collect()
 }
 
 #[test]
 fn every_group_member_tensor_exists_in_manifest() {
-    let Some(dir) = art() else { return };
-    for model in Manifest::list_models(&dir).unwrap() {
-        let man = Manifest::load(&dir, &model).unwrap();
+    for man in manifests() {
+        let model = &man.model;
         let names: std::collections::BTreeSet<&str> =
             man.params.iter().map(|(n, _)| n.as_str()).collect();
         let shapes: std::collections::BTreeMap<&str, &Vec<usize>> =
@@ -54,9 +64,8 @@ fn every_group_member_tensor_exists_in_manifest() {
 fn groups_partition_without_out_overlap() {
     // No element may belong to two groups' OUT members — groups are
     // minimally removable structures, removal must be independent.
-    let Some(dir) = art() else { return };
-    for model in Manifest::list_models(&dir).unwrap() {
-        let man = Manifest::load(&dir, &model).unwrap();
+    for man in manifests() {
+        let model = &man.model;
         let space = graph::search_space_for(&man.config).unwrap();
         let mut seen: std::collections::BTreeSet<(String, usize, usize)> =
             std::collections::BTreeSet::new();
@@ -80,9 +89,8 @@ fn groups_partition_without_out_overlap() {
 
 #[test]
 fn weight_sites_map_to_real_params() {
-    let Some(dir) = art() else { return };
-    for model in Manifest::list_models(&dir).unwrap() {
-        let man = Manifest::load(&dir, &model).unwrap();
+    for man in manifests() {
+        let model = &man.model;
         let names: std::collections::BTreeSet<&str> =
             man.params.iter().map(|(n, _)| n.as_str()).collect();
         for s in &man.qsites {
@@ -96,9 +104,8 @@ fn weight_sites_map_to_real_params() {
 #[test]
 fn layer_costs_cover_params_proportionally() {
     // every weight-carrying 2D/4D tensor should appear in the BOPs model
-    let Some(dir) = art() else { return };
-    for model in Manifest::list_models(&dir).unwrap() {
-        let man = Manifest::load(&dir, &model).unwrap();
+    for man in manifests() {
+        let model = &man.model;
         let costs = geta::metrics::layer_costs(&man.config).unwrap();
         let cost_names: std::collections::BTreeSet<&str> =
             costs.iter().map(|c| c.param.as_str()).collect();
@@ -116,9 +123,9 @@ fn layer_costs_cover_params_proportionally() {
 
 #[test]
 fn attention_models_have_head_groups() {
-    let Some(dir) = art() else { return };
+    let dir = art_dir();
     for model in ["bert_mini", "gpt_mini", "vit_mini", "swin_mini"] {
-        let man = Manifest::load(&dir, model).unwrap();
+        let man = manifest_for(&dir, model).unwrap();
         let space = graph::search_space_for(&man.config).unwrap();
         let heads = space
             .groups
@@ -128,5 +135,35 @@ fn attention_models_have_head_groups() {
         assert!(heads > 0, "{model}: no head-granular groups");
         let heads_cfg = man.config.usize_or("heads", 0);
         assert_eq!(heads % heads_cfg, 0, "{model}");
+    }
+}
+
+#[test]
+fn native_and_aot_manifests_agree_when_both_exist() {
+    // when artifacts are present, the synthesized manifest must match the
+    // AOT-exported one tensor-for-tensor — the contract that makes the
+    // native fallback a faithful stand-in
+    let dir = art_dir();
+    if !dir.join("index.json").exists() {
+        eprintln!("skipping: no artifacts to compare against");
+        return;
+    }
+    for model in available_models(&dir) {
+        if !geta::runtime::has_artifact(&dir, &model) {
+            continue; // natively described only — nothing to compare
+        }
+        let aot = Manifest::load(&dir, &model).unwrap();
+        let Ok(native) = geta::runtime::native::synth_manifest_for(&model) else {
+            continue; // model unknown to the embedded config set
+        };
+        assert_eq!(aot.params, native.params, "{model}: param plan drift");
+        assert_eq!(aot.qsites.len(), native.qsites.len(), "{model}");
+        for (a, b) in aot.qsites.iter().zip(&native.qsites) {
+            assert_eq!(a.name, b.name, "{model}");
+            assert_eq!(a.param, b.param, "{model}");
+        }
+        assert_eq!(aot.batch.x_shape, native.batch.x_shape, "{model}");
+        assert_eq!(aot.batch.y_shape, native.batch.y_shape, "{model}");
+        assert_eq!(aot.param_count, native.param_count, "{model}");
     }
 }

@@ -1,39 +1,46 @@
-//! Integration tests over the PJRT runtime + AOT artifacts (skipped when
-//! `make artifacts` has not run).
+//! Integration tests over the execution backends. The mlp workloads run
+//! on every machine (native reference backend when AOT artifacts are
+//! absent); transformer workloads additionally need `make artifacts` plus
+//! the `pjrt` feature and skip otherwise.
 
+mod common;
+
+use common::art_dir;
 use geta::config::ExperimentConfig;
 use geta::coordinator::Trainer;
 use geta::quant::QParams;
-use geta::runtime::Engine;
+use geta::runtime::{load_backend, Backend};
 
-fn art() -> Option<std::path::PathBuf> {
-    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if p.join("index.json").exists() {
-        Some(p)
-    } else {
-        eprintln!("skipping: run `make artifacts`");
-        None
+/// Skip only when no backend can serve `model` — see
+/// `common::skip_or_panic` for the policy.
+fn backend(model: &str) -> Option<Box<dyn Backend>> {
+    match load_backend(&art_dir(), model) {
+        Ok(b) => Some(b),
+        Err(err) => {
+            common::skip_or_panic(model, &err);
+            None
+        }
     }
 }
 
 #[test]
 fn engine_roundtrip_mlp() {
-    let Some(dir) = art() else { return };
-    let e = Engine::load(&dir, "mlp_tiny").unwrap();
-    assert_eq!(e.platform(), "cpu");
+    let e = backend("mlp_tiny").expect("mlp backend is always available");
+    // "cpu" under PJRT, "native" for the reference backend
+    assert!(["cpu", "native"].contains(&e.platform().as_str()), "{}", e.platform());
     let params = e.init_params(0);
-    assert_eq!(params.len(), e.manifest.params.len());
+    assert_eq!(params.len(), e.manifest().params.len());
     // deterministic init
     let params2 = e.init_params(0);
     assert_eq!(params.tensors[0].data, params2.tensors[0].data);
     let q = e.init_qparams(&params, 16.0);
-    assert_eq!(q.len(), e.manifest.qsites.len());
+    assert_eq!(q.len(), e.manifest().qsites.len());
     for s in &q {
         assert!((s.bit_width() - 16.0).abs() < 1e-2);
     }
 
     let exp = ExperimentConfig::defaults_for("mlp_tiny");
-    let t = Trainer::new(&dir, exp).unwrap();
+    let t = Trainer::new(&art_dir(), exp).unwrap();
     let idxs: Vec<usize> = (0..t.batch_size()).collect();
     let (x, y) = t.train_data.batch(&idxs);
     let out = t.engine.train_step(&params, &q, &x, &y).unwrap();
@@ -52,13 +59,12 @@ fn engine_roundtrip_mlp() {
 
 #[test]
 fn gradients_flow_to_quant_params() {
-    let Some(dir) = art() else { return };
-    let e = Engine::load(&dir, "mlp_tiny").unwrap();
+    let e = backend("mlp_tiny").expect("mlp backend is always available");
     let params = e.init_params(1);
     // coarse quantizer => large rounding residuals => nonzero d-gradient
     let q = e.init_qparams(&params, 4.0);
     let exp = ExperimentConfig::defaults_for("mlp_tiny");
-    let t = Trainer::new(&dir, exp).unwrap();
+    let t = Trainer::new(&art_dir(), exp).unwrap();
     let idxs: Vec<usize> = (0..t.batch_size()).collect();
     let (x, y) = t.train_data.batch(&idxs);
     let out = e.train_step(&params, &q, &x, &y).unwrap();
@@ -72,12 +78,11 @@ fn gradients_flow_to_quant_params() {
 #[test]
 fn quantizer_bits_change_the_loss() {
     // 2-bit weights must behave differently from 16-bit weights — proves
-    // the fake-quant kernel actually runs inside the artifact.
-    let Some(dir) = art() else { return };
-    let e = Engine::load(&dir, "mlp_tiny").unwrap();
+    // the fake-quant path actually runs inside the backend.
+    let e = backend("mlp_tiny").expect("mlp backend is always available");
     let params = e.init_params(2);
     let exp = ExperimentConfig::defaults_for("mlp_tiny");
-    let t = Trainer::new(&dir, exp).unwrap();
+    let t = Trainer::new(&art_dir(), exp).unwrap();
     let idxs: Vec<usize> = (0..t.batch_size()).collect();
     let (x, y) = t.train_data.batch(&idxs);
     let hi = e.init_qparams(&params, 16.0);
@@ -92,12 +97,11 @@ fn quantizer_bits_change_the_loss() {
 
 #[test]
 fn eval_is_deterministic() {
-    let Some(dir) = art() else { return };
-    let e = Engine::load(&dir, "mlp_tiny").unwrap();
+    let e = backend("mlp_tiny").expect("mlp backend is always available");
     let params = e.init_params(3);
     let q = e.init_qparams(&params, 8.0);
     let exp = ExperimentConfig::defaults_for("mlp_tiny");
-    let t = Trainer::new(&dir, exp).unwrap();
+    let t = Trainer::new(&art_dir(), exp).unwrap();
     let idxs: Vec<usize> = (0..t.batch_size()).collect();
     let (x, y) = t.eval_data.batch(&idxs);
     let a = e.eval_step(&params, &q, &x, &y).unwrap();
@@ -108,29 +112,27 @@ fn eval_is_deterministic() {
 
 #[test]
 fn span_eval_returns_predictions() {
-    let Some(dir) = art() else { return };
-    let e = Engine::load(&dir, "bert_mini").unwrap();
+    let Some(e) = backend("bert_mini") else { return };
     let params = e.init_params(0);
     let q = e.init_qparams(&params, 8.0);
     let exp = ExperimentConfig::defaults_for("bert_mini");
-    let t = Trainer::new(&dir, exp).unwrap();
+    let t = Trainer::new(&art_dir(), exp).unwrap();
     let idxs: Vec<usize> = (0..t.batch_size()).collect();
     let (x, y) = t.eval_data.batch(&idxs);
     let ev = e.eval_step(&params, &q, &x, &y).unwrap();
     assert_eq!(ev.extra.len(), 2); // pred_start, pred_end
     assert_eq!(ev.extra[0].len(), t.batch_size());
-    let seq = e.manifest.config.usize_or("seq_len", 32) as f32;
+    let seq = e.manifest().config.usize_or("seq_len", 32) as f32;
     assert!(ev.extra[0].iter().all(|&p| p >= 0.0 && p < seq));
 }
 
 #[test]
 fn degenerate_qparams_do_not_crash() {
     // pathological quantizers must yield finite losses, not NaNs
-    let Some(dir) = art() else { return };
-    let e = Engine::load(&dir, "mlp_tiny").unwrap();
+    let e = backend("mlp_tiny").expect("mlp backend is always available");
     let params = e.init_params(4);
     let exp = ExperimentConfig::defaults_for("mlp_tiny");
-    let t = Trainer::new(&dir, exp).unwrap();
+    let t = Trainer::new(&art_dir(), exp).unwrap();
     let idxs: Vec<usize> = (0..t.batch_size()).collect();
     let (x, y) = t.train_data.batch(&idxs);
     for q in [
@@ -138,7 +140,7 @@ fn degenerate_qparams_do_not_crash() {
         QParams { d: 10.0, t: 1.0, qm: 1e-3 },
         QParams { d: 0.1, t: 2.0, qm: 4.0 },
     ] {
-        let qs = vec![q; e.manifest.qsites.len()];
+        let qs = vec![q; e.manifest().qsites.len()];
         let out = e.eval_step(&params, &qs, &x, &y).unwrap();
         assert!(out.loss.is_finite(), "{q:?}");
     }

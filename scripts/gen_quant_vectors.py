@@ -1,0 +1,88 @@
+"""Generate the checked-in small golden-vector set for the Rust quantizer.
+
+Numpy float32 mirror of python/compile/kernels/ref.py (the pure-jnp oracle
+for eqs. (1)-(6), (13)-(14)); jnp and numpy agree to float32 precision on
+these elementwise formulas, so this script needs no JAX install. Output is
+committed at rust/tests/data/quant_vectors_small.json and consumed by
+rust/tests/test_quant_vectors.rs whenever `make artifacts` has not produced
+the full artifacts/quant_vectors.json.
+
+Usage: python3 scripts/gen_quant_vectors.py
+"""
+
+import json
+import os
+
+import numpy as np
+
+EPS = np.float32(1e-12)
+
+
+def clip_pow(x, t, qm):
+    ax = np.abs(x)
+    return np.where(ax <= qm, np.power(np.maximum(ax, EPS), t),
+                    np.power(np.maximum(qm, EPS), t)).astype(np.float32)
+
+
+def fake_quant(x, d, t, qm):
+    xt = np.sign(x) * clip_pow(x, t, qm)
+    return (d * np.round(xt / d)).astype(np.float32)
+
+
+def residual(x, d, t, qm):
+    c = clip_pow(x, t, qm)
+    return (np.round(c / d) - c / d).astype(np.float32)
+
+
+def bit_width(d, t, qm):
+    return float(np.log2(np.power(np.maximum(qm, EPS), t) / d + np.float32(1.0)) + np.float32(1.0))
+
+
+def grad_d(x, d, t, qm):
+    return (np.sign(x) * residual(x, d, t, qm)).astype(np.float32)
+
+
+def grad_t(x, d, t, qm):
+    ax = np.abs(x)
+    inside = np.power(np.maximum(ax, EPS), t) * np.log(np.maximum(ax, EPS))
+    outside = np.power(np.maximum(qm, EPS), t) * np.log(np.maximum(qm, EPS))
+    g = np.where(ax <= qm, inside, outside)
+    return (np.sign(x) * np.where(ax <= EPS, np.float32(0.0), g)).astype(np.float32)
+
+
+def grad_qm(x, d, t, qm):
+    ax = np.abs(x)
+    return np.where(ax <= qm, np.float32(0.0),
+                    np.sign(x) * t * np.power(np.maximum(qm, EPS), t - np.float32(1.0))).astype(np.float32)
+
+
+def main():
+    rng = np.random.default_rng(42)
+    cases = []
+    for (d, t, qm) in [(0.1, 1.0, 1.0), (0.05, 1.2, 0.8), (0.02, 0.9, 2.0),
+                       (0.25, 1.0, 0.5), (0.004, 1.05, 1.5)]:
+        d32, t32, qm32 = np.float32(d), np.float32(t), np.float32(qm)
+        x = np.concatenate([
+            rng.normal(scale=0.7, size=24),
+            np.array([0.0, qm, -qm, qm * 1.5, -qm * 2.0, d / 2, -d / 2]),
+        ]).astype(np.float32)
+        cases.append({
+            "d": d, "t": t, "qm": qm,
+            "x": [float(v) for v in x],
+            "xq": [float(v) for v in fake_quant(x, d32, t32, qm32)],
+            "clip": [float(v) for v in clip_pow(x, t32, qm32)],
+            "residual": [float(v) for v in residual(x, d32, t32, qm32)],
+            "grad_d": [float(v) for v in grad_d(x, d32, t32, qm32)],
+            "grad_t": [float(v) for v in grad_t(x, d32, t32, qm32)],
+            "grad_qm": [float(v) for v in grad_qm(x, d32, t32, qm32)],
+            "bit_width": bit_width(d32, t32, qm32),
+        })
+    out = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "data",
+                       "quant_vectors_small.json")
+    with open(out, "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"wrote {len(cases)} vector cases to {os.path.normpath(out)}")
+
+
+if __name__ == "__main__":
+    main()
