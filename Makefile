@@ -15,7 +15,10 @@ artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
 	cd python && python3 -m compile.vectors --out ../artifacts/quant_vectors.json
 
-# regenerate the checked-in golden vectors (numpy only, no JAX)
+# regenerate the checked-in golden vectors (numpy only, no JAX):
+# quant_vectors_small.json (quantizer math) + op_vectors_small.json
+# (conv2d/layernorm/softmax forward+backward for the native interpreter).
+# CI re-runs this and fails on a dirty diff (see .github/workflows/ci.yml).
 vectors:
 	python3 scripts/gen_quant_vectors.py
 

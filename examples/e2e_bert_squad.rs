@@ -21,13 +21,9 @@ fn main() -> anyhow::Result<()> {
     exp.qasso.target_group_sparsity = 0.5;
     exp.n_train = 2048;
     exp.n_eval = 512;
-    let mut t = match Trainer::new(art, exp) {
-        Ok(t) => t,
-        Err(e) => {
-            eprintln!("bert_mini needs AOT artifacts (run `make artifacts`, build with --features pjrt): {e}");
-            return Ok(());
-        }
-    };
+    // bert_mini runs on the native interpreter everywhere (PJRT is used
+    // automatically when artifacts + the pjrt feature are present)
+    let mut t = Trainer::new(art, exp)?;
     t.verbose = true;
     println!(
         "e2e: bert_mini ({} params) on {} synthetic QA examples, {} steps, platform {}",

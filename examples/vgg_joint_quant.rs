@@ -18,13 +18,9 @@ fn main() -> anyhow::Result<()> {
     let mut exp = ExperimentConfig::defaults_for("vgg7_mini");
     exp.scale_steps(0.5);
     exp.qasso.target_group_sparsity = 0.5;
-    let t = match Trainer::new(art, exp) {
-        Ok(t) => t,
-        Err(e) => {
-            eprintln!("vgg7_mini needs AOT artifacts (run `make artifacts`, build with --features pjrt): {e}");
-            return Ok(());
-        }
-    };
+    // vgg7_mini runs on the native interpreter everywhere (PJRT is used
+    // automatically when artifacts + the pjrt feature are present)
+    let t = Trainer::new(art, exp)?;
     let nsites = t.engine.manifest().qsites.len();
     let nact = t
         .engine

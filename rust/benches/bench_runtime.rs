@@ -1,6 +1,8 @@
-//! PJRT step latency per model (train + eval) — the Layer-1/2 runtime
-//! cost that dominates wall clock. Table workloads' steps/s derive from
-//! these numbers.
+//! Backend step latency per model (train + eval) — the runtime cost that
+//! dominates wall clock. Table workloads' steps/s derive from these
+//! numbers. Every zoo family runs on the native interpreter, so all rows
+//! report on any machine; with artifacts + `pjrt` the same rows measure
+//! the compiled-HLO engine instead.
 
 use geta::runtime::Backend as _;
 use geta::config::ExperimentConfig;

@@ -1,11 +1,16 @@
 //! Training coordinator: the Layer-3 event loop.
 //!
 //! A `Trainer` owns an execution backend (PJRT or native — see
-//! `runtime::Backend`), the synthetic dataset and the QASSO optimizer
-//! state and drives the full GETA pipeline:
+//! `runtime::Backend`; the native interpreter serves every zoo family, so
+//! CNN and transformer runs are hermetic), the synthetic dataset and the
+//! QASSO optimizer state and drives the full GETA pipeline:
 //!
 //!   batch -> backend train_step (loss+grads) -> QASSO update ->
 //!   stage transitions -> eval sweeps -> subnet construction -> report.
+//!
+//! Layer costs for BOPs accounting are derived from the lowered program's
+//! real op shapes (`metrics::layer_costs` -> `runtime::lowering`), so the
+//! reported compression always describes the graph the backend executed.
 //!
 //! Baselines (rust/src/baselines/) reuse the same loop through the
 //! `Compressor` trait, so every method in every paper table runs on an

@@ -15,6 +15,7 @@
 use anyhow::Result;
 
 use super::ir::{NodeId, Op, TraceGraph};
+use crate::optim::qasso::SiteSpec;
 use crate::util::json::Json;
 
 /// Build the trace graph for a model config.
@@ -74,6 +75,20 @@ pub fn quant_sites(cfg: &Json) -> Result<Vec<(String, String)>> {
         other => anyhow::bail!("unknown family {other}"),
     }
     Ok(b.qsites)
+}
+
+/// [`quant_sites`] as optimizer `SiteSpec`s — the plan-order site metadata
+/// shared by manifest synthesis (runtime/native.rs), the op lowering
+/// (runtime/lowering.rs) and BOPs accounting (metrics/bops.rs), so all
+/// three index q rows identically.
+pub fn quant_site_specs(cfg: &Json) -> Result<Vec<SiteSpec>> {
+    Ok(quant_sites(cfg)?
+        .into_iter()
+        .map(|(name, kind)| SiteSpec {
+            param: (kind == "weight").then(|| name.clone()),
+            name,
+        })
+        .collect())
 }
 
 struct Builder {

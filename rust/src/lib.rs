@@ -21,12 +21,16 @@
 //! update rule and drives one of two execution backends behind the
 //! `runtime::Backend` trait:
 //!
-//! * **NativeEngine** (always available) — a pure-Rust reference
-//!   forward/backward of the `mlp` family with per-site fake-quantization
-//!   and STE quant-parameter gradients, plus natively synthesized
-//!   manifests for every model config. This is what makes
-//!   `cargo build --release && cargo test -q` hermetic: no Python, JAX or
-//!   XLA anywhere.
+//! * **NativeEngine** (always available) — a pure-Rust manifest-driven op
+//!   interpreter covering every zoo family: each config lowers to a typed
+//!   op IR (runtime/lowering.rs — linear, conv-as-im2col, batch/layer
+//!   norm, residual add, multi-head attention, gelu/relu, patch
+//!   embed/merge, pooling) executed forward + backward with per-site
+//!   fake-quantization and STE quant-parameter gradients
+//!   (runtime/interp.rs), plus natively synthesized manifests for every
+//!   model config. This is what makes
+//!   `cargo build --release && cargo test -q` hermetic — CNN and
+//!   transformer e2e runs included: no Python, JAX or XLA anywhere.
 //! * **PJRT engine** (`--features pjrt`) — loads the AOT artifacts
 //!   produced by `make artifacts` and executes the compiled HLO of all
 //!   nine zoo models. The `xla` dependency defaults to a vendored stub;

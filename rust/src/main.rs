@@ -28,6 +28,9 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&a),
         Some("repro") => cmd_repro(&a),
         Some("bench") => cmd_bench(&a),
+        // `geta --model <name> [...]` without a subcommand means train: the
+        // common quick-run spelling (`cargo run -- --model resnet_mini`)
+        None if a.opt("model").is_some() => cmd_train(&a),
         _ => {
             println!(
                 "geta — joint structured pruning + quantization-aware training\n\n\

@@ -25,154 +25,14 @@ pub struct LayerCost {
     pub act_in_site: Option<String>,
 }
 
-/// Derive per-layer MAC counts from a model config (mirrors the builders'
-/// spatial bookkeeping; embedding lookups are excluded — they are not
-/// multiply ops).
+/// Derive per-layer MAC counts from a model config. Costs come from the
+/// native lowering's real op shapes (`runtime::lowering::layer_costs`):
+/// conv MACs use the interpreter's spatial output dims and linear MACs the
+/// true token counts, so BOPs accounting can never drift from what the
+/// engine actually executes. Embedding lookups are excluded — they are
+/// not multiply ops.
 pub fn layer_costs(cfg: &Json) -> Result<Vec<LayerCost>> {
-    let fam = cfg.req("family")?.as_str().unwrap_or_default();
-    let mut out = Vec::new();
-    let img_size = cfg
-        .get("image")
-        .map(|i| i.usize_or("size", 16))
-        .unwrap_or(16);
-    let img_ch = cfg
-        .get("image")
-        .map(|i| i.usize_or("channels", 3))
-        .unwrap_or(3);
-    let ncls = cfg.usize_or("num_classes", 10);
-    let mut push = |name: &str, macs: f64, cin: usize, cout: usize, act: Option<String>| {
-        out.push(LayerCost {
-            param: format!("{name}.weight"),
-            macs,
-            cin,
-            cout,
-            act_in_site: act,
-        });
-    };
-    match fam {
-        "mlp" => {
-            let mut din = img_size * img_size * img_ch;
-            let hidden = cfg.usize_arr("hidden");
-            let mut act: Option<String> = None;
-            for (i, &dout) in hidden.iter().enumerate() {
-                push(&format!("fc{i}"), (din * dout) as f64, din, dout, act.clone());
-                act = Some(format!("fc{i}.act"));
-                din = dout;
-            }
-            push("head", (din * ncls) as f64, din, ncls, act);
-        }
-        "vgg" => {
-            let channels = cfg.usize_arr("conv_channels");
-            let pool_every = cfg.usize_or("pool_every", 2);
-            let mut size = img_size;
-            let mut cin = img_ch;
-            let mut act: Option<String> = None;
-            for (i, &cout) in channels.iter().enumerate() {
-                let macs = (size * size * 9 * cin * cout) as f64;
-                push(&format!("features.{i}"), macs, cin, cout, act.clone());
-                act = Some(format!("features.{i}.act"));
-                if (i + 1) % pool_every == 0 {
-                    size /= 2;
-                }
-                cin = cout;
-            }
-            let mut din = cin * size * size;
-            for (i, &dout) in cfg.usize_arr("fc_dims").iter().enumerate() {
-                push(&format!("fc{i}"), (din * dout) as f64, din, dout, act.clone());
-                act = Some(format!("fc{i}.act"));
-                din = dout;
-            }
-            push("head", (din * ncls) as f64, din, ncls, act);
-        }
-        "resnet" => {
-            let stem_c = cfg.usize_or("stem_channels", 8);
-            let stages = cfg.usize_arr("stage_channels");
-            let blocks = cfg.usize_or("blocks_per_stage", 2);
-            let mut size = img_size;
-            push("stem", (size * size * 9 * img_ch * stem_c) as f64, img_ch, stem_c, None);
-            let mut cin = stem_c;
-            for (si, &cout) in stages.iter().enumerate() {
-                if si > 0 {
-                    size /= 2; // stage-entry stride
-                }
-                for b in 0..blocks {
-                    let n = format!("stage{si}.{b}");
-                    push(&format!("{n}.conv1"), (size * size * 9 * cin * cout) as f64, cin, cout, None);
-                    push(&format!("{n}.conv2"), (size * size * 9 * cout * cout) as f64, cout, cout, None);
-                    if b == 0 && (si > 0 || cin != cout) {
-                        push(&format!("{n}.proj"), (size * size * cin * cout) as f64, cin, cout, None);
-                    }
-                    cin = cout;
-                }
-            }
-            push("head", (cin * ncls) as f64, cin, ncls, None);
-        }
-        "bert" | "gpt" => {
-            let dim = cfg.usize_or("dim", 64);
-            let s = cfg.usize_or("seq_len", 32);
-            let blocks = cfg.usize_or("blocks", 2);
-            let ratio = cfg.usize_or("mlp_ratio", 4);
-            for b in 0..blocks {
-                for p in ["wq", "wk", "wv", "wo"] {
-                    push(&format!("block{b}.attn.{p}"), (s * dim * dim) as f64, dim, dim, None);
-                }
-                push(&format!("block{b}.fc1"), (s * dim * dim * ratio) as f64, dim, dim * ratio, None);
-                push(&format!("block{b}.fc2"), (s * dim * ratio * dim) as f64, dim * ratio, dim, None);
-            }
-            if fam == "bert" {
-                push("span_head", (s * dim * 2) as f64, dim, 2, None);
-            } else {
-                let vocab = cfg.usize_or("vocab", 128);
-                push("lm_head", (s * dim * vocab) as f64, dim, vocab, None);
-            }
-        }
-        "vit" => {
-            let dim = cfg.usize_or("dim", 48);
-            let patch = cfg.usize_or("patch", 4);
-            let blocks = cfg.usize_or("blocks", 2);
-            let ratio = cfg.usize_or("mlp_ratio", 4);
-            let grid = img_size / patch;
-            let mut t = grid * grid;
-            push("patch_embed", (t * patch * patch * img_ch * dim) as f64, img_ch, dim, None);
-            if cfg.str_or("pool", "cls") == "cls" {
-                t += 1;
-            }
-            for b in 0..blocks {
-                for p in ["wq", "wk", "wv", "wo"] {
-                    push(&format!("block{b}.attn.{p}"), (t * dim * dim) as f64, dim, dim, None);
-                }
-                push(&format!("block{b}.fc1"), (t * dim * dim * ratio) as f64, dim, dim * ratio, None);
-                push(&format!("block{b}.fc2"), (t * dim * ratio * dim) as f64, dim * ratio, dim, None);
-            }
-            push("head", (dim * ncls) as f64, dim, ncls, None);
-        }
-        "swin" => {
-            let dims = cfg.usize_arr("stage_dims");
-            let stage_blocks = cfg.usize_arr("stage_blocks");
-            let patch = cfg.usize_or("patch", 2);
-            let ratio = cfg.usize_or("mlp_ratio", 2);
-            let mut side = img_size / patch;
-            push("patch_embed", (side * side * patch * patch * img_ch * dims[0]) as f64, img_ch, dims[0], None);
-            for (si, &dim) in dims.iter().enumerate() {
-                let t = side * side;
-                for b in 0..stage_blocks[si] {
-                    let n = format!("stage{si}.block{b}");
-                    for p in ["wq", "wk", "wv", "wo"] {
-                        push(&format!("{n}.attn.{p}"), (t * dim * dim) as f64, dim, dim, None);
-                    }
-                    push(&format!("{n}.fc1"), (t * dim * dim * ratio) as f64, dim, dim * ratio, None);
-                    push(&format!("{n}.fc2"), (t * dim * ratio * dim) as f64, dim * ratio, dim, None);
-                }
-                if si + 1 < dims.len() {
-                    side /= 2;
-                    push(&format!("merge{si}"), (side * side * dim * 4 * dims[si + 1]) as f64, dim * 4, dims[si + 1], None);
-                }
-            }
-            push("head", (dims[dims.len() - 1] * ncls) as f64, dims[dims.len() - 1], ncls, None);
-        }
-        other => anyhow::bail!("unknown family {other}"),
-    }
-    Ok(out)
+    crate::runtime::lowering::layer_costs(cfg)
 }
 
 #[derive(Debug, Clone)]
@@ -297,5 +157,34 @@ mod tests {
         let costs = layer_costs(&cfg("vgg7_mini")).unwrap();
         let c0 = &costs[0]; // 16x16 * 9 * 3 * 16
         assert_eq!(c0.macs, (16 * 16 * 9 * 3 * 16) as f64);
+    }
+
+    #[test]
+    fn resnet_and_vit_totals_pinned() {
+        // Regression pins for the interpreter-shape-derived MAC totals.
+        // resnet_mini, by hand from the lowered shapes: stem 16x16x9x3x8;
+        // stage0 4 convs at 16x16 (8->8); stage1/2 strided entry blocks
+        // with 1x1 projections at 8x8 / 4x4; head 32x10.
+        let costs = layer_costs(&cfg("resnet_mini")).unwrap();
+        let total: f64 = costs.iter().map(|c| c.macs).sum();
+        assert_eq!(total, 1_694_016.0);
+        // conv1 of the strided stage-1 entry block runs at 8x8 output
+        let c = costs.iter().find(|c| c.param == "stage1.0.conv1.weight").unwrap();
+        assert_eq!(c.macs, (8 * 8 * 9 * 8 * 16) as f64);
+        // its 1x1 projection too
+        let p = costs.iter().find(|c| c.param == "stage1.0.proj.weight").unwrap();
+        assert_eq!(p.macs, (8 * 8 * 8 * 16) as f64);
+
+        // vit_mini: patch embed over the 4x4 grid (16 tokens), blocks over
+        // 17 tokens (grid + cls), head after pooling (1 token).
+        let costs = layer_costs(&cfg("vit_mini")).unwrap();
+        let total: f64 = costs.iter().map(|c| c.macs).sum();
+        assert_eq!(total, 977_376.0);
+        let pe = costs.iter().find(|c| c.param == "patch_embed.weight").unwrap();
+        assert_eq!(pe.macs, (16 * 4 * 4 * 3 * 48) as f64);
+        let wq = costs.iter().find(|c| c.param == "block0.attn.wq.weight").unwrap();
+        assert_eq!(wq.macs, (17 * 48 * 48) as f64);
+        let head = costs.iter().find(|c| c.param == "head.weight").unwrap();
+        assert_eq!(head.macs, (48 * 10) as f64);
     }
 }

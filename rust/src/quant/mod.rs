@@ -233,6 +233,70 @@ mod tests {
     }
 
     #[test]
+    fn prop_ste_gradients_match_finite_differences() {
+        // The STE gradients are the derivatives of the *smoothed* quantizer
+        // map (round treated as identity). Central differences with a probe
+        // h spanning many rounding steps (h >> d) average the staircase
+        // out, so they recover exactly those smoothed slopes:
+        //  - d x^Q / dt  -> eq. (5), the smoothed sgn(x)·clip^t·ln-slope
+        //  - d x^Q / dqm -> eq. (6) outside the clip range
+        //  - d x^Q / dx  -> the clipped pass-through (1 inside, 0 outside)
+        //    at t = 1, the regime the backward pass's STE mask models.
+        // Probes within 2h of the clip boundary or near 0 (where the power
+        // map is non-smooth) are regenerated away by construction.
+        crate::util::prop::check(
+            60,
+            |g| {
+                (
+                    g.f32_in(1e-4, 1e-3), // d: fine grid, h/d >= 50
+                    g.f32_in(0.8, 1.3),   // t
+                    g.f32_in(0.5, 2.0),   // qm
+                    g.f32_in(-3.0, 3.0),  // x
+                )
+            },
+            |(d, t, qm, x)| {
+                let (d, t, qm, x) = (*d, *t, *qm, *x);
+                let h = 0.05f32;
+                if (x.abs() - qm).abs() < 2.0 * h || x.abs() < 0.2 {
+                    return Ok(()); // boundary/origin: STE legitimately differs
+                }
+                let qp = q(d, t, qm);
+                // eq. (5) vs fd over t
+                let fd_t = (fake_quant(x, &q(d, t + h, qm)) - fake_quant(x, &q(d, t - h, qm)))
+                    / (2.0 * h);
+                let gt = grad_t(x, &qp);
+                if (fd_t - gt).abs() > 0.05 + 0.05 * gt.abs() {
+                    return Err(format!("grad_t: analytic {gt} vs fd {fd_t}"));
+                }
+                // eq. (6) vs fd over qm (only bites outside the clip range;
+                // keep the whole probe outside it)
+                if x.abs() > qm + 2.0 * h {
+                    let fd_qm = (fake_quant(x, &q(d, t, qm + h)) - fake_quant(x, &q(d, t, qm - h)))
+                        / (2.0 * h);
+                    let gqm = grad_qm(x, &qp);
+                    if (fd_qm - gqm).abs() > 0.05 + 0.05 * gqm.abs() {
+                        return Err(format!("grad_qm: analytic {gqm} vs fd {fd_qm}"));
+                    }
+                }
+                // clipped pass-through vs fd over x at t = 1
+                let qp1 = q(d, 1.0, qm);
+                let fd_x = (fake_quant(x + h, &qp1) - fake_quant(x - h, &qp1)) / (2.0 * h);
+                let want = if x.abs() + h < qm {
+                    1.0
+                } else if x.abs() - h > qm {
+                    0.0
+                } else {
+                    return Ok(()); // probe straddles the boundary
+                };
+                if (fd_x - want).abs() > 0.05 {
+                    return Err(format!("ste dx: want {want} vs fd {fd_x}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn prop_projection_keeps_bits_in_bounds_under_drift() {
         // simulate the joint stage: random SGD-style drift on (d, t, q_m)
         // followed by the PPSG projection must keep eq. (3) inside

@@ -1,0 +1,1116 @@
+//! Generic executor for lowered programs (`runtime/lowering.rs`): forward
+//! + backward over the typed op IR with per-site fake-quantization.
+//!
+//! The contract matches the PJRT engine exactly: weights are fake-quantized
+//! at their sites on the forward pass, activation sites quantize in place,
+//! and the backward pass produces clipped-STE parameter gradients plus the
+//! eq. (4)-(6) scalar (d, t, q_m) gradients per site. Losses are the zoo's
+//! task heads: softmax cross-entropy (image_cls), start+end span
+//! cross-entropy (span_qa, python `bert_loss`) and masked next-token
+//! cross-entropy (lm, python `lm_loss`).
+//!
+//! Numeric conventions: f32 storage, f64 accumulation in every contraction
+//! (see `tensor/ops.rs`), so results are deterministic and stable at the
+//! im2col row counts the conv families produce.
+
+use anyhow::{Context, Result};
+
+use super::lowering::{OpKind, Program};
+use super::HostArray;
+use crate::quant::{self, QParams};
+use crate::tensor::{
+    self, batchnorm_bwd_rows, batchnorm_rows, col2im, gelu, gelu_grad, im2col,
+    layernorm_bwd_rows, layernorm_rows, matmul, matmul_nt, matmul_tn, softmax_bwd_rows,
+    softmax_rows, NormAux, ParamStore,
+};
+
+const NORM_EPS: f32 = 1e-5;
+
+/// Everything one interpreter pass produces. `grads` is present only for
+/// training passes; `extra` only for eval passes (task-dependent outputs
+/// after loss+metric, in manifest `eval_outputs` order).
+pub struct RunOut {
+    pub loss: f32,
+    pub metric: f32,
+    pub extra: Vec<Vec<f32>>,
+    pub grads: Option<(ParamStore, Vec<(f32, f32, f32)>)>,
+}
+
+/// Per-node saved forward state the backward pass consumes. Eval passes
+/// (`with_grads = false`) retain none of it.
+enum Aux {
+    None,
+    /// The fake-quantized weight that was multiplied (None when the weight
+    /// has no quant site — the backward pass then reads the raw parameter).
+    W(Option<Vec<f32>>),
+    Norm(NormAux),
+    /// Attention probabilities `[B * heads * S * S]`.
+    Att(Vec<f32>),
+    /// Max-pool argmax: flat input index per output element.
+    Pool(Vec<usize>),
+}
+
+fn tensor_data<'a>(params: &'a ParamStore, name: &str) -> Result<&'a [f32]> {
+    params
+        .get(name)
+        .map(|t| t.data.as_slice())
+        .with_context(|| format!("missing parameter `{name}`"))
+}
+
+/// Fake-quantize a weight at its site; None when the site is absent (the
+/// raw parameter is used directly, no copy).
+fn quantized_weight(raw: &[f32], site: Option<usize>, q: &[QParams]) -> Option<Vec<f32>> {
+    site.map(|s| raw.iter().map(|&v| quant::fake_quant(v, &q[s])).collect())
+}
+
+/// Accumulate eq. (4)-(6) site gradients from `values` (the quantizer
+/// inputs) against `g` (the cotangent of the quantizer output), then apply
+/// the clipped STE: zero the pass-through gradient outside the clip range.
+fn ste_site_backward(values: &[f32], g: &mut [f32], qp: &QParams, acc: &mut (f32, f32, f32)) {
+    debug_assert_eq!(values.len(), g.len());
+    let (mut gd, mut gt, mut gqm) = (0.0f64, 0.0f64, 0.0f64);
+    for (i, &v) in values.iter().enumerate() {
+        let gi = g[i];
+        gd += (gi * quant::grad_d(v, qp)) as f64;
+        gt += (gi * quant::grad_t(v, qp)) as f64;
+        gqm += (gi * quant::grad_qm(v, qp)) as f64;
+        if v.abs() > qp.qm {
+            g[i] = 0.0;
+        }
+    }
+    acc.0 += gd as f32;
+    acc.1 += gt as f32;
+    acc.2 += gqm as f32;
+}
+
+/// Execute one batch through `prog`. `n_sites` sizes the qgrad vector
+/// (= manifest qsites count; every node site index lies below it).
+pub fn run(
+    prog: &Program,
+    n_sites: usize,
+    params: &ParamStore,
+    q: &[QParams],
+    x: &HostArray,
+    y: &HostArray,
+    with_grads: bool,
+) -> Result<RunOut> {
+    anyhow::ensure!(q.len() == n_sites, "qparam count mismatch: {} vs {n_sites}", q.len());
+    let nodes = &prog.nodes;
+    let mut vals: Vec<Vec<f32>> = Vec::with_capacity(nodes.len());
+    let mut aux: Vec<Aux> = Vec::with_capacity(nodes.len());
+
+    let xi32: Option<&Vec<i32>> = match x {
+        HostArray::I32(v) => Some(v),
+        HostArray::F32(_) => None,
+    };
+
+    // ------------------------------------------------------------ forward
+    for node in nodes.iter() {
+        let numel: usize = node.shape.iter().product();
+        let in_shape = |k: usize| -> &Vec<usize> { &nodes[node.inputs[k]].shape };
+        let (out, ax): (Vec<f32>, Aux) = match &node.op {
+            OpKind::Input => {
+                let HostArray::F32(xv) = x else {
+                    anyhow::bail!("image task expects f32 inputs")
+                };
+                anyhow::ensure!(xv.len() == numel, "input batch size mismatch");
+                (xv.clone(), Aux::None)
+            }
+            OpKind::Embed { tok, pos } => {
+                let toks = xi32.context("token task expects i32 inputs")?;
+                let (bsz, seq, dim) = (node.shape[0], node.shape[1], node.shape[2]);
+                anyhow::ensure!(toks.len() == bsz * seq, "token batch size mismatch");
+                let tokw = tensor_data(params, tok)?;
+                let posw = tensor_data(params, pos)?;
+                let vocab = tokw.len() / dim;
+                let mut out = vec![0.0f32; numel];
+                for b in 0..bsz {
+                    for s in 0..seq {
+                        let id = toks[b * seq + s];
+                        anyhow::ensure!(
+                            (0..vocab as i32).contains(&id),
+                            "token id {id} outside vocab {vocab}"
+                        );
+                        let dst = &mut out[(b * seq + s) * dim..(b * seq + s + 1) * dim];
+                        dst.copy_from_slice(&tokw[id as usize * dim..(id as usize + 1) * dim]);
+                        tensor::axpy(1.0, &posw[s * dim..(s + 1) * dim], dst);
+                    }
+                }
+                (out, Aux::None)
+            }
+            OpKind::Linear { w, site } => {
+                let raw = tensor_data(params, &format!("{w}.weight"))?;
+                let bias = tensor_data(params, &format!("{w}.bias"))?;
+                let wqo = quantized_weight(raw, *site, q);
+                let wq: &[f32] = wqo.as_deref().unwrap_or(raw);
+                let din = *in_shape(0).last().unwrap();
+                let dout = *node.shape.last().unwrap();
+                let rows = numel / dout;
+                let mut out = matmul(&vals[node.inputs[0]], wq, rows, din, dout);
+                for r in 0..rows {
+                    tensor::axpy(1.0, bias, &mut out[r * dout..(r + 1) * dout]);
+                }
+                (out, Aux::W(wqo))
+            }
+            OpKind::Conv2d { w, site, k, stride, pad } => {
+                let raw = tensor_data(params, &format!("{w}.weight"))?;
+                let bias = tensor_data(params, &format!("{w}.bias"))?;
+                let wqo = quantized_weight(raw, *site, q);
+                let wq: &[f32] = wqo.as_deref().unwrap_or(raw);
+                let is = in_shape(0);
+                let (bsz, h, wd, cin) = (is[0], is[1], is[2], is[3]);
+                let (ho, wo, cout) = (node.shape[1], node.shape[2], node.shape[3]);
+                let cols = im2col(&vals[node.inputs[0]], bsz, h, wd, cin, *k, *stride, *pad, ho, wo);
+                let rows = bsz * ho * wo;
+                let mut out = matmul(&cols, wq, rows, k * k * cin, cout);
+                for r in 0..rows {
+                    tensor::axpy(1.0, bias, &mut out[r * cout..(r + 1) * cout]);
+                }
+                (out, Aux::W(wqo))
+            }
+            OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
+                let gamma = tensor_data(params, &format!("{p}.gamma"))?;
+                let beta = tensor_data(params, &format!("{p}.beta"))?;
+                let c = *node.shape.last().unwrap();
+                let rows = numel / c;
+                let (out, na) = if matches!(node.op, OpKind::BatchNorm { .. }) {
+                    batchnorm_rows(&vals[node.inputs[0]], gamma, beta, rows, c, NORM_EPS)
+                } else {
+                    layernorm_rows(&vals[node.inputs[0]], gamma, beta, rows, c, NORM_EPS)
+                };
+                (out, Aux::Norm(na))
+            }
+            OpKind::Relu => (
+                vals[node.inputs[0]].iter().map(|&v| v.max(0.0)).collect(),
+                Aux::None,
+            ),
+            OpKind::Gelu => (
+                vals[node.inputs[0]].iter().map(|&v| gelu(v)).collect(),
+                Aux::None,
+            ),
+            OpKind::ActQuant { site } => (
+                vals[node.inputs[0]]
+                    .iter()
+                    .map(|&v| quant::fake_quant(v, &q[*site]))
+                    .collect(),
+                Aux::None,
+            ),
+            OpKind::Add => {
+                let mut out = vals[node.inputs[0]].clone();
+                tensor::axpy(1.0, &vals[node.inputs[1]], &mut out);
+                (out, Aux::None)
+            }
+            OpKind::MaxPool2 => {
+                let is = in_shape(0);
+                let (bsz, h, wd, c) = (is[0], is[1], is[2], is[3]);
+                let (ho, wo) = (node.shape[1], node.shape[2]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = vec![0.0f32; numel];
+                let mut arg = vec![0usize; numel];
+                for b in 0..bsz {
+                    for oh in 0..ho {
+                        for ow in 0..wo {
+                            for ch in 0..c {
+                                let mut best = f32::NEG_INFINITY;
+                                let mut best_i = 0usize;
+                                for dh in 0..2 {
+                                    for dw in 0..2 {
+                                        let idx =
+                                            ((b * h + oh * 2 + dh) * wd + ow * 2 + dw) * c + ch;
+                                        if xin[idx] > best {
+                                            best = xin[idx];
+                                            best_i = idx;
+                                        }
+                                    }
+                                }
+                                let o = ((b * ho + oh) * wo + ow) * c + ch;
+                                out[o] = best;
+                                arg[o] = best_i;
+                            }
+                        }
+                    }
+                }
+                (out, Aux::Pool(arg))
+            }
+            OpKind::GlobalAvgPool => {
+                let is = in_shape(0);
+                let (bsz, h, wd, c) = (is[0], is[1], is[2], is[3]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = vec![0.0f32; bsz * c];
+                for b in 0..bsz {
+                    for pix in 0..h * wd {
+                        tensor::axpy(
+                            1.0,
+                            &xin[(b * h * wd + pix) * c..(b * h * wd + pix + 1) * c],
+                            &mut out[b * c..(b + 1) * c],
+                        );
+                    }
+                }
+                let scale = 1.0 / (h * wd) as f32;
+                for v in out.iter_mut() {
+                    *v *= scale;
+                }
+                (out, Aux::None)
+            }
+            OpKind::Reshape => (vals[node.inputs[0]].clone(), Aux::None),
+            OpKind::ConcatCls { cls } => {
+                let clsw = tensor_data(params, cls)?;
+                let (bsz, t1, dim) = (node.shape[0], node.shape[1], node.shape[2]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = vec![0.0f32; numel];
+                for b in 0..bsz {
+                    out[b * t1 * dim..b * t1 * dim + dim].copy_from_slice(clsw);
+                    out[b * t1 * dim + dim..(b + 1) * t1 * dim]
+                        .copy_from_slice(&xin[b * (t1 - 1) * dim..(b + 1) * (t1 - 1) * dim]);
+                }
+                (out, Aux::None)
+            }
+            OpKind::AddPos { pos } => {
+                let posw = tensor_data(params, pos)?;
+                let (bsz, rest) = (node.shape[0], numel / node.shape[0]);
+                anyhow::ensure!(posw.len() == rest, "pos table size mismatch");
+                let mut out = vals[node.inputs[0]].clone();
+                for b in 0..bsz {
+                    tensor::axpy(1.0, posw, &mut out[b * rest..(b + 1) * rest]);
+                }
+                (out, Aux::None)
+            }
+            OpKind::Attention { heads, causal } => {
+                let (bsz, s, d) = (node.shape[0], node.shape[1], node.shape[2]);
+                let hd = d / heads;
+                let scale = 1.0 / (hd as f32).sqrt();
+                let (qv, kv, vv) = (
+                    &vals[node.inputs[0]],
+                    &vals[node.inputs[1]],
+                    &vals[node.inputs[2]],
+                );
+                let mut out = vec![0.0f32; numel];
+                let mut probs = vec![0.0f32; bsz * heads * s * s];
+                let mut qh = vec![0.0f32; s * hd];
+                let mut kh = vec![0.0f32; s * hd];
+                let mut vh = vec![0.0f32; s * hd];
+                for b in 0..bsz {
+                    for head in 0..*heads {
+                        let off = head * hd;
+                        for t in 0..s {
+                            let src = (b * s + t) * d + off;
+                            qh[t * hd..(t + 1) * hd].copy_from_slice(&qv[src..src + hd]);
+                            kh[t * hd..(t + 1) * hd].copy_from_slice(&kv[src..src + hd]);
+                            vh[t * hd..(t + 1) * hd].copy_from_slice(&vv[src..src + hd]);
+                        }
+                        let mut att = matmul_nt(&qh, &kh, s, hd, s);
+                        for v in att.iter_mut() {
+                            *v *= scale;
+                        }
+                        if *causal {
+                            for i in 0..s {
+                                for j in i + 1..s {
+                                    att[i * s + j] = -1e9;
+                                }
+                            }
+                        }
+                        softmax_rows(&mut att, s, s);
+                        let yh = matmul(&att, &vh, s, s, hd);
+                        let pdst = (b * heads + head) * s * s;
+                        probs[pdst..pdst + s * s].copy_from_slice(&att);
+                        for t in 0..s {
+                            let dst = (b * s + t) * d + off;
+                            out[dst..dst + hd].copy_from_slice(&yh[t * hd..(t + 1) * hd]);
+                        }
+                    }
+                }
+                (out, Aux::Att(probs))
+            }
+            OpKind::PatchMerge { side } => {
+                let (bsz, dim4) = (node.shape[0], node.shape[2]);
+                let dim = dim4 / 4;
+                let half = side / 2;
+                let xin = &vals[node.inputs[0]];
+                let mut out = vec![0.0f32; numel];
+                for b in 0..bsz {
+                    for i in 0..half {
+                        for j in 0..half {
+                            let o = (b * half * half + i * half + j) * dim4;
+                            for (slot, (di, dj)) in
+                                [(0, 0), (1, 0), (0, 1), (1, 1)].iter().enumerate()
+                            {
+                                let src =
+                                    (b * side * side + (2 * i + di) * side + (2 * j + dj)) * dim;
+                                out[o + slot * dim..o + (slot + 1) * dim]
+                                    .copy_from_slice(&xin[src..src + dim]);
+                            }
+                        }
+                    }
+                }
+                (out, Aux::None)
+            }
+            OpKind::TokenPoolCls => {
+                let is = in_shape(0);
+                let (bsz, t, dim) = (is[0], is[1], is[2]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = vec![0.0f32; bsz * dim];
+                for b in 0..bsz {
+                    out[b * dim..(b + 1) * dim]
+                        .copy_from_slice(&xin[b * t * dim..b * t * dim + dim]);
+                }
+                (out, Aux::None)
+            }
+            OpKind::TokenPoolMean => {
+                let is = in_shape(0);
+                let (bsz, t, dim) = (is[0], is[1], is[2]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = vec![0.0f32; bsz * dim];
+                for b in 0..bsz {
+                    for tok in 0..t {
+                        tensor::axpy(
+                            1.0,
+                            &xin[(b * t + tok) * dim..(b * t + tok + 1) * dim],
+                            &mut out[b * dim..(b + 1) * dim],
+                        );
+                    }
+                }
+                let scale = 1.0 / t as f32;
+                for v in out.iter_mut() {
+                    *v *= scale;
+                }
+                (out, Aux::None)
+            }
+        };
+        debug_assert_eq!(out.len(), numel, "{}: shape/val mismatch", node.name);
+        vals.push(out);
+        // eval passes never run backward: drop the saved state immediately
+        aux.push(if with_grads { ax } else { Aux::None });
+    }
+
+    // --------------------------------------------------------- loss heads
+    let out_id = prog.output();
+    let logits = &vals[out_id];
+    let out_shape = &nodes[out_id].shape;
+    let (loss, metric, extra, mut out_cot) = match prog.task.as_str() {
+        "image_cls" => image_loss(logits, out_shape, y, with_grads)?,
+        "span_qa" => span_loss(logits, out_shape, y, with_grads)?,
+        "lm" => lm_loss(logits, out_shape, y, with_grads)?,
+        other => anyhow::bail!("unknown task `{other}`"),
+    };
+    if !with_grads {
+        return Ok(RunOut {
+            loss,
+            metric,
+            extra,
+            grads: None,
+        });
+    }
+
+    // ----------------------------------------------------------- backward
+    let mut grads = params.zeros_like();
+    let mut qgrads = vec![(0.0f32, 0.0f32, 0.0f32); n_sites];
+    let mut cots: Vec<Vec<f32>> = (0..nodes.len()).map(|_| Vec::new()).collect();
+    cots[out_id] = out_cot.take().expect("training pass produced a cotangent");
+
+    for i in (0..nodes.len()).rev() {
+        let cot = std::mem::take(&mut cots[i]);
+        if cot.is_empty() {
+            continue;
+        }
+        let node = &nodes[i];
+        // accumulate into an input's cotangent buffer
+        macro_rules! acc {
+            ($j:expr, $g:expr) => {{
+                let j: usize = $j;
+                let g: Vec<f32> = $g;
+                if cots[j].is_empty() {
+                    cots[j] = g;
+                } else {
+                    tensor::axpy(1.0, &g, &mut cots[j]);
+                }
+            }};
+        }
+        match &node.op {
+            OpKind::Input => {}
+            OpKind::Embed { tok, pos } => {
+                let toks = xi32.context("token task expects i32 inputs")?;
+                let (bsz, seq, dim) = (node.shape[0], node.shape[1], node.shape[2]);
+                let gtok = &mut grads
+                    .get_mut(tok)
+                    .with_context(|| format!("grad store missing {tok}"))?
+                    .data;
+                for b in 0..bsz {
+                    for s in 0..seq {
+                        let id = toks[b * seq + s] as usize;
+                        tensor::axpy(
+                            1.0,
+                            &cot[(b * seq + s) * dim..(b * seq + s + 1) * dim],
+                            &mut gtok[id * dim..(id + 1) * dim],
+                        );
+                    }
+                }
+                let gpos = &mut grads
+                    .get_mut(pos)
+                    .with_context(|| format!("grad store missing {pos}"))?
+                    .data;
+                for b in 0..bsz {
+                    tensor::axpy(1.0, &cot[b * seq * dim..(b + 1) * seq * dim], gpos);
+                }
+            }
+            OpKind::Linear { w, site } => {
+                let Aux::W(wqo) = &aux[i] else { unreachable!() };
+                let raw = tensor_data(params, &format!("{w}.weight"))?;
+                let wq: &[f32] = wqo.as_deref().unwrap_or(raw);
+                let din = *nodes[node.inputs[0]].shape.last().unwrap();
+                let dout = *node.shape.last().unwrap();
+                let rows = cot.len() / dout;
+                let xin = &vals[node.inputs[0]];
+                let mut gw = matmul_tn(xin, &cot, rows, din, dout);
+                if let Some(s) = site {
+                    ste_site_backward(raw, &mut gw, &q[*s], &mut qgrads[*s]);
+                }
+                tensor::axpy(
+                    1.0,
+                    &gw,
+                    &mut grads
+                        .get_mut(&format!("{w}.weight"))
+                        .with_context(|| format!("grad store missing {w}.weight"))?
+                        .data,
+                );
+                let gb = &mut grads
+                    .get_mut(&format!("{w}.bias"))
+                    .with_context(|| format!("grad store missing {w}.bias"))?
+                    .data;
+                for r in 0..rows {
+                    tensor::axpy(1.0, &cot[r * dout..(r + 1) * dout], gb);
+                }
+                acc!(node.inputs[0], matmul_nt(&cot, wq, rows, dout, din));
+            }
+            OpKind::Conv2d { w, site, k, stride, pad } => {
+                let Aux::W(wqo) = &aux[i] else { unreachable!() };
+                let raw = tensor_data(params, &format!("{w}.weight"))?;
+                let wq: &[f32] = wqo.as_deref().unwrap_or(raw);
+                let is = &nodes[node.inputs[0]].shape;
+                let (bsz, h, wd, cin) = (is[0], is[1], is[2], is[3]);
+                let (ho, wo, cout) = (node.shape[1], node.shape[2], node.shape[3]);
+                let rows = bsz * ho * wo;
+                let kkc = k * k * cin;
+                // cols are recomputed rather than kept from the forward:
+                // one im2col is far cheaper than holding every conv's
+                // column matrix across the whole step
+                let cols =
+                    im2col(&vals[node.inputs[0]], bsz, h, wd, cin, *k, *stride, *pad, ho, wo);
+                let mut gw = matmul_tn(&cols, &cot, rows, kkc, cout);
+                if let Some(s) = site {
+                    ste_site_backward(raw, &mut gw, &q[*s], &mut qgrads[*s]);
+                }
+                tensor::axpy(
+                    1.0,
+                    &gw,
+                    &mut grads
+                        .get_mut(&format!("{w}.weight"))
+                        .with_context(|| format!("grad store missing {w}.weight"))?
+                        .data,
+                );
+                let gb = &mut grads
+                    .get_mut(&format!("{w}.bias"))
+                    .with_context(|| format!("grad store missing {w}.bias"))?
+                    .data;
+                for r in 0..rows {
+                    tensor::axpy(1.0, &cot[r * cout..(r + 1) * cout], gb);
+                }
+                let gcols = matmul_nt(&cot, wq, rows, cout, kkc);
+                acc!(
+                    node.inputs[0],
+                    col2im(&gcols, bsz, h, wd, cin, *k, *stride, *pad, ho, wo)
+                );
+            }
+            OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
+                let Aux::Norm(na) = &aux[i] else { unreachable!() };
+                let gamma = tensor_data(params, &format!("{p}.gamma"))?;
+                let c = *node.shape.last().unwrap();
+                let rows = cot.len() / c;
+                let (gx, gg, gb) = if matches!(node.op, OpKind::BatchNorm { .. }) {
+                    batchnorm_bwd_rows(gamma, &cot, na, rows, c)
+                } else {
+                    layernorm_bwd_rows(gamma, &cot, na, rows, c)
+                };
+                tensor::axpy(
+                    1.0,
+                    &gg,
+                    &mut grads
+                        .get_mut(&format!("{p}.gamma"))
+                        .with_context(|| format!("grad store missing {p}.gamma"))?
+                        .data,
+                );
+                tensor::axpy(
+                    1.0,
+                    &gb,
+                    &mut grads
+                        .get_mut(&format!("{p}.beta"))
+                        .with_context(|| format!("grad store missing {p}.beta"))?
+                        .data,
+                );
+                acc!(node.inputs[0], gx);
+            }
+            OpKind::Relu => {
+                let mut g = cot;
+                for (gi, &xi) in g.iter_mut().zip(&vals[node.inputs[0]]) {
+                    if xi <= 0.0 {
+                        *gi = 0.0;
+                    }
+                }
+                acc!(node.inputs[0], g);
+            }
+            OpKind::Gelu => {
+                let mut g = cot;
+                for (gi, &xi) in g.iter_mut().zip(&vals[node.inputs[0]]) {
+                    *gi *= gelu_grad(xi);
+                }
+                acc!(node.inputs[0], g);
+            }
+            OpKind::ActQuant { site } => {
+                let mut g = cot;
+                ste_site_backward(&vals[node.inputs[0]], &mut g, &q[*site], &mut qgrads[*site]);
+                acc!(node.inputs[0], g);
+            }
+            OpKind::Add => {
+                acc!(node.inputs[0], cot.clone());
+                acc!(node.inputs[1], cot);
+            }
+            OpKind::MaxPool2 => {
+                let Aux::Pool(arg) = &aux[i] else { unreachable!() };
+                let mut g = vec![0.0f32; vals[node.inputs[0]].len()];
+                for (o, &src) in arg.iter().enumerate() {
+                    g[src] += cot[o];
+                }
+                acc!(node.inputs[0], g);
+            }
+            OpKind::GlobalAvgPool => {
+                let is = &nodes[node.inputs[0]].shape;
+                let (bsz, h, wd, c) = (is[0], is[1], is[2], is[3]);
+                let scale = 1.0 / (h * wd) as f32;
+                let mut g = vec![0.0f32; bsz * h * wd * c];
+                for b in 0..bsz {
+                    for pix in 0..h * wd {
+                        for ch in 0..c {
+                            g[(b * h * wd + pix) * c + ch] = cot[b * c + ch] * scale;
+                        }
+                    }
+                }
+                acc!(node.inputs[0], g);
+            }
+            OpKind::Reshape => {
+                acc!(node.inputs[0], cot);
+            }
+            OpKind::ConcatCls { cls } => {
+                let (bsz, t1, dim) = (node.shape[0], node.shape[1], node.shape[2]);
+                let gcls = &mut grads
+                    .get_mut(cls)
+                    .with_context(|| format!("grad store missing {cls}"))?
+                    .data;
+                let mut g = vec![0.0f32; bsz * (t1 - 1) * dim];
+                for b in 0..bsz {
+                    tensor::axpy(1.0, &cot[b * t1 * dim..b * t1 * dim + dim], gcls);
+                    g[b * (t1 - 1) * dim..(b + 1) * (t1 - 1) * dim]
+                        .copy_from_slice(&cot[b * t1 * dim + dim..(b + 1) * t1 * dim]);
+                }
+                acc!(node.inputs[0], g);
+            }
+            OpKind::AddPos { pos } => {
+                let (bsz, rest) = (node.shape[0], cot.len() / node.shape[0]);
+                let gpos = &mut grads
+                    .get_mut(pos)
+                    .with_context(|| format!("grad store missing {pos}"))?
+                    .data;
+                for b in 0..bsz {
+                    tensor::axpy(1.0, &cot[b * rest..(b + 1) * rest], gpos);
+                }
+                acc!(node.inputs[0], cot);
+            }
+            OpKind::Attention { heads, .. } => {
+                let Aux::Att(probs) = &aux[i] else { unreachable!() };
+                let (bsz, s, d) = (node.shape[0], node.shape[1], node.shape[2]);
+                let hd = d / heads;
+                let scale = 1.0 / (hd as f32).sqrt();
+                let (qv, kv, vv) = (
+                    &vals[node.inputs[0]],
+                    &vals[node.inputs[1]],
+                    &vals[node.inputs[2]],
+                );
+                let mut gq = vec![0.0f32; qv.len()];
+                let mut gk = vec![0.0f32; kv.len()];
+                let mut gv = vec![0.0f32; vv.len()];
+                let mut qh = vec![0.0f32; s * hd];
+                let mut kh = vec![0.0f32; s * hd];
+                let mut vh = vec![0.0f32; s * hd];
+                let mut dyh = vec![0.0f32; s * hd];
+                for b in 0..bsz {
+                    for head in 0..*heads {
+                        let off = head * hd;
+                        for t in 0..s {
+                            let src = (b * s + t) * d + off;
+                            qh[t * hd..(t + 1) * hd].copy_from_slice(&qv[src..src + hd]);
+                            kh[t * hd..(t + 1) * hd].copy_from_slice(&kv[src..src + hd]);
+                            vh[t * hd..(t + 1) * hd].copy_from_slice(&vv[src..src + hd]);
+                            dyh[t * hd..(t + 1) * hd].copy_from_slice(&cot[src..src + hd]);
+                        }
+                        let p = &probs[(b * heads + head) * s * s..(b * heads + head + 1) * s * s];
+                        // dP = dY @ V^T ; dV = P^T @ dY
+                        let dp = matmul_nt(&dyh, &vh, s, hd, s);
+                        let dvh = matmul_tn(p, &dyh, s, s, hd);
+                        // dS = softmax'(P, dP) * scale
+                        let mut ds = softmax_bwd_rows(p, &dp, s, s);
+                        for v in ds.iter_mut() {
+                            *v *= scale;
+                        }
+                        // dQ = dS @ K ; dK = dS^T @ Q
+                        let dqh = matmul(&ds, &kh, s, s, hd);
+                        let dkh = matmul_tn(&ds, &qh, s, s, hd);
+                        for t in 0..s {
+                            let dst = (b * s + t) * d + off;
+                            tensor::axpy(1.0, &dqh[t * hd..(t + 1) * hd], &mut gq[dst..dst + hd]);
+                            tensor::axpy(1.0, &dkh[t * hd..(t + 1) * hd], &mut gk[dst..dst + hd]);
+                            tensor::axpy(1.0, &dvh[t * hd..(t + 1) * hd], &mut gv[dst..dst + hd]);
+                        }
+                    }
+                }
+                acc!(node.inputs[0], gq);
+                acc!(node.inputs[1], gk);
+                acc!(node.inputs[2], gv);
+            }
+            OpKind::PatchMerge { side } => {
+                let (bsz, dim4) = (node.shape[0], node.shape[2]);
+                let dim = dim4 / 4;
+                let half = side / 2;
+                let mut g = vec![0.0f32; bsz * side * side * dim];
+                for b in 0..bsz {
+                    for i2 in 0..half {
+                        for j2 in 0..half {
+                            let o = (b * half * half + i2 * half + j2) * dim4;
+                            for (slot, (di, dj)) in
+                                [(0, 0), (1, 0), (0, 1), (1, 1)].iter().enumerate()
+                            {
+                                let dst = (b * side * side
+                                    + (2 * i2 + di) * side
+                                    + (2 * j2 + dj))
+                                    * dim;
+                                g[dst..dst + dim]
+                                    .copy_from_slice(&cot[o + slot * dim..o + (slot + 1) * dim]);
+                            }
+                        }
+                    }
+                }
+                acc!(node.inputs[0], g);
+            }
+            OpKind::TokenPoolCls => {
+                let is = &nodes[node.inputs[0]].shape;
+                let (bsz, t, dim) = (is[0], is[1], is[2]);
+                let mut g = vec![0.0f32; bsz * t * dim];
+                for b in 0..bsz {
+                    g[b * t * dim..b * t * dim + dim].copy_from_slice(&cot[b * dim..(b + 1) * dim]);
+                }
+                acc!(node.inputs[0], g);
+            }
+            OpKind::TokenPoolMean => {
+                let is = &nodes[node.inputs[0]].shape;
+                let (bsz, t, dim) = (is[0], is[1], is[2]);
+                let scale = 1.0 / t as f32;
+                let mut g = vec![0.0f32; bsz * t * dim];
+                for b in 0..bsz {
+                    for tok in 0..t {
+                        for j in 0..dim {
+                            g[(b * t + tok) * dim + j] = cot[b * dim + j] * scale;
+                        }
+                    }
+                }
+                acc!(node.inputs[0], g);
+            }
+        }
+    }
+
+    Ok(RunOut {
+        loss,
+        metric,
+        extra,
+        grads: Some((grads, qgrads)),
+    })
+}
+
+type LossOut = (f32, f32, Vec<Vec<f32>>, Option<Vec<f32>>);
+
+/// Softmax cross-entropy over `[B, ncls]` logits; metric = correct count.
+fn image_loss(logits: &[f32], shape: &[usize], y: &HostArray, with_grads: bool) -> Result<LossOut> {
+    let HostArray::I32(yv) = y else {
+        anyhow::bail!("image_cls expects i32 labels")
+    };
+    let (bsz, ncls) = (shape[0], shape[1]);
+    anyhow::ensure!(yv.len() == bsz, "label batch size mismatch");
+    let mut probs = logits.to_vec();
+    softmax_rows(&mut probs, bsz, ncls);
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f32;
+    for b in 0..bsz {
+        let row = &probs[b * ncls..(b + 1) * ncls];
+        let label = yv[b] as usize;
+        anyhow::ensure!(label < ncls, "label {label} out of range");
+        loss -= (row[label].max(1e-12) as f64).ln();
+        if argmax(row) == label {
+            correct += 1.0;
+        }
+    }
+    let loss = (loss / bsz as f64) as f32;
+    let cot = with_grads.then(|| {
+        let scale = 1.0 / bsz as f32;
+        for b in 0..bsz {
+            probs[b * ncls + yv[b] as usize] -= 1.0;
+        }
+        for v in probs.iter_mut() {
+            *v *= scale;
+        }
+        probs
+    });
+    Ok((loss, correct, Vec::new(), cot))
+}
+
+/// Start+end span cross-entropy over `[B, S, 2]` logits (python
+/// `bert_loss`); metric = correct starts + correct ends; eval extras =
+/// (pred_start, pred_end).
+fn span_loss(logits: &[f32], shape: &[usize], y: &HostArray, with_grads: bool) -> Result<LossOut> {
+    let HostArray::I32(yv) = y else {
+        anyhow::bail!("span_qa expects i32 labels")
+    };
+    let (bsz, seq) = (shape[0], shape[1]);
+    anyhow::ensure!(shape[2] == 2, "span head emits 2 logit columns");
+    anyhow::ensure!(yv.len() == bsz * 2, "span labels are [B, 2]");
+    let mut loss = 0.0f64;
+    let mut metric = 0.0f32;
+    let mut cot = with_grads.then(|| vec![0.0f32; logits.len()]);
+    let mut preds: Vec<Vec<f32>> = vec![Vec::with_capacity(bsz), Vec::with_capacity(bsz)];
+    for col in 0..2 {
+        let mut lg = vec![0.0f32; bsz * seq];
+        for b in 0..bsz {
+            for s in 0..seq {
+                lg[b * seq + s] = logits[(b * seq + s) * 2 + col];
+            }
+        }
+        softmax_rows(&mut lg, bsz, seq);
+        for b in 0..bsz {
+            let row = &lg[b * seq..(b + 1) * seq];
+            let label = yv[b * 2 + col] as usize;
+            anyhow::ensure!(label < seq, "span label {label} out of range");
+            loss -= (row[label].max(1e-12) as f64).ln() / bsz as f64;
+            let am = argmax(row);
+            if am == label {
+                metric += 1.0;
+            }
+            preds[col].push(am as f32);
+        }
+        if let Some(cot) = cot.as_mut() {
+            let scale = 1.0 / bsz as f32;
+            for b in 0..bsz {
+                for s in 0..seq {
+                    let mut g = lg[b * seq + s];
+                    if s == yv[b * 2 + col] as usize {
+                        g -= 1.0;
+                    }
+                    cot[(b * seq + s) * 2 + col] = g * scale;
+                }
+            }
+        }
+    }
+    let extra = if with_grads { Vec::new() } else { preds };
+    Ok((loss as f32, metric, extra, cot))
+}
+
+/// Masked next-token cross-entropy over `[B, S, V]` logits (python
+/// `lm_loss`); metric = correct unmasked predictions; eval extra =
+/// [mask_count].
+fn lm_loss(logits: &[f32], shape: &[usize], y: &HostArray, with_grads: bool) -> Result<LossOut> {
+    let HostArray::I32(yv) = y else {
+        anyhow::bail!("lm expects i32 labels")
+    };
+    let (bsz, seq, vocab) = (shape[0], shape[1], shape[2]);
+    anyhow::ensure!(yv.len() == bsz * seq, "lm labels are [B, S]");
+    let mut probs = logits.to_vec();
+    softmax_rows(&mut probs, bsz * seq, vocab);
+    let mask_count = yv.iter().filter(|&&t| t >= 0).count();
+    let denom = (mask_count as f64).max(1.0);
+    let mut loss = 0.0f64;
+    let mut metric = 0.0f32;
+    for r in 0..bsz * seq {
+        let t = yv[r];
+        if t < 0 {
+            continue;
+        }
+        let label = t as usize;
+        anyhow::ensure!(label < vocab, "lm label {label} out of range");
+        let row = &probs[r * vocab..(r + 1) * vocab];
+        loss -= (row[label].max(1e-12) as f64).ln();
+        if argmax(row) == label {
+            metric += 1.0;
+        }
+    }
+    let loss = (loss / denom) as f32;
+    let cot = with_grads.then(|| {
+        let scale = (1.0 / denom) as f32;
+        for r in 0..bsz * seq {
+            let row = &mut probs[r * vocab..(r + 1) * vocab];
+            let t = yv[r];
+            if t < 0 {
+                tensor::zero(row);
+                continue;
+            }
+            row[t as usize] -= 1.0;
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+        }
+        probs
+    });
+    let extra = if with_grads {
+        Vec::new()
+    } else {
+        vec![vec![mask_count as f32]]
+    };
+    Ok((loss, metric, extra, cot))
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for j in 1..row.len() {
+        if row[j] > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::native::NativeEngine;
+    use super::super::Backend;
+    use crate::data::SynthData;
+    use crate::quant::QParams;
+    use crate::util::json;
+
+    /// Tiny per-family configs: small enough that central differences over
+    /// the full engine are cheap, structurally complete enough to cover
+    /// every op the family lowers to.
+    fn tiny(family: &str) -> &'static str {
+        match family {
+            "vgg" => r#"{"name": "t_vgg", "family": "vgg", "task": "image_cls",
+                "image": {"size": 8, "channels": 2}, "conv_channels": [4, 4],
+                "pool_every": 2, "fc_dims": [6], "num_classes": 3,
+                "quant": {"weight": true, "act": true}}"#,
+            "resnet" => r#"{"name": "t_res", "family": "resnet", "task": "image_cls",
+                "image": {"size": 8, "channels": 2}, "stem_channels": 4,
+                "stage_channels": [4, 6], "blocks_per_stage": 1, "num_classes": 3,
+                "quant": {"weight": true, "act": false}}"#,
+            // span_qa synthesis needs seq_len > 8 (delimiter placement)
+            "bert" => r#"{"name": "t_bert", "family": "bert", "task": "span_qa",
+                "vocab": 16, "seq_len": 12, "dim": 8, "heads": 2, "blocks": 1,
+                "mlp_ratio": 2, "quant": {"weight": true, "act": false}}"#,
+            "gpt" => r#"{"name": "t_gpt", "family": "gpt", "task": "lm",
+                "vocab": 16, "seq_len": 6, "dim": 8, "heads": 2, "blocks": 1,
+                "mlp_ratio": 2, "quant": {"weight": true, "act": false}}"#,
+            "vit" => r#"{"name": "t_vit", "family": "vit", "task": "image_cls",
+                "image": {"size": 8, "channels": 2}, "dim": 8, "heads": 2,
+                "blocks": 1, "mlp_ratio": 2, "patch": 4, "pool": "cls",
+                "num_classes": 3, "quant": {"weight": true, "act": false}}"#,
+            "vit_mean" => r#"{"name": "t_vitm", "family": "vit", "task": "image_cls",
+                "image": {"size": 8, "channels": 2}, "dim": 8, "heads": 2,
+                "blocks": 1, "mlp_ratio": 2, "patch": 4, "pool": "mean",
+                "num_classes": 3, "quant": {"weight": true, "act": false}}"#,
+            "swin" => r#"{"name": "t_swin", "family": "swin", "task": "image_cls",
+                "image": {"size": 8, "channels": 2}, "stage_dims": [8, 12],
+                "stage_blocks": [1, 1], "heads": 2, "mlp_ratio": 2, "patch": 2,
+                "num_classes": 3, "quant": {"weight": true, "act": false}}"#,
+            other => panic!("no tiny config for {other}"),
+        }
+    }
+
+    fn engine(family: &str) -> NativeEngine {
+        NativeEngine::from_config(&json::parse(tiny(family)).unwrap()).unwrap()
+    }
+
+    fn batch(e: &NativeEngine, seed: u64) -> (super::HostArray, super::HostArray) {
+        let m = e.manifest();
+        let (train, _) = SynthData::for_model(&m.config, 64, 32, seed);
+        let idxs: Vec<usize> = (0..m.batch.batch_size()).collect();
+        train.batch(&idxs)
+    }
+
+    /// Central-difference check of d(loss)/d(param) across every tensor of
+    /// a tiny model. 24-bit quantizers keep the fake-quant staircase far
+    /// below the probe step, so the STE gradient is the smooth slope; the
+    /// few probes that land inside h of a clip boundary are skipped (the
+    /// STE legitimately disagrees there).
+    fn fd_check(family: &str, seed: u64) {
+        let e = engine(family);
+        let params = e.init_params(seed);
+        let q = e.init_qparams(&params, 24.0);
+        let (x, y) = batch(&e, seed + 1);
+        let out = e.train_step(&params, &q, &x, &y).unwrap();
+        assert!(out.loss.is_finite(), "{family}: loss {}", out.loss);
+        let h = 1e-3f32;
+        let mut checked = 0;
+        for (ti, t) in params.tensors.iter().enumerate() {
+            let site = e
+                .manifest()
+                .qsites
+                .iter()
+                .position(|s| s.param.as_deref() == Some(t.name.as_str()));
+            for &ei in &[0usize, t.data.len() - 1] {
+                if let Some(s) = site {
+                    if t.data[ei].abs() + h >= q[s].qm {
+                        continue;
+                    }
+                }
+                let mut p1 = params.clone();
+                p1.tensors[ti].data[ei] += h;
+                let l1 = e.eval_step(&p1, &q, &x, &y).unwrap().loss;
+                let mut p2 = params.clone();
+                p2.tensors[ti].data[ei] -= h;
+                let l2 = e.eval_step(&p2, &q, &x, &y).unwrap().loss;
+                let fd = (l1 - l2) / (2.0 * h);
+                let an = out.grads.tensors[ti].data[ei];
+                assert!(
+                    (an - fd).abs() < 0.02 + 0.1 * an.abs().max(fd.abs()),
+                    "{family} {}[{ei}]: analytic {an} vs fd {fd}",
+                    t.name
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 12, "{family}: only {checked} probes ran");
+    }
+
+    #[test]
+    fn vgg_gradients_match_finite_differences() {
+        fd_check("vgg", 3);
+    }
+
+    #[test]
+    fn resnet_gradients_match_finite_differences() {
+        fd_check("resnet", 5);
+    }
+
+    #[test]
+    fn bert_gradients_match_finite_differences() {
+        fd_check("bert", 7);
+    }
+
+    #[test]
+    fn gpt_gradients_match_finite_differences() {
+        fd_check("gpt", 9);
+    }
+
+    #[test]
+    fn vit_gradients_match_finite_differences() {
+        fd_check("vit", 11);
+        fd_check("vit_mean", 13);
+    }
+
+    #[test]
+    fn swin_gradients_match_finite_differences() {
+        fd_check("swin", 15);
+    }
+
+    #[test]
+    fn conv_families_sgd_reduces_loss() {
+        for family in ["vgg", "resnet", "vit"] {
+            let e = engine(family);
+            let mut params = e.init_params(0);
+            let q = e.init_qparams(&params, 16.0);
+            let (x, y) = batch(&e, 21);
+            let mut first = None;
+            let mut last = 0.0;
+            for _ in 0..8 {
+                let out = e.train_step(&params, &q, &x, &y).unwrap();
+                first.get_or_insert(out.loss);
+                last = out.loss;
+                for (ti, t) in out.grads.tensors.iter().enumerate() {
+                    for (i, g) in t.data.iter().enumerate() {
+                        params.tensors[ti].data[i] -= 0.05 * g;
+                    }
+                }
+            }
+            assert!(last < first.unwrap(), "{family}: {first:?} -> {last}");
+        }
+    }
+
+    #[test]
+    fn quant_sites_are_live_on_conv_and_attention_families() {
+        for family in ["vgg", "resnet", "bert", "vit", "swin"] {
+            let e = engine(family);
+            let params = e.init_params(1);
+            // coarse quantizer => large rounding residuals => live d-grads
+            let q = e.init_qparams(&params, 4.0);
+            let (x, y) = batch(&e, 31);
+            let out = e.train_step(&params, &q, &x, &y).unwrap();
+            assert_eq!(out.qgrads.len(), e.manifest().qsites.len(), "{family}");
+            let live = out
+                .qgrads
+                .iter()
+                .any(|g| g.0.abs() + g.1.abs() + g.2.abs() > 0.0);
+            assert!(live, "{family}: all quant-param gradients zero");
+            // bits must change the loss
+            let hi = e.init_qparams(&params, 16.0);
+            let l_hi = e.eval_step(&params, &hi, &x, &y).unwrap().loss;
+            let l_lo = e.eval_step(&params, &q, &x, &y).unwrap().loss;
+            assert!((l_hi - l_lo).abs() > 1e-7, "{family}: {l_hi} vs {l_lo}");
+        }
+    }
+
+    #[test]
+    fn span_and_lm_heads_emit_eval_extras() {
+        let e = engine("bert");
+        let params = e.init_params(2);
+        let q = e.init_qparams(&params, 8.0);
+        let (x, y) = batch(&e, 41);
+        let ev = e.eval_step(&params, &q, &x, &y).unwrap();
+        assert_eq!(ev.extra.len(), 2); // pred_start, pred_end
+        let bsz = e.manifest().batch.batch_size();
+        let seq = e.manifest().config.usize_or("seq_len", 32) as f32;
+        assert_eq!(ev.extra[0].len(), bsz);
+        assert!(ev.extra[0].iter().all(|&p| p >= 0.0 && p < seq));
+
+        let e = engine("gpt");
+        let params = e.init_params(2);
+        let q = e.init_qparams(&params, 8.0);
+        let (x, y) = batch(&e, 43);
+        let ev = e.eval_step(&params, &q, &x, &y).unwrap();
+        assert_eq!(ev.extra.len(), 1); // mask_count
+        let bsz = e.manifest().batch.batch_size();
+        let seq = e.manifest().config.usize_or("seq_len", 32);
+        assert_eq!(ev.extra[0][0], (bsz * (seq - 1)) as f32);
+    }
+
+    #[test]
+    fn eval_is_deterministic_across_families() {
+        for family in ["resnet", "bert", "swin"] {
+            let e = engine(family);
+            let params = e.init_params(6);
+            let q = e.init_qparams(&params, 8.0);
+            let (x, y) = batch(&e, 51);
+            let a = e.eval_step(&params, &q, &x, &y).unwrap();
+            let b = e.eval_step(&params, &q, &x, &y).unwrap();
+            assert_eq!(a.loss, b.loss, "{family}");
+            assert_eq!(a.metric, b.metric, "{family}");
+        }
+    }
+
+    #[test]
+    fn degenerate_qparams_keep_losses_finite() {
+        for family in ["vgg", "bert"] {
+            let e = engine(family);
+            let params = e.init_params(4);
+            let (x, y) = batch(&e, 61);
+            for q in [
+                QParams { d: 1e-8, t: 1.0, qm: 1.0 },
+                QParams { d: 10.0, t: 1.0, qm: 1e-3 },
+                QParams { d: 0.1, t: 2.0, qm: 4.0 },
+            ] {
+                let qs = vec![q; e.manifest().qsites.len()];
+                let out = e.eval_step(&params, &qs, &x, &y).unwrap();
+                assert!(out.loss.is_finite(), "{family} {q:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,622 @@
+//! Config -> typed op IR lowering for the native interpreter.
+//!
+//! Each model family's JSON config lowers to a flat, topologically ordered
+//! list of [`Node`]s — the same layer sequence the JAX apply functions in
+//! `python/compile/models/` execute and the trace-graph builders
+//! (`graph/builders.rs`) mirror node-for-node. The lowering is the single
+//! source of real per-op shapes: the interpreter (`runtime/interp.rs`)
+//! executes it, and BOPs accounting ([`layer_costs`]) reads MAC counts off
+//! the same shapes instead of re-deriving spatial bookkeeping per family.
+//!
+//! Quantization sites are resolved here: every weight-carrying node stores
+//! the q-row index of its weight site (plan order, from
+//! `graph::builders::quant_site_specs`), and activation-quant sites lower
+//! to explicit [`OpKind::ActQuant`] nodes.
+
+use anyhow::{Context, Result};
+
+use crate::graph::builders;
+use crate::metrics::bops::LayerCost;
+use crate::optim::qasso::SiteSpec;
+use crate::tensor::conv_out_dim;
+use crate::util::json::Json;
+
+/// Model families the native interpreter can lower and execute. A model
+/// whose family appears here may never self-skip in the test suites.
+pub fn lowered_families() -> &'static [&'static str] {
+    &["mlp", "vgg", "resnet", "bert", "gpt", "vit", "swin"]
+}
+
+/// One interpreter op. Weight-carrying ops name their parameter prefix
+/// (`<w>.weight` / `<w>.bias` in the `ParamStore`); `site` is the q-row of
+/// the weight's quant site when the config quantizes weights.
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    /// The raw f32 image batch `[B,H,W,C]` (image tasks only).
+    Input,
+    /// Token + positional embedding lookup: i32 `[B,S]` -> `[B,S,D]`.
+    Embed { tok: String, pos: String },
+    /// `x @ W + b` over the last axis.
+    Linear { w: String, site: Option<usize> },
+    /// NHWC conv via im2col (`pad` = low-side padding; high side implied).
+    Conv2d {
+        w: String,
+        site: Option<usize>,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
+    /// Per-channel batch-statistics normalization (`<p>.gamma`/`.beta`).
+    BatchNorm { p: String },
+    /// Per-row last-axis normalization (`<p>.gamma`/`.beta`).
+    LayerNorm { p: String },
+    Relu,
+    Gelu,
+    /// Fake-quantize activations at q-row `site`.
+    ActQuant { site: usize },
+    /// Elementwise sum of two inputs (residual join).
+    Add,
+    /// 2x2/stride-2 max pool (VALID).
+    MaxPool2,
+    /// Mean over H,W: `[B,H,W,C] -> [B,C]`.
+    GlobalAvgPool,
+    /// Pure shape change (flatten / NHWC->tokens); data is shared.
+    Reshape,
+    /// Prepend the broadcast `cls_token` parameter: `[B,T,D] -> [B,T+1,D]`.
+    ConcatCls { cls: String },
+    /// Add a `[T,D]` positional table broadcast over the batch.
+    AddPos { pos: String },
+    /// Fused multi-head self-attention over (q, k, v) inputs `[B,S,D]`.
+    Attention { heads: usize, causal: bool },
+    /// Swin 2x2 patch merging: `[B,side²,D] -> [B,(side/2)²,4D]`.
+    PatchMerge { side: usize },
+    /// Take token 0: `[B,T,D] -> [B,D]`.
+    TokenPoolCls,
+    /// Mean over tokens: `[B,T,D] -> [B,D]`.
+    TokenPoolMean,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: OpKind,
+    /// Indices of producer nodes (always earlier in the list).
+    pub inputs: Vec<usize>,
+    /// Output shape including the batch dim.
+    pub shape: Vec<usize>,
+}
+
+/// A lowered model: nodes in execution order; the last node emits the
+/// task logits (`[B,ncls]`, `[B,S,2]` or `[B,S,V]`).
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub family: String,
+    pub task: String,
+    pub batch: usize,
+    pub nodes: Vec<Node>,
+}
+
+impl Program {
+    pub fn output(&self) -> usize {
+        self.nodes.len() - 1
+    }
+}
+
+struct Lower<'a> {
+    nodes: Vec<Node>,
+    sites: &'a [SiteSpec],
+}
+
+impl<'a> Lower<'a> {
+    fn site(&self, name: &str) -> Option<usize> {
+        self.sites.iter().position(|s| s.name == name)
+    }
+
+    fn push(&mut self, name: &str, op: OpKind, inputs: Vec<usize>, shape: Vec<usize>) -> usize {
+        self.nodes.push(Node {
+            name: name.to_string(),
+            op,
+            inputs,
+            shape,
+        });
+        self.nodes.len() - 1
+    }
+
+    fn shape(&self, id: usize) -> &Vec<usize> {
+        &self.nodes[id].shape
+    }
+
+    /// Shape-preserving unary op.
+    fn unary(&mut self, prev: usize, name: &str, op: OpKind) -> usize {
+        let shape = self.shape(prev).clone();
+        self.push(name, op, vec![prev], shape)
+    }
+
+    fn linear(&mut self, prev: usize, name: &str, dout: usize) -> usize {
+        let mut shape = self.shape(prev).clone();
+        *shape.last_mut().expect("linear input has a last dim") = dout;
+        let site = self.site(&format!("{name}.weight"));
+        self.push(
+            name,
+            OpKind::Linear {
+                w: name.to_string(),
+                site,
+            },
+            vec![prev],
+            shape,
+        )
+    }
+
+    fn conv(
+        &mut self,
+        prev: usize,
+        name: &str,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        same: bool,
+    ) -> usize {
+        let in_shape = self.shape(prev).clone();
+        let (b, h, w) = (in_shape[0], in_shape[1], in_shape[2]);
+        let (ho, pad) = conv_out_dim(h, k, stride, same);
+        let (wo, _) = conv_out_dim(w, k, stride, same);
+        let site = self.site(&format!("{name}.weight"));
+        self.push(
+            name,
+            OpKind::Conv2d {
+                w: name.to_string(),
+                site,
+                k,
+                stride,
+                pad,
+            },
+            vec![prev],
+            vec![b, ho, wo, cout],
+        )
+    }
+
+    fn act_quant(&mut self, prev: usize, site_name: &str) -> usize {
+        match self.site(site_name) {
+            Some(site) => self.unary(prev, site_name, OpKind::ActQuant { site }),
+            None => prev,
+        }
+    }
+
+    /// Pre-LN transformer block (mirrors `common.transformer_block`).
+    fn block(&mut self, x: usize, name: &str, heads: usize, ratio: usize, causal: bool) -> usize {
+        let dim = *self.shape(x).last().unwrap();
+        let ln1 = self.unary(x, &format!("{name}.ln1"), OpKind::LayerNorm { p: format!("{name}.ln1") });
+        let wq = self.linear(ln1, &format!("{name}.attn.wq"), dim);
+        let wk = self.linear(ln1, &format!("{name}.attn.wk"), dim);
+        let wv = self.linear(ln1, &format!("{name}.attn.wv"), dim);
+        let shape = self.shape(wq).clone();
+        let att = self.push(
+            &format!("{name}.attn"),
+            OpKind::Attention { heads, causal },
+            vec![wq, wk, wv],
+            shape,
+        );
+        let wo = self.linear(att, &format!("{name}.attn.wo"), dim);
+        let add1 = {
+            let shape = self.shape(x).clone();
+            self.push(&format!("{name}.add1"), OpKind::Add, vec![x, wo], shape)
+        };
+        let ln2 = self.unary(add1, &format!("{name}.ln2"), OpKind::LayerNorm { p: format!("{name}.ln2") });
+        let fc1 = self.linear(ln2, &format!("{name}.fc1"), dim * ratio);
+        let gelu = self.unary(fc1, &format!("{name}.gelu"), OpKind::Gelu);
+        let fc2 = self.linear(gelu, &format!("{name}.fc2"), dim);
+        let shape = self.shape(add1).clone();
+        self.push(&format!("{name}.add2"), OpKind::Add, vec![add1, fc2], shape)
+    }
+}
+
+/// Attention requires `dim % heads == 0`; the interpreter's per-head
+/// slicing would otherwise silently drop the trailing channels.
+fn check_heads(model: &str, dim: usize, heads: usize) -> Result<()> {
+    anyhow::ensure!(
+        heads > 0 && dim % heads == 0,
+        "model `{model}`: attention dim {dim} not divisible by heads {heads}"
+    );
+    Ok(())
+}
+
+/// Lower `cfg` into an executable [`Program`] for batch size `batch`.
+/// `sites` is the plan-order quant-site list (the manifest's `qsites`).
+pub fn lower(cfg: &Json, sites: &[SiteSpec], batch: usize) -> Result<Program> {
+    let family = cfg.req("family")?.as_str().unwrap_or_default().to_string();
+    let task = cfg.str_or("task", "image_cls");
+    let model = cfg.str_or("name", "<unnamed>");
+    let img = |key: &str, default: usize| -> usize {
+        cfg.get("image").map(|i| i.usize_or(key, default)).unwrap_or(default)
+    };
+    let ncls = cfg.usize_or("num_classes", 10);
+    let mut lo = Lower {
+        nodes: Vec::new(),
+        sites,
+    };
+    match family.as_str() {
+        "mlp" => {
+            let (s, c) = (img("size", 8), img("channels", 3));
+            let inp = lo.push("input", OpKind::Input, vec![], vec![batch, s, s, c]);
+            let mut prev = lo.push("flatten", OpKind::Reshape, vec![inp], vec![batch, s * s * c]);
+            for (i, &dout) in cfg.usize_arr("hidden").iter().enumerate() {
+                prev = lo.linear(prev, &format!("fc{i}"), dout);
+                prev = lo.unary(prev, &format!("fc{i}.relu"), OpKind::Relu);
+                prev = lo.act_quant(prev, &format!("fc{i}.act"));
+            }
+            lo.linear(prev, "head", ncls);
+        }
+        "vgg" => {
+            let (s, c) = (img("size", 16), img("channels", 3));
+            let pool_every = cfg.usize_or("pool_every", 2);
+            let mut prev = lo.push("input", OpKind::Input, vec![], vec![batch, s, s, c]);
+            for (i, &cout) in cfg.usize_arr("conv_channels").iter().enumerate() {
+                prev = lo.conv(prev, &format!("features.{i}"), cout, 3, 1, true);
+                prev = lo.unary(
+                    prev,
+                    &format!("features.{i}.bn"),
+                    OpKind::BatchNorm { p: format!("features.{i}.bn") },
+                );
+                prev = lo.unary(prev, &format!("features.{i}.relu"), OpKind::Relu);
+                prev = lo.act_quant(prev, &format!("features.{i}.act"));
+                if (i + 1) % pool_every == 0 {
+                    let sh = lo.shape(prev).clone();
+                    prev = lo.push(
+                        &format!("pool{i}"),
+                        OpKind::MaxPool2,
+                        vec![prev],
+                        vec![sh[0], sh[1] / 2, sh[2] / 2, sh[3]],
+                    );
+                }
+            }
+            let flat: usize = lo.shape(prev)[1..].iter().product();
+            prev = lo.push("flatten", OpKind::Reshape, vec![prev], vec![batch, flat]);
+            for (i, &dout) in cfg.usize_arr("fc_dims").iter().enumerate() {
+                prev = lo.linear(prev, &format!("fc{i}"), dout);
+                prev = lo.unary(prev, &format!("fc{i}.relu"), OpKind::Relu);
+                prev = lo.act_quant(prev, &format!("fc{i}.act"));
+            }
+            lo.linear(prev, "head", ncls);
+        }
+        "resnet" => {
+            let (s, c) = (img("size", 16), img("channels", 3));
+            let stem_c = cfg.usize_or("stem_channels", 8);
+            let blocks = cfg.usize_or("blocks_per_stage", 2);
+            let inp = lo.push("input", OpKind::Input, vec![], vec![batch, s, s, c]);
+            let mut prev = lo.conv(inp, "stem", stem_c, 3, 1, true);
+            prev = lo.unary(prev, "stem.bn", OpKind::BatchNorm { p: "stem.bn".into() });
+            prev = lo.unary(prev, "stem.relu", OpKind::Relu);
+            let mut cin = stem_c;
+            for (si, &cout) in cfg.usize_arr("stage_channels").iter().enumerate() {
+                let stage_stride = if si == 0 { 1 } else { 2 };
+                for b in 0..blocks {
+                    let stride = if b == 0 { stage_stride } else { 1 };
+                    let n = format!("stage{si}.{b}");
+                    let mut y = lo.conv(prev, &format!("{n}.conv1"), cout, 3, stride, true);
+                    y = lo.unary(y, &format!("{n}.bn1"), OpKind::BatchNorm { p: format!("{n}.bn1") });
+                    y = lo.unary(y, &format!("{n}.relu1"), OpKind::Relu);
+                    y = lo.conv(y, &format!("{n}.conv2"), cout, 3, 1, true);
+                    y = lo.unary(y, &format!("{n}.bn2"), OpKind::BatchNorm { p: format!("{n}.bn2") });
+                    let skip = if stride != 1 || cin != cout {
+                        let p = lo.conv(prev, &format!("{n}.proj"), cout, 1, stride, true);
+                        lo.unary(p, &format!("{n}.bnp"), OpKind::BatchNorm { p: format!("{n}.bnp") })
+                    } else {
+                        prev
+                    };
+                    let shape = lo.shape(y).clone();
+                    let add = lo.push(&format!("{n}.add"), OpKind::Add, vec![y, skip], shape);
+                    prev = lo.unary(add, &format!("{n}.relu2"), OpKind::Relu);
+                    cin = cout;
+                }
+            }
+            let sh = lo.shape(prev).clone();
+            prev = lo.push("gap", OpKind::GlobalAvgPool, vec![prev], vec![sh[0], sh[3]]);
+            lo.linear(prev, "head", ncls);
+        }
+        "bert" | "gpt" => {
+            let dim = cfg.usize_or("dim", 64);
+            let seq = cfg.usize_or("seq_len", 32);
+            let heads = cfg.usize_or("heads", 4);
+            let ratio = cfg.usize_or("mlp_ratio", 4);
+            check_heads(&model, dim, heads)?;
+            let mut prev = lo.push(
+                "embed",
+                OpKind::Embed {
+                    tok: "embed.tok".into(),
+                    pos: "embed.pos".into(),
+                },
+                vec![],
+                vec![batch, seq, dim],
+            );
+            if family == "bert" {
+                prev = lo.unary(prev, "embed.ln", OpKind::LayerNorm { p: "embed.ln".into() });
+            }
+            for b in 0..cfg.usize_or("blocks", 2) {
+                prev = lo.block(prev, &format!("block{b}"), heads, ratio, family == "gpt");
+            }
+            prev = lo.unary(prev, "final.ln", OpKind::LayerNorm { p: "final.ln".into() });
+            if family == "bert" {
+                lo.linear(prev, "span_head", 2);
+            } else {
+                lo.linear(prev, "lm_head", cfg.usize_or("vocab", 128));
+            }
+        }
+        "vit" => {
+            let (s, c) = (img("size", 16), img("channels", 3));
+            let dim = cfg.usize_or("dim", 48);
+            let patch = cfg.usize_or("patch", 4);
+            let heads = cfg.usize_or("heads", 4);
+            let ratio = cfg.usize_or("mlp_ratio", 4);
+            check_heads(&model, dim, heads)?;
+            let inp = lo.push("input", OpKind::Input, vec![], vec![batch, s, s, c]);
+            let mut prev = lo.conv(inp, "patch_embed", dim, patch, patch, false);
+            let grid = lo.shape(prev)[1] * lo.shape(prev)[2];
+            prev = lo.push("tokens", OpKind::Reshape, vec![prev], vec![batch, grid, dim]);
+            if cfg.str_or("pool", "cls") == "cls" {
+                prev = lo.push(
+                    "cls",
+                    OpKind::ConcatCls { cls: "cls_token".into() },
+                    vec![prev],
+                    vec![batch, grid + 1, dim],
+                );
+            }
+            prev = lo.unary(prev, "pos", OpKind::AddPos { pos: "pos_embed".into() });
+            for b in 0..cfg.usize_or("blocks", 2) {
+                prev = lo.block(prev, &format!("block{b}"), heads, ratio, false);
+            }
+            prev = lo.unary(prev, "final.ln", OpKind::LayerNorm { p: "final.ln".into() });
+            let pool_op = if cfg.str_or("pool", "cls") == "cls" {
+                OpKind::TokenPoolCls
+            } else {
+                OpKind::TokenPoolMean
+            };
+            prev = lo.push("pool", pool_op, vec![prev], vec![batch, dim]);
+            lo.linear(prev, "head", ncls);
+        }
+        "swin" => {
+            let (s, c) = (img("size", 16), img("channels", 3));
+            let dims = cfg.usize_arr("stage_dims");
+            let stage_blocks = cfg.usize_arr("stage_blocks");
+            let patch = cfg.usize_or("patch", 2);
+            let heads = cfg.usize_or("heads", 4);
+            let ratio = cfg.usize_or("mlp_ratio", 2);
+            anyhow::ensure!(
+                dims.len() == stage_blocks.len() && !dims.is_empty(),
+                "swin config needs matching stage_dims/stage_blocks"
+            );
+            for &dim in &dims {
+                check_heads(&model, dim, heads)?;
+            }
+            let inp = lo.push("input", OpKind::Input, vec![], vec![batch, s, s, c]);
+            let mut prev = lo.conv(inp, "patch_embed", dims[0], patch, patch, false);
+            let mut side = lo.shape(prev)[1];
+            prev = lo.push("tokens", OpKind::Reshape, vec![prev], vec![batch, side * side, dims[0]]);
+            prev = lo.unary(prev, "pos", OpKind::AddPos { pos: "pos_embed".into() });
+            for (si, &dim) in dims.iter().enumerate() {
+                for b in 0..stage_blocks[si] {
+                    prev = lo.block(prev, &format!("stage{si}.block{b}"), heads, ratio, false);
+                }
+                if si + 1 < dims.len() {
+                    prev = lo.push(
+                        &format!("merge{si}.cat"),
+                        OpKind::PatchMerge { side },
+                        vec![prev],
+                        vec![batch, (side / 2) * (side / 2), dim * 4],
+                    );
+                    side /= 2;
+                    prev = lo.unary(
+                        prev,
+                        &format!("merge{si}.ln"),
+                        OpKind::LayerNorm { p: format!("merge{si}.ln") },
+                    );
+                    prev = lo.linear(prev, &format!("merge{si}"), dims[si + 1]);
+                }
+            }
+            prev = lo.unary(prev, "final.ln", OpKind::LayerNorm { p: "final.ln".into() });
+            let dim = *dims.last().unwrap();
+            prev = lo.push("pool", OpKind::TokenPoolMean, vec![prev], vec![batch, dim]);
+            lo.linear(prev, "head", ncls);
+        }
+        other => anyhow::bail!(
+            "no native lowering for model family `{other}` (model `{model}`); \
+             lowered families: {:?}",
+            lowered_families()
+        ),
+    }
+    Ok(Program {
+        family,
+        task,
+        batch,
+        nodes: lo.nodes,
+    })
+}
+
+/// Per-layer MAC costs derived from the lowered program's real op shapes
+/// (batch-1 lowering), replacing the per-family spatial bookkeeping that
+/// used to live in `metrics/bops.rs`. Conv MACs use the interpreter's own
+/// output dims (`ho*wo*k²*cin*cout`); linear MACs scale by the true token
+/// count of their input. `act_in_site` walks back through shape-only ops
+/// to the activation-quant site feeding the layer, if any.
+pub fn layer_costs(cfg: &Json) -> Result<Vec<LayerCost>> {
+    let sites = builders::quant_site_specs(cfg)?;
+    let prog = lower(cfg, &sites, 1)?;
+    let mut out = Vec::new();
+    for node in &prog.nodes {
+        let (w, macs, cin, cout) = match &node.op {
+            OpKind::Linear { w, .. } => {
+                let in_shape = &prog.nodes[node.inputs[0]].shape;
+                let din = *in_shape.last().context("linear input shape")?;
+                let dout = *node.shape.last().context("linear output shape")?;
+                let tokens: usize = node.shape[1..node.shape.len() - 1].iter().product();
+                (w.clone(), (tokens * din * dout) as f64, din, dout)
+            }
+            OpKind::Conv2d { w, k, .. } => {
+                let in_shape = &prog.nodes[node.inputs[0]].shape;
+                let cin = *in_shape.last().context("conv input shape")?;
+                let (ho, wo, cout) = (node.shape[1], node.shape[2], node.shape[3]);
+                (w.clone(), (ho * wo * k * k * cin * cout) as f64, cin, cout)
+            }
+            _ => continue,
+        };
+        // trace back through shape-only / pooling ops to an act-quant site
+        let mut src = node.inputs[0];
+        let act_in_site = loop {
+            match &prog.nodes[src].op {
+                OpKind::Reshape | OpKind::MaxPool2 | OpKind::GlobalAvgPool => {
+                    src = prog.nodes[src].inputs[0];
+                }
+                OpKind::ActQuant { site } => break Some(sites[*site].name.clone()),
+                _ => break None,
+            }
+        };
+        out.push(LayerCost {
+            param: format!("{w}.weight"),
+            macs,
+            cin,
+            cout,
+            act_in_site,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn cfg(name: &str) -> Json {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/models")
+            .join(format!("{name}.json"));
+        json::parse_file(&path).unwrap()
+    }
+
+    fn lower_model(name: &str, batch: usize) -> Program {
+        let c = cfg(name);
+        let sites = builders::quant_site_specs(&c).unwrap();
+        lower(&c, &sites, batch).unwrap()
+    }
+
+    #[test]
+    fn all_nine_configs_lower() {
+        for name in [
+            "mlp_tiny", "vgg7_mini", "resnet_mini", "resnet_mini_l",
+            "bert_mini", "gpt_mini", "vit_mini", "simplevit_mini", "swin_mini",
+        ] {
+            let p = lower_model(name, 4);
+            assert!(p.nodes.len() > 3, "{name}");
+            // inputs always reference earlier nodes (topological order)
+            for (i, n) in p.nodes.iter().enumerate() {
+                for &j in &n.inputs {
+                    assert!(j < i, "{name}: node {} input {j} not earlier", n.name);
+                }
+                assert!(!n.shape.is_empty(), "{name}: {}", n.name);
+                assert_eq!(n.shape[0], 4, "{name}: {} batch dim", n.name);
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_family_error_names_the_family() {
+        let c = json::parse(r#"{"name": "x", "family": "tcn", "task": "image_cls"}"#).unwrap();
+        let err = lower(&c, &[], 2).unwrap_err().to_string();
+        assert!(err.contains("tcn"), "{err}");
+        assert!(err.contains("no native lowering"), "{err}");
+    }
+
+    #[test]
+    fn indivisible_head_count_is_rejected() {
+        // dim 48, heads 5: the per-head slicing would drop channels 45..48
+        let c = json::parse(
+            r#"{"name": "x", "family": "gpt", "task": "lm", "vocab": 32,
+                "seq_len": 8, "dim": 48, "heads": 5, "blocks": 1,
+                "mlp_ratio": 2, "quant": {"weight": true, "act": false}}"#,
+        )
+        .unwrap();
+        let err = lower(&c, &[], 4).unwrap_err().to_string();
+        assert!(err.contains("not divisible"), "{err}");
+    }
+
+    #[test]
+    fn vgg_shapes_follow_pools() {
+        let p = lower_model("vgg7_mini", 2);
+        let pool_shapes: Vec<Vec<usize>> = p
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::MaxPool2))
+            .map(|n| n.shape.clone())
+            .collect();
+        assert_eq!(pool_shapes, vec![
+            vec![2, 8, 8, 16],
+            vec![2, 4, 4, 32],
+            vec![2, 2, 2, 64],
+        ]);
+    }
+
+    #[test]
+    fn resnet_strided_convs_halve_spatial_dims() {
+        let p = lower_model("resnet_mini", 1);
+        let c1 = p.nodes.iter().find(|n| n.name == "stage1.0.conv1").unwrap();
+        assert_eq!(c1.shape, vec![1, 8, 8, 16]);
+        let proj = p.nodes.iter().find(|n| n.name == "stage1.0.proj").unwrap();
+        assert_eq!(proj.shape, vec![1, 8, 8, 16]);
+        let add = p.nodes.iter().find(|n| n.name == "stage2.1.add").unwrap();
+        assert_eq!(add.shape, vec![1, 4, 4, 32]);
+        assert_eq!(add.inputs.len(), 2);
+    }
+
+    #[test]
+    fn vit_token_count_includes_cls() {
+        let p = lower_model("vit_mini", 1);
+        let pos = p.nodes.iter().find(|n| n.name == "pos").unwrap();
+        assert_eq!(pos.shape, vec![1, 17, 48]); // 4x4 grid + cls
+        let p2 = lower_model("simplevit_mini", 1);
+        let pos2 = p2.nodes.iter().find(|n| n.name == "pos").unwrap();
+        assert_eq!(pos2.shape, vec![1, 16, 48]); // mean pool: no cls token
+    }
+
+    #[test]
+    fn swin_merge_halves_tokens_and_grows_channels() {
+        let p = lower_model("swin_mini", 1);
+        let cat = p.nodes.iter().find(|n| n.name == "merge0.cat").unwrap();
+        assert_eq!(cat.shape, vec![1, 16, 128]); // 8x8 -> 4x4, 32 -> 128
+        let merge = p.nodes.iter().find(|n| n.name == "merge0").unwrap();
+        assert_eq!(merge.shape, vec![1, 16, 64]);
+    }
+
+    #[test]
+    fn weight_sites_resolved_in_plan_order() {
+        let p = lower_model("vgg7_mini", 1);
+        let c = cfg("vgg7_mini");
+        let sites = builders::quant_site_specs(&c).unwrap();
+        for n in &p.nodes {
+            let (w, site) = match &n.op {
+                OpKind::Linear { w, site } | OpKind::Conv2d { w, site, .. } => (w, site),
+                OpKind::ActQuant { site } => {
+                    assert_eq!(sites[*site].name, n.name);
+                    continue;
+                }
+                _ => continue,
+            };
+            let site = site.expect("vgg quantizes every weight");
+            assert_eq!(sites[site].name, format!("{w}.weight"));
+        }
+    }
+
+    #[test]
+    fn layer_costs_use_interpreter_shapes() {
+        // conv0 of vgg7: 16x16 output, 3x3 kernel, 3 -> 16 channels
+        let costs = layer_costs(&cfg("vgg7_mini")).unwrap();
+        assert_eq!(costs[0].param, "features.0.weight");
+        assert_eq!(costs[0].macs, (16 * 16 * 9 * 3 * 16) as f64);
+        // the layer after the first pool sees 8x8 inputs
+        let c2 = costs.iter().find(|c| c.param == "features.2.weight").unwrap();
+        assert_eq!(c2.macs, (8 * 8 * 9 * 16 * 32) as f64);
+        // act site feeding features.1 is features.0.act (through no pool)
+        let c1 = costs.iter().find(|c| c.param == "features.1.weight").unwrap();
+        assert_eq!(c1.act_in_site.as_deref(), Some("features.0.act"));
+        // ...and through a pool for features.2
+        assert_eq!(c2.act_in_site.as_deref(), Some("features.1.act"));
+    }
+}

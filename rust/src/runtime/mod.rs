@@ -3,20 +3,28 @@
 //!
 //! Two implementations exist:
 //!
-//! * [`native::NativeEngine`] — a pure-Rust reference backend (currently
-//!   the `mlp` family) that synthesizes its own in-memory [`Manifest`] and
-//!   computes forward/backward with per-site fake-quantization and STE
-//!   gradients for (d, t, q_m). It needs no Python, JAX or XLA, which is
-//!   what makes `cargo test` hermetic on a clean machine.
+//! * [`native::NativeEngine`] — a pure-Rust manifest-driven interpreter
+//!   covering **every zoo family** (mlp, vgg, resnet, bert, gpt, vit,
+//!   swin). Each config is lowered to a typed op IR
+//!   ([`lowering`]: linear, conv-as-im2col, batch/layer norm, residual
+//!   add, multi-head attention, gelu/relu, patch embed/merge, pooling) and
+//!   executed by [`interp`] with per-site fake-quantization and STE
+//!   gradients for (d, t, q_m). It synthesizes its own in-memory
+//!   [`Manifest`] and needs no Python, JAX or XLA, which is what makes
+//!   `cargo test` hermetic — CNN and transformer e2e runs included — on a
+//!   clean machine.
 //! * `pjrt::Engine` (behind the `pjrt` cargo feature) — loads the AOT
 //!   artifacts produced by `make artifacts` (python/compile/aot.py) and
-//!   executes the compiled HLO through a PJRT CPU client. This covers every
-//!   model family the JAX zoo lowers.
+//!   executes the compiled HLO through a PJRT CPU client.
 //!
 //! The coordinator, QASSO, subnet construction and BOPs accounting all run
 //! on the [`Backend`] trait and cannot tell the two apart: the manifest is
-//! the single interface in both directions.
+//! the single interface in both directions. BOPs accounting additionally
+//! reads per-layer MAC counts off the lowered program's real op shapes
+//! (`lowering::layer_costs`).
 
+pub mod interp;
+pub mod lowering;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
@@ -173,9 +181,9 @@ pub fn init_qparams_for(manifest: &Manifest, params: &ParamStore, init_bits: f32
 /// Pick the best available backend for `model`.
 ///
 /// With the `pjrt` feature and AOT artifacts present, the compiled-HLO
-/// engine wins; otherwise the native reference backend is used. Model
-/// families the native backend does not implement produce an error naming
-/// the fix (`make artifacts` + `--features pjrt`).
+/// engine wins; otherwise the native interpreter serves the model (it
+/// lowers every zoo family). Unknown models or families outside
+/// [`native::lowered_families`] produce an error naming the family.
 pub fn load_backend(art_dir: &std::path::Path, model: &str) -> Result<Box<dyn Backend>> {
     // per-model gate, matching `manifest_for`: a partial artifacts dir
     // (subset `make artifacts` run) must not shadow natively served models

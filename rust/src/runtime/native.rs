@@ -9,23 +9,28 @@
 //!    `python/compile/models/` name-for-name and shape-for-shape (the same
 //!    contract `python/compile/aot.py` exports). This lets the graph /
 //!    search-space / BOPs contract tests run with zero artifacts.
-//! 2. **`NativeEngine`** — a reference implementation of the `mlp` family
-//!    (dense layers + ReLU + softmax cross-entropy) matching
-//!    `python/compile/models/cnn.py::make_apply_mlp`: weights fake-quantized
-//!    at their sites on the forward pass, activations quantized after each
-//!    ReLU, and the backward pass producing clipped-STE weight gradients
-//!    plus the eq. (4)-(6) scalar (d, t, q_m) gradients per site — exactly
-//!    the `TrainOut` contract of the PJRT engine, so QASSO, subnet
-//!    construction and BOPs accounting run unchanged on top of it.
+//! 2. **`NativeEngine`** — a manifest-driven interpreter covering every
+//!    zoo family (conv *and* attention). The model config is lowered to a
+//!    typed op IR (`runtime/lowering.rs`: linear, conv-as-im2col,
+//!    batch/layer norm, residual add, multi-head attention, gelu/relu,
+//!    patch embed/merge, pooling) and executed by `runtime/interp.rs`:
+//!    weights fake-quantized at their sites on the forward pass,
+//!    activation sites quantized in place, and the backward pass producing
+//!    clipped-STE weight gradients plus the eq. (4)-(6) scalar (d, t, q_m)
+//!    gradients per site — exactly the `TrainOut` contract of the PJRT
+//!    engine, so QASSO, subnet construction and BOPs accounting run
+//!    unchanged on top of it.
 
 use anyhow::{Context, Result};
 
-use super::{Backend, BatchSpec, EvalOut, HostArray, Manifest, TrainOut};
+use super::lowering::{self, Program};
+use super::{interp, Backend, BatchSpec, EvalOut, HostArray, Manifest, TrainOut};
 use crate::graph::builders;
-use crate::optim::qasso::SiteSpec;
-use crate::quant::{self, QParams};
-use crate::tensor::{ParamStore, Tensor};
+use crate::quant::QParams;
+use crate::tensor::ParamStore;
 use crate::util::json::{self, Json};
+
+pub use super::lowering::lowered_families;
 
 /// Batch sizes per task, mirroring python/compile/models/__init__.py BATCH.
 fn batch_size_for(task: &str) -> usize {
@@ -224,13 +229,7 @@ fn param_specs(cfg: &Json) -> Result<Vec<(String, Vec<usize>)>> {
 pub fn synth_manifest(cfg: &Json) -> Result<Manifest> {
     let task = cfg.str_or("task", "image_cls");
     let params = param_specs(cfg)?;
-    let qsites: Vec<SiteSpec> = builders::quant_sites(cfg)?
-        .into_iter()
-        .map(|(name, kind)| SiteSpec {
-            param: (kind == "weight").then(|| name.clone()),
-            name,
-        })
-        .collect();
+    let qsites = builders::quant_site_specs(cfg)?;
     let bsz = batch_size_for(&task);
     let seq = cfg.usize_or("seq_len", 32);
     let (x_shape, x_dtype, y_shape, y_dtype) = match task.as_str() {
@@ -283,249 +282,31 @@ pub fn synth_manifest_for(model: &str) -> Result<Manifest> {
 
 // ------------------------------------------------------------ NativeEngine
 
-fn param_shape<'m>(manifest: &'m Manifest, name: &str) -> Result<&'m Vec<usize>> {
-    manifest
-        .params
-        .iter()
-        .find(|(p, _)| p == name)
-        .map(|(_, s)| s)
-        .with_context(|| format!("manifest missing {name}"))
-}
-
-/// Pure-Rust MLP engine (see module docs). One instance per model.
+/// Manifest-driven interpreter engine (see module docs). One instance per
+/// model; covers every family in [`lowered_families`].
 pub struct NativeEngine {
     manifest: Manifest,
-    /// Layer widths `[din, hidden..., num_classes]`.
-    dims: Vec<usize>,
-    /// Per linear layer (incl. head): quant-site row of its weight.
-    weight_site: Vec<Option<usize>>,
-    /// Per hidden layer: quant-site row of its post-ReLU activation.
-    act_site: Vec<Option<usize>>,
-    /// Per linear layer: parameter names ("fcN"/"head").
-    layer_names: Vec<String>,
+    program: Program,
 }
 
 impl NativeEngine {
     pub fn new(model: &str) -> Result<NativeEngine> {
         let cfg = embedded_config(model)
             .with_context(|| format!("no embedded config for model `{model}`"))?;
-        let family = cfg.str_or("family", "");
-        anyhow::ensure!(
-            family == "mlp",
-            "native backend implements family `mlp` only (got `{family}` for `{model}`); \
-             run `make artifacts` and build with `--features pjrt` for the full zoo"
-        );
-        let manifest = synth_manifest(&cfg)?;
-        let mut layer_names: Vec<String> = (0..cfg.usize_arr("hidden").len())
-            .map(|i| format!("fc{i}"))
-            .collect();
-        layer_names.push("head".to_string());
-        // derive the layer widths from the manifest's own weight shapes so
-        // the engine cannot desync from the params it just planned
-        let mut dims = vec![param_shape(&manifest, &format!("{}.weight", layer_names[0]))?[0]];
-        for n in &layer_names {
-            dims.push(param_shape(&manifest, &format!("{n}.weight"))?[1]);
-        }
-        let site_idx = |name: &str| -> Option<usize> {
-            manifest.qsites.iter().position(|s| s.name == name)
-        };
-        let weight_site = layer_names
-            .iter()
-            .map(|n| site_idx(&format!("{n}.weight")))
-            .collect();
-        let act_site = (0..layer_names.len() - 1)
-            .map(|i| site_idx(&format!("fc{i}.act")))
-            .collect();
-        Ok(NativeEngine {
-            manifest,
-            dims,
-            weight_site,
-            act_site,
-            layer_names,
-        })
+        NativeEngine::from_config(&cfg)
     }
 
-    fn weight<'a>(&self, params: &'a ParamStore, layer: usize) -> Result<&'a Tensor> {
-        params
-            .get(&format!("{}.weight", self.layer_names[layer]))
-            .with_context(|| format!("missing weight for layer {}", self.layer_names[layer]))
+    /// Build an engine for an arbitrary config (tests drive tiny custom
+    /// configs through the full synth-manifest + lowering pipeline).
+    pub fn from_config(cfg: &Json) -> Result<NativeEngine> {
+        let manifest = synth_manifest(cfg)?;
+        let program = lowering::lower(cfg, &manifest.qsites, manifest.batch.batch_size())?;
+        Ok(NativeEngine { manifest, program })
     }
 
-    fn bias<'a>(&self, params: &'a ParamStore, layer: usize) -> Result<&'a Tensor> {
-        params
-            .get(&format!("{}.bias", self.layer_names[layer]))
-            .with_context(|| format!("missing bias for layer {}", self.layer_names[layer]))
-    }
-
-    /// Forward (and optionally backward) over one batch.
-    fn run(
-        &self,
-        params: &ParamStore,
-        q: &[QParams],
-        x: &HostArray,
-        y: &HostArray,
-        with_grads: bool,
-    ) -> Result<(f32, f32, Option<(ParamStore, Vec<(f32, f32, f32)>)>)> {
-        let m = &self.manifest;
-        let nl = self.dims.len() - 1; // linear layers incl. head
-        let b = m.batch.batch_size();
-        let ncls = self.dims[nl];
-        let HostArray::F32(xv) = x else {
-            anyhow::bail!("mlp expects f32 inputs")
-        };
-        let HostArray::I32(yv) = y else {
-            anyhow::bail!("mlp expects i32 labels")
-        };
-        anyhow::ensure!(xv.len() == b * self.dims[0], "x size mismatch");
-        anyhow::ensure!(yv.len() == b, "y size mismatch");
-        anyhow::ensure!(q.len() == m.qsites.len(), "qparam count mismatch");
-
-        // ---- fake-quantized weights per site (eq. 1-2 on the fwd pass)
-        let mut wq: Vec<Vec<f32>> = Vec::with_capacity(nl);
-        for l in 0..nl {
-            let w = &self.weight(params, l)?.data;
-            wq.push(match self.weight_site[l] {
-                Some(s) => w.iter().map(|&v| quant::fake_quant(v, &q[s])).collect(),
-                None => w.clone(),
-            });
-        }
-
-        // ---- forward
-        // inputs[l] = the (quantized) activations feeding layer l
-        let mut inputs: Vec<Vec<f32>> = Vec::with_capacity(nl);
-        inputs.push(xv.clone());
-        // post-ReLU, pre-act-quant activations of each hidden layer
-        let mut relu_out: Vec<Vec<f32>> = Vec::with_capacity(nl - 1);
-        for l in 0..nl - 1 {
-            let bias = &self.bias(params, l)?.data;
-            let mut z = affine(&inputs[l], &wq[l], bias, b, self.dims[l], self.dims[l + 1]);
-            for v in z.iter_mut() {
-                *v = v.max(0.0);
-            }
-            let aq = match self.act_site[l] {
-                Some(s) => z.iter().map(|&v| quant::fake_quant(v, &q[s])).collect(),
-                None => z.clone(),
-            };
-            relu_out.push(z);
-            inputs.push(aq);
-        }
-        let head_bias = &self.bias(params, nl - 1)?.data;
-        let logits = affine(
-            &inputs[nl - 1],
-            &wq[nl - 1],
-            head_bias,
-            b,
-            self.dims[nl - 1],
-            ncls,
-        );
-
-        // ---- softmax cross-entropy + correct count
-        let mut probs = logits;
-        let mut loss = 0.0f64;
-        let mut correct = 0.0f32;
-        for i in 0..b {
-            let row = &mut probs[i * ncls..(i + 1) * ncls];
-            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0f64;
-            for v in row.iter_mut() {
-                *v = (*v - max).exp();
-                sum += *v as f64;
-            }
-            for v in row.iter_mut() {
-                *v = (*v as f64 / sum) as f32;
-            }
-            let mut argmax = 0;
-            for j in 1..ncls {
-                if row[j] > row[argmax] {
-                    argmax = j;
-                }
-            }
-            let label = yv[i] as usize;
-            anyhow::ensure!(label < ncls, "label {label} out of range");
-            loss -= (row[label].max(1e-12) as f64).ln();
-            if argmax == label {
-                correct += 1.0;
-            }
-        }
-        let loss = (loss / b as f64) as f32;
-        if !with_grads {
-            return Ok((loss, correct, None));
-        }
-
-        // ---- backward
-        let mut grads = params.zeros_like();
-        let mut qgrads = vec![(0.0f32, 0.0f32, 0.0f32); m.qsites.len()];
-        // d loss / d logits
-        let mut cot = probs;
-        for i in 0..b {
-            cot[i * ncls + yv[i] as usize] -= 1.0;
-        }
-        let scale = 1.0 / b as f32;
-        for v in cot.iter_mut() {
-            *v *= scale;
-        }
-        for l in (0..nl).rev() {
-            let (din, dout) = (self.dims[l], self.dims[l + 1]);
-            // grads wrt the *quantized* weight, then STE back to the raw one
-            let mut gw = grad_weights(&inputs[l], &cot, b, din, dout);
-            if let Some(s) = self.weight_site[l] {
-                let w = &self.weight(params, l)?.data;
-                let qg = &mut qgrads[s];
-                for (i, &wi) in w.iter().enumerate() {
-                    let g = gw[i];
-                    qg.0 += g * quant::grad_d(wi, &q[s]);
-                    qg.1 += g * quant::grad_t(wi, &q[s]);
-                    qg.2 += g * quant::grad_qm(wi, &q[s]);
-                    // clipped STE: pass-through inside the clip range only
-                    if wi.abs() > q[s].qm {
-                        gw[i] = 0.0;
-                    }
-                }
-            }
-            let name = &self.layer_names[l];
-            grads
-                .get_mut(&format!("{name}.weight"))
-                .with_context(|| format!("grad store missing {name}.weight"))?
-                .data
-                .copy_from_slice(&gw);
-            let gb = &mut grads
-                .get_mut(&format!("{name}.bias"))
-                .with_context(|| format!("grad store missing {name}.bias"))?
-                .data;
-            for i in 0..b {
-                for j in 0..dout {
-                    gb[j] += cot[i * dout + j];
-                }
-            }
-            if l == 0 {
-                break;
-            }
-            // propagate to the layer input: cot @ wq^T
-            let mut gh = matmul_nt(&cot, &wq[l], b, dout, din);
-            // through the activation fake-quant (contract before masking:
-            // the site grads use the cotangent wrt the quantizer *output*)
-            if let Some(s) = self.act_site[l - 1] {
-                let a = &relu_out[l - 1];
-                let qg = &mut qgrads[s];
-                for (i, &ai) in a.iter().enumerate() {
-                    let g = gh[i];
-                    qg.0 += g * quant::grad_d(ai, &q[s]);
-                    qg.1 += g * quant::grad_t(ai, &q[s]);
-                    qg.2 += g * quant::grad_qm(ai, &q[s]);
-                    if ai.abs() > q[s].qm {
-                        gh[i] = 0.0;
-                    }
-                }
-            }
-            // through the ReLU
-            for (i, &ai) in relu_out[l - 1].iter().enumerate() {
-                if ai <= 0.0 {
-                    gh[i] = 0.0;
-                }
-            }
-            cot = gh;
-        }
-        Ok((loss, correct, Some((grads, qgrads))))
+    /// The lowered op program this engine executes.
+    pub fn program(&self) -> &Program {
+        &self.program
     }
 }
 
@@ -545,13 +326,13 @@ impl Backend for NativeEngine {
         x: &HostArray,
         y: &HostArray,
     ) -> Result<TrainOut> {
-        let (loss, metric, g) = self.run(params, q, x, y, true)?;
-        let (grads, qgrads) = g.expect("grads requested");
+        let out = interp::run(&self.program, self.manifest.qsites.len(), params, q, x, y, true)?;
+        let (grads, qgrads) = out.grads.expect("training pass produces gradients");
         Ok(TrainOut {
-            loss,
+            loss: out.loss,
             grads,
             qgrads,
-            metric,
+            metric: out.metric,
         })
     }
 
@@ -562,64 +343,13 @@ impl Backend for NativeEngine {
         x: &HostArray,
         y: &HostArray,
     ) -> Result<EvalOut> {
-        let (loss, metric, _) = self.run(params, q, x, y, false)?;
+        let out = interp::run(&self.program, self.manifest.qsites.len(), params, q, x, y, false)?;
         Ok(EvalOut {
-            loss,
-            metric,
-            extra: Vec::new(),
+            loss: out.loss,
+            metric: out.metric,
+            extra: out.extra,
         })
     }
-}
-
-// ----------------------------------------------------------- dense kernels
-
-/// `x[b, din] @ w[din, dout] + bias[dout]` (row-major flat buffers).
-fn affine(x: &[f32], w: &[f32], bias: &[f32], b: usize, din: usize, dout: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), b * din);
-    debug_assert_eq!(w.len(), din * dout);
-    let mut out = vec![0.0f32; b * dout];
-    for i in 0..b {
-        let xrow = &x[i * din..(i + 1) * din];
-        let orow = &mut out[i * dout..(i + 1) * dout];
-        orow.copy_from_slice(bias);
-        for (k, &xk) in xrow.iter().enumerate() {
-            if xk == 0.0 {
-                continue;
-            }
-            let wrow = &w[k * dout..(k + 1) * dout];
-            crate::tensor::axpy(xk, wrow, orow);
-        }
-    }
-    out
-}
-
-/// `x[b, din]^T @ cot[b, dout]` -> grads `[din, dout]`.
-fn grad_weights(x: &[f32], cot: &[f32], b: usize, din: usize, dout: usize) -> Vec<f32> {
-    let mut gw = vec![0.0f32; din * dout];
-    for i in 0..b {
-        let xrow = &x[i * din..(i + 1) * din];
-        let crow = &cot[i * dout..(i + 1) * dout];
-        for (k, &xk) in xrow.iter().enumerate() {
-            if xk == 0.0 {
-                continue;
-            }
-            crate::tensor::axpy(xk, crow, &mut gw[k * dout..(k + 1) * dout]);
-        }
-    }
-    gw
-}
-
-/// `cot[b, dout] @ w[din, dout]^T` -> `[b, din]`.
-fn matmul_nt(cot: &[f32], w: &[f32], b: usize, dout: usize, din: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; b * din];
-    for i in 0..b {
-        let crow = &cot[i * dout..(i + 1) * dout];
-        let orow = &mut out[i * din..(i + 1) * din];
-        for k in 0..din {
-            orow[k] = crate::tensor::dot(crow, &w[k * dout..(k + 1) * dout]) as f32;
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -753,9 +483,26 @@ mod tests {
     }
 
     #[test]
-    fn unsupported_family_reports_fix() {
-        let err = NativeEngine::new("bert_mini").unwrap_err().to_string();
-        assert!(err.contains("make artifacts"), "{err}");
+    fn every_embedded_model_constructs_an_engine() {
+        // the interpreter covers the whole zoo: no family may fall back to
+        // "needs pjrt" errors anymore
+        for model in model_names() {
+            let e = NativeEngine::new(&model).unwrap();
+            assert_eq!(e.manifest().model, model);
+            assert!(!e.program().nodes.is_empty(), "{model}");
+        }
+    }
+
+    #[test]
+    fn unknown_family_error_names_the_family() {
+        let cfg = json::parse(
+            r#"{"name": "mystery", "family": "capsule", "task": "image_cls",
+                "image": {"size": 8, "channels": 3},
+                "quant": {"weight": true, "act": false}}"#,
+        )
+        .unwrap();
+        let err = NativeEngine::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("capsule"), "{err}");
         assert!(NativeEngine::new("nope").is_err());
     }
 }

@@ -84,6 +84,408 @@ pub fn scatter_strided(data: &mut [f32], start: usize, stride: usize, vals: &[f3
     assert_eq!(k, vals.len());
 }
 
+// ------------------------------------------------------------ dense GEMM
+//
+// The interpreter's matmuls (runtime/interp.rs). All three accumulate in
+// f64: layer widths stay small but im2col rows reach ~8k, where f32
+// accumulation visibly drifts (see `dot_accumulates_in_f64_on_large_inputs`).
+
+/// `a[m,k] @ b[k,n]` (row-major flat buffers), f64 row accumulator.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    let mut acc = vec![0.0f64; n];
+    for i in 0..m {
+        for v in acc.iter_mut() {
+            *v = 0.0;
+        }
+        for kk in 0..k {
+            let av = a[i * k + kk] as f64;
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                acc[j] += av * brow[j] as f64;
+            }
+        }
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            orow[j] = acc[j] as f32;
+        }
+    }
+    out
+}
+
+/// `a[m,k]^T @ b[m,n] -> [k,n]` (weight-gradient shape), f64 accumulator.
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut acc = vec![0.0f64; k * n];
+    for i in 0..m {
+        let brow = &b[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = a[i * k + kk] as f64;
+            if av == 0.0 {
+                continue;
+            }
+            let arow = &mut acc[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                arow[j] += av * brow[j] as f64;
+            }
+        }
+    }
+    acc.iter().map(|&v| v as f32).collect()
+}
+
+/// `a[m,k] @ b[n,k]^T -> [m,n]` (input-gradient shape): both operands are
+/// walked along contiguous rows, so this is a dot per output element.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            orow[j] = dot(arow, &b[j * k..(j + 1) * k]) as f32;
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------- convolution
+//
+// NHWC inputs, HWIO weights (the zoo's layout, see python/compile/models/
+// common.py). Conv executes as im2col + GEMM; `col2im` is the transpose
+// scatter used by the input gradient.
+
+/// Output extent and low-side padding of one spatial dim.
+/// `same = true` mirrors XLA SAME semantics (out = ceil(in/stride),
+/// pad_total split low-biased); `false` is VALID (no padding).
+pub fn conv_out_dim(h: usize, k: usize, stride: usize, same: bool) -> (usize, usize) {
+    if same {
+        let out = h.div_ceil(stride);
+        let total = ((out - 1) * stride + k).max(h) - h;
+        (out, total / 2)
+    } else {
+        ((h - k) / stride + 1, 0)
+    }
+}
+
+/// `x[b,h,w,c] -> cols[b*ho*wo, k*k*c]`, column index `(kh*k + kw)*c + ci`
+/// (matches the HWIO weight flattened to `[k*k*c, cout]`). Out-of-image
+/// taps stay zero.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), bsz * h * w * c);
+    let mut cols = vec![0.0f32; bsz * ho * wo * k * k * c];
+    let rowlen = k * k * c;
+    for bi in 0..bsz {
+        for oh in 0..ho {
+            for kh in 0..k {
+                let ih = (oh * stride + kh) as isize - pad as isize;
+                if ih < 0 || ih >= h as isize {
+                    continue;
+                }
+                for ow in 0..wo {
+                    let r = (bi * ho + oh) * wo + ow;
+                    for kw in 0..k {
+                        let iw = (ow * stride + kw) as isize - pad as isize;
+                        if iw < 0 || iw >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + ih as usize) * w + iw as usize) * c;
+                        let dst = r * rowlen + (kh * k + kw) * c;
+                        cols[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Transpose of [`im2col`]: scatter-add column gradients back onto the
+/// input image. `gcols` is `[b*ho*wo, k*k*c]`.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    gcols: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+) -> Vec<f32> {
+    assert_eq!(gcols.len(), bsz * ho * wo * k * k * c);
+    let mut gx = vec![0.0f32; bsz * h * w * c];
+    let rowlen = k * k * c;
+    for bi in 0..bsz {
+        for oh in 0..ho {
+            for kh in 0..k {
+                let ih = (oh * stride + kh) as isize - pad as isize;
+                if ih < 0 || ih >= h as isize {
+                    continue;
+                }
+                for ow in 0..wo {
+                    let r = (bi * ho + oh) * wo + ow;
+                    for kw in 0..k {
+                        let iw = (ow * stride + kw) as isize - pad as isize;
+                        if iw < 0 || iw >= w as isize {
+                            continue;
+                        }
+                        let dst = ((bi * h + ih as usize) * w + iw as usize) * c;
+                        let src = r * rowlen + (kh * k + kw) * c;
+                        axpy(1.0, &gcols[src..src + c], &mut gx[dst..dst + c]);
+                    }
+                }
+            }
+        }
+    }
+    gx
+}
+
+// -------------------------------------------------------- normalizations
+//
+// One shared shape: `x[rows, c]` flat. LayerNorm normalizes each row over
+// its `c` entries; BatchNorm normalizes each of the `c` channels over the
+// `rows` axis (batch statistics, stateless — DESIGN.md decision 3).
+
+/// Saved forward state the normalization backward passes consume.
+#[derive(Debug, Clone)]
+pub struct NormAux {
+    /// Normalized activations (x - mu) / sqrt(var + eps), same layout as x.
+    pub xhat: Vec<f32>,
+    /// 1/sqrt(var + eps): one entry per row (layernorm) or per channel
+    /// (batchnorm).
+    pub inv: Vec<f32>,
+}
+
+/// LayerNorm forward: y = xhat * gamma + beta per row.
+pub fn layernorm_rows(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    c: usize,
+    eps: f32,
+) -> (Vec<f32>, NormAux) {
+    assert_eq!(x.len(), rows * c);
+    assert_eq!(gamma.len(), c);
+    assert_eq!(beta.len(), c);
+    let mut y = vec![0.0f32; rows * c];
+    let mut xhat = vec![0.0f32; rows * c];
+    let mut inv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * c..(r + 1) * c];
+        let mut mu = 0.0f64;
+        for &v in xr {
+            mu += v as f64;
+        }
+        mu /= c as f64;
+        let mut var = 0.0f64;
+        for &v in xr {
+            let dlt = v as f64 - mu;
+            var += dlt * dlt;
+        }
+        var /= c as f64;
+        let iv = 1.0 / (var + eps as f64).sqrt();
+        inv[r] = iv as f32;
+        for j in 0..c {
+            let xh = ((xr[j] as f64 - mu) * iv) as f32;
+            xhat[r * c + j] = xh;
+            y[r * c + j] = xh * gamma[j] + beta[j];
+        }
+    }
+    (y, NormAux { xhat, inv })
+}
+
+/// LayerNorm backward: returns (dx, dgamma, dbeta).
+pub fn layernorm_bwd_rows(
+    gamma: &[f32],
+    cot: &[f32],
+    aux: &NormAux,
+    rows: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(cot.len(), rows * c);
+    let mut gx = vec![0.0f32; rows * c];
+    let mut ggamma64 = vec![0.0f64; c];
+    let mut gbeta64 = vec![0.0f64; c];
+    for r in 0..rows {
+        let cr = &cot[r * c..(r + 1) * c];
+        let xh = &aux.xhat[r * c..(r + 1) * c];
+        let mut s1 = 0.0f64; // sum dxhat
+        let mut s2 = 0.0f64; // sum dxhat * xhat
+        for j in 0..c {
+            let dxh = (cr[j] * gamma[j]) as f64;
+            s1 += dxh;
+            s2 += dxh * xh[j] as f64;
+            ggamma64[j] += (cr[j] * xh[j]) as f64;
+            gbeta64[j] += cr[j] as f64;
+        }
+        let m = c as f64;
+        let iv = aux.inv[r] as f64;
+        for j in 0..c {
+            let dxh = (cr[j] * gamma[j]) as f64;
+            gx[r * c + j] = (iv / m * (m * dxh - s1 - xh[j] as f64 * s2)) as f32;
+        }
+    }
+    let ggamma = ggamma64.iter().map(|&v| v as f32).collect();
+    let gbeta = gbeta64.iter().map(|&v| v as f32).collect();
+    (gx, ggamma, gbeta)
+}
+
+/// BatchNorm forward over the rows axis (per-channel batch statistics).
+pub fn batchnorm_rows(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    c: usize,
+    eps: f32,
+) -> (Vec<f32>, NormAux) {
+    assert_eq!(x.len(), rows * c);
+    assert_eq!(gamma.len(), c);
+    assert_eq!(beta.len(), c);
+    let mut mu = vec![0.0f64; c];
+    for r in 0..rows {
+        for j in 0..c {
+            mu[j] += x[r * c + j] as f64;
+        }
+    }
+    for v in mu.iter_mut() {
+        *v /= rows as f64;
+    }
+    let mut var = vec![0.0f64; c];
+    for r in 0..rows {
+        for j in 0..c {
+            let dlt = x[r * c + j] as f64 - mu[j];
+            var[j] += dlt * dlt;
+        }
+    }
+    let inv: Vec<f32> = var
+        .iter()
+        .map(|&v| (1.0 / (v / rows as f64 + eps as f64).sqrt()) as f32)
+        .collect();
+    let mut y = vec![0.0f32; rows * c];
+    let mut xhat = vec![0.0f32; rows * c];
+    for r in 0..rows {
+        for j in 0..c {
+            let xh = ((x[r * c + j] as f64 - mu[j]) * inv[j] as f64) as f32;
+            xhat[r * c + j] = xh;
+            y[r * c + j] = xh * gamma[j] + beta[j];
+        }
+    }
+    (y, NormAux { xhat, inv })
+}
+
+/// BatchNorm backward: returns (dx, dgamma, dbeta).
+pub fn batchnorm_bwd_rows(
+    gamma: &[f32],
+    cot: &[f32],
+    aux: &NormAux,
+    rows: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(cot.len(), rows * c);
+    let mut s1 = vec![0.0f64; c]; // sum dxhat per channel
+    let mut s2 = vec![0.0f64; c]; // sum dxhat * xhat per channel
+    let mut ggamma64 = vec![0.0f64; c];
+    let mut gbeta64 = vec![0.0f64; c];
+    for r in 0..rows {
+        for j in 0..c {
+            let ct = cot[r * c + j];
+            let dxh = (ct * gamma[j]) as f64;
+            s1[j] += dxh;
+            s2[j] += dxh * aux.xhat[r * c + j] as f64;
+            ggamma64[j] += (ct * aux.xhat[r * c + j]) as f64;
+            gbeta64[j] += ct as f64;
+        }
+    }
+    let m = rows as f64;
+    let mut gx = vec![0.0f32; rows * c];
+    for r in 0..rows {
+        for j in 0..c {
+            let dxh = (cot[r * c + j] * gamma[j]) as f64;
+            let iv = aux.inv[j] as f64;
+            gx[r * c + j] =
+                (iv / m * (m * dxh - s1[j] - aux.xhat[r * c + j] as f64 * s2[j])) as f32;
+        }
+    }
+    let ggamma = ggamma64.iter().map(|&v| v as f32).collect();
+    let gbeta = gbeta64.iter().map(|&v| v as f32).collect();
+    (gx, ggamma, gbeta)
+}
+
+// ---------------------------------------------------------- softmax/gelu
+
+/// Row-wise softmax in place (`x[rows, n]`), f64 denominator.
+pub fn softmax_rows(x: &mut [f32], rows: usize, n: usize) {
+    assert_eq!(x.len(), rows * n);
+    for r in 0..rows {
+        let row = &mut x[r * n..(r + 1) * n];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f64;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v as f64;
+        }
+        for v in row.iter_mut() {
+            *v = (*v as f64 / sum) as f32;
+        }
+    }
+}
+
+/// Softmax backward per row: dx = p * (cot - <cot, p>).
+pub fn softmax_bwd_rows(p: &[f32], cot: &[f32], rows: usize, n: usize) -> Vec<f32> {
+    assert_eq!(p.len(), rows * n);
+    assert_eq!(cot.len(), rows * n);
+    let mut gx = vec![0.0f32; rows * n];
+    for r in 0..rows {
+        let pr = &p[r * n..(r + 1) * n];
+        let cr = &cot[r * n..(r + 1) * n];
+        let s = dot(pr, cr);
+        for j in 0..n {
+            gx[r * n + j] = pr[j] * (cr[j] as f64 - s) as f32;
+        }
+    }
+    gx
+}
+
+const GELU_SQRT_2_OVER_PI: f32 = 0.797_884_6;
+const GELU_COEF: f32 = 0.044715;
+
+/// Tanh-approximated GELU (the `jax.nn.gelu` default the zoo uses).
+pub fn gelu(x: f32) -> f32 {
+    let u = GELU_SQRT_2_OVER_PI * (x + GELU_COEF * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+/// d gelu / dx of the tanh approximation.
+pub fn gelu_grad(x: f32) -> f32 {
+    let u = GELU_SQRT_2_OVER_PI * (x + GELU_COEF * x * x * x);
+    let t = u.tanh();
+    let du = GELU_SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_COEF * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,5 +631,307 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn matmul_hand_values() {
+        // [2,3] @ [3,2]
+        let a = [1., 2., 3., 4., 5., 6.];
+        let b = [7., 8., 9., 10., 11., 12.];
+        assert_eq!(matmul(&a, &b, 2, 3, 2), vec![58., 64., 139., 154.]);
+        // a^T @ a = gram matrix of columns
+        let g = matmul_tn(&a, &a, 2, 3, 3);
+        assert_eq!(g[0], 1. + 16.); // col0 . col0
+        assert_eq!(g[1], 2. + 20.); // col0 . col1
+        // a @ a^T = gram matrix of rows
+        let r = matmul_nt(&a, &a, 2, 3, 2);
+        assert_eq!(r, vec![14., 32., 32., 77.]);
+    }
+
+    #[test]
+    fn prop_matmul_variants_agree_with_transposed_inputs() {
+        // matmul_tn(a, c) == matmul(a^T, c) and matmul_nt(a, b) ==
+        // matmul(a, b^T): the three kernels implement one contraction.
+        prop::check(
+            30,
+            |g| {
+                let m = g.size(6);
+                let k = g.size(6);
+                let n = g.size(6);
+                (
+                    m,
+                    k,
+                    n,
+                    g.vec_normal(m * k, 1.0), // a[m,k]
+                    g.vec_normal(m * n, 1.0), // c[m,n]
+                    g.vec_normal(n * k, 1.0), // b[n,k]
+                )
+            },
+            |(m, k, n, a, c, b)| {
+                let (m, k, n) = (*m, *k, *n);
+                let mut at = vec![0.0f32; k * m];
+                for i in 0..m {
+                    for j in 0..k {
+                        at[j * m + i] = a[i * k + j];
+                    }
+                }
+                let want = matmul(&at, c, k, m, n);
+                let got = matmul_tn(a, c, m, k, n);
+                for i in 0..want.len() {
+                    if (want[i] - got[i]).abs() > 1e-4 {
+                        return Err(format!("tn[{i}]: {} vs {}", got[i], want[i]));
+                    }
+                }
+                let mut bt = vec![0.0f32; k * n];
+                for i in 0..n {
+                    for j in 0..k {
+                        bt[j * n + i] = b[i * k + j];
+                    }
+                }
+                let want = matmul(a, &bt, m, k, n);
+                let got = matmul_nt(a, b, m, k, n);
+                for i in 0..want.len() {
+                    if (want[i] - got[i]).abs() > 1e-4 {
+                        return Err(format!("nt[{i}]: {} vs {}", got[i], want[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Naive direct convolution (independent of the im2col path).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_direct(
+        x: &[f32],
+        w: &[f32],
+        bsz: usize,
+        h: usize,
+        wd: usize,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        same: bool,
+    ) -> Vec<f32> {
+        let (ho, pad) = conv_out_dim(h, k, stride, same);
+        let (wo, _) = conv_out_dim(wd, k, stride, same);
+        let mut y = vec![0.0f32; bsz * ho * wo * cout];
+        for bi in 0..bsz {
+            for oh in 0..ho {
+                for ow in 0..wo {
+                    for kh in 0..k {
+                        let ih = (oh * stride + kh) as isize - pad as isize;
+                        if ih < 0 || ih >= h as isize {
+                            continue;
+                        }
+                        for kw in 0..k {
+                            let iw = (ow * stride + kw) as isize - pad as isize;
+                            if iw < 0 || iw >= wd as isize {
+                                continue;
+                            }
+                            for ci in 0..cin {
+                                let xv = x[((bi * h + ih as usize) * wd + iw as usize) * cin + ci];
+                                for co in 0..cout {
+                                    y[((bi * ho + oh) * wo + ow) * cout + co] +=
+                                        xv * w[((kh * k + kw) * cin + ci) * cout + co];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn prop_conv_im2col_equals_direct() {
+        // the interpreter's conv (im2col + GEMM) against a naive direct
+        // convolution, over random shapes / kernels / strides / paddings
+        prop::check(
+            40,
+            |g| {
+                let h = 2 + g.size(6);
+                let w = 2 + g.size(6);
+                let cin = g.size(3);
+                let cout = g.size(4);
+                let k = if g.f32_in(0.0, 1.0) < 0.5 { 1 } else { 3 };
+                let stride = g.size(2);
+                let same = g.f32_in(0.0, 1.0) < 0.7;
+                let bsz = g.size(2);
+                let x = g.vec_normal(bsz * h * w * cin, 1.0);
+                let wt = g.vec_normal(k * k * cin * cout, 1.0);
+                (h, w, cin, cout, k, stride, same, bsz, x, wt)
+            },
+            |(h, w, cin, cout, k, stride, same, bsz, x, wt)| {
+                let (h, w, cin, cout, k, stride, same, bsz) =
+                    (*h, *w, *cin, *cout, *k, *stride, *same, *bsz);
+                if !same && (h < k || w < k) {
+                    return Ok(()); // VALID needs k to fit
+                }
+                let (ho, pad) = conv_out_dim(h, k, stride, same);
+                let (wo, _) = conv_out_dim(w, k, stride, same);
+                let cols = im2col(x, bsz, h, w, cin, k, stride, pad, ho, wo);
+                let got = matmul(&cols, wt, bsz * ho * wo, k * k * cin, cout);
+                let want = conv_direct(x, wt, bsz, h, w, cin, cout, k, stride, same);
+                for i in 0..want.len() {
+                    if (got[i] - want[i]).abs() > 1e-4 * (1.0 + want[i].abs()) {
+                        return Err(format!(
+                            "y[{i}]: im2col {} vs direct {} (h={h} w={w} k={k} s={stride} same={same})",
+                            got[i], want[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn col2im_is_im2col_transpose() {
+        // <im2col(x), g> == <x, col2im(g)> for random g: the adjoint
+        // property that makes the conv input gradient correct.
+        let mut rng = crate::util::rng::Rng::new(5);
+        let (bsz, h, w, c, k, stride) = (2, 5, 4, 3, 3, 2);
+        let (ho, pad) = conv_out_dim(h, k, stride, true);
+        let (wo, _) = conv_out_dim(w, k, stride, true);
+        let mut x = vec![0.0f32; bsz * h * w * c];
+        rng.fill_normal(&mut x, 1.0);
+        let mut g = vec![0.0f32; bsz * ho * wo * k * k * c];
+        rng.fill_normal(&mut g, 1.0);
+        let cols = im2col(&x, bsz, h, w, c, k, stride, pad, ho, wo);
+        let gx = col2im(&g, bsz, h, w, c, k, stride, pad, ho, wo);
+        let lhs = dot(&cols, &g);
+        let rhs = dot(&x, &gx);
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn conv_out_dims_match_xla_same_semantics() {
+        assert_eq!(conv_out_dim(16, 3, 1, true), (16, 1));
+        assert_eq!(conv_out_dim(16, 3, 2, true), (8, 0)); // pad_total 1 => lo 0
+        assert_eq!(conv_out_dim(16, 1, 2, true), (8, 0));
+        assert_eq!(conv_out_dim(16, 4, 4, false), (4, 0));
+        assert_eq!(conv_out_dim(8, 2, 2, false), (4, 0));
+    }
+
+    #[test]
+    fn softmax_rows_basic() {
+        let mut x = vec![0.0, 0.0, 1000.0, 1000.0];
+        softmax_rows(&mut x, 2, 2);
+        for &v in &x {
+            assert!((v - 0.5).abs() < 1e-6, "{x:?}");
+        }
+        // backward of a uniform distribution with uniform cotangent is zero
+        let g = softmax_bwd_rows(&x, &[1.0; 4], 2, 2);
+        assert!(g.iter().all(|v| v.abs() < 1e-6), "{g:?}");
+    }
+
+    #[test]
+    fn layernorm_normalizes_and_restores_affine() {
+        let x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let gamma = vec![1.0; 3];
+        let beta = vec![0.0; 3];
+        let (y, aux) = layernorm_rows(&x, &gamma, &beta, 2, 3, 1e-5);
+        for r in 0..2 {
+            let row = &y[r * 3..(r + 1) * 3];
+            let mean: f32 = row.iter().sum::<f32>() / 3.0;
+            assert!(mean.abs() < 1e-5, "{row:?}");
+        }
+        assert_eq!(aux.inv.len(), 2);
+        // gamma=2, beta=1 shifts the output affinely
+        let (y2, _) = layernorm_rows(&x, &[2.0; 3], &[1.0; 3], 2, 3, 1e-5);
+        for i in 0..6 {
+            assert!((y2[i] - (2.0 * y[i] + 1.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batchnorm_normalizes_channels() {
+        // channel 0 constant => xhat 0; channel 1 symmetric => +-1-ish
+        let x = vec![5.0, -2.0, 5.0, 2.0];
+        let (y, _) = batchnorm_rows(&x, &[1.0, 1.0], &[0.0, 0.0], 2, 2, 1e-5);
+        assert!(y[0].abs() < 1e-3 && y[2].abs() < 1e-3, "{y:?}");
+        assert!((y[1] + 1.0).abs() < 1e-2 && (y[3] - 1.0).abs() < 1e-2, "{y:?}");
+    }
+
+    #[test]
+    fn norm_backward_matches_finite_differences() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let (rows, c) = (5, 4);
+        let mut x = vec![0.0f32; rows * c];
+        rng.fill_normal(&mut x, 1.0);
+        let mut gamma = vec![1.0f32; c];
+        rng.fill_normal(&mut gamma, 0.2);
+        let beta = vec![0.1f32; c];
+        let mut cot = vec![0.0f32; rows * c];
+        rng.fill_normal(&mut cot, 1.0);
+        let h = 1e-3f32;
+        for layer in [true, false] {
+            let fwd = |x: &[f32]| -> Vec<f32> {
+                if layer {
+                    layernorm_rows(x, &gamma, &beta, rows, c, 1e-5).0
+                } else {
+                    batchnorm_rows(x, &gamma, &beta, rows, c, 1e-5).0
+                }
+            };
+            let aux = if layer {
+                layernorm_rows(&x, &gamma, &beta, rows, c, 1e-5).1
+            } else {
+                batchnorm_rows(&x, &gamma, &beta, rows, c, 1e-5).1
+            };
+            let (gx, ggamma, gbeta) = if layer {
+                layernorm_bwd_rows(&gamma, &cot, &aux, rows, c)
+            } else {
+                batchnorm_bwd_rows(&gamma, &cot, &aux, rows, c)
+            };
+            for &i in &[0usize, 7, rows * c - 1] {
+                let mut xp = x.clone();
+                xp[i] += h;
+                let mut xm = x.clone();
+                xm[i] -= h;
+                let fd = (dot(&fwd(&xp), &cot) - dot(&fwd(&xm), &cot)) / (2.0 * h as f64);
+                assert!(
+                    (gx[i] as f64 - fd).abs() < 1e-2 * (1.0 + fd.abs()),
+                    "layer={layer} gx[{i}]: {} vs {fd}",
+                    gx[i]
+                );
+            }
+            // gamma/beta gradients: direct sums, spot-check one entry
+            let mut gp = gamma.clone();
+            gp[1] += h;
+            let fd = if layer {
+                (dot(&layernorm_rows(&x, &gp, &beta, rows, c, 1e-5).0, &cot)
+                    - dot(&layernorm_rows(&x, &gamma, &beta, rows, c, 1e-5).0, &cot))
+                    / h as f64
+            } else {
+                (dot(&batchnorm_rows(&x, &gp, &beta, rows, c, 1e-5).0, &cot)
+                    - dot(&batchnorm_rows(&x, &gamma, &beta, rows, c, 1e-5).0, &cot))
+                    / h as f64
+            };
+            assert!(
+                (ggamma[1] as f64 - fd).abs() < 1e-2 * (1.0 + fd.abs()),
+                "layer={layer} ggamma: {} vs {fd}",
+                ggamma[1]
+            );
+            assert!(gbeta.iter().zip(cot.chunks(c).fold(vec![0.0f32; c], |mut a, r| {
+                for j in 0..c {
+                    a[j] += r[j];
+                }
+                a
+            }).iter()).all(|(g, s)| (g - s).abs() < 1e-4));
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_differences() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3f32;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}: {} vs {fd}", gelu_grad(x));
+        }
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4); // identity in the far tail
     }
 }

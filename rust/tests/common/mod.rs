@@ -6,14 +6,28 @@ pub fn art_dir() -> PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// The backend-or-skip policy, held in one place: skipping a model is
-/// legitimate only when no usable backend exists for it — the native
-/// engine does not implement the family and either artifacts/`pjrt` are
-/// absent or the vendored xla stub is what is linked. A `pjrt` build with
-/// real bindings and artifacts failing is a regression and panics instead
-/// of silently skipping.
+/// The backend-or-skip policy, held in one place.
+///
+/// A model whose family has a native lowering may **never** skip: the
+/// interpreter serves it on every machine, so a backend failure there is a
+/// regression and panics. A model whose family is *not* lowered must fail
+/// with an error naming the family (strict-fail, still no silent skip);
+/// skipping is then legitimate only because no backend exists for it —
+/// unless a `pjrt` build with real bindings and artifacts should have
+/// served it, which also panics.
 #[allow(dead_code)]
 pub fn skip_or_panic(model: &str, err: &anyhow::Error) {
+    if let Some(cfg) = geta::runtime::native::embedded_config(model) {
+        let fam = cfg.str_or("family", "");
+        assert!(
+            !geta::runtime::native::lowered_families().contains(&fam.as_str()),
+            "{model} (family `{fam}`) has a native lowering and may never skip: {err}"
+        );
+        assert!(
+            err.to_string().contains(&fam),
+            "{model}: unlowered-family error must name the family `{fam}`: {err}"
+        );
+    }
     let stub_linked = err.to_string().contains("xla stub");
     let pjrt_ready = cfg!(feature = "pjrt")
         && geta::runtime::has_artifact(&art_dir(), model)

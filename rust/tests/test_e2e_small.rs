@@ -3,32 +3,32 @@
 //! compose".
 //!
 //! Backend selection is automatic: with AOT artifacts (and the `pjrt`
-//! feature) the compiled-HLO engine runs; without them the mlp workloads
-//! run on the native reference backend, so `cargo test` exercises the
-//! warm-up → projection → joint → cool-down pipeline on every machine.
-//! Model families the native backend does not implement (bert here) skip
-//! only when no backend can serve them.
+//! feature) the compiled-HLO engine runs; without them the native
+//! interpreter serves **every** family — mlp, conv nets (vgg/resnet) and
+//! transformers (bert/vit) all execute the warm-up → projection → joint →
+//! cool-down pipeline on every machine. None of these tests may skip (see
+//! `common::skip_or_panic`): a lowered family failing to build a backend
+//! is a regression and panics.
 
 mod common;
 
 use common::art_dir;
-use geta::runtime::Backend as _;
 use geta::baselines;
 use geta::config::ExperimentConfig;
-use geta::coordinator::{GetaCompressor, Trainer};
+use geta::coordinator::{GetaCompressor, RunResult, Trainer};
 use geta::graph;
 use geta::optim::qasso::StageMask;
+use geta::runtime::Backend as _;
 
-/// Build a trainer with whatever backend is available; `None` (with a
-/// skip note) only when no backend can serve the model — see
-/// `common::skip_or_panic` for the policy.
-fn trainer(exp: ExperimentConfig) -> Option<Trainer> {
+/// Build a trainer; every zoo family has a native lowering, so failure is
+/// always a bug (`skip_or_panic` panics for lowered families).
+fn trainer(exp: ExperimentConfig) -> Trainer {
     let model = exp.model.clone();
     match Trainer::new(&art_dir(), exp) {
-        Ok(t) => Some(t),
+        Ok(t) => t,
         Err(e) => {
             common::skip_or_panic(&model, &e);
-            None
+            panic!("{model} has a native lowering; skip_or_panic must not return");
         }
     }
 }
@@ -42,29 +42,92 @@ fn small_exp(model: &str, sparsity: f64) -> ExperimentConfig {
     e
 }
 
-#[test]
-fn geta_mlp_learns_and_compresses() {
-    // never skipped: mlp_tiny always has the native backend
-    let t = trainer(small_exp("mlp_tiny", 0.4)).expect("mlp backend is always available");
+/// One scaled-down GETA run; shared assertions for every family: the
+/// sparsity target is hit, quantization + pruning produce a real
+/// (nonzero, shape-derived) BOPs reduction, bits stay in [b_l, b_u], and
+/// training neither diverges nor NaNs.
+fn run_geta(t: &Trainer) -> RunResult {
     let mut g = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default()).unwrap();
     let r = t.run(&mut g).unwrap();
+    let target = t.exp.qasso.target_group_sparsity;
+    assert!(
+        (r.group_sparsity - target).abs() < 0.06,
+        "{}: sparsity {} (target {target})",
+        r.model,
+        r.group_sparsity
+    );
+    assert!(
+        r.rel_bops > 0.0 && r.rel_bops < 100.0,
+        "{}: rel BOPs {} not a real reduction",
+        r.model,
+        r.rel_bops
+    );
+    assert!(
+        r.avg_bits >= t.exp.qasso.b_l as f64 - 0.1 && r.avg_bits <= t.exp.qasso.b_u as f64 + 0.1,
+        "{}: bits {}",
+        r.model,
+        r.avg_bits
+    );
+    assert!(r.trace.losses.iter().all(|l| l.is_finite()), "{}: loss NaN", r.model);
+    assert!(
+        r.final_loss < r.trace.losses[0] as f64 * 1.5 + 0.5,
+        "{}: diverged {} -> {}",
+        r.model,
+        r.trace.losses[0],
+        r.final_loss
+    );
+    r
+}
+
+#[test]
+fn geta_mlp_learns_and_compresses() {
+    let t = trainer(small_exp("mlp_tiny", 0.4));
+    let r = run_geta(&t);
     assert!(r.accuracy > 60.0, "acc {}", r.accuracy);
     assert!((r.group_sparsity - 0.4).abs() < 0.02, "sparsity {}", r.group_sparsity);
     assert!(r.rel_bops < 60.0, "rel bops {}", r.rel_bops);
-    assert!(
-        r.avg_bits >= t.exp.qasso.b_l as f64 - 0.1 && r.avg_bits <= t.exp.qasso.b_u as f64 + 0.1,
-        "bits {}",
-        r.avg_bits
-    );
     // loss decreased over training
     assert!(r.final_loss < r.trace.losses[0] as f64, "no learning");
 }
 
 #[test]
+fn geta_resnet_conv_pipeline() {
+    // conv + batchnorm + residual adds + strided projections, end to end
+    let t = trainer(small_exp("resnet_mini", 0.4));
+    // "native" hermetically; "cpu" when the PJRT upgrade path is active
+    assert!(
+        ["cpu", "native"].contains(&t.engine.platform().as_str()),
+        "{}",
+        t.engine.platform()
+    );
+    let r = run_geta(&t);
+    // quantized conv BOPs dominate: 32-bit init cools down into [4, 16]
+    // bits, so the reduction must be substantial, not marginal
+    assert!(r.rel_bops < 80.0, "rel bops {}", r.rel_bops);
+    assert!(r.accuracy >= 0.0 && r.accuracy <= 100.0);
+}
+
+#[test]
+fn geta_vgg_conv_pipeline() {
+    // conv + maxpool + activation-quant sites (weight AND act quantized)
+    let t = trainer(small_exp("vgg7_mini", 0.3));
+    let r = run_geta(&t);
+    assert!(r.rel_bops < 80.0, "rel bops {}", r.rel_bops);
+}
+
+#[test]
+fn geta_vit_attention_pipeline() {
+    // patch embed + cls token + multi-head attention + head-granular groups
+    let t = trainer(small_exp("vit_mini", 0.3));
+    let r = run_geta(&t);
+    assert!(r.rel_bops < 90.0, "rel bops {}", r.rel_bops);
+}
+
+#[test]
 fn geta_bert_span_task() {
-    let Some(t) = trainer(small_exp("bert_mini", 0.3)) else { return };
-    let mut g = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default()).unwrap();
-    let r = t.run(&mut g).unwrap();
+    // never skipped anymore: the native interpreter lowers bert
+    let t = trainer(small_exp("bert_mini", 0.3));
+    let r = run_geta(&t);
     assert!(r.em.is_some() && r.f1.is_some());
     assert!(r.f1.unwrap() >= r.em.unwrap() - 1e-9); // F1 dominates EM
     assert!((r.group_sparsity - 0.3).abs() < 0.05);
@@ -72,7 +135,7 @@ fn geta_bert_span_task() {
 
 #[test]
 fn prune_then_ptq_baseline_runs() {
-    let Some(t) = trainer(small_exp("mlp_tiny", 0.4)) else { return };
+    let t = trainer(small_exp("mlp_tiny", 0.4));
     let space = graph::search_space_for(&t.engine.manifest().config).unwrap();
     let params = t.engine.init_params(0);
     let mut m = baselines::PruneThenPtq::new(
@@ -92,7 +155,7 @@ fn prune_then_ptq_baseline_runs() {
 
 #[test]
 fn unstructured_baseline_density_accounting() {
-    let Some(t) = trainer(small_exp("mlp_tiny", 0.0)) else { return };
+    let t = trainer(small_exp("mlp_tiny", 0.0));
     let steps = t.exp.total_steps();
     let mut m = baselines::UnstructuredJoint::new(
         0.5, 4.0, 16.0, baselines::base_opt(&t.exp), steps, "unstructured",
@@ -105,7 +168,7 @@ fn unstructured_baseline_density_accounting() {
 
 #[test]
 fn stage_ablation_variants_run() {
-    let Some(t) = trainer(small_exp("mlp_tiny", 0.4)) else { return };
+    let t = trainer(small_exp("mlp_tiny", 0.4));
     for mask in [
         StageMask { warmup: false, ..Default::default() },
         StageMask { projection: false, ..Default::default() },
@@ -128,7 +191,7 @@ fn stage_ablation_variants_run() {
 fn seeds_change_data_but_not_contract() {
     let mut e1 = small_exp("mlp_tiny", 0.4);
     e1.seed = 11;
-    let t = trainer(e1).expect("mlp backend is always available");
+    let t = trainer(e1);
     let mut g = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default()).unwrap();
     let r = t.run(&mut g).unwrap();
     assert!((r.group_sparsity - 0.4).abs() < 0.02);

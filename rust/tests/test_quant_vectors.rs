@@ -1,13 +1,21 @@
-//! Golden-vector validation: the Rust quantizer (rust/src/quant) against
-//! the oracle's exported vectors.
+//! Golden-vector validation: the Rust quantizer (rust/src/quant) and the
+//! native interpreter's structural ops (rust/src/tensor/ops.rs) against
+//! the numpy oracle's exported vectors.
 //!
-//! Two vector sets exist: the full `artifacts/quant_vectors.json` written
-//! by `python -m compile.vectors` during `make artifacts`, and the
-//! checked-in `rust/tests/data/quant_vectors_small.json` generated once
-//! from the same float32 oracle math (scripts/gen_quant_vectors.py), so
-//! this suite asserts on every machine with zero Python installed.
+//! Quantizer vectors come from the full `artifacts/quant_vectors.json`
+//! (written by `python -m compile.vectors` during `make artifacts`) or the
+//! checked-in `rust/tests/data/quant_vectors_small.json`; the interpreter
+//! op vectors (conv2d forward/backward on the im2col path, layernorm,
+//! softmax) are always the checked-in
+//! `rust/tests/data/op_vectors_small.json`. Both small sets are generated
+//! by scripts/gen_quant_vectors.py, so this suite asserts on every machine
+//! with zero Python installed.
 
 use geta::quant::{self, QParams};
+use geta::tensor::{
+    col2im, conv_out_dim, im2col, layernorm_bwd_rows, layernorm_rows, matmul, matmul_nt,
+    matmul_tn, softmax_bwd_rows, softmax_rows,
+};
 use geta::util::json;
 
 fn vectors() -> json::Json {
@@ -84,4 +92,116 @@ fn rust_quant_matches_oracle_vectors() {
     for case in cases {
         check_case(case);
     }
+}
+
+// ------------------------------------------------- interpreter op vectors
+
+const OP_TOL: f32 = 1e-5;
+
+fn op_vectors() -> json::Json {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/op_vectors_small.json");
+    json::parse_file(&path).unwrap()
+}
+
+fn assert_close(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for i in 0..got.len() {
+        assert!(
+            (got[i] - want[i]).abs() <= OP_TOL * (1.0 + want[i].abs()),
+            "{what}[{i}]: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+fn check_conv_case(case: &json::Json) {
+    let (b, h, w) = (
+        case.usize_or("b", 0),
+        case.usize_or("h", 0),
+        case.usize_or("w", 0),
+    );
+    let (cin, cout, k) = (
+        case.usize_or("cin", 0),
+        case.usize_or("cout", 0),
+        case.usize_or("k", 0),
+    );
+    let stride = case.usize_or("stride", 1);
+    let same = case.bool_or("same", true);
+    let x = case.get("x").unwrap().f32_arr();
+    let wt = case.get("weight").unwrap().f32_arr();
+    let bias = case.get("bias").unwrap().f32_arr();
+    let (ho, pad) = conv_out_dim(h, k, stride, same);
+    let (wo, _) = conv_out_dim(w, k, stride, same);
+    // forward: im2col + GEMM + bias
+    let cols = im2col(&x, b, h, w, cin, k, stride, pad, ho, wo);
+    let rows = b * ho * wo;
+    let mut y = matmul(&cols, &wt, rows, k * k * cin, cout);
+    for r in 0..rows {
+        for j in 0..cout {
+            y[r * cout + j] += bias[j];
+        }
+    }
+    assert_close(&y, &case.get("y").unwrap().f32_arr(), "conv y");
+    // backward
+    let cot = case.get("cot").unwrap().f32_arr();
+    let gw = matmul_tn(&cols, &cot, rows, k * k * cin, cout);
+    assert_close(&gw, &case.get("gw").unwrap().f32_arr(), "conv gw");
+    let mut gb = vec![0.0f32; cout];
+    for r in 0..rows {
+        for j in 0..cout {
+            gb[j] += cot[r * cout + j];
+        }
+    }
+    assert_close(&gb, &case.get("gb").unwrap().f32_arr(), "conv gb");
+    let gcols = matmul_nt(&cot, &wt, rows, cout, k * k * cin);
+    let gx = col2im(&gcols, b, h, w, cin, k, stride, pad, ho, wo);
+    assert_close(&gx, &case.get("gx").unwrap().f32_arr(), "conv gx");
+}
+
+fn check_layernorm_case(case: &json::Json) {
+    let (rows, c) = (case.usize_or("rows", 0), case.usize_or("c", 0));
+    let x = case.get("x").unwrap().f32_arr();
+    let gamma = case.get("gamma").unwrap().f32_arr();
+    let beta = case.get("beta").unwrap().f32_arr();
+    let (y, aux) = layernorm_rows(&x, &gamma, &beta, rows, c, 1e-5);
+    assert_close(&y, &case.get("y").unwrap().f32_arr(), "ln y");
+    let cot = case.get("cot").unwrap().f32_arr();
+    let (gx, ggamma, gbeta) = layernorm_bwd_rows(&gamma, &cot, &aux, rows, c);
+    assert_close(&gx, &case.get("gx").unwrap().f32_arr(), "ln gx");
+    assert_close(&ggamma, &case.get("ggamma").unwrap().f32_arr(), "ln ggamma");
+    assert_close(&gbeta, &case.get("gbeta").unwrap().f32_arr(), "ln gbeta");
+}
+
+fn check_softmax_case(case: &json::Json) {
+    let (rows, n) = (case.usize_or("rows", 0), case.usize_or("n", 0));
+    let mut p = case.get("x").unwrap().f32_arr();
+    softmax_rows(&mut p, rows, n);
+    assert_close(&p, &case.get("p").unwrap().f32_arr(), "softmax p");
+    let cot = case.get("cot").unwrap().f32_arr();
+    let gx = softmax_bwd_rows(&p, &cot, rows, n);
+    assert_close(&gx, &case.get("gx").unwrap().f32_arr(), "softmax gx");
+}
+
+#[test]
+fn native_ops_match_numpy_golden_vectors() {
+    let v = op_vectors();
+    let cases = v.get("cases").unwrap().as_arr().unwrap();
+    let mut seen = std::collections::BTreeMap::new();
+    for case in cases {
+        let kind = case.str_or("kind", "");
+        *seen.entry(kind.clone()).or_insert(0usize) += 1;
+        match kind.as_str() {
+            "conv2d" => check_conv_case(case),
+            "layernorm" => check_layernorm_case(case),
+            "softmax" => check_softmax_case(case),
+            other => panic!("unknown op vector kind {other}"),
+        }
+    }
+    // the three interpreter ops the conv/attention families depend on must
+    // all be covered, conv in several padding/stride regimes
+    assert!(seen["conv2d"] >= 4, "{seen:?}");
+    assert!(seen["layernorm"] >= 2, "{seen:?}");
+    assert!(seen["softmax"] >= 2, "{seen:?}");
 }

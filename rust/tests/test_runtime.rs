@@ -1,7 +1,7 @@
-//! Integration tests over the execution backends. The mlp workloads run
-//! on every machine (native reference backend when AOT artifacts are
-//! absent); transformer workloads additionally need `make artifacts` plus
-//! the `pjrt` feature and skip otherwise.
+//! Integration tests over the execution backends. Every zoo family runs on
+//! every machine: the native interpreter lowers conv *and* attention
+//! models, so none of these tests may skip (see `common::skip_or_panic` —
+//! a lowered family failing to produce a backend panics).
 
 mod common;
 
@@ -11,21 +11,33 @@ use geta::coordinator::Trainer;
 use geta::quant::QParams;
 use geta::runtime::{load_backend, Backend};
 
-/// Skip only when no backend can serve `model` — see
-/// `common::skip_or_panic` for the policy.
-fn backend(model: &str) -> Option<Box<dyn Backend>> {
+/// All nine embedded zoo models.
+const ZOO: [&str; 9] = [
+    "mlp_tiny",
+    "vgg7_mini",
+    "resnet_mini",
+    "resnet_mini_l",
+    "bert_mini",
+    "gpt_mini",
+    "vit_mini",
+    "simplevit_mini",
+    "swin_mini",
+];
+
+/// Backends exist for the whole zoo; failure is always a bug now.
+fn backend(model: &str) -> Box<dyn Backend> {
     match load_backend(&art_dir(), model) {
-        Ok(b) => Some(b),
+        Ok(b) => b,
         Err(err) => {
             common::skip_or_panic(model, &err);
-            None
+            panic!("{model} has a native lowering; skip_or_panic must not return");
         }
     }
 }
 
 #[test]
 fn engine_roundtrip_mlp() {
-    let e = backend("mlp_tiny").expect("mlp backend is always available");
+    let e = backend("mlp_tiny");
     // "cpu" under PJRT, "native" for the reference backend
     assert!(["cpu", "native"].contains(&e.platform().as_str()), "{}", e.platform());
     let params = e.init_params(0);
@@ -58,8 +70,38 @@ fn engine_roundtrip_mlp() {
 }
 
 #[test]
+fn engine_roundtrip_every_family() {
+    // one full train step + eval step per zoo model: shapes, finiteness,
+    // nonzero gradient signal. This is the per-family "no skip" contract.
+    for model in ZOO {
+        let e = backend(model);
+        let params = e.init_params(0);
+        assert_eq!(params.len(), e.manifest().params.len(), "{model}");
+        let q = e.init_qparams(&params, 8.0);
+        let exp = ExperimentConfig::defaults_for(model);
+        let t = Trainer::new(&art_dir(), exp).unwrap();
+        let idxs: Vec<usize> = (0..t.batch_size()).collect();
+        let (x, y) = t.train_data.batch(&idxs);
+        let out = e.train_step(&params, &q, &x, &y).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0, "{model}: loss {}", out.loss);
+        assert_eq!(out.grads.len(), params.len(), "{model}");
+        let mut grad_norm = 0.0f64;
+        for (g, p) in out.grads.tensors.iter().zip(&params.tensors) {
+            assert_eq!(g.shape, p.shape, "{model}: {}", g.name);
+            assert!(g.data.iter().all(|v| v.is_finite()), "{model}: {}", g.name);
+            grad_norm += geta::tensor::dot(&g.data, &g.data);
+        }
+        assert!(grad_norm > 0.0, "{model}: all gradients zero");
+        assert_eq!(out.qgrads.len(), e.manifest().qsites.len(), "{model}");
+        let ev = e.eval_step(&params, &q, &x, &y).unwrap();
+        assert!(ev.loss.is_finite(), "{model}");
+        assert_eq!(ev.extra.len(), e.manifest().eval_outputs.len() - 2, "{model}");
+    }
+}
+
+#[test]
 fn gradients_flow_to_quant_params() {
-    let e = backend("mlp_tiny").expect("mlp backend is always available");
+    let e = backend("mlp_tiny");
     let params = e.init_params(1);
     // coarse quantizer => large rounding residuals => nonzero d-gradient
     let q = e.init_qparams(&params, 4.0);
@@ -78,41 +120,47 @@ fn gradients_flow_to_quant_params() {
 #[test]
 fn quantizer_bits_change_the_loss() {
     // 2-bit weights must behave differently from 16-bit weights — proves
-    // the fake-quant path actually runs inside the backend.
-    let e = backend("mlp_tiny").expect("mlp backend is always available");
-    let params = e.init_params(2);
-    let exp = ExperimentConfig::defaults_for("mlp_tiny");
-    let t = Trainer::new(&art_dir(), exp).unwrap();
-    let idxs: Vec<usize> = (0..t.batch_size()).collect();
-    let (x, y) = t.train_data.batch(&idxs);
-    let hi = e.init_qparams(&params, 16.0);
-    let lo = e.init_qparams(&params, 2.0);
-    let l_hi = e.eval_step(&params, &hi, &x, &y).unwrap().loss;
-    let l_lo = e.eval_step(&params, &lo, &x, &y).unwrap().loss;
-    assert!(
-        (l_hi - l_lo).abs() > 1e-6,
-        "bit width has no effect: {l_hi} vs {l_lo}"
-    );
+    // the fake-quant path actually runs inside the backend. Now asserted
+    // for a conv family and an attention family too.
+    for model in ["mlp_tiny", "resnet_mini", "bert_mini"] {
+        let e = backend(model);
+        let params = e.init_params(2);
+        let exp = ExperimentConfig::defaults_for(model);
+        let t = Trainer::new(&art_dir(), exp).unwrap();
+        let idxs: Vec<usize> = (0..t.batch_size()).collect();
+        let (x, y) = t.train_data.batch(&idxs);
+        let hi = e.init_qparams(&params, 16.0);
+        let lo = e.init_qparams(&params, 2.0);
+        let l_hi = e.eval_step(&params, &hi, &x, &y).unwrap().loss;
+        let l_lo = e.eval_step(&params, &lo, &x, &y).unwrap().loss;
+        assert!(
+            (l_hi - l_lo).abs() > 1e-6,
+            "{model}: bit width has no effect: {l_hi} vs {l_lo}"
+        );
+    }
 }
 
 #[test]
 fn eval_is_deterministic() {
-    let e = backend("mlp_tiny").expect("mlp backend is always available");
-    let params = e.init_params(3);
-    let q = e.init_qparams(&params, 8.0);
-    let exp = ExperimentConfig::defaults_for("mlp_tiny");
-    let t = Trainer::new(&art_dir(), exp).unwrap();
-    let idxs: Vec<usize> = (0..t.batch_size()).collect();
-    let (x, y) = t.eval_data.batch(&idxs);
-    let a = e.eval_step(&params, &q, &x, &y).unwrap();
-    let b = e.eval_step(&params, &q, &x, &y).unwrap();
-    assert_eq!(a.loss, b.loss);
-    assert_eq!(a.metric, b.metric);
+    for model in ["mlp_tiny", "vit_mini"] {
+        let e = backend(model);
+        let params = e.init_params(3);
+        let q = e.init_qparams(&params, 8.0);
+        let exp = ExperimentConfig::defaults_for(model);
+        let t = Trainer::new(&art_dir(), exp).unwrap();
+        let idxs: Vec<usize> = (0..t.batch_size()).collect();
+        let (x, y) = t.eval_data.batch(&idxs);
+        let a = e.eval_step(&params, &q, &x, &y).unwrap();
+        let b = e.eval_step(&params, &q, &x, &y).unwrap();
+        assert_eq!(a.loss, b.loss, "{model}");
+        assert_eq!(a.metric, b.metric, "{model}");
+    }
 }
 
 #[test]
 fn span_eval_returns_predictions() {
-    let Some(e) = backend("bert_mini") else { return };
+    // bert has a native lowering now: this test may never skip
+    let e = backend("bert_mini");
     let params = e.init_params(0);
     let q = e.init_qparams(&params, 8.0);
     let exp = ExperimentConfig::defaults_for("bert_mini");
@@ -127,9 +175,25 @@ fn span_eval_returns_predictions() {
 }
 
 #[test]
+fn lm_eval_reports_mask_count() {
+    let e = backend("gpt_mini");
+    let params = e.init_params(0);
+    let q = e.init_qparams(&params, 8.0);
+    let exp = ExperimentConfig::defaults_for("gpt_mini");
+    let t = Trainer::new(&art_dir(), exp).unwrap();
+    let idxs: Vec<usize> = (0..t.batch_size()).collect();
+    let (x, y) = t.eval_data.batch(&idxs);
+    let ev = e.eval_step(&params, &q, &x, &y).unwrap();
+    assert_eq!(ev.extra.len(), 1);
+    let seq = e.manifest().config.usize_or("seq_len", 32);
+    // one masked position per sequence (the final token)
+    assert_eq!(ev.extra[0][0], (t.batch_size() * (seq - 1)) as f32);
+}
+
+#[test]
 fn degenerate_qparams_do_not_crash() {
     // pathological quantizers must yield finite losses, not NaNs
-    let e = backend("mlp_tiny").expect("mlp backend is always available");
+    let e = backend("mlp_tiny");
     let params = e.init_params(4);
     let exp = ExperimentConfig::defaults_for("mlp_tiny");
     let t = Trainer::new(&art_dir(), exp).unwrap();

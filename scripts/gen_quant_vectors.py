@@ -1,11 +1,20 @@
-"""Generate the checked-in small golden-vector set for the Rust quantizer.
+"""Generate the checked-in small golden-vector sets for the Rust backend.
 
-Numpy float32 mirror of python/compile/kernels/ref.py (the pure-jnp oracle
-for eqs. (1)-(6), (13)-(14)); jnp and numpy agree to float32 precision on
-these elementwise formulas, so this script needs no JAX install. Output is
-committed at rust/tests/data/quant_vectors_small.json and consumed by
-rust/tests/test_quant_vectors.rs whenever `make artifacts` has not produced
-the full artifacts/quant_vectors.json.
+Two files, both numpy mirrors of the pure-jnp oracles (jnp and numpy agree
+to float32 precision on these formulas, so this script needs no JAX
+install):
+
+* rust/tests/data/quant_vectors_small.json — the quantizer math of
+  python/compile/kernels/ref.py (eqs. (1)-(6), (13)-(14)), consumed by
+  rust/tests/test_quant_vectors.rs whenever `make artifacts` has not
+  produced the full artifacts/quant_vectors.json.
+* rust/tests/data/op_vectors_small.json — forward AND backward vectors for
+  the native interpreter's structural ops (conv2d on the im2col path with
+  XLA SAME/VALID padding, layernorm, softmax), mirroring
+  python/compile/models/common.py. Gradients are analytic (finite-
+  difference-validated) and computed in float64 over float32 inputs, the
+  same accumulation discipline as rust/src/tensor/ops.rs, so the Rust side
+  matches at 1e-5.
 
 Usage: python3 scripts/gen_quant_vectors.py
 """
@@ -56,6 +65,124 @@ def grad_qm(x, d, t, qm):
                     np.sign(x) * t * np.power(np.maximum(qm, EPS), t - np.float32(1.0))).astype(np.float32)
 
 
+# ------------------------------------------------------- interpreter ops
+#
+# Float64 compute over float32 inputs (the Rust kernels' accumulation
+# discipline). conv2d mirrors rust/src/tensor/ops.rs: NHWC x, HWIO w,
+# im2col columns ordered (kh*k + kw)*c + ci, XLA SAME/VALID padding.
+
+
+def conv_out_dim(h, k, stride, same):
+    if same:
+        out = -(-h // stride)
+        total = max((out - 1) * stride + k - h, 0)
+        return out, total // 2
+    return (h - k) // stride + 1, 0
+
+
+def im2col(x, k, stride, pad, ho, wo):
+    b, h, w, c = x.shape
+    cols = np.zeros((b * ho * wo, k * k * c), np.float64)
+    for bi in range(b):
+        for oh in range(ho):
+            for ow in range(wo):
+                r = (bi * ho + oh) * wo + ow
+                for kh in range(k):
+                    ih = oh * stride + kh - pad
+                    if ih < 0 or ih >= h:
+                        continue
+                    for kw in range(k):
+                        iw = ow * stride + kw - pad
+                        if iw < 0 or iw >= w:
+                            continue
+                        base = (kh * k + kw) * c
+                        cols[r, base:base + c] = x[bi, ih, iw, :]
+    return cols
+
+
+def col2im(gcols, xshape, k, stride, pad, ho, wo):
+    b, h, w, c = xshape
+    gx = np.zeros(xshape, np.float64)
+    for bi in range(b):
+        for oh in range(ho):
+            for ow in range(wo):
+                r = (bi * ho + oh) * wo + ow
+                for kh in range(k):
+                    ih = oh * stride + kh - pad
+                    if ih < 0 or ih >= h:
+                        continue
+                    for kw in range(k):
+                        iw = ow * stride + kw - pad
+                        if iw < 0 or iw >= w:
+                            continue
+                        base = (kh * k + kw) * c
+                        gx[bi, ih, iw, :] += gcols[r, base:base + c]
+    return gx
+
+
+def conv_case(rng, bshape, cout, k, stride, same):
+    b, h, w, cin = bshape
+    x = rng.normal(size=bshape).astype(np.float32).astype(np.float64)
+    wt = rng.normal(scale=0.5, size=(k, k, cin, cout)).astype(np.float32).astype(np.float64)
+    bias = rng.normal(size=cout).astype(np.float32).astype(np.float64)
+    ho, pad = conv_out_dim(h, k, stride, same)
+    wo, _ = conv_out_dim(w, k, stride, same)
+    cols = im2col(x, k, stride, pad, ho, wo)
+    wm = wt.reshape(k * k * cin, cout)
+    y = cols @ wm + bias
+    cot = rng.normal(size=y.shape).astype(np.float32).astype(np.float64)
+    gw = cols.T @ cot
+    gb = cot.sum(0)
+    gx = col2im(cot @ wm.T, bshape, k, stride, pad, ho, wo)
+    def f(a):
+        return [float(np.float32(v)) for v in np.asarray(a).reshape(-1)]
+    return {
+        "kind": "conv2d", "b": b, "h": h, "w": w, "cin": cin, "cout": cout,
+        "k": k, "stride": stride, "same": same,
+        "x": f(x), "weight": f(wt), "bias": f(bias),
+        "y": f(y), "cot": f(cot), "gx": f(gx), "gw": f(gw), "gb": f(gb),
+    }
+
+
+def layernorm_case(rng, rows, c, eps=1e-5):
+    x = rng.normal(size=(rows, c)).astype(np.float32).astype(np.float64)
+    gamma = (1.0 + 0.3 * rng.normal(size=c)).astype(np.float32).astype(np.float64)
+    beta = (0.2 * rng.normal(size=c)).astype(np.float32).astype(np.float64)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    inv = 1.0 / np.sqrt(var + eps)
+    xhat = (x - mu) * inv
+    y = xhat * gamma + beta
+    cot = rng.normal(size=y.shape).astype(np.float32).astype(np.float64)
+    ggamma = (cot * xhat).sum(0)
+    gbeta = cot.sum(0)
+    dxhat = cot * gamma
+    gx = inv / c * (c * dxhat - dxhat.sum(-1, keepdims=True)
+                    - xhat * (dxhat * xhat).sum(-1, keepdims=True))
+    def f(a):
+        return [float(np.float32(v)) for v in np.asarray(a).reshape(-1)]
+    return {
+        "kind": "layernorm", "rows": rows, "c": c,
+        "x": f(x), "gamma": f(gamma), "beta": f(beta),
+        "y": f(y), "cot": f(cot),
+        "gx": f(gx), "ggamma": f(ggamma), "gbeta": f(gbeta),
+    }
+
+
+def softmax_case(rng, rows, n):
+    x = rng.normal(scale=2.0, size=(rows, n)).astype(np.float32).astype(np.float64)
+    e = np.exp(x - x.max(-1, keepdims=True))
+    p = e / e.sum(-1, keepdims=True)
+    cot = rng.normal(size=p.shape).astype(np.float32).astype(np.float64)
+    gx = p * (cot - (cot * p).sum(-1, keepdims=True))
+    def f(a):
+        return [float(np.float32(v)) for v in np.asarray(a).reshape(-1)]
+    return {
+        "kind": "softmax", "rows": rows, "n": n,
+        "x": f(x), "p": f(p), "cot": f(cot), "gx": f(gx),
+    }
+
+
 def main():
     rng = np.random.default_rng(42)
     cases = []
@@ -77,11 +204,31 @@ def main():
             "grad_qm": [float(v) for v in grad_qm(x, d32, t32, qm32)],
             "bit_width": bit_width(d32, t32, qm32),
         })
-    out = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "data",
-                       "quant_vectors_small.json")
+    data_dir = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "data")
+    out = os.path.join(data_dir, "quant_vectors_small.json")
     with open(out, "w") as f:
         json.dump({"cases": cases}, f)
     print(f"wrote {len(cases)} vector cases to {os.path.normpath(out)}")
+
+    op_rng = np.random.default_rng(7)
+    op_cases = [
+        # 3x3 SAME stride 1 (vgg/resnet body)
+        conv_case(op_rng, (2, 5, 5, 3), 4, 3, 1, True),
+        # 3x3 SAME stride 2 (resnet stage entry; asymmetric XLA padding)
+        conv_case(op_rng, (1, 8, 8, 2), 3, 3, 2, True),
+        # 1x1 SAME stride 2 (resnet projection)
+        conv_case(op_rng, (1, 6, 6, 2), 4, 1, 2, True),
+        # 4x4 VALID stride 4 (vit/swin patch embedding)
+        conv_case(op_rng, (2, 8, 8, 3), 5, 4, 4, False),
+        layernorm_case(op_rng, 4, 6),
+        layernorm_case(op_rng, 7, 16),
+        softmax_case(op_rng, 3, 7),
+        softmax_case(op_rng, 5, 32),
+    ]
+    out = os.path.join(data_dir, "op_vectors_small.json")
+    with open(out, "w") as f:
+        json.dump({"cases": op_cases}, f)
+    print(f"wrote {len(op_cases)} op vector cases to {os.path.normpath(out)}")
 
 
 if __name__ == "__main__":
