@@ -3,6 +3,10 @@
 //! numbers. Every zoo family runs on the native interpreter, so all rows
 //! report on any machine; with artifacts + `pjrt` the same rows measure
 //! the compiled-HLO engine instead.
+//!
+//! The trailing section benchmarks the *deployed* path: dense-f32 vs
+//! compressed (`.geta`) inference throughput through `deploy::GetaEngine`
+//! — the measured counterpart to the theoretical BOPs columns.
 
 use geta::runtime::Backend as _;
 use geta::config::ExperimentConfig;
@@ -34,6 +38,25 @@ fn main() {
         b.bench(&format!("eval_step/{model}"), || {
             t.engine.eval_step(&params, &q, &x, &y).unwrap()
         });
+    }
+    // deployed inference: dense f32 vs the exported .geta artifact
+    // (brief training first so the compressed engine has real pruning)
+    for model in ["mlp_tiny", "resnet_mini"] {
+        match geta::report::bench_deploy(&art, model, 0.1, 0.5, b.iters.min(10), 1) {
+            Ok(r) => {
+                println!(
+                    "{:<44} dense {:>8.2} ms/b  .geta {:>8.2} ms/b  speedup {:>5.2}x  \
+                     disk {:>7.1} KiB ({:.2}x smaller)",
+                    format!("deploy_infer/{model}"),
+                    r.dense_ms,
+                    r.compressed_ms,
+                    r.dense_ms / r.compressed_ms.max(1e-9),
+                    r.disk_bytes as f64 / 1024.0,
+                    r.dense_bytes as f64 / r.disk_bytes.max(1) as f64,
+                );
+            }
+            Err(e) => eprintln!("skipping deploy bench {model}: {e}"),
+        }
     }
     std::fs::create_dir_all("reports").ok();
     b.write_log(std::path::Path::new("reports/bench_runtime.json")).ok();

@@ -138,6 +138,14 @@ pub struct RunResult {
     pub final_loss: f64,
 }
 
+/// A finished run plus the trained state the deployment path consumes.
+#[derive(Debug)]
+pub struct Trained {
+    pub result: RunResult,
+    pub params: ParamStore,
+    pub q: Vec<QParams>,
+}
+
 pub struct Trainer {
     pub engine: Box<dyn Backend>,
     pub exp: ExperimentConfig,
@@ -169,6 +177,13 @@ impl Trainer {
 
     /// Run a compression method end to end and report.
     pub fn run(&self, method: &mut dyn Compressor) -> Result<RunResult> {
+        Ok(self.run_trained(method)?.result)
+    }
+
+    /// Like [`run`](Self::run), but also hands back the trained parameters
+    /// and quantizer rows — the inputs the deployment path (`geta export`,
+    /// `deploy::export_to_file`) needs to build a `.geta` artifact.
+    pub fn run_trained(&self, method: &mut dyn Compressor) -> Result<Trained> {
         let mut params = self.engine.init_params(self.exp.seed);
         let mut q = self
             .engine
@@ -196,29 +211,30 @@ impl Trainer {
             }
         }
         method.finalize(&mut params, &mut q);
-        self.report(method, params, q, trace)
+        let result = self.report(method, &params, &q, trace)?;
+        Ok(Trained { result, params, q })
     }
 
     fn report(
         &self,
         method: &dyn Compressor,
-        params: ParamStore,
-        q: Vec<QParams>,
+        params: &ParamStore,
+        q: &[QParams],
         trace: TrainTrace,
     ) -> Result<RunResult> {
-        let eval = self.evaluate(&params, &q)?;
+        let eval = self.evaluate(params, q)?;
         // compression accounting
         let space = graph::search_space_for(&self.engine.manifest().config)?;
         let ngroups = space.groups.len();
         let default_mask = vec![false; ngroups];
         let pruned = method.pruned_mask().unwrap_or(&default_mask);
         let cm = subnet::construct(
-            &params,
+            params,
             &space.groups,
             pruned,
             &self.costs,
             &self.engine.site_specs(),
-            &q,
+            q,
         );
         let mut rel = cm.bops.rel_percent();
         // unstructured methods carry their density in MACs, not slicing

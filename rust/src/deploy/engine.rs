@@ -1,0 +1,562 @@
+//! Packed-integer inference engine: executes an exported `.geta` model
+//! over the **shrunk** (kept-channel-sliced) shapes.
+//!
+//! Load path: parse the container, dequantize every packed weight once
+//! (`level * d` — bit-identical to the fake-quantized weights the training
+//! interpreter multiplies), re-lower the embedded config through
+//! `runtime::lowering`, then shrink the program's shapes to the sliced
+//! parameter store via `subnet::propagate_slices`. The forward pass is
+//! inference-only: no backward state, no per-step weight fake-quant — the
+//! only quantization left at runtime is the activation sites, applied with
+//! their learned (d, t, q_m).
+//!
+//! Batching: [`GetaEngine::infer`] splits the input into micro-batches
+//! (default: the family's training batch size) and shards those
+//! micro-batches across `std::thread` workers. Batch-statistics
+//! normalization is computed **per micro-batch**, matching the training
+//! interpreter's stateless-batchnorm semantics — which is exactly what
+//! makes the parity obligation testable, and makes results independent of
+//! the thread count (sharding only ever happens at micro-batch
+//! boundaries).
+
+use anyhow::{Context, Result};
+
+use super::format::{GetaContainer, Payload, SiteKind};
+use crate::graph::builders;
+use crate::quant::{self, QParams};
+use crate::runtime::lowering::{self, OpKind, Program};
+use crate::runtime::HostArray;
+use crate::subnet;
+use crate::tensor::{
+    self, batchnorm_rows, gelu, im2col, layernorm_rows, matmul, matmul_nt, softmax_rows,
+    ParamStore, Tensor,
+};
+use crate::util::json::Json;
+
+const NORM_EPS: f32 = 1e-5;
+
+/// Input dtype the loaded model expects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputKind {
+    F32,
+    I32,
+}
+
+/// Borrowed view of one micro-batch of inputs.
+enum In<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+pub struct GetaEngine {
+    pub model: String,
+    pub task: String,
+    config: Json,
+    /// Slice-propagated program, lowered with batch dim 1; the executor
+    /// substitutes the runtime micro-batch size.
+    program: Program,
+    weights: ParamStore,
+    /// Learned activation-quant parameters by q-row (None = weight site or
+    /// quantization disabled, as in the dense-f32 baseline engine).
+    act_q: Vec<Option<QParams>>,
+    /// Apply activation quantization (false for the dense baseline).
+    apply_act_quant: bool,
+    /// Micro-batch size: normalization statistics and thread sharding both
+    /// operate at this granularity.
+    pub micro_batch: usize,
+    /// Worker threads for [`infer`](Self::infer) (1 = sequential).
+    pub threads: usize,
+}
+
+impl GetaEngine {
+    pub fn load(path: &std::path::Path) -> Result<GetaEngine> {
+        Self::from_container(&GetaContainer::read(path)?)
+    }
+
+    /// Build the engine from a parsed container: dequantize, re-lower,
+    /// shrink. Site metadata is cross-checked against the config's own
+    /// plan-order sites so a tampered container cannot mis-map q rows.
+    pub fn from_container(c: &GetaContainer) -> Result<GetaEngine> {
+        let config = c.config()?;
+        let sites = builders::quant_site_specs(&config)?;
+        anyhow::ensure!(
+            sites.len() == c.sites.len(),
+            "container has {} sites, config plans {}",
+            c.sites.len(),
+            sites.len()
+        );
+        for (i, (rec, spec)) in c.sites.iter().zip(&sites).enumerate() {
+            anyhow::ensure!(
+                rec.name == spec.name,
+                "site {i}: container `{}` vs config plan `{}`",
+                rec.name,
+                spec.name
+            );
+            let want = if spec.param.is_some() {
+                SiteKind::Weight
+            } else {
+                SiteKind::Act
+            };
+            anyhow::ensure!(rec.kind == want, "site {i} (`{}`): kind mismatch", rec.name);
+        }
+        let mut weights = ParamStore::new();
+        for t in &c.tensors {
+            let data = match &t.payload {
+                Payload::F32(v) => v.clone(),
+                Payload::Packed {
+                    site,
+                    min_level,
+                    pack_bits,
+                    bytes,
+                    numel,
+                } => {
+                    // the site must be the one whose param names this tensor,
+                    // or a swapped site index would dequantize with the wrong
+                    // step d and produce silently wrong weights
+                    anyhow::ensure!(
+                        sites[*site as usize].param.as_deref() == Some(t.name.as_str()),
+                        "tensor `{}`: packed payload references site {} (`{}`), not its own \
+                         weight site",
+                        t.name,
+                        site,
+                        c.sites[*site as usize].name
+                    );
+                    let d = c.sites[*site as usize].q.d;
+                    let levels =
+                        super::format::unpack_levels(bytes, *numel, *min_level, *pack_bits)?;
+                    levels.iter().map(|&l| l as f32 * d).collect()
+                }
+            };
+            anyhow::ensure!(
+                data.len() == t.numel(),
+                "tensor `{}`: {} values for shape {:?}",
+                t.name,
+                data.len(),
+                t.shape
+            );
+            weights.push(Tensor::from_vec(&t.name, &t.shape, data));
+        }
+        let base = lowering::lower(&config, &sites, 1)?;
+        let program = subnet::propagate_slices(&base, &weights)
+            .context("sliced shapes do not propagate coherently")?;
+        let mut act_q = vec![None; sites.len()];
+        for (i, rec) in c.sites.iter().enumerate() {
+            if rec.kind == SiteKind::Act {
+                act_q[i] = Some(rec.q);
+            }
+        }
+        Ok(GetaEngine {
+            model: c.model.clone(),
+            task: c.task.clone(),
+            config,
+            program,
+            weights,
+            act_q,
+            apply_act_quant: true,
+            micro_batch: crate::runtime::native::batch_size_for(&c.task),
+            threads: default_threads(),
+        })
+    }
+
+    /// Dense-f32 baseline over the same executor: the unpruned program with
+    /// raw f32 parameters and no quantization anywhere. This is the model
+    /// the `.geta` artifact is benchmarked against.
+    pub fn dense(config: &Json, params: ParamStore) -> Result<GetaEngine> {
+        let sites = builders::quant_site_specs(config)?;
+        let task = config.str_or("task", "image_cls");
+        let program = lowering::lower(config, &sites, 1)?;
+        Ok(GetaEngine {
+            model: config.str_or("name", "<dense>"),
+            task: task.clone(),
+            config: config.clone(),
+            program,
+            weights: params,
+            act_q: vec![None; sites.len()],
+            apply_act_quant: false,
+            micro_batch: crate::runtime::native::batch_size_for(&task),
+            threads: default_threads(),
+        })
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    pub fn config(&self) -> &Json {
+        &self.config
+    }
+
+    pub fn input_kind(&self) -> InputKind {
+        match self.program.nodes.first().map(|n| &n.op) {
+            Some(OpKind::Embed { .. }) => InputKind::I32,
+            _ => InputKind::F32,
+        }
+    }
+
+    /// Flat input values per sample (pixels, or tokens for embed models —
+    /// the Embed node's *output* is [1, seq, dim] but its input is the
+    /// [seq] token ids).
+    pub fn input_per_sample(&self) -> usize {
+        let n0 = &self.program.nodes[0];
+        match &n0.op {
+            OpKind::Embed { .. } => n0.shape[1],
+            _ => n0.shape[1..].iter().product(),
+        }
+    }
+
+    /// Flat logits per sample.
+    pub fn output_per_sample(&self) -> usize {
+        let out = &self.program.nodes[self.program.output()];
+        out.shape[1..].iter().product()
+    }
+
+    /// Run a batch of `n` samples through the model and return the logits
+    /// `[n, ...]` flattened. Inputs beyond one micro-batch are chunked and
+    /// the chunks sharded across threads; outputs are stitched back in
+    /// input order, so results are identical for any thread count.
+    pub fn infer(&self, x: &HostArray) -> Result<Vec<f32>> {
+        let per = self.input_per_sample();
+        anyhow::ensure!(per > 0, "degenerate model input");
+        let n = x.len() / per;
+        anyhow::ensure!(n * per == x.len(), "input length {} not a multiple of {per}", x.len());
+        match (self.input_kind(), x) {
+            (InputKind::F32, HostArray::F32(_)) | (InputKind::I32, HostArray::I32(_)) => {}
+            (k, _) => anyhow::bail!("model expects {k:?} inputs"),
+        }
+        let mb = self.micro_batch.max(1);
+        let chunks: Vec<(usize, usize)> = (0..n)
+            .step_by(mb)
+            .map(|s| (s, mb.min(n - s)))
+            .collect();
+        let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); chunks.len()];
+        let nthreads = self.threads.max(1).min(chunks.len().max(1));
+        if nthreads <= 1 {
+            for (slot, &(start, len)) in outputs.iter_mut().zip(&chunks) {
+                let xin = match x {
+                    HostArray::F32(v) => In::F32(&v[start * per..(start + len) * per]),
+                    HostArray::I32(v) => In::I32(&v[start * per..(start + len) * per]),
+                };
+                *slot = self.forward_chunk(&xin, len)?;
+            }
+        } else {
+            // static round-robin partition: each worker owns disjoint slots
+            let mut per_thread: Vec<Vec<(usize, &mut Vec<f32>)>> =
+                (0..nthreads).map(|_| Vec::new()).collect();
+            for (i, slot) in outputs.iter_mut().enumerate() {
+                per_thread[i % nthreads].push((i, slot));
+            }
+            let chunks = &chunks;
+            std::thread::scope(|sc| -> Result<()> {
+                let mut handles = Vec::new();
+                for list in per_thread {
+                    handles.push(sc.spawn(move || -> Result<()> {
+                        for (ci, slot) in list {
+                            let (start, len) = chunks[ci];
+                            let xin = match x {
+                                HostArray::F32(v) => In::F32(&v[start * per..(start + len) * per]),
+                                HostArray::I32(v) => In::I32(&v[start * per..(start + len) * per]),
+                            };
+                            *slot = self.forward_chunk(&xin, len)?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("inference worker panicked")?;
+                }
+                Ok(())
+            })?;
+        }
+        let out_per = self.output_per_sample();
+        let mut out = Vec::with_capacity(n * out_per);
+        for o in outputs {
+            out.extend_from_slice(&o);
+        }
+        debug_assert_eq!(out.len(), n * out_per);
+        Ok(out)
+    }
+
+    fn weight<'a>(&'a self, name: &str) -> Result<&'a [f32]> {
+        self.weights
+            .get(name)
+            .map(|t| t.data.as_slice())
+            .with_context(|| format!("engine missing tensor `{name}`"))
+    }
+
+    /// One micro-batch forward over the sliced program. `bsz` replaces the
+    /// program's batch-1 leading dim in every shape computation.
+    ///
+    /// NOTE: each op here deliberately mirrors the forward pass of
+    /// `runtime/interp.rs` (minus aux saving and per-step weight
+    /// fake-quant). Any change to an interpreter forward kernel must be
+    /// mirrored below — the per-family roundtrip parity tests
+    /// (`rust/tests/test_deploy.rs`) are what enforce the two staying in
+    /// lockstep.
+    fn forward_chunk(&self, x: &In<'_>, bsz: usize) -> Result<Vec<f32>> {
+        let nodes = &self.program.nodes;
+        let per = |id: usize| -> usize { nodes[id].shape[1..].iter().product() };
+        let mut vals: Vec<Vec<f32>> = Vec::with_capacity(nodes.len());
+        for (id, node) in nodes.iter().enumerate() {
+            let numel = bsz * per(id);
+            let dims = &node.shape; // [1, ...per-sample dims]
+            let input = |k: usize| -> &Vec<f32> { &vals[node.inputs[k]] };
+            let in_dims = |k: usize| -> &Vec<usize> { &nodes[node.inputs[k]].shape };
+            let out: Vec<f32> = match &node.op {
+                OpKind::Input => {
+                    let In::F32(xv) = x else {
+                        anyhow::bail!("image model expects f32 inputs")
+                    };
+                    anyhow::ensure!(xv.len() == numel, "input batch mismatch");
+                    xv.to_vec()
+                }
+                OpKind::Embed { tok, pos } => {
+                    let In::I32(toks) = x else {
+                        anyhow::bail!("token model expects i32 inputs")
+                    };
+                    let (seq, dim) = (dims[1], dims[2]);
+                    anyhow::ensure!(toks.len() == bsz * seq, "token batch mismatch");
+                    let tokw = self.weight(tok)?;
+                    let posw = self.weight(pos)?;
+                    let vocab = tokw.len() / dim;
+                    let mut out = vec![0.0f32; numel];
+                    for (r, &id) in toks.iter().enumerate() {
+                        anyhow::ensure!(
+                            (0..vocab as i32).contains(&id),
+                            "token id {id} outside vocab {vocab}"
+                        );
+                        let dst = &mut out[r * dim..(r + 1) * dim];
+                        dst.copy_from_slice(&tokw[id as usize * dim..(id as usize + 1) * dim]);
+                        tensor::axpy(1.0, &posw[(r % seq) * dim..(r % seq + 1) * dim], dst);
+                    }
+                    out
+                }
+                OpKind::Linear { w, .. } => {
+                    let wq = self.weight(&format!("{w}.weight"))?;
+                    let bias = self.weight(&format!("{w}.bias"))?;
+                    let din = *in_dims(0).last().unwrap();
+                    let dout = *dims.last().unwrap();
+                    let rows = numel / dout;
+                    let mut out = matmul(input(0), wq, rows, din, dout);
+                    for r in 0..rows {
+                        tensor::axpy(1.0, bias, &mut out[r * dout..(r + 1) * dout]);
+                    }
+                    out
+                }
+                OpKind::Conv2d { w, k, stride, pad, .. } => {
+                    let wq = self.weight(&format!("{w}.weight"))?;
+                    let bias = self.weight(&format!("{w}.bias"))?;
+                    let is = in_dims(0);
+                    let (h, wd, cin) = (is[1], is[2], is[3]);
+                    let (ho, wo, cout) = (dims[1], dims[2], dims[3]);
+                    let cols = im2col(input(0), bsz, h, wd, cin, *k, *stride, *pad, ho, wo);
+                    let rows = bsz * ho * wo;
+                    let mut out = matmul(&cols, wq, rows, k * k * cin, cout);
+                    for r in 0..rows {
+                        tensor::axpy(1.0, bias, &mut out[r * cout..(r + 1) * cout]);
+                    }
+                    out
+                }
+                OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
+                    let gamma = self.weight(&format!("{p}.gamma"))?;
+                    let beta = self.weight(&format!("{p}.beta"))?;
+                    let c = *dims.last().unwrap();
+                    let rows = numel / c;
+                    let (out, _aux) = if matches!(node.op, OpKind::BatchNorm { .. }) {
+                        batchnorm_rows(input(0), gamma, beta, rows, c, NORM_EPS)
+                    } else {
+                        layernorm_rows(input(0), gamma, beta, rows, c, NORM_EPS)
+                    };
+                    out
+                }
+                OpKind::Relu => input(0).iter().map(|&v| v.max(0.0)).collect(),
+                OpKind::Gelu => input(0).iter().map(|&v| gelu(v)).collect(),
+                OpKind::ActQuant { site } => {
+                    if !self.apply_act_quant {
+                        input(0).clone()
+                    } else {
+                        let qp = self.act_q[*site].with_context(|| {
+                            format!("{}: activation site {site} missing from container", node.name)
+                        })?;
+                        input(0).iter().map(|&v| quant::fake_quant(v, &qp)).collect()
+                    }
+                }
+                OpKind::Add => {
+                    let mut out = input(0).clone();
+                    tensor::axpy(1.0, input(1), &mut out);
+                    out
+                }
+                OpKind::MaxPool2 => {
+                    let is = in_dims(0);
+                    let (h, wd, c) = (is[1], is[2], is[3]);
+                    let (ho, wo) = (dims[1], dims[2]);
+                    let xin = input(0);
+                    let mut out = vec![0.0f32; numel];
+                    for b in 0..bsz {
+                        for oh in 0..ho {
+                            for ow in 0..wo {
+                                for ch in 0..c {
+                                    let mut best = f32::NEG_INFINITY;
+                                    for dh in 0..2 {
+                                        for dw in 0..2 {
+                                            let idx = ((b * h + oh * 2 + dh) * wd + ow * 2 + dw)
+                                                * c
+                                                + ch;
+                                            best = best.max(xin[idx]);
+                                        }
+                                    }
+                                    out[((b * ho + oh) * wo + ow) * c + ch] = best;
+                                }
+                            }
+                        }
+                    }
+                    out
+                }
+                OpKind::GlobalAvgPool => {
+                    let is = in_dims(0);
+                    let (h, wd, c) = (is[1], is[2], is[3]);
+                    let xin = input(0);
+                    let mut out = vec![0.0f32; bsz * c];
+                    for b in 0..bsz {
+                        for pix in 0..h * wd {
+                            tensor::axpy(
+                                1.0,
+                                &xin[(b * h * wd + pix) * c..(b * h * wd + pix + 1) * c],
+                                &mut out[b * c..(b + 1) * c],
+                            );
+                        }
+                    }
+                    let scale = 1.0 / (h * wd) as f32;
+                    for v in out.iter_mut() {
+                        *v *= scale;
+                    }
+                    out
+                }
+                OpKind::Reshape => input(0).clone(),
+                OpKind::ConcatCls { cls } => {
+                    let clsw = self.weight(cls)?;
+                    let (t1, dim) = (dims[1], dims[2]);
+                    let xin = input(0);
+                    let mut out = vec![0.0f32; numel];
+                    for b in 0..bsz {
+                        out[b * t1 * dim..b * t1 * dim + dim].copy_from_slice(clsw);
+                        out[b * t1 * dim + dim..(b + 1) * t1 * dim]
+                            .copy_from_slice(&xin[b * (t1 - 1) * dim..(b + 1) * (t1 - 1) * dim]);
+                    }
+                    out
+                }
+                OpKind::AddPos { pos } => {
+                    let posw = self.weight(pos)?;
+                    let rest = per(id);
+                    anyhow::ensure!(posw.len() == rest, "pos table size mismatch");
+                    let mut out = input(0).clone();
+                    for b in 0..bsz {
+                        tensor::axpy(1.0, posw, &mut out[b * rest..(b + 1) * rest]);
+                    }
+                    out
+                }
+                OpKind::Attention { heads, causal } => {
+                    let (s, d) = (dims[1], dims[2]);
+                    let hd = d / heads;
+                    let scale = 1.0 / (hd as f32).sqrt();
+                    let (qv, kv, vv) = (input(0), input(1), input(2));
+                    let mut out = vec![0.0f32; numel];
+                    let mut qh = vec![0.0f32; s * hd];
+                    let mut kh = vec![0.0f32; s * hd];
+                    let mut vh = vec![0.0f32; s * hd];
+                    for b in 0..bsz {
+                        for head in 0..*heads {
+                            let off = head * hd;
+                            for t in 0..s {
+                                let src = (b * s + t) * d + off;
+                                qh[t * hd..(t + 1) * hd].copy_from_slice(&qv[src..src + hd]);
+                                kh[t * hd..(t + 1) * hd].copy_from_slice(&kv[src..src + hd]);
+                                vh[t * hd..(t + 1) * hd].copy_from_slice(&vv[src..src + hd]);
+                            }
+                            let mut att = matmul_nt(&qh, &kh, s, hd, s);
+                            for v in att.iter_mut() {
+                                *v *= scale;
+                            }
+                            if *causal {
+                                for i in 0..s {
+                                    for j in i + 1..s {
+                                        att[i * s + j] = -1e9;
+                                    }
+                                }
+                            }
+                            softmax_rows(&mut att, s, s);
+                            let yh = matmul(&att, &vh, s, s, hd);
+                            for t in 0..s {
+                                let dst = (b * s + t) * d + off;
+                                out[dst..dst + hd].copy_from_slice(&yh[t * hd..(t + 1) * hd]);
+                            }
+                        }
+                    }
+                    out
+                }
+                OpKind::PatchMerge { side } => {
+                    let dim4 = dims[2];
+                    let dim = dim4 / 4;
+                    let half = side / 2;
+                    let xin = input(0);
+                    let mut out = vec![0.0f32; numel];
+                    for b in 0..bsz {
+                        for i in 0..half {
+                            for j in 0..half {
+                                let o = (b * half * half + i * half + j) * dim4;
+                                for (slot, (di, dj)) in
+                                    [(0, 0), (1, 0), (0, 1), (1, 1)].iter().enumerate()
+                                {
+                                    let src = (b * side * side
+                                        + (2 * i + di) * side
+                                        + (2 * j + dj))
+                                        * dim;
+                                    out[o + slot * dim..o + (slot + 1) * dim]
+                                        .copy_from_slice(&xin[src..src + dim]);
+                                }
+                            }
+                        }
+                    }
+                    out
+                }
+                OpKind::TokenPoolCls => {
+                    let is = in_dims(0);
+                    let (t, dim) = (is[1], is[2]);
+                    let xin = input(0);
+                    let mut out = vec![0.0f32; bsz * dim];
+                    for b in 0..bsz {
+                        out[b * dim..(b + 1) * dim]
+                            .copy_from_slice(&xin[b * t * dim..b * t * dim + dim]);
+                    }
+                    out
+                }
+                OpKind::TokenPoolMean => {
+                    let is = in_dims(0);
+                    let (t, dim) = (is[1], is[2]);
+                    let xin = input(0);
+                    let mut out = vec![0.0f32; bsz * dim];
+                    for b in 0..bsz {
+                        for tok in 0..t {
+                            tensor::axpy(
+                                1.0,
+                                &xin[(b * t + tok) * dim..(b * t + tok + 1) * dim],
+                                &mut out[b * dim..(b + 1) * dim],
+                            );
+                        }
+                    }
+                    let scale = 1.0 / t as f32;
+                    for v in out.iter_mut() {
+                        *v *= scale;
+                    }
+                    out
+                }
+            };
+            debug_assert_eq!(out.len(), numel, "{}: shape/val mismatch", node.name);
+            vals.push(out);
+        }
+        Ok(vals.pop().expect("program has at least one node"))
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

@@ -1,0 +1,609 @@
+//! The `.geta` container — a versioned little-endian binary format for
+//! deployed compressed models.
+//!
+//! Layout (all integers little-endian; `[str]` = u32 length + UTF-8):
+//!
+//! | field | type | meaning |
+//! |---|---|---|
+//! | magic | 4 bytes | `"GETA"` |
+//! | version | u16 | format version (currently 1) |
+//! | flags | u16 | reserved, must be 0 |
+//! | model / family / task | 3 × [str] | identity of the exported model |
+//! | config | [str] | the model config JSON (re-lowered at load time) |
+//! | n_sites | u32 | quant-site records, plan order (`quant_site_specs`) |
+//! | site · name | [str] | site name |
+//! | site · kind | u8 | 0 = weight, 1 = activation |
+//! | site · d, t, q_m | 3 × f32 | learned quantizer parameters |
+//! | site · bits | u8 | rounded eq. (3) bit width (reporting/size) |
+//! | n_tensors | u32 | tensor records, parameter-store order |
+//! | tensor · name | [str] | tensor name |
+//! | tensor · ndim, dims | u8, ndim × u32 | **kept-channel-sliced** shape |
+//! | tensor · enc | u8 | 0 = raw f32, 1 = bit-packed integer levels |
+//! | enc 0 | u32 numel + numel × f32 | biases, norms, embeddings |
+//! | enc 1 | u32 site, u32 numel, i32 min_level, u8 pack_bits, u32 nbytes, bytes | quantized weight |
+//!
+//! Packed payloads store the signed quantization levels
+//! `round(sgn(w)·clip(w)/d)` offset by `min_level` and bit-packed LSB-first
+//! at `pack_bits` per value — `pack_bits` is the smallest width that holds
+//! the tensor's actual level range, which equals the learned bit width
+//! except when training left a site mid-projection. Dequantization is
+//! `(min_level + u) as f32 * d`, bit-identical to the fake-quantized
+//! weights the training interpreter multiplies, which is what makes the
+//! deployed engine's parity obligation (≤ 1e-4 vs masked eval) hold.
+//!
+//! The reader is strict: bad magic, unknown version, nonzero flags,
+//! truncation, trailing bytes, out-of-range site references and
+//! shape/payload mismatches are all hard errors, never best-effort reads.
+
+use anyhow::{Context, Result};
+
+use crate::quant::QParams;
+
+pub const MAGIC: [u8; 4] = *b"GETA";
+pub const VERSION: u16 = 1;
+
+/// Allocation cap for a single tensor (guards the strict reader against
+/// corrupt length fields; far above any zoo model).
+const MAX_NUMEL: u64 = 1 << 28;
+const MAX_DIMS: usize = 8;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SiteKind {
+    Weight,
+    Act,
+}
+
+/// One quant site: learned (d, t, q_m) plus the rounded bit width.
+#[derive(Debug, Clone)]
+pub struct SiteRecord {
+    pub name: String,
+    pub kind: SiteKind,
+    pub q: QParams,
+    pub bits: u8,
+}
+
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Raw f32 values (biases, norm scales, embeddings, unquantized weights).
+    F32(Vec<f32>),
+    /// Bit-packed integer levels of a quantized weight site.
+    Packed {
+        /// Index into the container's site table (must be a weight site).
+        site: u32,
+        min_level: i32,
+        pack_bits: u8,
+        bytes: Vec<u8>,
+        numel: usize,
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorRecord {
+    pub name: String,
+    /// Kept-channel-sliced shape (post structured pruning).
+    pub shape: Vec<usize>,
+    pub payload: Payload,
+}
+
+impl TensorRecord {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A parsed (or to-be-written) `.geta` file.
+#[derive(Debug, Clone)]
+pub struct GetaContainer {
+    pub model: String,
+    pub family: String,
+    pub task: String,
+    /// The model config JSON text the engine re-lowers at load time.
+    pub config_text: String,
+    pub sites: Vec<SiteRecord>,
+    pub tensors: Vec<TensorRecord>,
+}
+
+impl GetaContainer {
+    pub fn config(&self) -> Result<crate::util::json::Json> {
+        crate::util::json::parse(&self.config_text)
+            .map_err(|e| anyhow::anyhow!("container config json: {e}"))
+    }
+
+    // ------------------------------------------------------------- writing
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::default();
+        w.bytes(&MAGIC);
+        w.u16(VERSION);
+        w.u16(0); // flags
+        w.str(&self.model);
+        w.str(&self.family);
+        w.str(&self.task);
+        w.str(&self.config_text);
+        w.u32(self.sites.len() as u32);
+        for s in &self.sites {
+            w.str(&s.name);
+            w.u8(match s.kind {
+                SiteKind::Weight => 0,
+                SiteKind::Act => 1,
+            });
+            w.f32(s.q.d);
+            w.f32(s.q.t);
+            w.f32(s.q.qm);
+            w.u8(s.bits);
+        }
+        w.u32(self.tensors.len() as u32);
+        for t in &self.tensors {
+            w.str(&t.name);
+            w.u8(t.shape.len() as u8);
+            for &d in &t.shape {
+                w.u32(d as u32);
+            }
+            match &t.payload {
+                Payload::F32(v) => {
+                    w.u8(0);
+                    w.u32(v.len() as u32);
+                    for &x in v {
+                        w.f32(x);
+                    }
+                }
+                Payload::Packed {
+                    site,
+                    min_level,
+                    pack_bits,
+                    bytes,
+                    numel,
+                } => {
+                    w.u8(1);
+                    w.u32(*site);
+                    w.u32(*numel as u32);
+                    w.i32(*min_level);
+                    w.u8(*pack_bits);
+                    w.u32(bytes.len() as u32);
+                    w.bytes(bytes);
+                }
+            }
+        }
+        w.0
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    // ------------------------------------------------------------- reading
+    pub fn from_bytes(b: &[u8]) -> Result<GetaContainer> {
+        let mut r = Reader { b, pos: 0 };
+        let magic = r.take(4)?;
+        anyhow::ensure!(magic == MAGIC, "bad magic {magic:02x?} (not a .geta file)");
+        let version = r.u16()?;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported .geta version {version} (this build reads {VERSION})"
+        );
+        let flags = r.u16()?;
+        anyhow::ensure!(flags == 0, "unknown .geta flags {flags:#06x}");
+        let model = r.str()?;
+        let family = r.str()?;
+        let task = r.str()?;
+        let config_text = r.str()?;
+        let n_sites = r.u32()? as usize;
+        let mut sites = Vec::with_capacity(n_sites.min(4096));
+        for i in 0..n_sites {
+            let name = r.str()?;
+            let kind = match r.u8()? {
+                0 => SiteKind::Weight,
+                1 => SiteKind::Act,
+                k => anyhow::bail!("site {i} (`{name}`): unknown kind {k}"),
+            };
+            let q = QParams {
+                d: r.f32()?,
+                t: r.f32()?,
+                qm: r.f32()?,
+            };
+            anyhow::ensure!(
+                q.d.is_finite() && q.d > 0.0 && q.t.is_finite() && q.qm.is_finite(),
+                "site {i} (`{name}`): degenerate qparams {q:?}"
+            );
+            let bits = r.u8()?;
+            anyhow::ensure!((2..=32).contains(&bits), "site {i} (`{name}`): bits {bits}");
+            sites.push(SiteRecord { name, kind, q, bits });
+        }
+        let n_tensors = r.u32()? as usize;
+        let mut tensors: Vec<TensorRecord> = Vec::with_capacity(n_tensors.min(4096));
+        for _ in 0..n_tensors {
+            let name = r.str()?;
+            anyhow::ensure!(
+                tensors.iter().all(|t| t.name != name),
+                "duplicate tensor `{name}`"
+            );
+            let ndim = r.u8()? as usize;
+            anyhow::ensure!(ndim <= MAX_DIMS, "tensor `{name}`: {ndim} dims");
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let numel = shape.iter().map(|&d| d as u64).product::<u64>();
+            anyhow::ensure!(numel <= MAX_NUMEL, "tensor `{name}`: numel {numel} too large");
+            let numel = numel as usize;
+            let payload = match r.u8()? {
+                0 => {
+                    let n = r.u32()? as usize;
+                    anyhow::ensure!(n == numel, "tensor `{name}`: f32 numel {n} != shape {numel}");
+                    let raw = r.take(n * 4)?;
+                    let mut v = Vec::with_capacity(n);
+                    for c in raw.chunks_exact(4) {
+                        v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                    }
+                    Payload::F32(v)
+                }
+                1 => {
+                    let site = r.u32()?;
+                    anyhow::ensure!(
+                        (site as usize) < sites.len(),
+                        "tensor `{name}`: site {site} out of range ({} sites)",
+                        sites.len()
+                    );
+                    anyhow::ensure!(
+                        sites[site as usize].kind == SiteKind::Weight,
+                        "tensor `{name}`: packed payload references activation site {site}"
+                    );
+                    let n = r.u32()? as usize;
+                    anyhow::ensure!(n == numel, "tensor `{name}`: packed numel {n} != shape {numel}");
+                    let min_level = r.i32()?;
+                    let pack_bits = r.u8()?;
+                    anyhow::ensure!(
+                        (1..=32).contains(&pack_bits),
+                        "tensor `{name}`: pack_bits {pack_bits}"
+                    );
+                    let nbytes = r.u32()? as usize;
+                    let want = (numel * pack_bits as usize).div_ceil(8);
+                    anyhow::ensure!(
+                        nbytes == want,
+                        "tensor `{name}`: payload {nbytes} bytes, expected {want}"
+                    );
+                    let bytes = r.take(nbytes)?.to_vec();
+                    Payload::Packed {
+                        site,
+                        min_level,
+                        pack_bits,
+                        bytes,
+                        numel,
+                    }
+                }
+                e => anyhow::bail!("tensor `{name}`: unknown encoding {e}"),
+            };
+            tensors.push(TensorRecord { name, shape, payload });
+        }
+        anyhow::ensure!(
+            r.pos == b.len(),
+            "{} trailing bytes after the last tensor record",
+            b.len() - r.pos
+        );
+        Ok(GetaContainer {
+            model,
+            family,
+            task,
+            config_text,
+            sites,
+            tensors,
+        })
+    }
+
+    pub fn read(path: &std::path::Path) -> Result<GetaContainer> {
+        let b = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        Self::from_bytes(&b).with_context(|| format!("parse {}", path.display()))
+    }
+}
+
+// ------------------------------------------------------------- bit packing
+
+/// Smallest bit width that represents every value in `0..=range`.
+pub fn bits_for_range(range: u64) -> u8 {
+    ((64 - range.leading_zeros()) as u8).max(1)
+}
+
+/// Pack `levels` as unsigned `(level - min)` values, `bits` per value,
+/// LSB-first. The caller guarantees `level - min < 2^bits` for all levels
+/// (use [`bits_for_range`] on the actual range).
+pub fn pack_levels(levels: &[i32], min: i32, bits: u8) -> Vec<u8> {
+    assert!((1..=32).contains(&bits));
+    let mut out = vec![0u8; (levels.len() * bits as usize).div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &l in levels {
+        let mut u = (l as i64 - min as i64) as u64;
+        // a real assert: packing runs once at export, and a masked-off high
+        // bit would write a silently corrupt payload the reader accepts
+        assert!(u < (1u64 << bits), "level {l} out of {bits}-bit range (min {min})");
+        let mut remaining = bits as usize;
+        while remaining > 0 {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min(remaining);
+            out[byte] |= ((u & ((1u64 << take) - 1)) as u8) << off;
+            u >>= take;
+            bitpos += take;
+            remaining -= take;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_levels`].
+pub fn unpack_levels(bytes: &[u8], numel: usize, min: i32, bits: u8) -> Result<Vec<i32>> {
+    anyhow::ensure!((1..=32).contains(&bits), "pack bits {bits}");
+    anyhow::ensure!(
+        bytes.len() == (numel * bits as usize).div_ceil(8),
+        "packed payload is {} bytes, expected {}",
+        bytes.len(),
+        (numel * bits as usize).div_ceil(8)
+    );
+    let mut out = Vec::with_capacity(numel);
+    let mut bitpos = 0usize;
+    for _ in 0..numel {
+        let mut u: u64 = 0;
+        let mut got = 0usize;
+        while got < bits as usize {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min(bits as usize - got);
+            let chunk = ((bytes[byte] >> off) as u64) & ((1u64 << take) - 1);
+            u |= chunk << got;
+            got += take;
+            bitpos += take;
+        }
+        out.push((min as i64 + u as i64) as i32);
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------ byte helpers
+
+#[derive(Default)]
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn bytes(&mut self, b: &[u8]) {
+        self.0.extend_from_slice(b);
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.b.len(),
+            "truncated .geta file: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.b.len() - self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn i32(&mut self) -> Result<i32> {
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n <= self.b.len(), "string length {n} exceeds file size");
+        let raw = self.take(n)?;
+        Ok(std::str::from_utf8(raw)
+            .map_err(|_| anyhow::anyhow!("invalid utf-8 string at offset {}", self.pos - n))?
+            .to_string())
+    }
+}
+
+// ----------------------------------------------------------------- tests
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_container() -> GetaContainer {
+        let levels = vec![-3i32, -1, 0, 2, 3, 1];
+        let min = -3;
+        let pack_bits = bits_for_range(6);
+        GetaContainer {
+            model: "toy".into(),
+            family: "mlp".into(),
+            task: "image_cls".into(),
+            config_text: r#"{"name":"toy","family":"mlp"}"#.into(),
+            sites: vec![
+                SiteRecord {
+                    name: "fc0.weight".into(),
+                    kind: SiteKind::Weight,
+                    q: QParams { d: 0.25, t: 1.0, qm: 1.0 },
+                    bits: 3,
+                },
+                SiteRecord {
+                    name: "fc0.act".into(),
+                    kind: SiteKind::Act,
+                    q: QParams { d: 0.1, t: 1.0, qm: 4.0 },
+                    bits: 6,
+                },
+            ],
+            tensors: vec![
+                TensorRecord {
+                    name: "fc0.weight".into(),
+                    shape: vec![2, 3],
+                    payload: Payload::Packed {
+                        site: 0,
+                        min_level: min,
+                        pack_bits,
+                        bytes: pack_levels(&levels, min, pack_bits),
+                        numel: 6,
+                    },
+                },
+                TensorRecord {
+                    name: "fc0.bias".into(),
+                    shape: vec![3],
+                    payload: Payload::F32(vec![0.5, -0.25, 0.0]),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn container_roundtrips() {
+        let c = tiny_container();
+        let bytes = c.to_bytes();
+        let back = GetaContainer::from_bytes(&bytes).unwrap();
+        assert_eq!(back.model, "toy");
+        assert_eq!(back.sites.len(), 2);
+        assert_eq!(back.sites[1].kind, SiteKind::Act);
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors[0].shape, vec![2, 3]);
+        let Payload::Packed { bytes: pb, min_level, pack_bits, numel, .. } =
+            &back.tensors[0].payload
+        else {
+            panic!("expected packed payload")
+        };
+        let levels = unpack_levels(pb, *numel, *min_level, *pack_bits).unwrap();
+        assert_eq!(levels, vec![-3, -1, 0, 2, 3, 1]);
+        let Payload::F32(v) = &back.tensors[1].payload else {
+            panic!("expected f32 payload")
+        };
+        assert_eq!(v, &vec![0.5, -0.25, 0.0]);
+        assert!(back.config().unwrap().str_or("family", "") == "mlp");
+    }
+
+    #[test]
+    fn reader_rejects_bad_magic_version_and_truncation() {
+        let c = tiny_container();
+        let bytes = c.to_bytes();
+        // magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        let err = GetaContainer::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // version
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        let err = GetaContainer::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // truncation at every prefix length must error, never panic
+        for cut in [5, 12, bytes.len() / 2, bytes.len() - 1] {
+            assert!(GetaContainer::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // trailing garbage
+        let mut bad = bytes.clone();
+        bad.push(0);
+        let err = GetaContainer::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_cross_references() {
+        // packed tensor referencing an activation site
+        let mut c = tiny_container();
+        if let Payload::Packed { site, .. } = &mut c.tensors[0].payload {
+            *site = 1;
+        }
+        let err = GetaContainer::from_bytes(&c.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("activation site"), "{err}");
+        // out-of-range site index
+        let mut c = tiny_container();
+        if let Payload::Packed { site, .. } = &mut c.tensors[0].payload {
+            *site = 7;
+        }
+        let err = GetaContainer::from_bytes(&c.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_every_bitwidth_2_to_8() {
+        // deterministic boundary sweep: for each learned bit width the full
+        // signed level range [-cap, cap] must survive pack -> unpack
+        for bits in 2u8..=8 {
+            let cap = 1i32 << (bits - 1);
+            let mut levels: Vec<i32> = (-cap..=cap).collect();
+            levels.extend([0, cap, -cap, 1 - cap, cap - 1]);
+            let min = *levels.iter().min().unwrap();
+            let range = (*levels.iter().max().unwrap() - min) as u64;
+            let pb = bits_for_range(range);
+            let bytes = pack_levels(&levels, min, pb);
+            let back = unpack_levels(&bytes, levels.len(), min, pb).unwrap();
+            assert_eq!(back, levels, "bits {bits}");
+            // the payload really is sub-byte-packed, not i32-sized
+            assert!(bytes.len() < levels.len() * 4, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip_is_lossless() {
+        crate::util::prop::check(
+            120,
+            |g| {
+                let bits = 2 + g.rng.below(7) as u8; // 2..=8
+                let cap = 1i32 << (bits - 1);
+                let n = g.size(48);
+                let levels: Vec<i32> = (0..n)
+                    .map(|_| (g.f32_in(-(cap as f32), cap as f32)).round() as i32)
+                    .collect();
+                (bits, levels)
+            },
+            |(bits, levels)| {
+                let min = *levels.iter().min().unwrap();
+                let range = (*levels.iter().max().unwrap() - min) as u64;
+                let pb = bits_for_range(range).max(*bits);
+                let bytes = pack_levels(levels, min, pb);
+                let back = unpack_levels(&bytes, levels.len(), min, pb)
+                    .map_err(|e| e.to_string())?;
+                if &back == levels {
+                    Ok(())
+                } else {
+                    Err(format!("lossy roundtrip at {pb} bits: {levels:?} -> {back:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bits_for_range_is_minimal() {
+        assert_eq!(bits_for_range(0), 1);
+        assert_eq!(bits_for_range(1), 1);
+        assert_eq!(bits_for_range(2), 2);
+        assert_eq!(bits_for_range(3), 2);
+        assert_eq!(bits_for_range(255), 8);
+        assert_eq!(bits_for_range(256), 9);
+    }
+}

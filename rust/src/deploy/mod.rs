@@ -1,0 +1,257 @@
+//! Deployment subsystem: turn a trained, group-zeroed, quantized model
+//! into a `.geta` artifact and run it with a packed-integer inference
+//! engine over the shrunk shapes.
+//!
+//! The training pipeline only ever *simulates* compression (fake-quant
+//! forward, zeroed groups); this module makes it physical:
+//!
+//! * [`format`] — the versioned little-endian `.geta` container:
+//!   kept-channel-sliced shapes, bit-packed integer weights at each site's
+//!   learned bit width, per-site (d, t, q_m), strict reader.
+//! * [`engine`] — [`GetaEngine`]: dequantize-on-load f32 kernels over the
+//!   slice-propagated program (`subnet::propagate_slices`), batched
+//!   `infer` with `std::thread` micro-batch sharding, plus a dense-f32
+//!   baseline over the same executor for honest speedup numbers.
+//! * [`export_compressed`] / [`export_to_file`] — the bridge from
+//!   `subnet::construct`'s `CompressedModel` to the container.
+//!
+//! Parity obligation: for every exportable family, the compressed engine's
+//! logits must match the native interpreter's masked-model eval within
+//! 1e-4 (`rust/tests/test_deploy.rs`). This holds because (1) packed
+//! levels dequantize to exactly the fake-quantized weights the
+//! interpreter multiplies, (2) structured slicing removes only channels
+//! whose masked contribution is exactly zero, and (3) both sides share
+//! the same f64-accumulated kernels and per-micro-batch normalization
+//! statistics.
+
+pub mod engine;
+pub mod format;
+
+pub use engine::GetaEngine;
+pub use format::{GetaContainer, Payload, SiteKind, SiteRecord, TensorRecord};
+
+use anyhow::Result;
+
+use crate::graph::PruneGroup;
+use crate::metrics::bops::LayerCost;
+use crate::optim::qasso::SiteSpec;
+use crate::quant::QParams;
+use crate::subnet::{self, CompressedModel};
+use crate::tensor::ParamStore;
+use crate::util::json::Json;
+
+/// Build a `.geta` container from a constructed [`CompressedModel`].
+/// `sites`/`q` are the plan-order site list and learned quantizer rows
+/// (`graph::builders::quant_site_specs` order — the same rows the training
+/// interpreter indexed).
+pub fn export_compressed(
+    config: &Json,
+    sites: &[SiteSpec],
+    q: &[QParams],
+    cm: &CompressedModel,
+) -> Result<GetaContainer> {
+    anyhow::ensure!(
+        sites.len() == q.len(),
+        "site/qparam count mismatch: {} vs {}",
+        sites.len(),
+        q.len()
+    );
+    let site_records: Vec<SiteRecord> = sites
+        .iter()
+        .zip(q)
+        .map(|(s, qp)| SiteRecord {
+            name: s.name.clone(),
+            kind: if s.param.is_some() {
+                SiteKind::Weight
+            } else {
+                SiteKind::Act
+            },
+            q: *qp,
+            bits: (qp.bit_width().round() as i64).clamp(2, 32) as u8,
+        })
+        .collect();
+    let mut tensors = Vec::with_capacity(cm.sliced.tensors.len());
+    for t in &cm.sliced.tensors {
+        let packed = cm.packed.iter().find(|p| p.name == t.name);
+        let payload = match packed {
+            Some(p) => {
+                let site = sites
+                    .iter()
+                    .position(|s| s.param.as_deref() == Some(t.name.as_str()))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("packed tensor `{}` has no weight site", t.name)
+                    })?;
+                anyhow::ensure!(
+                    p.levels.len() == t.numel(),
+                    "packed tensor `{}`: {} levels for {} elements",
+                    t.name,
+                    p.levels.len(),
+                    t.numel()
+                );
+                let min = p.levels.iter().copied().min().unwrap_or(0);
+                let max = p.levels.iter().copied().max().unwrap_or(0);
+                let pack_bits = format::bits_for_range((max as i64 - min as i64) as u64).min(32);
+                Payload::Packed {
+                    site: site as u32,
+                    min_level: min,
+                    pack_bits,
+                    bytes: format::pack_levels(&p.levels, min, pack_bits),
+                    numel: p.levels.len(),
+                }
+            }
+            None => Payload::F32(t.data.clone()),
+        };
+        tensors.push(TensorRecord {
+            name: t.name.clone(),
+            shape: t.shape.clone(),
+            payload,
+        });
+    }
+    Ok(GetaContainer {
+        model: config.str_or("name", "<unnamed>"),
+        family: config.str_or("family", ""),
+        task: config.str_or("task", "image_cls"),
+        config_text: config.to_string(),
+        sites: site_records,
+        tensors,
+    })
+}
+
+/// Full in-memory export path: re-zero pruned groups (masked-eval parity
+/// must never depend on optimizer drift), construct the compressed
+/// deliverable, and build the container. Every consumer of the artifact —
+/// the `geta export` CLI, `bench-infer`, and the round-trip tests — goes
+/// through this one function, so the benchmarked path and the shipped path
+/// can never drift apart.
+#[allow(clippy::too_many_arguments)]
+pub fn export_model(
+    config: &Json,
+    sites: &[SiteSpec],
+    groups: &[PruneGroup],
+    pruned: &[bool],
+    costs: &[LayerCost],
+    params: &mut ParamStore,
+    q: &[QParams],
+) -> Result<(GetaContainer, CompressedModel)> {
+    subnet::zero_pruned(params, groups, pruned);
+    let cm = subnet::construct(params, groups, pruned, costs, sites, q);
+    let container = export_compressed(config, sites, q, &cm)?;
+    Ok((container, cm))
+}
+
+/// [`export_model`] plus the file write.
+#[allow(clippy::too_many_arguments)]
+pub fn export_to_file(
+    config: &Json,
+    sites: &[SiteSpec],
+    groups: &[PruneGroup],
+    pruned: &[bool],
+    costs: &[LayerCost],
+    params: &mut ParamStore,
+    q: &[QParams],
+    path: &std::path::Path,
+) -> Result<(GetaContainer, CompressedModel)> {
+    let (container, cm) = export_model(config, sites, groups, pruned, costs, params, q)?;
+    container.write(path)?;
+    Ok((container, cm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+    use crate::runtime::{native, Backend, HostArray};
+    use crate::util::json;
+
+    /// End-to-end export -> load -> infer on an untrained tiny mlp: parity
+    /// with the masked interpreter eval, without any training in the loop.
+    /// (The trained per-family roundtrips live in tests/test_deploy.rs.)
+    #[test]
+    fn export_load_infer_parity_on_tiny_mlp() {
+        let cfg = json::parse(
+            r#"{"name": "t_mlp", "family": "mlp", "task": "image_cls",
+                "image": {"size": 4, "channels": 2}, "hidden": [8, 6],
+                "num_classes": 3, "quant": {"weight": true, "act": true}}"#,
+        )
+        .unwrap();
+        let e = native::NativeEngine::from_config(&cfg).unwrap();
+        let mut params = e.init_params(7);
+        let q = e.init_qparams(&params, 6.0);
+        let space = graph::search_space_for(&cfg).unwrap();
+        // prune every third group
+        let pruned: Vec<bool> = (0..space.groups.len()).map(|g| g % 3 == 0).collect();
+        let costs = crate::metrics::layer_costs(&cfg).unwrap();
+        let sites = e.site_specs();
+        let path = std::env::temp_dir().join("geta_unit_tiny_mlp.geta");
+        let (container, cm) =
+            export_to_file(&cfg, &sites, &space.groups, &pruned, &costs, &mut params, &q, &path)
+                .unwrap();
+        assert!(cm.params_after < cm.params_before);
+        let disk = std::fs::metadata(&path).unwrap().len() as usize;
+        assert!(disk < cm.size_fp32_before, "{disk} vs dense {}", cm.size_fp32_before);
+        assert_eq!(disk, container.to_bytes().len());
+
+        let engine = GetaEngine::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let bsz = e.manifest().batch.batch_size();
+        let (train, _) = crate::data::SynthData::for_model(&cfg, bsz.max(8), 8, 3);
+        let idxs: Vec<usize> = (0..bsz).collect();
+        let (x, y) = train.batch(&idxs);
+        let masked = e.eval_logits(&params, &q, &x, &y).unwrap();
+        let got = engine.infer(&x).unwrap();
+        assert_eq!(got.len(), masked.len());
+        for i in 0..got.len() {
+            assert!(
+                (got[i] - masked[i]).abs() <= 1e-4 * (1.0 + masked[i].abs()),
+                "logit[{i}]: {} vs masked {}",
+                got[i],
+                masked[i]
+            );
+        }
+        // thread count must not change results (micro-batch sharding only)
+        let mut many = GetaEngine::from_container(&container).unwrap();
+        many.threads = 4;
+        many.micro_batch = bsz; // same stats granularity
+        let HostArray::F32(xv) = &x else { panic!() };
+        let mut x2 = xv.clone();
+        x2.extend_from_slice(xv);
+        let big = HostArray::F32(x2);
+        let a = {
+            let mut one = GetaEngine::from_container(&container).unwrap();
+            one.threads = 1;
+            one.micro_batch = bsz;
+            one.infer(&big).unwrap()
+        };
+        let b = many.infer(&big).unwrap();
+        assert_eq!(a, b, "thread sharding changed results");
+
+        // tampering: swapping two packed tensors' site indices must be
+        // rejected at load (each would dequantize with the other's step d)
+        let mut tampered = container.clone();
+        let packed_idx: Vec<usize> = tampered
+            .tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| matches!(t.payload, Payload::Packed { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(packed_idx.len() >= 2);
+        let (i0, i1) = (packed_idx[0], packed_idx[1]);
+        let s0 = match &tampered.tensors[i0].payload {
+            Payload::Packed { site, .. } => *site,
+            _ => unreachable!(),
+        };
+        let s1 = match &tampered.tensors[i1].payload {
+            Payload::Packed { site, .. } => *site,
+            _ => unreachable!(),
+        };
+        if let Payload::Packed { site, .. } = &mut tampered.tensors[i0].payload {
+            *site = s1;
+        }
+        if let Payload::Packed { site, .. } = &mut tampered.tensors[i1].payload {
+            *site = s0;
+        }
+        let err = GetaEngine::from_container(&tampered).unwrap_err().to_string();
+        assert!(err.contains("not its own weight site"), "{err}");
+    }
+}

@@ -35,6 +35,16 @@
 //!   produced by `make artifacts` and executes the compiled HLO of all
 //!   nine zoo models. The `xla` dependency defaults to a vendored stub;
 //!   point it at real bindings to run artifacts (see README.md).
+//!
+//! The **deploy** subsystem closes the loop from simulated to physical
+//! compression: `deploy::format` is the versioned `.geta` binary container
+//! (kept-channel-sliced shapes + bit-packed integer weights at the learned
+//! bit widths), and `deploy::GetaEngine` is a packed-integer inference
+//! engine that re-lowers the embedded config, shrinks it with
+//! `subnet::propagate_slices`, and serves batched `infer` with
+//! `std::thread` micro-batch sharding — with a parity obligation against
+//! the masked interpreter eval (`geta export` / `geta infer` /
+//! `geta bench-infer`).
 
 pub mod util;
 pub mod tensor;
@@ -45,6 +55,7 @@ pub mod runtime;
 pub mod data;
 pub mod metrics;
 pub mod subnet;
+pub mod deploy;
 pub mod baselines;
 pub mod coordinator;
 pub mod config;

@@ -3,9 +3,13 @@
 //! Subcommands:
 //!   geta graph  --model <name>                 inspect QADG + search space
 //!   geta train  --model <name> [--sparsity ..] run GETA on one model
-//!   geta repro  <table2|table3|table4|table5|table6|fig3|fig4a|fig4b|table1|all>
+//!   geta export --model <name> [--out f.geta]  train + write a .geta artifact
+//!   geta infer  --file f.geta [--threads N]    run the packed inference engine
+//!   geta bench-infer --model <name>            dense-f32 vs compressed wall-clock
+//!   geta repro  <table2|..|fig4b|deploy|all>
 //!   geta bench  [--iters N]                    runtime micro-benchmarks
 //!   geta models                                list AOT artifacts
+//!   geta --list-models                         list valid --model names
 
 use anyhow::Result;
 
@@ -20,25 +24,52 @@ fn art_dir(a: &Args) -> std::path::PathBuf {
     std::path::PathBuf::from(a.opt_or("artifacts", "artifacts"))
 }
 
+/// Resolve `--model`, failing with the full list of valid model names
+/// instead of a bare config-load error deep in the stack.
+fn resolve_model(a: &Args, default: &str) -> Result<String> {
+    let model = a.opt_or("model", default);
+    let known = geta::runtime::available_models(&art_dir(a));
+    if !known.contains(&model) {
+        anyhow::bail!(
+            "unknown model `{model}`; valid models are: {}\n(see `geta --list-models`)",
+            known.join(", ")
+        );
+    }
+    Ok(model)
+}
+
 fn main() -> Result<()> {
     let a = Args::from_env();
     match a.subcommand.as_deref() {
         Some("models") => cmd_models(&a),
         Some("graph") => cmd_graph(&a),
         Some("train") => cmd_train(&a),
+        Some("export") => cmd_export(&a),
+        Some("infer") => cmd_infer(&a),
+        Some("bench-infer") => cmd_bench_infer(&a),
         Some("repro") => cmd_repro(&a),
         Some("bench") => cmd_bench(&a),
+        None if a.flag("list-models") => {
+            for m in geta::runtime::available_models(&art_dir(&a)) {
+                println!("{m}");
+            }
+            Ok(())
+        }
         // `geta --model <name> [...]` without a subcommand means train: the
         // common quick-run spelling (`cargo run -- --model resnet_mini`)
         None if a.opt("model").is_some() => cmd_train(&a),
         _ => {
             println!(
                 "geta — joint structured pruning + quantization-aware training\n\n\
-                 usage: geta <models|graph|train|repro|bench> [options]\n\
+                 usage: geta <models|graph|train|export|infer|bench-infer|repro|bench> [options]\n\
                    geta graph --model vgg7_mini\n\
                    geta train --model resnet_mini --sparsity 0.35 --verbose\n\
+                   geta export --model resnet_mini --sparsity 0.5 --out resnet.geta\n\
+                   geta infer --file resnet.geta --n 256 --threads 4\n\
+                   geta bench-infer --model resnet_mini --iters 10\n\
                    geta repro all [--steps-scale 0.2]\n\
-                   geta bench --iters 20"
+                   geta bench --iters 20\n\
+                   geta --list-models"
             );
             Ok(())
         }
@@ -63,7 +94,7 @@ fn cmd_models(a: &Args) -> Result<()> {
 }
 
 fn cmd_graph(a: &Args) -> Result<()> {
-    let model = a.opt_or("model", "vgg7_mini");
+    let model = resolve_model(a, "vgg7_mini")?;
     let dir = art_dir(a);
     let man = geta::runtime::manifest_for(&dir, &model)?;
     let traced = geta::graph::builders::build_trace(&man.config, true)?;
@@ -97,7 +128,7 @@ fn cmd_graph(a: &Args) -> Result<()> {
 }
 
 fn cmd_train(a: &Args) -> Result<()> {
-    let model = a.opt_or("model", "mlp_tiny");
+    let model = resolve_model(a, "mlp_tiny")?;
     let mut exp = ExperimentConfig::defaults_for(&model);
     exp.apply_args(a);
     let mut t = Trainer::new(&art_dir(a), exp)?;
@@ -113,6 +144,131 @@ fn cmd_train(a: &Args) -> Result<()> {
     println!(
         "\nresult: acc {:.2}%  rel BOPs {:.2}%  avg bits {:.1}  group sparsity {:.2}  param sparsity {:.2}",
         r.accuracy, r.rel_bops, r.avg_bits, r.group_sparsity, r.param_sparsity
+    );
+    Ok(())
+}
+
+fn cmd_export(a: &Args) -> Result<()> {
+    use geta::coordinator::Compressor as _;
+    let model = resolve_model(a, "mlp_tiny")?;
+    let mut exp = ExperimentConfig::defaults_for(&model);
+    exp.apply_args(a);
+    let mut t = Trainer::new(&art_dir(a), exp)?;
+    t.verbose = a.flag("verbose");
+    println!(
+        "training {model} for export ({} steps, platform {})",
+        t.exp.total_steps(),
+        t.engine.platform()
+    );
+    let mut geta_c = GetaCompressor::new(&t.engine, &t.exp, StageMask::default())?;
+    let mut trained = t.run_trained(&mut geta_c)?;
+    let cfg = t.engine.manifest().config.clone();
+    let space = geta::graph::search_space_for(&cfg)?;
+    let pruned: Vec<bool> = geta_c
+        .pruned_mask()
+        .map(|m| m.to_vec())
+        .unwrap_or_else(|| vec![false; space.groups.len()]);
+    let out = a.opt_or("out", &format!("{model}.geta"));
+    let path = std::path::PathBuf::from(&out);
+    let (_, cm) = geta::deploy::export_to_file(
+        &cfg,
+        &t.engine.site_specs(),
+        &space.groups,
+        &pruned,
+        &t.costs,
+        &mut trained.params,
+        &trained.q,
+        &path,
+    )?;
+    let disk = std::fs::metadata(&path)?.len() as usize;
+    println!(
+        "\nwrote {out}: {:.1} KiB on disk vs {:.1} KiB dense f32 ({:.2}x smaller)",
+        disk as f64 / 1024.0,
+        cm.size_fp32_before as f64 / 1024.0,
+        cm.size_fp32_before as f64 / disk.max(1) as f64,
+    );
+    println!(
+        "  rel BOPs {:.2}%  avg bits {:.1}  params {} -> {}  acc {:.2}%",
+        trained.result.rel_bops,
+        trained.result.avg_bits,
+        cm.params_before,
+        cm.params_after,
+        trained.result.accuracy,
+    );
+    Ok(())
+}
+
+fn cmd_infer(a: &Args) -> Result<()> {
+    let file = a
+        .opt("file")
+        .ok_or_else(|| anyhow::anyhow!("`geta infer` needs --file <model.geta>"))?;
+    let mut engine = geta::deploy::GetaEngine::load(std::path::Path::new(file))?;
+    if let Some(t) = a.opt("threads") {
+        engine.threads = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads `{t}` is not a number"))?;
+    }
+    let n = a.usize_or("n", 256);
+    // only the eval split is used: keep the discarded train split minimal
+    let (_, eval) = geta::data::SynthData::for_model(engine.config(), 1, n.max(1), 1);
+    let idxs: Vec<usize> = (0..eval.len()).collect();
+    let (x, y) = eval.batch(&idxs);
+    let t0 = std::time::Instant::now();
+    let logits = engine.infer(&x)?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let samples = eval.len();
+    println!(
+        "{} ({}): {samples} samples in {ms:.2} ms ({:.0} samples/s, {} threads)",
+        engine.model,
+        engine.task,
+        samples as f64 / (ms / 1e3).max(1e-9),
+        engine.threads,
+    );
+    if engine.task == "image_cls" {
+        let ncls = engine.output_per_sample();
+        let geta::runtime::HostArray::I32(labels) = &y else {
+            anyhow::bail!("image task expects i32 labels")
+        };
+        let mut correct = 0usize;
+        for (i, &lab) in labels.iter().enumerate() {
+            let row = &logits[i * ncls..(i + 1) * ncls];
+            let mut best = 0;
+            for j in 1..ncls {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            if best == lab as usize {
+                correct += 1;
+            }
+        }
+        println!("  accuracy {:.2}% on synthetic eval data", 100.0 * correct as f64 / samples as f64);
+    }
+    Ok(())
+}
+
+fn cmd_bench_infer(a: &Args) -> Result<()> {
+    let model = resolve_model(a, "mlp_tiny")?;
+    let iters = a.usize_or("iters", 10);
+    let scale = a.f64_or("steps-scale", 0.12);
+    let sparsity = a.f64_or("sparsity", 0.5);
+    let threads = a.usize_or("threads", 1);
+    let r = geta::report::bench_deploy(&art_dir(a), &model, scale, sparsity, iters, threads)?;
+    println!(
+        "\nbench-infer {model} (batch {}, {iters} iters, best-of):\n\
+         \x20 dense f32   {:>8.2} ms/batch   {:>8.1} KiB params\n\
+         \x20 .geta       {:>8.2} ms/batch   {:>8.1} KiB on disk\n\
+         \x20 speedup {:.2}x   size {:.2}x smaller   rel BOPs {:.2}%   sparsity {:.2}   avg bits {:.1}",
+        r.batch,
+        r.dense_ms,
+        r.dense_bytes as f64 / 1024.0,
+        r.compressed_ms,
+        r.disk_bytes as f64 / 1024.0,
+        r.dense_ms / r.compressed_ms.max(1e-9),
+        r.dense_bytes as f64 / r.disk_bytes.max(1) as f64,
+        r.rel_bops,
+        r.group_sparsity,
+        r.avg_bits,
     );
     Ok(())
 }
@@ -152,6 +308,9 @@ fn cmd_repro(a: &Args) -> Result<()> {
     }
     if all || which == "fig4b" {
         ctx.fig4b()?;
+    }
+    if all || which == "deploy" {
+        ctx.deploy()?;
     }
     ctx.write_markdown(std::path::Path::new("reports"))?;
     println!("\nmarkdown written to reports/");

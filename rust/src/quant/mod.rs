@@ -106,6 +106,15 @@ pub fn grad_qm(x: f32, q: &QParams) -> f32 {
     }
 }
 
+/// The signed integer quantization level of `x`: `round(sgn(x)·clip/d)`.
+/// This is the value the deployment path stores on disk; `level * d`
+/// reconstructs [`fake_quant`]`(x)` exactly (IEEE multiplication is
+/// commutative, so the two spellings are bit-identical).
+#[inline]
+pub fn quantize_level(x: f32, q: &QParams) -> i32 {
+    (sign(x) * clip_pow(x, q) / q.d).round() as i32
+}
+
 /// Vectorized fake-quant into a reusable output buffer (joint-stage hot path).
 pub fn fake_quant_slice(xs: &[f32], q: &QParams, out: &mut Vec<f32>) {
     out.clear();
@@ -200,6 +209,15 @@ mod tests {
         fake_quant_slice(&xs, &qp, &mut out);
         for (i, &x) in xs.iter().enumerate() {
             assert_eq!(out[i], fake_quant(x, &qp));
+        }
+    }
+
+    #[test]
+    fn quantize_level_reconstructs_fake_quant() {
+        let qp = q(0.05, 1.15, 1.1);
+        for &x in &[-2.0f32, -0.73, -0.02, 0.0, 0.31, 0.99, 1.4] {
+            let l = quantize_level(x, &qp);
+            assert_eq!(l as f32 * qp.d, fake_quant(x, &qp), "x={x}");
         }
     }
 

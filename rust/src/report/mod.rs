@@ -11,7 +11,8 @@ use anyhow::Result;
 use crate::baselines::{self, LlmPruneStyle};
 use crate::config::ExperimentConfig;
 use crate::runtime::Backend as _;
-use crate::coordinator::{GetaCompressor, RunResult, Trainer};
+use crate::coordinator::{Compressor as _, GetaCompressor, RunResult, Trainer};
+use crate::deploy::{self, GetaEngine};
 use crate::graph;
 use crate::optim::qasso::StageMask;
 use crate::util::table::Table;
@@ -408,6 +409,37 @@ impl ReportCtx {
         Ok(rows)
     }
 
+    // ------------------------------------------------------------ deploy
+    /// Measured deployment table: on-disk `.geta` bytes and inference
+    /// wall-clock next to the theoretical rel-BOPs, dense-f32 vs
+    /// compressed, through the same executor (`deploy::GetaEngine`).
+    pub fn deploy(&mut self) -> Result<Vec<DeployBench>> {
+        let mut rows = Vec::new();
+        let mut tbl = Table::new(
+            "Deployment — .geta artifact vs dense f32 (measured)",
+            &[
+                "model", "rel BOPs %", "dense KiB", ".geta KiB", "size x",
+                "dense ms/b", "geta ms/b", "speedup",
+            ],
+        );
+        for model in ["mlp_tiny", "resnet_mini"] {
+            let r = bench_deploy(&self.art_dir, model, self.scale, 0.5, 5, 1)?;
+            tbl.row(vec![
+                r.model.clone(),
+                format!("{:.2}", r.rel_bops),
+                format!("{:.1}", r.dense_bytes as f64 / 1024.0),
+                format!("{:.1}", r.disk_bytes as f64 / 1024.0),
+                format!("{:.2}", r.dense_bytes as f64 / r.disk_bytes.max(1) as f64),
+                format!("{:.2}", r.dense_ms),
+                format!("{:.2}", r.compressed_ms),
+                format!("{:.2}", r.dense_ms / r.compressed_ms.max(1e-9)),
+            ]);
+            rows.push(r);
+        }
+        self.finish("deploy", tbl);
+        Ok(rows)
+    }
+
     /// Write accumulated markdown to reports/.
     pub fn write_markdown(&self, dir: &std::path::Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
@@ -416,4 +448,97 @@ impl ReportCtx {
         }
         Ok(())
     }
+}
+
+/// One measured deployment comparison (the `geta bench-infer` payload).
+#[derive(Debug, Clone)]
+pub struct DeployBench {
+    pub model: String,
+    /// Theoretical relative BOPs of the exported subnet (%).
+    pub rel_bops: f64,
+    /// Dense f32 parameter bytes of the original architecture.
+    pub dense_bytes: usize,
+    /// On-disk size of the `.geta` artifact.
+    pub disk_bytes: usize,
+    /// Best-of-iters wall-clock per eval batch, dense-f32 engine.
+    pub dense_ms: f64,
+    /// Best-of-iters wall-clock per eval batch, compressed engine.
+    pub compressed_ms: f64,
+    pub batch: usize,
+    pub group_sparsity: f64,
+    pub avg_bits: f64,
+}
+
+/// Train briefly, export a `.geta` artifact, and time one eval batch
+/// through the dense-f32 engine vs the compressed engine (same executor,
+/// same micro-batch, best of `iters` runs). This is the measured
+/// counterpart to the BOPs column in every paper table.
+pub fn bench_deploy(
+    art_dir: &std::path::Path,
+    model: &str,
+    steps_scale: f64,
+    sparsity: f64,
+    iters: usize,
+    threads: usize,
+) -> Result<DeployBench> {
+    let mut exp = ExperimentConfig::defaults_for(model);
+    exp.scale_steps(steps_scale);
+    exp.n_train = exp.n_train.min(512);
+    exp.n_eval = exp.n_eval.min(256);
+    if sparsity > 0.0 {
+        exp.qasso.target_group_sparsity = sparsity;
+    }
+    let t = Trainer::new(art_dir, exp)?;
+    let mut geta = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default())?;
+    let mut trained = t.run_trained(&mut geta)?;
+    let dense_params = trained.params.clone();
+    let cfg = t.engine.manifest().config.clone();
+    let space = graph::search_space_for(&cfg)?;
+    let pruned: Vec<bool> = geta
+        .pruned_mask()
+        .map(|m| m.to_vec())
+        .unwrap_or_else(|| vec![false; space.groups.len()]);
+    let (container, cm) = deploy::export_model(
+        &cfg,
+        &t.engine.site_specs(),
+        &space.groups,
+        &pruned,
+        &t.costs,
+        &mut trained.params,
+        &trained.q,
+    )?;
+    let disk_bytes = container.to_bytes().len();
+    let mut comp = GetaEngine::from_container(&container)?;
+    comp.threads = threads;
+    let mut dense = GetaEngine::dense(&cfg, dense_params)?;
+    dense.threads = threads;
+    let batch = t.batch_size();
+    // one micro-batch per worker: a single batch would collapse to one
+    // chunk and silently clamp the thread count back to 1
+    let n_batches = threads.max(1);
+    let idxs: Vec<usize> = (0..batch * n_batches).map(|i| i % t.eval_data.len()).collect();
+    let (x, _y) = t.eval_data.batch(&idxs);
+    let time_ms = |e: &GetaEngine| -> Result<f64> {
+        crate::util::bench::black_box(e.infer(&x)?); // warm
+        let mut best = f64::INFINITY;
+        for _ in 0..iters.max(1) {
+            let t0 = std::time::Instant::now();
+            crate::util::bench::black_box(e.infer(&x)?);
+            best = best.min(t0.elapsed().as_secs_f64() * 1e3 / n_batches as f64);
+        }
+        Ok(best)
+    };
+    let dense_ms = time_ms(&dense)?;
+    let compressed_ms = time_ms(&comp)?;
+    Ok(DeployBench {
+        model: model.to_string(),
+        rel_bops: trained.result.rel_bops,
+        dense_bytes: cm.size_fp32_before,
+        disk_bytes,
+        dense_ms,
+        compressed_ms,
+        batch,
+        group_sparsity: trained.result.group_sparsity,
+        avg_bits: trained.result.avg_bits,
+    })
 }

@@ -28,11 +28,14 @@ const NORM_EPS: f32 = 1e-5;
 
 /// Everything one interpreter pass produces. `grads` is present only for
 /// training passes; `extra` only for eval passes (task-dependent outputs
-/// after loss+metric, in manifest `eval_outputs` order).
+/// after loss+metric, in manifest `eval_outputs` order). `logits` is the
+/// output node's raw values — the deployment path's parity reference
+/// (compressed-engine output must match these on the masked model).
 pub struct RunOut {
     pub loss: f32,
     pub metric: f32,
     pub extra: Vec<Vec<f32>>,
+    pub logits: Vec<f32>,
     pub grads: Option<(ParamStore, Vec<(f32, f32, f32)>)>,
 }
 
@@ -393,10 +396,13 @@ pub fn run(
         other => anyhow::bail!("unknown task `{other}`"),
     };
     if !with_grads {
+        // vals is dropped on return: hand the output buffer over instead of
+        // copying it
         return Ok(RunOut {
             loss,
             metric,
             extra,
+            logits: std::mem::take(&mut vals[out_id]),
             grads: None,
         });
     }
@@ -728,6 +734,7 @@ pub fn run(
         loss,
         metric,
         extra,
+        logits: std::mem::take(&mut vals[out_id]),
         grads: Some((grads, qgrads)),
     })
 }

@@ -112,6 +112,20 @@ pub trait Backend {
         y: &HostArray,
     ) -> Result<EvalOut>;
 
+    /// Raw output-node logits of an eval forward pass — the deployment
+    /// path's parity reference (`deploy::GetaEngine` must reproduce these
+    /// on the masked model). Backends that cannot expose logits (compiled
+    /// HLO returns only loss/metric) keep the default error.
+    fn eval_logits(
+        &self,
+        _params: &ParamStore,
+        _q: &[QParams],
+        _x: &HostArray,
+        _y: &HostArray,
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("backend `{}` does not expose eval logits", self.platform())
+    }
+
     /// Initialize parameters per the layer-name conventions shared with the
     /// JAX zoo (he for conv, glorot for linear, 0.02-normal embeddings,
     /// ones/zeros for norms and biases). Distribution-faithful rather than

@@ -33,7 +33,9 @@ use crate::util::json::{self, Json};
 pub use super::lowering::lowered_families;
 
 /// Batch sizes per task, mirroring python/compile/models/__init__.py BATCH.
-fn batch_size_for(task: &str) -> usize {
+/// Public: the deployment engine uses it as the default inference
+/// micro-batch (normalization-statistics granularity).
+pub fn batch_size_for(task: &str) -> usize {
     match task {
         "image_cls" => 32,
         _ => 16, // span_qa, lm
@@ -349,6 +351,17 @@ impl Backend for NativeEngine {
             metric: out.metric,
             extra: out.extra,
         })
+    }
+
+    fn eval_logits(
+        &self,
+        params: &ParamStore,
+        q: &[QParams],
+        x: &HostArray,
+        y: &HostArray,
+    ) -> Result<Vec<f32>> {
+        let out = interp::run(&self.program, self.manifest.qsites.len(), params, q, x, y, false)?;
+        Ok(out.logits)
     }
 }
 

@@ -10,10 +10,13 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{Context, Result};
+
 use crate::graph::PruneGroup;
 use crate::metrics::bops::{self, LayerCost};
 use crate::optim::qasso::SiteSpec;
 use crate::quant::{self, QParams};
+use crate::runtime::lowering::{Node, OpKind, Program};
 use crate::tensor::ParamStore;
 
 /// Per-tensor axis retention after pruning.
@@ -139,6 +142,215 @@ impl CompressedModel {
     }
 }
 
+/// Re-zero every pruned group's output-side members. QASSO keeps pruned
+/// groups at zero during training, but the deployment path re-asserts it
+/// so masked-eval parity never depends on optimizer drift.
+pub fn zero_pruned(params: &mut ParamStore, groups: &[PruneGroup], pruned: &[bool]) {
+    let gi = crate::optim::saliency::GroupIndex::build(groups, params);
+    for (g, &p) in pruned.iter().enumerate() {
+        if p {
+            gi.zero_group(g, params);
+        }
+    }
+}
+
+/// Propagate kept-channel slicing through a lowered program: rebuild every
+/// node's shape from the **sliced** parameter store so conv/linear/norm/
+/// attention shapes shrink coherently along the QADG groups instead of
+/// merely carrying zeroed channels. Spatial extents never change (channel
+/// pruning only), attention head counts shrink in whole heads, and every
+/// producer/consumer channel mismatch is a hard error naming the node.
+///
+/// Caveat: this function sees only the sliced *shapes*, not which channel
+/// indices were removed, so for attention it can check divisibility
+/// (`dim % head_dim == 0`) but not that the removed channels align to
+/// whole-head boundaries. Whole-head alignment is guaranteed by the QADG's
+/// head-granular prune groups (`graph::depgraph` raises the space
+/// granularity to `head_dim` at every `AttentionJoin`); callers slicing by
+/// any other scheme must enforce it themselves.
+pub fn propagate_slices(prog: &Program, sliced: &ParamStore) -> Result<Program> {
+    let dim_of = |name: &str, axis: usize| -> Result<usize> {
+        let t = sliced
+            .get(name)
+            .with_context(|| format!("sliced store missing `{name}`"))?;
+        anyhow::ensure!(axis < t.shape.len(), "`{name}`: axis {axis} of {:?}", t.shape);
+        Ok(t.shape[axis])
+    };
+    let numel_of = |name: &str| -> Result<usize> {
+        Ok(sliced
+            .get(name)
+            .with_context(|| format!("sliced store missing `{name}`"))?
+            .numel())
+    };
+    let mut nodes: Vec<Node> = Vec::with_capacity(prog.nodes.len());
+    for node in &prog.nodes {
+        let in_shape = |k: usize| -> &Vec<usize> { &nodes[node.inputs[k]].shape };
+        let (shape, op) = match &node.op {
+            OpKind::Input => (node.shape.clone(), node.op.clone()),
+            OpKind::Embed { tok, pos } => {
+                let dim = dim_of(tok, 1)?;
+                anyhow::ensure!(
+                    dim_of(pos, 1)? == dim,
+                    "{}: pos table dim {} vs embedding dim {dim}",
+                    node.name,
+                    dim_of(pos, 1)?
+                );
+                (vec![node.shape[0], node.shape[1], dim], node.op.clone())
+            }
+            OpKind::Linear { w, .. } => {
+                let wname = format!("{w}.weight");
+                let din = dim_of(&wname, 0)?;
+                let dout = dim_of(&wname, 1)?;
+                let got = *in_shape(0).last().unwrap();
+                anyhow::ensure!(
+                    got == din,
+                    "{}: input dim {got} vs sliced weight rows {din}",
+                    node.name
+                );
+                anyhow::ensure!(
+                    dim_of(&format!("{w}.bias"), 0)? == dout,
+                    "{}: bias/weight out mismatch",
+                    node.name
+                );
+                let mut shape = in_shape(0).clone();
+                *shape.last_mut().unwrap() = dout;
+                (shape, node.op.clone())
+            }
+            OpKind::Conv2d { w, .. } => {
+                let wname = format!("{w}.weight");
+                let cin = dim_of(&wname, 2)?;
+                let cout = dim_of(&wname, 3)?;
+                let got = *in_shape(0).last().unwrap();
+                anyhow::ensure!(
+                    got == cin,
+                    "{}: input channels {got} vs sliced weight cin {cin}",
+                    node.name
+                );
+                anyhow::ensure!(
+                    dim_of(&format!("{w}.bias"), 0)? == cout,
+                    "{}: bias/weight cout mismatch",
+                    node.name
+                );
+                // spatial extent is pruning-invariant: keep ho/wo
+                (
+                    vec![node.shape[0], node.shape[1], node.shape[2], cout],
+                    node.op.clone(),
+                )
+            }
+            OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
+                let shape = in_shape(0).clone();
+                let c = *shape.last().unwrap();
+                anyhow::ensure!(
+                    numel_of(&format!("{p}.gamma"))? == c && numel_of(&format!("{p}.beta"))? == c,
+                    "{}: norm params not sliced to {c} channels",
+                    node.name
+                );
+                (shape, node.op.clone())
+            }
+            OpKind::Relu | OpKind::Gelu | OpKind::ActQuant { .. } => {
+                (in_shape(0).clone(), node.op.clone())
+            }
+            OpKind::Add => {
+                let a = in_shape(0).clone();
+                anyhow::ensure!(
+                    &a == in_shape(1),
+                    "{}: add over mismatched shapes {a:?} vs {:?}",
+                    node.name,
+                    in_shape(1)
+                );
+                (a, node.op.clone())
+            }
+            OpKind::MaxPool2 => {
+                let s = in_shape(0);
+                (
+                    vec![s[0], node.shape[1], node.shape[2], s[3]],
+                    node.op.clone(),
+                )
+            }
+            OpKind::GlobalAvgPool => {
+                let s = in_shape(0);
+                (vec![s[0], s[3]], node.op.clone())
+            }
+            OpKind::Reshape => {
+                let s = in_shape(0);
+                let shape = if node.shape.len() == 3 {
+                    // NHWC -> tokens: [b, h*w, c]
+                    vec![s[0], s[1] * s[2], s[3]]
+                } else {
+                    vec![s[0], s[1..].iter().product()]
+                };
+                (shape, node.op.clone())
+            }
+            OpKind::ConcatCls { cls } => {
+                let s = in_shape(0);
+                let dim = s[2];
+                anyhow::ensure!(
+                    numel_of(cls)? == dim,
+                    "{}: cls token not sliced to dim {dim}",
+                    node.name
+                );
+                (vec![s[0], s[1] + 1, dim], node.op.clone())
+            }
+            OpKind::AddPos { pos } => {
+                let s = in_shape(0).clone();
+                let rest: usize = s[1..].iter().product();
+                anyhow::ensure!(
+                    numel_of(pos)? == rest,
+                    "{}: pos table not sliced to {rest} entries",
+                    node.name
+                );
+                (s, node.op.clone())
+            }
+            OpKind::Attention { heads, causal } => {
+                let orig_dim = *node.shape.last().unwrap();
+                let hd = orig_dim / heads;
+                let s = in_shape(0).clone();
+                anyhow::ensure!(
+                    &s == in_shape(1) && &s == in_shape(2),
+                    "{}: q/k/v shapes diverge after slicing",
+                    node.name
+                );
+                let dim = *s.last().unwrap();
+                anyhow::ensure!(
+                    hd > 0 && dim % hd == 0,
+                    "{}: sliced attention dim {dim} not a whole number of {hd}-wide heads \
+                     (QADG groups must prune whole heads)",
+                    node.name
+                );
+                (
+                    s,
+                    OpKind::Attention {
+                        heads: dim / hd,
+                        causal: *causal,
+                    },
+                )
+            }
+            OpKind::PatchMerge { side } => {
+                let s = in_shape(0);
+                let dim = s[2];
+                let half = side / 2;
+                (vec![s[0], half * half, dim * 4], node.op.clone())
+            }
+            OpKind::TokenPoolCls | OpKind::TokenPoolMean => {
+                let s = in_shape(0);
+                (vec![s[0], s[2]], node.op.clone())
+            }
+        };
+        nodes.push(Node {
+            name: node.name.clone(),
+            op,
+            inputs: node.inputs.clone(),
+            shape,
+        });
+    }
+    Ok(Program {
+        family: prog.family.clone(),
+        task: prog.task.clone(),
+        batch: prog.batch,
+        nodes,
+    })
+}
+
 /// Build the compressed deliverable.
 pub fn construct(
     params: &ParamStore,
@@ -164,11 +376,7 @@ pub fn construct(
             Some(pname) => {
                 wbits.insert(pname.clone(), b);
                 if let Some(t) = sliced.get(pname) {
-                    let levels = t
-                        .data
-                        .iter()
-                        .map(|&x| (quant::sign(x) * quant::clip_pow(x, &qp) / qp.d).round() as i32)
-                        .collect();
+                    let levels = t.data.iter().map(|&x| quant::quantize_level(x, &qp)).collect();
                     packed.push(PackedTensor {
                         name: pname.clone(),
                         bits: b as u32,
@@ -379,5 +587,155 @@ mod tests {
         let s = kept.slice(t);
         assert_eq!(s.shape, t.shape);
         assert_eq!(s.data, t.data);
+    }
+
+    #[test]
+    fn zero_pruned_matches_group_index_zeroing() {
+        let (mut a, groups) = toy_mlp();
+        let mut b = a.clone();
+        let pruned = vec![true, false, true, false, false, true];
+        let gi = crate::optim::saliency::GroupIndex::build(&groups, &a);
+        for (g, &p) in pruned.iter().enumerate() {
+            if p {
+                gi.zero_group(g, &mut a);
+            }
+        }
+        zero_pruned(&mut b, &groups, &pruned);
+        for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(ta.data, tb.data, "{}", ta.name);
+        }
+    }
+
+    #[test]
+    fn prop_packed_dequantize_error_bounded_by_quant_step() {
+        // At the Appendix-C init (t = 1) the quantizer is a uniform grid of
+        // step d inside the clip range, so the reconstruction error of any
+        // in-range weight is at most d/2.
+        crate::util::prop::check(
+            100,
+            |g| {
+                let qm = g.f32_in(0.2, 2.0);
+                let bits = g.f32_in(2.0, 8.0).round();
+                let n = 4 + g.size(24);
+                let w = g.vec_normal(n, qm * 0.4);
+                (qm, bits, w)
+            },
+            |(qm, bits, w)| {
+                let qp = QParams::init(*qm, *bits); // t = 1
+                let levels: Vec<i32> = w.iter().map(|&x| quant::quantize_level(x, &qp)).collect();
+                let p = PackedTensor {
+                    name: "w".into(),
+                    bits: *bits as u32,
+                    numel: w.len(),
+                    levels,
+                    q: qp,
+                };
+                for (i, &x) in w.iter().enumerate() {
+                    if x.abs() > qp.qm {
+                        continue; // clipped: error is |x| - qm, unbounded by d
+                    }
+                    let err = (p.dequantize()[i] - x).abs();
+                    if err > qp.d * 0.5 + 1e-6 {
+                        return Err(format!(
+                            "w[{i}]={x}: dequant error {err} > d/2 = {}",
+                            qp.d * 0.5
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_slice_preserves_kept_channel_order() {
+        crate::util::prop::check(
+            80,
+            |g| {
+                let rows = g.size(6);
+                let cols = 2 + g.size(8);
+                let data = g.vec_normal(rows * cols, 1.0);
+                // remove a random strict subset of columns
+                let n_rm = g.rng.below(cols);
+                let mut removed: Vec<usize> = (0..n_rm).map(|_| g.rng.below(cols)).collect();
+                removed.sort_unstable();
+                removed.dedup();
+                if removed.len() == cols {
+                    removed.pop();
+                }
+                (rows, cols, data, removed)
+            },
+            |(rows, cols, data, removed)| {
+                let mut kept = KeptMap::default();
+                kept.removed
+                    .entry("w".to_string())
+                    .or_default()
+                    .insert(1, removed.clone());
+                let t = Tensor::from_vec("w", &[*rows, *cols], data.clone());
+                let s = kept.slice(&t);
+                let keep: Vec<usize> =
+                    (0..*cols).filter(|c| !removed.contains(c)).collect();
+                if s.shape != vec![*rows, keep.len()] {
+                    return Err(format!("shape {:?}", s.shape));
+                }
+                for r in 0..*rows {
+                    for (k, &c) in keep.iter().enumerate() {
+                        let got = s.data[r * keep.len() + k];
+                        let want = data[r * cols + c];
+                        if got != want {
+                            return Err(format!(
+                                "[{r},{k}] = {got}, want original column {c} = {want} \
+                                 (kept-channel order violated)"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn propagate_slices_shrinks_mlp_program() {
+        use crate::graph::builders;
+        use crate::runtime::lowering;
+        use crate::util::json;
+        let cfg = json::parse(
+            r#"{"name": "t", "family": "mlp", "task": "image_cls",
+                "image": {"size": 4, "channels": 1}, "hidden": [6, 4],
+                "num_classes": 3, "quant": {"weight": true, "act": false}}"#,
+        )
+        .unwrap();
+        let sites = builders::quant_site_specs(&cfg).unwrap();
+        let prog = lowering::lower(&cfg, &sites, 2).unwrap();
+        let space = crate::graph::search_space_for(&cfg).unwrap();
+        let params = crate::runtime::init_params_for(
+            &crate::runtime::native::synth_manifest(&cfg).unwrap(),
+            0,
+        );
+        // prune half of fc0's hidden units
+        let pruned: Vec<bool> = space
+            .groups
+            .iter()
+            .map(|g| g.label.starts_with("fc0") && g.id % 2 == 0)
+            .collect();
+        let kept = KeptMap::from_groups(&space.groups, &pruned);
+        let mut sliced = ParamStore::new();
+        for t in &params.tensors {
+            sliced.push(kept.slice(t));
+        }
+        let p2 = propagate_slices(&prog, &sliced).unwrap();
+        let fc0 = p2.nodes.iter().find(|n| n.name == "fc0").unwrap();
+        assert_eq!(*fc0.shape.last().unwrap(), 3); // 6 -> 3
+        // downstream fc1 input rows shrank coherently; its output did not
+        let fc1 = p2.nodes.iter().find(|n| n.name == "fc1").unwrap();
+        assert_eq!(*fc1.shape.last().unwrap(), 4);
+        let head = p2.nodes.iter().find(|n| n.name == "head").unwrap();
+        assert_eq!(*head.shape.last().unwrap(), 3);
+        // incoherent stores are rejected with the node name
+        let mut bad = sliced.clone();
+        bad.get_mut("fc1.weight").unwrap().shape = vec![6, 4];
+        let err = propagate_slices(&prog, &bad).unwrap_err().to_string();
+        assert!(err.contains("fc1"), "{err}");
     }
 }

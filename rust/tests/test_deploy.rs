@@ -1,0 +1,171 @@
+//! Deployment round-trips: train briefly -> `export` -> re-read the
+//! `.geta` file -> `infer`, per exportable family.
+//!
+//! Three obligations per family:
+//!   1. **Parity** — the packed-integer engine's logits match the native
+//!      interpreter's masked-model eval within 1e-4 (packed levels
+//!      dequantize to exactly the fake-quantized weights; slicing removes
+//!      only channels whose masked contribution is exactly zero).
+//!   2. **Size** — the artifact on disk is strictly smaller than the dense
+//!      f32 parameter bytes of the original architecture.
+//!   3. **Speed** (mlp + resnet) — compressed inference throughput is at
+//!      least the dense-f32 throughput through the same executor.
+
+mod common;
+
+use common::art_dir;
+use geta::config::ExperimentConfig;
+use geta::coordinator::{Compressor as _, GetaCompressor, Trainer};
+use geta::deploy::{self, GetaEngine};
+use geta::graph;
+use geta::optim::qasso::StageMask;
+use geta::runtime::Backend as _;
+
+fn trainer(exp: ExperimentConfig) -> Trainer {
+    let model = exp.model.clone();
+    match Trainer::new(&art_dir(), exp) {
+        Ok(t) => t,
+        Err(e) => {
+            common::skip_or_panic(&model, &e);
+            panic!("{model} has a native lowering; skip_or_panic must not return");
+        }
+    }
+}
+
+fn deploy_exp(model: &str, sparsity: f64) -> ExperimentConfig {
+    let mut e = ExperimentConfig::defaults_for(model);
+    e.scale_steps(0.1);
+    e.n_train = 192;
+    e.n_eval = 96;
+    e.qasso.target_group_sparsity = sparsity;
+    e
+}
+
+/// Best-of-n wall clock of one `infer` call, in seconds.
+fn time_infer(engine: &GetaEngine, x: &geta::runtime::HostArray, n: usize) -> f64 {
+    engine.infer(x).unwrap(); // warm
+    let mut best = f64::INFINITY;
+    for _ in 0..n {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(engine.infer(x).unwrap());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn roundtrip(model: &str, sparsity: f64, check_speed: bool) {
+    let t = trainer(deploy_exp(model, sparsity));
+    let mut g = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default()).unwrap();
+    let mut trained = t.run_trained(&mut g).unwrap();
+    let dense_params = trained.params.clone();
+    let cfg = t.engine.manifest().config.clone();
+    let space = graph::search_space_for(&cfg).unwrap();
+    let pruned: Vec<bool> = g.pruned_mask().unwrap().to_vec();
+    assert!(
+        pruned.iter().any(|&p| p),
+        "{model}: nothing pruned at target sparsity {sparsity}; roundtrip would be trivial"
+    );
+
+    // export -> bytes on disk
+    let path = std::env::temp_dir().join(format!("geta_roundtrip_{model}.geta"));
+    let (container, cm) = deploy::export_to_file(
+        &cfg,
+        &t.engine.site_specs(),
+        &space.groups,
+        &pruned,
+        &t.costs,
+        &mut trained.params,
+        &trained.q,
+        &path,
+    )
+    .unwrap();
+    let disk = std::fs::metadata(&path).unwrap().len() as usize;
+    assert!(
+        disk < cm.size_fp32_before,
+        "{model}: {disk} bytes on disk not smaller than dense f32 {} bytes",
+        cm.size_fp32_before
+    );
+
+    // strict re-read -> engine
+    let engine = GetaEngine::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(engine.model, model);
+
+    // parity vs masked interpreter eval, two eval batches
+    let bs = t.batch_size();
+    for b in 0..2usize {
+        let idxs: Vec<usize> = (b * bs..(b + 1) * bs).collect();
+        if *idxs.last().unwrap() >= t.eval_data.len() {
+            break;
+        }
+        let (x, y) = t.eval_data.batch(&idxs);
+        let masked = t
+            .engine
+            .eval_logits(&trained.params, &trained.q, &x, &y)
+            .unwrap();
+        let got = engine.infer(&x).unwrap();
+        assert_eq!(got.len(), masked.len(), "{model}: logit count");
+        for i in 0..got.len() {
+            assert!(
+                (got[i] - masked[i]).abs() <= 1e-4 * (1.0 + masked[i].abs()),
+                "{model}: logit[{i}] = {} vs masked {} (batch {b})",
+                got[i],
+                masked[i]
+            );
+        }
+    }
+
+    // throughput: the sliced+packed engine must not be slower than the
+    // dense-f32 model through the identical executor
+    if check_speed {
+        let mut dense = GetaEngine::dense(&cfg, dense_params).unwrap();
+        dense.threads = 1;
+        let mut comp = GetaEngine::from_container(&container).unwrap();
+        comp.threads = 1;
+        let idxs: Vec<usize> = (0..bs).collect();
+        let (x, _y) = t.eval_data.batch(&idxs);
+        let dense_s = time_infer(&dense, &x, 5);
+        let comp_s = time_infer(&comp, &x, 5);
+        assert!(
+            comp_s <= dense_s,
+            "{model}: compressed {comp_s:.6}s/batch slower than dense {dense_s:.6}s/batch \
+             (group sparsity {:.2})",
+            trained.result.group_sparsity
+        );
+    }
+}
+
+#[test]
+fn roundtrip_mlp() {
+    roundtrip("mlp_tiny", 0.5, true);
+}
+
+#[test]
+fn roundtrip_resnet() {
+    roundtrip("resnet_mini", 0.5, true);
+}
+
+#[test]
+fn roundtrip_vgg() {
+    roundtrip("vgg7_mini", 0.35, false);
+}
+
+#[test]
+fn roundtrip_vit() {
+    roundtrip("vit_mini", 0.3, false);
+}
+
+#[test]
+fn roundtrip_bert() {
+    roundtrip("bert_mini", 0.3, false);
+}
+
+#[test]
+fn roundtrip_gpt() {
+    roundtrip("gpt_mini", 0.3, false);
+}
+
+#[test]
+fn roundtrip_swin() {
+    roundtrip("swin_mini", 0.3, false);
+}

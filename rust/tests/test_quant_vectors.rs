@@ -13,8 +13,8 @@
 
 use geta::quant::{self, QParams};
 use geta::tensor::{
-    col2im, conv_out_dim, im2col, layernorm_bwd_rows, layernorm_rows, matmul, matmul_nt,
-    matmul_tn, softmax_bwd_rows, softmax_rows,
+    col2im, conv_out_dim, gelu, gelu_grad, im2col, layernorm_bwd_rows, layernorm_rows, matmul,
+    matmul_nt, matmul_tn, softmax_bwd_rows, softmax_rows,
 };
 use geta::util::json;
 
@@ -184,6 +184,87 @@ fn check_softmax_case(case: &json::Json) {
     assert_close(&gx, &case.get("gx").unwrap().f32_arr(), "softmax gx");
 }
 
+/// Multi-head attention (QK^T / softmax / V) forward + (dq, dk, dv)
+/// backward, replayed through the same tensor-op sequence the interpreter
+/// (runtime/interp.rs OpKind::Attention) executes per head.
+fn check_attention_case(case: &json::Json) {
+    let (b, s, d, heads) = (
+        case.usize_or("b", 0),
+        case.usize_or("s", 0),
+        case.usize_or("d", 0),
+        case.usize_or("heads", 1),
+    );
+    let causal = case.bool_or("causal", false);
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let qv = case.get("q").unwrap().f32_arr();
+    let kv = case.get("k").unwrap().f32_arr();
+    let vv = case.get("v").unwrap().f32_arr();
+    let cot = case.get("cot").unwrap().f32_arr();
+    let mut y = vec![0.0f32; b * s * d];
+    let mut gq = vec![0.0f32; b * s * d];
+    let mut gk = vec![0.0f32; b * s * d];
+    let mut gv = vec![0.0f32; b * s * d];
+    let mut qh = vec![0.0f32; s * hd];
+    let mut kh = vec![0.0f32; s * hd];
+    let mut vh = vec![0.0f32; s * hd];
+    let mut dyh = vec![0.0f32; s * hd];
+    for bi in 0..b {
+        for head in 0..heads {
+            let off = head * hd;
+            for t in 0..s {
+                let src = (bi * s + t) * d + off;
+                qh[t * hd..(t + 1) * hd].copy_from_slice(&qv[src..src + hd]);
+                kh[t * hd..(t + 1) * hd].copy_from_slice(&kv[src..src + hd]);
+                vh[t * hd..(t + 1) * hd].copy_from_slice(&vv[src..src + hd]);
+                dyh[t * hd..(t + 1) * hd].copy_from_slice(&cot[src..src + hd]);
+            }
+            let mut att = matmul_nt(&qh, &kh, s, hd, s);
+            for v in att.iter_mut() {
+                *v *= scale;
+            }
+            if causal {
+                for i in 0..s {
+                    for j in i + 1..s {
+                        att[i * s + j] = -1e9;
+                    }
+                }
+            }
+            softmax_rows(&mut att, s, s);
+            let yh = matmul(&att, &vh, s, s, hd);
+            // backward: dP = dY V^T, dV = P^T dY, dS = softmax'(P, dP)·scale
+            let dp = matmul_nt(&dyh, &vh, s, hd, s);
+            let dvh = matmul_tn(&att, &dyh, s, s, hd);
+            let mut ds = softmax_bwd_rows(&att, &dp, s, s);
+            for v in ds.iter_mut() {
+                *v *= scale;
+            }
+            let dqh = matmul(&ds, &kh, s, s, hd);
+            let dkh = matmul_tn(&ds, &qh, s, s, hd);
+            for t in 0..s {
+                let dst = (bi * s + t) * d + off;
+                y[dst..dst + hd].copy_from_slice(&yh[t * hd..(t + 1) * hd]);
+                gq[dst..dst + hd].copy_from_slice(&dqh[t * hd..(t + 1) * hd]);
+                gk[dst..dst + hd].copy_from_slice(&dkh[t * hd..(t + 1) * hd]);
+                gv[dst..dst + hd].copy_from_slice(&dvh[t * hd..(t + 1) * hd]);
+            }
+        }
+    }
+    assert_close(&y, &case.get("y").unwrap().f32_arr(), "attention y");
+    assert_close(&gq, &case.get("gq").unwrap().f32_arr(), "attention gq");
+    assert_close(&gk, &case.get("gk").unwrap().f32_arr(), "attention gk");
+    assert_close(&gv, &case.get("gv").unwrap().f32_arr(), "attention gv");
+}
+
+fn check_gelu_case(case: &json::Json) {
+    let x = case.get("x").unwrap().f32_arr();
+    let cot = case.get("cot").unwrap().f32_arr();
+    let y: Vec<f32> = x.iter().map(|&v| gelu(v)).collect();
+    assert_close(&y, &case.get("y").unwrap().f32_arr(), "gelu y");
+    let gx: Vec<f32> = x.iter().zip(&cot).map(|(&v, &c)| c * gelu_grad(v)).collect();
+    assert_close(&gx, &case.get("gx").unwrap().f32_arr(), "gelu gx");
+}
+
 #[test]
 fn native_ops_match_numpy_golden_vectors() {
     let v = op_vectors();
@@ -196,12 +277,17 @@ fn native_ops_match_numpy_golden_vectors() {
             "conv2d" => check_conv_case(case),
             "layernorm" => check_layernorm_case(case),
             "softmax" => check_softmax_case(case),
+            "attention" => check_attention_case(case),
+            "gelu" => check_gelu_case(case),
             other => panic!("unknown op vector kind {other}"),
         }
     }
-    // the three interpreter ops the conv/attention families depend on must
-    // all be covered, conv in several padding/stride regimes
+    // every interpreter op the conv/attention families depend on must be
+    // covered: conv in several padding/stride regimes, attention in both
+    // bidirectional and causal form, plus the norm/softmax/gelu kernels
     assert!(seen["conv2d"] >= 4, "{seen:?}");
     assert!(seen["layernorm"] >= 2, "{seen:?}");
     assert!(seen["softmax"] >= 2, "{seen:?}");
+    assert!(seen["attention"] >= 2, "{seen:?}");
+    assert!(seen["gelu"] >= 2, "{seen:?}");
 }

@@ -10,7 +10,8 @@ install):
   produced the full artifacts/quant_vectors.json.
 * rust/tests/data/op_vectors_small.json — forward AND backward vectors for
   the native interpreter's structural ops (conv2d on the im2col path with
-  XLA SAME/VALID padding, layernorm, softmax), mirroring
+  XLA SAME/VALID padding, layernorm, softmax, multi-head attention
+  QK^T/softmax/V incl. the causal mask, tanh-gelu), mirroring
   python/compile/models/common.py. Gradients are analytic (finite-
   difference-validated) and computed in float64 over float32 inputs, the
   same accumulation discipline as rust/src/tensor/ops.rs, so the Rust side
@@ -183,6 +184,69 @@ def softmax_case(rng, rows, n):
     }
 
 
+def attention_case(rng, b, s, d, heads, causal):
+    """Fused multi-head self-attention, forward + (dq, dk, dv) backward.
+
+    Mirrors rust/src/runtime/interp.rs OpKind::Attention: per-head slices
+    of width d/heads, QK^T scaled by 1/sqrt(head_dim), causal positions
+    masked to -1e9 *after* scaling, softmax over keys, probs @ V.
+    """
+    hd = d // heads
+    scale = 1.0 / np.sqrt(hd)
+    q = rng.normal(size=(b, s, d)).astype(np.float32).astype(np.float64)
+    k = rng.normal(size=(b, s, d)).astype(np.float32).astype(np.float64)
+    v = rng.normal(size=(b, s, d)).astype(np.float32).astype(np.float64)
+    cot = rng.normal(size=(b, s, d)).astype(np.float32).astype(np.float64)
+    y = np.zeros((b, s, d), np.float64)
+    gq = np.zeros((b, s, d), np.float64)
+    gk = np.zeros((b, s, d), np.float64)
+    gv = np.zeros((b, s, d), np.float64)
+    for bi in range(b):
+        for h in range(heads):
+            sl = slice(h * hd, (h + 1) * hd)
+            qh, kh, vh = q[bi, :, sl], k[bi, :, sl], v[bi, :, sl]
+            att = qh @ kh.T * scale
+            if causal:
+                att = np.where(np.triu(np.ones((s, s), bool), 1), -1e9, att)
+            e = np.exp(att - att.max(-1, keepdims=True))
+            p = e / e.sum(-1, keepdims=True)
+            y[bi, :, sl] = p @ vh
+            dyh = cot[bi, :, sl]
+            dp = dyh @ vh.T
+            gv[bi, :, sl] = p.T @ dyh
+            ds = p * (dp - (dp * p).sum(-1, keepdims=True)) * scale
+            gq[bi, :, sl] = ds @ kh
+            gk[bi, :, sl] = ds.T @ qh
+    def f(a):
+        return [float(np.float32(x)) for x in np.asarray(a).reshape(-1)]
+    return {
+        "kind": "attention", "b": b, "s": s, "d": d, "heads": heads,
+        "causal": causal,
+        "q": f(q), "k": f(k), "v": f(v), "y": f(y), "cot": f(cot),
+        "gq": f(gq), "gk": f(gk), "gv": f(gv),
+    }
+
+
+def gelu_case(rng, n):
+    """Tanh-approximated GELU (jax.nn.gelu default), forward + backward.
+
+    Constants are the float32 values rust/src/tensor/ops.rs uses, so the
+    only divergence left is f32-vs-f64 tanh rounding (< 1e-6 relative).
+    """
+    c = float(np.float32(0.7978846))
+    kk = float(np.float32(0.044715))
+    x = rng.normal(scale=1.5, size=n).astype(np.float32).astype(np.float64)
+    u = c * (x + kk * x ** 3)
+    t = np.tanh(u)
+    y = 0.5 * x * (1.0 + t)
+    cot = rng.normal(size=n).astype(np.float32).astype(np.float64)
+    du = c * (1.0 + 3.0 * kk * x * x)
+    gx = cot * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du)
+    def f(a):
+        return [float(np.float32(v)) for v in np.asarray(a).reshape(-1)]
+    return {"kind": "gelu", "n": n, "x": f(x), "y": f(y), "cot": f(cot), "gx": f(gx)}
+
+
 def main():
     rng = np.random.default_rng(42)
     cases = []
@@ -224,6 +288,12 @@ def main():
         layernorm_case(op_rng, 7, 16),
         softmax_case(op_rng, 3, 7),
         softmax_case(op_rng, 5, 32),
+        # multi-head attention (bert/vit block) + causal variant (gpt)
+        attention_case(op_rng, 2, 4, 8, 2, False),
+        attention_case(op_rng, 1, 6, 6, 3, True),
+        # tanh-gelu (transformer mlp nonlinearity)
+        gelu_case(op_rng, 37),
+        gelu_case(op_rng, 64),
     ]
     out = os.path.join(data_dir, "op_vectors_small.json")
     with open(out, "w") as f:
