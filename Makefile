@@ -3,13 +3,20 @@
 # The Rust build and tests do NOT need this — the native reference backend
 # covers the hermetic path (see README.md §Backends).
 
-.PHONY: artifacts vectors test build clean
+.PHONY: artifacts vectors test build bench-json clean
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# machine-readable perf log: runs the runtime bench (train/eval step
+# latency, naive-vs-tiled GEMM on resnet/vit @ batch 32, dense-vs-.geta
+# inference) and writes BENCH_runtime.json at the repo root. CI uploads
+# the file as a workflow artifact so the perf trajectory is tracked.
+bench-json:
+	cargo bench --bench bench_runtime
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -4,9 +4,17 @@
 //! report on any machine; with artifacts + `pjrt` the same rows measure
 //! the compiled-HLO engine instead.
 //!
-//! The trailing section benchmarks the *deployed* path: dense-f32 vs
-//! compressed (`.geta`) inference throughput through `deploy::GetaEngine`
-//! — the measured counterpart to the theoretical BOPs columns.
+//! The trailing sections benchmark the hot kernels and the *deployed*
+//! path, and write the machine-readable perf log `BENCH_runtime.json` at
+//! the repo root (also produced by `geta bench-infer --json` / `make
+//! bench-json`):
+//!
+//! * GEMM: the forward contraction shapes resnet/vit produce at batch 32,
+//!   naive reference triple loop vs the tiled multi-threaded kernels,
+//!   with a bitwise thread-invariance check.
+//! * Deploy: dense-f32 vs compressed (`.geta`) inference throughput
+//!   through `deploy::GetaEngine` — the measured counterpart to the
+//!   theoretical BOPs columns.
 
 use geta::runtime::Backend as _;
 use geta::config::ExperimentConfig;
@@ -39,24 +47,49 @@ fn main() {
             t.engine.eval_step(&params, &q, &x, &y).unwrap()
         });
     }
+    // hot-kernel comparison: naive reference GEMM vs the tiled threaded
+    // kernels, on the exact forward shapes resnet/vit produce at batch 32
+    let gemm = geta::report::standard_gemm_suite(5);
+    for g in &gemm {
+        println!(
+            "{:<44} naive {:>8.2} ms  tiled {:>8.2} ms  speedup {:>5.2}x  \
+             ({} threads, thread-invariant {})",
+            format!("gemm/{}@{}", g.model, g.batch),
+            g.naive_ms,
+            g.tiled_ms,
+            g.naive_ms / g.tiled_ms.max(1e-9),
+            g.threads,
+            g.thread_invariant,
+        );
+    }
     // deployed inference: dense f32 vs the exported .geta artifact
     // (brief training first so the compressed engine has real pruning)
-    for model in ["mlp_tiny", "resnet_mini"] {
-        match geta::report::bench_deploy(&art, model, 0.1, 0.5, b.iters.min(10), 1) {
+    let threads = geta::tensor::configured_threads();
+    let mut deploy = Vec::new();
+    for (model, scale) in [("mlp_tiny", 0.1), ("resnet_mini", 0.1), ("vit_mini", 0.05)] {
+        match geta::report::bench_deploy(&art, model, scale, 0.5, b.iters.min(10), threads) {
             Ok(r) => {
                 println!(
                     "{:<44} dense {:>8.2} ms/b  .geta {:>8.2} ms/b  speedup {:>5.2}x  \
-                     disk {:>7.1} KiB ({:.2}x smaller)",
+                     disk {:>7.1} KiB ({:.2}x smaller, {} threads)",
                     format!("deploy_infer/{model}"),
                     r.dense_ms,
                     r.compressed_ms,
                     r.dense_ms / r.compressed_ms.max(1e-9),
                     r.disk_bytes as f64 / 1024.0,
                     r.dense_bytes as f64 / r.disk_bytes.max(1) as f64,
+                    r.threads,
                 );
+                deploy.push(r);
             }
             Err(e) => eprintln!("skipping deploy bench {model}: {e}"),
         }
+    }
+    // machine-readable perf trail
+    let json_path = geta::report::bench_json_path();
+    match geta::report::write_bench_runtime_json(&json_path, &gemm, &deploy) {
+        Ok(()) => println!("wrote {}", json_path.display()),
+        Err(e) => eprintln!("failed to write BENCH_runtime.json: {e}"),
     }
     std::fs::create_dir_all("reports").ok();
     b.write_log(std::path::Path::new("reports/bench_runtime.json")).ok();

@@ -12,6 +12,13 @@
 //! real op shapes (`metrics::layer_costs` -> `runtime::lowering`), so the
 //! reported compression always describes the graph the backend executed.
 //!
+//! Every native step runs through the planned executor (`runtime::exec`):
+//! shapes resolved once per model, buffers recycled across steps, and the
+//! tiled contraction kernels honoring the process-wide `GETA_THREADS` /
+//! `--threads` worker budget — with results bitwise identical at any
+//! thread count, so a trained run is reproducible regardless of how many
+//! cores it was given.
+//!
 //! Baselines (rust/src/baselines/) reuse the same loop through the
 //! `Compressor` trait, so every method in every paper table runs on an
 //! identical substrate.

@@ -4,11 +4,17 @@
 //! Load path: parse the container, dequantize every packed weight once
 //! (`level * d` — bit-identical to the fake-quantized weights the training
 //! interpreter multiplies), re-lower the embedded config through
-//! `runtime::lowering`, then shrink the program's shapes to the sliced
-//! parameter store via `subnet::propagate_slices`. The forward pass is
-//! inference-only: no backward state, no per-step weight fake-quant — the
-//! only quantization left at runtime is the activation sites, applied with
-//! their learned (d, t, q_m).
+//! `runtime::lowering`, shrink the program's shapes to the sliced
+//! parameter store via `subnet::propagate_slices`, then build a
+//! shape-resolved `exec::Plan` for the inference micro-batch size.
+//!
+//! The forward pass is `runtime::exec::forward` with a
+//! [`exec::DeployParams`] source — **the same op kernels the training
+//! interpreter runs**, so the two execution paths cannot drift apart.
+//! There is no per-op math in this file. Inference-only differences live
+//! entirely in the parameter source: no per-step weight fake-quant (the
+//! packed weights were dequantized at load) and activation sites applied
+//! with their learned (d, t, q_m) container rows.
 //!
 //! Batching: [`GetaEngine::infer`] splits the input into micro-batches
 //! (default: the family's training batch size) and shards those
@@ -17,23 +23,23 @@
 //! interpreter's stateless-batchnorm semantics — which is exactly what
 //! makes the parity obligation testable, and makes results independent of
 //! the thread count (sharding only ever happens at micro-batch
-//! boundaries).
+//! boundaries, and the underlying kernels are themselves bitwise
+//! thread-count-invariant). Each worker pins the shared tiled kernels to
+//! one thread (`tensor::serial_scope`) so micro-batch sharding and kernel
+//! threading never oversubscribe the machine; a single large batch that
+//! collapses to one chunk instead lets the kernels use the full
+//! `GETA_THREADS` budget.
 
 use anyhow::{Context, Result};
 
 use super::format::{GetaContainer, Payload, SiteKind};
 use crate::graph::builders;
-use crate::quant::{self, QParams};
+use crate::quant::QParams;
+use crate::runtime::exec::{self, Arena, DeployParams, Input, Plan};
 use crate::runtime::lowering::{self, OpKind, Program};
 use crate::runtime::HostArray;
-use crate::subnet;
-use crate::tensor::{
-    self, batchnorm_rows, gelu, im2col, layernorm_rows, matmul, matmul_nt, softmax_rows,
-    ParamStore, Tensor,
-};
+use crate::tensor::{self, ParamStore, Tensor};
 use crate::util::json::Json;
-
-const NORM_EPS: f32 = 1e-5;
 
 /// Input dtype the loaded model expects.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,19 +48,15 @@ pub enum InputKind {
     I32,
 }
 
-/// Borrowed view of one micro-batch of inputs.
-enum In<'a> {
-    F32(&'a [f32]),
-    I32(&'a [i32]),
-}
-
 pub struct GetaEngine {
     pub model: String,
     pub task: String,
     config: Json,
-    /// Slice-propagated program, lowered with batch dim 1; the executor
+    /// Slice-propagated program, lowered with batch dim 1; `plan`
     /// substitutes the runtime micro-batch size.
     program: Program,
+    /// Shape-resolved plan for `micro_batch`, built once at load.
+    plan: Plan,
     weights: ParamStore,
     /// Learned activation-quant parameters by q-row (None = weight site or
     /// quantization disabled, as in the dense-f32 baseline engine).
@@ -66,6 +68,11 @@ pub struct GetaEngine {
     pub micro_batch: usize,
     /// Worker threads for [`infer`](Self::infer) (1 = sequential).
     pub threads: usize,
+    /// Buffer pool reused across `infer` calls on the sequential path
+    /// (worker threads keep their own short-lived arenas). A `Mutex` so
+    /// the engine stays shareable across the worker scope; it is only
+    /// locked once per sequential `infer` call, never contended.
+    arena: std::sync::Mutex<Arena>,
 }
 
 impl GetaEngine {
@@ -137,7 +144,7 @@ impl GetaEngine {
             weights.push(Tensor::from_vec(&t.name, &t.shape, data));
         }
         let base = lowering::lower(&config, &sites, 1)?;
-        let program = subnet::propagate_slices(&base, &weights)
+        let program = crate::subnet::propagate_slices(&base, &weights)
             .context("sliced shapes do not propagate coherently")?;
         let mut act_q = vec![None; sites.len()];
         for (i, rec) in c.sites.iter().enumerate() {
@@ -145,16 +152,20 @@ impl GetaEngine {
                 act_q[i] = Some(rec.q);
             }
         }
+        let micro_batch = crate::runtime::native::batch_size_for(&c.task);
+        let plan = Plan::new(&program, micro_batch);
         Ok(GetaEngine {
             model: c.model.clone(),
             task: c.task.clone(),
             config,
             program,
+            plan,
             weights,
             act_q,
             apply_act_quant: true,
-            micro_batch: crate::runtime::native::batch_size_for(&c.task),
-            threads: default_threads(),
+            micro_batch,
+            threads: tensor::configured_threads(),
+            arena: std::sync::Mutex::new(Arena::new()),
         })
     }
 
@@ -165,16 +176,20 @@ impl GetaEngine {
         let sites = builders::quant_site_specs(config)?;
         let task = config.str_or("task", "image_cls");
         let program = lowering::lower(config, &sites, 1)?;
+        let micro_batch = crate::runtime::native::batch_size_for(&task);
+        let plan = Plan::new(&program, micro_batch);
         Ok(GetaEngine {
             model: config.str_or("name", "<dense>"),
             task: task.clone(),
             config: config.clone(),
             program,
+            plan,
             weights: params,
             act_q: vec![None; sites.len()],
             apply_act_quant: false,
-            micro_batch: crate::runtime::native::batch_size_for(&task),
-            threads: default_threads(),
+            micro_batch,
+            threads: tensor::configured_threads(),
+            arena: std::sync::Mutex::new(Arena::new()),
         })
     }
 
@@ -231,12 +246,16 @@ impl GetaEngine {
         let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); chunks.len()];
         let nthreads = self.threads.max(1).min(chunks.len().max(1));
         if nthreads <= 1 {
+            // sequential chunks: the engine's persistent arena carries
+            // buffers across infer() calls, and the shared kernels keep
+            // their full thread budget
+            let mut arena = self.arena.lock().unwrap_or_else(|e| e.into_inner());
             for (slot, &(start, len)) in outputs.iter_mut().zip(&chunks) {
                 let xin = match x {
-                    HostArray::F32(v) => In::F32(&v[start * per..(start + len) * per]),
-                    HostArray::I32(v) => In::I32(&v[start * per..(start + len) * per]),
+                    HostArray::F32(v) => Input::F32(&v[start * per..(start + len) * per]),
+                    HostArray::I32(v) => Input::I32(&v[start * per..(start + len) * per]),
                 };
-                *slot = self.forward_chunk(&xin, len)?;
+                *slot = self.forward_chunk(&xin, len, &mut arena)?;
             }
         } else {
             // static round-robin partition: each worker owns disjoint slots
@@ -250,15 +269,22 @@ impl GetaEngine {
                 let mut handles = Vec::new();
                 for list in per_thread {
                     handles.push(sc.spawn(move || -> Result<()> {
-                        for (ci, slot) in list {
-                            let (start, len) = chunks[ci];
-                            let xin = match x {
-                                HostArray::F32(v) => In::F32(&v[start * per..(start + len) * per]),
-                                HostArray::I32(v) => In::I32(&v[start * per..(start + len) * per]),
-                            };
-                            *slot = self.forward_chunk(&xin, len)?;
-                        }
-                        Ok(())
+                        tensor::serial_scope(|| -> Result<()> {
+                            let mut arena = Arena::new();
+                            for (ci, slot) in list {
+                                let (start, len) = chunks[ci];
+                                let xin = match x {
+                                    HostArray::F32(v) => {
+                                        Input::F32(&v[start * per..(start + len) * per])
+                                    }
+                                    HostArray::I32(v) => {
+                                        Input::I32(&v[start * per..(start + len) * per])
+                                    }
+                                };
+                                *slot = self.forward_chunk(&xin, len, &mut arena)?;
+                            }
+                            Ok(())
+                        })
                     }));
                 }
                 for h in handles {
@@ -276,287 +302,25 @@ impl GetaEngine {
         Ok(out)
     }
 
-    fn weight<'a>(&'a self, name: &str) -> Result<&'a [f32]> {
-        self.weights
-            .get(name)
-            .map(|t| t.data.as_slice())
-            .with_context(|| format!("engine missing tensor `{name}`"))
+    /// One micro-batch forward over the sliced program via the shared
+    /// planned executor. The engine's prebuilt plan serves full
+    /// micro-batches; a tail chunk resolves a one-off plan for its size.
+    fn forward_chunk(&self, x: &Input<'_>, bsz: usize, arena: &mut Arena) -> Result<Vec<f32>> {
+        let src = DeployParams {
+            weights: &self.weights,
+            act_q: &self.act_q,
+            apply_act_quant: self.apply_act_quant,
+        };
+        let tail_plan;
+        let plan = if bsz == self.plan.bsz {
+            &self.plan
+        } else {
+            tail_plan = Plan::new(&self.program, bsz);
+            &tail_plan
+        };
+        let (mut vals, _aux) = exec::forward(&self.program, plan, &src, x, false, arena)?;
+        let out = std::mem::take(vals.last_mut().expect("program has at least one node"));
+        arena.reclaim_all(vals);
+        Ok(out)
     }
-
-    /// One micro-batch forward over the sliced program. `bsz` replaces the
-    /// program's batch-1 leading dim in every shape computation.
-    ///
-    /// NOTE: each op here deliberately mirrors the forward pass of
-    /// `runtime/interp.rs` (minus aux saving and per-step weight
-    /// fake-quant). Any change to an interpreter forward kernel must be
-    /// mirrored below — the per-family roundtrip parity tests
-    /// (`rust/tests/test_deploy.rs`) are what enforce the two staying in
-    /// lockstep.
-    fn forward_chunk(&self, x: &In<'_>, bsz: usize) -> Result<Vec<f32>> {
-        let nodes = &self.program.nodes;
-        let per = |id: usize| -> usize { nodes[id].shape[1..].iter().product() };
-        let mut vals: Vec<Vec<f32>> = Vec::with_capacity(nodes.len());
-        for (id, node) in nodes.iter().enumerate() {
-            let numel = bsz * per(id);
-            let dims = &node.shape; // [1, ...per-sample dims]
-            let input = |k: usize| -> &Vec<f32> { &vals[node.inputs[k]] };
-            let in_dims = |k: usize| -> &Vec<usize> { &nodes[node.inputs[k]].shape };
-            let out: Vec<f32> = match &node.op {
-                OpKind::Input => {
-                    let In::F32(xv) = x else {
-                        anyhow::bail!("image model expects f32 inputs")
-                    };
-                    anyhow::ensure!(xv.len() == numel, "input batch mismatch");
-                    xv.to_vec()
-                }
-                OpKind::Embed { tok, pos } => {
-                    let In::I32(toks) = x else {
-                        anyhow::bail!("token model expects i32 inputs")
-                    };
-                    let (seq, dim) = (dims[1], dims[2]);
-                    anyhow::ensure!(toks.len() == bsz * seq, "token batch mismatch");
-                    let tokw = self.weight(tok)?;
-                    let posw = self.weight(pos)?;
-                    let vocab = tokw.len() / dim;
-                    let mut out = vec![0.0f32; numel];
-                    for (r, &id) in toks.iter().enumerate() {
-                        anyhow::ensure!(
-                            (0..vocab as i32).contains(&id),
-                            "token id {id} outside vocab {vocab}"
-                        );
-                        let dst = &mut out[r * dim..(r + 1) * dim];
-                        dst.copy_from_slice(&tokw[id as usize * dim..(id as usize + 1) * dim]);
-                        tensor::axpy(1.0, &posw[(r % seq) * dim..(r % seq + 1) * dim], dst);
-                    }
-                    out
-                }
-                OpKind::Linear { w, .. } => {
-                    let wq = self.weight(&format!("{w}.weight"))?;
-                    let bias = self.weight(&format!("{w}.bias"))?;
-                    let din = *in_dims(0).last().unwrap();
-                    let dout = *dims.last().unwrap();
-                    let rows = numel / dout;
-                    let mut out = matmul(input(0), wq, rows, din, dout);
-                    for r in 0..rows {
-                        tensor::axpy(1.0, bias, &mut out[r * dout..(r + 1) * dout]);
-                    }
-                    out
-                }
-                OpKind::Conv2d { w, k, stride, pad, .. } => {
-                    let wq = self.weight(&format!("{w}.weight"))?;
-                    let bias = self.weight(&format!("{w}.bias"))?;
-                    let is = in_dims(0);
-                    let (h, wd, cin) = (is[1], is[2], is[3]);
-                    let (ho, wo, cout) = (dims[1], dims[2], dims[3]);
-                    let cols = im2col(input(0), bsz, h, wd, cin, *k, *stride, *pad, ho, wo);
-                    let rows = bsz * ho * wo;
-                    let mut out = matmul(&cols, wq, rows, k * k * cin, cout);
-                    for r in 0..rows {
-                        tensor::axpy(1.0, bias, &mut out[r * cout..(r + 1) * cout]);
-                    }
-                    out
-                }
-                OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
-                    let gamma = self.weight(&format!("{p}.gamma"))?;
-                    let beta = self.weight(&format!("{p}.beta"))?;
-                    let c = *dims.last().unwrap();
-                    let rows = numel / c;
-                    let (out, _aux) = if matches!(node.op, OpKind::BatchNorm { .. }) {
-                        batchnorm_rows(input(0), gamma, beta, rows, c, NORM_EPS)
-                    } else {
-                        layernorm_rows(input(0), gamma, beta, rows, c, NORM_EPS)
-                    };
-                    out
-                }
-                OpKind::Relu => input(0).iter().map(|&v| v.max(0.0)).collect(),
-                OpKind::Gelu => input(0).iter().map(|&v| gelu(v)).collect(),
-                OpKind::ActQuant { site } => {
-                    if !self.apply_act_quant {
-                        input(0).clone()
-                    } else {
-                        let qp = self.act_q[*site].with_context(|| {
-                            format!("{}: activation site {site} missing from container", node.name)
-                        })?;
-                        input(0).iter().map(|&v| quant::fake_quant(v, &qp)).collect()
-                    }
-                }
-                OpKind::Add => {
-                    let mut out = input(0).clone();
-                    tensor::axpy(1.0, input(1), &mut out);
-                    out
-                }
-                OpKind::MaxPool2 => {
-                    let is = in_dims(0);
-                    let (h, wd, c) = (is[1], is[2], is[3]);
-                    let (ho, wo) = (dims[1], dims[2]);
-                    let xin = input(0);
-                    let mut out = vec![0.0f32; numel];
-                    for b in 0..bsz {
-                        for oh in 0..ho {
-                            for ow in 0..wo {
-                                for ch in 0..c {
-                                    let mut best = f32::NEG_INFINITY;
-                                    for dh in 0..2 {
-                                        for dw in 0..2 {
-                                            let idx = ((b * h + oh * 2 + dh) * wd + ow * 2 + dw)
-                                                * c
-                                                + ch;
-                                            best = best.max(xin[idx]);
-                                        }
-                                    }
-                                    out[((b * ho + oh) * wo + ow) * c + ch] = best;
-                                }
-                            }
-                        }
-                    }
-                    out
-                }
-                OpKind::GlobalAvgPool => {
-                    let is = in_dims(0);
-                    let (h, wd, c) = (is[1], is[2], is[3]);
-                    let xin = input(0);
-                    let mut out = vec![0.0f32; bsz * c];
-                    for b in 0..bsz {
-                        for pix in 0..h * wd {
-                            tensor::axpy(
-                                1.0,
-                                &xin[(b * h * wd + pix) * c..(b * h * wd + pix + 1) * c],
-                                &mut out[b * c..(b + 1) * c],
-                            );
-                        }
-                    }
-                    let scale = 1.0 / (h * wd) as f32;
-                    for v in out.iter_mut() {
-                        *v *= scale;
-                    }
-                    out
-                }
-                OpKind::Reshape => input(0).clone(),
-                OpKind::ConcatCls { cls } => {
-                    let clsw = self.weight(cls)?;
-                    let (t1, dim) = (dims[1], dims[2]);
-                    let xin = input(0);
-                    let mut out = vec![0.0f32; numel];
-                    for b in 0..bsz {
-                        out[b * t1 * dim..b * t1 * dim + dim].copy_from_slice(clsw);
-                        out[b * t1 * dim + dim..(b + 1) * t1 * dim]
-                            .copy_from_slice(&xin[b * (t1 - 1) * dim..(b + 1) * (t1 - 1) * dim]);
-                    }
-                    out
-                }
-                OpKind::AddPos { pos } => {
-                    let posw = self.weight(pos)?;
-                    let rest = per(id);
-                    anyhow::ensure!(posw.len() == rest, "pos table size mismatch");
-                    let mut out = input(0).clone();
-                    for b in 0..bsz {
-                        tensor::axpy(1.0, posw, &mut out[b * rest..(b + 1) * rest]);
-                    }
-                    out
-                }
-                OpKind::Attention { heads, causal } => {
-                    let (s, d) = (dims[1], dims[2]);
-                    let hd = d / heads;
-                    let scale = 1.0 / (hd as f32).sqrt();
-                    let (qv, kv, vv) = (input(0), input(1), input(2));
-                    let mut out = vec![0.0f32; numel];
-                    let mut qh = vec![0.0f32; s * hd];
-                    let mut kh = vec![0.0f32; s * hd];
-                    let mut vh = vec![0.0f32; s * hd];
-                    for b in 0..bsz {
-                        for head in 0..*heads {
-                            let off = head * hd;
-                            for t in 0..s {
-                                let src = (b * s + t) * d + off;
-                                qh[t * hd..(t + 1) * hd].copy_from_slice(&qv[src..src + hd]);
-                                kh[t * hd..(t + 1) * hd].copy_from_slice(&kv[src..src + hd]);
-                                vh[t * hd..(t + 1) * hd].copy_from_slice(&vv[src..src + hd]);
-                            }
-                            let mut att = matmul_nt(&qh, &kh, s, hd, s);
-                            for v in att.iter_mut() {
-                                *v *= scale;
-                            }
-                            if *causal {
-                                for i in 0..s {
-                                    for j in i + 1..s {
-                                        att[i * s + j] = -1e9;
-                                    }
-                                }
-                            }
-                            softmax_rows(&mut att, s, s);
-                            let yh = matmul(&att, &vh, s, s, hd);
-                            for t in 0..s {
-                                let dst = (b * s + t) * d + off;
-                                out[dst..dst + hd].copy_from_slice(&yh[t * hd..(t + 1) * hd]);
-                            }
-                        }
-                    }
-                    out
-                }
-                OpKind::PatchMerge { side } => {
-                    let dim4 = dims[2];
-                    let dim = dim4 / 4;
-                    let half = side / 2;
-                    let xin = input(0);
-                    let mut out = vec![0.0f32; numel];
-                    for b in 0..bsz {
-                        for i in 0..half {
-                            for j in 0..half {
-                                let o = (b * half * half + i * half + j) * dim4;
-                                for (slot, (di, dj)) in
-                                    [(0, 0), (1, 0), (0, 1), (1, 1)].iter().enumerate()
-                                {
-                                    let src = (b * side * side
-                                        + (2 * i + di) * side
-                                        + (2 * j + dj))
-                                        * dim;
-                                    out[o + slot * dim..o + (slot + 1) * dim]
-                                        .copy_from_slice(&xin[src..src + dim]);
-                                }
-                            }
-                        }
-                    }
-                    out
-                }
-                OpKind::TokenPoolCls => {
-                    let is = in_dims(0);
-                    let (t, dim) = (is[1], is[2]);
-                    let xin = input(0);
-                    let mut out = vec![0.0f32; bsz * dim];
-                    for b in 0..bsz {
-                        out[b * dim..(b + 1) * dim]
-                            .copy_from_slice(&xin[b * t * dim..b * t * dim + dim]);
-                    }
-                    out
-                }
-                OpKind::TokenPoolMean => {
-                    let is = in_dims(0);
-                    let (t, dim) = (is[1], is[2]);
-                    let xin = input(0);
-                    let mut out = vec![0.0f32; bsz * dim];
-                    for b in 0..bsz {
-                        for tok in 0..t {
-                            tensor::axpy(
-                                1.0,
-                                &xin[(b * t + tok) * dim..(b * t + tok + 1) * dim],
-                                &mut out[b * dim..(b + 1) * dim],
-                            );
-                        }
-                    }
-                    let scale = 1.0 / t as f32;
-                    for v in out.iter_mut() {
-                        *v *= scale;
-                    }
-                    out
-                }
-            };
-            debug_assert_eq!(out.len(), numel, "{}: shape/val mismatch", node.name);
-            vals.push(out);
-        }
-        Ok(vals.pop().expect("program has at least one node"))
-    }
-}
-
-fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }

@@ -8,10 +8,12 @@
 //! * [`format`] — the versioned little-endian `.geta` container:
 //!   kept-channel-sliced shapes, bit-packed integer weights at each site's
 //!   learned bit width, per-site (d, t, q_m), strict reader.
-//! * [`engine`] — [`GetaEngine`]: dequantize-on-load f32 kernels over the
-//!   slice-propagated program (`subnet::propagate_slices`), batched
-//!   `infer` with `std::thread` micro-batch sharding, plus a dense-f32
-//!   baseline over the same executor for honest speedup numbers.
+//! * [`engine`] — [`GetaEngine`]: dequantize-on-load, then the **shared
+//!   planned executor** (`runtime::exec` — the same tiled, multi-threaded
+//!   op kernels the training interpreter runs) over the slice-propagated
+//!   program (`subnet::propagate_slices`), batched `infer` with
+//!   `std::thread` micro-batch sharding, plus a dense-f32 baseline over
+//!   the same executor for honest speedup numbers.
 //! * [`export_compressed`] / [`export_to_file`] — the bridge from
 //!   `subnet::construct`'s `CompressedModel` to the container.
 //!
@@ -20,9 +22,9 @@
 //! 1e-4 (`rust/tests/test_deploy.rs`). This holds because (1) packed
 //! levels dequantize to exactly the fake-quantized weights the
 //! interpreter multiplies, (2) structured slicing removes only channels
-//! whose masked contribution is exactly zero, and (3) both sides share
-//! the same f64-accumulated kernels and per-micro-batch normalization
-//! statistics.
+//! whose masked contribution is exactly zero, and (3) both sides run the
+//! **same executor core** (`runtime::exec::forward`, f64-accumulated
+//! kernels) with per-micro-batch normalization statistics.
 
 pub mod engine;
 pub mod format;

@@ -25,12 +25,18 @@
 //!   interpreter covering every zoo family: each config lowers to a typed
 //!   op IR (runtime/lowering.rs — linear, conv-as-im2col, batch/layer
 //!   norm, residual add, multi-head attention, gelu/relu, patch
-//!   embed/merge, pooling) executed forward + backward with per-site
+//!   embed/merge, pooling) executed by the **planned executor**
+//!   (runtime/exec.rs: a shape-resolved Plan built once per model, a
+//!   buffer arena reused across steps, and a ParamSource seam shared with
+//!   deployment), with loss heads + backward with per-site
 //!   fake-quantization and STE quant-parameter gradients
 //!   (runtime/interp.rs), plus natively synthesized manifests for every
-//!   model config. This is what makes
-//!   `cargo build --release && cargo test -q` hermetic — CNN and
-//!   transformer e2e runs included: no Python, JAX or XLA anywhere.
+//!   model config. The contraction kernels (tensor/ops.rs) are
+//!   cache-tiled and `std::thread`-parallel with f64 per-tile
+//!   accumulation, bitwise identical at every `GETA_THREADS` value. This
+//!   is what makes `cargo build --release && cargo test -q` hermetic —
+//!   CNN and transformer e2e runs included: no Python, JAX or XLA
+//!   anywhere.
 //! * **PJRT engine** (`--features pjrt`) — loads the AOT artifacts
 //!   produced by `make artifacts` and executes the compiled HLO of all
 //!   nine zoo models. The `xla` dependency defaults to a vendored stub;
@@ -42,8 +48,9 @@
 //! bit widths), and `deploy::GetaEngine` is a packed-integer inference
 //! engine that re-lowers the embedded config, shrinks it with
 //! `subnet::propagate_slices`, and serves batched `infer` with
-//! `std::thread` micro-batch sharding — with a parity obligation against
-//! the masked interpreter eval (`geta export` / `geta infer` /
+//! `std::thread` micro-batch sharding — running the **same**
+//! `runtime::exec` forward core as training, with a parity obligation
+//! against the masked interpreter eval (`geta export` / `geta infer` /
 //! `geta bench-infer`).
 
 pub mod util;

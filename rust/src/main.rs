@@ -5,11 +5,16 @@
 //!   geta train  --model <name> [--sparsity ..] run GETA on one model
 //!   geta export --model <name> [--out f.geta]  train + write a .geta artifact
 //!   geta infer  --file f.geta [--threads N]    run the packed inference engine
-//!   geta bench-infer --model <name>            dense-f32 vs compressed wall-clock
+//!   geta bench-infer --model <name> [--json]   dense-f32 vs compressed wall-clock
+//!                                              (--json: BENCH_runtime.json at repo root)
 //!   geta repro  <table2|..|fig4b|deploy|all>
 //!   geta bench  [--iters N]                    runtime micro-benchmarks
 //!   geta models                                list AOT artifacts
 //!   geta --list-models                         list valid --model names
+//!
+//! `--threads N` on any subcommand (and the GETA_THREADS env var) sets the
+//! one process-wide worker budget the tiled kernels honor — training and
+//! inference alike.
 
 use anyhow::Result;
 
@@ -40,6 +45,15 @@ fn resolve_model(a: &Args, default: &str) -> Result<String> {
 
 fn main() -> Result<()> {
     let a = Args::from_env();
+    // one shared worker budget: training, inference and the benches all
+    // run the tiled kernels in tensor/ops.rs, which honor this (CLI
+    // `--threads` > GETA_THREADS env > available parallelism)
+    if let Some(t) = a.opt("threads") {
+        let n: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads `{t}` is not a number"))?;
+        geta::tensor::set_threads(n);
+    }
     match a.subcommand.as_deref() {
         Some("models") => cmd_models(&a),
         Some("graph") => cmd_graph(&a),
@@ -66,7 +80,7 @@ fn main() -> Result<()> {
                    geta train --model resnet_mini --sparsity 0.35 --verbose\n\
                    geta export --model resnet_mini --sparsity 0.5 --out resnet.geta\n\
                    geta infer --file resnet.geta --n 256 --threads 4\n\
-                   geta bench-infer --model resnet_mini --iters 10\n\
+                   geta bench-infer --model resnet_mini --iters 10 --json\n\
                    geta repro all [--steps-scale 0.2]\n\
                    geta bench --iters 20\n\
                    geta --list-models"
@@ -202,12 +216,9 @@ fn cmd_infer(a: &Args) -> Result<()> {
     let file = a
         .opt("file")
         .ok_or_else(|| anyhow::anyhow!("`geta infer` needs --file <model.geta>"))?;
-    let mut engine = geta::deploy::GetaEngine::load(std::path::Path::new(file))?;
-    if let Some(t) = a.opt("threads") {
-        engine.threads = t
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--threads `{t}` is not a number"))?;
-    }
+    // --threads was already folded into the process-wide budget in main();
+    // the engine picks it up via tensor::configured_threads()
+    let engine = geta::deploy::GetaEngine::load(std::path::Path::new(file))?;
     let n = a.usize_or("n", 256);
     // only the eval split is used: keep the discarded train split minimal
     let (_, eval) = geta::data::SynthData::for_model(engine.config(), 1, n.max(1), 1);
@@ -252,7 +263,9 @@ fn cmd_bench_infer(a: &Args) -> Result<()> {
     let iters = a.usize_or("iters", 10);
     let scale = a.f64_or("steps-scale", 0.12);
     let sparsity = a.f64_or("sparsity", 0.5);
-    let threads = a.usize_or("threads", 1);
+    // default to the process-wide budget so --threads / GETA_THREADS mean
+    // the same thing here as in `make bench-json` and the JSON rows agree
+    let threads = a.usize_or("threads", geta::tensor::configured_threads());
     let r = geta::report::bench_deploy(&art_dir(a), &model, scale, sparsity, iters, threads)?;
     println!(
         "\nbench-infer {model} (batch {}, {iters} iters, best-of):\n\
@@ -270,6 +283,27 @@ fn cmd_bench_infer(a: &Args) -> Result<()> {
         r.group_sparsity,
         r.avg_bits,
     );
+    if a.flag("json") {
+        // machine-readable perf log: this model's deploy row plus the
+        // standard resnet/vit batch-32 kernel comparison, so every --json
+        // run re-demonstrates the tiled-vs-naive speedup
+        let gemm = geta::report::standard_gemm_suite(iters.min(5));
+        let path = geta::report::bench_json_path();
+        geta::report::write_bench_runtime_json(&path, &gemm, &[r])?;
+        for g in &gemm {
+            println!(
+                "  gemm {}@{}: naive {:.2} ms -> tiled {:.2} ms ({:.2}x, {} threads, invariant {})",
+                g.model,
+                g.batch,
+                g.naive_ms,
+                g.tiled_ms,
+                g.naive_ms / g.tiled_ms.max(1e-9),
+                g.threads,
+                g.thread_invariant,
+            );
+        }
+        println!("  wrote {}", path.display());
+    }
     Ok(())
 }
 

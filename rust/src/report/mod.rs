@@ -6,7 +6,7 @@
 //! `--steps-scale` shrinks runs for smoke testing; default scale targets
 //! single-core CPU wall clocks of a few minutes per table.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::baselines::{self, LlmPruneStyle};
 use crate::config::ExperimentConfig;
@@ -465,6 +465,8 @@ pub struct DeployBench {
     /// Best-of-iters wall-clock per eval batch, compressed engine.
     pub compressed_ms: f64,
     pub batch: usize,
+    /// Micro-batch worker threads both engines ran with.
+    pub threads: usize,
     pub group_sparsity: f64,
     pub avg_bits: f64,
 }
@@ -538,7 +540,193 @@ pub fn bench_deploy(
         dense_ms,
         compressed_ms,
         batch,
+        threads,
         group_sparsity: trained.result.group_sparsity,
         avg_bits: trained.result.avg_bits,
     })
+}
+
+/// One GEMM-kernel comparison: the forward contraction shapes a model's
+/// lowered program produces at `batch`, timed through the naive reference
+/// triple loops vs the tiled multi-threaded kernels, plus a bitwise
+/// thread-invariance check. This is the machine-readable evidence behind
+/// the "tiled + threaded kernels are ≥ 2× the naive baseline" claim in
+/// `BENCH_runtime.json`.
+#[derive(Debug, Clone)]
+pub struct GemmBench {
+    pub model: String,
+    pub batch: usize,
+    /// Worker budget the tiled sweep ran with (`tensor::configured_threads`).
+    pub threads: usize,
+    /// Best-of-iters wall-clock of one full naive sweep over every shape.
+    pub naive_ms: f64,
+    /// Best-of-iters wall-clock of the same sweep through the tiled kernels.
+    pub tiled_ms: f64,
+    /// Tiled results bitwise identical at 1/2/4 worker threads.
+    pub thread_invariant: bool,
+}
+
+/// Time every forward GEMM shape of `model`'s lowered program at `batch`
+/// (linear rows × din × dout; conv im2col rows × k²cin × cout) through the
+/// naive reference and the tiled kernels, on random normal data.
+pub fn bench_gemm_kernels(model: &str, batch: usize, iters: usize) -> Result<GemmBench> {
+    use crate::graph::builders;
+    use crate::runtime::lowering;
+    let cfg = crate::runtime::native::embedded_config(model)
+        .with_context(|| format!("no embedded config for model `{model}`"))?;
+    let sites = builders::quant_site_specs(&cfg)?;
+    let prog = lowering::lower(&cfg, &sites, batch)?;
+    let mut shapes: Vec<(usize, usize, usize)> = Vec::new();
+    for node in &prog.nodes {
+        match &node.op {
+            lowering::OpKind::Linear { .. } => {
+                let din = *prog.nodes[node.inputs[0]].shape.last().unwrap();
+                let dout = *node.shape.last().unwrap();
+                let rows: usize = node.shape.iter().product::<usize>() / dout;
+                shapes.push((rows, din, dout));
+            }
+            lowering::OpKind::Conv2d { k, .. } => {
+                let cin = *prog.nodes[node.inputs[0]].shape.last().unwrap();
+                let (ho, wo, cout) = (node.shape[1], node.shape[2], node.shape[3]);
+                shapes.push((batch * ho * wo, k * k * cin, cout));
+            }
+            _ => {}
+        }
+    }
+    anyhow::ensure!(!shapes.is_empty(), "model `{model}` lowers to no GEMM nodes");
+    let mut rng = crate::util::rng::Rng::new(42);
+    let data: Vec<(Vec<f32>, Vec<f32>)> = shapes
+        .iter()
+        .map(|&(m, k, n)| {
+            let mut a = vec![0.0f32; m * k];
+            rng.fill_normal(&mut a, 1.0);
+            let mut b = vec![0.0f32; k * n];
+            rng.fill_normal(&mut b, 1.0);
+            (a, b)
+        })
+        .collect();
+    let sweep = |tiled: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..iters.max(1) {
+            let t0 = std::time::Instant::now();
+            for (&(m, k, n), (a, b)) in shapes.iter().zip(&data) {
+                let out = if tiled {
+                    crate::tensor::matmul(a, b, m, k, n)
+                } else {
+                    crate::tensor::matmul_naive(a, b, m, k, n)
+                };
+                crate::util::bench::black_box(out);
+            }
+            best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        best
+    };
+    sweep(true); // warm caches and the thread plumbing
+    let naive_ms = sweep(false);
+    let tiled_ms = sweep(true);
+    // bitwise invariance across worker counts, on the largest shape
+    let prev = crate::tensor::configured_threads();
+    let (mi, _) = shapes
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &(m, k, n))| m * k * n)
+        .expect("shapes non-empty");
+    let (m, k, n) = shapes[mi];
+    let (a, b) = &data[mi];
+    crate::tensor::set_threads(1);
+    let base = crate::tensor::matmul(a, b, m, k, n);
+    let mut thread_invariant = true;
+    for t in [2usize, 4] {
+        crate::tensor::set_threads(t);
+        thread_invariant &= crate::tensor::matmul(a, b, m, k, n) == base;
+    }
+    crate::tensor::set_threads(prev);
+    Ok(GemmBench {
+        model: model.to_string(),
+        batch,
+        threads: prev,
+        naive_ms,
+        tiled_ms,
+        thread_invariant,
+    })
+}
+
+/// The standard kernel section of `BENCH_runtime.json`: resnet + vit at
+/// batch 32 — the shapes the acceptance bar ("tiled ≥ 2× naive") is
+/// stated over. Shared by `geta bench-infer --json` and the
+/// `bench_runtime` bench so the two writers cannot diverge. Models whose
+/// bench fails are reported on stderr and skipped.
+pub fn standard_gemm_suite(iters: usize) -> Vec<GemmBench> {
+    let mut rows = Vec::new();
+    for model in ["resnet_mini", "vit_mini"] {
+        match bench_gemm_kernels(model, 32, iters) {
+            Ok(g) => rows.push(g),
+            Err(e) => eprintln!("skipping gemm bench {model}: {e}"),
+        }
+    }
+    rows
+}
+
+/// Where `BENCH_runtime.json` goes: the build checkout's repo root when
+/// this binary still runs next to it (the `make bench-json` / CI case —
+/// identified by its `Cargo.toml`, not mere directory existence), else
+/// the current directory (installed / relocated binaries).
+pub fn bench_json_path() -> std::path::PathBuf {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    if root.join("Cargo.toml").is_file() {
+        root.join("BENCH_runtime.json")
+    } else {
+        std::path::PathBuf::from("BENCH_runtime.json")
+    }
+}
+
+/// Write the machine-readable perf log (`BENCH_runtime.json`, see
+/// [`bench_json_path`]): the GEMM naive-vs-tiled comparisons and the
+/// per-family dense vs compressed inference rows, so the perf trajectory
+/// is tracked across PRs instead of living in scrollback.
+pub fn write_bench_runtime_json(
+    path: &std::path::Path,
+    gemm: &[GemmBench],
+    deploy: &[DeployBench],
+) -> Result<()> {
+    use crate::util::json::Json;
+    let gemm_rows: Vec<Json> = gemm
+        .iter()
+        .map(|g| {
+            Json::obj(vec![
+                ("model", Json::str(&g.model)),
+                ("batch", Json::Num(g.batch as f64)),
+                ("threads", Json::Num(g.threads as f64)),
+                ("naive_ms", Json::Num(g.naive_ms)),
+                ("tiled_ms", Json::Num(g.tiled_ms)),
+                ("speedup", Json::Num(g.naive_ms / g.tiled_ms.max(1e-9))),
+                ("thread_invariant", Json::Bool(g.thread_invariant)),
+            ])
+        })
+        .collect();
+    let deploy_rows: Vec<Json> = deploy
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("model", Json::str(&r.model)),
+                ("batch", Json::Num(r.batch as f64)),
+                ("threads", Json::Num(r.threads as f64)),
+                ("dense_ms", Json::Num(r.dense_ms)),
+                ("compressed_ms", Json::Num(r.compressed_ms)),
+                ("speedup", Json::Num(r.dense_ms / r.compressed_ms.max(1e-9))),
+                ("dense_bytes", Json::Num(r.dense_bytes as f64)),
+                ("disk_bytes", Json::Num(r.disk_bytes as f64)),
+                ("rel_bops", Json::Num(r.rel_bops)),
+                ("avg_bits", Json::Num(r.avg_bits)),
+                ("group_sparsity", Json::Num(r.group_sparsity)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("threads", Json::Num(crate::tensor::configured_threads() as f64)),
+        ("gemm", Json::Arr(gemm_rows)),
+        ("deploy", Json::Arr(deploy_rows)),
+    ]);
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
 }

@@ -1,0 +1,751 @@
+//! Planned executor: the single forward core shared by training and
+//! deployment.
+//!
+//! Historically the training interpreter (`runtime/interp.rs`) and the
+//! `.geta` inference engine (`deploy/engine.rs`) each carried their own
+//! copy of every op's forward kernel, re-walking shapes and re-allocating
+//! buffers on every call. This module folds both onto one path:
+//!
+//! * [`Plan`] — shape resolution done **once** per (program, batch size):
+//!   per-node output shapes with the runtime batch substituted, element
+//!   counts, and conv scratch sizes. Built once per model and reused for
+//!   every step / micro-batch.
+//! * [`Arena`] — a free-list of f32 buffers. Node outputs, conv scratch
+//!   and backward GEMM buffers come out of it and are reclaimed after
+//!   each pass, so the dominant allocations of steady-state training
+//!   steps and inference micro-batches disappear (norm internals and the
+//!   gradient store still allocate per step).
+//! * [`ParamSource`] — where tensors come from. [`TrainParams`] serves
+//!   dense f32 parameters and fake-quantizes weights at their sites on
+//!   the fly; [`DeployParams`] serves the already-dequantized packed
+//!   weights of a `.geta` container and its learned activation-site
+//!   quantizers. The forward core cannot tell the two apart.
+//! * [`forward`] — the op-by-op forward pass over the lowered program,
+//!   optionally retaining the per-node [`Aux`] state the training
+//!   backward pass consumes.
+//!
+//! Numeric conventions are unchanged from the split implementations: f32
+//! storage, f64 accumulation in every contraction (`tensor/ops.rs` —
+//! tiled, multi-threaded, bitwise thread-count-invariant), per-micro-batch
+//! batch-statistics normalization.
+
+use std::borrow::Cow;
+
+use anyhow::{Context, Result};
+
+use super::lowering::{OpKind, Program};
+use crate::quant::{self, QParams};
+use crate::tensor::{
+    self, batchnorm_rows, gelu, layernorm_rows, softmax_rows, NormAux, ParamStore,
+};
+
+pub const NORM_EPS: f32 = 1e-5;
+
+/// Borrowed micro-batch input (pixels or token ids).
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// Where the executor's tensors come from — the seam between training
+/// (dense fake-quant parameters) and deployment (dequantized packed
+/// weights from a `.geta` container).
+pub trait ParamSource {
+    /// Raw named tensor (biases, norm params, embedding tables, ...).
+    fn tensor(&self, name: &str) -> Result<&[f32]>;
+
+    /// Effective multiply weight for a weight-carrying node. The training
+    /// source fake-quantizes at `site` (returning an owned copy); the
+    /// deployment source hands back the already-dequantized weight.
+    fn weight(&self, name: &str, site: Option<usize>) -> Result<Cow<'_, [f32]>>;
+
+    /// Activation-site quantizer; `None` = pass activations through
+    /// unquantized (the dense-f32 baseline engine). `node` names the op
+    /// for error messages.
+    fn act_q(&self, site: usize, node: &str) -> Result<Option<QParams>>;
+}
+
+/// Training-time source: dense f32 parameters, per-site fake quantization
+/// with the current learned (d, t, q_m) rows.
+pub struct TrainParams<'a> {
+    pub params: &'a ParamStore,
+    pub q: &'a [QParams],
+}
+
+impl ParamSource for TrainParams<'_> {
+    fn tensor(&self, name: &str) -> Result<&[f32]> {
+        self.params
+            .get(name)
+            .map(|t| t.data.as_slice())
+            .with_context(|| format!("missing parameter `{name}`"))
+    }
+
+    fn weight(&self, name: &str, site: Option<usize>) -> Result<Cow<'_, [f32]>> {
+        let raw = self.tensor(name)?;
+        Ok(match site {
+            Some(s) => {
+                Cow::Owned(raw.iter().map(|&v| quant::fake_quant(v, &self.q[s])).collect())
+            }
+            None => Cow::Borrowed(raw),
+        })
+    }
+
+    fn act_q(&self, site: usize, _node: &str) -> Result<Option<QParams>> {
+        Ok(Some(self.q[site]))
+    }
+}
+
+/// Deployment source: weights were dequantized once at load
+/// (`level * d`), activation sites carry the container's learned rows
+/// (`None` rows = quantization disabled, as in the dense-f32 baseline).
+pub struct DeployParams<'a> {
+    pub weights: &'a ParamStore,
+    pub act_q: &'a [Option<QParams>],
+    pub apply_act_quant: bool,
+}
+
+impl ParamSource for DeployParams<'_> {
+    fn tensor(&self, name: &str) -> Result<&[f32]> {
+        self.weights
+            .get(name)
+            .map(|t| t.data.as_slice())
+            .with_context(|| format!("engine missing tensor `{name}`"))
+    }
+
+    fn weight(&self, name: &str, _site: Option<usize>) -> Result<Cow<'_, [f32]>> {
+        Ok(Cow::Borrowed(self.tensor(name)?))
+    }
+
+    fn act_q(&self, site: usize, node: &str) -> Result<Option<QParams>> {
+        if !self.apply_act_quant {
+            return Ok(None);
+        }
+        match self.act_q.get(site).copied().flatten() {
+            Some(qp) => Ok(Some(qp)),
+            None => anyhow::bail!("{node}: activation site {site} missing from container"),
+        }
+    }
+}
+
+/// Shape-resolved execution plan, built once per (program, batch size):
+/// every per-op shape computation the old forward passes redid on each
+/// call lives here instead.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// The batch size substituted into every node's leading dim.
+    pub bsz: usize,
+    /// Per-node output shape with the batch dim resolved.
+    pub shapes: Vec<Vec<usize>>,
+    /// Per-node output element count.
+    pub numels: Vec<usize>,
+    /// Per-node conv scratch size (column-matrix elements; 0 for
+    /// non-conv ops) — sized here so the arena can serve it directly.
+    pub col_sizes: Vec<usize>,
+}
+
+impl Plan {
+    pub fn new(prog: &Program, bsz: usize) -> Plan {
+        let n = prog.nodes.len();
+        let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(n);
+        let mut numels = Vec::with_capacity(n);
+        let mut col_sizes = Vec::with_capacity(n);
+        for node in &prog.nodes {
+            let mut shape = node.shape.clone();
+            if !shape.is_empty() {
+                shape[0] = bsz;
+            }
+            let numel: usize = shape.iter().product();
+            let cols = match &node.op {
+                OpKind::Conv2d { k, .. } => {
+                    let cin = *shapes[node.inputs[0]].last().unwrap_or(&0);
+                    bsz * shape[1] * shape[2] * k * k * cin
+                }
+                _ => 0,
+            };
+            shapes.push(shape);
+            numels.push(numel);
+            col_sizes.push(cols);
+        }
+        Plan { bsz, shapes, numels, col_sizes }
+    }
+}
+
+/// Free-list of f32 buffers reused across steps / micro-batches.
+/// Capacities converge to the pass's peak sizes after the first few uses,
+/// after which the hot loop stops allocating.
+///
+/// The pool is **capped** at [`Arena::MAX_FREE`] buffers: consumers also
+/// reclaim buffers that were produced *outside* the arena (kernel return
+/// values, norm aux, fake-quant weight copies, cotangents), so an
+/// unbounded pool would grow by dozens of buffers every training step.
+/// The cap is sized to roughly one full pass's working set of the largest
+/// programs; overflow buffers are simply dropped.
+#[derive(Debug, Default)]
+pub struct Arena {
+    free: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    /// Pool-size cap (see type docs): beyond this, reclaimed buffers are
+    /// dropped instead of pooled.
+    pub const MAX_FREE: usize = 512;
+
+    pub fn new() -> Arena {
+        Default::default()
+    }
+
+    /// A zeroed buffer of `n` elements, recycling capacity when available.
+    pub fn alloc(&mut self, n: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// A buffer of `n` elements with **unspecified contents** — for
+    /// consumers that overwrite or re-zero every element themselves (the
+    /// conv column scratch: `im2col_into` zeroes its target). Recycled
+    /// buffers keep their stale values, so the steady-state path skips the
+    /// memset [`alloc`](Self::alloc) pays; only a too-short buffer is
+    /// zero-extended.
+    pub fn alloc_uninit(&mut self, n: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        if v.len() < n {
+            v.resize(n, 0.0);
+        } else {
+            v.truncate(n);
+        }
+        v
+    }
+
+    /// Return a buffer to the pool (dropped once the pool is full).
+    pub fn reclaim(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.free.len() < Self::MAX_FREE {
+            self.free.push(v);
+        }
+    }
+
+    pub fn reclaim_all(&mut self, vs: impl IntoIterator<Item = Vec<f32>>) {
+        for v in vs {
+            self.reclaim(v);
+        }
+    }
+}
+
+/// Per-node saved forward state the training backward pass consumes.
+pub enum Aux {
+    None,
+    /// The fake-quantized weight that was multiplied (`None` when the
+    /// weight has no quant site — backward then reads the raw parameter).
+    W(Option<Vec<f32>>),
+    Norm(NormAux),
+    /// Attention probabilities `[B * heads * S * S]`.
+    Att(Vec<f32>),
+    /// Max-pool argmax: flat input index per output element.
+    Pool(Vec<usize>),
+}
+
+/// Return an [`Aux`]'s buffers to the arena (shared with `interp::run`,
+/// which reclaims retained aux after the backward pass).
+pub(crate) fn reclaim_aux(arena: &mut Arena, ax: Aux) {
+    match ax {
+        Aux::None | Aux::Pool(_) => {}
+        Aux::W(w) => {
+            if let Some(w) = w {
+                arena.reclaim(w);
+            }
+        }
+        Aux::Norm(na) => {
+            arena.reclaim(na.xhat);
+            arena.reclaim(na.inv);
+        }
+        Aux::Att(p) => arena.reclaim(p),
+    }
+}
+
+fn site_copy(w: Cow<'_, [f32]>) -> Option<Vec<f32>> {
+    match w {
+        Cow::Owned(v) => Some(v),
+        Cow::Borrowed(_) => None,
+    }
+}
+
+/// Execute the program's forward pass over `plan`-resolved shapes. Returns
+/// the per-node output buffers and, when `with_aux`, the saved state the
+/// backward pass needs (otherwise every entry is [`Aux::None`] and the
+/// would-be aux buffers go straight back to the arena).
+pub fn forward(
+    prog: &Program,
+    plan: &Plan,
+    src: &dyn ParamSource,
+    x: &Input<'_>,
+    with_aux: bool,
+    arena: &mut Arena,
+) -> Result<(Vec<Vec<f32>>, Vec<Aux>)> {
+    let nodes = &prog.nodes;
+    anyhow::ensure!(
+        plan.shapes.len() == nodes.len(),
+        "plan was built for a different program ({} vs {} nodes)",
+        plan.shapes.len(),
+        nodes.len()
+    );
+    let bsz = plan.bsz;
+    let mut vals: Vec<Vec<f32>> = Vec::with_capacity(nodes.len());
+    let mut aux: Vec<Aux> = Vec::with_capacity(nodes.len());
+
+    for (id, node) in nodes.iter().enumerate() {
+        let dims = &plan.shapes[id];
+        let numel = plan.numels[id];
+        let (out, ax): (Vec<f32>, Aux) = match &node.op {
+            OpKind::Input => {
+                let Input::F32(xv) = x else {
+                    anyhow::bail!("image task expects f32 inputs")
+                };
+                anyhow::ensure!(xv.len() == numel, "input batch size mismatch");
+                let mut out = arena.alloc_uninit(numel);
+                out.copy_from_slice(xv);
+                (out, Aux::None)
+            }
+            OpKind::Embed { tok, pos } => {
+                let Input::I32(toks) = x else {
+                    anyhow::bail!("token task expects i32 inputs")
+                };
+                let (seq, dim) = (dims[1], dims[2]);
+                anyhow::ensure!(toks.len() == bsz * seq, "token batch size mismatch");
+                let tokw = src.tensor(tok)?;
+                let posw = src.tensor(pos)?;
+                let vocab = tokw.len() / dim;
+                let mut out = arena.alloc_uninit(numel);
+                for (r, &tid) in toks.iter().enumerate() {
+                    anyhow::ensure!(
+                        (0..vocab as i32).contains(&tid),
+                        "token id {tid} outside vocab {vocab}"
+                    );
+                    let dst = &mut out[r * dim..(r + 1) * dim];
+                    dst.copy_from_slice(&tokw[tid as usize * dim..(tid as usize + 1) * dim]);
+                    tensor::axpy(1.0, &posw[(r % seq) * dim..(r % seq + 1) * dim], dst);
+                }
+                (out, Aux::None)
+            }
+            OpKind::Linear { w, site } => {
+                let wq = src.weight(&format!("{w}.weight"), *site)?;
+                let bias = src.tensor(&format!("{w}.bias"))?;
+                let din = *plan.shapes[node.inputs[0]].last().unwrap();
+                let dout = *dims.last().unwrap();
+                let rows = numel / dout;
+                let mut out = arena.alloc_uninit(numel);
+                tensor::matmul_into(&mut out, &vals[node.inputs[0]], &wq, rows, din, dout);
+                for r in 0..rows {
+                    tensor::axpy(1.0, bias, &mut out[r * dout..(r + 1) * dout]);
+                }
+                (out, Aux::W(site_copy(wq)))
+            }
+            OpKind::Conv2d { w, site, k, stride, pad } => {
+                let wq = src.weight(&format!("{w}.weight"), *site)?;
+                let bias = src.tensor(&format!("{w}.bias"))?;
+                let is = &plan.shapes[node.inputs[0]];
+                let (h, wd, cin) = (is[1], is[2], is[3]);
+                let (ho, wo, cout) = (dims[1], dims[2], dims[3]);
+                let mut cols = arena.alloc_uninit(plan.col_sizes[id]);
+                tensor::im2col_into(
+                    &mut cols,
+                    &vals[node.inputs[0]],
+                    bsz,
+                    h,
+                    wd,
+                    cin,
+                    *k,
+                    *stride,
+                    *pad,
+                    ho,
+                    wo,
+                );
+                let rows = bsz * ho * wo;
+                let mut out = arena.alloc_uninit(numel);
+                tensor::matmul_into(&mut out, &cols, &wq, rows, k * k * cin, cout);
+                arena.reclaim(cols);
+                for r in 0..rows {
+                    tensor::axpy(1.0, bias, &mut out[r * cout..(r + 1) * cout]);
+                }
+                (out, Aux::W(site_copy(wq)))
+            }
+            OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
+                let gamma = src.tensor(&format!("{p}.gamma"))?;
+                let beta = src.tensor(&format!("{p}.beta"))?;
+                let c = *dims.last().unwrap();
+                let rows = numel / c;
+                let (out, na) = if matches!(node.op, OpKind::BatchNorm { .. }) {
+                    batchnorm_rows(&vals[node.inputs[0]], gamma, beta, rows, c, NORM_EPS)
+                } else {
+                    layernorm_rows(&vals[node.inputs[0]], gamma, beta, rows, c, NORM_EPS)
+                };
+                (out, Aux::Norm(na))
+            }
+            OpKind::Relu => {
+                let mut out = arena.alloc_uninit(numel);
+                for (o, &v) in out.iter_mut().zip(&vals[node.inputs[0]]) {
+                    *o = v.max(0.0);
+                }
+                (out, Aux::None)
+            }
+            OpKind::Gelu => {
+                let mut out = arena.alloc_uninit(numel);
+                for (o, &v) in out.iter_mut().zip(&vals[node.inputs[0]]) {
+                    *o = gelu(v);
+                }
+                (out, Aux::None)
+            }
+            OpKind::ActQuant { site } => {
+                let qp = src.act_q(*site, &node.name)?;
+                let mut out = arena.alloc_uninit(numel);
+                match qp {
+                    Some(qp) => {
+                        for (o, &v) in out.iter_mut().zip(&vals[node.inputs[0]]) {
+                            *o = quant::fake_quant(v, &qp);
+                        }
+                    }
+                    None => out.copy_from_slice(&vals[node.inputs[0]]),
+                }
+                (out, Aux::None)
+            }
+            OpKind::Add => {
+                let mut out = arena.alloc_uninit(numel);
+                out.copy_from_slice(&vals[node.inputs[0]]);
+                tensor::axpy(1.0, &vals[node.inputs[1]], &mut out);
+                (out, Aux::None)
+            }
+            OpKind::MaxPool2 => {
+                let is = &plan.shapes[node.inputs[0]];
+                let (h, wd, c) = (is[1], is[2], is[3]);
+                let (ho, wo) = (dims[1], dims[2]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = arena.alloc_uninit(numel);
+                let mut arg = if with_aux { vec![0usize; numel] } else { Vec::new() };
+                for b in 0..bsz {
+                    for oh in 0..ho {
+                        for ow in 0..wo {
+                            for ch in 0..c {
+                                let mut best = f32::NEG_INFINITY;
+                                let mut best_i = 0usize;
+                                for dh in 0..2 {
+                                    for dw in 0..2 {
+                                        let idx =
+                                            ((b * h + oh * 2 + dh) * wd + ow * 2 + dw) * c + ch;
+                                        if xin[idx] > best {
+                                            best = xin[idx];
+                                            best_i = idx;
+                                        }
+                                    }
+                                }
+                                let o = ((b * ho + oh) * wo + ow) * c + ch;
+                                out[o] = best;
+                                if with_aux {
+                                    arg[o] = best_i;
+                                }
+                            }
+                        }
+                    }
+                }
+                (out, if with_aux { Aux::Pool(arg) } else { Aux::None })
+            }
+            OpKind::GlobalAvgPool => {
+                let is = &plan.shapes[node.inputs[0]];
+                let (h, wd, c) = (is[1], is[2], is[3]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = arena.alloc(numel);
+                for b in 0..bsz {
+                    for pix in 0..h * wd {
+                        tensor::axpy(
+                            1.0,
+                            &xin[(b * h * wd + pix) * c..(b * h * wd + pix + 1) * c],
+                            &mut out[b * c..(b + 1) * c],
+                        );
+                    }
+                }
+                let scale = 1.0 / (h * wd) as f32;
+                for v in out.iter_mut() {
+                    *v *= scale;
+                }
+                (out, Aux::None)
+            }
+            OpKind::Reshape => {
+                let mut out = arena.alloc_uninit(numel);
+                out.copy_from_slice(&vals[node.inputs[0]]);
+                (out, Aux::None)
+            }
+            OpKind::ConcatCls { cls } => {
+                let clsw = src.tensor(cls)?;
+                let (t1, dim) = (dims[1], dims[2]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = arena.alloc_uninit(numel);
+                for b in 0..bsz {
+                    out[b * t1 * dim..b * t1 * dim + dim].copy_from_slice(clsw);
+                    out[b * t1 * dim + dim..(b + 1) * t1 * dim]
+                        .copy_from_slice(&xin[b * (t1 - 1) * dim..(b + 1) * (t1 - 1) * dim]);
+                }
+                (out, Aux::None)
+            }
+            OpKind::AddPos { pos } => {
+                let posw = src.tensor(pos)?;
+                let rest = numel / bsz;
+                anyhow::ensure!(posw.len() == rest, "pos table size mismatch");
+                let mut out = arena.alloc_uninit(numel);
+                out.copy_from_slice(&vals[node.inputs[0]]);
+                for b in 0..bsz {
+                    tensor::axpy(1.0, posw, &mut out[b * rest..(b + 1) * rest]);
+                }
+                (out, Aux::None)
+            }
+            OpKind::Attention { heads, causal } => {
+                let (s, d) = (dims[1], dims[2]);
+                let hd = d / heads;
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut out = arena.alloc_uninit(numel);
+                let mut probs = if with_aux {
+                    arena.alloc_uninit(bsz * heads * s * s)
+                } else {
+                    Vec::new()
+                };
+                let mut qh = arena.alloc_uninit(s * hd);
+                let mut kh = arena.alloc_uninit(s * hd);
+                let mut vh = arena.alloc_uninit(s * hd);
+                let mut att = arena.alloc_uninit(s * s);
+                let mut yh = arena.alloc_uninit(s * hd);
+                {
+                    let (qv, kv, vv) = (
+                        &vals[node.inputs[0]],
+                        &vals[node.inputs[1]],
+                        &vals[node.inputs[2]],
+                    );
+                    for b in 0..bsz {
+                        for head in 0..*heads {
+                            let off = head * hd;
+                            for t in 0..s {
+                                let sidx = (b * s + t) * d + off;
+                                qh[t * hd..(t + 1) * hd].copy_from_slice(&qv[sidx..sidx + hd]);
+                                kh[t * hd..(t + 1) * hd].copy_from_slice(&kv[sidx..sidx + hd]);
+                                vh[t * hd..(t + 1) * hd].copy_from_slice(&vv[sidx..sidx + hd]);
+                            }
+                            tensor::matmul_nt_into(&mut att, &qh, &kh, s, hd, s);
+                            for v in att.iter_mut() {
+                                *v *= scale;
+                            }
+                            if *causal {
+                                for i in 0..s {
+                                    for j in i + 1..s {
+                                        att[i * s + j] = -1e9;
+                                    }
+                                }
+                            }
+                            softmax_rows(&mut att, s, s);
+                            tensor::matmul_into(&mut yh, &att, &vh, s, s, hd);
+                            if with_aux {
+                                let pdst = (b * heads + head) * s * s;
+                                probs[pdst..pdst + s * s].copy_from_slice(&att);
+                            }
+                            for t in 0..s {
+                                let dst = (b * s + t) * d + off;
+                                out[dst..dst + hd].copy_from_slice(&yh[t * hd..(t + 1) * hd]);
+                            }
+                        }
+                    }
+                }
+                arena.reclaim(qh);
+                arena.reclaim(kh);
+                arena.reclaim(vh);
+                arena.reclaim(att);
+                arena.reclaim(yh);
+                (out, if with_aux { Aux::Att(probs) } else { Aux::None })
+            }
+            OpKind::PatchMerge { side } => {
+                let dim4 = dims[2];
+                let dim = dim4 / 4;
+                let half = side / 2;
+                let xin = &vals[node.inputs[0]];
+                let mut out = arena.alloc_uninit(numel);
+                for b in 0..bsz {
+                    for i in 0..half {
+                        for j in 0..half {
+                            let o = (b * half * half + i * half + j) * dim4;
+                            for (slot, (di, dj)) in
+                                [(0, 0), (1, 0), (0, 1), (1, 1)].iter().enumerate()
+                            {
+                                let sidx =
+                                    (b * side * side + (2 * i + di) * side + (2 * j + dj)) * dim;
+                                out[o + slot * dim..o + (slot + 1) * dim]
+                                    .copy_from_slice(&xin[sidx..sidx + dim]);
+                            }
+                        }
+                    }
+                }
+                (out, Aux::None)
+            }
+            OpKind::TokenPoolCls => {
+                let is = &plan.shapes[node.inputs[0]];
+                let (t, dim) = (is[1], is[2]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = arena.alloc_uninit(numel);
+                for b in 0..bsz {
+                    out[b * dim..(b + 1) * dim]
+                        .copy_from_slice(&xin[b * t * dim..b * t * dim + dim]);
+                }
+                (out, Aux::None)
+            }
+            OpKind::TokenPoolMean => {
+                let is = &plan.shapes[node.inputs[0]];
+                let (t, dim) = (is[1], is[2]);
+                let xin = &vals[node.inputs[0]];
+                let mut out = arena.alloc(numel);
+                for b in 0..bsz {
+                    for tok in 0..t {
+                        tensor::axpy(
+                            1.0,
+                            &xin[(b * t + tok) * dim..(b * t + tok + 1) * dim],
+                            &mut out[b * dim..(b + 1) * dim],
+                        );
+                    }
+                }
+                let scale = 1.0 / t as f32;
+                for v in out.iter_mut() {
+                    *v *= scale;
+                }
+                (out, Aux::None)
+            }
+        };
+        debug_assert_eq!(out.len(), numel, "{}: shape/val mismatch", node.name);
+        vals.push(out);
+        if with_aux {
+            aux.push(ax);
+        } else {
+            reclaim_aux(arena, ax);
+            aux.push(Aux::None);
+        }
+    }
+    Ok((vals, aux))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builders;
+    use crate::runtime::lowering;
+    use crate::util::json;
+
+    fn vgg_cfg() -> json::Json {
+        json::parse(
+            r#"{"name": "t_vgg", "family": "vgg", "task": "image_cls",
+                "image": {"size": 8, "channels": 2}, "conv_channels": [4, 4],
+                "pool_every": 2, "fc_dims": [6], "num_classes": 3,
+                "quant": {"weight": true, "act": true}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_substitutes_the_batch_dim_and_sizes_conv_scratch() {
+        let cfg = vgg_cfg();
+        let sites = builders::quant_site_specs(&cfg).unwrap();
+        let prog = lowering::lower(&cfg, &sites, 1).unwrap();
+        for bsz in [1usize, 3, 8] {
+            let plan = Plan::new(&prog, bsz);
+            assert_eq!(plan.shapes.len(), prog.nodes.len());
+            for (i, node) in prog.nodes.iter().enumerate() {
+                assert_eq!(plan.shapes[i][0], bsz, "{}", node.name);
+                assert_eq!(plan.shapes[i][1..], node.shape[1..], "{}", node.name);
+                assert_eq!(
+                    plan.numels[i],
+                    plan.shapes[i].iter().product::<usize>(),
+                    "{}",
+                    node.name
+                );
+                match &node.op {
+                    lowering::OpKind::Conv2d { k, .. } => {
+                        let cin = *prog.nodes[node.inputs[0]].shape.last().unwrap();
+                        let want = bsz * node.shape[1] * node.shape[2] * k * k * cin;
+                        assert_eq!(plan.col_sizes[i], want, "{}", node.name);
+                    }
+                    _ => assert_eq!(plan.col_sizes[i], 0, "{}", node.name),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arena_recycles_capacity_and_zeroes() {
+        let mut arena = Arena::new();
+        let mut v = arena.alloc(128);
+        v.iter_mut().for_each(|x| *x = 3.0);
+        arena.reclaim(v);
+        let v2 = arena.alloc(64);
+        assert!(v2.capacity() >= 128, "capacity not recycled");
+        assert!(v2.iter().all(|&x| x == 0.0), "stale values leaked");
+        assert_eq!(v2.len(), 64);
+        // growing past the recycled capacity still works
+        arena.reclaim(v2);
+        let v3 = arena.alloc(256);
+        assert_eq!(v3.len(), 256);
+        assert!(v3.iter().all(|&x| x == 0.0));
+        // alloc_uninit sizes correctly (shrink and zero-extend paths)
+        // without promising contents
+        let mut v3 = v3;
+        v3.iter_mut().for_each(|x| *x = 9.0);
+        arena.reclaim(v3);
+        let v4 = arena.alloc_uninit(100);
+        assert_eq!(v4.len(), 100);
+        arena.reclaim(v4);
+        let v5 = arena.alloc_uninit(300);
+        assert_eq!(v5.len(), 300);
+        assert!(v5[100..].iter().all(|&x| x == 0.0), "extension not zeroed");
+    }
+
+    #[test]
+    fn arena_pool_is_capped() {
+        // consumers reclaim buffers the arena never handed out (kernel
+        // outputs, aux); the pool must not grow without bound from them
+        let mut arena = Arena::new();
+        for _ in 0..Arena::MAX_FREE + 100 {
+            arena.reclaim(vec![0.0f32; 4]);
+        }
+        assert_eq!(arena.free.len(), Arena::MAX_FREE);
+        // pooled buffers still recycle normally at the cap
+        let v = arena.alloc(4);
+        assert_eq!(arena.free.len(), Arena::MAX_FREE - 1);
+        arena.reclaim(v);
+        assert_eq!(arena.free.len(), Arena::MAX_FREE);
+    }
+
+    #[test]
+    fn train_source_quantizes_only_sited_weights() {
+        use crate::quant::QParams;
+        use crate::tensor::{ParamStore, Tensor};
+        let mut params = ParamStore::new();
+        params.push(Tensor::from_vec("w", &[2, 2], vec![0.11, -0.52, 0.93, 0.24]));
+        let q = vec![QParams { d: 0.5, t: 1.0, qm: 1.0 }];
+        let src = TrainParams { params: &params, q: &q };
+        let quantized = src.weight("w", Some(0)).unwrap();
+        assert!(matches!(quantized, Cow::Owned(_)));
+        for (a, &b) in quantized.iter().zip(&params.get("w").unwrap().data) {
+            assert_eq!(*a, quant::fake_quant(b, &q[0]));
+        }
+        let raw = src.weight("w", None).unwrap();
+        assert!(matches!(raw, Cow::Borrowed(_)));
+        assert_eq!(raw.as_ref(), params.get("w").unwrap().data.as_slice());
+        assert!(src.tensor("missing").is_err());
+    }
+
+    #[test]
+    fn deploy_source_act_rows_gate_quantization() {
+        use crate::quant::QParams;
+        use crate::tensor::ParamStore;
+        let weights = ParamStore::new();
+        let rows = vec![None, Some(QParams { d: 0.1, t: 1.0, qm: 1.0 })];
+        let on = DeployParams { weights: &weights, act_q: &rows, apply_act_quant: true };
+        assert!(on.act_q(1, "n").unwrap().is_some());
+        // a weight-site row consulted as an activation site is a hard error
+        assert!(on.act_q(0, "n").is_err());
+        assert!(on.act_q(7, "n").is_err());
+        let off = DeployParams { weights: &weights, act_q: &rows, apply_act_quant: false };
+        assert!(off.act_q(1, "n").unwrap().is_none());
+        assert!(off.act_q(0, "n").unwrap().is_none());
+    }
+}

@@ -1,30 +1,35 @@
-//! Generic executor for lowered programs (`runtime/lowering.rs`): forward
-//! + backward over the typed op IR with per-site fake-quantization.
+//! Training interpreter for lowered programs: loss heads + backward over
+//! the shared planned executor (`runtime/exec.rs`).
+//!
+//! The forward pass is [`exec::forward`] with a [`exec::TrainParams`]
+//! source — the same core the deployment engine runs — so training and
+//! serving can never drift apart op-by-op. This module owns what is
+//! training-specific: the task loss heads (one shared softmax
+//! cross-entropy core under image/span/lm), and the backward pass
+//! producing clipped-STE parameter gradients plus the eq. (4)-(6) scalar
+//! (d, t, q_m) gradients per site.
 //!
 //! The contract matches the PJRT engine exactly: weights are fake-quantized
 //! at their sites on the forward pass, activation sites quantize in place,
-//! and the backward pass produces clipped-STE parameter gradients plus the
-//! eq. (4)-(6) scalar (d, t, q_m) gradients per site. Losses are the zoo's
-//! task heads: softmax cross-entropy (image_cls), start+end span
-//! cross-entropy (span_qa, python `bert_loss`) and masked next-token
-//! cross-entropy (lm, python `lm_loss`).
+//! losses are the zoo's task heads: softmax cross-entropy (image_cls),
+//! start+end span cross-entropy (span_qa, python `bert_loss`) and masked
+//! next-token cross-entropy (lm, python `lm_loss`).
 //!
 //! Numeric conventions: f32 storage, f64 accumulation in every contraction
-//! (see `tensor/ops.rs`), so results are deterministic and stable at the
-//! im2col row counts the conv families produce.
+//! (see `tensor/ops.rs` — tiled, multi-threaded, bitwise invariant across
+//! thread counts), so results are deterministic and stable at the im2col
+//! row counts the conv families produce.
 
 use anyhow::{Context, Result};
 
+use super::exec::{self, Arena, Aux, Plan};
 use super::lowering::{OpKind, Program};
 use super::HostArray;
 use crate::quant::{self, QParams};
 use crate::tensor::{
-    self, batchnorm_bwd_rows, batchnorm_rows, col2im, gelu, gelu_grad, im2col,
-    layernorm_bwd_rows, layernorm_rows, matmul, matmul_nt, matmul_tn, softmax_bwd_rows,
-    softmax_rows, NormAux, ParamStore,
+    self, batchnorm_bwd_rows, col2im_into, gelu_grad, im2col_into, layernorm_bwd_rows,
+    matmul_into, matmul_nt_into, matmul_tn_into, softmax_bwd_rows, softmax_rows, ParamStore,
 };
-
-const NORM_EPS: f32 = 1e-5;
 
 /// Everything one interpreter pass produces. `grads` is present only for
 /// training passes; `extra` only for eval passes (task-dependent outputs
@@ -39,31 +44,11 @@ pub struct RunOut {
     pub grads: Option<(ParamStore, Vec<(f32, f32, f32)>)>,
 }
 
-/// Per-node saved forward state the backward pass consumes. Eval passes
-/// (`with_grads = false`) retain none of it.
-enum Aux {
-    None,
-    /// The fake-quantized weight that was multiplied (None when the weight
-    /// has no quant site — the backward pass then reads the raw parameter).
-    W(Option<Vec<f32>>),
-    Norm(NormAux),
-    /// Attention probabilities `[B * heads * S * S]`.
-    Att(Vec<f32>),
-    /// Max-pool argmax: flat input index per output element.
-    Pool(Vec<usize>),
-}
-
 fn tensor_data<'a>(params: &'a ParamStore, name: &str) -> Result<&'a [f32]> {
     params
         .get(name)
         .map(|t| t.data.as_slice())
         .with_context(|| format!("missing parameter `{name}`"))
-}
-
-/// Fake-quantize a weight at its site; None when the site is absent (the
-/// raw parameter is used directly, no copy).
-fn quantized_weight(raw: &[f32], site: Option<usize>, q: &[QParams]) -> Option<Vec<f32>> {
-    site.map(|s| raw.iter().map(|&v| quant::fake_quant(v, &q[s])).collect())
 }
 
 /// Accumulate eq. (4)-(6) site gradients from `values` (the quantizer
@@ -86,323 +71,55 @@ fn ste_site_backward(values: &[f32], g: &mut [f32], qp: &QParams, acc: &mut (f32
     acc.2 += gqm as f32;
 }
 
-/// Execute one batch through `prog`. `n_sites` sizes the qgrad vector
-/// (= manifest qsites count; every node site index lies below it).
+/// Execute one batch through `prog` over `plan`-resolved shapes. `n_sites`
+/// sizes the qgrad vector (= manifest qsites count; every node site index
+/// lies below it). `arena` supplies the reusable forward/scratch buffers —
+/// pass the same arena every step and the hot loop stops allocating.
+#[allow(clippy::too_many_arguments)]
 pub fn run(
     prog: &Program,
+    plan: &Plan,
     n_sites: usize,
     params: &ParamStore,
     q: &[QParams],
     x: &HostArray,
     y: &HostArray,
     with_grads: bool,
+    arena: &mut Arena,
 ) -> Result<RunOut> {
     anyhow::ensure!(q.len() == n_sites, "qparam count mismatch: {} vs {n_sites}", q.len());
     let nodes = &prog.nodes;
-    let mut vals: Vec<Vec<f32>> = Vec::with_capacity(nodes.len());
-    let mut aux: Vec<Aux> = Vec::with_capacity(nodes.len());
+    let input = match x {
+        HostArray::F32(v) => exec::Input::F32(v),
+        HostArray::I32(v) => exec::Input::I32(v),
+    };
+    let src = exec::TrainParams { params, q };
+
+    // ------------------------------------------------------------ forward
+    let (mut vals, aux) = exec::forward(prog, plan, &src, &input, with_grads, arena)?;
 
     let xi32: Option<&Vec<i32>> = match x {
         HostArray::I32(v) => Some(v),
         HostArray::F32(_) => None,
     };
 
-    // ------------------------------------------------------------ forward
-    for node in nodes.iter() {
-        let numel: usize = node.shape.iter().product();
-        let in_shape = |k: usize| -> &Vec<usize> { &nodes[node.inputs[k]].shape };
-        let (out, ax): (Vec<f32>, Aux) = match &node.op {
-            OpKind::Input => {
-                let HostArray::F32(xv) = x else {
-                    anyhow::bail!("image task expects f32 inputs")
-                };
-                anyhow::ensure!(xv.len() == numel, "input batch size mismatch");
-                (xv.clone(), Aux::None)
-            }
-            OpKind::Embed { tok, pos } => {
-                let toks = xi32.context("token task expects i32 inputs")?;
-                let (bsz, seq, dim) = (node.shape[0], node.shape[1], node.shape[2]);
-                anyhow::ensure!(toks.len() == bsz * seq, "token batch size mismatch");
-                let tokw = tensor_data(params, tok)?;
-                let posw = tensor_data(params, pos)?;
-                let vocab = tokw.len() / dim;
-                let mut out = vec![0.0f32; numel];
-                for b in 0..bsz {
-                    for s in 0..seq {
-                        let id = toks[b * seq + s];
-                        anyhow::ensure!(
-                            (0..vocab as i32).contains(&id),
-                            "token id {id} outside vocab {vocab}"
-                        );
-                        let dst = &mut out[(b * seq + s) * dim..(b * seq + s + 1) * dim];
-                        dst.copy_from_slice(&tokw[id as usize * dim..(id as usize + 1) * dim]);
-                        tensor::axpy(1.0, &posw[s * dim..(s + 1) * dim], dst);
-                    }
-                }
-                (out, Aux::None)
-            }
-            OpKind::Linear { w, site } => {
-                let raw = tensor_data(params, &format!("{w}.weight"))?;
-                let bias = tensor_data(params, &format!("{w}.bias"))?;
-                let wqo = quantized_weight(raw, *site, q);
-                let wq: &[f32] = wqo.as_deref().unwrap_or(raw);
-                let din = *in_shape(0).last().unwrap();
-                let dout = *node.shape.last().unwrap();
-                let rows = numel / dout;
-                let mut out = matmul(&vals[node.inputs[0]], wq, rows, din, dout);
-                for r in 0..rows {
-                    tensor::axpy(1.0, bias, &mut out[r * dout..(r + 1) * dout]);
-                }
-                (out, Aux::W(wqo))
-            }
-            OpKind::Conv2d { w, site, k, stride, pad } => {
-                let raw = tensor_data(params, &format!("{w}.weight"))?;
-                let bias = tensor_data(params, &format!("{w}.bias"))?;
-                let wqo = quantized_weight(raw, *site, q);
-                let wq: &[f32] = wqo.as_deref().unwrap_or(raw);
-                let is = in_shape(0);
-                let (bsz, h, wd, cin) = (is[0], is[1], is[2], is[3]);
-                let (ho, wo, cout) = (node.shape[1], node.shape[2], node.shape[3]);
-                let cols = im2col(&vals[node.inputs[0]], bsz, h, wd, cin, *k, *stride, *pad, ho, wo);
-                let rows = bsz * ho * wo;
-                let mut out = matmul(&cols, wq, rows, k * k * cin, cout);
-                for r in 0..rows {
-                    tensor::axpy(1.0, bias, &mut out[r * cout..(r + 1) * cout]);
-                }
-                (out, Aux::W(wqo))
-            }
-            OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
-                let gamma = tensor_data(params, &format!("{p}.gamma"))?;
-                let beta = tensor_data(params, &format!("{p}.beta"))?;
-                let c = *node.shape.last().unwrap();
-                let rows = numel / c;
-                let (out, na) = if matches!(node.op, OpKind::BatchNorm { .. }) {
-                    batchnorm_rows(&vals[node.inputs[0]], gamma, beta, rows, c, NORM_EPS)
-                } else {
-                    layernorm_rows(&vals[node.inputs[0]], gamma, beta, rows, c, NORM_EPS)
-                };
-                (out, Aux::Norm(na))
-            }
-            OpKind::Relu => (
-                vals[node.inputs[0]].iter().map(|&v| v.max(0.0)).collect(),
-                Aux::None,
-            ),
-            OpKind::Gelu => (
-                vals[node.inputs[0]].iter().map(|&v| gelu(v)).collect(),
-                Aux::None,
-            ),
-            OpKind::ActQuant { site } => (
-                vals[node.inputs[0]]
-                    .iter()
-                    .map(|&v| quant::fake_quant(v, &q[*site]))
-                    .collect(),
-                Aux::None,
-            ),
-            OpKind::Add => {
-                let mut out = vals[node.inputs[0]].clone();
-                tensor::axpy(1.0, &vals[node.inputs[1]], &mut out);
-                (out, Aux::None)
-            }
-            OpKind::MaxPool2 => {
-                let is = in_shape(0);
-                let (bsz, h, wd, c) = (is[0], is[1], is[2], is[3]);
-                let (ho, wo) = (node.shape[1], node.shape[2]);
-                let xin = &vals[node.inputs[0]];
-                let mut out = vec![0.0f32; numel];
-                let mut arg = vec![0usize; numel];
-                for b in 0..bsz {
-                    for oh in 0..ho {
-                        for ow in 0..wo {
-                            for ch in 0..c {
-                                let mut best = f32::NEG_INFINITY;
-                                let mut best_i = 0usize;
-                                for dh in 0..2 {
-                                    for dw in 0..2 {
-                                        let idx =
-                                            ((b * h + oh * 2 + dh) * wd + ow * 2 + dw) * c + ch;
-                                        if xin[idx] > best {
-                                            best = xin[idx];
-                                            best_i = idx;
-                                        }
-                                    }
-                                }
-                                let o = ((b * ho + oh) * wo + ow) * c + ch;
-                                out[o] = best;
-                                arg[o] = best_i;
-                            }
-                        }
-                    }
-                }
-                (out, Aux::Pool(arg))
-            }
-            OpKind::GlobalAvgPool => {
-                let is = in_shape(0);
-                let (bsz, h, wd, c) = (is[0], is[1], is[2], is[3]);
-                let xin = &vals[node.inputs[0]];
-                let mut out = vec![0.0f32; bsz * c];
-                for b in 0..bsz {
-                    for pix in 0..h * wd {
-                        tensor::axpy(
-                            1.0,
-                            &xin[(b * h * wd + pix) * c..(b * h * wd + pix + 1) * c],
-                            &mut out[b * c..(b + 1) * c],
-                        );
-                    }
-                }
-                let scale = 1.0 / (h * wd) as f32;
-                for v in out.iter_mut() {
-                    *v *= scale;
-                }
-                (out, Aux::None)
-            }
-            OpKind::Reshape => (vals[node.inputs[0]].clone(), Aux::None),
-            OpKind::ConcatCls { cls } => {
-                let clsw = tensor_data(params, cls)?;
-                let (bsz, t1, dim) = (node.shape[0], node.shape[1], node.shape[2]);
-                let xin = &vals[node.inputs[0]];
-                let mut out = vec![0.0f32; numel];
-                for b in 0..bsz {
-                    out[b * t1 * dim..b * t1 * dim + dim].copy_from_slice(clsw);
-                    out[b * t1 * dim + dim..(b + 1) * t1 * dim]
-                        .copy_from_slice(&xin[b * (t1 - 1) * dim..(b + 1) * (t1 - 1) * dim]);
-                }
-                (out, Aux::None)
-            }
-            OpKind::AddPos { pos } => {
-                let posw = tensor_data(params, pos)?;
-                let (bsz, rest) = (node.shape[0], numel / node.shape[0]);
-                anyhow::ensure!(posw.len() == rest, "pos table size mismatch");
-                let mut out = vals[node.inputs[0]].clone();
-                for b in 0..bsz {
-                    tensor::axpy(1.0, posw, &mut out[b * rest..(b + 1) * rest]);
-                }
-                (out, Aux::None)
-            }
-            OpKind::Attention { heads, causal } => {
-                let (bsz, s, d) = (node.shape[0], node.shape[1], node.shape[2]);
-                let hd = d / heads;
-                let scale = 1.0 / (hd as f32).sqrt();
-                let (qv, kv, vv) = (
-                    &vals[node.inputs[0]],
-                    &vals[node.inputs[1]],
-                    &vals[node.inputs[2]],
-                );
-                let mut out = vec![0.0f32; numel];
-                let mut probs = vec![0.0f32; bsz * heads * s * s];
-                let mut qh = vec![0.0f32; s * hd];
-                let mut kh = vec![0.0f32; s * hd];
-                let mut vh = vec![0.0f32; s * hd];
-                for b in 0..bsz {
-                    for head in 0..*heads {
-                        let off = head * hd;
-                        for t in 0..s {
-                            let src = (b * s + t) * d + off;
-                            qh[t * hd..(t + 1) * hd].copy_from_slice(&qv[src..src + hd]);
-                            kh[t * hd..(t + 1) * hd].copy_from_slice(&kv[src..src + hd]);
-                            vh[t * hd..(t + 1) * hd].copy_from_slice(&vv[src..src + hd]);
-                        }
-                        let mut att = matmul_nt(&qh, &kh, s, hd, s);
-                        for v in att.iter_mut() {
-                            *v *= scale;
-                        }
-                        if *causal {
-                            for i in 0..s {
-                                for j in i + 1..s {
-                                    att[i * s + j] = -1e9;
-                                }
-                            }
-                        }
-                        softmax_rows(&mut att, s, s);
-                        let yh = matmul(&att, &vh, s, s, hd);
-                        let pdst = (b * heads + head) * s * s;
-                        probs[pdst..pdst + s * s].copy_from_slice(&att);
-                        for t in 0..s {
-                            let dst = (b * s + t) * d + off;
-                            out[dst..dst + hd].copy_from_slice(&yh[t * hd..(t + 1) * hd]);
-                        }
-                    }
-                }
-                (out, Aux::Att(probs))
-            }
-            OpKind::PatchMerge { side } => {
-                let (bsz, dim4) = (node.shape[0], node.shape[2]);
-                let dim = dim4 / 4;
-                let half = side / 2;
-                let xin = &vals[node.inputs[0]];
-                let mut out = vec![0.0f32; numel];
-                for b in 0..bsz {
-                    for i in 0..half {
-                        for j in 0..half {
-                            let o = (b * half * half + i * half + j) * dim4;
-                            for (slot, (di, dj)) in
-                                [(0, 0), (1, 0), (0, 1), (1, 1)].iter().enumerate()
-                            {
-                                let src =
-                                    (b * side * side + (2 * i + di) * side + (2 * j + dj)) * dim;
-                                out[o + slot * dim..o + (slot + 1) * dim]
-                                    .copy_from_slice(&xin[src..src + dim]);
-                            }
-                        }
-                    }
-                }
-                (out, Aux::None)
-            }
-            OpKind::TokenPoolCls => {
-                let is = in_shape(0);
-                let (bsz, t, dim) = (is[0], is[1], is[2]);
-                let xin = &vals[node.inputs[0]];
-                let mut out = vec![0.0f32; bsz * dim];
-                for b in 0..bsz {
-                    out[b * dim..(b + 1) * dim]
-                        .copy_from_slice(&xin[b * t * dim..b * t * dim + dim]);
-                }
-                (out, Aux::None)
-            }
-            OpKind::TokenPoolMean => {
-                let is = in_shape(0);
-                let (bsz, t, dim) = (is[0], is[1], is[2]);
-                let xin = &vals[node.inputs[0]];
-                let mut out = vec![0.0f32; bsz * dim];
-                for b in 0..bsz {
-                    for tok in 0..t {
-                        tensor::axpy(
-                            1.0,
-                            &xin[(b * t + tok) * dim..(b * t + tok + 1) * dim],
-                            &mut out[b * dim..(b + 1) * dim],
-                        );
-                    }
-                }
-                let scale = 1.0 / t as f32;
-                for v in out.iter_mut() {
-                    *v *= scale;
-                }
-                (out, Aux::None)
-            }
-        };
-        debug_assert_eq!(out.len(), numel, "{}: shape/val mismatch", node.name);
-        vals.push(out);
-        // eval passes never run backward: drop the saved state immediately
-        aux.push(if with_grads { ax } else { Aux::None });
-    }
-
     // --------------------------------------------------------- loss heads
     let out_id = prog.output();
-    let logits = &vals[out_id];
-    let out_shape = &nodes[out_id].shape;
+    let out_shape = &plan.shapes[out_id];
     let (loss, metric, extra, mut out_cot) = match prog.task.as_str() {
-        "image_cls" => image_loss(logits, out_shape, y, with_grads)?,
-        "span_qa" => span_loss(logits, out_shape, y, with_grads)?,
-        "lm" => lm_loss(logits, out_shape, y, with_grads)?,
+        "image_cls" => image_loss(&vals[out_id], out_shape, y, with_grads)?,
+        "span_qa" => span_loss(&vals[out_id], out_shape, y, with_grads)?,
+        "lm" => lm_loss(&vals[out_id], out_shape, y, with_grads)?,
         other => anyhow::bail!("unknown task `{other}`"),
     };
     if !with_grads {
-        // vals is dropped on return: hand the output buffer over instead of
-        // copying it
+        let logits = std::mem::take(&mut vals[out_id]);
+        arena.reclaim_all(vals);
         return Ok(RunOut {
             loss,
             metric,
             extra,
-            logits: std::mem::take(&mut vals[out_id]),
+            logits,
             grads: None,
         });
     }
@@ -428,6 +145,7 @@ pub fn run(
                     cots[j] = g;
                 } else {
                     tensor::axpy(1.0, &g, &mut cots[j]);
+                    arena.reclaim(g);
                 }
             }};
         }
@@ -435,7 +153,8 @@ pub fn run(
             OpKind::Input => {}
             OpKind::Embed { tok, pos } => {
                 let toks = xi32.context("token task expects i32 inputs")?;
-                let (bsz, seq, dim) = (node.shape[0], node.shape[1], node.shape[2]);
+                let sh = &plan.shapes[i];
+                let (bsz, seq, dim) = (sh[0], sh[1], sh[2]);
                 let gtok = &mut grads
                     .get_mut(tok)
                     .with_context(|| format!("grad store missing {tok}"))?
@@ -462,11 +181,12 @@ pub fn run(
                 let Aux::W(wqo) = &aux[i] else { unreachable!() };
                 let raw = tensor_data(params, &format!("{w}.weight"))?;
                 let wq: &[f32] = wqo.as_deref().unwrap_or(raw);
-                let din = *nodes[node.inputs[0]].shape.last().unwrap();
-                let dout = *node.shape.last().unwrap();
+                let din = *plan.shapes[node.inputs[0]].last().unwrap();
+                let dout = *plan.shapes[i].last().unwrap();
                 let rows = cot.len() / dout;
                 let xin = &vals[node.inputs[0]];
-                let mut gw = matmul_tn(xin, &cot, rows, din, dout);
+                let mut gw = arena.alloc_uninit(din * dout);
+                matmul_tn_into(&mut gw, xin, &cot, rows, din, dout);
                 if let Some(s) = site {
                     ste_site_backward(raw, &mut gw, &q[*s], &mut qgrads[*s]);
                 }
@@ -478,6 +198,7 @@ pub fn run(
                         .with_context(|| format!("grad store missing {w}.weight"))?
                         .data,
                 );
+                arena.reclaim(gw);
                 let gb = &mut grads
                     .get_mut(&format!("{w}.bias"))
                     .with_context(|| format!("grad store missing {w}.bias"))?
@@ -485,23 +206,41 @@ pub fn run(
                 for r in 0..rows {
                     tensor::axpy(1.0, &cot[r * dout..(r + 1) * dout], gb);
                 }
-                acc!(node.inputs[0], matmul_nt(&cot, wq, rows, dout, din));
+                let mut gx = arena.alloc_uninit(rows * din);
+                matmul_nt_into(&mut gx, &cot, wq, rows, dout, din);
+                acc!(node.inputs[0], gx);
+                arena.reclaim(cot);
             }
             OpKind::Conv2d { w, site, k, stride, pad } => {
                 let Aux::W(wqo) = &aux[i] else { unreachable!() };
                 let raw = tensor_data(params, &format!("{w}.weight"))?;
                 let wq: &[f32] = wqo.as_deref().unwrap_or(raw);
-                let is = &nodes[node.inputs[0]].shape;
+                let is = &plan.shapes[node.inputs[0]];
                 let (bsz, h, wd, cin) = (is[0], is[1], is[2], is[3]);
-                let (ho, wo, cout) = (node.shape[1], node.shape[2], node.shape[3]);
+                let sh = &plan.shapes[i];
+                let (ho, wo, cout) = (sh[1], sh[2], sh[3]);
                 let rows = bsz * ho * wo;
                 let kkc = k * k * cin;
                 // cols are recomputed rather than kept from the forward:
                 // one im2col is far cheaper than holding every conv's
                 // column matrix across the whole step
-                let cols =
-                    im2col(&vals[node.inputs[0]], bsz, h, wd, cin, *k, *stride, *pad, ho, wo);
-                let mut gw = matmul_tn(&cols, &cot, rows, kkc, cout);
+                let mut cols = arena.alloc_uninit(plan.col_sizes[i]);
+                im2col_into(
+                    &mut cols,
+                    &vals[node.inputs[0]],
+                    bsz,
+                    h,
+                    wd,
+                    cin,
+                    *k,
+                    *stride,
+                    *pad,
+                    ho,
+                    wo,
+                );
+                let mut gw = arena.alloc_uninit(kkc * cout);
+                matmul_tn_into(&mut gw, &cols, &cot, rows, kkc, cout);
+                arena.reclaim(cols);
                 if let Some(s) = site {
                     ste_site_backward(raw, &mut gw, &q[*s], &mut qgrads[*s]);
                 }
@@ -513,6 +252,7 @@ pub fn run(
                         .with_context(|| format!("grad store missing {w}.weight"))?
                         .data,
                 );
+                arena.reclaim(gw);
                 let gb = &mut grads
                     .get_mut(&format!("{w}.bias"))
                     .with_context(|| format!("grad store missing {w}.bias"))?
@@ -520,16 +260,18 @@ pub fn run(
                 for r in 0..rows {
                     tensor::axpy(1.0, &cot[r * cout..(r + 1) * cout], gb);
                 }
-                let gcols = matmul_nt(&cot, wq, rows, cout, kkc);
-                acc!(
-                    node.inputs[0],
-                    col2im(&gcols, bsz, h, wd, cin, *k, *stride, *pad, ho, wo)
-                );
+                let mut gcols = arena.alloc_uninit(rows * kkc);
+                matmul_nt_into(&mut gcols, &cot, wq, rows, cout, kkc);
+                let mut gx = arena.alloc_uninit(bsz * h * wd * cin);
+                col2im_into(&mut gx, &gcols, bsz, h, wd, cin, *k, *stride, *pad, ho, wo);
+                acc!(node.inputs[0], gx);
+                arena.reclaim(gcols);
+                arena.reclaim(cot);
             }
             OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
                 let Aux::Norm(na) = &aux[i] else { unreachable!() };
                 let gamma = tensor_data(params, &format!("{p}.gamma"))?;
-                let c = *node.shape.last().unwrap();
+                let c = *plan.shapes[i].last().unwrap();
                 let rows = cot.len() / c;
                 let (gx, gg, gb) = if matches!(node.op, OpKind::BatchNorm { .. }) {
                     batchnorm_bwd_rows(gamma, &cot, na, rows, c)
@@ -553,6 +295,7 @@ pub fn run(
                         .data,
                 );
                 acc!(node.inputs[0], gx);
+                arena.reclaim(cot);
             }
             OpKind::Relu => {
                 let mut g = cot;
@@ -576,22 +319,25 @@ pub fn run(
                 acc!(node.inputs[0], g);
             }
             OpKind::Add => {
-                acc!(node.inputs[0], cot.clone());
+                let mut g = arena.alloc_uninit(cot.len());
+                g.copy_from_slice(&cot);
+                acc!(node.inputs[0], g);
                 acc!(node.inputs[1], cot);
             }
             OpKind::MaxPool2 => {
                 let Aux::Pool(arg) = &aux[i] else { unreachable!() };
-                let mut g = vec![0.0f32; vals[node.inputs[0]].len()];
-                for (o, &src) in arg.iter().enumerate() {
-                    g[src] += cot[o];
+                let mut g = arena.alloc(vals[node.inputs[0]].len());
+                for (o, &src_i) in arg.iter().enumerate() {
+                    g[src_i] += cot[o];
                 }
                 acc!(node.inputs[0], g);
+                arena.reclaim(cot);
             }
             OpKind::GlobalAvgPool => {
-                let is = &nodes[node.inputs[0]].shape;
+                let is = &plan.shapes[node.inputs[0]];
                 let (bsz, h, wd, c) = (is[0], is[1], is[2], is[3]);
                 let scale = 1.0 / (h * wd) as f32;
-                let mut g = vec![0.0f32; bsz * h * wd * c];
+                let mut g = arena.alloc(bsz * h * wd * c);
                 for b in 0..bsz {
                     for pix in 0..h * wd {
                         for ch in 0..c {
@@ -600,26 +346,30 @@ pub fn run(
                     }
                 }
                 acc!(node.inputs[0], g);
+                arena.reclaim(cot);
             }
             OpKind::Reshape => {
                 acc!(node.inputs[0], cot);
             }
             OpKind::ConcatCls { cls } => {
-                let (bsz, t1, dim) = (node.shape[0], node.shape[1], node.shape[2]);
+                let sh = &plan.shapes[i];
+                let (bsz, t1, dim) = (sh[0], sh[1], sh[2]);
                 let gcls = &mut grads
                     .get_mut(cls)
                     .with_context(|| format!("grad store missing {cls}"))?
                     .data;
-                let mut g = vec![0.0f32; bsz * (t1 - 1) * dim];
+                let mut g = arena.alloc(bsz * (t1 - 1) * dim);
                 for b in 0..bsz {
                     tensor::axpy(1.0, &cot[b * t1 * dim..b * t1 * dim + dim], gcls);
                     g[b * (t1 - 1) * dim..(b + 1) * (t1 - 1) * dim]
                         .copy_from_slice(&cot[b * t1 * dim + dim..(b + 1) * t1 * dim]);
                 }
                 acc!(node.inputs[0], g);
+                arena.reclaim(cot);
             }
             OpKind::AddPos { pos } => {
-                let (bsz, rest) = (node.shape[0], cot.len() / node.shape[0]);
+                let bsz = plan.shapes[i][0];
+                let rest = cot.len() / bsz;
                 let gpos = &mut grads
                     .get_mut(pos)
                     .with_context(|| format!("grad store missing {pos}"))?
@@ -631,7 +381,8 @@ pub fn run(
             }
             OpKind::Attention { heads, .. } => {
                 let Aux::Att(probs) = &aux[i] else { unreachable!() };
-                let (bsz, s, d) = (node.shape[0], node.shape[1], node.shape[2]);
+                let sh = &plan.shapes[i];
+                let (bsz, s, d) = (sh[0], sh[1], sh[2]);
                 let hd = d / heads;
                 let scale = 1.0 / (hd as f32).sqrt();
                 let (qv, kv, vv) = (
@@ -639,35 +390,42 @@ pub fn run(
                     &vals[node.inputs[1]],
                     &vals[node.inputs[2]],
                 );
-                let mut gq = vec![0.0f32; qv.len()];
-                let mut gk = vec![0.0f32; kv.len()];
-                let mut gv = vec![0.0f32; vv.len()];
-                let mut qh = vec![0.0f32; s * hd];
-                let mut kh = vec![0.0f32; s * hd];
-                let mut vh = vec![0.0f32; s * hd];
-                let mut dyh = vec![0.0f32; s * hd];
+                let mut gq = arena.alloc(qv.len());
+                let mut gk = arena.alloc(kv.len());
+                let mut gv = arena.alloc(vv.len());
+                // per-head scratch: allocated once per node, fully
+                // overwritten each head by the *_into kernels
+                let mut qh = arena.alloc_uninit(s * hd);
+                let mut kh = arena.alloc_uninit(s * hd);
+                let mut vh = arena.alloc_uninit(s * hd);
+                let mut dyh = arena.alloc_uninit(s * hd);
+                let mut dp = arena.alloc_uninit(s * s);
+                let mut dvh = arena.alloc_uninit(s * hd);
+                let mut dqh = arena.alloc_uninit(s * hd);
+                let mut dkh = arena.alloc_uninit(s * hd);
                 for b in 0..bsz {
                     for head in 0..*heads {
                         let off = head * hd;
                         for t in 0..s {
-                            let src = (b * s + t) * d + off;
-                            qh[t * hd..(t + 1) * hd].copy_from_slice(&qv[src..src + hd]);
-                            kh[t * hd..(t + 1) * hd].copy_from_slice(&kv[src..src + hd]);
-                            vh[t * hd..(t + 1) * hd].copy_from_slice(&vv[src..src + hd]);
-                            dyh[t * hd..(t + 1) * hd].copy_from_slice(&cot[src..src + hd]);
+                            let src_i = (b * s + t) * d + off;
+                            qh[t * hd..(t + 1) * hd].copy_from_slice(&qv[src_i..src_i + hd]);
+                            kh[t * hd..(t + 1) * hd].copy_from_slice(&kv[src_i..src_i + hd]);
+                            vh[t * hd..(t + 1) * hd].copy_from_slice(&vv[src_i..src_i + hd]);
+                            dyh[t * hd..(t + 1) * hd].copy_from_slice(&cot[src_i..src_i + hd]);
                         }
                         let p = &probs[(b * heads + head) * s * s..(b * heads + head + 1) * s * s];
                         // dP = dY @ V^T ; dV = P^T @ dY
-                        let dp = matmul_nt(&dyh, &vh, s, hd, s);
-                        let dvh = matmul_tn(p, &dyh, s, s, hd);
+                        matmul_nt_into(&mut dp, &dyh, &vh, s, hd, s);
+                        matmul_tn_into(&mut dvh, p, &dyh, s, s, hd);
                         // dS = softmax'(P, dP) * scale
                         let mut ds = softmax_bwd_rows(p, &dp, s, s);
                         for v in ds.iter_mut() {
                             *v *= scale;
                         }
                         // dQ = dS @ K ; dK = dS^T @ Q
-                        let dqh = matmul(&ds, &kh, s, s, hd);
-                        let dkh = matmul_tn(&ds, &qh, s, s, hd);
+                        matmul_into(&mut dqh, &ds, &kh, s, s, hd);
+                        matmul_tn_into(&mut dkh, &ds, &qh, s, s, hd);
+                        arena.reclaim(ds);
                         for t in 0..s {
                             let dst = (b * s + t) * d + off;
                             tensor::axpy(1.0, &dqh[t * hd..(t + 1) * hd], &mut gq[dst..dst + hd]);
@@ -676,15 +434,18 @@ pub fn run(
                         }
                     }
                 }
+                arena.reclaim_all([qh, kh, vh, dyh, dp, dvh, dqh, dkh]);
                 acc!(node.inputs[0], gq);
                 acc!(node.inputs[1], gk);
                 acc!(node.inputs[2], gv);
+                arena.reclaim(cot);
             }
             OpKind::PatchMerge { side } => {
-                let (bsz, dim4) = (node.shape[0], node.shape[2]);
+                let sh = &plan.shapes[i];
+                let (bsz, dim4) = (sh[0], sh[2]);
                 let dim = dim4 / 4;
                 let half = side / 2;
-                let mut g = vec![0.0f32; bsz * side * side * dim];
+                let mut g = arena.alloc(bsz * side * side * dim);
                 for b in 0..bsz {
                     for i2 in 0..half {
                         for j2 in 0..half {
@@ -703,21 +464,23 @@ pub fn run(
                     }
                 }
                 acc!(node.inputs[0], g);
+                arena.reclaim(cot);
             }
             OpKind::TokenPoolCls => {
-                let is = &nodes[node.inputs[0]].shape;
+                let is = &plan.shapes[node.inputs[0]];
                 let (bsz, t, dim) = (is[0], is[1], is[2]);
-                let mut g = vec![0.0f32; bsz * t * dim];
+                let mut g = arena.alloc(bsz * t * dim);
                 for b in 0..bsz {
                     g[b * t * dim..b * t * dim + dim].copy_from_slice(&cot[b * dim..(b + 1) * dim]);
                 }
                 acc!(node.inputs[0], g);
+                arena.reclaim(cot);
             }
             OpKind::TokenPoolMean => {
-                let is = &nodes[node.inputs[0]].shape;
+                let is = &plan.shapes[node.inputs[0]];
                 let (bsz, t, dim) = (is[0], is[1], is[2]);
                 let scale = 1.0 / t as f32;
-                let mut g = vec![0.0f32; bsz * t * dim];
+                let mut g = arena.alloc(bsz * t * dim);
                 for b in 0..bsz {
                     for tok in 0..t {
                         for j in 0..dim {
@@ -726,20 +489,78 @@ pub fn run(
                     }
                 }
                 acc!(node.inputs[0], g);
+                arena.reclaim(cot);
             }
         }
+    }
+
+    let logits = std::mem::take(&mut vals[out_id]);
+    arena.reclaim_all(vals);
+    for ax in aux {
+        exec::reclaim_aux(arena, ax);
     }
 
     Ok(RunOut {
         loss,
         metric,
         extra,
-        logits: std::mem::take(&mut vals[out_id]),
+        logits,
         grads: Some((grads, qgrads)),
     })
 }
 
 type LossOut = (f32, f32, Vec<Vec<f32>>, Option<Vec<f32>>);
+
+/// Shared softmax-cross-entropy core over flat `[rows, n]` logits with one
+/// i32 label per row (negative = masked out of loss and metric). Returns
+/// (summed loss over unmasked rows, correct count, per-row argmax, and —
+/// when `with_grad` — the **unscaled** cotangent `softmax(row) -
+/// onehot(label)`, zeroed on masked rows). Callers apply their own
+/// 1/denominator scale; this is the one place the softmax + log +
+/// argmax + one-hot-subtract math lives for all three task heads.
+fn softmax_xent_rows(
+    logits: &[f32],
+    rows: usize,
+    n: usize,
+    labels: &[i32],
+    with_grad: bool,
+) -> Result<(f64, f32, Vec<u32>, Option<Vec<f32>>)> {
+    assert_eq!(logits.len(), rows * n);
+    anyhow::ensure!(labels.len() == rows, "label count mismatch: {} vs {rows}", labels.len());
+    let mut probs = logits.to_vec();
+    softmax_rows(&mut probs, rows, n);
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f32;
+    let mut amax = vec![0u32; rows];
+    for r in 0..rows {
+        let row = &probs[r * n..(r + 1) * n];
+        let am = argmax(row);
+        amax[r] = am as u32;
+        let t = labels[r];
+        if t < 0 {
+            continue;
+        }
+        let label = t as usize;
+        anyhow::ensure!(label < n, "label {label} out of range (n = {n})");
+        loss -= (row[label].max(1e-12) as f64).ln();
+        if am == label {
+            correct += 1.0;
+        }
+    }
+    let cot = with_grad.then(|| {
+        for r in 0..rows {
+            let row = &mut probs[r * n..(r + 1) * n];
+            let t = labels[r];
+            if t < 0 {
+                tensor::zero(row);
+                continue;
+            }
+            row[t as usize] -= 1.0;
+        }
+        probs
+    });
+    Ok((loss, correct, amax, cot))
+}
 
 /// Softmax cross-entropy over `[B, ncls]` logits; metric = correct count.
 fn image_loss(logits: &[f32], shape: &[usize], y: &HostArray, with_grads: bool) -> Result<LossOut> {
@@ -748,36 +569,25 @@ fn image_loss(logits: &[f32], shape: &[usize], y: &HostArray, with_grads: bool) 
     };
     let (bsz, ncls) = (shape[0], shape[1]);
     anyhow::ensure!(yv.len() == bsz, "label batch size mismatch");
-    let mut probs = logits.to_vec();
-    softmax_rows(&mut probs, bsz, ncls);
-    let mut loss = 0.0f64;
-    let mut correct = 0.0f32;
-    for b in 0..bsz {
-        let row = &probs[b * ncls..(b + 1) * ncls];
-        let label = yv[b] as usize;
-        anyhow::ensure!(label < ncls, "label {label} out of range");
-        loss -= (row[label].max(1e-12) as f64).ln();
-        if argmax(row) == label {
-            correct += 1.0;
-        }
+    for &l in yv {
+        // negative would silently mask the row in the shared core
+        anyhow::ensure!(l >= 0, "image label {l} negative");
     }
-    let loss = (loss / bsz as f64) as f32;
-    let cot = with_grads.then(|| {
+    let (loss, correct, _amax, mut cot) = softmax_xent_rows(logits, bsz, ncls, yv, with_grads)?;
+    if let Some(c) = cot.as_mut() {
         let scale = 1.0 / bsz as f32;
-        for b in 0..bsz {
-            probs[b * ncls + yv[b] as usize] -= 1.0;
-        }
-        for v in probs.iter_mut() {
+        for v in c.iter_mut() {
             *v *= scale;
         }
-        probs
-    });
-    Ok((loss, correct, Vec::new(), cot))
+    }
+    Ok(((loss / bsz as f64) as f32, correct, Vec::new(), cot))
 }
 
 /// Start+end span cross-entropy over `[B, S, 2]` logits (python
 /// `bert_loss`); metric = correct starts + correct ends; eval extras =
-/// (pred_start, pred_end).
+/// (pred_start, pred_end). Each logit column is one `[B, S]` problem for
+/// the shared core; the cotangent is scattered back to the interleaved
+/// layout.
 fn span_loss(logits: &[f32], shape: &[usize], y: &HostArray, with_grads: bool) -> Result<LossOut> {
     let HostArray::I32(yv) = y else {
         anyhow::bail!("span_qa expects i32 labels")
@@ -796,27 +606,20 @@ fn span_loss(logits: &[f32], shape: &[usize], y: &HostArray, with_grads: bool) -
                 lg[b * seq + s] = logits[(b * seq + s) * 2 + col];
             }
         }
-        softmax_rows(&mut lg, bsz, seq);
-        for b in 0..bsz {
-            let row = &lg[b * seq..(b + 1) * seq];
-            let label = yv[b * 2 + col] as usize;
-            anyhow::ensure!(label < seq, "span label {label} out of range");
-            loss -= (row[label].max(1e-12) as f64).ln() / bsz as f64;
-            let am = argmax(row);
-            if am == label {
-                metric += 1.0;
-            }
-            preds[col].push(am as f32);
+        let labels: Vec<i32> = (0..bsz).map(|b| yv[b * 2 + col]).collect();
+        for &l in &labels {
+            // negative would silently mask the row in the shared core
+            anyhow::ensure!(l >= 0, "span label {l} negative");
         }
-        if let Some(cot) = cot.as_mut() {
+        let (lsum, correct, amax, ccol) = softmax_xent_rows(&lg, bsz, seq, &labels, with_grads)?;
+        loss += lsum / bsz as f64;
+        metric += correct;
+        preds[col].extend(amax.iter().map(|&a| a as f32));
+        if let (Some(cot), Some(ccol)) = (cot.as_mut(), ccol) {
             let scale = 1.0 / bsz as f32;
             for b in 0..bsz {
                 for s in 0..seq {
-                    let mut g = lg[b * seq + s];
-                    if s == yv[b * 2 + col] as usize {
-                        g -= 1.0;
-                    }
-                    cot[(b * seq + s) * 2 + col] = g * scale;
+                    cot[(b * seq + s) * 2 + col] = ccol[b * seq + s] * scale;
                 }
             }
         }
@@ -827,55 +630,29 @@ fn span_loss(logits: &[f32], shape: &[usize], y: &HostArray, with_grads: bool) -
 
 /// Masked next-token cross-entropy over `[B, S, V]` logits (python
 /// `lm_loss`); metric = correct unmasked predictions; eval extra =
-/// [mask_count].
+/// [mask_count]. Masking (label < 0) is handled inside the shared core.
 fn lm_loss(logits: &[f32], shape: &[usize], y: &HostArray, with_grads: bool) -> Result<LossOut> {
     let HostArray::I32(yv) = y else {
         anyhow::bail!("lm expects i32 labels")
     };
     let (bsz, seq, vocab) = (shape[0], shape[1], shape[2]);
     anyhow::ensure!(yv.len() == bsz * seq, "lm labels are [B, S]");
-    let mut probs = logits.to_vec();
-    softmax_rows(&mut probs, bsz * seq, vocab);
     let mask_count = yv.iter().filter(|&&t| t >= 0).count();
     let denom = (mask_count as f64).max(1.0);
-    let mut loss = 0.0f64;
-    let mut metric = 0.0f32;
-    for r in 0..bsz * seq {
-        let t = yv[r];
-        if t < 0 {
-            continue;
-        }
-        let label = t as usize;
-        anyhow::ensure!(label < vocab, "lm label {label} out of range");
-        let row = &probs[r * vocab..(r + 1) * vocab];
-        loss -= (row[label].max(1e-12) as f64).ln();
-        if argmax(row) == label {
-            metric += 1.0;
+    let (lsum, metric, _amax, mut cot) =
+        softmax_xent_rows(logits, bsz * seq, vocab, yv, with_grads)?;
+    if let Some(c) = cot.as_mut() {
+        let scale = (1.0 / denom) as f32;
+        for v in c.iter_mut() {
+            *v *= scale;
         }
     }
-    let loss = (loss / denom) as f32;
-    let cot = with_grads.then(|| {
-        let scale = (1.0 / denom) as f32;
-        for r in 0..bsz * seq {
-            let row = &mut probs[r * vocab..(r + 1) * vocab];
-            let t = yv[r];
-            if t < 0 {
-                tensor::zero(row);
-                continue;
-            }
-            row[t as usize] -= 1.0;
-            for v in row.iter_mut() {
-                *v *= scale;
-            }
-        }
-        probs
-    });
     let extra = if with_grads {
         Vec::new()
     } else {
         vec![vec![mask_count as f32]]
     };
-    Ok((loss, metric, extra, cot))
+    Ok(((lsum / denom) as f32, metric, extra, cot))
 }
 
 fn argmax(row: &[f32]) -> usize {

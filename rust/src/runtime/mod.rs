@@ -17,12 +17,21 @@
 //!   artifacts produced by `make artifacts` (python/compile/aot.py) and
 //!   executes the compiled HLO through a PJRT CPU client.
 //!
+//! The native forward pass itself lives in [`exec`] — the **planned
+//! executor**: a shape-resolved [`exec::Plan`] built once per model, a
+//! buffer [`exec::Arena`] reused across steps/micro-batches, and a
+//! [`exec::ParamSource`] seam that lets the *same* op kernels serve both
+//! training (dense fake-quant parameters) and `.geta` deployment
+//! (dequantized packed weights — see `deploy::GetaEngine`). [`interp`]
+//! adds the loss heads and backward pass on top.
+//!
 //! The coordinator, QASSO, subnet construction and BOPs accounting all run
 //! on the [`Backend`] trait and cannot tell the two apart: the manifest is
 //! the single interface in both directions. BOPs accounting additionally
 //! reads per-layer MAC counts off the lowered program's real op shapes
 //! (`lowering::layer_costs`).
 
+pub mod exec;
 pub mod interp;
 pub mod lowering;
 pub mod manifest;

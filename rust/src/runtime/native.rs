@@ -23,6 +23,7 @@
 
 use anyhow::{Context, Result};
 
+use super::exec;
 use super::lowering::{self, Program};
 use super::{interp, Backend, BatchSpec, EvalOut, HostArray, Manifest, TrainOut};
 use crate::graph::builders;
@@ -285,10 +286,16 @@ pub fn synth_manifest_for(model: &str) -> Result<Manifest> {
 // ------------------------------------------------------------ NativeEngine
 
 /// Manifest-driven interpreter engine (see module docs). One instance per
-/// model; covers every family in [`lowered_families`].
+/// model; covers every family in [`lowered_families`]. The shape-resolved
+/// execution [`exec::Plan`] is built once here and reused by every step,
+/// and the buffer arena carries forward/scratch allocations across steps
+/// (`RefCell`: the [`Backend`] trait is deliberately not thread-shared —
+/// worker pools construct one engine per thread).
 pub struct NativeEngine {
     manifest: Manifest,
     program: Program,
+    plan: exec::Plan,
+    arena: std::cell::RefCell<exec::Arena>,
 }
 
 impl NativeEngine {
@@ -302,13 +309,25 @@ impl NativeEngine {
     /// configs through the full synth-manifest + lowering pipeline).
     pub fn from_config(cfg: &Json) -> Result<NativeEngine> {
         let manifest = synth_manifest(cfg)?;
-        let program = lowering::lower(cfg, &manifest.qsites, manifest.batch.batch_size())?;
-        Ok(NativeEngine { manifest, program })
+        let bsz = manifest.batch.batch_size();
+        let program = lowering::lower(cfg, &manifest.qsites, bsz)?;
+        let plan = exec::Plan::new(&program, bsz);
+        Ok(NativeEngine {
+            manifest,
+            program,
+            plan,
+            arena: std::cell::RefCell::new(exec::Arena::new()),
+        })
     }
 
     /// The lowered op program this engine executes.
     pub fn program(&self) -> &Program {
         &self.program
+    }
+
+    /// The shape-resolved execution plan (built once at construction).
+    pub fn plan(&self) -> &exec::Plan {
+        &self.plan
     }
 }
 
@@ -328,7 +347,18 @@ impl Backend for NativeEngine {
         x: &HostArray,
         y: &HostArray,
     ) -> Result<TrainOut> {
-        let out = interp::run(&self.program, self.manifest.qsites.len(), params, q, x, y, true)?;
+        let mut arena = self.arena.borrow_mut();
+        let out = interp::run(
+            &self.program,
+            &self.plan,
+            self.manifest.qsites.len(),
+            params,
+            q,
+            x,
+            y,
+            true,
+            &mut arena,
+        )?;
         let (grads, qgrads) = out.grads.expect("training pass produces gradients");
         Ok(TrainOut {
             loss: out.loss,
@@ -345,7 +375,18 @@ impl Backend for NativeEngine {
         x: &HostArray,
         y: &HostArray,
     ) -> Result<EvalOut> {
-        let out = interp::run(&self.program, self.manifest.qsites.len(), params, q, x, y, false)?;
+        let mut arena = self.arena.borrow_mut();
+        let out = interp::run(
+            &self.program,
+            &self.plan,
+            self.manifest.qsites.len(),
+            params,
+            q,
+            x,
+            y,
+            false,
+            &mut arena,
+        )?;
         Ok(EvalOut {
             loss: out.loss,
             metric: out.metric,
@@ -360,7 +401,18 @@ impl Backend for NativeEngine {
         x: &HostArray,
         y: &HostArray,
     ) -> Result<Vec<f32>> {
-        let out = interp::run(&self.program, self.manifest.qsites.len(), params, q, x, y, false)?;
+        let mut arena = self.arena.borrow_mut();
+        let out = interp::run(
+            &self.program,
+            &self.plan,
+            self.manifest.qsites.len(),
+            params,
+            q,
+            x,
+            y,
+            false,
+            &mut arena,
+        )?;
         Ok(out.logits)
     }
 }

@@ -84,14 +84,286 @@ pub fn scatter_strided(data: &mut [f32], start: usize, stride: usize, vals: &[f3
     assert_eq!(k, vals.len());
 }
 
+// ------------------------------------------------------- thread plumbing
+//
+// One process-wide worker budget shared by every execution path: the
+// training interpreter, the `.geta` inference engine and the benches all
+// run the tiled GEMM kernels below, which split their output rows across
+// `configured_threads()` `std::thread` workers. The budget resolves, in
+// priority order, from `set_threads` (the CLI `--threads` plumbing), the
+// `GETA_THREADS` environment variable, then `available_parallelism`.
+//
+// Determinism contract: every output element is produced by exactly one
+// worker with an accumulation order fixed by (shape, constants) alone, so
+// kernel results are **bitwise identical for every thread count** — the
+// invariant the threaded-determinism e2e tests pin.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker-thread budget (CLI `--threads`). Takes precedence
+/// over `GETA_THREADS` and the machine's parallelism.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Resolve the worker-thread budget (see the section notes above). The
+/// environment is consulted once; later calls return the cached value.
+pub fn configured_threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let n = std::env::var("GETA_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
+    THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+thread_local! {
+    static SERIAL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Run `f` with the tiled kernels pinned to one thread on the calling
+/// thread. Callers that already shard work across their own workers
+/// (micro-batch sharding in `deploy::GetaEngine::infer`) wrap each worker
+/// body in this so nested parallelism cannot oversubscribe the machine.
+pub fn serial_scope<R>(f: impl FnOnce() -> R) -> R {
+    SERIAL.with(|s| {
+        let prev = s.replace(true);
+        let out = f();
+        s.set(prev);
+        out
+    })
+}
+
+/// Worker count for a kernel doing `work` multiply-adds over `rows`
+/// partitionable output rows: 1 inside [`serial_scope`] or when the job is
+/// too small to amortize a spawn, else the configured budget.
+fn kernel_threads(work: usize, rows: usize) -> usize {
+    const MIN_WORK_PER_THREAD: usize = 1 << 16;
+    if work < 2 * MIN_WORK_PER_THREAD || SERIAL.with(|s| s.get()) {
+        return 1;
+    }
+    configured_threads().min(work / MIN_WORK_PER_THREAD).min(rows).max(1)
+}
+
 // ------------------------------------------------------------ dense GEMM
 //
-// The interpreter's matmuls (runtime/interp.rs). All three accumulate in
-// f64: layer widths stay small but im2col rows reach ~8k, where f32
-// accumulation visibly drifts (see `dot_accumulates_in_f64_on_large_inputs`).
+// All three contractions accumulate in f64 per tile: layer widths stay
+// small but im2col rows reach ~8k, where f32 accumulation visibly drifts
+// (see `dot_accumulates_in_f64_on_large_inputs`). The tiled kernels block
+// the k axis so a panel of `b` rows stays cache-hot across a block of
+// output rows, unroll k four-wide to cut accumulator traffic, and split
+// output rows across worker threads. The `*_naive` triple loops are the
+// ground truth the property tests compare against and the baseline
+// `BENCH_runtime.json` measures speedups over.
 
-/// `a[m,k] @ b[k,n]` (row-major flat buffers), f64 row accumulator.
+const TILE_I: usize = 16;
+const TILE_K: usize = 256;
+
+/// `a[m,k] @ b[k,n]` (row-major flat buffers) — tiled + threaded.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_into(&mut out, a, b, m, k, n);
+    out
+}
+
+/// [`matmul`] writing into a caller-provided (arena) buffer.
+pub fn matmul_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    if out.is_empty() {
+        return;
+    }
+    if k == 0 {
+        zero(out);
+        return;
+    }
+    let nt = kernel_threads(m * k * n, m);
+    if nt <= 1 {
+        matmul_rows(out, a, b, 0, k, n);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|sc| {
+        for (ti, oc) in out.chunks_mut(chunk * n).enumerate() {
+            sc.spawn(move || matmul_rows(oc, a, b, ti * chunk, k, n));
+        }
+    });
+}
+
+/// Rows `i0..i0 + out.len()/n` of `a @ b`. Per-row accumulation order is a
+/// function of (k, TILE_K) only — independent of `i0` and tile/thread
+/// partitioning, which is what makes results thread-count-invariant.
+fn matmul_rows(out: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: usize) {
+    let rows = out.len() / n;
+    let mut acc = vec![0.0f64; TILE_I.min(rows) * n];
+    for ib in (0..rows).step_by(TILE_I) {
+        let ilen = TILE_I.min(rows - ib);
+        let acc = &mut acc[..ilen * n];
+        acc.fill(0.0);
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(i0 + ib + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                let mut kk = 0;
+                while kk + 4 <= klen {
+                    let a0 = arow[kk] as f64;
+                    let a1 = arow[kk + 1] as f64;
+                    let a2 = arow[kk + 2] as f64;
+                    let a3 = arow[kk + 3] as f64;
+                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                        let b0 = &b[(kb + kk) * n..][..n];
+                        let b1 = &b[(kb + kk + 1) * n..][..n];
+                        let b2 = &b[(kb + kk + 2) * n..][..n];
+                        let b3 = &b[(kb + kk + 3) * n..][..n];
+                        for j in 0..n {
+                            accrow[j] += a0 * b0[j] as f64
+                                + a1 * b1[j] as f64
+                                + a2 * b2[j] as f64
+                                + a3 * b3[j] as f64;
+                        }
+                    }
+                    kk += 4;
+                }
+                while kk < klen {
+                    let av = arow[kk] as f64;
+                    if av != 0.0 {
+                        let brow = &b[(kb + kk) * n..][..n];
+                        for j in 0..n {
+                            accrow[j] += av * brow[j] as f64;
+                        }
+                    }
+                    kk += 1;
+                }
+            }
+        }
+        for ii in 0..ilen {
+            let orow = &mut out[(ib + ii) * n..(ib + ii + 1) * n];
+            for j in 0..n {
+                orow[j] = acc[ii * n + j] as f32;
+            }
+        }
+    }
+}
+
+/// `a[m,k]^T @ b[m,n] -> [k,n]` (weight-gradient shape) — threaded over
+/// output rows, f64 accumulation in the naive i-ascending order.
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * n];
+    matmul_tn_into(&mut out, a, b, m, k, n);
+    out
+}
+
+/// [`matmul_tn`] writing into a caller-provided (arena) buffer.
+pub fn matmul_tn_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    if out.is_empty() {
+        return;
+    }
+    if m == 0 {
+        zero(out);
+        return;
+    }
+    let nt = kernel_threads(m * k * n, k);
+    if nt <= 1 {
+        matmul_tn_rows(out, a, b, 0, m, k, n);
+        return;
+    }
+    let chunk = k.div_ceil(nt);
+    std::thread::scope(|sc| {
+        for (ti, oc) in out.chunks_mut(chunk * n).enumerate() {
+            sc.spawn(move || matmul_tn_rows(oc, a, b, ti * chunk, m, k, n));
+        }
+    });
+}
+
+/// Output rows `k0..k0 + out.len()/n` of `a^T @ b`: per element the sum
+/// runs over i ascending, exactly the naive order, for any partition.
+fn matmul_tn_rows(out: &mut [f32], a: &[f32], b: &[f32], k0: usize, m: usize, k: usize, n: usize) {
+    let klen = out.len() / n;
+    let mut acc = vec![0.0f64; klen * n];
+    for i in 0..m {
+        let arow = &a[i * k + k0..][..klen];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let av = av as f64;
+            let accrow = &mut acc[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                accrow[j] += av * brow[j] as f64;
+            }
+        }
+    }
+    for (o, &v) in out.iter_mut().zip(acc.iter()) {
+        *o = v as f32;
+    }
+}
+
+/// `a[m,k] @ b[n,k]^T -> [m,n]` (input-gradient shape): both operands are
+/// walked along contiguous rows, so this is a dot per output element —
+/// j-blocked so a panel of `b` rows is reused across a block of `a` rows,
+/// and threaded over output rows.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_nt_into(&mut out, a, b, m, k, n);
+    out
+}
+
+/// [`matmul_nt`] writing into a caller-provided (arena) buffer.
+pub fn matmul_nt_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    if out.is_empty() {
+        return;
+    }
+    let nt = kernel_threads(m * k * n, m);
+    if nt <= 1 {
+        matmul_nt_rows(out, a, b, 0, k, n);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|sc| {
+        for (ti, oc) in out.chunks_mut(chunk * n).enumerate() {
+            sc.spawn(move || matmul_nt_rows(oc, a, b, ti * chunk, k, n));
+        }
+    });
+}
+
+fn matmul_nt_rows(out: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: usize) {
+    const TILE_J: usize = 8;
+    let rows = out.len() / n;
+    for ib in (0..rows).step_by(TILE_I) {
+        let ilen = TILE_I.min(rows - ib);
+        for jb in (0..n).step_by(TILE_J) {
+            let jlen = TILE_J.min(n - jb);
+            for ii in 0..ilen {
+                let arow = &a[(i0 + ib + ii) * k..][..k];
+                let orow = &mut out[(ib + ii) * n..(ib + ii + 1) * n];
+                for j in jb..jb + jlen {
+                    orow[j] = dot(arow, &b[j * k..(j + 1) * k]) as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Reference `a[m,k] @ b[k,n]`: the naive triple loop with a per-row f64
+/// accumulator. Ground truth for the tiled kernels and the baseline the
+/// runtime bench measures speedups against.
+pub fn matmul_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
@@ -118,8 +390,8 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
-/// `a[m,k]^T @ b[m,n] -> [k,n]` (weight-gradient shape), f64 accumulator.
-pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Reference `a[m,k]^T @ b[m,n] -> [k,n]` (see [`matmul_naive`]).
+pub fn matmul_tn_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), m * n);
     let mut acc = vec![0.0f64; k * n];
@@ -139,9 +411,8 @@ pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     acc.iter().map(|&v| v as f32).collect()
 }
 
-/// `a[m,k] @ b[n,k]^T -> [m,n]` (input-gradient shape): both operands are
-/// walked along contiguous rows, so this is a dot per output element.
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Reference `a[m,k] @ b[n,k]^T -> [m,n]` (see [`matmul_naive`]).
+pub fn matmul_nt_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), n * k);
     let mut out = vec![0.0f32; m * n];
@@ -190,8 +461,30 @@ pub fn im2col(
     ho: usize,
     wo: usize,
 ) -> Vec<f32> {
-    assert_eq!(x.len(), bsz * h * w * c);
     let mut cols = vec![0.0f32; bsz * ho * wo * k * k * c];
+    im2col_into(&mut cols, x, bsz, h, w, c, k, stride, pad, ho, wo);
+    cols
+}
+
+/// [`im2col`] writing into a caller-provided (arena) buffer; the buffer is
+/// re-zeroed here, so it may carry stale values.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    cols: &mut [f32],
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+) {
+    assert_eq!(x.len(), bsz * h * w * c);
+    assert_eq!(cols.len(), bsz * ho * wo * k * k * c);
+    zero(cols);
     let rowlen = k * k * c;
     for bi in 0..bsz {
         for oh in 0..ho {
@@ -215,7 +508,6 @@ pub fn im2col(
             }
         }
     }
-    cols
 }
 
 /// Transpose of [`im2col`]: scatter-add column gradients back onto the
@@ -233,8 +525,30 @@ pub fn col2im(
     ho: usize,
     wo: usize,
 ) -> Vec<f32> {
-    assert_eq!(gcols.len(), bsz * ho * wo * k * k * c);
     let mut gx = vec![0.0f32; bsz * h * w * c];
+    col2im_into(&mut gx, gcols, bsz, h, w, c, k, stride, pad, ho, wo);
+    gx
+}
+
+/// [`col2im`] writing into a caller-provided (arena) buffer; the buffer is
+/// re-zeroed here before the scatter-add, so it may carry stale values.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_into(
+    gx: &mut [f32],
+    gcols: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+) {
+    assert_eq!(gcols.len(), bsz * ho * wo * k * k * c);
+    assert_eq!(gx.len(), bsz * h * w * c);
+    zero(gx);
     let rowlen = k * k * c;
     for bi in 0..bsz {
         for oh in 0..ho {
@@ -258,7 +572,6 @@ pub fn col2im(
             }
         }
     }
-    gx
 }
 
 // -------------------------------------------------------- normalizations
@@ -698,6 +1011,113 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Serializes the tests that mutate the process-global thread budget:
+    /// cargo runs #[test]s concurrently in one binary, so without this a
+    /// concurrent set_threads() could retarget a sibling's labeled runs.
+    static THREAD_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn prop_tiled_matmuls_match_naive_reference_across_thread_counts() {
+        // the tiled/threaded kernels against the naive f64 triple loops,
+        // over random shapes — including row counts large enough to cross
+        // tile borders and the thread-spawn threshold — at 1/2/4 workers
+        let _guard = THREAD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = configured_threads();
+        for &threads in &[1usize, 2, 4] {
+            set_threads(threads);
+            prop::check(
+                12,
+                |g| {
+                    // every few cases, a shape big enough to actually spawn
+                    let big = g.f32_in(0.0, 1.0) < 0.4;
+                    let m = if big { 64 + g.size(512) } else { g.size(40) };
+                    let k = g.size(if big { 96 } else { 24 });
+                    let n = g.size(if big { 48 } else { 24 });
+                    let mut a = g.vec_normal(m * k, 1.0);
+                    // real inputs are relu-sparse: exercise the zero-skip
+                    for v in a.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                    let b = g.vec_normal(k * n, 1.0);
+                    let c = g.vec_normal(m * n, 1.0);
+                    let bt = g.vec_normal(n * k, 1.0);
+                    (m, k, n, a, b, c, bt)
+                },
+                |(m, k, n, a, b, c, bt)| {
+                    let (m, k, n) = (*m, *k, *n);
+                    let pairs = [
+                        ("matmul", matmul(a, b, m, k, n), matmul_naive(a, b, m, k, n)),
+                        ("matmul_tn", matmul_tn(a, c, m, k, n), matmul_tn_naive(a, c, m, k, n)),
+                        ("matmul_nt", matmul_nt(a, bt, m, k, n), matmul_nt_naive(a, bt, m, k, n)),
+                    ];
+                    for (name, got, want) in &pairs {
+                        for i in 0..want.len() {
+                            if (got[i] - want[i]).abs() > 1e-6 * (1.0 + want[i].abs()) {
+                                return Err(format!(
+                                    "{name}[{i}] (threads={threads}, m={m} k={k} n={n}): \
+                                     tiled {} vs naive {}",
+                                    got[i], want[i]
+                                ));
+                            }
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+        set_threads(prev);
+    }
+
+    #[test]
+    fn tiled_matmuls_are_bitwise_thread_count_invariant() {
+        // the determinism contract: identical bits at every worker count
+        let _guard = THREAD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = configured_threads();
+        let mut rng = crate::util::rng::Rng::new(17);
+        let (m, k, n) = (300, 70, 40);
+        let mut a = vec![0.0f32; m * k];
+        rng.fill_normal(&mut a, 1.0);
+        let mut b = vec![0.0f32; k * n];
+        rng.fill_normal(&mut b, 1.0);
+        let mut c = vec![0.0f32; m * n];
+        rng.fill_normal(&mut c, 1.0);
+        let mut bt = vec![0.0f32; n * k];
+        rng.fill_normal(&mut bt, 1.0);
+        set_threads(1);
+        let base = (
+            matmul(&a, &b, m, k, n),
+            matmul_tn(&a, &c, m, k, n),
+            matmul_nt(&a, &bt, m, k, n),
+        );
+        for threads in [2usize, 3, 4, 8] {
+            set_threads(threads);
+            assert_eq!(base.0, matmul(&a, &b, m, k, n), "matmul @ {threads} threads");
+            assert_eq!(base.1, matmul_tn(&a, &c, m, k, n), "matmul_tn @ {threads} threads");
+            assert_eq!(base.2, matmul_nt(&a, &bt, m, k, n), "matmul_nt @ {threads} threads");
+        }
+        // serial_scope pins nested kernels to one thread, same bits
+        set_threads(4);
+        let nested = serial_scope(|| matmul(&a, &b, m, k, n));
+        assert_eq!(base.0, nested);
+        set_threads(prev);
+    }
+
+    #[test]
+    fn im2col_into_reuses_dirty_buffers() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        let (bsz, h, w, c, k, stride) = (2, 5, 4, 3, 3, 1);
+        let (ho, pad) = conv_out_dim(h, k, stride, true);
+        let (wo, _) = conv_out_dim(w, k, stride, true);
+        let mut x = vec![0.0f32; bsz * h * w * c];
+        rng.fill_normal(&mut x, 1.0);
+        let want = im2col(&x, bsz, h, w, c, k, stride, pad, ho, wo);
+        let mut dirty = vec![7.0f32; want.len()];
+        im2col_into(&mut dirty, &x, bsz, h, w, c, k, stride, pad, ho, wo);
+        assert_eq!(want, dirty);
     }
 
     /// Naive direct convolution (independent of the im2col path).

@@ -1,0 +1,81 @@
+//! Planned-executor integration tests: the thread-count determinism
+//! contract of the shared training/deployment forward core.
+//!
+//! The tiled GEMM kernels (`tensor/ops.rs`) partition output rows across
+//! `GETA_THREADS` workers with a partition-independent accumulation
+//! order, so *everything downstream* — training loss curves, gradients,
+//! eval logits, deployed inference — must be bit-identical at any worker
+//! count. These tests pin that end to end; the per-kernel property tests
+//! live next to the kernels.
+
+mod common;
+
+use common::art_dir;
+use geta::config::ExperimentConfig;
+use geta::coordinator::Trainer;
+use geta::runtime::Backend as _;
+use geta::tensor;
+
+/// A short SGD run: the per-step loss curve and the final eval logits.
+fn short_run(model: &str, threads: usize) -> (Vec<f32>, Vec<f32>) {
+    tensor::set_threads(threads);
+    let exp = ExperimentConfig::defaults_for(model);
+    let t = Trainer::new(&art_dir(), exp).unwrap();
+    let mut params = t.engine.init_params(3);
+    let q = t.engine.init_qparams(&params, 8.0);
+    let idxs: Vec<usize> = (0..t.batch_size()).collect();
+    let (x, y) = t.train_data.batch(&idxs);
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let out = t.engine.train_step(&params, &q, &x, &y).unwrap();
+        losses.push(out.loss);
+        for (ti, g) in out.grads.tensors.iter().enumerate() {
+            for (i, gv) in g.data.iter().enumerate() {
+                params.tensors[ti].data[i] -= 0.05 * gv;
+            }
+        }
+    }
+    let (ex, ey) = t.eval_data.batch(&idxs);
+    let logits = t.engine.eval_logits(&params, &q, &ex, &ey).unwrap();
+    (losses, logits)
+}
+
+#[test]
+fn training_and_logits_are_bit_identical_across_thread_counts() {
+    // mlp + resnet e2e at 1 vs 4 worker threads: loss curves and logits
+    // must agree to the last bit (== on f32, no tolerance)
+    let prev = tensor::configured_threads();
+    for model in ["mlp_tiny", "resnet_mini"] {
+        let (l1, g1) = short_run(model, 1);
+        let (l4, g4) = short_run(model, 4);
+        assert_eq!(l1, l4, "{model}: training loss curve changed with thread count");
+        assert!(!g1.is_empty(), "{model}: no logits");
+        assert_eq!(g1, g4, "{model}: eval logits changed with thread count");
+    }
+    tensor::set_threads(prev);
+}
+
+#[test]
+fn repeated_steps_reuse_the_engine_arena() {
+    // same engine, same inputs, many steps: the arena recycles buffers
+    // across steps, which must never change results
+    let exp = ExperimentConfig::defaults_for("vgg7_mini");
+    let t = Trainer::new(&art_dir(), exp).unwrap();
+    let params = t.engine.init_params(5);
+    let q = t.engine.init_qparams(&params, 8.0);
+    let idxs: Vec<usize> = (0..t.batch_size()).collect();
+    let (x, y) = t.train_data.batch(&idxs);
+    let first = t.engine.train_step(&params, &q, &x, &y).unwrap();
+    for _ in 0..3 {
+        let again = t.engine.train_step(&params, &q, &x, &y).unwrap();
+        assert_eq!(first.loss, again.loss, "arena reuse changed the loss");
+        for (a, b) in first.grads.tensors.iter().zip(&again.grads.tensors) {
+            assert_eq!(a.data, b.data, "arena reuse changed gradient {}", a.name);
+        }
+    }
+    // interleave an eval pass (different buffer shapes through the same
+    // arena), then train again: still identical
+    t.engine.eval_step(&params, &q, &x, &y).unwrap();
+    let after = t.engine.train_step(&params, &q, &x, &y).unwrap();
+    assert_eq!(first.loss, after.loss);
+}
