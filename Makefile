@@ -13,8 +13,10 @@ test:
 
 # machine-readable perf log: runs the runtime bench (train/eval step
 # latency, naive-vs-tiled GEMM on resnet/vit @ batch 32, dense-vs-.geta
-# inference) and writes BENCH_runtime.json at the repo root. CI uploads
-# the file as a workflow artifact so the perf trajectory is tracked.
+# inference through the f32-dequant and int8 kernels) and writes
+# BENCH_runtime.json (gitignored, CI-uploaded) plus the checked-in
+# BENCH_deploy.json summary at the repo root, so the deployment perf
+# trajectory is diffable across PRs.
 bench-json:
 	cargo bench --bench bench_runtime
 

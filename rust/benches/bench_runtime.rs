@@ -62,34 +62,43 @@ fn main() {
             g.thread_invariant,
         );
     }
-    // deployed inference: dense f32 vs the exported .geta artifact
+    // deployed inference: dense f32 vs the exported .geta artifact,
+    // through both compute kernels — f32-dequant and integer-domain i8
     // (brief training first so the compressed engine has real pruning)
     let threads = geta::tensor::configured_threads();
     let mut deploy = Vec::new();
     for (model, scale) in [("mlp_tiny", 0.1), ("resnet_mini", 0.1), ("vit_mini", 0.05)] {
         match geta::report::bench_deploy(&art, model, scale, 0.5, b.iters.min(10), threads) {
-            Ok(r) => {
-                println!(
-                    "{:<44} dense {:>8.2} ms/b  .geta {:>8.2} ms/b  speedup {:>5.2}x  \
-                     disk {:>7.1} KiB ({:.2}x smaller, {} threads)",
-                    format!("deploy_infer/{model}"),
-                    r.dense_ms,
-                    r.compressed_ms,
-                    r.dense_ms / r.compressed_ms.max(1e-9),
-                    r.disk_bytes as f64 / 1024.0,
-                    r.dense_bytes as f64 / r.disk_bytes.max(1) as f64,
-                    r.threads,
-                );
-                deploy.push(r);
+            Ok(rows) => {
+                for r in &rows {
+                    println!(
+                        "{:<44} dense {:>8.2} ms/b  .geta {:>8.2} ms/b  speedup {:>5.2}x  \
+                         disk {:>7.1} KiB ({:.2}x smaller, {} threads)",
+                        format!("deploy_infer/{model}[{}]", r.kernel),
+                        r.dense_ms,
+                        r.compressed_ms,
+                        r.dense_ms / r.compressed_ms.max(1e-9),
+                        r.disk_bytes as f64 / 1024.0,
+                        r.dense_bytes as f64 / r.disk_bytes.max(1) as f64,
+                        r.threads,
+                    );
+                }
+                deploy.extend(rows);
             }
             Err(e) => eprintln!("skipping deploy bench {model}: {e}"),
         }
     }
-    // machine-readable perf trail
+    // machine-readable perf trail: the full log (gitignored, uploaded by
+    // CI) plus the checked-in deployment summary
     let json_path = geta::report::bench_json_path();
     match geta::report::write_bench_runtime_json(&json_path, &gemm, &deploy) {
         Ok(()) => println!("wrote {}", json_path.display()),
         Err(e) => eprintln!("failed to write BENCH_runtime.json: {e}"),
+    }
+    let deploy_path = geta::report::bench_deploy_json_path();
+    match geta::report::write_bench_deploy_json(&deploy_path, &deploy) {
+        Ok(()) => println!("wrote {}", deploy_path.display()),
+        Err(e) => eprintln!("failed to write BENCH_deploy.json: {e}"),
     }
     std::fs::create_dir_all("reports").ok();
     b.write_log(std::path::Path::new("reports/bench_runtime.json")).ok();

@@ -1,20 +1,35 @@
 //! Packed-integer inference engine: executes an exported `.geta` model
 //! over the **shrunk** (kept-channel-sliced) shapes.
 //!
-//! Load path: parse the container, dequantize every packed weight once
-//! (`level * d` — bit-identical to the fake-quantized weights the training
-//! interpreter multiplies), re-lower the embedded config through
-//! `runtime::lowering`, shrink the program's shapes to the sliced
-//! parameter store via `subnet::propagate_slices`, then build a
-//! shape-resolved `exec::Plan` for the inference micro-batch size.
+//! Load path: parse the container, unpack every packed weight's levels
+//! once, re-lower the embedded config through `runtime::lowering`, shrink
+//! the program's shapes to the sliced parameter store via
+//! `subnet::propagate_slices`, then build a shape-resolved `exec::Plan`
+//! for the inference micro-batch size. What the unpacked levels become
+//! depends on the engine's [`KernelKind`]:
+//!
+//! * [`KernelKind::F32`] — dequantize to f32 at load (`level * d`,
+//!   bit-identical to the fake-quantized weights the training interpreter
+//!   multiplies) and run the f32 kernels. The historical deploy path and
+//!   the baseline the integer path is benchmarked against.
+//! * [`KernelKind::Int8`] — weights whose levels fit i8 are **never
+//!   dequantized**: they load straight into resident i8 level tensors
+//!   (`tensor::IntWeight`; the parameter store keeps a shape-only
+//!   placeholder for slice propagation, which reads weight shapes only)
+//!   and multiply through the integer kernels in `tensor/iops.rs`: i8×i8
+//!   with exact i32
+//!   accumulation where the input carries activation-quant levels, mixed
+//!   f32×i8 elsewhere, the dequantization scales folded into the
+//!   epilogue. Sites whose levels exceed i8 fall back to the f32 path
+//!   per tensor.
 //!
 //! The forward pass is `runtime::exec::forward` with a
-//! [`exec::DeployParams`] source — **the same op kernels the training
-//! interpreter runs**, so the two execution paths cannot drift apart.
-//! There is no per-op math in this file. Inference-only differences live
-//! entirely in the parameter source: no per-step weight fake-quant (the
-//! packed weights were dequantized at load) and activation sites applied
-//! with their learned (d, t, q_m) container rows.
+//! [`exec::DeployParams`] (f32) or [`exec::QuantizedParams`] (int8)
+//! source — **the same op kernels the training interpreter runs** plus
+//! the integer GEMMs, so the execution paths cannot drift apart. There is
+//! no per-op math in this file. Inference-only differences live entirely
+//! in the parameter source: no per-step weight fake-quant and activation
+//! sites applied with their learned (d, t, q_m) container rows.
 //!
 //! Batching: [`GetaEngine::infer`] splits the input into micro-batches
 //! (default: the family's training batch size) and shards those
@@ -30,15 +45,17 @@
 //! collapses to one chunk instead lets the kernels use the full
 //! `GETA_THREADS` budget.
 
+use std::collections::BTreeMap;
+
 use anyhow::{Context, Result};
 
 use super::format::{GetaContainer, Payload, SiteKind};
 use crate::graph::builders;
 use crate::quant::QParams;
-use crate::runtime::exec::{self, Arena, DeployParams, Input, Plan};
+use crate::runtime::exec::{self, Arena, DeployParams, Input, ParamSource, Plan, QuantizedParams};
 use crate::runtime::lowering::{self, OpKind, Program};
 use crate::runtime::HostArray;
-use crate::tensor::{self, ParamStore, Tensor};
+use crate::tensor::{self, IntWeight, ParamStore, Tensor};
 use crate::util::json::Json;
 
 /// Input dtype the loaded model expects.
@@ -46,6 +63,25 @@ use crate::util::json::Json;
 pub enum InputKind {
     F32,
     I32,
+}
+
+/// Which compute path the engine runs (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Dequantize packed weights to f32 at load; f32 GEMMs.
+    F32,
+    /// Keep eligible weights resident as i8 levels; integer GEMMs.
+    Int8,
+}
+
+impl KernelKind {
+    /// Stable machine-readable label (`BENCH_runtime.json` `kernel` field).
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelKind::F32 => "f32",
+            KernelKind::Int8 => "int8",
+        }
+    }
 }
 
 pub struct GetaEngine {
@@ -58,6 +94,14 @@ pub struct GetaEngine {
     /// Shape-resolved plan for `micro_batch`, built once at load.
     plan: Plan,
     weights: ParamStore,
+    /// i8-resident weight tensors (Int8 kernel only; empty otherwise).
+    /// Tensors present here keep only their shape in `weights`.
+    iweights: BTreeMap<String, IntWeight>,
+    /// Quant site the container recorded per packed tensor — the executor
+    /// validates its requests against this map.
+    weight_sites: BTreeMap<String, usize>,
+    /// Which compute path `forward_chunk` selects.
+    pub kernel: KernelKind,
     /// Learned activation-quant parameters by q-row (None = weight site or
     /// quantization disabled, as in the dense-f32 baseline engine).
     act_q: Vec<Option<QParams>>,
@@ -80,10 +124,22 @@ impl GetaEngine {
         Self::from_container(&GetaContainer::read(path)?)
     }
 
-    /// Build the engine from a parsed container: dequantize, re-lower,
+    /// [`load`](Self::load) with an explicit compute path (`geta infer
+    /// --int8`).
+    pub fn load_kernel(path: &std::path::Path, kernel: KernelKind) -> Result<GetaEngine> {
+        Self::from_container_kernel(&GetaContainer::read(path)?, kernel)
+    }
+
+    /// Build the f32-dequant engine from a parsed container (the
+    /// historical default path).
+    pub fn from_container(c: &GetaContainer) -> Result<GetaEngine> {
+        Self::from_container_kernel(c, KernelKind::F32)
+    }
+
+    /// Build the engine from a parsed container: unpack, re-lower,
     /// shrink. Site metadata is cross-checked against the config's own
     /// plan-order sites so a tampered container cannot mis-map q rows.
-    pub fn from_container(c: &GetaContainer) -> Result<GetaEngine> {
+    pub fn from_container_kernel(c: &GetaContainer, kernel: KernelKind) -> Result<GetaEngine> {
         let config = c.config()?;
         let sites = builders::quant_site_specs(&config)?;
         anyhow::ensure!(
@@ -107,16 +163,21 @@ impl GetaEngine {
             anyhow::ensure!(rec.kind == want, "site {i} (`{}`): kind mismatch", rec.name);
         }
         let mut weights = ParamStore::new();
+        let mut weight_sites = BTreeMap::new();
+        let mut iweights = BTreeMap::new();
         for t in &c.tensors {
-            let data = match &t.payload {
-                Payload::F32(v) => v.clone(),
-                Payload::Packed {
-                    site,
-                    min_level,
-                    pack_bits,
-                    bytes,
-                    numel,
-                } => {
+            match &t.payload {
+                Payload::F32(v) => {
+                    anyhow::ensure!(
+                        v.len() == t.numel(),
+                        "tensor `{}`: {} values for shape {:?}",
+                        t.name,
+                        v.len(),
+                        t.shape
+                    );
+                    weights.push(Tensor::from_vec(&t.name, &t.shape, v.clone()));
+                }
+                Payload::Packed { site, .. } => {
                     // the site must be the one whose param names this tensor,
                     // or a swapped site index would dequantize with the wrong
                     // step d and produce silently wrong weights
@@ -129,19 +190,40 @@ impl GetaEngine {
                         c.sites[*site as usize].name
                     );
                     let d = c.sites[*site as usize].q.d;
-                    let levels =
-                        super::format::unpack_levels(bytes, *numel, *min_level, *pack_bits)?;
-                    levels.iter().map(|&l| l as f32 * d).collect()
+                    let levels = t.payload.levels()?.expect("packed payload has levels");
+                    anyhow::ensure!(
+                        levels.len() == t.numel(),
+                        "tensor `{}`: {} levels for shape {:?}",
+                        t.name,
+                        levels.len(),
+                        t.shape
+                    );
+                    weight_sites.insert(t.name.clone(), *site as usize);
+                    let n = t.shape.last().copied().unwrap_or(0);
+                    let resident = if kernel == KernelKind::Int8 {
+                        IntWeight::from_levels(&levels, n, d)
+                    } else {
+                        None
+                    };
+                    match resident {
+                        Some(iw) => {
+                            // i8-resident: never dequantized. The store keeps
+                            // a shape-only placeholder — slice propagation
+                            // below reads weight *shapes* only, and the
+                            // executor reaches this tensor exclusively
+                            // through `weight_i8` / the iweights fallback.
+                            iweights.insert(t.name.clone(), iw);
+                            weights.push(Tensor::shape_only(&t.name, &t.shape));
+                        }
+                        // f32 kernel, or levels beyond i8: dequantize once
+                        None => weights.push(Tensor::from_vec(
+                            &t.name,
+                            &t.shape,
+                            levels.iter().map(|&l| l as f32 * d).collect(),
+                        )),
+                    }
                 }
-            };
-            anyhow::ensure!(
-                data.len() == t.numel(),
-                "tensor `{}`: {} values for shape {:?}",
-                t.name,
-                data.len(),
-                t.shape
-            );
-            weights.push(Tensor::from_vec(&t.name, &t.shape, data));
+            }
         }
         let base = lowering::lower(&config, &sites, 1)?;
         let program = crate::subnet::propagate_slices(&base, &weights)
@@ -161,6 +243,9 @@ impl GetaEngine {
             program,
             plan,
             weights,
+            iweights,
+            weight_sites,
+            kernel,
             act_q,
             apply_act_quant: true,
             micro_batch,
@@ -185,12 +270,21 @@ impl GetaEngine {
             program,
             plan,
             weights: params,
+            iweights: BTreeMap::new(),
+            weight_sites: BTreeMap::new(),
+            kernel: KernelKind::F32,
             act_q: vec![None; sites.len()],
             apply_act_quant: false,
             micro_batch,
             threads: tensor::configured_threads(),
             arena: std::sync::Mutex::new(Arena::new()),
         })
+    }
+
+    /// How many weight tensors are resident as i8 levels (0 for the f32
+    /// kernel, or when every site trained past 8 bits).
+    pub fn int_sites(&self) -> usize {
+        self.iweights.len()
     }
 
     pub fn program(&self) -> &Program {
@@ -306,10 +400,27 @@ impl GetaEngine {
     /// planned executor. The engine's prebuilt plan serves full
     /// micro-batches; a tail chunk resolves a one-off plan for its size.
     fn forward_chunk(&self, x: &Input<'_>, bsz: usize, arena: &mut Arena) -> Result<Vec<f32>> {
-        let src = DeployParams {
-            weights: &self.weights,
-            act_q: &self.act_q,
-            apply_act_quant: self.apply_act_quant,
+        let f32_src;
+        let int_src;
+        let src: &dyn ParamSource = match self.kernel {
+            KernelKind::F32 => {
+                f32_src = DeployParams {
+                    weights: &self.weights,
+                    act_q: &self.act_q,
+                    apply_act_quant: self.apply_act_quant,
+                    weight_sites: &self.weight_sites,
+                };
+                &f32_src
+            }
+            KernelKind::Int8 => {
+                int_src = QuantizedParams {
+                    weights: &self.weights,
+                    iweights: &self.iweights,
+                    weight_sites: &self.weight_sites,
+                    act_q: &self.act_q,
+                };
+                &int_src
+            }
         };
         let tail_plan;
         let plan = if bsz == self.plan.bsz {
@@ -318,7 +429,7 @@ impl GetaEngine {
             tail_plan = Plan::new(&self.program, bsz);
             &tail_plan
         };
-        let (mut vals, _aux) = exec::forward(&self.program, plan, &src, x, false, arena)?;
+        let (mut vals, _aux) = exec::forward(&self.program, plan, src, x, false, arena)?;
         let out = std::mem::take(vals.last_mut().expect("program has at least one node"));
         arena.reclaim_all(vals);
         Ok(out)

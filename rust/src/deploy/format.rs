@@ -77,6 +77,25 @@ pub enum Payload {
     },
 }
 
+impl Payload {
+    /// Unpacked integer levels of a packed payload (`None` for raw f32).
+    /// One shared decode for every consumer of the read path — the f32
+    /// dequantizer and the int8 engine's resident level tensors both go
+    /// through this, so they cannot disagree about the bit layout.
+    pub fn levels(&self) -> Result<Option<Vec<i32>>> {
+        match self {
+            Payload::F32(_) => Ok(None),
+            Payload::Packed {
+                min_level,
+                pack_bits,
+                bytes,
+                numel,
+                ..
+            } => Ok(Some(unpack_levels(bytes, *numel, *min_level, *pack_bits)?)),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TensorRecord {
     pub name: String,

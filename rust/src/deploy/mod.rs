@@ -8,12 +8,16 @@
 //! * [`format`] — the versioned little-endian `.geta` container:
 //!   kept-channel-sliced shapes, bit-packed integer weights at each site's
 //!   learned bit width, per-site (d, t, q_m), strict reader.
-//! * [`engine`] — [`GetaEngine`]: dequantize-on-load, then the **shared
-//!   planned executor** (`runtime::exec` — the same tiled, multi-threaded
-//!   op kernels the training interpreter runs) over the slice-propagated
-//!   program (`subnet::propagate_slices`), batched `infer` with
-//!   `std::thread` micro-batch sharding, plus a dense-f32 baseline over
-//!   the same executor for honest speedup numbers.
+//! * [`engine`] — [`GetaEngine`]: the **shared planned executor**
+//!   (`runtime::exec` — the same tiled, multi-threaded op kernels the
+//!   training interpreter runs) over the slice-propagated program
+//!   (`subnet::propagate_slices`), batched `infer` with `std::thread`
+//!   micro-batch sharding, plus a dense-f32 baseline over the same
+//!   executor for honest speedup numbers. Two compute paths
+//!   ([`KernelKind`]): dequantize-on-load f32, or the integer path that
+//!   keeps ≤8-bit weight sites resident as i8 levels and multiplies them
+//!   through the `tensor/iops.rs` integer GEMMs (i8×i8 with exact i32
+//!   accumulation at activation-quant-fed nodes, mixed f32×i8 elsewhere).
 //! * [`export_compressed`] / [`export_to_file`] — the bridge from
 //!   `subnet::construct`'s `CompressedModel` to the container.
 //!
@@ -29,7 +33,7 @@
 pub mod engine;
 pub mod format;
 
-pub use engine::GetaEngine;
+pub use engine::{GetaEngine, KernelKind};
 pub use format::{GetaContainer, Payload, SiteKind, SiteRecord, TensorRecord};
 
 use anyhow::Result;
@@ -210,6 +214,26 @@ mod tests {
                 masked[i]
             );
         }
+
+        // the integer compute path must hold the same parity bar: weights
+        // stay resident as i8 levels (6-bit init — every site eligible)
+        // and the GEMMs run in the integer domain
+        let int_engine = GetaEngine::from_container_kernel(&container, KernelKind::Int8).unwrap();
+        assert_eq!(int_engine.kernel, KernelKind::Int8);
+        assert!(
+            int_engine.int_sites() > 0,
+            "no weight became i8-resident at 6-bit init"
+        );
+        let got_int = int_engine.infer(&x).unwrap();
+        assert_eq!(got_int.len(), masked.len());
+        for i in 0..got_int.len() {
+            assert!(
+                (got_int[i] - masked[i]).abs() <= 1e-4 * (1.0 + masked[i].abs()),
+                "int8 logit[{i}]: {} vs masked {}",
+                got_int[i],
+                masked[i]
+            );
+        }
         // thread count must not change results (micro-batch sharding only)
         let mut many = GetaEngine::from_container(&container).unwrap();
         many.threads = 4;
@@ -226,6 +250,21 @@ mod tests {
         };
         let b = many.infer(&big).unwrap();
         assert_eq!(a, b, "thread sharding changed results");
+        // integer path: bitwise identical across worker counts too (i32
+        // accumulation is associative; the epilogue is per-element)
+        let ia = {
+            let mut one = GetaEngine::from_container_kernel(&container, KernelKind::Int8).unwrap();
+            one.threads = 1;
+            one.micro_batch = bsz;
+            one.infer(&big).unwrap()
+        };
+        let ib = {
+            let mut four = GetaEngine::from_container_kernel(&container, KernelKind::Int8).unwrap();
+            four.threads = 4;
+            four.micro_batch = bsz;
+            four.infer(&big).unwrap()
+        };
+        assert_eq!(ia, ib, "int8 thread sharding changed results");
 
         // tampering: swapping two packed tensors' site indices must be
         // rejected at load (each would dequantize with the other's step d)

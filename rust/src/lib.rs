@@ -51,7 +51,13 @@
 //! `std::thread` micro-batch sharding — running the **same**
 //! `runtime::exec` forward core as training, with a parity obligation
 //! against the masked interpreter eval (`geta export` / `geta infer` /
-//! `geta bench-infer`).
+//! `geta bench-infer`). Its **integer compute path** (`geta infer
+//! --int8`) keeps ≤8-bit weight sites resident as i8 level tensors and
+//! multiplies them with the integer kernels in `tensor/iops.rs` — i8×i8
+//! with exact i32 accumulation where the input carries activation-quant
+//! levels, mixed f32×i8 elsewhere, the dequantization scales folded into
+//! a per-output-channel epilogue — so the learned bit widths buy measured
+//! wall-clock, not just a BOPs column.
 
 pub mod util;
 pub mod tensor;

@@ -4,9 +4,13 @@
 //!   geta graph  --model <name>                 inspect QADG + search space
 //!   geta train  --model <name> [--sparsity ..] run GETA on one model
 //!   geta export --model <name> [--out f.geta]  train + write a .geta artifact
-//!   geta infer  --file f.geta [--threads N]    run the packed inference engine
-//!   geta bench-infer --model <name> [--json]   dense-f32 vs compressed wall-clock
-//!                                              (--json: BENCH_runtime.json at repo root)
+//!   geta infer  --file f.geta [--int8]         run the packed inference engine
+//!                                              (--int8: integer-domain GEMMs on
+//!                                              resident i8 levels)
+//!   geta bench-infer --model <name> [--json]   dense-f32 vs compressed (f32-dequant
+//!                                              and int8 kernels) wall-clock
+//!                                              (--json: BENCH_runtime.json +
+//!                                              BENCH_deploy.json at repo root)
 //!   geta repro  <table2|..|fig4b|deploy|all>
 //!   geta bench  [--iters N]                    runtime micro-benchmarks
 //!   geta models                                list AOT artifacts
@@ -79,7 +83,7 @@ fn main() -> Result<()> {
                    geta graph --model vgg7_mini\n\
                    geta train --model resnet_mini --sparsity 0.35 --verbose\n\
                    geta export --model resnet_mini --sparsity 0.5 --out resnet.geta\n\
-                   geta infer --file resnet.geta --n 256 --threads 4\n\
+                   geta infer --file resnet.geta --n 256 --threads 4 [--int8]\n\
                    geta bench-infer --model resnet_mini --iters 10 --json\n\
                    geta repro all [--steps-scale 0.2]\n\
                    geta bench --iters 20\n\
@@ -218,7 +222,12 @@ fn cmd_infer(a: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("`geta infer` needs --file <model.geta>"))?;
     // --threads was already folded into the process-wide budget in main();
     // the engine picks it up via tensor::configured_threads()
-    let engine = geta::deploy::GetaEngine::load(std::path::Path::new(file))?;
+    let kernel = if a.flag("int8") {
+        geta::deploy::KernelKind::Int8
+    } else {
+        geta::deploy::KernelKind::F32
+    };
+    let engine = geta::deploy::GetaEngine::load_kernel(std::path::Path::new(file), kernel)?;
     let n = a.usize_or("n", 256);
     // only the eval split is used: keep the discarded train split minimal
     let (_, eval) = geta::data::SynthData::for_model(engine.config(), 1, n.max(1), 1);
@@ -229,11 +238,17 @@ fn cmd_infer(a: &Args) -> Result<()> {
     let ms = t0.elapsed().as_secs_f64() * 1e3;
     let samples = eval.len();
     println!(
-        "{} ({}): {samples} samples in {ms:.2} ms ({:.0} samples/s, {} threads)",
+        "{} ({}): {samples} samples in {ms:.2} ms ({:.0} samples/s, {} threads, {} kernel{})",
         engine.model,
         engine.task,
         samples as f64 / (ms / 1e3).max(1e-9),
         engine.threads,
+        kernel.label(),
+        if kernel == geta::deploy::KernelKind::Int8 {
+            format!(", {} i8-resident weights", engine.int_sites())
+        } else {
+            String::new()
+        },
     );
     if engine.task == "image_cls" {
         let ncls = engine.output_per_sample();
@@ -266,30 +281,50 @@ fn cmd_bench_infer(a: &Args) -> Result<()> {
     // default to the process-wide budget so --threads / GETA_THREADS mean
     // the same thing here as in `make bench-json` and the JSON rows agree
     let threads = a.usize_or("threads", geta::tensor::configured_threads());
-    let r = geta::report::bench_deploy(&art_dir(a), &model, scale, sparsity, iters, threads)?;
+    let rows = geta::report::bench_deploy(&art_dir(a), &model, scale, sparsity, iters, threads)?;
+    let r0 = &rows[0];
     println!(
         "\nbench-infer {model} (batch {}, {iters} iters, best-of):\n\
-         \x20 dense f32   {:>8.2} ms/batch   {:>8.1} KiB params\n\
-         \x20 .geta       {:>8.2} ms/batch   {:>8.1} KiB on disk\n\
-         \x20 speedup {:.2}x   size {:.2}x smaller   rel BOPs {:.2}%   sparsity {:.2}   avg bits {:.1}",
-        r.batch,
-        r.dense_ms,
-        r.dense_bytes as f64 / 1024.0,
-        r.compressed_ms,
-        r.disk_bytes as f64 / 1024.0,
-        r.dense_ms / r.compressed_ms.max(1e-9),
-        r.dense_bytes as f64 / r.disk_bytes.max(1) as f64,
-        r.rel_bops,
-        r.group_sparsity,
-        r.avg_bits,
+         \x20 dense f32   {:>8.2} ms/batch   {:>8.1} KiB params",
+        r0.batch,
+        r0.dense_ms,
+        r0.dense_bytes as f64 / 1024.0,
+    );
+    for r in &rows {
+        println!(
+            "\x20 .geta {:<5} {:>8.2} ms/batch   {:>8.1} KiB on disk   {:.2}x vs dense{}",
+            r.kernel,
+            r.compressed_ms,
+            r.disk_bytes as f64 / 1024.0,
+            r.dense_ms / r.compressed_ms.max(1e-9),
+            if r.kernel == "int8" {
+                format!(
+                    "   {:.2}x vs f32-dequant   {} i8-resident weights",
+                    r0.compressed_ms / r.compressed_ms.max(1e-9),
+                    r.int_sites,
+                )
+            } else {
+                String::new()
+            },
+        );
+    }
+    println!(
+        "\x20 size {:.2}x smaller   rel BOPs {:.2}%   sparsity {:.2}   avg bits {:.1}",
+        r0.dense_bytes as f64 / r0.disk_bytes.max(1) as f64,
+        r0.rel_bops,
+        r0.group_sparsity,
+        r0.avg_bits,
     );
     if a.flag("json") {
-        // machine-readable perf log: this model's deploy row plus the
+        // machine-readable perf log: this model's deploy rows plus the
         // standard resnet/vit batch-32 kernel comparison, so every --json
-        // run re-demonstrates the tiled-vs-naive speedup
+        // run re-demonstrates the tiled-vs-naive speedup; the deploy rows
+        // also land in the checked-in BENCH_deploy.json summary
         let gemm = geta::report::standard_gemm_suite(iters.min(5));
         let path = geta::report::bench_json_path();
-        geta::report::write_bench_runtime_json(&path, &gemm, &[r])?;
+        geta::report::write_bench_runtime_json(&path, &gemm, &rows)?;
+        let dpath = geta::report::bench_deploy_json_path();
+        geta::report::write_bench_deploy_json(&dpath, &rows)?;
         for g in &gemm {
             println!(
                 "  gemm {}@{}: naive {:.2} ms -> tiled {:.2} ms ({:.2}x, {} threads, invariant {})",
@@ -303,6 +338,7 @@ fn cmd_bench_infer(a: &Args) -> Result<()> {
             );
         }
         println!("  wrote {}", path.display());
+        println!("  wrote {}", dpath.display());
     }
     Ok(())
 }

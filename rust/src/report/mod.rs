@@ -12,7 +12,7 @@ use crate::baselines::{self, LlmPruneStyle};
 use crate::config::ExperimentConfig;
 use crate::runtime::Backend as _;
 use crate::coordinator::{Compressor as _, GetaCompressor, RunResult, Trainer};
-use crate::deploy::{self, GetaEngine};
+use crate::deploy::{self, GetaEngine, KernelKind};
 use crate::graph;
 use crate::optim::qasso::StageMask;
 use crate::util::table::Table;
@@ -412,29 +412,32 @@ impl ReportCtx {
     // ------------------------------------------------------------ deploy
     /// Measured deployment table: on-disk `.geta` bytes and inference
     /// wall-clock next to the theoretical rel-BOPs, dense-f32 vs
-    /// compressed, through the same executor (`deploy::GetaEngine`).
+    /// compressed, through the same executor (`deploy::GetaEngine`) —
+    /// one row per compute kernel (f32-dequant and int8).
     pub fn deploy(&mut self) -> Result<Vec<DeployBench>> {
         let mut rows = Vec::new();
         let mut tbl = Table::new(
             "Deployment — .geta artifact vs dense f32 (measured)",
             &[
-                "model", "rel BOPs %", "dense KiB", ".geta KiB", "size x",
+                "model", "kernel", "rel BOPs %", "dense KiB", ".geta KiB", "size x",
                 "dense ms/b", "geta ms/b", "speedup",
             ],
         );
         for model in ["mlp_tiny", "resnet_mini"] {
-            let r = bench_deploy(&self.art_dir, model, self.scale, 0.5, 5, 1)?;
-            tbl.row(vec![
-                r.model.clone(),
-                format!("{:.2}", r.rel_bops),
-                format!("{:.1}", r.dense_bytes as f64 / 1024.0),
-                format!("{:.1}", r.disk_bytes as f64 / 1024.0),
-                format!("{:.2}", r.dense_bytes as f64 / r.disk_bytes.max(1) as f64),
-                format!("{:.2}", r.dense_ms),
-                format!("{:.2}", r.compressed_ms),
-                format!("{:.2}", r.dense_ms / r.compressed_ms.max(1e-9)),
-            ]);
-            rows.push(r);
+            for r in bench_deploy(&self.art_dir, model, self.scale, 0.5, 5, 1)? {
+                tbl.row(vec![
+                    r.model.clone(),
+                    r.kernel.clone(),
+                    format!("{:.2}", r.rel_bops),
+                    format!("{:.1}", r.dense_bytes as f64 / 1024.0),
+                    format!("{:.1}", r.disk_bytes as f64 / 1024.0),
+                    format!("{:.2}", r.dense_bytes as f64 / r.disk_bytes.max(1) as f64),
+                    format!("{:.2}", r.dense_ms),
+                    format!("{:.2}", r.compressed_ms),
+                    format!("{:.2}", r.dense_ms / r.compressed_ms.max(1e-9)),
+                ]);
+                rows.push(r);
+            }
         }
         self.finish("deploy", tbl);
         Ok(rows)
@@ -450,10 +453,15 @@ impl ReportCtx {
     }
 }
 
-/// One measured deployment comparison (the `geta bench-infer` payload).
+/// One measured deployment comparison (the `geta bench-infer` payload) —
+/// one row per (model, compute kernel).
 #[derive(Debug, Clone)]
 pub struct DeployBench {
     pub model: String,
+    /// Compute path of the compressed engine: `"f32"` (dequantize at
+    /// load) or `"int8"` (resident i8 levels, integer GEMMs). Stable
+    /// machine-readable discriminator for downstream tooling.
+    pub kernel: String,
     /// Theoretical relative BOPs of the exported subnet (%).
     pub rel_bops: f64,
     /// Dense f32 parameter bytes of the original architecture.
@@ -469,12 +477,21 @@ pub struct DeployBench {
     pub threads: usize,
     pub group_sparsity: f64,
     pub avg_bits: f64,
+    /// Weight tensors resident as i8 levels (0 on the f32 kernel).
+    pub int_sites: usize,
 }
 
 /// Train briefly, export a `.geta` artifact, and time one eval batch
 /// through the dense-f32 engine vs the compressed engine (same executor,
-/// same micro-batch, best of `iters` runs). This is the measured
-/// counterpart to the BOPs column in every paper table.
+/// same micro-batch, best of `iters` runs) — once per compute kernel, so
+/// the returned rows compare dense vs f32-dequant vs int8 on the same
+/// container. This is the measured counterpart to the BOPs column in
+/// every paper table.
+///
+/// The bit upper bound is capped at 8 for these runs: the integer path
+/// serves i8 levels, and the deployment comparison is about that regime —
+/// a site trained past 8 bits would silently fall back to f32 and measure
+/// nothing.
 pub fn bench_deploy(
     art_dir: &std::path::Path,
     model: &str,
@@ -482,7 +499,7 @@ pub fn bench_deploy(
     sparsity: f64,
     iters: usize,
     threads: usize,
-) -> Result<DeployBench> {
+) -> Result<Vec<DeployBench>> {
     let mut exp = ExperimentConfig::defaults_for(model);
     exp.scale_steps(steps_scale);
     exp.n_train = exp.n_train.min(512);
@@ -490,6 +507,9 @@ pub fn bench_deploy(
     if sparsity > 0.0 {
         exp.qasso.target_group_sparsity = sparsity;
     }
+    exp.qasso.b_u = exp.qasso.b_u.min(8.0);
+    exp.qasso.b_l = exp.qasso.b_l.min(exp.qasso.b_u);
+    exp.qasso.init_bits = exp.qasso.init_bits.min(8.0);
     let t = Trainer::new(art_dir, exp)?;
     let mut geta = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default())?;
     let mut trained = t.run_trained(&mut geta)?;
@@ -510,8 +530,6 @@ pub fn bench_deploy(
         &trained.q,
     )?;
     let disk_bytes = container.to_bytes().len();
-    let mut comp = GetaEngine::from_container(&container)?;
-    comp.threads = threads;
     let mut dense = GetaEngine::dense(&cfg, dense_params)?;
     dense.threads = threads;
     let batch = t.batch_size();
@@ -531,19 +549,27 @@ pub fn bench_deploy(
         Ok(best)
     };
     let dense_ms = time_ms(&dense)?;
-    let compressed_ms = time_ms(&comp)?;
-    Ok(DeployBench {
-        model: model.to_string(),
-        rel_bops: trained.result.rel_bops,
-        dense_bytes: cm.size_fp32_before,
-        disk_bytes,
-        dense_ms,
-        compressed_ms,
-        batch,
-        threads,
-        group_sparsity: trained.result.group_sparsity,
-        avg_bits: trained.result.avg_bits,
-    })
+    let mut rows = Vec::with_capacity(2);
+    for kernel in [KernelKind::F32, KernelKind::Int8] {
+        let mut comp = GetaEngine::from_container_kernel(&container, kernel)?;
+        comp.threads = threads;
+        let compressed_ms = time_ms(&comp)?;
+        rows.push(DeployBench {
+            model: model.to_string(),
+            kernel: kernel.label().to_string(),
+            rel_bops: trained.result.rel_bops,
+            dense_bytes: cm.size_fp32_before,
+            disk_bytes,
+            dense_ms,
+            compressed_ms,
+            batch,
+            threads,
+            group_sparsity: trained.result.group_sparsity,
+            avg_bits: trained.result.avg_bits,
+            int_sites: comp.int_sites(),
+        });
+    }
+    Ok(rows)
 }
 
 /// One GEMM-kernel comparison: the forward contraction shapes a model's
@@ -667,17 +693,22 @@ pub fn standard_gemm_suite(iters: usize) -> Vec<GemmBench> {
     rows
 }
 
-/// Where `BENCH_runtime.json` goes: the build checkout's repo root when
-/// this binary still runs next to it (the `make bench-json` / CI case —
-/// identified by its `Cargo.toml`, not mere directory existence), else
-/// the current directory (installed / relocated binaries).
-pub fn bench_json_path() -> std::path::PathBuf {
+/// A bench-output file at the build checkout's repo root when this binary
+/// still runs next to it (the `make bench-json` / CI case — identified by
+/// its `Cargo.toml`, not mere directory existence), else in the current
+/// directory (installed / relocated binaries).
+fn repo_root_file(name: &str) -> std::path::PathBuf {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     if root.join("Cargo.toml").is_file() {
-        root.join("BENCH_runtime.json")
+        root.join(name)
     } else {
-        std::path::PathBuf::from("BENCH_runtime.json")
+        std::path::PathBuf::from(name)
     }
+}
+
+/// Where `BENCH_runtime.json` goes (see [`repo_root_file`]).
+pub fn bench_json_path() -> std::path::PathBuf {
+    repo_root_file("BENCH_runtime.json")
 }
 
 /// Write the machine-readable perf log (`BENCH_runtime.json`, see
@@ -704,28 +735,103 @@ pub fn write_bench_runtime_json(
             ])
         })
         .collect();
-    let deploy_rows: Vec<Json> = deploy
-        .iter()
-        .map(|r| {
-            Json::obj(vec![
-                ("model", Json::str(&r.model)),
-                ("batch", Json::Num(r.batch as f64)),
-                ("threads", Json::Num(r.threads as f64)),
-                ("dense_ms", Json::Num(r.dense_ms)),
-                ("compressed_ms", Json::Num(r.compressed_ms)),
-                ("speedup", Json::Num(r.dense_ms / r.compressed_ms.max(1e-9))),
-                ("dense_bytes", Json::Num(r.dense_bytes as f64)),
-                ("disk_bytes", Json::Num(r.disk_bytes as f64)),
-                ("rel_bops", Json::Num(r.rel_bops)),
-                ("avg_bits", Json::Num(r.avg_bits)),
-                ("group_sparsity", Json::Num(r.group_sparsity)),
-            ])
-        })
-        .collect();
+    let deploy_rows: Vec<Json> = deploy.iter().map(deploy_row_json).collect();
     let doc = Json::obj(vec![
         ("threads", Json::Num(crate::tensor::configured_threads() as f64)),
         ("gemm", Json::Arr(gemm_rows)),
         ("deploy", Json::Arr(deploy_rows)),
+    ]);
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
+}
+
+/// One `deploy` row as JSON — shared by `BENCH_runtime.json` and
+/// `BENCH_deploy.json` so the two files cannot disagree on field names.
+/// `kernel` is the machine-readable `"f32" | "int8"` discriminator.
+fn deploy_row_json(r: &DeployBench) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("model", Json::str(&r.model)),
+        ("kernel", Json::str(&r.kernel)),
+        ("batch", Json::Num(r.batch as f64)),
+        ("threads", Json::Num(r.threads as f64)),
+        ("dense_ms", Json::Num(r.dense_ms)),
+        ("compressed_ms", Json::Num(r.compressed_ms)),
+        ("speedup", Json::Num(r.dense_ms / r.compressed_ms.max(1e-9))),
+        ("dense_bytes", Json::Num(r.dense_bytes as f64)),
+        ("disk_bytes", Json::Num(r.disk_bytes as f64)),
+        ("rel_bops", Json::Num(r.rel_bops)),
+        ("avg_bits", Json::Num(r.avg_bits)),
+        ("group_sparsity", Json::Num(r.group_sparsity)),
+        ("int_sites", Json::Num(r.int_sites as f64)),
+    ])
+}
+
+/// Where the deployment perf summary goes (see [`repo_root_file`]).
+/// Unlike `BENCH_runtime.json` this file is **checked in**, so the
+/// int-vs-f32 trajectory is diffable across PRs.
+pub fn bench_deploy_json_path() -> std::path::PathBuf {
+    repo_root_file("BENCH_deploy.json")
+}
+
+/// The fixed `note` field of `BENCH_deploy.json` — emitted verbatim on
+/// every write so the checked-in copy regenerates byte-stable apart from
+/// genuinely new measurements.
+const BENCH_DEPLOY_NOTE: &str =
+    "deployment inference summary; regenerate with `make bench-json` or `geta bench-infer \
+     --json` (ms values are machine-dependent). Rows carry model, kernel (\"f32\" | \"int8\"), \
+     batch, threads, dense_ms, compressed_ms, speedup, dense_bytes, disk_bytes, rel_bops, \
+     avg_bits, group_sparsity, int_sites, and (int8 rows) speedup_vs_f32. Writers merge by \
+     model: a single-model `bench-infer --json` run updates only its own rows. CI regenerates \
+     the full file every run, uploads it, and asserts int8 throughput >= f32-dequant on \
+     mlp_tiny and resnet_mini.";
+
+/// Write the checked-in deployment summary (`BENCH_deploy.json`): the
+/// per-(model, kernel) rows plus, for each int8 row, its throughput ratio
+/// against the f32-dequant row of the same model — the headline number of
+/// the integer compute path.
+///
+/// **Merge-on-write:** `geta bench-infer --json` benches one model, but
+/// the file tracks every benched model across PRs — rows for models not in
+/// this run are carried over from the existing file instead of being
+/// silently truncated. Rows are sorted by (model, kernel) so regeneration
+/// diffs cleanly.
+pub fn write_bench_deploy_json(path: &std::path::Path, deploy: &[DeployBench]) -> Result<()> {
+    use crate::util::json::{self, Json};
+    let fresh: std::collections::BTreeSet<&str> = deploy.iter().map(|r| r.model.as_str()).collect();
+    let mut rows: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(doc) = json::parse(&text) {
+            if let Some(arr) = doc.get("deploy").and_then(|d| d.as_arr()) {
+                for row in arr {
+                    if !fresh.contains(row.str_or("model", "").as_str()) {
+                        rows.push(row.clone());
+                    }
+                }
+            }
+        }
+    }
+    rows.extend(deploy.iter().map(|r| {
+        let mut row = deploy_row_json(r);
+        if r.kernel == "int8" {
+            if let Some(f) = deploy
+                .iter()
+                .find(|o| o.model == r.model && o.kernel == "f32")
+            {
+                if let Json::Obj(m) = &mut row {
+                    m.insert(
+                        "speedup_vs_f32".to_string(),
+                        Json::Num(f.compressed_ms / r.compressed_ms.max(1e-9)),
+                    );
+                }
+            }
+        }
+        row
+    }));
+    rows.sort_by_key(|r| (r.str_or("model", ""), r.str_or("kernel", "")));
+    let doc = Json::obj(vec![
+        ("note", Json::str(BENCH_DEPLOY_NOTE)),
+        ("deploy", Json::Arr(rows)),
     ]);
     std::fs::write(path, doc.to_string())?;
     Ok(())

@@ -28,15 +28,46 @@
 //! storage, f64 accumulation in every contraction (`tensor/ops.rs` —
 //! tiled, multi-threaded, bitwise thread-count-invariant), per-micro-batch
 //! batch-statistics normalization.
+//!
+//! # The integer compute path
+//!
+//! A third source, [`QuantizedParams`], keeps eligible weight sites
+//! resident as **i8 level tensors** ([`tensor::IntWeight`]) instead of
+//! dequantized f32 and serves them through [`ParamSource::weight_i8`].
+//! When a Linear/Conv node has such a weight, [`forward`] selects an
+//! integer kernel (`tensor/iops.rs`) instead of the f32 GEMM:
+//!
+//! * **i8 × i8, i32-accumulated** when the node's input provably carries
+//!   exact quantization levels — it is (transitively through the
+//!   grid-preserving `Reshape` and `MaxPool2` ops) the output of an
+//!   `ActQuant` site whose levels fit i8 and whose contraction cannot
+//!   overflow i32. The input activations are re-quantized to their integer
+//!   levels at run time (`tensor::levels_from_grid` — exact, because
+//!   `fake_quant` already put them on the `d_a` grid) and the epilogue
+//!   folds `d_w · d_a` plus the bias in f64. Since levels are exact
+//!   integers by construction (`quant::quantize_level`), the i32
+//!   accumulation is **exact** and the epilogue holds the only rounding of
+//!   the path.
+//! * **f32 × i8 (mixed)** otherwise — weight-only quantization (resnet,
+//!   the transformers' projection/MLP weights) or an activation site
+//!   beyond 8 bits: f32 activations against the resident i8 levels, f64
+//!   accumulation in the f32 kernels' exact per-row order, `d_w` folded
+//!   into the epilogue.
+//!
+//! Norms, softmax, losses, and weight sites beyond i8 stay on the f32
+//! path unchanged. Training ([`TrainParams`]) and the f32 deploy engine
+//! ([`DeployParams`]) never return an `IntWeight`, so their numerics are
+//! byte-for-byte untouched by the selection logic.
 
 use std::borrow::Cow;
+use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use super::lowering::{OpKind, Program};
+use super::lowering::{Node, OpKind, Program};
 use crate::quant::{self, QParams};
 use crate::tensor::{
-    self, batchnorm_rows, gelu, layernorm_rows, softmax_rows, NormAux, ParamStore,
+    self, batchnorm_rows, gelu, layernorm_rows, softmax_rows, IntWeight, NormAux, ParamStore,
 };
 
 pub const NORM_EPS: f32 = 1e-5;
@@ -63,6 +94,35 @@ pub trait ParamSource {
     /// unquantized (the dense-f32 baseline engine). `node` names the op
     /// for error messages.
     fn act_q(&self, site: usize, node: &str) -> Result<Option<QParams>>;
+
+    /// Resident integer-domain weight for a weight-carrying node, when the
+    /// source keeps one (the deployment int8 engine). `None` — the default
+    /// for every training/f32 source — routes the node to the f32 `weight`
+    /// path. `site` is validated like [`weight`](Self::weight).
+    fn weight_i8(&self, _name: &str, _site: Option<usize>) -> Result<Option<&IntWeight>> {
+        Ok(None)
+    }
+}
+
+/// Strict-reader discipline extended to the executor seam: when the
+/// program consumes a weight at quant site `site`, the container's
+/// recorded site for that tensor (if any) must agree — a silent mismatch
+/// would dequantize with the wrong step `d` and produce wrong outputs with
+/// no error anywhere.
+fn check_weight_site(
+    recorded: &BTreeMap<String, usize>,
+    name: &str,
+    site: Option<usize>,
+) -> Result<()> {
+    match (site, recorded.get(name)) {
+        (Some(s), Some(&rec)) if rec != s => anyhow::bail!(
+            "weight `{name}`: program requests quant site {s} but the container recorded site {rec}"
+        ),
+        (None, Some(&rec)) => anyhow::bail!(
+            "weight `{name}`: program treats it as unquantized but the container packed it at site {rec}"
+        ),
+        _ => Ok(()),
+    }
 }
 
 /// Training-time source: dense f32 parameters, per-site fake quantization
@@ -102,6 +162,9 @@ pub struct DeployParams<'a> {
     pub weights: &'a ParamStore,
     pub act_q: &'a [Option<QParams>],
     pub apply_act_quant: bool,
+    /// Quant site recorded per packed tensor by the container (empty for
+    /// the dense baseline) — requests are validated against it.
+    pub weight_sites: &'a BTreeMap<String, usize>,
 }
 
 impl ParamSource for DeployParams<'_> {
@@ -112,7 +175,8 @@ impl ParamSource for DeployParams<'_> {
             .with_context(|| format!("engine missing tensor `{name}`"))
     }
 
-    fn weight(&self, name: &str, _site: Option<usize>) -> Result<Cow<'_, [f32]>> {
+    fn weight(&self, name: &str, site: Option<usize>) -> Result<Cow<'_, [f32]>> {
+        check_weight_site(self.weight_sites, name, site)?;
         Ok(Cow::Borrowed(self.tensor(name)?))
     }
 
@@ -124,6 +188,63 @@ impl ParamSource for DeployParams<'_> {
             Some(qp) => Ok(Some(qp)),
             None => anyhow::bail!("{node}: activation site {site} missing from container"),
         }
+    }
+}
+
+/// Deployment source for the **integer compute path**: eligible weight
+/// sites stay resident as i8 level tensors and reach the integer kernels
+/// through [`ParamSource::weight_i8`]; everything else (biases, norms,
+/// embeddings, weight sites beyond 8 bits) is served as f32 exactly like
+/// [`DeployParams`]. Activation sites always apply their container rows —
+/// the integer engine has no dense-baseline mode.
+pub struct QuantizedParams<'a> {
+    pub weights: &'a ParamStore,
+    /// i8-resident weights by tensor name (`tensor/iops.rs` layout).
+    pub iweights: &'a BTreeMap<String, IntWeight>,
+    /// Quant site recorded per packed tensor by the container.
+    pub weight_sites: &'a BTreeMap<String, usize>,
+    pub act_q: &'a [Option<QParams>],
+}
+
+impl ParamSource for QuantizedParams<'_> {
+    fn tensor(&self, name: &str) -> Result<&[f32]> {
+        self.weights
+            .get(name)
+            .map(|t| t.data.as_slice())
+            .with_context(|| format!("engine missing tensor `{name}`"))
+    }
+
+    fn weight(&self, name: &str, site: Option<usize>) -> Result<Cow<'_, [f32]>> {
+        check_weight_site(self.weight_sites, name, site)?;
+        // Defensive dequantize-on-demand for an i8-resident weight. The
+        // current `forward` never reaches this: it calls `weight` only
+        // when `weight_i8` returned None (name absent from `iweights`),
+        // and the engine never runs this source with `with_aux`. It keeps
+        // any future caller that *does* want the f32 view of an
+        // i8-resident weight correct instead of erroring on the
+        // shape-only store placeholder.
+        if let Some(iw) = self.iweights.get(name) {
+            let mut v = Vec::with_capacity(iw.levels.len());
+            for row in iw.levels.chunks_exact(iw.n) {
+                for (j, &l) in row.iter().enumerate() {
+                    v.push(l as f32 * iw.scale[j]);
+                }
+            }
+            return Ok(Cow::Owned(v));
+        }
+        Ok(Cow::Borrowed(self.tensor(name)?))
+    }
+
+    fn act_q(&self, site: usize, node: &str) -> Result<Option<QParams>> {
+        match self.act_q.get(site).copied().flatten() {
+            Some(qp) => Ok(Some(qp)),
+            None => anyhow::bail!("{node}: activation site {site} missing from container"),
+        }
+    }
+
+    fn weight_i8(&self, name: &str, site: Option<usize>) -> Result<Option<&IntWeight>> {
+        check_weight_site(self.weight_sites, name, site)?;
+        Ok(self.iweights.get(name))
     }
 }
 
@@ -183,6 +304,9 @@ impl Plan {
 #[derive(Debug, Default)]
 pub struct Arena {
     free: Vec<Vec<f32>>,
+    /// Level-tensor pool for the integer path (activation levels, i8
+    /// im2col scratch) — much smaller buffers, same recycling discipline.
+    free_i8: Vec<Vec<i8>>,
 }
 
 impl Arena {
@@ -216,6 +340,26 @@ impl Arena {
             v.truncate(n);
         }
         v
+    }
+
+    /// An i8 buffer of `n` elements with **unspecified contents** — the
+    /// integer path's consumers overwrite every element
+    /// (`levels_from_grid`) or re-zero it themselves (`im2col_i8_into`).
+    pub fn alloc_i8(&mut self, n: usize) -> Vec<i8> {
+        let mut v = self.free_i8.pop().unwrap_or_default();
+        if v.len() < n {
+            v.resize(n, 0);
+        } else {
+            v.truncate(n);
+        }
+        v
+    }
+
+    /// Return an i8 buffer to the pool (dropped once the pool is full).
+    pub fn reclaim_i8(&mut self, v: Vec<i8>) {
+        if v.capacity() > 0 && self.free_i8.len() < Self::MAX_FREE {
+            self.free_i8.push(v);
+        }
     }
 
     /// Return a buffer to the pool (dropped once the pool is full).
@@ -268,6 +412,50 @@ fn site_copy(w: Cow<'_, [f32]>) -> Option<Vec<f32>> {
         Cow::Owned(v) => Some(v),
         Cow::Borrowed(_) => None,
     }
+}
+
+/// Walk back from node `id` through **grid-preserving** ops to the
+/// ActQuant site whose exact quantization levels the buffer still carries:
+/// `Reshape` copies values and `MaxPool2` selects one of them, so both
+/// leave every element on the quantizer's `d·ℤ` grid. (`GlobalAvgPool`
+/// averages and is deliberately excluded — its outputs leave the grid.)
+fn grid_site(prog: &Program, mut id: usize) -> Option<usize> {
+    loop {
+        match &prog.nodes[id].op {
+            OpKind::Reshape | OpKind::MaxPool2 => id = prog.nodes[id].inputs[0],
+            OpKind::ActQuant { site } => return Some(*site),
+            _ => return None,
+        }
+    }
+}
+
+/// Decide whether a weight-carrying node with i8-resident weight `iw` can
+/// take the exact i8×i8 path: its input must carry the levels of an
+/// ActQuant site (see [`grid_site`]), those levels must fit i8, and the
+/// `k_dim`-long contraction must be guaranteed not to overflow the i32
+/// accumulator. Returns the activation quantizer to recover levels with,
+/// or `None` for the mixed f32×i8 path.
+fn int_act_quant(
+    prog: &Program,
+    src: &dyn ParamSource,
+    node: &Node,
+    k_dim: usize,
+    iw: &IntWeight,
+) -> Result<Option<QParams>> {
+    let Some(site) = grid_site(prog, node.inputs[0]) else {
+        return Ok(None);
+    };
+    let Some(qp) = src.act_q(site, &node.name)? else {
+        return Ok(None);
+    };
+    // the largest level the site can emit: round(clip_max / d) with
+    // clip_max = qm^t (see quant::clip_pow / eq. (3))
+    let max_a = (qp.qm.max(1e-12).powf(qp.t) / qp.d).round();
+    let ok = max_a.is_finite()
+        && max_a >= 0.0
+        && max_a <= i8::MAX as f32
+        && tensor::i8_gemm_fits_i32(k_dim, max_a as i32, iw.max_abs);
+    Ok(if ok { Some(qp) } else { None })
 }
 
 /// Execute the program's forward pass over `plan`-resolved shapes. Returns
@@ -328,46 +516,122 @@ pub fn forward(
                 (out, Aux::None)
             }
             OpKind::Linear { w, site } => {
-                let wq = src.weight(&format!("{w}.weight"), *site)?;
+                let wname = format!("{w}.weight");
                 let bias = src.tensor(&format!("{w}.bias"))?;
                 let din = *plan.shapes[node.inputs[0]].last().unwrap();
                 let dout = *dims.last().unwrap();
                 let rows = numel / dout;
-                let mut out = arena.alloc_uninit(numel);
-                tensor::matmul_into(&mut out, &vals[node.inputs[0]], &wq, rows, din, dout);
-                for r in 0..rows {
-                    tensor::axpy(1.0, bias, &mut out[r * dout..(r + 1) * dout]);
+                // the integer path serves forward-only consumers; training
+                // (with_aux) always multiplies the fake-quantized f32 copy
+                let iw = if with_aux { None } else { src.weight_i8(&wname, *site)? };
+                if let Some(iw) = iw {
+                    anyhow::ensure!(
+                        iw.k == din && iw.n == dout,
+                        "{}: int weight is {}x{}, program expects {din}x{dout}",
+                        node.name,
+                        iw.k,
+                        iw.n
+                    );
+                    let xin = &vals[node.inputs[0]];
+                    let mut out = arena.alloc_uninit(numel);
+                    match int_act_quant(prog, src, node, din, iw)? {
+                        Some(qa) => {
+                            let mut la = arena.alloc_i8(rows * din);
+                            tensor::levels_from_grid(xin, qa.d, &mut la);
+                            tensor::matmul_i8_scaled_into(
+                                &mut out, &la, &iw.levels, rows, din, dout, &iw.scale, qa.d,
+                                Some(bias),
+                            );
+                            arena.reclaim_i8(la);
+                        }
+                        None => tensor::matmul_f32i8_scaled_into(
+                            &mut out, xin, &iw.levels, rows, din, dout, &iw.scale, Some(bias),
+                        ),
+                    }
+                    (out, Aux::None)
+                } else {
+                    let wq = src.weight(&wname, *site)?;
+                    let mut out = arena.alloc_uninit(numel);
+                    tensor::matmul_into(&mut out, &vals[node.inputs[0]], &wq, rows, din, dout);
+                    for r in 0..rows {
+                        tensor::axpy(1.0, bias, &mut out[r * dout..(r + 1) * dout]);
+                    }
+                    (out, Aux::W(site_copy(wq)))
                 }
-                (out, Aux::W(site_copy(wq)))
             }
             OpKind::Conv2d { w, site, k, stride, pad } => {
-                let wq = src.weight(&format!("{w}.weight"), *site)?;
+                let wname = format!("{w}.weight");
                 let bias = src.tensor(&format!("{w}.bias"))?;
                 let is = &plan.shapes[node.inputs[0]];
                 let (h, wd, cin) = (is[1], is[2], is[3]);
                 let (ho, wo, cout) = (dims[1], dims[2], dims[3]);
-                let mut cols = arena.alloc_uninit(plan.col_sizes[id]);
-                tensor::im2col_into(
-                    &mut cols,
-                    &vals[node.inputs[0]],
-                    bsz,
-                    h,
-                    wd,
-                    cin,
-                    *k,
-                    *stride,
-                    *pad,
-                    ho,
-                    wo,
-                );
                 let rows = bsz * ho * wo;
-                let mut out = arena.alloc_uninit(numel);
-                tensor::matmul_into(&mut out, &cols, &wq, rows, k * k * cin, cout);
-                arena.reclaim(cols);
-                for r in 0..rows {
-                    tensor::axpy(1.0, bias, &mut out[r * cout..(r + 1) * cout]);
+                let kdim = k * k * cin;
+                let iw = if with_aux { None } else { src.weight_i8(&wname, *site)? };
+                if let Some(iw) = iw {
+                    anyhow::ensure!(
+                        iw.k == kdim && iw.n == cout,
+                        "{}: int weight is {}x{}, program expects {kdim}x{cout}",
+                        node.name,
+                        iw.k,
+                        iw.n
+                    );
+                    let xin = &vals[node.inputs[0]];
+                    let mut out = arena.alloc_uninit(numel);
+                    match int_act_quant(prog, src, node, kdim, iw)? {
+                        Some(qa) => {
+                            // exact path: image → levels → i8 im2col → i8 GEMM
+                            let mut lx = arena.alloc_i8(xin.len());
+                            tensor::levels_from_grid(xin, qa.d, &mut lx);
+                            let mut cols = arena.alloc_i8(plan.col_sizes[id]);
+                            tensor::im2col_i8_into(
+                                &mut cols, &lx, bsz, h, wd, cin, *k, *stride, *pad, ho, wo,
+                            );
+                            arena.reclaim_i8(lx);
+                            tensor::matmul_i8_scaled_into(
+                                &mut out, &cols, &iw.levels, rows, kdim, cout, &iw.scale, qa.d,
+                                Some(bias),
+                            );
+                            arena.reclaim_i8(cols);
+                        }
+                        None => {
+                            // mixed path: f32 im2col against resident i8 levels
+                            let mut cols = arena.alloc_uninit(plan.col_sizes[id]);
+                            tensor::im2col_into(
+                                &mut cols, xin, bsz, h, wd, cin, *k, *stride, *pad, ho, wo,
+                            );
+                            tensor::matmul_f32i8_scaled_into(
+                                &mut out, &cols, &iw.levels, rows, kdim, cout, &iw.scale,
+                                Some(bias),
+                            );
+                            arena.reclaim(cols);
+                        }
+                    }
+                    (out, Aux::None)
+                } else {
+                    let wq = src.weight(&wname, *site)?;
+                    let mut cols = arena.alloc_uninit(plan.col_sizes[id]);
+                    tensor::im2col_into(
+                        &mut cols,
+                        &vals[node.inputs[0]],
+                        bsz,
+                        h,
+                        wd,
+                        cin,
+                        *k,
+                        *stride,
+                        *pad,
+                        ho,
+                        wo,
+                    );
+                    let mut out = arena.alloc_uninit(numel);
+                    tensor::matmul_into(&mut out, &cols, &wq, rows, kdim, cout);
+                    arena.reclaim(cols);
+                    for r in 0..rows {
+                        tensor::axpy(1.0, bias, &mut out[r * cout..(r + 1) * cout]);
+                    }
+                    (out, Aux::W(site_copy(wq)))
                 }
-                (out, Aux::W(site_copy(wq)))
             }
             OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
                 let gamma = src.tensor(&format!("{p}.gamma"))?;
@@ -738,14 +1002,145 @@ mod tests {
         use crate::quant::QParams;
         use crate::tensor::ParamStore;
         let weights = ParamStore::new();
+        let sites = BTreeMap::new();
         let rows = vec![None, Some(QParams { d: 0.1, t: 1.0, qm: 1.0 })];
-        let on = DeployParams { weights: &weights, act_q: &rows, apply_act_quant: true };
+        let on = DeployParams {
+            weights: &weights,
+            act_q: &rows,
+            apply_act_quant: true,
+            weight_sites: &sites,
+        };
         assert!(on.act_q(1, "n").unwrap().is_some());
         // a weight-site row consulted as an activation site is a hard error
         assert!(on.act_q(0, "n").is_err());
         assert!(on.act_q(7, "n").is_err());
-        let off = DeployParams { weights: &weights, act_q: &rows, apply_act_quant: false };
+        let off = DeployParams {
+            weights: &weights,
+            act_q: &rows,
+            apply_act_quant: false,
+            weight_sites: &sites,
+        };
         assert!(off.act_q(1, "n").unwrap().is_none());
         assert!(off.act_q(0, "n").unwrap().is_none());
+    }
+
+    #[test]
+    fn deploy_source_validates_requested_weight_site() {
+        use crate::tensor::{ParamStore, Tensor};
+        let mut weights = ParamStore::new();
+        weights.push(Tensor::from_vec("fc0.weight", &[2, 2], vec![0.5, -0.5, 0.25, 0.0]));
+        let mut sites = BTreeMap::new();
+        sites.insert("fc0.weight".to_string(), 3usize);
+        let src = DeployParams {
+            weights: &weights,
+            act_q: &[],
+            apply_act_quant: false,
+            weight_sites: &sites,
+        };
+        // matching site: fine
+        assert!(src.weight("fc0.weight", Some(3)).is_ok());
+        // mismatched site: named error, never a silent wrong-step dequant
+        let err = src.weight("fc0.weight", Some(1)).unwrap_err().to_string();
+        assert!(err.contains("fc0.weight") && err.contains("site 1") && err.contains("site 3"), "{err}");
+        // program says unquantized but container packed it: also an error
+        let err = src.weight("fc0.weight", None).unwrap_err().to_string();
+        assert!(err.contains("unquantized"), "{err}");
+        // unrecorded tensors (dense baseline) accept any requested site
+        let dense = DeployParams {
+            weights: &weights,
+            act_q: &[],
+            apply_act_quant: false,
+            weight_sites: &BTreeMap::new(),
+        };
+        assert!(dense.weight("fc0.weight", Some(7)).is_ok());
+        assert!(dense.weight("fc0.weight", None).is_ok());
+    }
+
+    #[test]
+    fn quantized_source_serves_i8_and_dequantizes_on_fallback() {
+        use crate::tensor::ParamStore;
+        let weights = ParamStore::new();
+        let mut iweights = BTreeMap::new();
+        // [k=2, n=2] levels with step 0.25
+        iweights.insert(
+            "fc0.weight".to_string(),
+            IntWeight::from_levels(&[-2, 1, 4, -3], 2, 0.25).unwrap(),
+        );
+        let mut sites = BTreeMap::new();
+        sites.insert("fc0.weight".to_string(), 0usize);
+        let src = QuantizedParams {
+            weights: &weights,
+            iweights: &iweights,
+            weight_sites: &sites,
+            act_q: &[],
+        };
+        let iw = src.weight_i8("fc0.weight", Some(0)).unwrap().unwrap();
+        assert_eq!(iw.levels, vec![-2, 1, 4, -3]);
+        assert_eq!(iw.max_abs, 4);
+        // f32 fallback dequantizes levels × per-channel scale
+        let w = src.weight("fc0.weight", Some(0)).unwrap();
+        assert_eq!(w.as_ref(), &[-0.5, 0.25, 1.0, -0.75]);
+        // site validation bites on both entry points
+        assert!(src.weight_i8("fc0.weight", Some(2)).is_err());
+        assert!(src.weight("fc0.weight", Some(2)).is_err());
+        // a name without an int weight falls through to the f32 store
+        assert!(src.weight_i8("other.weight", Some(1)).unwrap().is_none());
+        assert!(src.weight("other.weight", Some(1)).is_err()); // not in store either
+    }
+
+    #[test]
+    fn grid_site_walks_reshape_and_maxpool_only() {
+        // vgg: conv -> bn -> relu -> act -> pool -> ... -> flatten -> fc
+        let cfg = vgg_cfg();
+        let sites = builders::quant_site_specs(&cfg).unwrap();
+        let prog = lowering::lower(&cfg, &sites, 1).unwrap();
+        for (id, node) in prog.nodes.iter().enumerate() {
+            match &node.op {
+                // every ActQuant resolves to itself
+                lowering::OpKind::ActQuant { site } => {
+                    assert_eq!(grid_site(&prog, id), Some(*site), "{}", node.name);
+                }
+                _ => {}
+            }
+        }
+        // the second conv's input chain reaches the first conv's act site
+        let c1 = prog
+            .nodes
+            .iter()
+            .position(|n| matches!(&n.op, lowering::OpKind::Conv2d { w, .. } if w == "features.1"))
+            .expect("features.1 lowered");
+        let got = grid_site(&prog, prog.nodes[c1].inputs[0]).expect("grid source");
+        assert_eq!(sites[got].name, "features.0.act");
+        // the first conv sees raw pixels: no grid source
+        let c0 = prog
+            .nodes
+            .iter()
+            .position(|n| matches!(&n.op, lowering::OpKind::Conv2d { w, .. } if w == "features.0"))
+            .unwrap();
+        assert_eq!(grid_site(&prog, prog.nodes[c0].inputs[0]), None);
+        // the fc after flatten+pool still reaches the last conv act site
+        let fc = prog
+            .nodes
+            .iter()
+            .position(|n| matches!(&n.op, lowering::OpKind::Linear { w, .. } if w == "fc0"))
+            .unwrap();
+        let got = grid_site(&prog, prog.nodes[fc].inputs[0]).expect("through flatten/pool");
+        assert_eq!(sites[got].name, "features.1.act");
+    }
+
+    #[test]
+    fn arena_recycles_i8_buffers() {
+        let mut arena = Arena::new();
+        let mut v = arena.alloc_i8(64);
+        assert_eq!(v.len(), 64);
+        v.iter_mut().for_each(|x| *x = 3);
+        arena.reclaim_i8(v);
+        let v2 = arena.alloc_i8(32);
+        assert!(v2.capacity() >= 64, "capacity not recycled");
+        assert_eq!(v2.len(), 32);
+        arena.reclaim_i8(v2);
+        let v3 = arena.alloc_i8(128);
+        assert_eq!(v3.len(), 128);
+        assert!(v3[64..].iter().all(|&x| x == 0), "extension not zeroed");
     }
 }

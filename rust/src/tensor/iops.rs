@@ -1,0 +1,720 @@
+//! Integer-domain GEMM kernels: compute directly on packed quantization
+//! levels instead of dequantizing to f32 first.
+//!
+//! GETA's quantizer puts every fake-quantized value on an integer grid:
+//! `fake_quant(x) = d * l` with `l = quantize_level(x) ∈ ℤ` (see
+//! `quant::quantize_level`). A learned bit width `b ≤ 8` bounds the levels
+//! by `|l| ≤ 2^(b-1) - 1 ≤ 127`, so both a quantized weight tensor and a
+//! quantized activation tensor are **exactly** representable as `i8`. The
+//! kernels here exploit that:
+//!
+//! * [`matmul_i8_into`] — `i8 × i8 → i32`: the contraction
+//!   `Σ_k la[i,k] · lw[k,j]` is a sum of integers bounded by
+//!   `k · 127 · 127 < 2^31` (callers gate on [`i8_gemm_fits_i32`]), so the
+//!   i32 accumulation is **exact** — not "accurate", exact. There is no
+//!   rounding anywhere in the contraction; the only floating-point
+//!   rounding of the whole integer path lives in the scale epilogue.
+//! * [`matmul_i8_scaled_into`] — the deployment form: the same exact i32
+//!   tiles, flushed through an f64 epilogue
+//!   `out[i,j] = f32(acc · (alpha · scale[j]) + bias[j])` that folds the
+//!   weight dequantization step `d_w` (per output channel, `scale`) and
+//!   the activation step `d_a` (`alpha`) into one multiply.
+//! * [`matmul_f32i8_scaled_into`] — the mixed form for weight-only
+//!   quantization (resnet, the transformers): f32 activations × resident
+//!   i8 weight levels, f64 accumulation in the exact per-row order of the
+//!   f32 kernels, `d_w` folded into the epilogue. The weight operand stays
+//!   i8 in memory (4× less panel traffic than dequantized f32) and is
+//!   widened in-register.
+//! * [`im2col_i8_into`] / [`levels_from_grid`] — conv support and the
+//!   runtime activation-quantization step: recover the integer level of a
+//!   value already on the `d`-grid.
+//!
+//! Layout and partitioning mirror `ops.rs`: row-major flat buffers,
+//! `TILE_I × TILE_K` cache blocking, output rows split across
+//! `kernel_threads` workers. Determinism: the i8×i8 kernels accumulate in
+//! i32, which is associative — results are bitwise identical for every
+//! thread count *by construction*; the mixed kernel keeps the f32 kernels'
+//! fixed per-row accumulation order (a function of `(k, TILE_K)` only) for
+//! the same guarantee.
+
+use super::ops::{kernel_threads, TILE_I, TILE_K};
+
+/// One weight tensor held as resident integer levels — the deployment
+/// engine's weight-stationary layout. `levels` is `[k, n]` row-major,
+/// exactly the flattening the f32 GEMM consumes (linear `[din, dout]`;
+/// conv HWIO flattened to `[k²·cin, cout]`), so the integer kernels walk
+/// the same panels the f32 kernels would.
+#[derive(Debug, Clone)]
+pub struct IntWeight {
+    /// Quantization levels, `[k, n]` row-major.
+    pub levels: Vec<i8>,
+    /// Contraction length (weight rows).
+    pub k: usize,
+    /// Output channels (weight cols).
+    pub n: usize,
+    /// Per-output-channel dequantization scale (the site's step `d_w`;
+    /// uniform today, per-channel by layout so finer-grained schemes slot
+    /// in without a kernel change).
+    pub scale: Vec<f32>,
+    /// `max |level|`, for the i32 overflow gate.
+    pub max_abs: i32,
+}
+
+impl IntWeight {
+    /// Build from unpacked container levels, or `None` when any level
+    /// falls outside i8 (a site trained past 8 bits — the caller falls
+    /// back to the dequantized-f32 path for that tensor).
+    pub fn from_levels(levels: &[i32], n: usize, d: f32) -> Option<IntWeight> {
+        if n == 0 || levels.len() % n != 0 {
+            return None;
+        }
+        let mut max_abs = 0i32;
+        for &l in levels {
+            if l < i8::MIN as i32 || l > i8::MAX as i32 {
+                return None;
+            }
+            max_abs = max_abs.max(l.abs());
+        }
+        Some(IntWeight {
+            levels: levels.iter().map(|&l| l as i8).collect(),
+            k: levels.len() / n,
+            n,
+            scale: vec![d; n],
+            max_abs,
+        })
+    }
+}
+
+/// Can `Σ_k a·w` with `|a| ≤ max_a`, `|w| ≤ max_w` overflow i32? The
+/// worst-case magnitude is `k · max_a · max_w`; the i8×i8 path requires it
+/// to fit so the accumulation stays exact.
+pub fn i8_gemm_fits_i32(k: usize, max_a: i32, max_w: i32) -> bool {
+    (k as i64)
+        .saturating_mul(max_a.max(0) as i64)
+        .saturating_mul(max_w.max(0) as i64)
+        <= i32::MAX as i64
+}
+
+/// Recover the integer levels of values already on the `d`-grid (the
+/// output of `fake_quant`, for which `x = fl(d·l)`): `round(x / d)`,
+/// clamped to i8. For `|l| ≤ 127` the f32 division error is far below
+/// 1/2, so the recovery is exact — this is the runtime
+/// activation-quantization step feeding the i8×i8 kernels.
+pub fn levels_from_grid(x: &[f32], d: f32, out: &mut [i8]) {
+    assert_eq!(x.len(), out.len());
+    assert!(d > 0.0, "degenerate quant step {d}");
+    let inv = 1.0 / d;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = (v * inv).round().clamp(i8::MIN as f32, i8::MAX as f32) as i8;
+    }
+}
+
+// ------------------------------------------------------------ i8 × i8 GEMM
+
+/// `a[m,k] @ b[k,n]` on levels, exact i32 accumulation — tiled + threaded.
+pub fn matmul_i8(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    matmul_i8_into(&mut out, a, b, m, k, n);
+    out
+}
+
+/// [`matmul_i8`] writing into a caller-provided buffer. The caller
+/// guarantees no i32 overflow ([`i8_gemm_fits_i32`]); debug builds check a
+/// conservative bound.
+pub fn matmul_i8_into(out: &mut [i32], a: &[i8], b: &[i8], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    debug_assert!(i8_gemm_fits_i32(k, 128, 128) || {
+        let ma = a.iter().map(|&v| (v as i32).abs()).max().unwrap_or(0);
+        let mb = b.iter().map(|&v| (v as i32).abs()).max().unwrap_or(0);
+        i8_gemm_fits_i32(k, ma, mb)
+    });
+    if out.is_empty() {
+        return;
+    }
+    if k == 0 {
+        out.fill(0);
+        return;
+    }
+    let nt = kernel_threads(m * k * n, m);
+    if nt <= 1 {
+        matmul_i8_rows(out, a, b, 0, k, n);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|sc| {
+        for (ti, oc) in out.chunks_mut(chunk * n).enumerate() {
+            sc.spawn(move || matmul_i8_rows(oc, a, b, ti * chunk, k, n));
+        }
+    });
+}
+
+/// Accumulate rows `ib..ib+ilen` (absolute `i0+ib..`) of `a @ b` into the
+/// i32 tile `acc` (`ilen × n`, pre-zeroed). Shared by the raw and the
+/// scaled-epilogue drivers so the two cannot diverge.
+#[inline]
+fn acc_tile_i8(
+    acc: &mut [i32],
+    a: &[i8],
+    b: &[i8],
+    row0: usize,
+    ilen: usize,
+    k: usize,
+    n: usize,
+) {
+    for kb in (0..k).step_by(TILE_K) {
+        let klen = TILE_K.min(k - kb);
+        for ii in 0..ilen {
+            let arow = &a[(row0 + ii) * k + kb..][..klen];
+            let accrow = &mut acc[ii * n..(ii + 1) * n];
+            let mut kk = 0;
+            while kk + 4 <= klen {
+                let a0 = arow[kk] as i32;
+                let a1 = arow[kk + 1] as i32;
+                let a2 = arow[kk + 2] as i32;
+                let a3 = arow[kk + 3] as i32;
+                if a0 != 0 || a1 != 0 || a2 != 0 || a3 != 0 {
+                    let b0 = &b[(kb + kk) * n..][..n];
+                    let b1 = &b[(kb + kk + 1) * n..][..n];
+                    let b2 = &b[(kb + kk + 2) * n..][..n];
+                    let b3 = &b[(kb + kk + 3) * n..][..n];
+                    for j in 0..n {
+                        accrow[j] += a0 * b0[j] as i32
+                            + a1 * b1[j] as i32
+                            + a2 * b2[j] as i32
+                            + a3 * b3[j] as i32;
+                    }
+                }
+                kk += 4;
+            }
+            while kk < klen {
+                let av = arow[kk] as i32;
+                if av != 0 {
+                    let brow = &b[(kb + kk) * n..][..n];
+                    for j in 0..n {
+                        accrow[j] += av * brow[j] as i32;
+                    }
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+fn matmul_i8_rows(out: &mut [i32], a: &[i8], b: &[i8], i0: usize, k: usize, n: usize) {
+    let rows = out.len() / n;
+    let mut acc = vec![0i32; TILE_I.min(rows.max(1)) * n];
+    for ib in (0..rows).step_by(TILE_I) {
+        let ilen = TILE_I.min(rows - ib);
+        let acc = &mut acc[..ilen * n];
+        acc.fill(0);
+        acc_tile_i8(acc, a, b, i0 + ib, ilen, k, n);
+        out[ib * n..(ib + ilen) * n].copy_from_slice(acc);
+    }
+}
+
+/// The deployment i8×i8 GEMM: exact i32 tiles flushed through the f64
+/// scale epilogue `out[i,j] = f32(acc[i,j] · (alpha · scale[j]) + bias[j])`
+/// — `scale` is the per-output-channel weight step `d_w`, `alpha` the
+/// activation step `d_a` (pass 1.0 for raw-level outputs). The epilogue is
+/// the **only** floating-point rounding of the integer path.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i8_scaled_into(
+    out: &mut [f32],
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: &[f32],
+    alpha: f32,
+    bias: Option<&[f32]>,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    assert_eq!(scale.len(), n);
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), n);
+    }
+    if out.is_empty() {
+        return;
+    }
+    // fold alpha·scale once per call (shared by every worker); f64 so the
+    // fold itself is exact to f32 inputs and the epilogue rounds exactly
+    // once per element
+    let comb: Vec<f64> = scale.iter().map(|&s| alpha as f64 * s as f64).collect();
+    let comb = comb.as_slice();
+    let nt = kernel_threads(m * k * n, m);
+    if nt <= 1 {
+        matmul_i8_scaled_rows(out, a, b, 0, k, n, comb, bias);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|sc| {
+        for (ti, oc) in out.chunks_mut(chunk * n).enumerate() {
+            sc.spawn(move || matmul_i8_scaled_rows(oc, a, b, ti * chunk, k, n, comb, bias));
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_i8_scaled_rows(
+    out: &mut [f32],
+    a: &[i8],
+    b: &[i8],
+    i0: usize,
+    k: usize,
+    n: usize,
+    comb: &[f64],
+    bias: Option<&[f32]>,
+) {
+    let rows = out.len() / n;
+    let mut acc = vec![0i32; TILE_I.min(rows.max(1)) * n];
+    for ib in (0..rows).step_by(TILE_I) {
+        let ilen = TILE_I.min(rows - ib);
+        let acc = &mut acc[..ilen * n];
+        acc.fill(0);
+        acc_tile_i8(acc, a, b, i0 + ib, ilen, k, n);
+        for ii in 0..ilen {
+            let orow = &mut out[(ib + ii) * n..(ib + ii + 1) * n];
+            match bias {
+                Some(bias) => {
+                    for j in 0..n {
+                        orow[j] = (acc[ii * n + j] as f64 * comb[j] + bias[j] as f64) as f32;
+                    }
+                }
+                None => {
+                    for j in 0..n {
+                        orow[j] = (acc[ii * n + j] as f64 * comb[j]) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ f32 × i8 GEMM (mixed)
+
+/// Mixed GEMM for weight-only quantization: f32 activations against
+/// resident i8 weight levels, f64 accumulation, per-output-channel scale
+/// (+ optional bias) epilogue. The accumulation order per row is the same
+/// function of `(k, TILE_K)` as the f32 kernels', so results are bitwise
+/// thread-count-invariant.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_f32i8_scaled_into(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    scale: &[f32],
+    bias: Option<&[f32]>,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    assert_eq!(scale.len(), n);
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), n);
+    }
+    if out.is_empty() {
+        return;
+    }
+    let nt = kernel_threads(m * k * n, m);
+    if nt <= 1 {
+        matmul_f32i8_rows(out, a, b, 0, k, n, scale, bias);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|sc| {
+        for (ti, oc) in out.chunks_mut(chunk * n).enumerate() {
+            sc.spawn(move || matmul_f32i8_rows(oc, a, b, ti * chunk, k, n, scale, bias));
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_f32i8_rows(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[i8],
+    i0: usize,
+    k: usize,
+    n: usize,
+    scale: &[f32],
+    bias: Option<&[f32]>,
+) {
+    let rows = out.len() / n;
+    let mut acc = vec![0.0f64; TILE_I.min(rows.max(1)) * n];
+    for ib in (0..rows).step_by(TILE_I) {
+        let ilen = TILE_I.min(rows - ib);
+        let acc = &mut acc[..ilen * n];
+        acc.fill(0.0);
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(i0 + ib + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                let mut kk = 0;
+                while kk + 4 <= klen {
+                    let a0 = arow[kk] as f64;
+                    let a1 = arow[kk + 1] as f64;
+                    let a2 = arow[kk + 2] as f64;
+                    let a3 = arow[kk + 3] as f64;
+                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                        let b0 = &b[(kb + kk) * n..][..n];
+                        let b1 = &b[(kb + kk + 1) * n..][..n];
+                        let b2 = &b[(kb + kk + 2) * n..][..n];
+                        let b3 = &b[(kb + kk + 3) * n..][..n];
+                        for j in 0..n {
+                            accrow[j] += a0 * b0[j] as f64
+                                + a1 * b1[j] as f64
+                                + a2 * b2[j] as f64
+                                + a3 * b3[j] as f64;
+                        }
+                    }
+                    kk += 4;
+                }
+                while kk < klen {
+                    let av = arow[kk] as f64;
+                    if av != 0.0 {
+                        let brow = &b[(kb + kk) * n..][..n];
+                        for j in 0..n {
+                            accrow[j] += av * brow[j] as f64;
+                        }
+                    }
+                    kk += 1;
+                }
+            }
+        }
+        for ii in 0..ilen {
+            let orow = &mut out[(ib + ii) * n..(ib + ii + 1) * n];
+            match bias {
+                Some(bias) => {
+                    for j in 0..n {
+                        orow[j] = (acc[ii * n + j] * scale[j] as f64 + bias[j] as f64) as f32;
+                    }
+                }
+                None => {
+                    for j in 0..n {
+                        orow[j] = (acc[ii * n + j] * scale[j] as f64) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- i8 im2col
+
+/// [`super::im2col_into`] on level tensors: `x[b,h,w,c] -> cols[b·ho·wo,
+/// k·k·c]` with the same column index convention. Out-of-image taps stay
+/// level 0 (which dequantizes to exactly 0.0 — padding is exact).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_i8_into(
+    cols: &mut [i8],
+    x: &[i8],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    ho: usize,
+    wo: usize,
+) {
+    assert_eq!(x.len(), bsz * h * w * c);
+    assert_eq!(cols.len(), bsz * ho * wo * k * k * c);
+    cols.fill(0);
+    let rowlen = k * k * c;
+    for bi in 0..bsz {
+        for oh in 0..ho {
+            for kh in 0..k {
+                let ih = (oh * stride + kh) as isize - pad as isize;
+                if ih < 0 || ih >= h as isize {
+                    continue;
+                }
+                for ow in 0..wo {
+                    let r = (bi * ho + oh) * wo + ow;
+                    for kw in 0..k {
+                        let iw = (ow * stride + kw) as isize - pad as isize;
+                        if iw < 0 || iw >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + ih as usize) * w + iw as usize) * c;
+                        let dst = r * rowlen + (kh * k + kw) * c;
+                        cols[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Naive reference `a[m,k] @ b[k,n]` on levels: the triple loop the tiled
+/// kernel's property tests compare against — the comparison is **exact
+/// equality**, not a tolerance, because both sides accumulate in i32.
+pub fn matmul_i8_naive(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk] as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j] as i32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{self, QParams};
+    use crate::tensor::ops::THREAD_TEST_LOCK;
+    use crate::tensor::{self, ops};
+    use crate::util::prop;
+
+    fn rand_levels(g: &mut prop::Gen, n: usize, bits: u8) -> Vec<i8> {
+        let cap = (1i32 << (bits - 1)) - 1;
+        (0..n)
+            .map(|_| (g.f32_in(-(cap as f32), cap as f32)).round() as i8)
+            .collect()
+    }
+
+    #[test]
+    fn int_weight_from_levels_gates_i8_range() {
+        let w = IntWeight::from_levels(&[-127, 0, 64, 127], 2, 0.25).unwrap();
+        assert_eq!(w.k, 2);
+        assert_eq!(w.n, 2);
+        assert_eq!(w.max_abs, 127);
+        assert_eq!(w.scale, vec![0.25, 0.25]);
+        assert_eq!(w.levels, vec![-127, 0, 64, 127]);
+        // 9-bit levels must refuse (the f32 fallback handles them)
+        assert!(IntWeight::from_levels(&[200, 0], 1, 0.1).is_none());
+        assert!(IntWeight::from_levels(&[-300, 0], 1, 0.1).is_none());
+        // ragged shape refuses
+        assert!(IntWeight::from_levels(&[1, 2, 3], 2, 0.1).is_none());
+    }
+
+    #[test]
+    fn overflow_gate() {
+        assert!(i8_gemm_fits_i32(1 << 16, 127, 127));
+        assert!(!i8_gemm_fits_i32(1 << 18, 127, 127));
+        assert!(i8_gemm_fits_i32(usize::MAX, 0, 127)); // zero operand never overflows
+    }
+
+    #[test]
+    fn levels_from_grid_inverts_fake_quant_exactly() {
+        // fake_quant puts x on the d-grid; levels_from_grid must recover
+        // the exact quantize_level integer — including at t != 1, where
+        // re-quantizing the output would NOT be a fixed point
+        for &(d, t, qm) in &[(0.05f32, 1.0f32, 1.0f32), (0.031, 1.15, 1.3), (0.11, 0.85, 0.7)] {
+            let qp = QParams { d, t, qm };
+            let xs: Vec<f32> = (-40..40).map(|i| i as f32 * 0.07).collect();
+            let grid: Vec<f32> = xs.iter().map(|&x| quant::fake_quant(x, &qp)).collect();
+            let mut got = vec![0i8; xs.len()];
+            levels_from_grid(&grid, d, &mut got);
+            for (i, &x) in xs.iter().enumerate() {
+                let want = quant::quantize_level(x, &qp);
+                assert_eq!(got[i] as i32, want, "x={x} d={d} t={t} qm={qm}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_i8_hand_values() {
+        // [2,3] @ [3,2] on small levels
+        let a: Vec<i8> = vec![1, -2, 3, 0, 5, -6];
+        let b: Vec<i8> = vec![7, 8, 9, 10, 11, 12];
+        assert_eq!(matmul_i8(&a, &b, 2, 3, 2), vec![22, 24, -21, -22]);
+        // empty contraction is all zeros
+        assert_eq!(matmul_i8(&[], &[], 2, 0, 2), vec![0; 4]);
+    }
+
+    #[test]
+    fn prop_tiled_i8_matches_naive_exactly_across_threads_and_bits() {
+        // exact i32 equality (no tolerance): bits 2..=8, threads 1/2/4,
+        // shapes crossing the tile borders and the spawn threshold
+        let _guard = THREAD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = tensor::configured_threads();
+        for &threads in &[1usize, 2, 4] {
+            tensor::set_threads(threads);
+            prop::check(
+                10,
+                |g| {
+                    let bits = 2 + g.rng.below(7) as u8; // 2..=8
+                    let big = g.f32_in(0.0, 1.0) < 0.4;
+                    let m = if big { 64 + g.size(400) } else { g.size(40) };
+                    let k = g.size(if big { 300 } else { 24 });
+                    let n = g.size(if big { 48 } else { 24 });
+                    let a = rand_levels(g, m * k, bits);
+                    let b = rand_levels(g, k * n, bits);
+                    (bits, m, k, n, a, b)
+                },
+                |(bits, m, k, n, a, b)| {
+                    let (m, k, n) = (*m, *k, *n);
+                    let got = matmul_i8(a, b, m, k, n);
+                    let want = matmul_i8_naive(a, b, m, k, n);
+                    if got == want {
+                        Ok(())
+                    } else {
+                        Err(format!("bits={bits} threads={threads} m={m} k={k} n={n}: mismatch"))
+                    }
+                },
+            );
+        }
+        tensor::set_threads(prev);
+    }
+
+    #[test]
+    fn prop_scaled_i8_matches_f32_reference_on_dequantized_operands() {
+        // the parity argument in miniature: i8×i8 + scale epilogue vs the
+        // f32 kernel on dequantized operands, 1e-4 relative — across bits
+        prop::check(
+            30,
+            |g| {
+                let bits = 2 + g.rng.below(7) as u8;
+                let m = g.size(24);
+                let k = g.size(40);
+                let n = g.size(16);
+                let a = rand_levels(g, m * k, bits);
+                let b = rand_levels(g, k * n, bits);
+                // realistic step sizes (d·2^(b-1) ≈ q_m ≈ 1): keeps the
+                // f32 reference's own per-term rounding well below the
+                // 1e-4 comparison bar even under heavy cancellation
+                let da = g.f32_in(1e-3, 5e-3);
+                let dw = g.f32_in(1e-3, 5e-3);
+                let bias = g.vec_normal(n, 0.5);
+                (m, k, n, a, b, da, dw, bias)
+            },
+            |(m, k, n, a, b, da, dw, bias)| {
+                let (m, k, n) = (*m, *k, *n);
+                let af: Vec<f32> = a.iter().map(|&l| l as f32 * da).collect();
+                let bf: Vec<f32> = b.iter().map(|&l| l as f32 * dw).collect();
+                let mut want = ops::matmul(&af, &bf, m, k, n);
+                for r in 0..m {
+                    ops::axpy(1.0, bias, &mut want[r * n..(r + 1) * n]);
+                }
+                let scale = vec![*dw; n];
+                let mut got = vec![0.0f32; m * n];
+                matmul_i8_scaled_into(&mut got, a, b, m, k, n, &scale, *da, Some(bias));
+                for i in 0..want.len() {
+                    if (got[i] - want[i]).abs() > 1e-4 * (1.0 + want[i].abs()) {
+                        return Err(format!(
+                            "[{i}] int {} vs f32 {} (m={m} k={k} n={n})",
+                            got[i], want[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_mixed_f32i8_matches_f32_reference() {
+        // mixed kernel vs the f32 kernel on the dequantized weight
+        prop::check(
+            30,
+            |g| {
+                let bits = 2 + g.rng.below(7) as u8;
+                let m = g.size(24);
+                let k = g.size(40);
+                let n = g.size(16);
+                let mut a = g.vec_normal(m * k, 1.0);
+                for v in a.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0; // relu-sparse: exercise the zero-skip
+                    }
+                }
+                let b = rand_levels(g, k * n, bits);
+                let dw = g.f32_in(1e-3, 5e-3); // see the scaled test above
+                let bias = g.vec_normal(n, 0.5);
+                (m, k, n, a, b, dw, bias)
+            },
+            |(m, k, n, a, b, dw, bias)| {
+                let (m, k, n) = (*m, *k, *n);
+                let bf: Vec<f32> = b.iter().map(|&l| l as f32 * dw).collect();
+                let mut want = ops::matmul(a, &bf, m, k, n);
+                for r in 0..m {
+                    ops::axpy(1.0, bias, &mut want[r * n..(r + 1) * n]);
+                }
+                let scale = vec![*dw; n];
+                let mut got = vec![0.0f32; m * n];
+                matmul_f32i8_scaled_into(&mut got, a, b, m, k, n, &scale, Some(bias));
+                for i in 0..want.len() {
+                    if (got[i] - want[i]).abs() > 1e-4 * (1.0 + want[i].abs()) {
+                        return Err(format!(
+                            "[{i}] mixed {} vs f32 {} (m={m} k={k} n={n})",
+                            got[i], want[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn int_kernels_are_bitwise_thread_count_invariant() {
+        let _guard = THREAD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = tensor::configured_threads();
+        let mut rng = crate::util::rng::Rng::new(29);
+        let (m, k, n) = (300, 70, 40);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let mut af = vec![0.0f32; m * k];
+        rng.fill_normal(&mut af, 1.0);
+        let scale = vec![0.013f32; n];
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(&mut bias, 0.3);
+        let run = |_: usize| {
+            let raw = matmul_i8(&a, &b, m, k, n);
+            let mut scaled = vec![0.0f32; m * n];
+            matmul_i8_scaled_into(&mut scaled, &a, &b, m, k, n, &scale, 0.07, Some(&bias));
+            let mut mixed = vec![0.0f32; m * n];
+            matmul_f32i8_scaled_into(&mut mixed, &af, &b, m, k, n, &scale, Some(&bias));
+            (raw, scaled, mixed)
+        };
+        tensor::set_threads(1);
+        let base = run(1);
+        for threads in [2usize, 3, 4, 8] {
+            tensor::set_threads(threads);
+            let got = run(threads);
+            assert_eq!(base.0, got.0, "matmul_i8 @ {threads} threads");
+            assert_eq!(base.1, got.1, "matmul_i8_scaled @ {threads} threads");
+            assert_eq!(base.2, got.2, "matmul_f32i8 @ {threads} threads");
+        }
+        tensor::set_threads(prev);
+    }
+
+    #[test]
+    fn im2col_i8_matches_f32_im2col_on_levels() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let (bsz, h, w, c, k, stride) = (2, 5, 4, 3, 3, 1);
+        let (ho, pad) = ops::conv_out_dim(h, k, stride, true);
+        let (wo, _) = ops::conv_out_dim(w, k, stride, true);
+        let x: Vec<i8> = (0..bsz * h * w * c)
+            .map(|_| (rng.below(255) as i32 - 127) as i8)
+            .collect();
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let want = ops::im2col(&xf, bsz, h, w, c, k, stride, pad, ho, wo);
+        let mut got = vec![7i8; want.len()]; // dirty buffer: fill(0) must reset
+        im2col_i8_into(&mut got, &x, bsz, h, w, c, k, stride, pad, ho, wo);
+        for (i, (&g, &wv)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g as f32, wv, "col[{i}]");
+        }
+    }
+}

@@ -4,8 +4,10 @@
 //! f32 buffers with shapes; the numeric helpers (norms, dot, cosine, axpy)
 //! are the Layer-3 hot-path primitives profiled in EXPERIMENTS.md §Perf.
 
+pub mod iops;
 pub mod ops;
 
+pub use iops::*;
 pub use ops::*;
 
 #[derive(Debug, Clone)]
@@ -34,8 +36,23 @@ impl Tensor {
         }
     }
 
+    /// Shape-carrying placeholder with **no data** — for tensors whose
+    /// real payload lives elsewhere (the int8 deploy engine keeps weight
+    /// levels in `IntWeight`s and parks only the shape here for slice
+    /// propagation). `numel()` still reports the shape product; reading
+    /// `data` yields an empty slice, never stale values.
+    pub fn shape_only(name: &str, shape: &[usize]) -> Tensor {
+        Tensor {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Element count **by shape** (equal to `data.len()` for every tensor
+    /// except [`shape_only`](Self::shape_only) placeholders).
     pub fn numel(&self) -> usize {
-        self.data.len()
+        self.shape.iter().product()
     }
 
     /// Number of "output structures" along the prunable axis.
@@ -169,6 +186,16 @@ mod tests {
         assert_eq!(s.total_params(), 10);
         let z = s.zeros_like();
         assert_eq!(z.tensors[1].name, "b");
+    }
+
+    #[test]
+    fn shape_only_reports_shape_numel_with_empty_data() {
+        let t = Tensor::shape_only("w", &[3, 4]);
+        assert_eq!(t.numel(), 12);
+        assert!(t.data.is_empty());
+        // dense tensors agree between shape-numel and data length
+        let d = Tensor::zeros("z", &[2, 5]);
+        assert_eq!(d.numel(), d.data.len());
     }
 
     #[test]

@@ -124,6 +124,13 @@ pub fn configured_threads() -> usize {
     n
 }
 
+/// Serializes the #[test]s that mutate the process-global thread budget:
+/// cargo runs tests concurrently in one binary, so without one shared
+/// lock a concurrent `set_threads()` could retarget a sibling's labeled
+/// runs. Shared by the `ops` and `iops` test modules.
+#[cfg(test)]
+pub(crate) static THREAD_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 thread_local! {
     static SERIAL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
 }
@@ -143,8 +150,10 @@ pub fn serial_scope<R>(f: impl FnOnce() -> R) -> R {
 
 /// Worker count for a kernel doing `work` multiply-adds over `rows`
 /// partitionable output rows: 1 inside [`serial_scope`] or when the job is
-/// too small to amortize a spawn, else the configured budget.
-fn kernel_threads(work: usize, rows: usize) -> usize {
+/// too small to amortize a spawn, else the configured budget. Shared with
+/// the integer kernels (`iops.rs`) so both halves of the executor honor
+/// one thread budget.
+pub(crate) fn kernel_threads(work: usize, rows: usize) -> usize {
     const MIN_WORK_PER_THREAD: usize = 1 << 16;
     if work < 2 * MIN_WORK_PER_THREAD || SERIAL.with(|s| s.get()) {
         return 1;
@@ -163,8 +172,10 @@ fn kernel_threads(work: usize, rows: usize) -> usize {
 // ground truth the property tests compare against and the baseline
 // `BENCH_runtime.json` measures speedups over.
 
-const TILE_I: usize = 16;
-const TILE_K: usize = 256;
+// Shared with the integer kernels (`iops.rs`), which promise the same
+// per-row accumulation order as the f32 kernels — a tune here retunes both.
+pub(crate) const TILE_I: usize = 16;
+pub(crate) const TILE_K: usize = 256;
 
 /// `a[m,k] @ b[k,n]` (row-major flat buffers) — tiled + threaded.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -1012,11 +1023,6 @@ mod tests {
             },
         );
     }
-
-    /// Serializes the tests that mutate the process-global thread budget:
-    /// cargo runs #[test]s concurrently in one binary, so without this a
-    /// concurrent set_threads() could retarget a sibling's labeled runs.
-    static THREAD_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     #[test]
     fn prop_tiled_matmuls_match_naive_reference_across_thread_counts() {
