@@ -3,7 +3,7 @@
 # The Rust build and tests do NOT need this — the native reference backend
 # covers the hermetic path (see README.md §Backends).
 
-.PHONY: artifacts vectors test build bench-json clean
+.PHONY: artifacts vectors test build bench-json bench-serve clean
 
 build:
 	cargo build --release
@@ -19,6 +19,13 @@ test:
 # trajectory is diffable across PRs.
 bench-json:
 	cargo bench --bench bench_runtime
+
+# serving sweep: trains mlp_tiny briefly, then drives the coalescing
+# server across workers x batch-window x load (0 rps = saturation probe)
+# and merges the latency/throughput rows into the checked-in
+# BENCH_serve.json (see README.md §Serving).
+bench-serve:
+	cargo run --release -- bench-serve --model mlp_tiny --json
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -1,119 +1,133 @@
-//! Compression-as-a-service demo: a std-thread worker pool (the offline
-//! substitute for a tokio runtime) serves evaluation requests against a
-//! GETA-compressed model with bounded queues for backpressure.
+//! Compression-as-a-service demo — a thin client of the `geta::serve`
+//! subsystem.
 //!
-//! Layer-3 owns the event loop and process topology: a leader thread
-//! accepts synthetic requests, routes them to workers over an mpsc
-//! channel, each worker owns its own backend (thread-confined, no locks
-//! on the hot path), and results stream back with latency stats. Works
-//! against both backends: PJRT when artifacts exist, NativeEngine
-//! otherwise.
+//! Trains `mlp_tiny` briefly, exports it to an in-memory `.geta`
+//! container, loads that artifact **once** into a shared engine
+//! (`serve::ModelCache`), and fronts it with `serve::Server`: bounded
+//! queue, request coalescing, worker pool, latency histograms. The
+//! client then serves the eval set through it and checks two things the
+//! old version of this example got wrong:
+//!
+//! 1. **Trained weights are served.** The historical bug: each worker
+//!    called `init_params(seed)` and served fresh random weights, so
+//!    every reported loss was the ~ln(classes) of an untrained model.
+//!    Now the served cross-entropy must beat that random baseline.
+//! 2. **Serving changes nothing.** Each request's served logits must be
+//!    bitwise identical to calling `engine.infer` directly — coalescing
+//!    preserves per-request micro-batch boundaries by construction.
 //!
 //! Run: `cargo run --release --example compression_service`
 
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::Duration;
 
-use geta::config::ExperimentConfig;
 use geta::data::BatchIter;
-use geta::runtime::{load_backend, Backend as _};
+use geta::deploy::{GetaEngine, KernelKind};
+use geta::runtime::HostArray;
+use geta::serve::{ModelCache, ServeConfig, ServeError, Server};
 
 const WORKERS: usize = 2;
 const REQUESTS: usize = 24;
 const QUEUE_DEPTH: usize = 4; // backpressure bound
+const BATCH: usize = 32; // samples per request
 
-struct Request {
-    id: usize,
-    idxs: Vec<usize>,
-    sent: Instant,
-}
-
-struct Response {
-    id: usize,
-    loss: f32,
-    latency_ms: f64,
+/// Mean softmax cross-entropy of a batch of served logits — computed
+/// client-side, so it measures exactly what the service returned.
+fn batch_loss(logits: &[f32], labels: &[i32], ncls: usize) -> f64 {
+    let mut total = 0.0f64;
+    for (i, &lab) in labels.iter().enumerate() {
+        let row = &logits[i * ncls..(i + 1) * ncls];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f64 = row.iter().map(|&v| ((v - m) as f64).exp()).sum();
+        total += (sum.ln() + m as f64) - row[lab as usize] as f64;
+    }
+    total / labels.len().max(1) as f64
 }
 
 fn main() -> anyhow::Result<()> {
-    let art = std::path::Path::new("artifacts");
-    let exp = ExperimentConfig::defaults_for("mlp_tiny");
-    // shared dataset (read-only)
-    let (_, eval) = geta::data::SynthData::for_model(
-        &load_backend(art, "mlp_tiny")?.manifest().config,
-        64,
-        512,
-        3,
+    let art_dir = std::path::Path::new("artifacts");
+
+    // ---- train + export once (this is where the weights come from) ----
+    println!("training mlp_tiny (short run) and exporting a .geta container...");
+    let trained = geta::report::train_export(art_dir, "mlp_tiny", 0.12, 0.5)?;
+    println!(
+        "trained: acc {:.2}%  rel BOPs {:.2}%  sparsity {:.2}",
+        trained.result.accuracy, trained.result.rel_bops, trained.result.group_sparsity
     );
-    let eval = std::sync::Arc::new(eval);
 
-    let (req_tx, req_rx) = mpsc::sync_channel::<Request>(QUEUE_DEPTH);
-    let req_rx = std::sync::Arc::new(std::sync::Mutex::new(req_rx));
-    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    // ---- load ONCE into the shared cache; workers share the Arc ----
+    let cache = ModelCache::new(KernelKind::Int8);
+    let mut engine = GetaEngine::from_container_kernel(&trained.container, KernelKind::Int8)?;
+    engine.threads = 1; // the server parallelizes across workers
+    let engine = Arc::new(engine);
+    cache.put("mlp_tiny", Arc::clone(&engine));
+    let ncls = engine.output_per_sample();
 
-    let mut handles = Vec::new();
-    for w in 0..WORKERS {
-        let rx = req_rx.clone();
-        let tx = resp_tx.clone();
-        let eval = eval.clone();
-        let exp = exp.clone();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
-            // each worker owns its engine + weights (no shared mutable state)
-            let engine = load_backend(std::path::Path::new("artifacts"), "mlp_tiny")?;
-            let params = engine.init_params(exp.seed);
-            let q = engine.init_qparams(&params, 8.0);
-            loop {
-                let req = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
-                let Ok(req) = req else { break };
-                let (x, y) = eval.batch(&req.idxs);
-                let out = engine.eval_step(&params, &q, &x, &y)?;
-                tx.send(Response {
-                    id: req.id,
-                    loss: out.loss,
-                    latency_ms: req.sent.elapsed().as_secs_f64() * 1e3,
-                })
-                .ok();
-            }
-            println!("worker {w} drained");
-            Ok(())
-        }));
-    }
-    drop(resp_tx);
+    let server = Server::start(
+        cache.get("mlp_tiny").expect("just cached"),
+        ServeConfig {
+            workers: WORKERS,
+            queue_depth: QUEUE_DEPTH,
+            batch_window: Duration::from_micros(300),
+            max_batch: 4,
+        },
+    );
 
-    // leader: submit requests (sync_channel blocks when queue is full —
-    // that IS the backpressure)
-    let t0 = Instant::now();
-    let mut it = BatchIter::new(eval.len(), 32, 5);
+    // ---- the client: serve eval batches, keep labels for scoring ----
+    let eval = &trained.trainer.eval_data;
+    let mut it = BatchIter::new(eval.len(), BATCH, 5);
+    let mut in_flight = Vec::new();
+    let mut shed_retries = 0usize;
     for id in 0..REQUESTS {
         let idxs = it.next_batch();
-        req_tx
-            .send(Request {
-                id,
-                idxs,
-                sent: Instant::now(),
-            })
-            .unwrap();
+        let (x, y) = eval.batch(&idxs);
+        // bounded queue: a full queue sheds with a typed error; this
+        // client's policy is retry-until-admitted
+        let ticket = loop {
+            match server.submit(x.clone()) {
+                Ok(t) => break t,
+                Err(ServeError::QueueFull { .. }) => {
+                    shed_retries += 1;
+                    std::thread::yield_now();
+                }
+                Err(e) => anyhow::bail!("submit failed: {e}"),
+            }
+        };
+        in_flight.push((id, x, y, ticket));
     }
-    drop(req_tx);
 
-    let mut lat: Vec<f64> = Vec::new();
-    for resp in resp_rx {
-        lat.push(resp.latency_ms);
-        println!("resp {:>3}: loss {:.4}  latency {:.1} ms", resp.id, resp.loss, resp.latency_ms);
+    let random_baseline = (ncls as f64).ln();
+    let mut served_mean = 0.0f64;
+    for (id, x, y, ticket) in in_flight {
+        let reply = ticket.wait()?;
+        // serving must not change results: bitwise-identical to a
+        // direct engine call on the same request
+        assert_eq!(reply.logits, engine.infer(&x)?, "served logits drifted");
+        let HostArray::I32(labels) = &y else {
+            anyhow::bail!("image task expects i32 labels")
+        };
+        let loss = batch_loss(&reply.logits, labels, ncls);
+        served_mean += loss / REQUESTS as f64;
+        println!(
+            "resp {id:>3}: loss {:.4}  latency {:.2} ms",
+            loss,
+            reply.latency.as_secs_f64() * 1e3
+        );
     }
-    for h in handles {
-        h.join().unwrap()?;
-    }
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let total = t0.elapsed().as_secs_f64();
+
+    let report = server.shutdown();
     println!(
-        "\nserved {REQUESTS} requests in {:.2}s  ({:.1} req/s)  p50 {:.1} ms  p95 {:.1} ms",
-        total,
-        REQUESTS as f64 / total,
-        lat[lat.len() / 2],
-        lat[(lat.len() * 95 / 100).min(lat.len() - 1)]
+        "\nserved {} requests ({} batches, {} shed-retries): {}",
+        report.stats.completed, report.stats.batches, shed_retries, report.histogram.summary()
     );
+    println!(
+        "served loss {served_mean:.4} vs random-init baseline {random_baseline:.4} (ln {ncls})"
+    );
+    anyhow::ensure!(
+        served_mean < random_baseline,
+        "served loss {served_mean:.4} does not beat the untrained baseline \
+         {random_baseline:.4} — the service is not serving trained weights"
+    );
+    println!("OK: the service serves the trained weights, not random init");
     Ok(())
 }

@@ -44,6 +44,25 @@
 //! threading never oversubscribe the machine; a single large batch that
 //! collapses to one chunk instead lets the kernels use the full
 //! `GETA_THREADS` budget.
+//!
+//! Concurrency: the engine is **safe to share across threads and
+//! lock-free on the hot path**. Scratch buffers come from an
+//! [`exec::ArenaPool`] whose lock is held only to pop/push an arena —
+//! never across a forward pass — so concurrent `infer` callers (a serving
+//! worker pool holding one `Arc<GetaEngine>`) do not serialize on each
+//! other, and repeated calls keep reusing warmed buffers on *both* the
+//! sequential and the thread-sharded path. One-off plans for non-default
+//! chunk sizes (tail chunks, single-sample serving requests) are memoized
+//! in a per-size plan cache, so a stream of same-shaped requests resolves
+//! shapes exactly once.
+//!
+//! [`GetaEngine::infer_many`] is the request-coalescing entry point the
+//! `serve` subsystem batches through: each request keeps **its own**
+//! micro-batch chunk boundaries (exactly the chunks a solo `infer` call
+//! would produce — so batch-statistics normalization, and therefore every
+//! logit, is bitwise identical to per-request inference), but the merged
+//! chunk list is executed in one pass: one arena draw, one worker scope,
+//! one plan-cache hit per distinct chunk size.
 
 use std::collections::BTreeMap;
 
@@ -52,7 +71,9 @@ use anyhow::{Context, Result};
 use super::format::{GetaContainer, Payload, SiteKind};
 use crate::graph::builders;
 use crate::quant::QParams;
-use crate::runtime::exec::{self, Arena, DeployParams, Input, ParamSource, Plan, QuantizedParams};
+use crate::runtime::exec::{
+    self, Arena, ArenaPool, DeployParams, Input, ParamSource, Plan, QuantizedParams,
+};
 use crate::runtime::lowering::{self, OpKind, Program};
 use crate::runtime::HostArray;
 use crate::tensor::{self, IntWeight, ParamStore, Tensor};
@@ -92,7 +113,12 @@ pub struct GetaEngine {
     /// substitutes the runtime micro-batch size.
     program: Program,
     /// Shape-resolved plan for `micro_batch`, built once at load.
-    plan: Plan,
+    plan: std::sync::Arc<Plan>,
+    /// Memoized plans for non-default chunk sizes (tail chunks, serving
+    /// requests smaller than a micro-batch). Keyed by batch size; bounded
+    /// because chunk sizes never exceed `micro_batch`. The lock is held
+    /// only to look up or insert an `Arc` — never across a forward pass.
+    plans: std::sync::Mutex<BTreeMap<usize, std::sync::Arc<Plan>>>,
     weights: ParamStore,
     /// i8-resident weight tensors (Int8 kernel only; empty otherwise).
     /// Tensors present here keep only their shape in `weights`.
@@ -112,11 +138,11 @@ pub struct GetaEngine {
     pub micro_batch: usize,
     /// Worker threads for [`infer`](Self::infer) (1 = sequential).
     pub threads: usize,
-    /// Buffer pool reused across `infer` calls on the sequential path
-    /// (worker threads keep their own short-lived arenas). A `Mutex` so
-    /// the engine stays shareable across the worker scope; it is only
-    /// locked once per sequential `infer` call, never contended.
-    arena: std::sync::Mutex<Arena>,
+    /// Buffer pool shared by every `infer` path: sequential calls and
+    /// sharding workers alike pop a warmed arena, run lock-free, and push
+    /// it back — so concurrent callers never serialize on scratch space
+    /// and repeated calls reuse buffers on both paths.
+    arenas: ArenaPool,
 }
 
 impl GetaEngine {
@@ -235,13 +261,14 @@ impl GetaEngine {
             }
         }
         let micro_batch = crate::runtime::native::batch_size_for(&c.task);
-        let plan = Plan::new(&program, micro_batch);
+        let plan = std::sync::Arc::new(Plan::new(&program, micro_batch));
         Ok(GetaEngine {
             model: c.model.clone(),
             task: c.task.clone(),
             config,
             program,
             plan,
+            plans: std::sync::Mutex::new(BTreeMap::new()),
             weights,
             iweights,
             weight_sites,
@@ -250,7 +277,7 @@ impl GetaEngine {
             apply_act_quant: true,
             micro_batch,
             threads: tensor::configured_threads(),
-            arena: std::sync::Mutex::new(Arena::new()),
+            arenas: ArenaPool::new(),
         })
     }
 
@@ -262,13 +289,14 @@ impl GetaEngine {
         let task = config.str_or("task", "image_cls");
         let program = lowering::lower(config, &sites, 1)?;
         let micro_batch = crate::runtime::native::batch_size_for(&task);
-        let plan = Plan::new(&program, micro_batch);
+        let plan = std::sync::Arc::new(Plan::new(&program, micro_batch));
         Ok(GetaEngine {
             model: config.str_or("name", "<dense>"),
             task: task.clone(),
             config: config.clone(),
             program,
             plan,
+            plans: std::sync::Mutex::new(BTreeMap::new()),
             weights: params,
             iweights: BTreeMap::new(),
             weight_sites: BTreeMap::new(),
@@ -277,7 +305,7 @@ impl GetaEngine {
             apply_act_quant: false,
             micro_batch,
             threads: tensor::configured_threads(),
-            arena: std::sync::Mutex::new(Arena::new()),
+            arenas: ArenaPool::new(),
         })
     }
 
@@ -324,33 +352,60 @@ impl GetaEngine {
     /// the chunks sharded across threads; outputs are stitched back in
     /// input order, so results are identical for any thread count.
     pub fn infer(&self, x: &HostArray) -> Result<Vec<f32>> {
+        let mut out = self.infer_many(&[x])?;
+        Ok(out.pop().expect("one request in, one logits vector out"))
+    }
+
+    /// Run several independent requests in one pass and return one logits
+    /// vector per request, in request order. Each request is chunked into
+    /// micro-batches **on its own** — the chunk boundaries are exactly the
+    /// ones a solo [`infer`](Self::infer) call would produce, so
+    /// batch-statistics normalization (and therefore every logit) is
+    /// bitwise identical to per-request inference. The merged chunk list
+    /// is what gets sharded across threads, so a coalesced batch pays for
+    /// one arena draw and one worker scope instead of one per request.
+    pub fn infer_many(&self, xs: &[&HostArray]) -> Result<Vec<Vec<f32>>> {
         let per = self.input_per_sample();
         anyhow::ensure!(per > 0, "degenerate model input");
-        let n = x.len() / per;
-        anyhow::ensure!(n * per == x.len(), "input length {} not a multiple of {per}", x.len());
-        match (self.input_kind(), x) {
-            (InputKind::F32, HostArray::F32(_)) | (InputKind::I32, HostArray::I32(_)) => {}
-            (k, _) => anyhow::bail!("model expects {k:?} inputs"),
-        }
+        let kind = self.input_kind();
+        let mut counts = Vec::with_capacity(xs.len());
+        // chunk list across all requests: (request, start sample, samples)
+        let mut chunks: Vec<(usize, usize, usize)> = Vec::new();
         let mb = self.micro_batch.max(1);
-        let chunks: Vec<(usize, usize)> = (0..n)
-            .step_by(mb)
-            .map(|s| (s, mb.min(n - s)))
-            .collect();
+        for (r, x) in xs.iter().enumerate() {
+            let n = x.len() / per;
+            anyhow::ensure!(
+                n * per == x.len(),
+                "request {r}: input length {} not a multiple of {per}",
+                x.len()
+            );
+            match (kind, x) {
+                (InputKind::F32, HostArray::F32(_)) | (InputKind::I32, HostArray::I32(_)) => {}
+                (k, _) => anyhow::bail!("request {r}: model expects {k:?} inputs"),
+            }
+            counts.push(n);
+            chunks.extend((0..n).step_by(mb).map(|s| (r, s, mb.min(n - s))));
+        }
+        let slice_input = |&(r, start, len): &(usize, usize, usize)| match xs[r] {
+            HostArray::F32(v) => Input::F32(&v[start * per..(start + len) * per]),
+            HostArray::I32(v) => Input::I32(&v[start * per..(start + len) * per]),
+        };
         let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); chunks.len()];
         let nthreads = self.threads.max(1).min(chunks.len().max(1));
         if nthreads <= 1 {
-            // sequential chunks: the engine's persistent arena carries
-            // buffers across infer() calls, and the shared kernels keep
-            // their full thread budget
-            let mut arena = self.arena.lock().unwrap_or_else(|e| e.into_inner());
-            for (slot, &(start, len)) in outputs.iter_mut().zip(&chunks) {
-                let xin = match x {
-                    HostArray::F32(v) => Input::F32(&v[start * per..(start + len) * per]),
-                    HostArray::I32(v) => Input::I32(&v[start * per..(start + len) * per]),
-                };
-                *slot = self.forward_chunk(&xin, len, &mut arena)?;
-            }
+            // sequential chunks: one pooled arena carries buffers across
+            // the whole call (and, via the pool, across calls), and the
+            // shared kernels keep their full thread budget
+            let mut arena = self.arenas.take();
+            let run = || -> Result<()> {
+                for (slot, c) in outputs.iter_mut().zip(&chunks) {
+                    *slot = self.forward_chunk(&slice_input(c), c.2, &mut arena)?;
+                }
+                Ok(())
+            };
+            let res = run();
+            self.arenas.give(arena);
+            res?;
         } else {
             // static round-robin partition: each worker owns disjoint slots
             let mut per_thread: Vec<Vec<(usize, &mut Vec<f32>)>> =
@@ -359,26 +414,21 @@ impl GetaEngine {
                 per_thread[i % nthreads].push((i, slot));
             }
             let chunks = &chunks;
+            let slice_input = &slice_input;
             std::thread::scope(|sc| -> Result<()> {
                 let mut handles = Vec::new();
                 for list in per_thread {
                     handles.push(sc.spawn(move || -> Result<()> {
-                        tensor::serial_scope(|| -> Result<()> {
-                            let mut arena = Arena::new();
+                        let mut arena = self.arenas.take();
+                        let res = tensor::serial_scope(|| -> Result<()> {
                             for (ci, slot) in list {
-                                let (start, len) = chunks[ci];
-                                let xin = match x {
-                                    HostArray::F32(v) => {
-                                        Input::F32(&v[start * per..(start + len) * per])
-                                    }
-                                    HostArray::I32(v) => {
-                                        Input::I32(&v[start * per..(start + len) * per])
-                                    }
-                                };
-                                *slot = self.forward_chunk(&xin, len, &mut arena)?;
+                                let c = &chunks[ci];
+                                *slot = self.forward_chunk(&slice_input(c), c.2, &mut arena)?;
                             }
                             Ok(())
-                        })
+                        });
+                        self.arenas.give(arena);
+                        res
                     }));
                 }
                 for h in handles {
@@ -388,17 +438,33 @@ impl GetaEngine {
             })?;
         }
         let out_per = self.output_per_sample();
-        let mut out = Vec::with_capacity(n * out_per);
-        for o in outputs {
-            out.extend_from_slice(&o);
+        let mut results: Vec<Vec<f32>> =
+            counts.iter().map(|&n| Vec::with_capacity(n * out_per)).collect();
+        for (o, &(r, ..)) in outputs.iter().zip(&chunks) {
+            results[r].extend_from_slice(o);
         }
-        debug_assert_eq!(out.len(), n * out_per);
-        Ok(out)
+        for (r, (res, &n)) in results.iter().zip(&counts).enumerate() {
+            debug_assert_eq!(res.len(), n * out_per, "request {r}: stitched output length");
+        }
+        Ok(results)
+    }
+
+    /// Shape-resolved plan for a chunk of `bsz` samples: the prebuilt plan
+    /// for full micro-batches, a memoized one for any other size.
+    fn plan_for(&self, bsz: usize) -> std::sync::Arc<Plan> {
+        if bsz == self.plan.bsz {
+            return self.plan.clone();
+        }
+        let mut plans = self.plans.lock().unwrap_or_else(|e| e.into_inner());
+        plans
+            .entry(bsz)
+            .or_insert_with(|| std::sync::Arc::new(Plan::new(&self.program, bsz)))
+            .clone()
     }
 
     /// One micro-batch forward over the sliced program via the shared
     /// planned executor. The engine's prebuilt plan serves full
-    /// micro-batches; a tail chunk resolves a one-off plan for its size.
+    /// micro-batches; other chunk sizes hit the memoized plan cache.
     fn forward_chunk(&self, x: &Input<'_>, bsz: usize, arena: &mut Arena) -> Result<Vec<f32>> {
         let f32_src;
         let int_src;
@@ -422,14 +488,8 @@ impl GetaEngine {
                 &int_src
             }
         };
-        let tail_plan;
-        let plan = if bsz == self.plan.bsz {
-            &self.plan
-        } else {
-            tail_plan = Plan::new(&self.program, bsz);
-            &tail_plan
-        };
-        let (mut vals, _aux) = exec::forward(&self.program, plan, src, x, false, arena)?;
+        let plan = self.plan_for(bsz);
+        let (mut vals, _aux) = exec::forward(&self.program, &plan, src, x, false, arena)?;
         let out = std::mem::take(vals.last_mut().expect("program has at least one node"));
         arena.reclaim_all(vals);
         Ok(out)

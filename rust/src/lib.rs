@@ -58,6 +58,18 @@
 //! levels, mixed f32×i8 elsewhere, the dequantization scales folded into
 //! a per-output-channel epilogue — so the learned bit widths buy measured
 //! wall-clock, not just a BOPs column.
+//!
+//! The **serve** subsystem puts the compressed artifact behind a request
+//! path: `serve::ModelCache` loads each `.geta` model once into an
+//! `Arc<GetaEngine>` shared read-only by every worker, `serve::Server`
+//! fronts it with a bounded queue (typed load-shedding at saturation,
+//! never an unbounded block), a request coalescer that merges queued
+//! requests into one `infer_many` call under a configurable latency
+//! budget — bitwise identical to per-request inference, because each
+//! request keeps its own micro-batch chunk boundaries — and per-request
+//! p50/p95/p99 latency histograms; `serve::loadgen` is the open-loop
+//! synthetic load generator behind `geta serve` and `geta bench-serve`
+//! (RPS × batch-window × workers sweeps into `BENCH_serve.json`).
 
 pub mod util;
 pub mod tensor;
@@ -69,6 +81,7 @@ pub mod data;
 pub mod metrics;
 pub mod subnet;
 pub mod deploy;
+pub mod serve;
 pub mod baselines;
 pub mod coordinator;
 pub mod config;

@@ -11,6 +11,14 @@
 //!                                              and int8 kernels) wall-clock
 //!                                              (--json: BENCH_runtime.json +
 //!                                              BENCH_deploy.json at repo root)
+//!   geta serve  --model <name> | --file f.geta batched, back-pressured inference
+//!                                              service driven by an open-loop
+//!                                              load generator (--rps/--requests/
+//!                                              --workers/--batch-window-us)
+//!   geta bench-serve --model <name> [--json]   serving latency/throughput sweep
+//!                                              over RPS x batch-window x workers
+//!                                              (--json: BENCH_serve.json at repo
+//!                                              root)
 //!   geta repro  <table2|..|fig4b|deploy|all>
 //!   geta bench  [--iters N]                    runtime micro-benchmarks
 //!   geta models                                list AOT artifacts
@@ -65,6 +73,8 @@ fn main() -> Result<()> {
         Some("export") => cmd_export(&a),
         Some("infer") => cmd_infer(&a),
         Some("bench-infer") => cmd_bench_infer(&a),
+        Some("serve") => cmd_serve(&a),
+        Some("bench-serve") => cmd_bench_serve(&a),
         Some("repro") => cmd_repro(&a),
         Some("bench") => cmd_bench(&a),
         None if a.flag("list-models") => {
@@ -79,12 +89,15 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "geta — joint structured pruning + quantization-aware training\n\n\
-                 usage: geta <models|graph|train|export|infer|bench-infer|repro|bench> [options]\n\
+                 usage: geta <models|graph|train|export|infer|bench-infer|serve|bench-serve|repro|bench> [options]\n\
                    geta graph --model vgg7_mini\n\
                    geta train --model resnet_mini --sparsity 0.35 --verbose\n\
                    geta export --model resnet_mini --sparsity 0.5 --out resnet.geta\n\
                    geta infer --file resnet.geta --n 256 --threads 4 [--int8]\n\
                    geta bench-infer --model resnet_mini --iters 10 --json\n\
+                   geta serve --model mlp_tiny --rps 500 --workers 2 --batch-window-us 500\n\
+                   geta serve --file resnet.geta --requests 512 --rps 0\n\
+                   geta bench-serve --model mlp_tiny --workers 1,2 --windows-us 0,500 --json\n\
                    geta repro all [--steps-scale 0.2]\n\
                    geta bench --iters 20\n\
                    geta --list-models"
@@ -339,6 +352,174 @@ fn cmd_bench_infer(a: &Args) -> Result<()> {
         }
         println!("  wrote {}", path.display());
         println!("  wrote {}", dpath.display());
+    }
+    Ok(())
+}
+
+/// Comma-separated numeric list option (`--workers 1,2,4`), with a
+/// default when the flag is absent.
+fn list_opt<T: std::str::FromStr>(a: &Args, key: &str, default: &[T]) -> Result<Vec<T>>
+where
+    T: Copy,
+{
+    let Some(raw) = a.opt(key) else {
+        return Ok(default.to_vec());
+    };
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(
+            part.parse::<T>()
+                .map_err(|_| anyhow::anyhow!("--{key}: `{part}` is not a number"))?,
+        );
+    }
+    anyhow::ensure!(!out.is_empty(), "--{key}: empty list");
+    Ok(out)
+}
+
+/// Serving kernel: int8 by default (the deployment path serving exists
+/// for), `--f32` to force the dequantized baseline.
+fn serve_kernel(a: &Args) -> geta::deploy::KernelKind {
+    if a.flag("f32") {
+        geta::deploy::KernelKind::F32
+    } else {
+        geta::deploy::KernelKind::Int8
+    }
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    use geta::serve::{loadgen, ModelCache, ServeConfig, Server};
+    let kernel = serve_kernel(a);
+    let cache = ModelCache::new(kernel);
+    // engine + request source: a `.geta` artifact, or an in-process
+    // train + export when only --model is given
+    let (engine, inputs, key) = if let Some(file) = a.opt("file") {
+        let engine = cache.get_or_load(std::path::Path::new(file))?;
+        let n = a.usize_or("distinct-inputs", 64);
+        let (_, eval) = geta::data::SynthData::for_model(engine.config(), 1, n.max(1), 1);
+        (engine, loadgen::single_sample_inputs(&eval, n), file.to_string())
+    } else {
+        let model = resolve_model(a, "mlp_tiny")?;
+        let scale = a.f64_or("steps-scale", 0.12);
+        let sparsity = a.f64_or("sparsity", 0.5);
+        println!("no --file: training {model} in-process (steps-scale {scale})");
+        let art = geta::report::train_export(&art_dir(a), &model, scale, sparsity)?;
+        let mut engine = geta::deploy::GetaEngine::from_container_kernel(&art.container, kernel)?;
+        engine.threads = 1;
+        let engine = std::sync::Arc::new(engine);
+        cache.put(&model, engine.clone());
+        let inputs = loadgen::single_sample_inputs(&art.trainer.eval_data, 64);
+        (engine, inputs, model)
+    };
+    let cfg = ServeConfig {
+        workers: a.usize_or("workers", 2),
+        queue_depth: a.usize_or("queue-depth", 64),
+        batch_window: std::time::Duration::from_micros(a.usize_or("batch-window-us", 500) as u64),
+        max_batch: a.usize_or("max-batch", 8),
+    };
+    let spec = loadgen::LoadSpec {
+        rps: a.f64_or("rps", 500.0),
+        requests: a.usize_or("requests", 512),
+        clients: a.usize_or("clients", if a.f64_or("rps", 500.0) > 0.0 { 1 } else { 4 }),
+    };
+    println!(
+        "serving {key} ({} kernel): {} workers, queue {}, window {}us, max batch {}",
+        kernel.label(),
+        cfg.workers,
+        cfg.queue_depth,
+        cfg.batch_window.as_micros(),
+        cfg.max_batch,
+    );
+    println!(
+        "load: {} requests at {} ({} client{})",
+        spec.requests,
+        if spec.rps > 0.0 {
+            format!("{:.0} rps open-loop", spec.rps)
+        } else {
+            "saturation (pressure mode)".to_string()
+        },
+        spec.clients,
+        if spec.clients == 1 { "" } else { "s" },
+    );
+    let server = Server::start(engine, cfg);
+    let load = loadgen::run(&server, &inputs, &spec);
+    let report = server.shutdown();
+    println!(
+        "\naccepted {}  shed {}  completed {}  failed {}  batches {} (avg batch {:.2})",
+        report.stats.accepted,
+        report.stats.shed,
+        load.completed,
+        load.failed,
+        report.stats.batches,
+        load.completed as f64 / report.stats.batches.max(1) as f64,
+    );
+    println!(
+        "throughput {:.0} req/s over {:.2}s",
+        load.achieved_rps,
+        load.wall.as_secs_f64()
+    );
+    println!("latency: {}", report.histogram.summary());
+    Ok(())
+}
+
+fn cmd_bench_serve(a: &Args) -> Result<()> {
+    let model = resolve_model(a, "mlp_tiny")?;
+    let kernel = serve_kernel(a);
+    let scale = a.f64_or("steps-scale", 0.08);
+    let sparsity = a.f64_or("sparsity", 0.5);
+    let workers = list_opt(a, "workers", &[1usize, 2])?;
+    let windows = list_opt(a, "windows-us", &[0u64, 500])?;
+    let rps = list_opt(a, "rps", &[0.0f64, 500.0])?;
+    let requests = a.usize_or("requests", 400);
+    let queue_depth = a.usize_or("queue-depth", 128);
+    let max_batch = a.usize_or("max-batch", 8);
+    println!(
+        "bench-serve {model} ({} kernel): workers {workers:?} x windows(us) {windows:?} x rps \
+         {rps:?} (0 = saturation), {requests} requests per point",
+        kernel.label(),
+    );
+    let rows = geta::report::bench_serve(
+        &art_dir(a),
+        &model,
+        scale,
+        sparsity,
+        kernel,
+        &workers,
+        &windows,
+        &rps,
+        requests,
+        queue_depth,
+        max_batch,
+    )?;
+    println!(
+        "\n{:>7} {:>10} {:>8} {:>9} {:>9} {:>9} {:>9} {:>6} {:>9}",
+        "workers", "window_us", "rps", "ach_rps", "p50_us", "p95_us", "p99_us", "shed", "avg_batch"
+    );
+    for r in &rows {
+        println!(
+            "{:>7} {:>10} {:>8} {:>9.0} {:>9.0} {:>9.0} {:>9.0} {:>6} {:>9.2}",
+            r.workers,
+            r.batch_window_us,
+            if r.rps_target > 0.0 {
+                format!("{:.0}", r.rps_target)
+            } else {
+                "sat".to_string()
+            },
+            r.achieved_rps,
+            r.p50_us,
+            r.p95_us,
+            r.p99_us,
+            r.shed,
+            r.avg_batch,
+        );
+    }
+    if a.flag("json") {
+        let path = geta::report::bench_serve_json_path();
+        geta::report::write_bench_serve_json(&path, &rows)?;
+        println!("\nwrote {}", path.display());
     }
     Ok(())
 }

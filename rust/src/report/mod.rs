@@ -481,25 +481,34 @@ pub struct DeployBench {
     pub int_sites: usize,
 }
 
-/// Train briefly, export a `.geta` artifact, and time one eval batch
-/// through the dense-f32 engine vs the compressed engine (same executor,
-/// same micro-batch, best of `iters` runs) — once per compute kernel, so
-/// the returned rows compare dense vs f32-dequant vs int8 on the same
-/// container. This is the measured counterpart to the BOPs column in
-/// every paper table.
+/// Outcome of the shared train→export preamble behind `bench-infer`,
+/// `bench-serve`, and the serving demo: a short GETA run exported to an
+/// in-memory `.geta` container, plus everything the caller needs to
+/// build engines and loads from it.
+pub struct TrainedArtifact {
+    /// The trainer (its `eval_data` is the request source for serving).
+    pub trainer: Trainer,
+    pub container: crate::deploy::GetaContainer,
+    pub compressed: crate::subnet::CompressedModel,
+    /// Trained parameters **before** export zeroed the pruned groups —
+    /// what the dense-f32 baseline engine runs.
+    pub dense_params: crate::tensor::ParamStore,
+    pub result: RunResult,
+}
+
+/// Train briefly with GETA and export a `.geta` container, with data and
+/// bit bounds capped for bench wall-clocks.
 ///
 /// The bit upper bound is capped at 8 for these runs: the integer path
 /// serves i8 levels, and the deployment comparison is about that regime —
 /// a site trained past 8 bits would silently fall back to f32 and measure
 /// nothing.
-pub fn bench_deploy(
+pub fn train_export(
     art_dir: &std::path::Path,
     model: &str,
     steps_scale: f64,
     sparsity: f64,
-    iters: usize,
-    threads: usize,
-) -> Result<Vec<DeployBench>> {
+) -> Result<TrainedArtifact> {
     let mut exp = ExperimentConfig::defaults_for(model);
     exp.scale_steps(steps_scale);
     exp.n_train = exp.n_train.min(512);
@@ -529,6 +538,38 @@ pub fn bench_deploy(
         &mut trained.params,
         &trained.q,
     )?;
+    Ok(TrainedArtifact {
+        trainer: t,
+        container,
+        compressed: cm,
+        dense_params,
+        result: trained.result,
+    })
+}
+
+/// Train briefly, export a `.geta` artifact, and time one eval batch
+/// through the dense-f32 engine vs the compressed engine (same executor,
+/// same micro-batch, best of `iters` runs) — once per compute kernel, so
+/// the returned rows compare dense vs f32-dequant vs int8 on the same
+/// container. This is the measured counterpart to the BOPs column in
+/// every paper table.
+pub fn bench_deploy(
+    art_dir: &std::path::Path,
+    model: &str,
+    steps_scale: f64,
+    sparsity: f64,
+    iters: usize,
+    threads: usize,
+) -> Result<Vec<DeployBench>> {
+    let art = train_export(art_dir, model, steps_scale, sparsity)?;
+    let TrainedArtifact {
+        trainer: t,
+        container,
+        compressed: cm,
+        dense_params,
+        result,
+    } = art;
+    let cfg = t.engine.manifest().config.clone();
     let disk_bytes = container.to_bytes().len();
     let mut dense = GetaEngine::dense(&cfg, dense_params)?;
     dense.threads = threads;
@@ -557,15 +598,15 @@ pub fn bench_deploy(
         rows.push(DeployBench {
             model: model.to_string(),
             kernel: kernel.label().to_string(),
-            rel_bops: trained.result.rel_bops,
+            rel_bops: result.rel_bops,
             dense_bytes: cm.size_fp32_before,
             disk_bytes,
             dense_ms,
             compressed_ms,
             batch,
             threads,
-            group_sparsity: trained.result.group_sparsity,
-            avg_bits: trained.result.avg_bits,
+            group_sparsity: result.group_sparsity,
+            avg_bits: result.avg_bits,
             int_sites: comp.int_sites(),
         });
     }
@@ -832,6 +873,216 @@ pub fn write_bench_deploy_json(path: &std::path::Path, deploy: &[DeployBench]) -
     let doc = Json::obj(vec![
         ("note", Json::str(BENCH_DEPLOY_NOTE)),
         ("deploy", Json::Arr(rows)),
+    ]);
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
+}
+
+/// One point of the `geta bench-serve` sweep: a served load run at a
+/// fixed (workers, batch window, target RPS) with its measured latency
+/// quantiles and throughput.
+#[derive(Debug, Clone)]
+pub struct ServeBench {
+    pub model: String,
+    /// Engine compute path behind the server (`"f32" | "int8"`).
+    pub kernel: String,
+    pub workers: usize,
+    /// Coalescing latency budget; 0 = unbatched (`max_batch` 1).
+    pub batch_window_us: u64,
+    /// Most requests merged into one `infer_many` call.
+    pub max_batch: usize,
+    pub queue_depth: usize,
+    /// Open-loop target submissions/s; 0 = saturation (pressure mode:
+    /// clients retry shed requests until admitted).
+    pub rps_target: f64,
+    /// Requests the load generator attempted.
+    pub requests: usize,
+    /// Requests admitted to the queue.
+    pub accepted: u64,
+    /// `QueueFull` rejections (open-loop: lost; saturation: retried).
+    pub shed: u64,
+    /// Requests answered with logits.
+    pub completed: usize,
+    /// `infer_many` calls the workers issued.
+    pub batches: u64,
+    /// Achieved requests per coalesced batch (`completed / batches`).
+    pub avg_batch: f64,
+    /// Completions per second of wall clock, client-side.
+    pub achieved_rps: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub max_us: f64,
+}
+
+/// Train + export `model` once, then sweep the serving stack over
+/// `workers × windows_us × rps` with single-sample requests drawn from
+/// the eval set — one [`ServeBench`] row per grid point. A window of 0
+/// serves unbatched (`max_batch` 1): the baseline the coalescer's rows
+/// are compared against. `rps <= 0` grid points run the saturation probe
+/// (pressure-mode clients), whose `achieved_rps` is the sustainable
+/// throughput number.
+///
+/// The engine serves with `threads = 1`: the server parallelizes across
+/// workers, and the smoke-job comparison ("batched ≥ unbatched at the
+/// same worker count") needs both modes spending their threads the same
+/// way.
+pub fn bench_serve(
+    art_dir: &std::path::Path,
+    model: &str,
+    steps_scale: f64,
+    sparsity: f64,
+    kernel: KernelKind,
+    workers_sweep: &[usize],
+    windows_us: &[u64],
+    rps_sweep: &[f64],
+    requests: usize,
+    queue_depth: usize,
+    max_batch: usize,
+) -> Result<Vec<ServeBench>> {
+    use crate::serve::{loadgen, ServeConfig, Server};
+    let art = train_export(art_dir, model, steps_scale, sparsity)?;
+    let mut engine = GetaEngine::from_container_kernel(&art.container, kernel)?;
+    engine.threads = 1;
+    let engine = std::sync::Arc::new(engine);
+    let inputs = loadgen::single_sample_inputs(&art.trainer.eval_data, 64);
+    let mut rows = Vec::new();
+    for &workers in workers_sweep {
+        for &window_us in windows_us {
+            for &rps in rps_sweep {
+                let (window, batch) = if window_us == 0 {
+                    (std::time::Duration::ZERO, 1)
+                } else {
+                    (std::time::Duration::from_micros(window_us), max_batch.max(2))
+                };
+                let server = Server::start(
+                    engine.clone(),
+                    ServeConfig {
+                        workers,
+                        queue_depth,
+                        batch_window: window,
+                        max_batch: batch,
+                    },
+                );
+                let spec = loadgen::LoadSpec {
+                    rps,
+                    requests,
+                    clients: if rps > 0.0 { 1 } else { 4 },
+                };
+                let load = loadgen::run(&server, &inputs, &spec);
+                let report = server.shutdown();
+                let h = &report.histogram;
+                rows.push(ServeBench {
+                    model: model.to_string(),
+                    kernel: kernel.label().to_string(),
+                    workers,
+                    batch_window_us: window_us,
+                    max_batch: batch,
+                    queue_depth,
+                    rps_target: rps.max(0.0),
+                    requests,
+                    accepted: report.stats.accepted,
+                    shed: report.stats.shed,
+                    completed: load.completed,
+                    batches: report.stats.batches,
+                    avg_batch: load.completed as f64 / report.stats.batches.max(1) as f64,
+                    achieved_rps: load.achieved_rps,
+                    p50_us: h.p50_us(),
+                    p95_us: h.p95_us(),
+                    p99_us: h.p99_us(),
+                    mean_us: h.mean_us(),
+                    max_us: h.max_us(),
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// One `serve` row as JSON (field names are the `BENCH_serve.json`
+/// schema).
+fn serve_row_json(r: &ServeBench) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("model", Json::str(&r.model)),
+        ("kernel", Json::str(&r.kernel)),
+        ("workers", Json::Num(r.workers as f64)),
+        ("batch_window_us", Json::Num(r.batch_window_us as f64)),
+        ("max_batch", Json::Num(r.max_batch as f64)),
+        ("queue_depth", Json::Num(r.queue_depth as f64)),
+        ("rps_target", Json::Num(r.rps_target)),
+        ("requests", Json::Num(r.requests as f64)),
+        ("accepted", Json::Num(r.accepted as f64)),
+        ("shed", Json::Num(r.shed as f64)),
+        ("completed", Json::Num(r.completed as f64)),
+        ("batches", Json::Num(r.batches as f64)),
+        ("avg_batch", Json::Num(r.avg_batch)),
+        ("achieved_rps", Json::Num(r.achieved_rps)),
+        ("p50_us", Json::Num(r.p50_us)),
+        ("p95_us", Json::Num(r.p95_us)),
+        ("p99_us", Json::Num(r.p99_us)),
+        ("mean_us", Json::Num(r.mean_us)),
+        ("max_us", Json::Num(r.max_us)),
+    ])
+}
+
+/// Where the serving latency/throughput summary goes (see
+/// [`repo_root_file`]). Checked in like `BENCH_deploy.json`, so the
+/// serving trajectory is diffable across PRs.
+pub fn bench_serve_json_path() -> std::path::PathBuf {
+    repo_root_file("BENCH_serve.json")
+}
+
+/// The fixed `note` field of `BENCH_serve.json` — emitted verbatim on
+/// every write so the checked-in copy regenerates byte-stable apart from
+/// genuinely new measurements.
+const BENCH_SERVE_NOTE: &str =
+    "serving latency/throughput sweep; regenerate with `make bench-serve` or `geta bench-serve \
+     --json` (latencies are machine-dependent). Rows carry model, kernel, workers, \
+     batch_window_us (0 = unbatched, max_batch 1), max_batch, queue_depth, rps_target (0 = \
+     saturation probe with backpressure-aware clients), requests, accepted, shed, completed, \
+     batches, avg_batch, achieved_rps, and latency quantiles p50_us/p95_us/p99_us/mean_us/max_us \
+     from the server's log-bucketed histogram. Writers merge by model: a single-model run \
+     updates only its own rows. CI regenerates the file on mlp_tiny every run, validates this \
+     schema, and asserts saturation throughput with coalescing >= unbatched at the same worker \
+     count.";
+
+/// Write the checked-in serving summary (`BENCH_serve.json`).
+/// **Merge-on-write** by model, like [`write_bench_deploy_json`]; rows
+/// sort by (model, kernel, workers, batch_window_us, rps_target) so
+/// regeneration diffs cleanly.
+pub fn write_bench_serve_json(path: &std::path::Path, serve: &[ServeBench]) -> Result<()> {
+    use crate::util::json::{self, Json};
+    let fresh: std::collections::BTreeSet<&str> = serve.iter().map(|r| r.model.as_str()).collect();
+    let mut rows: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(doc) = json::parse(&text) {
+            if let Some(arr) = doc.get("serve").and_then(|d| d.as_arr()) {
+                for row in arr {
+                    if !fresh.contains(row.str_or("model", "").as_str()) {
+                        rows.push(row.clone());
+                    }
+                }
+            }
+        }
+    }
+    rows.extend(serve.iter().map(serve_row_json));
+    rows.sort_by(|a, b| {
+        let key = |r: &Json| {
+            (
+                r.str_or("model", ""),
+                r.str_or("kernel", ""),
+                r.get("workers").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                r.get("batch_window_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                r.get("rps_target").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            )
+        };
+        key(a).cmp(&key(b))
+    });
+    let doc = Json::obj(vec![
+        ("note", Json::str(BENCH_SERVE_NOTE)),
+        ("serve", Json::Arr(rows)),
     ]);
     std::fs::write(path, doc.to_string())?;
     Ok(())

@@ -376,6 +376,52 @@ impl Arena {
     }
 }
 
+/// Shared pool of [`Arena`]s for callers whose forward passes may run from
+/// many threads at once (a serving engine). The pool's lock is held only to
+/// pop or push an arena — **never across a forward pass** — so concurrent
+/// callers contend for nanoseconds, not for each other's compute, while
+/// steady-state buffer reuse still converges exactly like a single owned
+/// arena: each caller warms whichever arena it drew, and after a few calls
+/// every pooled arena carries the pass's peak working set.
+#[derive(Debug, Default)]
+pub struct ArenaPool {
+    free: std::sync::Mutex<Vec<Arena>>,
+}
+
+impl ArenaPool {
+    /// Arenas kept across calls; beyond this, returned arenas are dropped.
+    /// Sized for "many workers", not "one per request": a serving engine
+    /// needs at most one arena per physically concurrent caller.
+    pub const MAX_POOLED: usize = 64;
+
+    pub fn new() -> ArenaPool {
+        Default::default()
+    }
+
+    /// Take an arena — a warmed pooled one when available, else fresh.
+    pub fn take(&self) -> Arena {
+        self.free
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Return an arena for later calls to reuse (dropped once the pool
+    /// holds [`MAX_POOLED`](Self::MAX_POOLED)).
+    pub fn give(&self, arena: Arena) {
+        let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+        if free.len() < Self::MAX_POOLED {
+            free.push(arena);
+        }
+    }
+
+    /// Arenas currently pooled (test/diagnostic visibility).
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
 /// Per-node saved forward state the training backward pass consumes.
 pub enum Aux {
     None,
@@ -976,6 +1022,27 @@ mod tests {
         assert_eq!(arena.free.len(), Arena::MAX_FREE - 1);
         arena.reclaim(v);
         assert_eq!(arena.free.len(), Arena::MAX_FREE);
+    }
+
+    #[test]
+    fn arena_pool_reuses_warmed_arenas_and_caps() {
+        let pool = ArenaPool::new();
+        let mut a = pool.take();
+        let v = a.alloc(64);
+        a.reclaim(v);
+        pool.give(a);
+        assert_eq!(pool.pooled(), 1);
+        // the warmed arena comes back with its free list intact
+        let mut b = pool.take();
+        assert_eq!(pool.pooled(), 0);
+        let v = b.alloc(32);
+        assert!(v.capacity() >= 64, "pooled arena lost its warmed buffers");
+        b.reclaim(v);
+        pool.give(b);
+        for _ in 0..ArenaPool::MAX_POOLED + 8 {
+            pool.give(Arena::new());
+        }
+        assert_eq!(pool.pooled(), ArenaPool::MAX_POOLED);
     }
 
     #[test]

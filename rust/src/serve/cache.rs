@@ -1,0 +1,83 @@
+//! Shared, load-once model cache for the serving path.
+//!
+//! A server process fronts one or more `.geta` artifacts with many
+//! workers. The expensive part of an engine — the unpacked (and, on the
+//! int8 kernel, weight-stationary i8-resident) parameter panels plus the
+//! shape-resolved plan — must exist **once per model**, not once per
+//! worker: every worker holds the same `Arc<GetaEngine>` and the engine's
+//! own arena pool keeps their scratch spaces from contending. The cache
+//! lock is held across a miss's load, which is exactly the single-load
+//! guarantee: two racing first requests for one model cannot both pay the
+//! unpack.
+//!
+//! Engines are cached with `threads = 1`: a server parallelizes across
+//! requests (workers) rather than within one request, so per-call
+//! micro-batch sharding would only oversubscribe the worker pool.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::deploy::{GetaEngine, KernelKind};
+
+/// Load-once cache of [`GetaEngine`]s keyed by artifact path (or any
+/// caller-chosen key via [`put`](ModelCache::put)).
+pub struct ModelCache {
+    kernel: KernelKind,
+    engines: Mutex<BTreeMap<String, Arc<GetaEngine>>>,
+}
+
+impl ModelCache {
+    /// A cache whose misses load with the given compute kernel
+    /// ([`KernelKind::Int8`] is the serving default: resident i8 panels,
+    /// integer GEMMs, f32 fallback per oversized site).
+    pub fn new(kernel: KernelKind) -> ModelCache {
+        ModelCache {
+            kernel,
+            engines: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The engine for a `.geta` artifact — loaded on first request,
+    /// shared on every later one.
+    pub fn get_or_load(&self, path: &std::path::Path) -> Result<Arc<GetaEngine>> {
+        let key = path.display().to_string();
+        let mut engines = self.engines.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = engines.get(&key) {
+            return Ok(Arc::clone(e));
+        }
+        let mut engine = GetaEngine::load_kernel(path, self.kernel)
+            .with_context(|| format!("loading serving model from {key}"))?;
+        engine.threads = 1;
+        let engine = Arc::new(engine);
+        engines.insert(key, Arc::clone(&engine));
+        Ok(engine)
+    }
+
+    /// Seed the cache with an already-built engine (a server that trains
+    /// or exports in-process). Replaces any previous entry for `key`.
+    pub fn put(&self, key: &str, engine: Arc<GetaEngine>) {
+        self.engines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(key.to_string(), engine);
+    }
+
+    /// The cached engine for `key`, if present (no load on miss).
+    pub fn get(&self, key: &str) -> Option<Arc<GetaEngine>> {
+        self.engines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(key)
+            .map(Arc::clone)
+    }
+
+    pub fn len(&self) -> usize {
+        self.engines.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

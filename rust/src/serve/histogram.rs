@@ -1,0 +1,216 @@
+//! Log-bucketed latency histograms for the serving path.
+//!
+//! Fixed geometric buckets (×1.25 per bucket from 1 µs to beyond 2
+//! minutes, ~80 buckets) so recording is O(log buckets) with no
+//! allocation, and quantiles are read without storing per-request
+//! samples — the histogram costs the same whether it absorbed a hundred
+//! requests or a hundred million. Quantile answers are the upper bound of
+//! the bucket holding the requested rank (clamped to the observed
+//! maximum), so their resolution is the bucket growth factor: within
+//! +25% of the true value, which is the right fidelity for p50/p95/p99
+//! dashboard numbers and for the `BENCH_serve.json` trajectory.
+
+use std::time::Duration;
+
+/// Geometric growth per bucket. Smaller = finer quantiles, more buckets.
+const GROWTH: f64 = 1.25;
+/// Upper bound of the first bucket, in microseconds.
+const FIRST_US: f64 = 1.0;
+/// Everything at or beyond this lands in the final catch-all bucket.
+const LAST_US: f64 = 180e6; // 3 minutes
+
+/// A mergeable log-bucketed histogram of request latencies.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Upper bound (µs) of each bucket; the final bucket is a catch-all.
+    bounds_us: Vec<f64>,
+    counts: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        let mut bounds_us = Vec::new();
+        let mut b = FIRST_US;
+        while b < LAST_US {
+            bounds_us.push(b);
+            b *= GROWTH;
+        }
+        bounds_us.push(f64::INFINITY);
+        let counts = vec![0u64; bounds_us.len()];
+        LatencyHistogram {
+            bounds_us,
+            counts,
+            count: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        let us = latency.as_secs_f64() * 1e6;
+        let i = self.bounds_us.partition_point(|&b| b < us);
+        self.counts[i.min(self.counts.len() - 1)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Recorded request count.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    pub fn min_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_us
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) in microseconds: the upper bound of
+    /// the bucket holding the `ceil(q * count)`-th recorded latency,
+    /// clamped to the observed maximum. 0 when nothing was recorded.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return self.bounds_us[i].min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        self.quantile_us(0.95)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.quantile_us(0.99)
+    }
+
+    /// Fold another histogram into this one (same fixed bucketing by
+    /// construction).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        debug_assert_eq!(self.bounds_us.len(), other.bounds_us.len());
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// One-line human summary (`geta serve` output).
+    pub fn summary(&self) -> String {
+        format!(
+            "n {}  p50 {:.1}us  p95 {:.1}us  p99 {:.1}us  mean {:.1}us  max {:.1}us",
+            self.count,
+            self.p50_us(),
+            self.p95_us(),
+            self.p99_us(),
+            self.mean_us(),
+            self.max_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn us(v: u64) -> Duration {
+        Duration::from_micros(v)
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50_us(), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.min_us(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_track_recorded_values_within_bucket_resolution() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(us(v));
+        }
+        assert_eq!(h.count(), 1000);
+        // bucket upper bounds over-report by at most the growth factor
+        let p50 = h.p50_us();
+        assert!((500.0..=500.0 * GROWTH).contains(&p50), "p50 {p50}");
+        let p99 = h.p99_us();
+        assert!((990.0..=990.0 * GROWTH).contains(&p99), "p99 {p99}");
+        // max is exact, and quantiles never exceed it
+        assert_eq!(h.max_us(), 1000.0);
+        assert!(h.quantile_us(1.0) <= h.max_us());
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn out_of_range_latencies_land_in_edge_buckets() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(1)); // below the first bound
+        h.record(Duration::from_secs(600)); // beyond the last bound
+        assert_eq!(h.count(), 2);
+        assert!(h.max_us() >= 600e6);
+        assert!(h.quantile_us(1.0) <= h.max_us());
+    }
+
+    #[test]
+    fn merge_is_equivalent_to_recording_into_one() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut whole = LatencyHistogram::new();
+        for v in [3u64, 17, 250, 4000, 90_000] {
+            a.record(us(v));
+            whole.record(us(v));
+        }
+        for v in [8u64, 120, 55_000] {
+            b.record(us(v));
+            whole.record(us(v));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.p50_us(), whole.p50_us());
+        assert_eq!(a.p99_us(), whole.p99_us());
+        assert_eq!(a.max_us(), whole.max_us());
+    }
+}

@@ -1,0 +1,150 @@
+//! Open-loop synthetic load generation for `geta serve` / `geta
+//! bench-serve`.
+//!
+//! Open-loop means requests are submitted on a fixed schedule (`rps`)
+//! regardless of how fast the server answers — the standard way to
+//! surface queueing delay, which closed-loop clients (submit → wait →
+//! submit) structurally hide. At saturation an open-loop generator sheds:
+//! rejected requests are counted, not retried, so the measured latencies
+//! describe the requests the server actually admitted.
+//!
+//! `rps <= 0` flips to **pressure mode**: a closed-loop saturation probe
+//! that retries each rejected submission until admitted. This measures
+//! the server's sustainable throughput under backpressure-aware clients —
+//! the number `bench-serve` compares batched vs unbatched on.
+
+use std::time::{Duration, Instant};
+
+use crate::runtime::HostArray;
+
+use super::{ServeError, Server, Ticket};
+
+/// One load-generation run's shape.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSpec {
+    /// Target submissions per second across all clients (`> 0`:
+    /// open-loop, shed on `QueueFull`). `<= 0`: pressure mode (retry
+    /// until admitted).
+    pub rps: f64,
+    /// Total requests to submit.
+    pub requests: usize,
+    /// Concurrent submitter threads. Open-loop interleaves the schedule
+    /// across clients; pressure mode uses them to keep the queue full
+    /// past a single submitter's syscall rate.
+    pub clients: usize,
+}
+
+/// What a load run observed, client-side.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadReport {
+    /// Requests the generator attempted (unique requests, not retries).
+    pub submitted: usize,
+    /// Admissions rejected with `QueueFull` (open-loop: lost requests;
+    /// pressure mode: retried attempts).
+    pub shed: usize,
+    /// Requests answered with logits.
+    pub completed: usize,
+    /// Requests answered with a model error.
+    pub failed: usize,
+    /// First submission to last harvested completion.
+    pub wall: Duration,
+    /// `completed / wall` — the throughput the clients actually got.
+    pub achieved_rps: f64,
+}
+
+/// Drive `server` with `spec.requests` requests drawn round-robin from
+/// `inputs`, then wait for every admitted request. Latency histograms
+/// accumulate server-side; this returns the client-side accounting.
+pub fn run(server: &Server, inputs: &[HostArray], spec: &LoadSpec) -> LoadReport {
+    assert!(!inputs.is_empty(), "load generator needs at least one input");
+    let clients = spec.clients.max(1);
+    let interval = if spec.rps > 0.0 {
+        Duration::from_secs_f64(1.0 / spec.rps)
+    } else {
+        Duration::ZERO
+    };
+    let t0 = Instant::now();
+    let per_client: Vec<(usize, usize, usize, usize)> = std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                sc.spawn(move || {
+                    let mut tickets: Vec<Ticket> = Vec::new();
+                    let mut submitted = 0usize;
+                    let mut shed = 0usize;
+                    let mut i = c;
+                    'submit: while i < spec.requests {
+                        let x = inputs[i % inputs.len()].clone();
+                        if spec.rps > 0.0 {
+                            // open-loop: submit at the scheduled instant,
+                            // shed means lost
+                            let due = t0 + interval.mul_f64(i as f64);
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                            submitted += 1;
+                            match server.submit(x) {
+                                Ok(t) => tickets.push(t),
+                                Err(ServeError::QueueFull { .. }) => shed += 1,
+                                Err(ServeError::ShuttingDown) => break 'submit,
+                            }
+                        } else {
+                            // pressure mode: this request *will* be
+                            // admitted; rejections just mean "queue full
+                            // right now"
+                            submitted += 1;
+                            loop {
+                                match server.submit(x.clone()) {
+                                    Ok(t) => {
+                                        tickets.push(t);
+                                        break;
+                                    }
+                                    Err(ServeError::QueueFull { .. }) => {
+                                        shed += 1;
+                                        std::thread::yield_now();
+                                    }
+                                    Err(ServeError::ShuttingDown) => break 'submit,
+                                }
+                            }
+                        }
+                        i += clients;
+                    }
+                    let mut completed = 0usize;
+                    let mut failed = 0usize;
+                    for t in tickets {
+                        match t.wait() {
+                            Ok(_) => completed += 1,
+                            Err(_) => failed += 1,
+                        }
+                    }
+                    (submitted, shed, completed, failed)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("load client panicked"))
+            .collect()
+    });
+    let wall = t0.elapsed();
+    let mut r = LoadReport {
+        wall,
+        ..Default::default()
+    };
+    for (submitted, shed, completed, failed) in per_client {
+        r.submitted += submitted;
+        r.shed += shed;
+        r.completed += completed;
+        r.failed += failed;
+    }
+    r.achieved_rps = r.completed as f64 / wall.as_secs_f64().max(1e-9);
+    r
+}
+
+/// `n` single-sample request payloads drawn from a dataset — the unit of
+/// work a serving client sends (the coalescer is what builds batches).
+pub fn single_sample_inputs(data: &crate::data::SynthData, n: usize) -> Vec<HostArray> {
+    (0..n.max(1))
+        .map(|i| data.batch(&[i % data.len().max(1)]).0)
+        .collect()
+}

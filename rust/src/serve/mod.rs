@@ -1,0 +1,438 @@
+//! Batched, back-pressured inference serving on top of
+//! [`deploy::GetaEngine`](crate::deploy::GetaEngine).
+//!
+//! ```text
+//!              submit()                 coalesce (≤ batch_window,
+//!   clients ─────────────▶ bounded ────▶ ≤ max_batch)        ┌─────────┐
+//!                          queue        worker threads ─────▶│ engine  │
+//!              ServeError::QueueFull      │                  │ (shared,│
+//!   clients ◀───────────── at capacity    │ infer_many       │ Arc)    │
+//!                                         ▼                  └─────────┘
+//!                          per-request latency ──▶ LatencyHistogram
+//! ```
+//!
+//! The pieces, each its own module:
+//!
+//! * [`ModelCache`] (`cache`) — loads each `.geta` artifact **once** into
+//!   an `Arc<GetaEngine>` shared read-only by every worker; the
+//!   weight-stationary i8 panels are resident exactly once per model, not
+//!   once per worker.
+//! * [`Server`] (this module) — a bounded request queue with explicit
+//!   load-shedding ([`ServeError::QueueFull`] at capacity, never an
+//!   unbounded block), a request coalescer that merges queued requests
+//!   into one [`BatchModel::infer_many`] call under a configurable
+//!   latency budget (`batch_window`), a worker pool, and per-request
+//!   latency recording into a [`LatencyHistogram`]. Shutdown drains: every
+//!   accepted request completes before [`Server::shutdown`] returns.
+//! * [`loadgen`] — an open-loop synthetic load generator (`geta serve` /
+//!   `geta bench-serve`) that submits on a fixed schedule regardless of
+//!   completion, the standard way to surface queueing delay that
+//!   closed-loop clients hide.
+//!
+//! Determinism: coalescing does **not** change results. The engine's
+//! `infer_many` keeps each request's micro-batch chunk boundaries exactly
+//! as a solo `infer` call would produce them, so batch-statistics
+//! normalization — and therefore every logit — is bitwise identical
+//! whether a request was served alone or merged into a batch, at any
+//! (workers, batch_window) setting. `test_serve.rs` pins this.
+//!
+//! Threading: with more than one worker the server pins the shared tiled
+//! kernels to one thread per worker (`tensor::serial_scope`), so worker
+//! parallelism and kernel parallelism never multiply into
+//! oversubscription; a single-worker server lets the engine keep its full
+//! kernel thread budget.
+
+pub mod cache;
+pub mod histogram;
+pub mod loadgen;
+
+pub use cache::ModelCache;
+pub use histogram::LatencyHistogram;
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::HostArray;
+use crate::tensor;
+
+/// Anything a [`Server`] can put behind its queue: answers a coalesced
+/// batch of independent requests with one logits vector per request, in
+/// request order. Implemented by `GetaEngine` (the real thing) and by
+/// test doubles with controlled timing.
+pub trait BatchModel: Send + Sync + 'static {
+    fn infer_many(&self, xs: &[&HostArray]) -> Result<Vec<Vec<f32>>>;
+}
+
+impl BatchModel for crate::deploy::GetaEngine {
+    fn infer_many(&self, xs: &[&HostArray]) -> Result<Vec<Vec<f32>>> {
+        crate::deploy::GetaEngine::infer_many(self, xs)
+    }
+}
+
+/// Typed admission errors — the explicit alternative to blocking the
+/// caller when the service is saturated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// The bounded queue is at capacity: the request was **shed**, not
+    /// enqueued. Callers retry, back off, or drop — their choice, made
+    /// with full information.
+    QueueFull { depth: usize },
+    /// The server is draining for shutdown and admits no new requests.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull { depth } => {
+                write!(f, "request shed: queue at capacity ({depth})")
+            }
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Server tuning knobs. The defaults serve single requests immediately
+/// (no added latency) with a small queue; `geta serve` exposes each as a
+/// CLI flag.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads pulling batches off the queue.
+    pub workers: usize,
+    /// Bounded queue capacity; submissions beyond it are shed with
+    /// [`ServeError::QueueFull`].
+    pub queue_depth: usize,
+    /// How long a worker may hold the oldest queued request back waiting
+    /// for more requests to coalesce with. Zero = serve immediately.
+    pub batch_window: Duration,
+    /// Most requests merged into one `infer_many` call.
+    pub max_batch: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            queue_depth: 64,
+            batch_window: Duration::from_micros(500),
+            max_batch: 8,
+        }
+    }
+}
+
+/// Counters a [`Server`] accumulates over its lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests admitted to the queue.
+    pub accepted: u64,
+    /// Requests rejected with [`ServeError::QueueFull`].
+    pub shed: u64,
+    /// Requests answered (successfully or with a model error).
+    pub completed: u64,
+    /// `infer_many` calls issued (completed ÷ batches = achieved batch).
+    pub batches: u64,
+}
+
+/// A served request's answer plus its measured queue-to-completion
+/// latency (the number the histograms aggregate).
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// One-shot completion slot a worker fulfills and a [`Ticket`] waits on.
+#[derive(Debug)]
+struct ResponseSlot {
+    done: Mutex<Option<Result<Reply, String>>>,
+    cv: Condvar,
+}
+
+impl ResponseSlot {
+    fn new() -> ResponseSlot {
+        ResponseSlot {
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn fulfill(&self, r: Result<Reply, String>) {
+        let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert!(done.is_none(), "response slot fulfilled twice");
+        *done = Some(r);
+        self.cv.notify_all();
+    }
+}
+
+/// Handle for an **accepted** request; [`wait`](Ticket::wait) blocks until
+/// a worker answers. Drain-on-shutdown guarantees every ticket is
+/// eventually fulfilled.
+#[derive(Debug)]
+pub struct Ticket {
+    slot: Arc<ResponseSlot>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Reply> {
+        let mut done = self.slot.done.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(r) = done.take() {
+                return r.map_err(|e| anyhow::anyhow!(e));
+            }
+            done = self.slot.cv.wait(done).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Like [`wait`](Self::wait) but gives up after `timeout`, returning
+    /// `None` (the request remains in flight and its latency is still
+    /// recorded server-side).
+    pub fn wait_timeout(self, timeout: Duration) -> Option<Result<Reply>> {
+        let deadline = Instant::now() + timeout;
+        let mut done = self.slot.done.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(r) = done.take() {
+                return Some(r.map_err(|e| anyhow::anyhow!(e)));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (d, _) = self
+                .slot
+                .cv
+                .wait_timeout(done, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            done = d;
+        }
+    }
+}
+
+struct Pending {
+    x: HostArray,
+    enq: Instant,
+    slot: Arc<ResponseSlot>,
+}
+
+struct Queue {
+    items: VecDeque<Pending>,
+    /// False once shutdown begins: no new admissions, workers drain what
+    /// remains and exit.
+    open: bool,
+}
+
+struct Inner {
+    model: Arc<dyn BatchModel>,
+    cfg: ServeConfig,
+    /// Pin kernels to one thread inside each worker (workers > 1).
+    serial_workers: bool,
+    q: Mutex<Queue>,
+    cv: Condvar,
+    hist: Mutex<LatencyHistogram>,
+    stats: Mutex<ServeStats>,
+}
+
+impl Inner {
+    /// Block until a batch is ready (coalescing up to `batch_window` /
+    /// `max_batch`), or return `None` when the queue is closed and empty.
+    fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut q = self.q.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if q.items.is_empty() {
+                if !q.open {
+                    return None;
+                }
+                q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+                continue;
+            }
+            // Coalesce: the latency budget runs from the *oldest* queued
+            // request, so the window bounds added latency per request, not
+            // per wait. A closing queue serves immediately.
+            let deadline = q.items[0].enq + self.cfg.batch_window;
+            while q.open && q.items.len() < self.cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (qq, timeout) = self
+                    .cv
+                    .wait_timeout(q, deadline - now)
+                    .unwrap_or_else(|e| e.into_inner());
+                q = qq;
+                if q.items.is_empty() || timeout.timed_out() {
+                    break;
+                }
+            }
+            if q.items.is_empty() {
+                // another worker drained the queue while we coalesced
+                continue;
+            }
+            let take = q.items.len().min(self.cfg.max_batch.max(1));
+            let batch: Vec<Pending> = q.items.drain(..take).collect();
+            if !q.items.is_empty() {
+                // leftover work: hand it to a sibling before we go compute
+                self.cv.notify_one();
+            }
+            return Some(batch);
+        }
+    }
+
+    fn run_batch(&self, batch: Vec<Pending>) {
+        let xs: Vec<&HostArray> = batch.iter().map(|p| &p.x).collect();
+        let result = if self.serial_workers {
+            tensor::serial_scope(|| self.model.infer_many(&xs))
+        } else {
+            self.model.infer_many(&xs)
+        };
+        let done = Instant::now();
+        {
+            let mut stats = self.stats.lock().unwrap_or_else(|e| e.into_inner());
+            stats.batches += 1;
+            stats.completed += batch.len() as u64;
+        }
+        match result {
+            Ok(outs) if outs.len() == batch.len() => {
+                let mut hist = self.hist.lock().unwrap_or_else(|e| e.into_inner());
+                for (p, logits) in batch.into_iter().zip(outs) {
+                    let latency = done.saturating_duration_since(p.enq);
+                    hist.record(latency);
+                    p.slot.fulfill(Ok(Reply { logits, latency }));
+                }
+            }
+            Ok(outs) => {
+                let msg = format!(
+                    "model returned {} outputs for a batch of {}",
+                    outs.len(),
+                    batch.len()
+                );
+                for p in batch {
+                    p.slot.fulfill(Err(msg.clone()));
+                }
+            }
+            Err(e) => {
+                // a failed batch fails its requests, never the server
+                let msg = format!("{e:#}");
+                for p in batch {
+                    p.slot.fulfill(Err(msg.clone()));
+                }
+            }
+        }
+    }
+
+    fn worker_loop(&self) {
+        while let Some(batch) = self.next_batch() {
+            self.run_batch(batch);
+        }
+    }
+}
+
+/// Final accounting returned by [`Server::shutdown`].
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub stats: ServeStats,
+    pub histogram: LatencyHistogram,
+}
+
+/// The serving front end: bounded admission, request coalescing, a worker
+/// pool over one shared [`BatchModel`], per-request latency histograms.
+/// See the module docs for the architecture.
+pub struct Server {
+    inner: Arc<Inner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(model: Arc<dyn BatchModel>, cfg: ServeConfig) -> Server {
+        let nworkers = cfg.workers.max(1);
+        let inner = Arc::new(Inner {
+            model,
+            serial_workers: nworkers > 1,
+            q: Mutex::new(Queue {
+                items: VecDeque::new(),
+                open: true,
+            }),
+            cv: Condvar::new(),
+            hist: Mutex::new(LatencyHistogram::new()),
+            stats: Mutex::new(ServeStats::default()),
+            cfg,
+        });
+        let workers = (0..nworkers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("geta-serve-{i}"))
+                    .spawn(move || inner.worker_loop())
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Server { inner, workers }
+    }
+
+    /// Admit one request. `Ok(Ticket)` means the request **will** be
+    /// answered (drain-on-shutdown included); `Err` is immediate, typed,
+    /// and never blocks.
+    pub fn submit(&self, x: HostArray) -> Result<Ticket, ServeError> {
+        let mut q = self.inner.q.lock().unwrap_or_else(|e| e.into_inner());
+        if !q.open {
+            return Err(ServeError::ShuttingDown);
+        }
+        if q.items.len() >= self.inner.cfg.queue_depth.max(1) {
+            drop(q);
+            let mut stats = self.inner.stats.lock().unwrap_or_else(|e| e.into_inner());
+            stats.shed += 1;
+            return Err(ServeError::QueueFull {
+                depth: self.inner.cfg.queue_depth.max(1),
+            });
+        }
+        let slot = Arc::new(ResponseSlot::new());
+        q.items.push_back(Pending {
+            x,
+            enq: Instant::now(),
+            slot: Arc::clone(&slot),
+        });
+        drop(q);
+        {
+            let mut stats = self.inner.stats.lock().unwrap_or_else(|e| e.into_inner());
+            stats.accepted += 1;
+        }
+        self.inner.cv.notify_one();
+        Ok(Ticket { slot })
+    }
+
+    /// Snapshot of the lifetime counters.
+    pub fn stats(&self) -> ServeStats {
+        *self.inner.stats.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Snapshot of the latency histogram so far.
+    pub fn histogram(&self) -> LatencyHistogram {
+        self.inner.hist.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Number of requests currently queued (not yet picked up).
+    pub fn queued(&self) -> usize {
+        self.inner.q.lock().unwrap_or_else(|e| e.into_inner()).items.len()
+    }
+
+    /// Stop admissions, **drain every accepted request**, join the
+    /// workers, and return the final accounting. No accepted request is
+    /// lost: tickets taken before shutdown all resolve.
+    pub fn shutdown(self) -> ServeReport {
+        {
+            let mut q = self.inner.q.lock().unwrap_or_else(|e| e.into_inner());
+            q.open = false;
+        }
+        self.inner.cv.notify_all();
+        for h in self.workers {
+            h.join().expect("serve worker panicked");
+        }
+        ServeReport {
+            stats: *self.inner.stats.lock().unwrap_or_else(|e| e.into_inner()),
+            histogram: self.inner.hist.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        }
+    }
+}

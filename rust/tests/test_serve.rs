@@ -1,0 +1,324 @@
+//! Serving-layer obligations (`geta::serve` + the engine's concurrent
+//! `infer` path):
+//!
+//! 1. **Determinism under coalescing** — logits served through the
+//!    batching server are bitwise identical to direct per-request
+//!    `engine.infer` calls at every (workers, batch-window, max-batch)
+//!    combination: coalescing preserves each request's micro-batch chunk
+//!    boundaries, so batch-statistics normalization never shifts.
+//! 2. **Concurrent inference** — threads calling `infer` on one shared
+//!    engine get bit-identical results to sequential calls (the arena
+//!    pool replaced the old serializing `Mutex<Arena>`).
+//! 3. **Backpressure** — a saturated bounded queue sheds with the typed
+//!    `ServeError::QueueFull`, never blocks or panics, and the server
+//!    keeps serving afterwards.
+//! 4. **Drain-on-shutdown** — every accepted request completes before
+//!    `shutdown` returns; none are lost.
+//! 5. **Load-once cache** — two lookups of one artifact share a single
+//!    engine.
+//!
+//! One short mlp_tiny train+export is shared by every engine-based test
+//! (`OnceLock`); the timing-sensitive queue tests use a deliberately
+//! slow test double instead of the real engine, so their saturation and
+//! drain scenarios are deterministic.
+
+mod common;
+
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use common::art_dir;
+use geta::deploy::{GetaContainer, GetaEngine, KernelKind};
+use geta::runtime::HostArray;
+use geta::serve::{loadgen, BatchModel, ModelCache, ServeConfig, ServeError, Server};
+
+struct Setup {
+    container: GetaContainer,
+    /// Single-sample requests (the serving unit of work).
+    singles: Vec<HostArray>,
+    /// One request spanning several micro-batches (32/32/6 for mlp_tiny).
+    multi: HostArray,
+}
+
+fn setup() -> &'static Setup {
+    static CELL: OnceLock<Setup> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let art = geta::report::train_export(&art_dir(), "mlp_tiny", 0.1, 0.5)
+            .expect("mlp_tiny trains natively");
+        let eval = &art.trainer.eval_data;
+        let singles = loadgen::single_sample_inputs(eval, 12);
+        let idxs: Vec<usize> = (0..70).map(|i| i % eval.len()).collect();
+        let (multi, _) = eval.batch(&idxs);
+        Setup {
+            container: art.container,
+            singles,
+            multi,
+        }
+    })
+}
+
+fn engine(threads: usize) -> Arc<GetaEngine> {
+    let mut e = GetaEngine::from_container_kernel(&setup().container, KernelKind::Int8)
+        .expect("container round-trips");
+    e.threads = threads;
+    Arc::new(e)
+}
+
+// ---------------------------------------------------------------- 2
+#[test]
+fn concurrent_infer_matches_sequential_bitwise() {
+    let s = setup();
+    let e = engine(1);
+    let seq: Vec<Vec<f32>> = s.singles.iter().map(|x| e.infer(x).unwrap()).collect();
+    let seq_multi = e.infer(&s.multi).unwrap();
+    // four threads hammering one shared engine, interleaved arbitrarily
+    std::thread::scope(|sc| {
+        for _ in 0..4 {
+            sc.spawn(|| {
+                for _round in 0..3 {
+                    for (x, want) in s.singles.iter().zip(&seq) {
+                        assert_eq!(&e.infer(x).unwrap(), want, "concurrent infer drifted");
+                    }
+                    assert_eq!(e.infer(&s.multi).unwrap(), seq_multi);
+                }
+            });
+        }
+    });
+    // the chunk-sharding path (threads > 1) is bitwise identical too
+    let sharded = engine(4);
+    assert_eq!(sharded.infer(&s.multi).unwrap(), seq_multi);
+    // and infer_many with mixed request sizes preserves per-request results
+    let outs = e
+        .infer_many(&[&s.singles[0], &s.multi, &s.singles[1]])
+        .unwrap();
+    assert_eq!(outs.len(), 3);
+    assert_eq!(outs[0], seq[0]);
+    assert_eq!(outs[1], seq_multi);
+    assert_eq!(outs[2], seq[1]);
+}
+
+// ---------------------------------------------------------------- 1
+#[test]
+fn coalesced_serving_is_bitwise_identical_at_every_config() {
+    let s = setup();
+    let e = engine(1);
+    let mut requests: Vec<HostArray> = s.singles.clone();
+    requests.push(s.multi.clone());
+    let direct: Vec<Vec<f32>> = requests.iter().map(|x| e.infer(x).unwrap()).collect();
+    for workers in [1usize, 2, 4] {
+        for window_us in [0u64, 2000] {
+            for max_batch in [1usize, 4] {
+                let server = Server::start(
+                    e.clone(),
+                    ServeConfig {
+                        workers,
+                        queue_depth: 64,
+                        batch_window: Duration::from_micros(window_us),
+                        max_batch,
+                    },
+                );
+                let tickets: Vec<_> = requests
+                    .iter()
+                    .map(|x| server.submit(x.clone()).expect("queue has room"))
+                    .collect();
+                for (t, want) in tickets.into_iter().zip(&direct) {
+                    let reply = t.wait().expect("request served");
+                    assert_eq!(
+                        &reply.logits, want,
+                        "served logits drifted at workers={workers} window_us={window_us} \
+                         max_batch={max_batch}"
+                    );
+                }
+                let report = server.shutdown();
+                assert_eq!(report.stats.accepted, requests.len() as u64);
+                assert_eq!(report.stats.completed, requests.len() as u64);
+                assert_eq!(report.stats.shed, 0);
+                assert_eq!(report.histogram.count(), requests.len() as u64);
+            }
+        }
+    }
+}
+
+/// Deliberately slow model: makes saturation and drain scenarios
+/// deterministic instead of racing a fast real engine.
+struct SleepyModel {
+    delay: Duration,
+}
+
+impl BatchModel for SleepyModel {
+    fn infer_many(&self, xs: &[&HostArray]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        Ok(xs.iter().map(|x| vec![x.len() as f32]).collect())
+    }
+}
+
+struct FailingModel;
+
+impl BatchModel for FailingModel {
+    fn infer_many(&self, _xs: &[&HostArray]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::bail!("synthetic model failure")
+    }
+}
+
+fn tiny_request() -> HostArray {
+    HostArray::F32(vec![1.0, 2.0])
+}
+
+// ---------------------------------------------------------------- 3
+#[test]
+fn saturated_queue_sheds_typed_error_and_server_stays_live() {
+    let server = Server::start(
+        Arc::new(SleepyModel {
+            delay: Duration::from_millis(40),
+        }),
+        ServeConfig {
+            workers: 1,
+            queue_depth: 2,
+            batch_window: Duration::ZERO,
+            max_batch: 1,
+        },
+    );
+    // a 40ms-per-request worker can't keep up with a tight submit loop:
+    // the depth-2 queue must reject (typed, immediate — never block)
+    let mut tickets = Vec::new();
+    let mut shed = false;
+    while !shed {
+        match server.submit(tiny_request()) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                assert_eq!(e, ServeError::QueueFull { depth: 2 });
+                shed = true;
+            }
+        }
+        assert!(tickets.len() < 100, "queue never saturated");
+    }
+    // every accepted request still completes: the shed cost the shed
+    // request only, not the server
+    for t in tickets {
+        t.wait().expect("accepted request must complete");
+    }
+    // and the server keeps accepting new work
+    let t = server.submit(tiny_request()).expect("server live after shed");
+    t.wait().expect("post-shed request served");
+    let report = server.shutdown();
+    assert!(report.stats.shed >= 1, "shed counter must record the rejection");
+}
+
+// ---------------------------------------------------------------- 4
+#[test]
+fn shutdown_drains_every_accepted_request() {
+    let server = Server::start(
+        Arc::new(SleepyModel {
+            delay: Duration::from_millis(5),
+        }),
+        ServeConfig {
+            workers: 2,
+            queue_depth: 64,
+            batch_window: Duration::from_micros(200),
+            max_batch: 4,
+        },
+    );
+    let n = 32usize;
+    let tickets: Vec<_> = (0..n)
+        .map(|_| server.submit(tiny_request()).expect("queue has room"))
+        .collect();
+    assert_eq!(server.stats().accepted, n as u64);
+    // shutdown must block until the queue is drained — not drop the tail
+    let report = server.shutdown();
+    assert_eq!(report.stats.completed, n as u64, "drain lost requests");
+    assert_eq!(report.histogram.count(), n as u64);
+    for t in tickets {
+        t.wait().expect("accepted request resolved after shutdown");
+    }
+    // post-shutdown coalescing actually happened (2 workers, window > 0):
+    // strictly fewer batches than requests
+    assert!(
+        report.stats.batches < n as u64,
+        "expected some coalescing: {} batches for {n} requests",
+        report.stats.batches
+    );
+}
+
+#[test]
+fn model_errors_fail_requests_not_the_server() {
+    let server = Server::start(
+        Arc::new(FailingModel),
+        ServeConfig {
+            workers: 1,
+            queue_depth: 8,
+            batch_window: Duration::ZERO,
+            max_batch: 2,
+        },
+    );
+    let err = server
+        .submit(tiny_request())
+        .expect("admission works")
+        .wait()
+        .expect_err("model failure must surface to the caller");
+    assert!(err.to_string().contains("synthetic model failure"), "{err:#}");
+    // the worker survived the failed batch
+    let err2 = server.submit(tiny_request()).unwrap().wait().unwrap_err();
+    assert!(err2.to_string().contains("synthetic model failure"));
+    let report = server.shutdown();
+    assert_eq!(report.stats.completed, 2);
+    // failed requests record no latency: the histogram holds successes only
+    assert_eq!(report.histogram.count(), 0);
+}
+
+// ---------------------------------------------------------------- 5
+#[test]
+fn model_cache_loads_once_and_pins_serving_threads() {
+    let s = setup();
+    let path = std::env::temp_dir().join("geta_test_serve_cache.geta");
+    std::fs::write(&path, s.container.to_bytes()).expect("write artifact");
+    let cache = ModelCache::new(KernelKind::Int8);
+    assert!(cache.is_empty());
+    let a = cache.get_or_load(&path).expect("artifact loads");
+    let b = cache.get_or_load(&path).expect("cache hit");
+    assert!(Arc::ptr_eq(&a, &b), "second lookup must share, not reload");
+    assert_eq!(cache.len(), 1);
+    assert_eq!(a.threads, 1, "cached engines serve with kernel threads pinned");
+    // the cached engine is the same model: bitwise-equal logits
+    let direct = engine(1);
+    assert_eq!(
+        a.infer(&s.singles[0]).unwrap(),
+        direct.infer(&s.singles[0]).unwrap()
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// End-to-end through the load generator: pressure mode admits every
+/// request eventually, open-loop never blocks, and the served histogram
+/// counts exactly the completions.
+#[test]
+fn load_generator_accounting_is_consistent() {
+    let server = Server::start(
+        Arc::new(SleepyModel {
+            delay: Duration::from_millis(2),
+        }),
+        ServeConfig {
+            workers: 2,
+            queue_depth: 4,
+            batch_window: Duration::from_micros(100),
+            max_batch: 4,
+        },
+    );
+    let inputs = vec![tiny_request()];
+    let load = loadgen::run(
+        &server,
+        &inputs,
+        &loadgen::LoadSpec {
+            rps: 0.0, // pressure mode: every request is eventually admitted
+            requests: 40,
+            clients: 2,
+        },
+    );
+    assert_eq!(load.submitted, 40);
+    assert_eq!(load.completed, 40, "pressure mode loses no requests");
+    assert_eq!(load.failed, 0);
+    let report = server.shutdown();
+    assert_eq!(report.stats.completed, 40);
+    assert_eq!(report.histogram.count(), 40);
+    assert_eq!(report.stats.accepted, 40);
+    assert!(load.achieved_rps > 0.0);
+}
