@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- train + export once (this is where the weights come from) ----
     println!("training mlp_tiny (short run) and exporting a .geta container...");
-    let trained = geta::report::train_export(art_dir, "mlp_tiny", 0.12, 0.5)?;
+    let trained = geta::report::train_export(art_dir, "mlp_tiny", 0.12, 0.5, 8.0)?;
     println!(
         "trained: acc {:.2}%  rel BOPs {:.2}%  sparsity {:.2}",
         trained.result.accuracy, trained.result.rel_bops, trained.result.group_sparsity

@@ -22,9 +22,17 @@
 //!   f32×i8 elsewhere, the dequantization scales folded into the
 //!   epilogue. Sites whose levels exceed i8 fall back to the f32 path
 //!   per tensor.
+//! * [`KernelKind::Int4`] — weights whose levels fit a signed nibble
+//!   (|level| ≤ 7, i.e. sites trained to ≤ 4 bits) load into
+//!   **nibble-packed** panels (`tensor::U4Weight`, two levels per byte —
+//!   half the resident bytes of i8) and multiply through the u4 GEMMs in
+//!   `tensor/u4.rs`, unpacking nibbles in-register. Sites that fit i8 but
+//!   not a nibble fall back to i8 residency per tensor, and anything
+//!   beyond i8 to f32 — so `--int4` is always at least as packed as
+//!   `--int8`.
 //!
 //! The forward pass is `runtime::exec::forward` with a
-//! [`exec::DeployParams`] (f32) or [`exec::QuantizedParams`] (int8)
+//! [`exec::DeployParams`] (f32) or [`exec::QuantizedParams`] (int8/int4)
 //! source — **the same op kernels the training interpreter runs** plus
 //! the integer GEMMs, so the execution paths cannot drift apart. There is
 //! no per-op math in this file. Inference-only differences live entirely
@@ -76,7 +84,7 @@ use crate::runtime::exec::{
 };
 use crate::runtime::lowering::{self, OpKind, Program};
 use crate::runtime::HostArray;
-use crate::tensor::{self, IntWeight, ParamStore, Tensor};
+use crate::tensor::{self, IntWeight, ParamStore, Tensor, U4Weight};
 use crate::util::json::Json;
 
 /// Input dtype the loaded model expects.
@@ -93,6 +101,9 @@ pub enum KernelKind {
     F32,
     /// Keep eligible weights resident as i8 levels; integer GEMMs.
     Int8,
+    /// Keep ≤4-bit weights resident as nibble-packed panels (two levels
+    /// per byte); other eligible sites fall back to i8, then f32.
+    Int4,
 }
 
 impl KernelKind {
@@ -101,6 +112,7 @@ impl KernelKind {
         match self {
             KernelKind::F32 => "f32",
             KernelKind::Int8 => "int8",
+            KernelKind::Int4 => "int4",
         }
     }
 }
@@ -120,9 +132,13 @@ pub struct GetaEngine {
     /// only to look up or insert an `Arc` — never across a forward pass.
     plans: std::sync::Mutex<BTreeMap<usize, std::sync::Arc<Plan>>>,
     weights: ParamStore,
-    /// i8-resident weight tensors (Int8 kernel only; empty otherwise).
+    /// i8-resident weight tensors (Int8/Int4 kernels; empty otherwise).
     /// Tensors present here keep only their shape in `weights`.
     iweights: BTreeMap<String, IntWeight>,
+    /// Nibble-packed u4-resident weight tensors (Int4 kernel only;
+    /// disjoint from `iweights` — each site packs in exactly one form).
+    /// Tensors present here keep only their shape in `weights`.
+    uweights: BTreeMap<String, U4Weight>,
     /// Quant site the container recorded per packed tensor — the executor
     /// validates its requests against this map.
     weight_sites: BTreeMap<String, usize>,
@@ -191,6 +207,7 @@ impl GetaEngine {
         let mut weights = ParamStore::new();
         let mut weight_sites = BTreeMap::new();
         let mut iweights = BTreeMap::new();
+        let mut uweights = BTreeMap::new();
         for t in &c.tensors {
             match &t.payload {
                 Payload::F32(v) => {
@@ -226,27 +243,40 @@ impl GetaEngine {
                     );
                     weight_sites.insert(t.name.clone(), *site as usize);
                     let n = t.shape.last().copied().unwrap_or(0);
-                    let resident = if kernel == KernelKind::Int8 {
+                    // residency ladder: Int4 tries the nibble-packed form
+                    // first and degrades per tensor (u4 → i8 → f32); Int8
+                    // tries only i8; F32 dequantizes everything.
+                    let uw = if kernel == KernelKind::Int4 {
+                        U4Weight::from_levels(&levels, n, d)
+                    } else {
+                        None
+                    };
+                    let iw = if uw.is_none()
+                        && matches!(kernel, KernelKind::Int8 | KernelKind::Int4)
+                    {
                         IntWeight::from_levels(&levels, n, d)
                     } else {
                         None
                     };
-                    match resident {
-                        Some(iw) => {
-                            // i8-resident: never dequantized. The store keeps
-                            // a shape-only placeholder — slice propagation
-                            // below reads weight *shapes* only, and the
-                            // executor reaches this tensor exclusively
-                            // through `weight_i8` / the iweights fallback.
-                            iweights.insert(t.name.clone(), iw);
-                            weights.push(Tensor::shape_only(&t.name, &t.shape));
-                        }
+                    if let Some(uw) = uw {
+                        // integer-resident: never dequantized. The store
+                        // keeps a shape-only placeholder — slice propagation
+                        // below reads weight *shapes* only, and the executor
+                        // reaches this tensor exclusively through
+                        // `weight_u4` / the uweights fallback.
+                        uweights.insert(t.name.clone(), uw);
+                        weights.push(Tensor::shape_only(&t.name, &t.shape));
+                    } else if let Some(iw) = iw {
+                        // same placeholder discipline, served via `weight_i8`
+                        iweights.insert(t.name.clone(), iw);
+                        weights.push(Tensor::shape_only(&t.name, &t.shape));
+                    } else {
                         // f32 kernel, or levels beyond i8: dequantize once
-                        None => weights.push(Tensor::from_vec(
+                        weights.push(Tensor::from_vec(
                             &t.name,
                             &t.shape,
                             levels.iter().map(|&l| l as f32 * d).collect(),
-                        )),
+                        ));
                     }
                 }
             }
@@ -271,6 +301,7 @@ impl GetaEngine {
             plans: std::sync::Mutex::new(BTreeMap::new()),
             weights,
             iweights,
+            uweights,
             weight_sites,
             kernel,
             act_q,
@@ -299,6 +330,7 @@ impl GetaEngine {
             plans: std::sync::Mutex::new(BTreeMap::new()),
             weights: params,
             iweights: BTreeMap::new(),
+            uweights: BTreeMap::new(),
             weight_sites: BTreeMap::new(),
             kernel: KernelKind::F32,
             act_q: vec![None; sites.len()],
@@ -313,6 +345,13 @@ impl GetaEngine {
     /// kernel, or when every site trained past 8 bits).
     pub fn int_sites(&self) -> usize {
         self.iweights.len()
+    }
+
+    /// How many weight tensors are resident as nibble-packed u4 panels
+    /// (0 for every kernel but Int4, or when every site trained past 4
+    /// bits).
+    pub fn u4_sites(&self) -> usize {
+        self.uweights.len()
     }
 
     pub fn program(&self) -> &Program {
@@ -478,10 +517,11 @@ impl GetaEngine {
                 };
                 &f32_src
             }
-            KernelKind::Int8 => {
+            KernelKind::Int8 | KernelKind::Int4 => {
                 int_src = QuantizedParams {
                     weights: &self.weights,
                     iweights: &self.iweights,
+                    uweights: &self.uweights,
                     weight_sites: &self.weight_sites,
                     act_q: &self.act_q,
                 };

@@ -94,6 +94,28 @@ impl Payload {
             } => Ok(Some(unpack_levels(bytes, *numel, *min_level, *pack_bits)?)),
         }
     }
+
+    /// Cheap read-path hint for int4 residency, decided from the stored
+    /// `min_level`/`pack_bits` header alone — no unpacking. The packed
+    /// encoding can only represent levels in `min_level ..= min_level +
+    /// (2^pack_bits - 1)`; when that whole span sits inside the signed
+    /// nibble range `-7..=7`, **every** decodable level fits the int4
+    /// engine's bound, guaranteed. `false` means "might not fit" (the
+    /// minimal-width span can overshoot the tensor's actual maximum by up
+    /// to a factor of two), so `U4Weight::from_levels` — which sees the
+    /// unpacked levels — remains the sole residency authority; this
+    /// accessor only lets size estimators and tooling classify payloads
+    /// without paying for a decode.
+    pub fn fits_nibble(&self) -> bool {
+        match self {
+            Payload::F32(_) => false,
+            Payload::Packed { min_level, pack_bits, .. } => {
+                let lo = *min_level as i64;
+                let hi = lo + ((1i64 << (*pack_bits).min(32) as i64) - 1);
+                lo >= -7 && hi <= 7
+            }
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -614,6 +636,27 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn fits_nibble_is_a_sound_hint() {
+        let packed = |min_level: i32, pack_bits: u8| Payload::Packed {
+            site: 0,
+            min_level,
+            pack_bits,
+            bytes: Vec::new(),
+            numel: 0,
+        };
+        // full signed-nibble span: -7 + (2^4 - 1) = 8 > 7 — not guaranteed
+        assert!(!packed(-7, 4).fits_nibble());
+        // spans that provably sit inside -7..=7
+        assert!(packed(-7, 3).fits_nibble()); // -7..=0
+        assert!(packed(0, 3).fits_nibble()); // 0..=7
+        assert!(packed(-4, 3).fits_nibble()); // -4..=3
+        // clearly out of range
+        assert!(!packed(-128, 8).fits_nibble());
+        assert!(!packed(8, 1).fits_nibble());
+        assert!(!Payload::F32(vec![1.0]).fits_nibble());
     }
 
     #[test]

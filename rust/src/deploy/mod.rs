@@ -266,6 +266,65 @@ mod tests {
         };
         assert_eq!(ia, ib, "int8 thread sharding changed results");
 
+        // int4 kernel at a 6-bit init: nothing fits a nibble, so the
+        // residency ladder must degrade every packed site to i8 — never
+        // to a silent f32 dequant — and hold the same parity bar
+        let i4 = GetaEngine::from_container_kernel(&container, KernelKind::Int4).unwrap();
+        assert_eq!(i4.kernel, KernelKind::Int4);
+        assert_eq!(i4.u4_sites(), 0, "6-bit levels cannot be u4-resident");
+        assert_eq!(
+            i4.int_sites(),
+            int_engine.int_sites(),
+            "int4 ladder must fall back to i8 residency site-for-site"
+        );
+        let got_i4 = i4.infer(&x).unwrap();
+        assert_eq!(got_i4, got_int, "int4 fallback must run the same i8 kernels");
+
+        // re-export with a 4-bit init: every site's levels fit a signed
+        // nibble, so the int4 engine keeps them packed two-per-byte and
+        // the u4 GEMMs must hold the masked-eval parity bar themselves
+        let q4 = e.init_qparams(&params, 4.0);
+        let mut params4 = params.clone();
+        let (container4, _) = export_model(
+            &cfg,
+            &sites,
+            &space.groups,
+            &pruned,
+            &costs,
+            &mut params4,
+            &q4,
+        )
+        .unwrap();
+        let u4 = GetaEngine::from_container_kernel(&container4, KernelKind::Int4).unwrap();
+        assert!(u4.u4_sites() > 0, "no weight became u4-resident at 4-bit init");
+        assert_eq!(u4.int_sites(), 0, "4-bit levels should all pack as u4");
+        let masked4 = e.eval_logits(&params4, &q4, &x, &y).unwrap();
+        let got_u4 = u4.infer(&x).unwrap();
+        assert_eq!(got_u4.len(), masked4.len());
+        for i in 0..got_u4.len() {
+            assert!(
+                (got_u4[i] - masked4[i]).abs() <= 1e-4 * (1.0 + masked4[i].abs()),
+                "int4 logit[{i}]: {} vs masked {}",
+                got_u4[i],
+                masked4[i]
+            );
+        }
+        // and stays bitwise invariant across worker counts
+        let ua = {
+            let mut one = GetaEngine::from_container_kernel(&container4, KernelKind::Int4).unwrap();
+            one.threads = 1;
+            one.micro_batch = bsz;
+            one.infer(&big).unwrap()
+        };
+        let ub = {
+            let mut four =
+                GetaEngine::from_container_kernel(&container4, KernelKind::Int4).unwrap();
+            four.threads = 4;
+            four.micro_batch = bsz;
+            four.infer(&big).unwrap()
+        };
+        assert_eq!(ua, ub, "int4 thread sharding changed results");
+
         // tampering: swapping two packed tensors' site indices must be
         // rejected at load (each would dequantize with the other's step d)
         let mut tampered = container.clone();

@@ -4,11 +4,13 @@
 //!   geta graph  --model <name>                 inspect QADG + search space
 //!   geta train  --model <name> [--sparsity ..] run GETA on one model
 //!   geta export --model <name> [--out f.geta]  train + write a .geta artifact
-//!   geta infer  --file f.geta [--int8]         run the packed inference engine
+//!   geta infer  --file f.geta [--int8|--int4]  run the packed inference engine
 //!                                              (--int8: integer-domain GEMMs on
-//!                                              resident i8 levels)
-//!   geta bench-infer --model <name> [--json]   dense-f32 vs compressed (f32-dequant
-//!                                              and int8 kernels) wall-clock
+//!                                              resident i8 levels; --int4:
+//!                                              nibble-packed u4 panels, falling
+//!                                              back to i8 then f32 per tensor)
+//!   geta bench-infer --model <name> [--json]   dense-f32 vs compressed (f32-dequant,
+//!                                              int8 and int4 kernels) wall-clock
 //!                                              (--json: BENCH_runtime.json +
 //!                                              BENCH_deploy.json at repo root)
 //!   geta serve  --model <name> | --file f.geta batched, back-pressured inference
@@ -93,7 +95,7 @@ fn main() -> Result<()> {
                    geta graph --model vgg7_mini\n\
                    geta train --model resnet_mini --sparsity 0.35 --verbose\n\
                    geta export --model resnet_mini --sparsity 0.5 --out resnet.geta\n\
-                   geta infer --file resnet.geta --n 256 --threads 4 [--int8]\n\
+                   geta infer --file resnet.geta --n 256 --threads 4 [--int8|--int4]\n\
                    geta bench-infer --model resnet_mini --iters 10 --json\n\
                    geta serve --model mlp_tiny --rps 500 --workers 2 --batch-window-us 500\n\
                    geta serve --file resnet.geta --requests 512 --rps 0\n\
@@ -235,7 +237,9 @@ fn cmd_infer(a: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("`geta infer` needs --file <model.geta>"))?;
     // --threads was already folded into the process-wide budget in main();
     // the engine picks it up via tensor::configured_threads()
-    let kernel = if a.flag("int8") {
+    let kernel = if a.flag("int4") {
+        geta::deploy::KernelKind::Int4
+    } else if a.flag("int8") {
         geta::deploy::KernelKind::Int8
     } else {
         geta::deploy::KernelKind::F32
@@ -257,10 +261,15 @@ fn cmd_infer(a: &Args) -> Result<()> {
         samples as f64 / (ms / 1e3).max(1e-9),
         engine.threads,
         kernel.label(),
-        if kernel == geta::deploy::KernelKind::Int8 {
-            format!(", {} i8-resident weights", engine.int_sites())
-        } else {
-            String::new()
+        match kernel {
+            geta::deploy::KernelKind::Int8 =>
+                format!(", {} i8-resident weights", engine.int_sites()),
+            geta::deploy::KernelKind::Int4 => format!(
+                ", {} u4-resident + {} i8-resident weights",
+                engine.u4_sites(),
+                engine.int_sites()
+            ),
+            geta::deploy::KernelKind::F32 => String::new(),
         },
     );
     if engine.task == "image_cls" {
@@ -310,14 +319,19 @@ fn cmd_bench_infer(a: &Args) -> Result<()> {
             r.compressed_ms,
             r.disk_bytes as f64 / 1024.0,
             r.dense_ms / r.compressed_ms.max(1e-9),
-            if r.kernel == "int8" {
-                format!(
+            match r.kernel.as_str() {
+                "int8" => format!(
                     "   {:.2}x vs f32-dequant   {} i8-resident weights",
                     r0.compressed_ms / r.compressed_ms.max(1e-9),
                     r.int_sites,
-                )
-            } else {
-                String::new()
+                ),
+                "int4" => format!(
+                    "   {:.2}x vs f32-dequant   {} u4-resident + {} i8-resident weights",
+                    r0.compressed_ms / r.compressed_ms.max(1e-9),
+                    r.u4_sites,
+                    r.int_sites,
+                ),
+                _ => String::new(),
             },
         );
     }
@@ -406,7 +420,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         let scale = a.f64_or("steps-scale", 0.12);
         let sparsity = a.f64_or("sparsity", 0.5);
         println!("no --file: training {model} in-process (steps-scale {scale})");
-        let art = geta::report::train_export(&art_dir(a), &model, scale, sparsity)?;
+        let art = geta::report::train_export(&art_dir(a), &model, scale, sparsity, 8.0)?;
         let mut engine = geta::deploy::GetaEngine::from_container_kernel(&art.container, kernel)?;
         engine.threads = 1;
         let engine = std::sync::Arc::new(engine);

@@ -413,7 +413,8 @@ impl ReportCtx {
     /// Measured deployment table: on-disk `.geta` bytes and inference
     /// wall-clock next to the theoretical rel-BOPs, dense-f32 vs
     /// compressed, through the same executor (`deploy::GetaEngine`) —
-    /// one row per compute kernel (f32-dequant and int8).
+    /// one row per compute kernel (f32-dequant, int8, and nibble-packed
+    /// int4).
     pub fn deploy(&mut self) -> Result<Vec<DeployBench>> {
         let mut rows = Vec::new();
         let mut tbl = Table::new(
@@ -459,8 +460,10 @@ impl ReportCtx {
 pub struct DeployBench {
     pub model: String,
     /// Compute path of the compressed engine: `"f32"` (dequantize at
-    /// load) or `"int8"` (resident i8 levels, integer GEMMs). Stable
-    /// machine-readable discriminator for downstream tooling.
+    /// load), `"int8"` (resident i8 levels, integer GEMMs), or `"int4"`
+    /// (nibble-packed u4 panels, falling back to i8 then f32 per
+    /// tensor). Stable machine-readable discriminator for downstream
+    /// tooling.
     pub kernel: String,
     /// Theoretical relative BOPs of the exported subnet (%).
     pub rel_bops: f64,
@@ -479,6 +482,9 @@ pub struct DeployBench {
     pub avg_bits: f64,
     /// Weight tensors resident as i8 levels (0 on the f32 kernel).
     pub int_sites: usize,
+    /// Weight tensors resident as nibble-packed u4 panels (0 on every
+    /// kernel but int4).
+    pub u4_sites: usize,
 }
 
 /// Outcome of the shared train→export preamble behind `bench-infer`,
@@ -499,15 +505,19 @@ pub struct TrainedArtifact {
 /// Train briefly with GETA and export a `.geta` container, with data and
 /// bit bounds capped for bench wall-clocks.
 ///
-/// The bit upper bound is capped at 8 for these runs: the integer path
-/// serves i8 levels, and the deployment comparison is about that regime —
-/// a site trained past 8 bits would silently fall back to f32 and measure
-/// nothing.
+/// `max_bits` caps the learned bit bounds (and the init) for the run: the
+/// integer deployment comparison is about the resident-integer regime — a
+/// site trained past the cap would silently fall back to f32 and measure
+/// nothing. Pass 8.0 for the i8 regime (`bench-serve`, the serving demo)
+/// and 4.0 when the container must also exercise the nibble-packed u4
+/// residency ladder (`bench_deploy`, so the same artifact yields
+/// u4-resident sites under `KernelKind::Int4`).
 pub fn train_export(
     art_dir: &std::path::Path,
     model: &str,
     steps_scale: f64,
     sparsity: f64,
+    max_bits: f64,
 ) -> Result<TrainedArtifact> {
     let mut exp = ExperimentConfig::defaults_for(model);
     exp.scale_steps(steps_scale);
@@ -516,9 +526,9 @@ pub fn train_export(
     if sparsity > 0.0 {
         exp.qasso.target_group_sparsity = sparsity;
     }
-    exp.qasso.b_u = exp.qasso.b_u.min(8.0);
+    exp.qasso.b_u = exp.qasso.b_u.min(max_bits);
     exp.qasso.b_l = exp.qasso.b_l.min(exp.qasso.b_u);
-    exp.qasso.init_bits = exp.qasso.init_bits.min(8.0);
+    exp.qasso.init_bits = exp.qasso.init_bits.min(max_bits);
     let t = Trainer::new(art_dir, exp)?;
     let mut geta = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default())?;
     let mut trained = t.run_trained(&mut geta)?;
@@ -561,7 +571,9 @@ pub fn bench_deploy(
     iters: usize,
     threads: usize,
 ) -> Result<Vec<DeployBench>> {
-    let art = train_export(art_dir, model, steps_scale, sparsity)?;
+    // 4-bit cap: the same container then exercises every rung of the
+    // residency ladder — u4 under Int4, i8 under Int8, dequant under F32
+    let art = train_export(art_dir, model, steps_scale, sparsity, 4.0)?;
     let TrainedArtifact {
         trainer: t,
         container,
@@ -590,8 +602,8 @@ pub fn bench_deploy(
         Ok(best)
     };
     let dense_ms = time_ms(&dense)?;
-    let mut rows = Vec::with_capacity(2);
-    for kernel in [KernelKind::F32, KernelKind::Int8] {
+    let mut rows = Vec::with_capacity(3);
+    for kernel in [KernelKind::F32, KernelKind::Int8, KernelKind::Int4] {
         let mut comp = GetaEngine::from_container_kernel(&container, kernel)?;
         comp.threads = threads;
         let compressed_ms = time_ms(&comp)?;
@@ -608,6 +620,7 @@ pub fn bench_deploy(
             group_sparsity: result.group_sparsity,
             avg_bits: result.avg_bits,
             int_sites: comp.int_sites(),
+            u4_sites: comp.u4_sites(),
         });
     }
     Ok(rows)
@@ -788,7 +801,8 @@ pub fn write_bench_runtime_json(
 
 /// One `deploy` row as JSON — shared by `BENCH_runtime.json` and
 /// `BENCH_deploy.json` so the two files cannot disagree on field names.
-/// `kernel` is the machine-readable `"f32" | "int8"` discriminator.
+/// `kernel` is the machine-readable `"f32" | "int8" | "int4"`
+/// discriminator.
 fn deploy_row_json(r: &DeployBench) -> crate::util::json::Json {
     use crate::util::json::Json;
     Json::obj(vec![
@@ -805,6 +819,7 @@ fn deploy_row_json(r: &DeployBench) -> crate::util::json::Json {
         ("avg_bits", Json::Num(r.avg_bits)),
         ("group_sparsity", Json::Num(r.group_sparsity)),
         ("int_sites", Json::Num(r.int_sites as f64)),
+        ("u4_sites", Json::Num(r.u4_sites as f64)),
     ])
 }
 
@@ -820,17 +835,18 @@ pub fn bench_deploy_json_path() -> std::path::PathBuf {
 /// genuinely new measurements.
 const BENCH_DEPLOY_NOTE: &str =
     "deployment inference summary; regenerate with `make bench-json` or `geta bench-infer \
-     --json` (ms values are machine-dependent). Rows carry model, kernel (\"f32\" | \"int8\"), \
-     batch, threads, dense_ms, compressed_ms, speedup, dense_bytes, disk_bytes, rel_bops, \
-     avg_bits, group_sparsity, int_sites, and (int8 rows) speedup_vs_f32. Writers merge by \
-     model: a single-model `bench-infer --json` run updates only its own rows. CI regenerates \
-     the full file every run, uploads it, and asserts int8 throughput >= f32-dequant on \
-     mlp_tiny and resnet_mini.";
+     --json` (ms values are machine-dependent). Rows carry model, kernel (\"f32\" | \"int8\" | \
+     \"int4\"), batch, threads, dense_ms, compressed_ms, speedup, dense_bytes, disk_bytes, \
+     rel_bops, avg_bits, group_sparsity, int_sites, u4_sites, and (integer rows) \
+     speedup_vs_f32. Writers merge by model: a single-model `bench-infer --json` run updates \
+     only its own rows. CI regenerates the full file every run, uploads it, and asserts int8 \
+     throughput >= f32-dequant and int4 >= int8 (with u4-resident sites) on mlp_tiny and \
+     resnet_mini.";
 
 /// Write the checked-in deployment summary (`BENCH_deploy.json`): the
-/// per-(model, kernel) rows plus, for each int8 row, its throughput ratio
-/// against the f32-dequant row of the same model — the headline number of
-/// the integer compute path.
+/// per-(model, kernel) rows plus, for each integer-kernel row, its
+/// throughput ratio against the f32-dequant row of the same model — the
+/// headline number of the integer compute path.
 ///
 /// **Merge-on-write:** `geta bench-infer --json` benches one model, but
 /// the file tracks every benched model across PRs — rows for models not in
@@ -854,7 +870,7 @@ pub fn write_bench_deploy_json(path: &std::path::Path, deploy: &[DeployBench]) -
     }
     rows.extend(deploy.iter().map(|r| {
         let mut row = deploy_row_json(r);
-        if r.kernel == "int8" {
+        if r.kernel != "f32" {
             if let Some(f) = deploy
                 .iter()
                 .find(|o| o.model == r.model && o.kernel == "f32")
@@ -942,7 +958,7 @@ pub fn bench_serve(
     max_batch: usize,
 ) -> Result<Vec<ServeBench>> {
     use crate::serve::{loadgen, ServeConfig, Server};
-    let art = train_export(art_dir, model, steps_scale, sparsity)?;
+    let art = train_export(art_dir, model, steps_scale, sparsity, 8.0)?;
     let mut engine = GetaEngine::from_container_kernel(&art.container, kernel)?;
     engine.threads = 1;
     let engine = std::sync::Arc::new(engine);

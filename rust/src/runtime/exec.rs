@@ -68,6 +68,7 @@ use super::lowering::{Node, OpKind, Program};
 use crate::quant::{self, QParams};
 use crate::tensor::{
     self, batchnorm_rows, gelu, layernorm_rows, softmax_rows, IntWeight, NormAux, ParamStore,
+    U4Weight,
 };
 
 pub const NORM_EPS: f32 = 1e-5;
@@ -100,6 +101,15 @@ pub trait ParamSource {
     /// for every training/f32 source — routes the node to the f32 `weight`
     /// path. `site` is validated like [`weight`](Self::weight).
     fn weight_i8(&self, _name: &str, _site: Option<usize>) -> Result<Option<&IntWeight>> {
+        Ok(None)
+    }
+
+    /// Resident nibble-packed 4-bit weight for a weight-carrying node,
+    /// when the source keeps one (the deployment int4 engine). Checked
+    /// *before* [`weight_i8`](Self::weight_i8): a site resident in both
+    /// forms takes the packed path. `None` — the default — falls through
+    /// to `weight_i8`, then to the f32 `weight` path.
+    fn weight_u4(&self, _name: &str, _site: Option<usize>) -> Result<Option<&U4Weight>> {
         Ok(None)
     }
 }
@@ -201,6 +211,11 @@ pub struct QuantizedParams<'a> {
     pub weights: &'a ParamStore,
     /// i8-resident weights by tensor name (`tensor/iops.rs` layout).
     pub iweights: &'a BTreeMap<String, IntWeight>,
+    /// Nibble-packed 4-bit resident weights by tensor name
+    /// (`tensor/u4.rs` layout). Disjoint from `iweights` by construction
+    /// (the engine packs each site in exactly one form); empty for the
+    /// int8 kernel.
+    pub uweights: &'a BTreeMap<String, U4Weight>,
     /// Quant site recorded per packed tensor by the container.
     pub weight_sites: &'a BTreeMap<String, usize>,
     pub act_q: &'a [Option<QParams>],
@@ -232,6 +247,16 @@ impl ParamSource for QuantizedParams<'_> {
             }
             return Ok(Cow::Owned(v));
         }
+        if let Some(uw) = self.uweights.get(name) {
+            let levels = uw.unpack_levels();
+            let mut v = Vec::with_capacity(levels.len());
+            for row in levels.chunks_exact(uw.n) {
+                for (j, &l) in row.iter().enumerate() {
+                    v.push(l as f32 * uw.scale[j]);
+                }
+            }
+            return Ok(Cow::Owned(v));
+        }
         Ok(Cow::Borrowed(self.tensor(name)?))
     }
 
@@ -245,6 +270,11 @@ impl ParamSource for QuantizedParams<'_> {
     fn weight_i8(&self, name: &str, site: Option<usize>) -> Result<Option<&IntWeight>> {
         check_weight_site(self.weight_sites, name, site)?;
         Ok(self.iweights.get(name))
+    }
+
+    fn weight_u4(&self, name: &str, site: Option<usize>) -> Result<Option<&U4Weight>> {
+        check_weight_site(self.weight_sites, name, site)?;
+        Ok(self.uweights.get(name))
     }
 }
 
@@ -475,18 +505,19 @@ fn grid_site(prog: &Program, mut id: usize) -> Option<usize> {
     }
 }
 
-/// Decide whether a weight-carrying node with i8-resident weight `iw` can
-/// take the exact i8×i8 path: its input must carry the levels of an
-/// ActQuant site (see [`grid_site`]), those levels must fit i8, and the
-/// `k_dim`-long contraction must be guaranteed not to overflow the i32
-/// accumulator. Returns the activation quantizer to recover levels with,
-/// or `None` for the mixed f32×i8 path.
+/// Decide whether a weight-carrying node with an integer-resident weight
+/// (largest |level| = `max_w`, i8 or nibble-packed u4) can take the exact
+/// integer path: its input must carry the levels of an ActQuant site (see
+/// [`grid_site`]), those levels must fit i8, and the `k_dim`-long
+/// contraction must be guaranteed not to overflow the i32 accumulator.
+/// Returns the activation quantizer to recover levels with, or `None` for
+/// the mixed f32×int path.
 fn int_act_quant(
     prog: &Program,
     src: &dyn ParamSource,
     node: &Node,
     k_dim: usize,
-    iw: &IntWeight,
+    max_w: i32,
 ) -> Result<Option<QParams>> {
     let Some(site) = grid_site(prog, node.inputs[0]) else {
         return Ok(None);
@@ -500,7 +531,7 @@ fn int_act_quant(
     let ok = max_a.is_finite()
         && max_a >= 0.0
         && max_a <= i8::MAX as f32
-        && tensor::i8_gemm_fits_i32(k_dim, max_a as i32, iw.max_abs);
+        && tensor::i8_gemm_fits_i32(k_dim, max_a as i32, max_w);
     Ok(if ok { Some(qp) } else { None })
 }
 
@@ -567,10 +598,36 @@ pub fn forward(
                 let din = *plan.shapes[node.inputs[0]].last().unwrap();
                 let dout = *dims.last().unwrap();
                 let rows = numel / dout;
-                // the integer path serves forward-only consumers; training
+                // the integer paths serve forward-only consumers; training
                 // (with_aux) always multiplies the fake-quantized f32 copy
-                let iw = if with_aux { None } else { src.weight_i8(&wname, *site)? };
-                if let Some(iw) = iw {
+                let uw = if with_aux { None } else { src.weight_u4(&wname, *site)? };
+                let iw =
+                    if with_aux || uw.is_some() { None } else { src.weight_i8(&wname, *site)? };
+                if let Some(uw) = uw {
+                    anyhow::ensure!(
+                        uw.k == din && uw.n == dout,
+                        "{}: u4 weight is {}x{}, program expects {din}x{dout}",
+                        node.name,
+                        uw.k,
+                        uw.n
+                    );
+                    let xin = &vals[node.inputs[0]];
+                    let mut out = arena.alloc_uninit(numel);
+                    match int_act_quant(prog, src, node, din, uw.max_abs)? {
+                        Some(qa) => {
+                            let mut la = arena.alloc_i8(rows * din);
+                            tensor::levels_from_grid(xin, qa.d, &mut la);
+                            tensor::matmul_i8u4_scaled_into(
+                                &mut out, &la, uw, rows, qa.d, Some(bias),
+                            );
+                            arena.reclaim_i8(la);
+                        }
+                        None => {
+                            tensor::matmul_f32u4_scaled_into(&mut out, xin, uw, rows, Some(bias))
+                        }
+                    }
+                    (out, Aux::None)
+                } else if let Some(iw) = iw {
                     anyhow::ensure!(
                         iw.k == din && iw.n == dout,
                         "{}: int weight is {}x{}, program expects {din}x{dout}",
@@ -580,7 +637,7 @@ pub fn forward(
                     );
                     let xin = &vals[node.inputs[0]];
                     let mut out = arena.alloc_uninit(numel);
-                    match int_act_quant(prog, src, node, din, iw)? {
+                    match int_act_quant(prog, src, node, din, iw.max_abs)? {
                         Some(qa) => {
                             let mut la = arena.alloc_i8(rows * din);
                             tensor::levels_from_grid(xin, qa.d, &mut la);
@@ -613,8 +670,46 @@ pub fn forward(
                 let (ho, wo, cout) = (dims[1], dims[2], dims[3]);
                 let rows = bsz * ho * wo;
                 let kdim = k * k * cin;
-                let iw = if with_aux { None } else { src.weight_i8(&wname, *site)? };
-                if let Some(iw) = iw {
+                let uw = if with_aux { None } else { src.weight_u4(&wname, *site)? };
+                let iw =
+                    if with_aux || uw.is_some() { None } else { src.weight_i8(&wname, *site)? };
+                if let Some(uw) = uw {
+                    anyhow::ensure!(
+                        uw.k == kdim && uw.n == cout,
+                        "{}: u4 weight is {}x{}, program expects {kdim}x{cout}",
+                        node.name,
+                        uw.k,
+                        uw.n
+                    );
+                    let xin = &vals[node.inputs[0]];
+                    let mut out = arena.alloc_uninit(numel);
+                    match int_act_quant(prog, src, node, kdim, uw.max_abs)? {
+                        Some(qa) => {
+                            // exact path: image → levels → i8 im2col → u4 GEMM
+                            let mut lx = arena.alloc_i8(xin.len());
+                            tensor::levels_from_grid(xin, qa.d, &mut lx);
+                            let mut cols = arena.alloc_i8(plan.col_sizes[id]);
+                            tensor::im2col_i8_into(
+                                &mut cols, &lx, bsz, h, wd, cin, *k, *stride, *pad, ho, wo,
+                            );
+                            arena.reclaim_i8(lx);
+                            tensor::matmul_i8u4_scaled_into(
+                                &mut out, &cols, uw, rows, qa.d, Some(bias),
+                            );
+                            arena.reclaim_i8(cols);
+                        }
+                        None => {
+                            // mixed path: f32 im2col against resident u4 panels
+                            let mut cols = arena.alloc_uninit(plan.col_sizes[id]);
+                            tensor::im2col_into(
+                                &mut cols, xin, bsz, h, wd, cin, *k, *stride, *pad, ho, wo,
+                            );
+                            tensor::matmul_f32u4_scaled_into(&mut out, &cols, uw, rows, Some(bias));
+                            arena.reclaim(cols);
+                        }
+                    }
+                    (out, Aux::None)
+                } else if let Some(iw) = iw {
                     anyhow::ensure!(
                         iw.k == kdim && iw.n == cout,
                         "{}: int weight is {}x{}, program expects {kdim}x{cout}",
@@ -624,7 +719,7 @@ pub fn forward(
                     );
                     let xin = &vals[node.inputs[0]];
                     let mut out = arena.alloc_uninit(numel);
-                    match int_act_quant(prog, src, node, kdim, iw)? {
+                    match int_act_quant(prog, src, node, kdim, iw.max_abs)? {
                         Some(qa) => {
                             // exact path: image → levels → i8 im2col → i8 GEMM
                             let mut lx = arena.alloc_i8(xin.len());
@@ -1133,11 +1228,19 @@ mod tests {
             "fc0.weight".to_string(),
             IntWeight::from_levels(&[-2, 1, 4, -3], 2, 0.25).unwrap(),
         );
+        let mut uweights = BTreeMap::new();
+        // [k=2, n=3] nibble-packed levels with step 0.5 (odd n: padded tail)
+        uweights.insert(
+            "fc1.weight".to_string(),
+            U4Weight::from_levels(&[-7, 3, 0, 5, -1, 7], 3, 0.5).unwrap(),
+        );
         let mut sites = BTreeMap::new();
         sites.insert("fc0.weight".to_string(), 0usize);
+        sites.insert("fc1.weight".to_string(), 1usize);
         let src = QuantizedParams {
             weights: &weights,
             iweights: &iweights,
+            uweights: &uweights,
             weight_sites: &sites,
             act_q: &[],
         };
@@ -1147,11 +1250,19 @@ mod tests {
         // f32 fallback dequantizes levels × per-channel scale
         let w = src.weight("fc0.weight", Some(0)).unwrap();
         assert_eq!(w.as_ref(), &[-0.5, 0.25, 1.0, -0.75]);
-        // site validation bites on both entry points
+        // the packed-u4 entry points mirror the i8 ones
+        let uw = src.weight_u4("fc1.weight", Some(1)).unwrap().unwrap();
+        assert_eq!(uw.unpack_levels(), vec![-7, 3, 0, 5, -1, 7]);
+        assert_eq!(uw.max_abs, 7);
+        let w = src.weight("fc1.weight", Some(1)).unwrap();
+        assert_eq!(w.as_ref(), &[-3.5, 1.5, 0.0, 2.5, -0.5, 3.5]);
+        // site validation bites on every entry point
         assert!(src.weight_i8("fc0.weight", Some(2)).is_err());
+        assert!(src.weight_u4("fc1.weight", Some(2)).is_err());
         assert!(src.weight("fc0.weight", Some(2)).is_err());
         // a name without an int weight falls through to the f32 store
         assert!(src.weight_i8("other.weight", Some(1)).unwrap().is_none());
+        assert!(src.weight_u4("other.weight", Some(1)).unwrap().is_none());
         assert!(src.weight("other.weight", Some(1)).is_err()); // not in store either
     }
 

@@ -37,7 +37,7 @@
 //! fixed per-row accumulation order (a function of `(k, TILE_K)` only) for
 //! the same guarantee.
 
-use super::ops::{kernel_threads, TILE_I, TILE_K};
+use super::tile::{kernel_threads, TILE_I, TILE_K};
 
 /// One weight tensor held as resident integer levels — the deployment
 /// engine's weight-stationary layout. `levels` is `[k, n]` row-major,
@@ -152,7 +152,9 @@ pub fn matmul_i8_into(out: &mut [i32], a: &[i8], b: &[i8], m: usize, k: usize, n
 
 /// Accumulate rows `ib..ib+ilen` (absolute `i0+ib..`) of `a @ b` into the
 /// i32 tile `acc` (`ilen × n`, pre-zeroed). Shared by the raw and the
-/// scaled-epilogue drivers so the two cannot diverge.
+/// scaled-epilogue drivers so the two cannot diverge. With the `simd`
+/// feature an arch-specific body runs first (`simd.rs`) — i32 sums are
+/// exact under the overflow gate, so any lane order is bitwise equal.
 #[inline]
 fn acc_tile_i8(
     acc: &mut [i32],
@@ -163,6 +165,10 @@ fn acc_tile_i8(
     k: usize,
     n: usize,
 ) {
+    #[cfg(feature = "simd")]
+    if super::simd::acc_tile_i8(acc, a, b, row0, ilen, k, n) {
+        return;
+    }
     for kb in (0..k).step_by(TILE_K) {
         let klen = TILE_K.min(k - kb);
         for ii in 0..ilen {
@@ -353,43 +359,7 @@ fn matmul_f32i8_rows(
         let ilen = TILE_I.min(rows - ib);
         let acc = &mut acc[..ilen * n];
         acc.fill(0.0);
-        for kb in (0..k).step_by(TILE_K) {
-            let klen = TILE_K.min(k - kb);
-            for ii in 0..ilen {
-                let arow = &a[(i0 + ib + ii) * k + kb..][..klen];
-                let accrow = &mut acc[ii * n..(ii + 1) * n];
-                let mut kk = 0;
-                while kk + 4 <= klen {
-                    let a0 = arow[kk] as f64;
-                    let a1 = arow[kk + 1] as f64;
-                    let a2 = arow[kk + 2] as f64;
-                    let a3 = arow[kk + 3] as f64;
-                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
-                        let b0 = &b[(kb + kk) * n..][..n];
-                        let b1 = &b[(kb + kk + 1) * n..][..n];
-                        let b2 = &b[(kb + kk + 2) * n..][..n];
-                        let b3 = &b[(kb + kk + 3) * n..][..n];
-                        for j in 0..n {
-                            accrow[j] += a0 * b0[j] as f64
-                                + a1 * b1[j] as f64
-                                + a2 * b2[j] as f64
-                                + a3 * b3[j] as f64;
-                        }
-                    }
-                    kk += 4;
-                }
-                while kk < klen {
-                    let av = arow[kk] as f64;
-                    if av != 0.0 {
-                        let brow = &b[(kb + kk) * n..][..n];
-                        for j in 0..n {
-                            accrow[j] += av * brow[j] as f64;
-                        }
-                    }
-                    kk += 1;
-                }
-            }
-        }
+        acc_tile_f32i8(acc, a, b, i0 + ib, ilen, k, n);
         for ii in 0..ilen {
             let orow = &mut out[(ib + ii) * n..(ib + ii + 1) * n];
             match bias {
@@ -403,6 +373,62 @@ fn matmul_f32i8_rows(
                         orow[j] = (acc[ii * n + j] * scale[j] as f64) as f32;
                     }
                 }
+            }
+        }
+    }
+}
+
+/// Accumulate rows `row0..row0+ilen` of `a @ b` (f32 × i8 levels) into
+/// the f64 tile `acc` (`ilen × n`, pre-zeroed) — the same per-column
+/// accumulation order as the f32 kernels. The `simd` dispatch body
+/// replays that order exactly (see `simd.rs`).
+fn acc_tile_f32i8(
+    acc: &mut [f64],
+    a: &[f32],
+    b: &[i8],
+    row0: usize,
+    ilen: usize,
+    k: usize,
+    n: usize,
+) {
+    #[cfg(feature = "simd")]
+    if super::simd::acc_tile_f32i8(acc, a, b, row0, ilen, k, n) {
+        return;
+    }
+    for kb in (0..k).step_by(TILE_K) {
+        let klen = TILE_K.min(k - kb);
+        for ii in 0..ilen {
+            let arow = &a[(row0 + ii) * k + kb..][..klen];
+            let accrow = &mut acc[ii * n..(ii + 1) * n];
+            let mut kk = 0;
+            while kk + 4 <= klen {
+                let a0 = arow[kk] as f64;
+                let a1 = arow[kk + 1] as f64;
+                let a2 = arow[kk + 2] as f64;
+                let a3 = arow[kk + 3] as f64;
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let b0 = &b[(kb + kk) * n..][..n];
+                    let b1 = &b[(kb + kk + 1) * n..][..n];
+                    let b2 = &b[(kb + kk + 2) * n..][..n];
+                    let b3 = &b[(kb + kk + 3) * n..][..n];
+                    for j in 0..n {
+                        accrow[j] += a0 * b0[j] as f64
+                            + a1 * b1[j] as f64
+                            + a2 * b2[j] as f64
+                            + a3 * b3[j] as f64;
+                    }
+                }
+                kk += 4;
+            }
+            while kk < klen {
+                let av = arow[kk] as f64;
+                if av != 0.0 {
+                    let brow = &b[(kb + kk) * n..][..n];
+                    for j in 0..n {
+                        accrow[j] += av * brow[j] as f64;
+                    }
+                }
+                kk += 1;
             }
         }
     }
@@ -482,7 +508,7 @@ pub fn matmul_i8_naive(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<
 mod tests {
     use super::*;
     use crate::quant::{self, QParams};
-    use crate::tensor::ops::THREAD_TEST_LOCK;
+    use crate::tensor::tile::THREAD_TEST_LOCK;
     use crate::tensor::{self, ops};
     use crate::util::prop;
 

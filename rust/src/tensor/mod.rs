@@ -6,9 +6,15 @@
 
 pub mod iops;
 pub mod ops;
+#[cfg(feature = "simd")]
+pub(crate) mod simd;
+pub mod tile;
+pub mod u4;
 
 pub use iops::*;
 pub use ops::*;
+pub use tile::{configured_threads, serial_scope, set_threads};
+pub use u4::*;
 
 #[derive(Debug, Clone)]
 pub struct Tensor {

@@ -84,82 +84,10 @@ pub fn scatter_strided(data: &mut [f32], start: usize, stride: usize, vals: &[f3
     assert_eq!(k, vals.len());
 }
 
-// ------------------------------------------------------- thread plumbing
-//
-// One process-wide worker budget shared by every execution path: the
-// training interpreter, the `.geta` inference engine and the benches all
-// run the tiled GEMM kernels below, which split their output rows across
-// `configured_threads()` `std::thread` workers. The budget resolves, in
-// priority order, from `set_threads` (the CLI `--threads` plumbing), the
-// `GETA_THREADS` environment variable, then `available_parallelism`.
-//
-// Determinism contract: every output element is produced by exactly one
-// worker with an accumulation order fixed by (shape, constants) alone, so
-// kernel results are **bitwise identical for every thread count** — the
-// invariant the threaded-determinism e2e tests pin.
-
-use std::sync::atomic::{AtomicUsize, Ordering};
-
-static THREADS: AtomicUsize = AtomicUsize::new(0);
-
-/// Override the worker-thread budget (CLI `--threads`). Takes precedence
-/// over `GETA_THREADS` and the machine's parallelism.
-pub fn set_threads(n: usize) {
-    THREADS.store(n.max(1), Ordering::Relaxed);
-}
-
-/// Resolve the worker-thread budget (see the section notes above). The
-/// environment is consulted once; later calls return the cached value.
-pub fn configured_threads() -> usize {
-    let t = THREADS.load(Ordering::Relaxed);
-    if t != 0 {
-        return t;
-    }
-    let n = std::env::var("GETA_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
-    THREADS.store(n, Ordering::Relaxed);
-    n
-}
-
-/// Serializes the #[test]s that mutate the process-global thread budget:
-/// cargo runs tests concurrently in one binary, so without one shared
-/// lock a concurrent `set_threads()` could retarget a sibling's labeled
-/// runs. Shared by the `ops` and `iops` test modules.
-#[cfg(test)]
-pub(crate) static THREAD_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-
-thread_local! {
-    static SERIAL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
-}
-
-/// Run `f` with the tiled kernels pinned to one thread on the calling
-/// thread. Callers that already shard work across their own workers
-/// (micro-batch sharding in `deploy::GetaEngine::infer`) wrap each worker
-/// body in this so nested parallelism cannot oversubscribe the machine.
-pub fn serial_scope<R>(f: impl FnOnce() -> R) -> R {
-    SERIAL.with(|s| {
-        let prev = s.replace(true);
-        let out = f();
-        s.set(prev);
-        out
-    })
-}
-
-/// Worker count for a kernel doing `work` multiply-adds over `rows`
-/// partitionable output rows: 1 inside [`serial_scope`] or when the job is
-/// too small to amortize a spawn, else the configured budget. Shared with
-/// the integer kernels (`iops.rs`) so both halves of the executor honor
-/// one thread budget.
-pub(crate) fn kernel_threads(work: usize, rows: usize) -> usize {
-    const MIN_WORK_PER_THREAD: usize = 1 << 16;
-    if work < 2 * MIN_WORK_PER_THREAD || SERIAL.with(|s| s.get()) {
-        return 1;
-    }
-    configured_threads().min(work / MIN_WORK_PER_THREAD).min(rows).max(1)
-}
+// Thread plumbing and tile constants live in `tile.rs` — one shared
+// tiling config for the f32, i8 and u4 kernel families (and the SIMD
+// dispatch layer), re-exported through `tensor::` unchanged.
+use super::tile::{kernel_threads, TILE_I, TILE_K};
 
 // ------------------------------------------------------------ dense GEMM
 //
@@ -170,12 +98,10 @@ pub(crate) fn kernel_threads(work: usize, rows: usize) -> usize {
 // output rows, unroll k four-wide to cut accumulator traffic, and split
 // output rows across worker threads. The `*_naive` triple loops are the
 // ground truth the property tests compare against and the baseline
-// `BENCH_runtime.json` measures speedups over.
-
-// Shared with the integer kernels (`iops.rs`), which promise the same
-// per-row accumulation order as the f32 kernels — a tune here retunes both.
-pub(crate) const TILE_I: usize = 16;
-pub(crate) const TILE_K: usize = 256;
+// `BENCH_runtime.json` measures speedups over. With the `simd` feature
+// the inner row workers first try an arch-specific vectorized body
+// (`simd.rs`) that replays the exact same accumulation order, so results
+// stay bitwise identical to these scalar tiles.
 
 /// `a[m,k] @ b[k,n]` (row-major flat buffers) — tiled + threaded.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -219,47 +145,59 @@ fn matmul_rows(out: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
         let ilen = TILE_I.min(rows - ib);
         let acc = &mut acc[..ilen * n];
         acc.fill(0.0);
-        for kb in (0..k).step_by(TILE_K) {
-            let klen = TILE_K.min(k - kb);
-            for ii in 0..ilen {
-                let arow = &a[(i0 + ib + ii) * k + kb..][..klen];
-                let accrow = &mut acc[ii * n..(ii + 1) * n];
-                let mut kk = 0;
-                while kk + 4 <= klen {
-                    let a0 = arow[kk] as f64;
-                    let a1 = arow[kk + 1] as f64;
-                    let a2 = arow[kk + 2] as f64;
-                    let a3 = arow[kk + 3] as f64;
-                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
-                        let b0 = &b[(kb + kk) * n..][..n];
-                        let b1 = &b[(kb + kk + 1) * n..][..n];
-                        let b2 = &b[(kb + kk + 2) * n..][..n];
-                        let b3 = &b[(kb + kk + 3) * n..][..n];
-                        for j in 0..n {
-                            accrow[j] += a0 * b0[j] as f64
-                                + a1 * b1[j] as f64
-                                + a2 * b2[j] as f64
-                                + a3 * b3[j] as f64;
-                        }
-                    }
-                    kk += 4;
-                }
-                while kk < klen {
-                    let av = arow[kk] as f64;
-                    if av != 0.0 {
-                        let brow = &b[(kb + kk) * n..][..n];
-                        for j in 0..n {
-                            accrow[j] += av * brow[j] as f64;
-                        }
-                    }
-                    kk += 1;
-                }
-            }
-        }
+        acc_tile_f32(acc, a, b, i0 + ib, ilen, k, n);
         for ii in 0..ilen {
             let orow = &mut out[(ib + ii) * n..(ib + ii + 1) * n];
             for j in 0..n {
                 orow[j] = acc[ii * n + j] as f32;
+            }
+        }
+    }
+}
+
+/// Accumulate rows `row0..row0+ilen` of `a @ b` into the f64 tile `acc`
+/// (`ilen × n`, pre-zeroed). With the `simd` feature an arch-specific
+/// body runs first (`simd.rs`); it replays this exact per-column
+/// accumulation order, so the dispatch never changes a single bit.
+fn acc_tile_f32(acc: &mut [f64], a: &[f32], b: &[f32], row0: usize, ilen: usize, k: usize, n: usize) {
+    #[cfg(feature = "simd")]
+    if super::simd::acc_tile_f32(acc, a, b, row0, ilen, k, n) {
+        return;
+    }
+    for kb in (0..k).step_by(TILE_K) {
+        let klen = TILE_K.min(k - kb);
+        for ii in 0..ilen {
+            let arow = &a[(row0 + ii) * k + kb..][..klen];
+            let accrow = &mut acc[ii * n..(ii + 1) * n];
+            let mut kk = 0;
+            while kk + 4 <= klen {
+                let a0 = arow[kk] as f64;
+                let a1 = arow[kk + 1] as f64;
+                let a2 = arow[kk + 2] as f64;
+                let a3 = arow[kk + 3] as f64;
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let b0 = &b[(kb + kk) * n..][..n];
+                    let b1 = &b[(kb + kk + 1) * n..][..n];
+                    let b2 = &b[(kb + kk + 2) * n..][..n];
+                    let b3 = &b[(kb + kk + 3) * n..][..n];
+                    for j in 0..n {
+                        accrow[j] += a0 * b0[j] as f64
+                            + a1 * b1[j] as f64
+                            + a2 * b2[j] as f64
+                            + a3 * b3[j] as f64;
+                    }
+                }
+                kk += 4;
+            }
+            while kk < klen {
+                let av = arow[kk] as f64;
+                if av != 0.0 {
+                    let brow = &b[(kb + kk) * n..][..n];
+                    for j in 0..n {
+                        accrow[j] += av * brow[j] as f64;
+                    }
+                }
+                kk += 1;
             }
         }
     }
@@ -303,6 +241,29 @@ pub fn matmul_tn_into(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
 fn matmul_tn_rows(out: &mut [f32], a: &[f32], b: &[f32], k0: usize, m: usize, k: usize, n: usize) {
     let klen = out.len() / n;
     let mut acc = vec![0.0f64; klen * n];
+    acc_tn_f32(&mut acc, a, b, k0, klen, m, k, n);
+    for (o, &v) in out.iter_mut().zip(acc.iter()) {
+        *o = v as f32;
+    }
+}
+
+/// Accumulation body of [`matmul_tn_rows`]; the `simd` dispatch replays
+/// the identical i-ascending per-column order (see `simd.rs`).
+#[allow(clippy::too_many_arguments)]
+fn acc_tn_f32(
+    acc: &mut [f64],
+    a: &[f32],
+    b: &[f32],
+    k0: usize,
+    klen: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    #[cfg(feature = "simd")]
+    if super::simd::acc_tn_f32(acc, a, b, k0, klen, m, k, n) {
+        return;
+    }
     for i in 0..m {
         let arow = &a[i * k + k0..][..klen];
         let brow = &b[i * n..(i + 1) * n];
@@ -316,9 +277,6 @@ fn matmul_tn_rows(out: &mut [f32], a: &[f32], b: &[f32], k0: usize, m: usize, k:
                 accrow[j] += av * brow[j] as f64;
             }
         }
-    }
-    for (o, &v) in out.iter_mut().zip(acc.iter()) {
-        *o = v as f32;
     }
 }
 
@@ -813,6 +771,7 @@ pub fn gelu_grad(x: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::tile::{configured_threads, serial_scope, set_threads, THREAD_TEST_LOCK};
     use crate::util::prop;
 
     #[test]

@@ -1,0 +1,806 @@
+//! Arch-dispatched SIMD bodies for the hot GEMM accumulation tiles
+//! (`cargo` feature `simd`).
+//!
+//! Every entry point mirrors one scalar accumulation tile in `ops.rs` /
+//! `iops.rs` / `u4.rs` and returns `true` when an arch-specific body ran,
+//! `false` when the caller must fall back to the scalar tile (unknown
+//! arch, or AVX2 absent at runtime on x86_64). The scalar tiles remain
+//! the always-available ground truth — the differential suite in
+//! `rust/tests/test_kernels.rs` pins agreement with and without this
+//! feature.
+//!
+//! Exactness contract (stronger than "close"): the vector bodies are
+//! **bitwise identical** to the scalar tiles at every thread count.
+//! - Integer tiles accumulate in i32, which is associative and exact
+//!   under the `i8_gemm_fits_i32` gate, so any lane order is bitwise
+//!   equal by construction.
+//! - Float tiles vectorize **across j** (independent output columns):
+//!   each f64 lane replays the scalar expression for its own column —
+//!   multiplies then the same left-associated adds, never FMA — so the
+//!   per-column rounding sequence is unchanged from the scalar kernel.
+//! Dispatch is per accumulation tile: one cached `is_x86_feature_detected!`
+//! check (a relaxed atomic load) per `TILE_I × n` block.
+//!
+//! Arch coverage: AVX2 on x86_64 (runtime-detected); NEON on aarch64
+//! (baseline, always present). The mixed f32×i8 tile is AVX2-only for
+//! now — on aarch64 it returns `false` and the scalar tile runs. Other
+//! arches always fall back.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::tile::TILE_K;
+
+/// Vector body for `ops::matmul_rows`' accumulation tile: `acc[ilen, n]`
+/// += rows `row0..row0+ilen` of `a[·,k] @ b[k,n]`, f64 accumulators.
+pub(crate) fn acc_tile_f32(
+    acc: &mut [f64],
+    a: &[f32],
+    b: &[f32],
+    row0: usize,
+    ilen: usize,
+    k: usize,
+    n: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        unsafe { x86::acc_tile_f32(acc, a, b, row0, ilen, k, n) };
+        return true;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        unsafe { neon::acc_tile_f32(acc, a, b, row0, ilen, k, n) };
+        return true;
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        let _ = (acc, a, b, row0, ilen, k, n);
+        false
+    }
+}
+
+/// Vector body for `ops::matmul_tn_rows`' accumulation: `acc[klen, n]` +=
+/// columns `k0..k0+klen` of `a[m,k]^T @ b[m,n]`, i ascending.
+pub(crate) fn acc_tn_f32(
+    acc: &mut [f64],
+    a: &[f32],
+    b: &[f32],
+    k0: usize,
+    klen: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        unsafe { x86::acc_tn_f32(acc, a, b, k0, klen, m, k, n) };
+        return true;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        unsafe { neon::acc_tn_f32(acc, a, b, k0, klen, m, k, n) };
+        return true;
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        let _ = (acc, a, b, k0, klen, m, k, n);
+        false
+    }
+}
+
+/// Vector body for `iops::acc_tile_i8`: exact i32 accumulation.
+pub(crate) fn acc_tile_i8(
+    acc: &mut [i32],
+    a: &[i8],
+    b: &[i8],
+    row0: usize,
+    ilen: usize,
+    k: usize,
+    n: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        unsafe { x86::acc_tile_i8(acc, a, b, row0, ilen, k, n) };
+        return true;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        unsafe { neon::acc_tile_i8(acc, a, b, row0, ilen, k, n) };
+        return true;
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        let _ = (acc, a, b, row0, ilen, k, n);
+        false
+    }
+}
+
+/// Vector body for `iops::matmul_f32i8_rows`' accumulation tile (mixed
+/// f32 activations × i8 levels, f64 accumulators). AVX2-only.
+pub(crate) fn acc_tile_f32i8(
+    acc: &mut [f64],
+    a: &[f32],
+    b: &[i8],
+    row0: usize,
+    ilen: usize,
+    k: usize,
+    n: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        unsafe { x86::acc_tile_f32i8(acc, a, b, row0, ilen, k, n) };
+        return true;
+    }
+    let _ = (acc, a, b, row0, ilen, k, n);
+    false
+}
+
+/// Vector body for `u4::acc_tile_u4`: i8 activations × nibble-packed
+/// weights, exact i32 accumulation, nibbles unpacked in-register.
+/// `bp` is the packed panel, row stride `n.div_ceil(2)` bytes.
+pub(crate) fn acc_tile_u4(
+    acc: &mut [i32],
+    a: &[i8],
+    bp: &[u8],
+    row0: usize,
+    ilen: usize,
+    k: usize,
+    n: usize,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        unsafe { x86::acc_tile_u4(acc, a, bp, row0, ilen, k, n) };
+        return true;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        unsafe { neon::acc_tile_u4(acc, a, bp, row0, ilen, k, n) };
+        return true;
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        let _ = (acc, a, bp, row0, ilen, k, n);
+        false
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::TILE_K;
+    use std::arch::x86_64::*;
+
+    /// 4-wide f64 update of one accumulator row: the scalar expression
+    /// `acc[j] += a0·b0[j] + a1·b1[j] + a2·b2[j] + a3·b3[j]` with the
+    /// same mul-then-left-associated-add order per lane (no FMA), so
+    /// every column rounds exactly as the scalar tile does.
+    #[target_feature(enable = "avx2")]
+    unsafe fn f64_j4(
+        acc: &mut [f64],
+        a0: f64,
+        a1: f64,
+        a2: f64,
+        a3: f64,
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+        n: usize,
+    ) {
+        let va0 = _mm256_set1_pd(a0);
+        let va1 = _mm256_set1_pd(a1);
+        let va2 = _mm256_set1_pd(a2);
+        let va3 = _mm256_set1_pd(a3);
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0v = _mm256_cvtps_pd(_mm_loadu_ps(b0.as_ptr().add(j)));
+            let b1v = _mm256_cvtps_pd(_mm_loadu_ps(b1.as_ptr().add(j)));
+            let b2v = _mm256_cvtps_pd(_mm_loadu_ps(b2.as_ptr().add(j)));
+            let b3v = _mm256_cvtps_pd(_mm_loadu_ps(b3.as_ptr().add(j)));
+            let t = _mm256_add_pd(
+                _mm256_add_pd(
+                    _mm256_add_pd(_mm256_mul_pd(va0, b0v), _mm256_mul_pd(va1, b1v)),
+                    _mm256_mul_pd(va2, b2v),
+                ),
+                _mm256_mul_pd(va3, b3v),
+            );
+            let av = _mm256_loadu_pd(acc.as_ptr().add(j));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(av, t));
+            j += 4;
+        }
+        while j < n {
+            acc[j] += a0 * b0[j] as f64 + a1 * b1[j] as f64 + a2 * b2[j] as f64 + a3 * b3[j] as f64;
+            j += 1;
+        }
+    }
+
+    /// Single-k f64 update: `acc[j] += av · brow[j]`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn f64_j1(acc: &mut [f64], av: f64, brow: &[f32], n: usize) {
+        let vav = _mm256_set1_pd(av);
+        let mut j = 0;
+        while j + 4 <= n {
+            let bv = _mm256_cvtps_pd(_mm_loadu_ps(brow.as_ptr().add(j)));
+            let t = _mm256_mul_pd(vav, bv);
+            let av4 = _mm256_loadu_pd(acc.as_ptr().add(j));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(av4, t));
+            j += 4;
+        }
+        while j < n {
+            acc[j] += av * brow[j] as f64;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn acc_tile_f32(
+        acc: &mut [f64],
+        a: &[f32],
+        b: &[f32],
+        row0: usize,
+        ilen: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(row0 + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                let mut kk = 0;
+                while kk + 4 <= klen {
+                    let a0 = arow[kk] as f64;
+                    let a1 = arow[kk + 1] as f64;
+                    let a2 = arow[kk + 2] as f64;
+                    let a3 = arow[kk + 3] as f64;
+                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                        let b0 = &b[(kb + kk) * n..][..n];
+                        let b1 = &b[(kb + kk + 1) * n..][..n];
+                        let b2 = &b[(kb + kk + 2) * n..][..n];
+                        let b3 = &b[(kb + kk + 3) * n..][..n];
+                        f64_j4(accrow, a0, a1, a2, a3, b0, b1, b2, b3, n);
+                    }
+                    kk += 4;
+                }
+                while kk < klen {
+                    let av = arow[kk] as f64;
+                    if av != 0.0 {
+                        f64_j1(accrow, av, &b[(kb + kk) * n..][..n], n);
+                    }
+                    kk += 1;
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn acc_tn_f32(
+        acc: &mut [f64],
+        a: &[f32],
+        b: &[f32],
+        k0: usize,
+        klen: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for i in 0..m {
+            let arow = &a[i * k + k0..][..klen];
+            let brow = &b[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                f64_j1(&mut acc[kk * n..(kk + 1) * n], av as f64, brow, n);
+            }
+        }
+    }
+
+    /// 8-wide i32 update of one accumulator row (exact — lane order is
+    /// irrelevant for integer sums under the overflow gate).
+    #[target_feature(enable = "avx2")]
+    unsafe fn i32_j8(
+        acc: &mut [i32],
+        a0: i32,
+        a1: i32,
+        a2: i32,
+        a3: i32,
+        b0: &[i8],
+        b1: &[i8],
+        b2: &[i8],
+        b3: &[i8],
+        n: usize,
+    ) {
+        let va0 = _mm256_set1_epi32(a0);
+        let va1 = _mm256_set1_epi32(a1);
+        let va2 = _mm256_set1_epi32(a2);
+        let va3 = _mm256_set1_epi32(a3);
+        let mut j = 0;
+        while j + 8 <= n {
+            let b0v = _mm256_cvtepi8_epi32(_mm_loadl_epi64(b0.as_ptr().add(j) as *const __m128i));
+            let b1v = _mm256_cvtepi8_epi32(_mm_loadl_epi64(b1.as_ptr().add(j) as *const __m128i));
+            let b2v = _mm256_cvtepi8_epi32(_mm_loadl_epi64(b2.as_ptr().add(j) as *const __m128i));
+            let b3v = _mm256_cvtepi8_epi32(_mm_loadl_epi64(b3.as_ptr().add(j) as *const __m128i));
+            let t = _mm256_add_epi32(
+                _mm256_add_epi32(
+                    _mm256_add_epi32(_mm256_mullo_epi32(va0, b0v), _mm256_mullo_epi32(va1, b1v)),
+                    _mm256_mullo_epi32(va2, b2v),
+                ),
+                _mm256_mullo_epi32(va3, b3v),
+            );
+            let av = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(j) as *mut __m256i, _mm256_add_epi32(av, t));
+            j += 8;
+        }
+        while j < n {
+            acc[j] +=
+                a0 * b0[j] as i32 + a1 * b1[j] as i32 + a2 * b2[j] as i32 + a3 * b3[j] as i32;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn i32_j1(acc: &mut [i32], av: i32, brow: &[i8], n: usize) {
+        let vav = _mm256_set1_epi32(av);
+        let mut j = 0;
+        while j + 8 <= n {
+            let bv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(brow.as_ptr().add(j) as *const __m128i));
+            let t = _mm256_mullo_epi32(vav, bv);
+            let a8 = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(j) as *mut __m256i, _mm256_add_epi32(a8, t));
+            j += 8;
+        }
+        while j < n {
+            acc[j] += av * brow[j] as i32;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn acc_tile_i8(
+        acc: &mut [i32],
+        a: &[i8],
+        b: &[i8],
+        row0: usize,
+        ilen: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(row0 + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                let mut kk = 0;
+                while kk + 4 <= klen {
+                    let a0 = arow[kk] as i32;
+                    let a1 = arow[kk + 1] as i32;
+                    let a2 = arow[kk + 2] as i32;
+                    let a3 = arow[kk + 3] as i32;
+                    if a0 != 0 || a1 != 0 || a2 != 0 || a3 != 0 {
+                        let b0 = &b[(kb + kk) * n..][..n];
+                        let b1 = &b[(kb + kk + 1) * n..][..n];
+                        let b2 = &b[(kb + kk + 2) * n..][..n];
+                        let b3 = &b[(kb + kk + 3) * n..][..n];
+                        i32_j8(accrow, a0, a1, a2, a3, b0, b1, b2, b3, n);
+                    }
+                    kk += 4;
+                }
+                while kk < klen {
+                    let av = arow[kk] as i32;
+                    if av != 0 {
+                        i32_j1(accrow, av, &b[(kb + kk) * n..][..n], n);
+                    }
+                    kk += 1;
+                }
+            }
+        }
+    }
+
+    /// 4-wide f64 update against i8 weights: widen 4 levels to f64
+    /// (exact), then the same mul/left-associated-add order per lane.
+    #[target_feature(enable = "avx2")]
+    unsafe fn f64_i8_j4(
+        acc: &mut [f64],
+        a0: f64,
+        a1: f64,
+        a2: f64,
+        a3: f64,
+        b0: &[i8],
+        b1: &[i8],
+        b2: &[i8],
+        b3: &[i8],
+        n: usize,
+    ) {
+        #[target_feature(enable = "avx2")]
+        unsafe fn widen4(p: *const i8) -> __m256d {
+            let raw = (p as *const i32).read_unaligned();
+            _mm256_cvtepi32_pd(_mm_cvtepi8_epi32(_mm_cvtsi32_si128(raw)))
+        }
+        let va0 = _mm256_set1_pd(a0);
+        let va1 = _mm256_set1_pd(a1);
+        let va2 = _mm256_set1_pd(a2);
+        let va3 = _mm256_set1_pd(a3);
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0v = widen4(b0.as_ptr().add(j));
+            let b1v = widen4(b1.as_ptr().add(j));
+            let b2v = widen4(b2.as_ptr().add(j));
+            let b3v = widen4(b3.as_ptr().add(j));
+            let t = _mm256_add_pd(
+                _mm256_add_pd(
+                    _mm256_add_pd(_mm256_mul_pd(va0, b0v), _mm256_mul_pd(va1, b1v)),
+                    _mm256_mul_pd(va2, b2v),
+                ),
+                _mm256_mul_pd(va3, b3v),
+            );
+            let av = _mm256_loadu_pd(acc.as_ptr().add(j));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(av, t));
+            j += 4;
+        }
+        while j < n {
+            acc[j] += a0 * b0[j] as f64 + a1 * b1[j] as f64 + a2 * b2[j] as f64 + a3 * b3[j] as f64;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn f64_i8_j1(acc: &mut [f64], av: f64, brow: &[i8], n: usize) {
+        let vav = _mm256_set1_pd(av);
+        let mut j = 0;
+        while j + 4 <= n {
+            let raw = (brow.as_ptr().add(j) as *const i32).read_unaligned();
+            let bv = _mm256_cvtepi32_pd(_mm_cvtepi8_epi32(_mm_cvtsi32_si128(raw)));
+            let t = _mm256_mul_pd(vav, bv);
+            let a4 = _mm256_loadu_pd(acc.as_ptr().add(j));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(a4, t));
+            j += 4;
+        }
+        while j < n {
+            acc[j] += av * brow[j] as f64;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn acc_tile_f32i8(
+        acc: &mut [f64],
+        a: &[f32],
+        b: &[i8],
+        row0: usize,
+        ilen: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(row0 + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                let mut kk = 0;
+                while kk + 4 <= klen {
+                    let a0 = arow[kk] as f64;
+                    let a1 = arow[kk + 1] as f64;
+                    let a2 = arow[kk + 2] as f64;
+                    let a3 = arow[kk + 3] as f64;
+                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                        let b0 = &b[(kb + kk) * n..][..n];
+                        let b1 = &b[(kb + kk + 1) * n..][..n];
+                        let b2 = &b[(kb + kk + 2) * n..][..n];
+                        let b3 = &b[(kb + kk + 3) * n..][..n];
+                        f64_i8_j4(accrow, a0, a1, a2, a3, b0, b1, b2, b3, n);
+                    }
+                    kk += 4;
+                }
+                while kk < klen {
+                    let av = arow[kk] as f64;
+                    if av != 0.0 {
+                        f64_i8_j1(accrow, av, &b[(kb + kk) * n..][..n], n);
+                    }
+                    kk += 1;
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn acc_tile_u4(
+        acc: &mut [i32],
+        a: &[i8],
+        bp: &[u8],
+        row0: usize,
+        ilen: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let nb = n.div_ceil(2);
+        let full = n / 2;
+        let mask = _mm_set1_epi8(0x0F);
+        let bias = _mm_set1_epi8(8);
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(row0 + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                for (kk, &araw) in arow.iter().enumerate() {
+                    let av = araw as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &bp[(kb + kk) * nb..][..nb];
+                    let vav = _mm256_set1_epi32(av);
+                    let mut jb = 0;
+                    // 8 packed bytes -> 16 columns per step
+                    while 2 * jb + 16 <= n {
+                        let vb = _mm_loadl_epi64(brow.as_ptr().add(jb) as *const __m128i);
+                        let lo = _mm_and_si128(vb, mask);
+                        let hi = _mm_and_si128(_mm_srli_epi16::<4>(vb), mask);
+                        // interleave restores column order: lo0 hi0 lo1 hi1 ...
+                        let nib = _mm_unpacklo_epi8(lo, hi);
+                        // sign-extend 4-bit two's complement: (x ^ 8) - 8
+                        let s = _mm_sub_epi8(_mm_xor_si128(nib, bias), bias);
+                        let w0 = _mm256_cvtepi8_epi32(s);
+                        let w1 = _mm256_cvtepi8_epi32(_mm_srli_si128::<8>(s));
+                        let j = 2 * jb;
+                        let a0 = _mm256_loadu_si256(accrow.as_ptr().add(j) as *const __m256i);
+                        _mm256_storeu_si256(
+                            accrow.as_mut_ptr().add(j) as *mut __m256i,
+                            _mm256_add_epi32(a0, _mm256_mullo_epi32(vav, w0)),
+                        );
+                        let a1 = _mm256_loadu_si256(accrow.as_ptr().add(j + 8) as *const __m256i);
+                        _mm256_storeu_si256(
+                            accrow.as_mut_ptr().add(j + 8) as *mut __m256i,
+                            _mm256_add_epi32(a1, _mm256_mullo_epi32(vav, w1)),
+                        );
+                        jb += 8;
+                    }
+                    while jb < full {
+                        let byte = brow[jb];
+                        accrow[2 * jb] += av * ((((byte & 0x0F) ^ 8) as i32) - 8);
+                        accrow[2 * jb + 1] += av * ((((byte >> 4) ^ 8) as i32) - 8);
+                        jb += 1;
+                    }
+                    if n % 2 == 1 {
+                        accrow[n - 1] += av * ((((brow[nb - 1] & 0x0F) ^ 8) as i32) - 8);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::TILE_K;
+    use std::arch::aarch64::*;
+
+    /// 2-wide f64 update: same mul-then-left-associated-add order per
+    /// lane as the scalar tile (no FMA).
+    unsafe fn f64_j4(
+        acc: &mut [f64],
+        a0: f64,
+        a1: f64,
+        a2: f64,
+        a3: f64,
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+        n: usize,
+    ) {
+        let va0 = vdupq_n_f64(a0);
+        let va1 = vdupq_n_f64(a1);
+        let va2 = vdupq_n_f64(a2);
+        let va3 = vdupq_n_f64(a3);
+        let mut j = 0;
+        while j + 2 <= n {
+            let b0v = vcvt_f64_f32(vld1_f32(b0.as_ptr().add(j)));
+            let b1v = vcvt_f64_f32(vld1_f32(b1.as_ptr().add(j)));
+            let b2v = vcvt_f64_f32(vld1_f32(b2.as_ptr().add(j)));
+            let b3v = vcvt_f64_f32(vld1_f32(b3.as_ptr().add(j)));
+            let t = vaddq_f64(
+                vaddq_f64(
+                    vaddq_f64(vmulq_f64(va0, b0v), vmulq_f64(va1, b1v)),
+                    vmulq_f64(va2, b2v),
+                ),
+                vmulq_f64(va3, b3v),
+            );
+            let av = vld1q_f64(acc.as_ptr().add(j));
+            vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(av, t));
+            j += 2;
+        }
+        while j < n {
+            acc[j] += a0 * b0[j] as f64 + a1 * b1[j] as f64 + a2 * b2[j] as f64 + a3 * b3[j] as f64;
+            j += 1;
+        }
+    }
+
+    unsafe fn f64_j1(acc: &mut [f64], av: f64, brow: &[f32], n: usize) {
+        let vav = vdupq_n_f64(av);
+        let mut j = 0;
+        while j + 2 <= n {
+            let bv = vcvt_f64_f32(vld1_f32(brow.as_ptr().add(j)));
+            let t = vmulq_f64(vav, bv);
+            let a2 = vld1q_f64(acc.as_ptr().add(j));
+            vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a2, t));
+            j += 2;
+        }
+        while j < n {
+            acc[j] += av * brow[j] as f64;
+            j += 1;
+        }
+    }
+
+    pub(super) unsafe fn acc_tile_f32(
+        acc: &mut [f64],
+        a: &[f32],
+        b: &[f32],
+        row0: usize,
+        ilen: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(row0 + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                let mut kk = 0;
+                while kk + 4 <= klen {
+                    let a0 = arow[kk] as f64;
+                    let a1 = arow[kk + 1] as f64;
+                    let a2 = arow[kk + 2] as f64;
+                    let a3 = arow[kk + 3] as f64;
+                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                        let b0 = &b[(kb + kk) * n..][..n];
+                        let b1 = &b[(kb + kk + 1) * n..][..n];
+                        let b2 = &b[(kb + kk + 2) * n..][..n];
+                        let b3 = &b[(kb + kk + 3) * n..][..n];
+                        f64_j4(accrow, a0, a1, a2, a3, b0, b1, b2, b3, n);
+                    }
+                    kk += 4;
+                }
+                while kk < klen {
+                    let av = arow[kk] as f64;
+                    if av != 0.0 {
+                        f64_j1(accrow, av, &b[(kb + kk) * n..][..n], n);
+                    }
+                    kk += 1;
+                }
+            }
+        }
+    }
+
+    pub(super) unsafe fn acc_tn_f32(
+        acc: &mut [f64],
+        a: &[f32],
+        b: &[f32],
+        k0: usize,
+        klen: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for i in 0..m {
+            let arow = &a[i * k + k0..][..klen];
+            let brow = &b[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                f64_j1(&mut acc[kk * n..(kk + 1) * n], av as f64, brow, n);
+            }
+        }
+    }
+
+    /// Widen 8 i8 levels to two int32x4 and accumulate `av · level`.
+    unsafe fn i32_j8(acc: &mut [i32], av: i32, brow: &[i8], n: usize) {
+        let vav = vdupq_n_s32(av);
+        let mut j = 0;
+        while j + 8 <= n {
+            let b8 = vld1_s8(brow.as_ptr().add(j));
+            let w = vmovl_s8(b8);
+            let w0 = vmovl_s16(vget_low_s16(w));
+            let w1 = vmovl_s16(vget_high_s16(w));
+            let a0 = vld1q_s32(acc.as_ptr().add(j));
+            vst1q_s32(acc.as_mut_ptr().add(j), vaddq_s32(a0, vmulq_s32(vav, w0)));
+            let a1 = vld1q_s32(acc.as_ptr().add(j + 4));
+            vst1q_s32(acc.as_mut_ptr().add(j + 4), vaddq_s32(a1, vmulq_s32(vav, w1)));
+            j += 8;
+        }
+        while j < n {
+            acc[j] += av * brow[j] as i32;
+            j += 1;
+        }
+    }
+
+    pub(super) unsafe fn acc_tile_i8(
+        acc: &mut [i32],
+        a: &[i8],
+        b: &[i8],
+        row0: usize,
+        ilen: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(row0 + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                for (kk, &araw) in arow.iter().enumerate() {
+                    let av = araw as i32;
+                    if av != 0 {
+                        i32_j8(accrow, av, &b[(kb + kk) * n..][..n], n);
+                    }
+                }
+            }
+        }
+    }
+
+    pub(super) unsafe fn acc_tile_u4(
+        acc: &mut [i32],
+        a: &[i8],
+        bp: &[u8],
+        row0: usize,
+        ilen: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let nb = n.div_ceil(2);
+        let full = n / 2;
+        let mask = vdup_n_u8(0x0F);
+        let bias = vdup_n_s8(8);
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(row0 + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                for (kk, &araw) in arow.iter().enumerate() {
+                    let av = araw as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    let brow = &bp[(kb + kk) * nb..][..nb];
+                    let vav = vdupq_n_s32(av);
+                    let mut jb = 0;
+                    // 8 packed bytes -> 16 columns per step
+                    while 2 * jb + 16 <= n {
+                        let vb = vld1_u8(brow.as_ptr().add(jb));
+                        let lo = vand_u8(vb, mask);
+                        let hi = vand_u8(vshr_n_u8::<4>(vb), mask);
+                        // interleave restores column order, then (x^8)-8
+                        // sign-extends the 4-bit two's-complement nibbles
+                        let z0 = vzip1_u8(lo, hi);
+                        let z1 = vzip2_u8(lo, hi);
+                        let s0 = vsub_s8(vreinterpret_s8_u8(veor_u8(z0, vreinterpret_u8_s8(bias))), bias);
+                        let s1 = vsub_s8(vreinterpret_s8_u8(veor_u8(z1, vreinterpret_u8_s8(bias))), bias);
+                        let j = 2 * jb;
+                        let w0 = vmovl_s8(s0);
+                        let w1 = vmovl_s8(s1);
+                        let c0 = vmovl_s16(vget_low_s16(w0));
+                        let c1 = vmovl_s16(vget_high_s16(w0));
+                        let c2 = vmovl_s16(vget_low_s16(w1));
+                        let c3 = vmovl_s16(vget_high_s16(w1));
+                        let a0 = vld1q_s32(accrow.as_ptr().add(j));
+                        vst1q_s32(accrow.as_mut_ptr().add(j), vaddq_s32(a0, vmulq_s32(vav, c0)));
+                        let a1 = vld1q_s32(accrow.as_ptr().add(j + 4));
+                        vst1q_s32(accrow.as_mut_ptr().add(j + 4), vaddq_s32(a1, vmulq_s32(vav, c1)));
+                        let a2 = vld1q_s32(accrow.as_ptr().add(j + 8));
+                        vst1q_s32(accrow.as_mut_ptr().add(j + 8), vaddq_s32(a2, vmulq_s32(vav, c2)));
+                        let a3 = vld1q_s32(accrow.as_ptr().add(j + 12));
+                        vst1q_s32(accrow.as_mut_ptr().add(j + 12), vaddq_s32(a3, vmulq_s32(vav, c3)));
+                        jb += 8;
+                    }
+                    while jb < full {
+                        let byte = brow[jb];
+                        accrow[2 * jb] += av * ((((byte & 0x0F) ^ 8) as i32) - 8);
+                        accrow[2 * jb + 1] += av * ((((byte >> 4) ^ 8) as i32) - 8);
+                        jb += 1;
+                    }
+                    if n % 2 == 1 {
+                        accrow[n - 1] += av * ((((brow[nb - 1] & 0x0F) ^ 8) as i32) - 8);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Shared tiling + thread-budget configuration for every GEMM kernel
+//! family (`ops.rs` f32, `iops.rs` i8, `u4.rs` nibble-packed, and the
+//! SIMD dispatch layer in `simd.rs`). One source of truth: a tile or
+//! lane retune here retunes every kernel at once, and all of them honor
+//! one process-wide worker budget.
+//!
+//! The budget resolves, in priority order, from `set_threads` (the CLI
+//! `--threads` plumbing), the `GETA_THREADS` environment variable, then
+//! `available_parallelism`.
+//!
+//! Determinism contract: every output element is produced by exactly one
+//! worker with an accumulation order fixed by (shape, constants) alone,
+//! so kernel results are **bitwise identical for every thread count** —
+//! the invariant the threaded-determinism e2e tests pin.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Output-row block: a panel of `TILE_I` rows shares one cache-hot block
+/// of `b` rows. Shared by the f32, i8 and u4 kernels, which all promise
+/// the same per-row accumulation order — a tune here retunes them all.
+pub(crate) const TILE_I: usize = 16;
+/// k-axis block: the reduction is walked in `TILE_K` chunks so the `b`
+/// panel stays resident across a block of output rows. Per-row
+/// accumulation order is a function of (k, `TILE_K`) only, which is what
+/// makes results independent of tile/thread partitioning.
+pub(crate) const TILE_K: usize = 256;
+
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker-thread budget (CLI `--threads`). Takes precedence
+/// over `GETA_THREADS` and the machine's parallelism.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Resolve the worker-thread budget (see the module notes above). The
+/// environment is consulted once; later calls return the cached value.
+pub fn configured_threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let n = std::env::var("GETA_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
+    THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Serializes the #[test]s that mutate the process-global thread budget:
+/// cargo runs tests concurrently in one binary, so without one shared
+/// lock a concurrent `set_threads()` could retarget a sibling's labeled
+/// runs. Shared by the `ops`, `iops` and `u4` test modules.
+#[cfg(test)]
+pub(crate) static THREAD_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+thread_local! {
+    static SERIAL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Run `f` with the tiled kernels pinned to one thread on the calling
+/// thread. Callers that already shard work across their own workers
+/// (micro-batch sharding in `deploy::GetaEngine::infer`) wrap each worker
+/// body in this so nested parallelism cannot oversubscribe the machine.
+pub fn serial_scope<R>(f: impl FnOnce() -> R) -> R {
+    SERIAL.with(|s| {
+        let prev = s.replace(true);
+        let out = f();
+        s.set(prev);
+        out
+    })
+}
+
+/// Worker count for a kernel doing `work` multiply-adds over `rows`
+/// partitionable output rows: 1 inside [`serial_scope`] or when the job is
+/// too small to amortize a spawn, else the configured budget. Shared by
+/// the f32 (`ops.rs`), integer (`iops.rs`) and nibble-packed (`u4.rs`)
+/// kernels so every half of the executor honors one thread budget.
+pub(crate) fn kernel_threads(work: usize, rows: usize) -> usize {
+    const MIN_WORK_PER_THREAD: usize = 1 << 16;
+    if work < 2 * MIN_WORK_PER_THREAD || SERIAL.with(|s| s.get()) {
+        return 1;
+    }
+    configured_threads().min(work / MIN_WORK_PER_THREAD).min(rows).max(1)
+}

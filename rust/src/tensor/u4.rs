@@ -1,0 +1,568 @@
+//! Nibble-packed 4-bit weight panels and their GEMM kernels.
+//!
+//! `iops.rs` widens every ≤8-bit site to one i8 per level, so a 4-bit
+//! GETA model still moves i8 bytes. This module is the true sub-byte
+//! path: a [`U4Weight`] stores two levels per byte (`[k, ceil(n/2)]`
+//! row-major panels — the same `[k, n]` orientation the i8 and f32
+//! kernels walk), and the GEMM microkernels unpack nibbles in-register,
+//! so a ≤4-bit site is served moving **half the bytes** of the i8 path.
+//!
+//! Packing convention (matches the `.geta` container's LSB-first
+//! `pack_levels`): the **low** nibble of byte `jb` is column `2·jb`, the
+//! **high** nibble is column `2·jb + 1`; odd `n` leaves the last high
+//! nibble zero. Levels are 4-bit two's complement, `|l| ≤ 7` (the b=4
+//! fake-quant bound); sign-extension is `(x ^ 8) - 8`.
+//!
+//! Determinism mirrors `iops.rs`: the i8×u4 kernel accumulates in i32
+//! (associative — bitwise identical for every thread count and for the
+//! SIMD bodies by construction, under the [`super::i8_gemm_fits_i32`]
+//! gate); the mixed f32×u4 kernel accumulates in f64 with a per-row
+//! order that is a function of `(k, TILE_K)` only.
+
+use super::tile::{kernel_threads, TILE_I, TILE_K};
+
+/// Sign-extend a 4-bit two's-complement nibble (low 4 bits of `x`).
+#[inline]
+pub fn nibble_i32(x: u8) -> i32 {
+    (((x & 0x0F) ^ 8) as i32) - 8
+}
+
+/// Pack i8 levels (each in `[-8, 7]`) two per byte, LSB-first: even
+/// index -> low nibble, odd index -> high nibble. Odd-length tails leave
+/// the last high nibble zero. Inverse of [`unpack_nibbles`].
+pub fn pack_nibbles(levels: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; levels.len().div_ceil(2)];
+    for (j, &l) in levels.iter().enumerate() {
+        debug_assert!((-8..=7).contains(&l), "level {l} outside 4-bit range");
+        let nib = (l as u8) & 0x0F;
+        if j % 2 == 0 {
+            out[j / 2] |= nib;
+        } else {
+            out[j / 2] |= nib << 4;
+        }
+    }
+    out
+}
+
+/// Unpack `n` levels from LSB-first nibble pairs (see [`pack_nibbles`]).
+pub fn unpack_nibbles(bytes: &[u8], n: usize) -> Vec<i8> {
+    assert!(bytes.len() >= n.div_ceil(2), "packed buffer too short for {n} levels");
+    let mut out = Vec::with_capacity(n);
+    for j in 0..n {
+        let byte = bytes[j / 2];
+        let nib = if j % 2 == 0 { byte } else { byte >> 4 };
+        out.push(nibble_i32(nib) as i8);
+    }
+    out
+}
+
+/// One weight tensor held as resident nibble-packed 4-bit levels — the
+/// sub-byte counterpart of [`super::IntWeight`], same `[k, n]` panel
+/// orientation (linear `[din, dout]`; conv HWIO flattened to
+/// `[k²·cin, cout]`) at half the bytes.
+#[derive(Debug, Clone)]
+pub struct U4Weight {
+    /// Packed levels, `[k, ceil(n/2)]` row-major, two columns per byte.
+    pub packed: Vec<u8>,
+    /// Contraction length (weight rows).
+    pub k: usize,
+    /// Output channels (weight cols).
+    pub n: usize,
+    /// Per-output-channel dequantization scale (the site's step `d_w`).
+    pub scale: Vec<f32>,
+    /// `max |level|`, for the i32 overflow gate.
+    pub max_abs: i32,
+}
+
+impl U4Weight {
+    /// Build from unpacked container levels, or `None` when any level
+    /// falls outside the 4-bit range `|l| ≤ 7` (a site trained past 4
+    /// bits — the caller falls back to the i8 or f32 path).
+    pub fn from_levels(levels: &[i32], n: usize, d: f32) -> Option<U4Weight> {
+        if n == 0 || levels.len() % n != 0 {
+            return None;
+        }
+        let mut max_abs = 0i32;
+        for &l in levels {
+            if !(-7..=7).contains(&l) {
+                return None;
+            }
+            max_abs = max_abs.max(l.abs());
+        }
+        let k = levels.len() / n;
+        let nb = n.div_ceil(2);
+        let mut packed = vec![0u8; k * nb];
+        for r in 0..k {
+            let row = &levels[r * n..(r + 1) * n];
+            let prow = &mut packed[r * nb..(r + 1) * nb];
+            for (j, &l) in row.iter().enumerate() {
+                let nib = (l as u8) & 0x0F;
+                if j % 2 == 0 {
+                    prow[j / 2] |= nib;
+                } else {
+                    prow[j / 2] |= nib << 4;
+                }
+            }
+        }
+        Some(U4Weight {
+            packed,
+            k,
+            n,
+            scale: vec![d; n],
+            max_abs,
+        })
+    }
+
+    /// Level at `(row, col)` — the defensive/reference accessor; the
+    /// kernels never call this per element.
+    #[inline]
+    pub fn level(&self, r: usize, j: usize) -> i32 {
+        let nb = self.n.div_ceil(2);
+        let byte = self.packed[r * nb + j / 2];
+        nibble_i32(if j % 2 == 0 { byte } else { byte >> 4 })
+    }
+
+    /// Unpack the whole panel to one i8 per level, `[k, n]` row-major —
+    /// the bridge to the i8 reference kernels in differential tests.
+    pub fn unpack_levels(&self) -> Vec<i8> {
+        let nb = self.n.div_ceil(2);
+        let mut out = Vec::with_capacity(self.k * self.n);
+        for r in 0..self.k {
+            out.extend_from_slice(&unpack_nibbles(&self.packed[r * nb..(r + 1) * nb], self.n));
+        }
+        out
+    }
+
+    /// Resident bytes of the packed panel (the bandwidth the GEMM moves).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.len()
+    }
+}
+
+// ---------------------------------------------------------- i8 × u4 GEMM
+
+/// Accumulate rows `row0..row0+ilen` of `a @ unpack(w)` into the i32
+/// tile `acc` (`ilen × n`, pre-zeroed), unpacking nibbles on the fly.
+/// Exact i32 accumulation — lane/loop order is irrelevant under the
+/// overflow gate, so the SIMD body needs no order discipline.
+fn acc_tile_u4(acc: &mut [i32], a: &[i8], w: &U4Weight, row0: usize, ilen: usize) {
+    #[cfg(feature = "simd")]
+    if super::simd::acc_tile_u4(acc, a, &w.packed, row0, ilen, w.k, w.n) {
+        return;
+    }
+    let (k, n) = (w.k, w.n);
+    let nb = n.div_ceil(2);
+    let full = n / 2;
+    for kb in (0..k).step_by(TILE_K) {
+        let klen = TILE_K.min(k - kb);
+        for ii in 0..ilen {
+            let arow = &a[(row0 + ii) * k + kb..][..klen];
+            let accrow = &mut acc[ii * n..(ii + 1) * n];
+            for (kk, &araw) in arow.iter().enumerate() {
+                let av = araw as i32;
+                if av == 0 {
+                    continue;
+                }
+                let brow = &w.packed[(kb + kk) * nb..][..nb];
+                for jb in 0..full {
+                    let byte = brow[jb];
+                    accrow[2 * jb] += av * nibble_i32(byte);
+                    accrow[2 * jb + 1] += av * nibble_i32(byte >> 4);
+                }
+                if n % 2 == 1 {
+                    accrow[n - 1] += av * nibble_i32(brow[nb - 1]);
+                }
+            }
+        }
+    }
+}
+
+/// `a[m,k] @ unpack(w)[k,n]` on levels, exact i32 accumulation — tiled +
+/// threaded. The caller guarantees no i32 overflow
+/// ([`super::i8_gemm_fits_i32`] with `max_w = w.max_abs ≤ 7`).
+pub fn matmul_u4(a: &[i8], w: &U4Weight, m: usize) -> Vec<i32> {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(a.len(), m * k);
+    let mut out = vec![0i32; m * n];
+    if out.is_empty() || k == 0 {
+        return out;
+    }
+    let nt = kernel_threads(m * k * n, m);
+    if nt <= 1 {
+        matmul_u4_rows(&mut out, a, w, 0);
+        return out;
+    }
+    let chunk = m.div_ceil(nt);
+    let w_ref = &*w;
+    std::thread::scope(|sc| {
+        for (ti, oc) in out.chunks_mut(chunk * n).enumerate() {
+            sc.spawn(move || matmul_u4_rows(oc, a, w_ref, ti * chunk));
+        }
+    });
+    out
+}
+
+fn matmul_u4_rows(out: &mut [i32], a: &[i8], w: &U4Weight, i0: usize) {
+    let n = w.n;
+    let rows = out.len() / n;
+    let mut acc = vec![0i32; TILE_I.min(rows.max(1)) * n];
+    for ib in (0..rows).step_by(TILE_I) {
+        let ilen = TILE_I.min(rows - ib);
+        let acc = &mut acc[..ilen * n];
+        acc.fill(0);
+        acc_tile_u4(acc, a, w, i0 + ib, ilen);
+        out[ib * n..(ib + ilen) * n].copy_from_slice(acc);
+    }
+}
+
+/// The deployment i8×u4 GEMM: exact i32 tiles flushed through the same
+/// f64 scale epilogue as [`super::matmul_i8_scaled_into`] —
+/// `out[i,j] = f32(acc[i,j] · (alpha · scale[j]) + bias[j])`, `alpha`
+/// the activation step `d_a`. The epilogue is the only floating-point
+/// rounding of the integer path.
+pub fn matmul_i8u4_scaled_into(
+    out: &mut [f32],
+    a: &[i8],
+    w: &U4Weight,
+    m: usize,
+    alpha: f32,
+    bias: Option<&[f32]>,
+) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    assert_eq!(w.scale.len(), n);
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), n);
+    }
+    if out.is_empty() {
+        return;
+    }
+    let comb: Vec<f64> = w.scale.iter().map(|&s| alpha as f64 * s as f64).collect();
+    let comb = comb.as_slice();
+    let nt = kernel_threads(m * k * n, m);
+    if nt <= 1 {
+        matmul_i8u4_scaled_rows(out, a, w, 0, comb, bias);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    let w_ref = &*w;
+    std::thread::scope(|sc| {
+        for (ti, oc) in out.chunks_mut(chunk * n).enumerate() {
+            sc.spawn(move || matmul_i8u4_scaled_rows(oc, a, w_ref, ti * chunk, comb, bias));
+        }
+    });
+}
+
+fn matmul_i8u4_scaled_rows(
+    out: &mut [f32],
+    a: &[i8],
+    w: &U4Weight,
+    i0: usize,
+    comb: &[f64],
+    bias: Option<&[f32]>,
+) {
+    let n = w.n;
+    let rows = out.len() / n;
+    let mut acc = vec![0i32; TILE_I.min(rows.max(1)) * n];
+    for ib in (0..rows).step_by(TILE_I) {
+        let ilen = TILE_I.min(rows - ib);
+        let acc = &mut acc[..ilen * n];
+        acc.fill(0);
+        acc_tile_u4(acc, a, w, i0 + ib, ilen);
+        for ii in 0..ilen {
+            let orow = &mut out[(ib + ii) * n..(ib + ii + 1) * n];
+            match bias {
+                Some(bias) => {
+                    for j in 0..n {
+                        orow[j] = (acc[ii * n + j] as f64 * comb[j] + bias[j] as f64) as f32;
+                    }
+                }
+                None => {
+                    for j in 0..n {
+                        orow[j] = (acc[ii * n + j] as f64 * comb[j]) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ f32 × u4 GEMM (mixed)
+
+/// Mixed GEMM for weight-only sub-byte quantization: f32 activations
+/// against resident nibble-packed levels, f64 accumulation, per-channel
+/// scale (+ optional bias) epilogue. Per-row accumulation order is a
+/// function of `(k, TILE_K)` only (k ascending within each block), so
+/// results are bitwise thread-count-invariant.
+pub fn matmul_f32u4_scaled_into(
+    out: &mut [f32],
+    a: &[f32],
+    w: &U4Weight,
+    m: usize,
+    bias: Option<&[f32]>,
+) {
+    let (k, n) = (w.k, w.n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    assert_eq!(w.scale.len(), n);
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), n);
+    }
+    if out.is_empty() {
+        return;
+    }
+    let nt = kernel_threads(m * k * n, m);
+    if nt <= 1 {
+        matmul_f32u4_rows(out, a, w, 0, bias);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    let w_ref = &*w;
+    std::thread::scope(|sc| {
+        for (ti, oc) in out.chunks_mut(chunk * n).enumerate() {
+            sc.spawn(move || matmul_f32u4_rows(oc, a, w_ref, ti * chunk, bias));
+        }
+    });
+}
+
+fn matmul_f32u4_rows(out: &mut [f32], a: &[f32], w: &U4Weight, i0: usize, bias: Option<&[f32]>) {
+    let (k, n) = (w.k, w.n);
+    let nb = n.div_ceil(2);
+    let full = n / 2;
+    let rows = out.len() / n;
+    let mut acc = vec![0.0f64; TILE_I.min(rows.max(1)) * n];
+    for ib in (0..rows).step_by(TILE_I) {
+        let ilen = TILE_I.min(rows - ib);
+        let acc = &mut acc[..ilen * n];
+        acc.fill(0.0);
+        for kb in (0..k).step_by(TILE_K) {
+            let klen = TILE_K.min(k - kb);
+            for ii in 0..ilen {
+                let arow = &a[(i0 + ib + ii) * k + kb..][..klen];
+                let accrow = &mut acc[ii * n..(ii + 1) * n];
+                for (kk, &araw) in arow.iter().enumerate() {
+                    let av = araw as f64;
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &w.packed[(kb + kk) * nb..][..nb];
+                    for jb in 0..full {
+                        let byte = brow[jb];
+                        accrow[2 * jb] += av * nibble_i32(byte) as f64;
+                        accrow[2 * jb + 1] += av * nibble_i32(byte >> 4) as f64;
+                    }
+                    if n % 2 == 1 {
+                        accrow[n - 1] += av * nibble_i32(brow[nb - 1]) as f64;
+                    }
+                }
+            }
+        }
+        for ii in 0..ilen {
+            let orow = &mut out[(ib + ii) * n..(ib + ii + 1) * n];
+            match bias {
+                Some(bias) => {
+                    for j in 0..n {
+                        orow[j] =
+                            (acc[ii * n + j] * w.scale[j] as f64 + bias[j] as f64) as f32;
+                    }
+                }
+                None => {
+                    for j in 0..n {
+                        orow[j] = (acc[ii * n + j] * w.scale[j] as f64) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Naive reference: unpack the panel and run the i8 triple loop —
+/// compared against the tiled/SIMD kernels by **exact equality** (both
+/// sides accumulate in i32).
+pub fn matmul_u4_naive(a: &[i8], w: &U4Weight, m: usize) -> Vec<i32> {
+    let levels = w.unpack_levels();
+    super::iops::matmul_i8_naive(a, &levels, m, w.k, w.n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::tile::THREAD_TEST_LOCK;
+    use crate::tensor::{self};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_u4_levels(rng: &mut Rng, len: usize, bits: u8) -> Vec<i32> {
+        let lmax = (1i32 << (bits - 1)) - 1;
+        (0..len).map(|_| rng.below((2 * lmax + 1) as usize) as i32 - lmax).collect()
+    }
+
+    #[test]
+    fn pack_unpack_hand_values() {
+        // [-1, 7] -> low nibble 0xF, high nibble 0x7 -> 0x7F
+        assert_eq!(pack_nibbles(&[-1, 7]), vec![0x7F]);
+        // odd tail: high nibble of the last byte stays zero
+        assert_eq!(pack_nibbles(&[3, -4, 5]), vec![(0x0C << 4) | 0x03, 0x05]);
+        assert_eq!(unpack_nibbles(&[0x7F], 2), vec![-1, 7]);
+        assert_eq!(unpack_nibbles(&[(0x0C << 4) | 0x03, 0x05], 3), vec![3, -4, 5]);
+        for l in -8..=7i32 {
+            assert_eq!(nibble_i32((l as u8) & 0x0F), l, "sign-extend {l}");
+        }
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip_bits_2_to_4_with_odd_tails() {
+        prop::check(
+            60,
+            |g| {
+                let bits = 2 + g.rng.below(3) as u8; // 2..=4
+                let len = 1 + g.rng.below(33); // odd and even tails
+                let levels: Vec<i8> =
+                    rand_u4_levels(g.rng, len, bits).into_iter().map(|l| l as i8).collect();
+                levels
+            },
+            |levels| {
+                let packed = pack_nibbles(levels);
+                if packed.len() != levels.len().div_ceil(2) {
+                    return Err(format!("packed {} bytes for {} levels", packed.len(), levels.len()));
+                }
+                let back = unpack_nibbles(&packed, levels.len());
+                if &back != levels {
+                    return Err(format!("roundtrip {levels:?} -> {back:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn from_levels_gates_range_and_shape() {
+        // 4-bit range ok
+        let w = U4Weight::from_levels(&[7, -7, 1, 0, 3, -2], 3, 0.5).unwrap();
+        assert_eq!((w.k, w.n), (2, 3));
+        assert_eq!(w.max_abs, 7);
+        assert_eq!(w.packed_bytes(), 2 * 2); // ceil(3/2) bytes per row
+        assert_eq!(w.unpack_levels(), vec![7, -7, 1, 0, 3, -2]);
+        assert_eq!(w.level(0, 1), -7);
+        // out of range -> None (8 needs 5 bits in this symmetric grid)
+        assert!(U4Weight::from_levels(&[8, 0], 2, 0.5).is_none());
+        assert!(U4Weight::from_levels(&[-8, 0], 2, 0.5).is_none());
+        // ragged / empty -> None
+        assert!(U4Weight::from_levels(&[1, 2, 3], 2, 0.5).is_none());
+        assert!(U4Weight::from_levels(&[], 0, 0.5).is_none());
+    }
+
+    #[test]
+    fn prop_tiled_u4_matches_naive_exactly_across_threads() {
+        let _guard = THREAD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = tensor::configured_threads();
+        for threads in [1usize, 2, 4] {
+            tensor::set_threads(threads);
+            prop::check(
+                8,
+                |g| {
+                    let m = 16 + g.size(80);
+                    let k = 16 + g.size(160);
+                    let n = 1 + g.size(70); // odd n exercises the tail nibble
+                    let a: Vec<i8> = (0..m * k)
+                        .map(|_| (g.rng.below(255) as i32 - 127) as i8)
+                        .collect();
+                    let levels = rand_u4_levels(g.rng, k * n, 4);
+                    (m, k, n, a, levels)
+                },
+                |(m, _k, n, a, levels)| {
+                    let w = U4Weight::from_levels(levels, *n, 1e-3).unwrap();
+                    let got = matmul_u4(a, &w, *m);
+                    let want = matmul_u4_naive(a, &w, *m);
+                    if got != want {
+                        return Err(format!("u4 kernel diverged at m={m} n={n}"));
+                    }
+                    Ok(())
+                },
+            );
+        }
+        tensor::set_threads(prev);
+    }
+
+    #[test]
+    fn u4_scaled_kernels_match_f32_reference() {
+        let _guard = THREAD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = tensor::configured_threads();
+        tensor::set_threads(2);
+        let mut g = Rng::new(0x9e37);
+        let (m, k, n) = (24, 33, 17);
+        let d = 2e-3f32;
+        let levels = rand_u4_levels(&mut g, k * n, 4);
+        let w = U4Weight::from_levels(&levels, n, d).unwrap();
+        let wf: Vec<f32> = levels.iter().map(|&l| l as f32 * d).collect();
+        let bias: Vec<f32> = (0..n).map(|j| (j as f32 - 4.0) * 0.01).collect();
+        // exact path: i8 activations
+        let da = 3e-3f32;
+        let la: Vec<i8> = (0..m * k).map(|_| (g.below(255) as i32 - 127) as i8).collect();
+        let af: Vec<f32> = la.iter().map(|&l| l as f32 * da).collect();
+        let mut got = vec![0.0f32; m * n];
+        matmul_i8u4_scaled_into(&mut got, &la, &w, m, da, Some(&bias));
+        let mut want = tensor::ops::matmul(&af, &wf, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                want[i * n + j] += bias[j];
+            }
+        }
+        for i in 0..want.len() {
+            assert!(
+                (got[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                "i8u4[{i}]: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+        // mixed path: f32 activations straight through
+        let mut got2 = vec![0.0f32; m * n];
+        matmul_f32u4_scaled_into(&mut got2, &af, &w, m, Some(&bias));
+        for i in 0..want.len() {
+            assert!(
+                (got2[i] - want[i]).abs() <= 1e-4 * (1.0 + want[i].abs()),
+                "f32u4[{i}]: {} vs {}",
+                got2[i],
+                want[i]
+            );
+        }
+        tensor::set_threads(prev);
+    }
+
+    #[test]
+    fn u4_kernels_are_bitwise_thread_count_invariant() {
+        let _guard = THREAD_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = tensor::configured_threads();
+        let mut g = Rng::new(0xc0de);
+        let (m, k, n) = (300, 70, 41);
+        let a: Vec<i8> = (0..m * k).map(|_| (g.below(255) as i32 - 127) as i8).collect();
+        let levels = rand_u4_levels(&mut g, k * n, 4);
+        let w = U4Weight::from_levels(&levels, n, 1.5e-3).unwrap();
+        tensor::set_threads(1);
+        let base_raw = matmul_u4(&a, &w, m);
+        let mut base_scaled = vec![0.0f32; m * n];
+        matmul_i8u4_scaled_into(&mut base_scaled, &a, &w, m, 2e-3, None);
+        let af: Vec<f32> = a.iter().map(|&l| l as f32 * 2e-3).collect();
+        let mut base_mixed = vec![0.0f32; m * n];
+        matmul_f32u4_scaled_into(&mut base_mixed, &af, &w, m, None);
+        for threads in [2usize, 3, 4, 8] {
+            tensor::set_threads(threads);
+            assert_eq!(matmul_u4(&a, &w, m), base_raw, "raw diverged at {threads} threads");
+            let mut got = vec![0.0f32; m * n];
+            matmul_i8u4_scaled_into(&mut got, &a, &w, m, 2e-3, None);
+            assert!(
+                got.iter().zip(&base_scaled).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "scaled diverged at {threads} threads"
+            );
+            let mut gotm = vec![0.0f32; m * n];
+            matmul_f32u4_scaled_into(&mut gotm, &af, &w, m, None);
+            assert!(
+                gotm.iter().zip(&base_mixed).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "mixed diverged at {threads} threads"
+            );
+        }
+        tensor::set_threads(prev);
+    }
+}

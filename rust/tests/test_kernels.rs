@@ -1,0 +1,281 @@
+//! Differential kernel-equivalence harness (tier-1).
+//!
+//! Locks down the contracts the tensor kernels advertise, across every
+//! compute path the deployment engine can select:
+//!
+//! * tiled (and, with `--features simd`, vectorized) f32 GEMMs agree with
+//!   the naive triple-loop references to ≤ 1e-6 relative, and are bitwise
+//!   identical across thread counts;
+//! * the integer GEMMs (i8×i8 and nibble-packed u4) agree with their
+//!   naive references **exactly** — i32 accumulation is associative, so
+//!   there is no tolerance to hide behind — at every thread count;
+//! * the scaled epilogues (i8, f32×i8, u4) match an in-test f64 reference;
+//! * the i32-overflow admission gate `i8_gemm_fits_i32` is exact at the
+//!   boundary: the largest admitted contraction really fits, with
+//!   saturating ±127 (and ±7 for u4) inputs;
+//! * nibble pack/unpack round-trips every sub-byte width incl. odd tails.
+//!
+//! The shape sweep is deliberately adversarial: k = 0, k = 1, single
+//! row/column outputs, and dims that are not multiples of any tile or
+//! SIMD lane width (4/8/16). The whole suite must stay green with the
+//! `simd` feature on and off — that equivalence is the feature's safety
+//! argument (see rust/src/tensor/README.md).
+
+use std::sync::Mutex;
+
+use geta::tensor::{
+    configured_threads, i8_gemm_fits_i32, matmul, matmul_i8, matmul_i8_naive,
+    matmul_i8_scaled_into, matmul_f32i8_scaled_into, matmul_naive, matmul_nt, matmul_nt_naive,
+    matmul_tn, matmul_tn_naive, matmul_u4, matmul_u4_naive, pack_nibbles, set_threads,
+    unpack_nibbles, U4Weight,
+};
+use geta::util::rng::Rng;
+
+/// Serializes every test that mutates the process-wide thread budget
+/// (tests in one binary run concurrently). The library's own lock is
+/// crate-private, so this harness keeps its own.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Shape sweep: (m, k, n). Covers empty contraction, unit dims, exact
+/// tile multiples (TILE_I = 16), and dims coprime to the 4/8/16-wide
+/// unrolls and SIMD lanes.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 0, 1),
+    (3, 0, 5),
+    (1, 1, 1),
+    (2, 1, 3),
+    (1, 7, 17),
+    (5, 3, 1),
+    (16, 256, 16),
+    (17, 33, 9),
+    (33, 257, 31),
+    (4, 512, 40),
+    (65, 19, 23),
+];
+
+const THREAD_COUNTS: &[usize] = &[1, 2, 4];
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "{what}[{i}]: got {g}, want {w}"
+        );
+    }
+}
+
+/// Random f32 buffer with exact zeros sprinkled in, so the kernels'
+/// zero-skip fast paths run in both taken and not-taken flavors.
+fn rand_f32(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, 1.0);
+    for x in v.iter_mut() {
+        if rng.below(4) == 0 {
+            *x = 0.0;
+        }
+    }
+    v
+}
+
+/// Random i8 levels in `-lmax..=lmax`, zeros included.
+fn rand_i8(rng: &mut Rng, len: usize, lmax: i32) -> Vec<i8> {
+    (0..len)
+        .map(|_| (rng.below((2 * lmax + 1) as usize) as i32 - lmax) as i8)
+        .collect()
+}
+
+#[test]
+fn f32_gemms_match_naive_and_are_bitwise_thread_invariant() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = configured_threads();
+    let mut rng = Rng::new(0x51D_0001);
+    for &(m, k, n) in SHAPES {
+        let a = rand_f32(&mut rng, m * k);
+        let b_kn = rand_f32(&mut rng, k * n); // matmul:    a[m,k] @ b[k,n]
+        let b_mn = rand_f32(&mut rng, m * n); // matmul_tn: a[m,k]^T @ b[m,n]
+        let b_nk = rand_f32(&mut rng, n * k); // matmul_nt: a[m,k] @ b[n,k]^T
+        let want = matmul_naive(&a, &b_kn, m, k, n);
+        let want_tn = matmul_tn_naive(&a, &b_mn, m, k, n);
+        let want_nt = matmul_nt_naive(&a, &b_nk, m, k, n);
+        let mut base: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+        for &t in THREAD_COUNTS {
+            set_threads(t);
+            let got = matmul(&a, &b_kn, m, k, n);
+            let got_tn = matmul_tn(&a, &b_mn, m, k, n);
+            let got_nt = matmul_nt(&a, &b_nk, m, k, n);
+            let what = format!("({m},{k},{n}) threads={t}");
+            assert_close(&got, &want, 1e-6, &format!("matmul {what}"));
+            assert_close(&got_tn, &want_tn, 1e-6, &format!("matmul_tn {what}"));
+            assert_close(&got_nt, &want_nt, 1e-6, &format!("matmul_nt {what}"));
+            match &base {
+                None => base = Some((got, got_tn, got_nt)),
+                Some((b0, b1, b2)) => {
+                    // bitwise: thread partitioning must not move a ulp
+                    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+                    assert_eq!(bits(&got), bits(b0), "matmul {what} vs threads=1");
+                    assert_eq!(bits(&got_tn), bits(b1), "matmul_tn {what} vs threads=1");
+                    assert_eq!(bits(&got_nt), bits(b2), "matmul_nt {what} vs threads=1");
+                }
+            }
+        }
+    }
+    set_threads(prev);
+}
+
+#[test]
+fn i8_gemm_matches_naive_exactly_across_threads() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = configured_threads();
+    let mut rng = Rng::new(0x51D_0002);
+    for &(m, k, n) in SHAPES {
+        let a = rand_i8(&mut rng, m * k, 127);
+        let b = rand_i8(&mut rng, k * n, 127);
+        let want = matmul_i8_naive(&a, &b, m, k, n);
+        for &t in THREAD_COUNTS {
+            set_threads(t);
+            let got = matmul_i8(&a, &b, m, k, n);
+            assert_eq!(got, want, "matmul_i8 ({m},{k},{n}) threads={t}");
+        }
+    }
+    set_threads(prev);
+}
+
+#[test]
+fn u4_gemm_matches_naive_exactly_across_threads() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = configured_threads();
+    let mut rng = Rng::new(0x51D_0003);
+    for &(m, k, n) in SHAPES {
+        let levels: Vec<i32> =
+            (0..k * n).map(|_| rng.below(15) as i32 - 7).collect();
+        let w = U4Weight::from_levels(&levels, n, 0.01).expect("levels fit a nibble");
+        assert_eq!((w.k, w.n), (k, n));
+        let a = rand_i8(&mut rng, m * k, 127);
+        let want = matmul_u4_naive(&a, &w, m);
+        for &t in THREAD_COUNTS {
+            set_threads(t);
+            let got = matmul_u4(&a, &w, m);
+            assert_eq!(got, want, "matmul_u4 ({m},{k},{n}) threads={t}");
+        }
+    }
+    set_threads(prev);
+}
+
+#[test]
+fn scaled_epilogues_match_f64_reference_at_every_thread_count() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = configured_threads();
+    let mut rng = Rng::new(0x51D_0004);
+    for &(m, k, n) in &[(9usize, 31usize, 14usize), (17, 64, 5), (1, 1, 1), (2, 0, 3)] {
+        let la = rand_i8(&mut rng, m * k, 25);
+        let lb = rand_i8(&mut rng, k * n, 127);
+        let xa = rand_f32(&mut rng, m * k);
+        let scale: Vec<f32> = (0..n).map(|j| 2e-3 + j as f32 * 1e-4).collect();
+        let bias = rand_f32(&mut rng, n);
+        let alpha = 3e-3f32;
+        // f64 references, computed independently of any tiling
+        let mut want_int = vec![0.0f32; m * n];
+        let mut want_mixed = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i64;
+                let mut facc = 0.0f64;
+                for kk in 0..k {
+                    acc += la[i * k + kk] as i64 * lb[kk * n + j] as i64;
+                    facc += xa[i * k + kk] as f64 * lb[kk * n + j] as f64;
+                }
+                want_int[i * n + j] =
+                    (acc as f64 * (alpha as f64 * scale[j] as f64) + bias[j] as f64) as f32;
+                want_mixed[i * n + j] = (facc * scale[j] as f64 + bias[j] as f64) as f32;
+            }
+        }
+        for &t in THREAD_COUNTS {
+            set_threads(t);
+            let what = format!("({m},{k},{n}) threads={t}");
+            let mut got = vec![0.0f32; m * n];
+            matmul_i8_scaled_into(&mut got, &la, &lb, m, k, n, &scale, alpha, Some(&bias));
+            // exact integer sum + one shared f64 epilogue: bitwise
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&got), bits(&want_int), "matmul_i8_scaled_into {what}");
+            let mut got = vec![0.0f32; m * n];
+            matmul_f32i8_scaled_into(&mut got, &xa, &lb, m, k, n, &scale, Some(&bias));
+            // f64 accumulation differs from the reference only in order
+            assert_close(&got, &want_mixed, 1e-6, &format!("matmul_f32i8_scaled_into {what}"));
+        }
+    }
+    set_threads(prev);
+}
+
+#[test]
+fn i8_overflow_gate_is_exact_at_the_boundary() {
+    // largest contraction the gate admits at saturating ±127 inputs
+    let kfit = i32::MAX as usize / (127 * 127);
+    assert!(i8_gemm_fits_i32(kfit, 127, 127));
+    assert!(!i8_gemm_fits_i32(kfit + 1, 127, 127));
+    // run it for real: every product is +127·127, the true sum must land
+    // in the i32 accumulator with no wraparound
+    let a = vec![127i8; kfit];
+    let b = vec![127i8; kfit]; // n = 1 column
+    let got = matmul_i8(&a, &b, 1, kfit, 1);
+    assert_eq!(got[0] as i64, kfit as i64 * 127 * 127);
+    // mixed signs at the same length stay exact too
+    let mut a2 = a;
+    for (i, v) in a2.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            *v = -127;
+        }
+    }
+    let want: i64 = a2.iter().map(|&x| x as i64 * 127).sum();
+    assert_eq!(matmul_i8(&a2, &b, 1, kfit, 1)[0] as i64, want);
+    // degenerate corners of the gate itself
+    assert!(i8_gemm_fits_i32(0, 127, 127));
+    assert!(i8_gemm_fits_i32(1, 127, 127));
+}
+
+#[test]
+fn u4_overflow_gate_is_exact_at_the_boundary() {
+    // u4 weights bound |w| by 7, so the admitted contraction is far longer
+    let kfit = i32::MAX as usize / (127 * 7);
+    assert!(i8_gemm_fits_i32(kfit, 127, 7));
+    assert!(!i8_gemm_fits_i32(kfit + 1, 127, 7));
+    let a = vec![127i8; kfit];
+    let w = U4Weight::from_levels(&vec![7i32; kfit], 1, 1.0).expect("±7 fits a nibble");
+    assert_eq!(w.max_abs, 7);
+    let got = matmul_u4(&a, &w, 1);
+    assert_eq!(got[0] as i64, kfit as i64 * 127 * 7);
+}
+
+#[test]
+fn u4_from_levels_enforces_the_nibble_range() {
+    // -7..=7 is in; ±8 (the asymmetric two's-complement corner) is out
+    assert!(U4Weight::from_levels(&[-7, 0, 7, 3], 2, 0.1).is_some());
+    assert!(U4Weight::from_levels(&[-8, 0, 7, 3], 2, 0.1).is_none());
+    assert!(U4Weight::from_levels(&[8, 0, 7, 3], 2, 0.1).is_none());
+    // ragged shapes are rejected, not truncated
+    assert!(U4Weight::from_levels(&[1, 2, 3], 2, 0.1).is_none());
+    assert!(U4Weight::from_levels(&[], 3, 0.1).is_some()); // k = 0 is fine
+}
+
+#[test]
+fn nibble_pack_unpack_roundtrips_all_subbyte_widths_and_odd_tails() {
+    let mut rng = Rng::new(0x51D_0005);
+    for bits in 2u32..=4 {
+        let lmax = (1i32 << (bits - 1)) - 1;
+        for len in [0usize, 1, 2, 3, 7, 8, 15, 64, 101] {
+            let levels: Vec<i8> = (0..len)
+                .map(|_| (rng.below((2 * lmax + 1) as usize) as i32 - lmax) as i8)
+                .collect();
+            let packed = pack_nibbles(&levels);
+            assert_eq!(packed.len(), len.div_ceil(2), "bits={bits} len={len}");
+            assert_eq!(unpack_nibbles(&packed, len), levels, "bits={bits} len={len}");
+            // odd lengths leave the last high nibble zero — a levels
+            // buffer extended by one zero packs to the same bytes
+            if len % 2 == 1 {
+                let mut padded = levels.clone();
+                padded.push(0);
+                assert_eq!(pack_nibbles(&padded), packed, "bits={bits} len={len} pad");
+            }
+        }
+    }
+}

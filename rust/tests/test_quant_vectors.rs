@@ -14,7 +14,8 @@
 use geta::quant::{self, QParams};
 use geta::tensor::{
     col2im, conv_out_dim, gelu, gelu_grad, im2col, layernorm_bwd_rows, layernorm_rows, matmul,
-    matmul_nt, matmul_tn, softmax_bwd_rows, softmax_rows,
+    matmul_f32u4_scaled_into, matmul_i8u4_scaled_into, matmul_nt, matmul_tn, matmul_u4,
+    softmax_bwd_rows, softmax_rows, U4Weight,
 };
 use geta::util::json;
 
@@ -290,4 +291,61 @@ fn native_ops_match_numpy_golden_vectors() {
     assert!(seen["softmax"] >= 2, "{seen:?}");
     assert!(seen["attention"] >= 2, "{seen:?}");
     assert!(seen["gelu"] >= 2, "{seen:?}");
+}
+
+// --------------------------------------------------- u4 GEMM golden vectors
+
+fn i64_arr(case: &json::Json, key: &str) -> Vec<i64> {
+    case.get(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap())
+        .collect()
+}
+
+/// The numpy oracle packs nibbles independently (scripts/gen_quant_vectors.py
+/// `pack_nibble_rows`); matching its bytes byte-for-byte pins the panel
+/// layout — LSB-first, low nibble = even column, `[k, ceil(n/2)]` row-major
+/// — across the two languages, not just within Rust. Raw i32 outputs are
+/// exact (both sides accumulate integer); both scaled epilogues follow the
+/// same f64 discipline, so 1e-5 holds with plenty of headroom.
+#[test]
+fn u4_kernels_match_numpy_golden_vectors_and_packed_layout() {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/u4_vectors_small.json");
+    let v = json::parse_file(&path).unwrap();
+    let cases = v.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 5);
+    for case in cases {
+        let (m, k, n) = (
+            case.usize_or("m", 0),
+            case.usize_or("k", 0),
+            case.usize_or("n", 0),
+        );
+        let levels: Vec<i32> = i64_arr(case, "levels").iter().map(|&v| v as i32).collect();
+        let packed: Vec<u8> = i64_arr(case, "packed").iter().map(|&v| v as u8).collect();
+        let mut w = U4Weight::from_levels(&levels, n, 0.0).expect("levels fit 4 bits");
+        assert_eq!((w.k, w.n), (k, n), "m={m} k={k} n={n}");
+        assert_eq!(
+            w.packed, packed,
+            "nibble layout drifted from the numpy packer at k={k} n={n}"
+        );
+        w.scale = case.get("scale").unwrap().f32_arr();
+        let bias = case.get("bias").unwrap().f32_arr();
+        let la: Vec<i8> = i64_arr(case, "acts_i8").iter().map(|&v| v as i8).collect();
+        // raw integer GEMM: exact equality, no tolerance
+        let raw_want: Vec<i32> = i64_arr(case, "raw").iter().map(|&v| v as i32).collect();
+        assert_eq!(matmul_u4(&la, &w, m), raw_want, "raw u4 GEMM at k={k} n={n}");
+        // i8 x u4 with the f64 scale epilogue
+        let alpha = case.f64_or("alpha", 0.0) as f32;
+        let mut got = vec![0.0f32; m * n];
+        matmul_i8u4_scaled_into(&mut got, &la, &w, m, alpha, Some(&bias));
+        assert_close(&got, &case.get("scaled").unwrap().f32_arr(), "u4 scaled");
+        // mixed f32 x u4 (weight-only quantization)
+        let af = case.get("acts_f32").unwrap().f32_arr();
+        matmul_f32u4_scaled_into(&mut got, &af, &w, m, Some(&bias));
+        assert_close(&got, &case.get("mixed").unwrap().f32_arr(), "u4 mixed");
+    }
 }

@@ -43,7 +43,7 @@ struct Setup {
 fn setup() -> &'static Setup {
     static CELL: OnceLock<Setup> = OnceLock::new();
     CELL.get_or_init(|| {
-        let art = geta::report::train_export(&art_dir(), "mlp_tiny", 0.1, 0.5)
+        let art = geta::report::train_export(&art_dir(), "mlp_tiny", 0.1, 0.5, 8.0)
             .expect("mlp_tiny trains natively");
         let eval = &art.trainer.eval_data;
         let singles = loadgen::single_sample_inputs(eval, 12);

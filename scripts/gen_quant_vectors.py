@@ -16,6 +16,12 @@ install):
   difference-validated) and computed in float64 over float32 inputs, the
   same accumulation discipline as rust/src/tensor/ops.rs, so the Rust side
   matches at 1e-5.
+* rust/tests/data/u4_vectors_small.json — nibble-packed 4-bit GEMM
+  vectors for rust/src/tensor/u4.rs: weight levels in [-7, 7], the
+  LSB-first packed bytes (low nibble = even column — checked byte-for-byte
+  on the Rust side, pinning the cross-language panel layout), i8 and f32
+  activations, per-channel scales/bias, and f64-computed reference outputs
+  for the raw i32 GEMM (exact) and both scaled epilogues (1e-5).
 
 Usage: python3 scripts/gen_quant_vectors.py
 """
@@ -247,6 +253,60 @@ def gelu_case(rng, n):
     return {"kind": "gelu", "n": n, "x": f(x), "y": f(y), "cot": f(cot), "gx": f(gx)}
 
 
+# ------------------------------------------------------- u4 GEMM vectors
+#
+# Mirrors rust/src/tensor/u4.rs: [k, ceil(n/2)] row-major panels, two
+# 4-bit two's-complement levels per byte, LSB-first (low nibble = even
+# column, odd n leaves the last high nibble zero).
+
+
+def pack_nibble_rows(levels, k, n):
+    nb = (n + 1) // 2
+    packed = []
+    for r in range(k):
+        row = levels[r * n:(r + 1) * n]
+        for jb in range(nb):
+            lo = int(row[2 * jb]) & 0x0F
+            hi = (int(row[2 * jb + 1]) & 0x0F) if 2 * jb + 1 < n else 0
+            packed.append(lo | (hi << 4))
+    return packed
+
+
+def u4_case(rng, m, k, n):
+    levels = rng.integers(-7, 8, size=k * n)
+    wm = levels.reshape(k, n).astype(np.int64)
+    la = rng.integers(-127, 128, size=m * k)
+    am = la.reshape(m, k).astype(np.int64)
+    # raw i8 x u4 GEMM: exact i32 accumulation on both sides
+    raw = am @ wm
+    # scaled epilogue, replicating the Rust f64 discipline: acc * (f64(d_a)
+    # * f64(scale_j)) + f64(bias_j), rounded once to f32
+    alpha = np.float32(3e-3)
+    scale = (np.float32(1e-3) + np.float32(1e-4) * np.arange(n, dtype=np.float32)).astype(np.float32)
+    bias = (0.1 * rng.normal(size=n)).astype(np.float32)
+    comb = np.float64(alpha) * scale.astype(np.float64)
+    scaled = (raw.astype(np.float64) * comb + bias.astype(np.float64)).astype(np.float32)
+    # mixed f32 x u4: f64 accumulation over f32 activations
+    af = rng.normal(size=(m, k)).astype(np.float32)
+    acc = af.astype(np.float64) @ wm.astype(np.float64)
+    mixed = (acc * scale.astype(np.float64) + bias.astype(np.float64)).astype(np.float32)
+    def f(a):
+        return [float(np.float32(v)) for v in np.asarray(a).reshape(-1)]
+    return {
+        "m": m, "k": k, "n": n,
+        "levels": [int(v) for v in levels],
+        "packed": pack_nibble_rows(levels, k, n),
+        "acts_i8": [int(v) for v in la],
+        "acts_f32": f(af),
+        "alpha": float(alpha),
+        "scale": f(scale),
+        "bias": f(bias),
+        "raw": [int(v) for v in raw.reshape(-1)],
+        "scaled": f(scaled),
+        "mixed": f(mixed),
+    }
+
+
 def main():
     rng = np.random.default_rng(42)
     cases = []
@@ -299,6 +359,19 @@ def main():
     with open(out, "w") as f:
         json.dump({"cases": op_cases}, f)
     print(f"wrote {len(op_cases)} op vector cases to {os.path.normpath(out)}")
+
+    u4_rng = np.random.default_rng(1234)
+    u4_cases = [
+        u4_case(u4_rng, 3, 8, 5),    # odd n: tail nibble
+        u4_case(u4_rng, 2, 1, 1),    # degenerate single element
+        u4_case(u4_rng, 2, 7, 1),    # n=1: every byte is a lone low nibble
+        u4_case(u4_rng, 4, 33, 16),  # even n, odd k
+        u4_case(u4_rng, 5, 96, 11),  # k spans several accumulation tiles
+    ]
+    out = os.path.join(data_dir, "u4_vectors_small.json")
+    with open(out, "w") as f:
+        json.dump({"cases": u4_cases}, f)
+    print(f"wrote {len(u4_cases)} u4 vector cases to {os.path.normpath(out)}")
 
 
 if __name__ == "__main__":
