@@ -202,8 +202,14 @@ impl Trainer {
         for step in 0..total {
             let idxs = iter.next_batch();
             let (x, y) = self.train_data.batch(&idxs);
-            let out = self.engine.train_step(&params, &q, &x, &y)?;
-            method.step(&mut params, &mut q, &out.grads, &out.qgrads, sched.lr(step), step);
+            let out = {
+                let _g = crate::obs::span("train", "train_step");
+                self.engine.train_step(&params, &q, &x, &y)?
+            };
+            {
+                let _g = crate::obs::span("train", "optim_step");
+                method.step(&mut params, &mut q, &out.grads, &out.qgrads, sched.lr(step), step);
+            }
             if step % self.exp.log_every == 0 || step + 1 == total {
                 trace.push(step, out.loss, method.stage_name(step));
                 if self.verbose {

@@ -163,13 +163,17 @@ pub struct GetaEngine {
 
 impl GetaEngine {
     pub fn load(path: &std::path::Path) -> Result<GetaEngine> {
-        Self::from_container(&GetaContainer::read(path)?)
+        Self::load_kernel(path, KernelKind::F32)
     }
 
     /// [`load`](Self::load) with an explicit compute path (`geta infer
     /// --int8`).
     pub fn load_kernel(path: &std::path::Path, kernel: KernelKind) -> Result<GetaEngine> {
-        Self::from_container_kernel(&GetaContainer::read(path)?, kernel)
+        let c = {
+            let _g = crate::obs::span("deploy", "load/read");
+            GetaContainer::read(path)?
+        };
+        Self::from_container_kernel(&c, kernel)
     }
 
     /// Build the f32-dequant engine from a parsed container (the
@@ -208,6 +212,7 @@ impl GetaEngine {
         let mut weight_sites = BTreeMap::new();
         let mut iweights = BTreeMap::new();
         let mut uweights = BTreeMap::new();
+        let unpack_span = crate::obs::span("deploy", "load/unpack");
         for t in &c.tensors {
             match &t.payload {
                 Payload::F32(v) => {
@@ -281,9 +286,14 @@ impl GetaEngine {
                 }
             }
         }
+        drop(unpack_span);
+        let lower_span = crate::obs::span("deploy", "load/lower");
         let base = lowering::lower(&config, &sites, 1)?;
+        drop(lower_span);
+        let slice_span = crate::obs::span("deploy", "load/slice");
         let program = crate::subnet::propagate_slices(&base, &weights)
             .context("sliced shapes do not propagate coherently")?;
+        drop(slice_span);
         let mut act_q = vec![None; sites.len()];
         for (i, rec) in c.sites.iter().enumerate() {
             if rec.kind == SiteKind::Act {
@@ -291,7 +301,9 @@ impl GetaEngine {
             }
         }
         let micro_batch = crate::runtime::native::batch_size_for(&c.task);
+        let plan_span = crate::obs::span("deploy", "load/plan");
         let plan = std::sync::Arc::new(Plan::new(&program, micro_batch));
+        drop(plan_span);
         Ok(GetaEngine {
             model: c.model.clone(),
             task: c.task.clone(),

@@ -70,8 +70,19 @@
 //! p50/p95/p99 latency histograms; `serve::loadgen` is the open-loop
 //! synthetic load generator behind `geta serve` and `geta bench-serve`
 //! (RPS × batch-window × workers sweeps into `BENCH_serve.json`).
+//!
+//! The **obs** subsystem is the cross-cutting telemetry layer: a span
+//! tracer (per-thread buffers → Chrome trace-event JSON) instrumented at
+//! per-node forward/backward, QASSO step phases, `.geta` load, and the
+//! serve request lifecycle; a process-wide metrics registry (counters /
+//! gauges / latency histograms with Prometheus-style exposition and JSON
+//! snapshots); and the shared `obs::Stopwatch`. Off by default — enabled
+//! via `--trace` / `GETA_TRACE` — with spans kept outside the numeric
+//! kernels so traced and untraced logits are bitwise identical
+//! (`geta profile`, `geta serve --metrics-every`).
 
 pub mod util;
+pub mod obs;
 pub mod tensor;
 pub mod graph;
 pub mod quant;

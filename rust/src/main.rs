@@ -21,6 +21,10 @@
 //!                                              over RPS x batch-window x workers
 //!                                              (--json: BENCH_serve.json at repo
 //!                                              root)
+//!   geta profile --model <m> [--int8|--int4]   per-op self-time table (op x
+//!                                              kernel) from a traced inference
+//!                                              pass, plus a Chrome trace-event
+//!                                              trace.json; also takes --file
 //!   geta repro  <table2|..|fig4b|deploy|all>
 //!   geta bench  [--iters N]                    runtime micro-benchmarks
 //!   geta models                                list AOT artifacts
@@ -29,6 +33,17 @@
 //! `--threads N` on any subcommand (and the GETA_THREADS env var) sets the
 //! one process-wide worker budget the tiled kernels honor — training and
 //! inference alike.
+//!
+//! `--trace <path>` on any subcommand turns on the span tracer (`geta::obs`)
+//! and writes everything recorded over the run to `<path>` as Chrome
+//! trace-event JSON (loadable in chrome://tracing or Perfetto). The
+//! GETA_TRACE env var does the same (set it to a `.json` path to also name
+//! the output file). Tracing is off by default and the instrumentation
+//! points cost one relaxed atomic load when off; timing wraps the numeric
+//! kernels from the outside, so logits are bitwise identical traced vs
+//! untraced. `geta serve --metrics-every <secs>` additionally dumps the
+//! process metrics registry (Prometheus text exposition) to stderr on a
+//! timer while the load runs.
 
 use anyhow::Result;
 
@@ -68,7 +83,17 @@ fn main() -> Result<()> {
             .map_err(|_| anyhow::anyhow!("--threads `{t}` is not a number"))?;
         geta::tensor::set_threads(n);
     }
-    match a.subcommand.as_deref() {
+    // `--trace <path>` (or the GETA_TRACE env var, folded in by
+    // obs::enabled) turns the span tracer on for the whole run; the drain
+    // + write happens after the subcommand returns
+    let trace_arg = a.opt("trace").map(|s| s.to_string());
+    if trace_arg.is_some() {
+        geta::obs::set_enabled(true);
+    }
+    // one stopwatch for the uniform elapsed report every subcommand gets
+    // (stderr, so stdout stays byte-stable for the determinism diffs)
+    let sw = geta::obs::Stopwatch::start();
+    let res = match a.subcommand.as_deref() {
         Some("models") => cmd_models(&a),
         Some("graph") => cmd_graph(&a),
         Some("train") => cmd_train(&a),
@@ -77,6 +102,7 @@ fn main() -> Result<()> {
         Some("bench-infer") => cmd_bench_infer(&a),
         Some("serve") => cmd_serve(&a),
         Some("bench-serve") => cmd_bench_serve(&a),
+        Some("profile") => cmd_profile(&a),
         Some("repro") => cmd_repro(&a),
         Some("bench") => cmd_bench(&a),
         None if a.flag("list-models") => {
@@ -91,7 +117,7 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "geta — joint structured pruning + quantization-aware training\n\n\
-                 usage: geta <models|graph|train|export|infer|bench-infer|serve|bench-serve|repro|bench> [options]\n\
+                 usage: geta <models|graph|train|export|infer|bench-infer|serve|bench-serve|profile|repro|bench> [options]\n\
                    geta graph --model vgg7_mini\n\
                    geta train --model resnet_mini --sparsity 0.35 --verbose\n\
                    geta export --model resnet_mini --sparsity 0.5 --out resnet.geta\n\
@@ -100,13 +126,40 @@ fn main() -> Result<()> {
                    geta serve --model mlp_tiny --rps 500 --workers 2 --batch-window-us 500\n\
                    geta serve --file resnet.geta --requests 512 --rps 0\n\
                    geta bench-serve --model mlp_tiny --workers 1,2 --windows-us 0,500 --json\n\
+                   geta profile --model mlp_tiny --int8 [--trace trace.json --metrics-out metrics.txt]\n\
                    geta repro all [--steps-scale 0.2]\n\
                    geta bench --iters 20\n\
-                   geta --list-models"
+                   geta --list-models\n\
+                 \n\
+                 any subcommand also takes --threads N and --trace <path> (span\n\
+                 tracer -> Chrome trace-event JSON; GETA_TRACE=1 works too)"
             );
             Ok(())
         }
+    };
+    // `profile` writes its own trace file and drains the buffer; for every
+    // other subcommand, flush whatever the run recorded
+    if geta::obs::enabled() {
+        let events = geta::obs::trace::drain();
+        if !events.is_empty() {
+            let path = trace_arg
+                .or_else(geta::obs::env_trace_path)
+                .unwrap_or_else(|| "trace.json".to_string());
+            geta::obs::trace::write_chrome_trace(std::path::Path::new(&path), &events)?;
+            let dropped = geta::obs::trace::dropped();
+            eprintln!(
+                "[geta] wrote {} trace events to {path}{}",
+                events.len(),
+                if dropped > 0 { format!(" ({dropped} dropped at buffer cap)") } else { String::new() },
+            );
+        }
     }
+    eprintln!(
+        "[geta] {} finished in {:.2}s",
+        a.subcommand.as_deref().unwrap_or("(no subcommand)"),
+        sw.elapsed_s()
+    );
+    res
 }
 
 fn cmd_models(a: &Args) -> Result<()> {
@@ -250,10 +303,20 @@ fn cmd_infer(a: &Args) -> Result<()> {
     let (_, eval) = geta::data::SynthData::for_model(engine.config(), 1, n.max(1), 1);
     let idxs: Vec<usize> = (0..eval.len()).collect();
     let (x, y) = eval.batch(&idxs);
-    let t0 = std::time::Instant::now();
+    let sw = geta::obs::Stopwatch::start();
     let logits = engine.infer(&x)?;
-    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let ms = sw.elapsed_ms();
     let samples = eval.len();
+    if let Some(lp) = a.opt("logits") {
+        // one logit per line, Debug-formatted: f32's shortest round-trip
+        // representation, so two files diff equal iff the logits are
+        // bitwise equal (the CI traced-vs-untraced identity check)
+        let mut out = String::with_capacity(logits.len() * 12);
+        for v in &logits {
+            out.push_str(&format!("{v:?}\n"));
+        }
+        std::fs::write(lp, out)?;
+    }
     println!(
         "{} ({}): {samples} samples in {ms:.2} ms ({:.0} samples/s, {} threads, {} kernel{})",
         engine.model,
@@ -459,8 +522,34 @@ fn cmd_serve(a: &Args) -> Result<()> {
         if spec.clients == 1 { "" } else { "s" },
     );
     let server = Server::start(engine, cfg);
+    // --metrics-every <secs>: dump the process metrics registry (Prometheus
+    // text exposition — geta_serve_* counters, queue-depth gauge, latency
+    // summary) to stderr on a timer while the load runs
+    let metrics_every = a.usize_or("metrics-every", 0);
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let dumper = (metrics_every > 0).then(|| {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let period = std::time::Duration::from_secs(metrics_every as u64);
+            let mut last = std::time::Instant::now();
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                // sleep in short slices so shutdown isn't held up by the period
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                if last.elapsed() >= period {
+                    last = std::time::Instant::now();
+                    eprintln!("--- metrics ---\n{}", geta::obs::metrics::global().exposition());
+                }
+            }
+        })
+    });
     let load = loadgen::run(&server, &inputs, &spec);
     let report = server.shutdown();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(d) = dumper {
+        let _ = d.join();
+        // one final snapshot so short runs still see the counters land
+        eprintln!("--- metrics (final) ---\n{}", geta::obs::metrics::global().exposition());
+    }
     println!(
         "\naccepted {}  shed {}  completed {}  failed {}  batches {} (avg batch {:.2})",
         report.stats.accepted,
@@ -534,6 +623,91 @@ fn cmd_bench_serve(a: &Args) -> Result<()> {
         let path = geta::report::bench_serve_json_path();
         geta::report::write_bench_serve_json(&path, &rows)?;
         println!("\nwrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// `geta profile`: run a traced inference pass and print a per-op
+/// self-time table (op kind x kernel kind, the span names the executor
+/// records), then write the raw spans as Chrome trace-event JSON. The
+/// engine comes from `--file <m.geta>` or an in-process train + export of
+/// `--model`; tracing is switched on only after training finishes, so the
+/// trace holds the `.geta` load phases plus the per-node exec spans — not
+/// the training loop (pass --trace to a `geta train` run for that).
+fn cmd_profile(a: &Args) -> Result<()> {
+    let kernel = if a.flag("int4") {
+        geta::deploy::KernelKind::Int4
+    } else if a.flag("int8") {
+        geta::deploy::KernelKind::Int8
+    } else {
+        geta::deploy::KernelKind::F32
+    };
+    let engine = if let Some(file) = a.opt("file") {
+        geta::obs::set_enabled(true);
+        geta::deploy::GetaEngine::load_kernel(std::path::Path::new(file), kernel)?
+    } else {
+        let model = resolve_model(a, "mlp_tiny")?;
+        let scale = a.f64_or("steps-scale", 0.12);
+        let sparsity = a.f64_or("sparsity", 0.5);
+        println!("no --file: training {model} in-process (steps-scale {scale})");
+        let art = geta::report::train_export(&art_dir(a), &model, scale, sparsity, 8.0)?;
+        geta::obs::set_enabled(true);
+        geta::deploy::GetaEngine::from_container_kernel(&art.container, kernel)?
+    };
+    let n = a.usize_or("n", 256);
+    let iters = a.usize_or("iters", 3).max(1);
+    let (_, eval) = geta::data::SynthData::for_model(engine.config(), 1, n.max(1), 1);
+    let idxs: Vec<usize> = (0..eval.len()).collect();
+    let (x, _y) = eval.batch(&idxs);
+    // whole-batch latency lands in the registry so --metrics-out has a
+    // populated summary to expose alongside the span-level table
+    let reg = geta::obs::metrics::global();
+    let hist = reg.histogram("geta_profile_infer_us");
+    let passes = reg.counter("geta_profile_passes_total");
+    for _ in 0..iters {
+        let sw = geta::obs::Stopwatch::start();
+        let _ = engine.infer(&x)?;
+        hist.record(sw.elapsed());
+        passes.inc();
+    }
+    let events = geta::obs::trace::drain();
+    let agg = geta::obs::trace::aggregate(&events, Some("exec"));
+    let total: f64 = agg.iter().map(|r| r.total_us).sum();
+    println!(
+        "\nprofile {} ({} kernel): {} samples x {} pass{}",
+        engine.model,
+        kernel.label(),
+        eval.len(),
+        iters,
+        if iters == 1 { "" } else { "es" },
+    );
+    println!(
+        "{:<28} {:>7} {:>11} {:>7} {:>11}",
+        "op/kernel", "calls", "total_ms", "%", "mean_us"
+    );
+    for r in &agg {
+        println!(
+            "{:<28} {:>7} {:>11.3} {:>6.1}% {:>11.1}",
+            r.name,
+            r.calls,
+            r.total_us / 1e3,
+            100.0 * r.total_us / total.max(1e-12),
+            r.mean_us(),
+        );
+    }
+    let trace_path = a
+        .opt("trace")
+        .map(|s| s.to_string())
+        .or_else(geta::obs::env_trace_path)
+        .unwrap_or_else(|| "trace.json".to_string());
+    geta::obs::trace::write_chrome_trace(std::path::Path::new(&trace_path), &events)?;
+    println!(
+        "\nwrote {} spans to {trace_path} (load in chrome://tracing or ui.perfetto.dev)",
+        events.len()
+    );
+    if let Some(mp) = a.opt("metrics-out") {
+        std::fs::write(mp, reg.exposition())?;
+        println!("wrote metrics exposition to {mp}");
     }
     Ok(())
 }

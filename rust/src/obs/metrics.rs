@@ -1,0 +1,255 @@
+//! Process-wide metrics registry: counters, gauges, and histograms with
+//! Prometheus-style text exposition and a JSON snapshot writer.
+//!
+//! Counters and gauges are relaxed atomics behind `Arc` handles — a
+//! holder increments without touching the registry map or any lock.
+//! Histograms reuse the log-bucketed [`LatencyHistogram`] from `serve`
+//! behind a mutex (recorded per batch, not per op, so the lock is cold).
+//! The [`global`] registry is what the CLI exposes via
+//! `geta serve --metrics-every` and `geta profile --metrics-out`;
+//! independent [`Registry`] instances exist for tests.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::serve::LatencyHistogram;
+use crate::util::json::Json;
+
+/// Monotonic counter handle. Cloning shares the underlying cell.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time gauge handle (signed: depths, deltas).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram handle over the serve-layer log-bucketed latency histogram.
+#[derive(Clone)]
+pub struct Hist(Arc<Mutex<LatencyHistogram>>);
+
+impl Hist {
+    pub fn record(&self, d: Duration) {
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).record(d);
+    }
+
+    pub fn record_us(&self, us: f64) {
+        self.record(Duration::from_secs_f64(us.max(0.0) / 1e6));
+    }
+
+    pub fn snapshot(&self) -> LatencyHistogram {
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
+
+/// Named metrics, created on first use and stable for the process
+/// lifetime. Registration takes the map lock once per handle; updates
+/// through the returned handles are lock-free (counters/gauges) or take
+/// only that metric's own mutex (histograms).
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    hists: Mutex<BTreeMap<String, Hist>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Hist {
+        let mut m = self.hists.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string())
+            .or_insert_with(|| Hist(Arc::new(Mutex::new(LatencyHistogram::new()))))
+            .clone()
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` lines plus samples;
+    /// histograms render as summaries (quantile-labelled samples with
+    /// `_sum`/`_count`).
+    pub fn exposition(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        for (name, g) in self.gauges.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g.get());
+        }
+        for (name, h) in self.hists.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            let h = h.snapshot();
+            let _ = writeln!(out, "# TYPE {name} summary");
+            for (q, v) in [(0.5, h.p50_us()), (0.95, h.p95_us()), (0.99, h.p99_us())] {
+                let _ = writeln!(out, "{name}{{quantile=\"{q}\"}} {v}");
+            }
+            let _ = writeln!(out, "{name}_sum {}", h.mean_us() * h.count() as f64);
+            let _ = writeln!(out, "{name}_count {}", h.count());
+        }
+        out
+    }
+
+    /// JSON snapshot of every metric — the machine-readable twin of
+    /// [`exposition`](Self::exposition).
+    pub fn snapshot_json(&self) -> Json {
+        let counters: Vec<(String, Json)> = self
+            .counters
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::Num(c.get() as f64)))
+            .collect();
+        let gauges: Vec<(String, Json)> = self
+            .gauges
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, g)| (k.clone(), Json::Num(g.get() as f64)))
+            .collect();
+        let hists: Vec<(String, Json)> = self
+            .hists
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, h)| {
+                let h = h.snapshot();
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::Num(h.count() as f64)),
+                        ("mean_us", Json::Num(h.mean_us())),
+                        ("min_us", Json::Num(h.min_us())),
+                        ("max_us", Json::Num(h.max_us())),
+                        ("p50_us", Json::Num(h.p50_us())),
+                        ("p95_us", Json::Num(h.p95_us())),
+                        ("p99_us", Json::Num(h.p99_us())),
+                    ]),
+                )
+            })
+            .collect();
+        let as_obj = |pairs: Vec<(String, Json)>| {
+            Json::obj(pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+        };
+        Json::obj(vec![
+            ("counters", as_obj(counters)),
+            ("gauges", as_obj(gauges)),
+            ("histograms", as_obj(hists)),
+        ])
+    }
+
+    /// Write the JSON snapshot to `path`.
+    pub fn write_snapshot(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.snapshot_json()))
+    }
+}
+
+/// The process-wide registry.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_and_lock_free_to_update() {
+        let r = Registry::new();
+        let c = r.counter("reqs_total");
+        c.inc();
+        c.add(4);
+        // a second lookup sees the same cell
+        assert_eq!(r.counter("reqs_total").get(), 5);
+
+        let g = r.gauge("depth");
+        g.set(7);
+        g.add(-3);
+        assert_eq!(r.gauge("depth").get(), 4);
+
+        let h = r.histogram("lat_us");
+        h.record(Duration::from_micros(100));
+        h.record_us(300.0);
+        assert_eq!(r.histogram("lat_us").snapshot().count(), 2);
+    }
+
+    #[test]
+    fn exposition_has_type_lines_and_samples() {
+        let r = Registry::new();
+        r.counter("a_total").add(2);
+        r.gauge("b_depth").set(-1);
+        r.histogram("c_us").record(Duration::from_micros(50));
+        let text = r.exposition();
+        assert!(text.contains("# TYPE a_total counter"));
+        assert!(text.contains("a_total 2"));
+        assert!(text.contains("# TYPE b_depth gauge"));
+        assert!(text.contains("b_depth -1"));
+        assert!(text.contains("# TYPE c_us summary"));
+        assert!(text.contains("c_us{quantile=\"0.5\"}"));
+        assert!(text.contains("c_us_count 1"));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let val = parts.next().unwrap();
+            assert!(val.parse::<f64>().is_ok(), "bad sample line: {line}");
+            assert!(parts.next().is_some(), "bad sample line: {line}");
+        }
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let r = Registry::new();
+        r.counter("n_total").add(3);
+        r.histogram("h_us").record(Duration::from_micros(250));
+        let text = r.snapshot_json().to_string();
+        let parsed = crate::util::json::parse(&text).expect("snapshot parses");
+        match parsed {
+            Json::Obj(m) => {
+                assert!(matches!(m.get("counters"), Some(Json::Obj(_))));
+                assert!(matches!(m.get("histograms"), Some(Json::Obj(_))));
+            }
+            other => panic!("snapshot root not an object: {other:?}"),
+        }
+    }
+}

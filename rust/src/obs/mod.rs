@@ -1,0 +1,133 @@
+//! Telemetry: span tracing, a process-wide metrics registry, and the
+//! shared stopwatch every wall-clock measurement in the crate goes
+//! through.
+//!
+//! Three pieces:
+//!
+//! - [`trace`] — a low-overhead span tracer. Spans are pushed into
+//!   per-thread buffers (no lock on the hot path) and drained into
+//!   Chrome trace-event JSON loadable in `chrome://tracing` / Perfetto.
+//!   Instrumented layers: per-node forward/backward in `runtime::exec` /
+//!   `runtime::interp` (keyed by op kind and kernel kind), QASSO step
+//!   phases in `optim::qasso` (projection, forgetting, saliency), `.geta`
+//!   load/pack phases in `deploy`, and the request lifecycle in `serve`
+//!   (enqueue-wait → batch-infer → reply).
+//! - [`metrics`] — counters, gauges, and histograms (reusing the
+//!   log-bucketed [`crate::serve::LatencyHistogram`]) with Prometheus-style
+//!   text exposition and a JSON snapshot writer.
+//! - [`Stopwatch`] — the one `Instant`-based timer; `report`, `util::bench`
+//!   and the CLI all measure elapsed time through it.
+//!
+//! Tracing is **off by default** and costs one relaxed atomic load per
+//! instrumentation point when disabled. It is enabled by `--trace <path>`
+//! on the CLI or the `GETA_TRACE` environment variable. All timing lives
+//! *outside* the numeric kernels: logits are bitwise identical traced vs
+//! untraced (CI asserts this).
+
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+use std::time::{Duration, Instant};
+
+pub use trace::{span, span_owned, SpanGuard};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+/// Whether span tracing is on. One `Once` fast-path check plus one relaxed
+/// load — cheap enough to call per plan node. The first call folds in the
+/// `GETA_TRACE` environment variable (any value other than empty or `0`
+/// enables tracing; a `.json`-suffixed value also sets the default trace
+/// output path, see [`env_trace_path`]).
+pub fn enabled() -> bool {
+    ENV_INIT.call_once(|| {
+        if let Ok(v) = std::env::var("GETA_TRACE") {
+            if !v.is_empty() && v != "0" {
+                ENABLED.store(true, Ordering::Relaxed);
+            }
+        }
+    });
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off; returns the previous state so callers that flip it
+/// temporarily (e.g. the per-op pass in `report::bench_deploy`) can restore.
+pub fn set_enabled(on: bool) -> bool {
+    enabled(); // make sure the env fold-in has happened first
+    ENABLED.swap(on, Ordering::Relaxed)
+}
+
+/// Trace output path implied by `GETA_TRACE` when the CLI got no explicit
+/// `--trace`: a `.json`-suffixed value names the file, any other truthy
+/// value means "enabled, default path".
+pub fn env_trace_path() -> Option<String> {
+    match std::env::var("GETA_TRACE") {
+        Ok(v) if v.ends_with(".json") => Some(v),
+        _ => None,
+    }
+}
+
+/// The one stopwatch. Wraps `Instant` so elapsed-time measurement is
+/// uniform across the CLI, `report`, and `util::bench` instead of each
+/// call site re-deriving milliseconds its own way.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Elapsed time and restart — for sequential phase timing.
+    pub fn lap_ms(&mut self) -> f64 {
+        let ms = self.elapsed_ms();
+        self.t0 = Instant::now();
+        ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_and_laps() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let ms = sw.lap_ms();
+        assert!(ms >= 1.0, "lap too short: {ms}");
+        // after a lap the clock restarts
+        assert!(sw.elapsed_ms() < ms + 1000.0);
+        assert!(sw.elapsed_us() >= sw.elapsed_ms()); // µs numerically >= ms
+    }
+
+    #[test]
+    fn set_enabled_returns_previous_state() {
+        let prev = set_enabled(false);
+        assert!(!enabled());
+        assert!(!set_enabled(true));
+        assert!(enabled());
+        set_enabled(false);
+        set_enabled(prev);
+    }
+}

@@ -1,0 +1,318 @@
+//! Span tracer: per-thread buffers drained into Chrome trace-event JSON.
+//!
+//! Hot-path contract: when tracing is disabled (`obs::enabled()` false)
+//! an instrumentation point costs one relaxed atomic load and nothing
+//! else — no `Instant::now`, no allocation. When enabled, each span is
+//! one `Instant::now` pair plus a push into a `thread_local` buffer; the
+//! global mutex is only touched when a thread's buffer spills (every
+//! [`LOCAL_SPILL`] events) or the thread exits. Timing always wraps the
+//! numeric kernels from the *outside*: no span changes allocation order
+//! or arithmetic, so traced and untraced runs produce bitwise-identical
+//! logits.
+//!
+//! [`drain`] flushes the calling thread and takes everything spilled so
+//! far. Worker threads flush on exit (TLS destructor), so drain after
+//! joining them — the executor's scoped threads and `serve::Server`
+//! workers are both joined before any CLI drain point runs.
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One completed span, timestamped in microseconds relative to the
+/// process trace epoch (first span recorded).
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: String,
+    pub cat: &'static str,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub tid: u64,
+}
+
+/// Cap on buffered events: a runaway traced loop degrades to counting
+/// drops instead of eating all memory.
+const MAX_EVENTS: usize = 2_000_000;
+/// Local-buffer spill threshold (events).
+const LOCAL_SPILL: usize = 4096;
+
+static GLOBAL: Mutex<Vec<SpanEvent>> = Mutex::new(Vec::new());
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+struct LocalBuf {
+    tid: u64,
+    buf: Vec<SpanEvent>,
+}
+
+impl LocalBuf {
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let mut g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+        let room = MAX_EVENTS.saturating_sub(g.len());
+        if room < self.buf.len() {
+            DROPPED.fetch_add((self.buf.len() - room) as u64, Ordering::Relaxed);
+            self.buf.truncate(room);
+        }
+        g.append(&mut self.buf);
+    }
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = RefCell::new(LocalBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        buf: Vec::new(),
+    });
+}
+
+fn push(cat: &'static str, name: Cow<'static, str>, start: Instant, end: Instant) {
+    let e = epoch();
+    let ts_us = start.checked_duration_since(e).unwrap_or_default().as_secs_f64() * 1e6;
+    let dur_us = end.checked_duration_since(start).unwrap_or_default().as_secs_f64() * 1e6;
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let tid = l.tid;
+        l.buf.push(SpanEvent { name: name.into_owned(), cat, ts_us, dur_us, tid });
+        if l.buf.len() >= LOCAL_SPILL {
+            l.flush();
+        }
+    });
+}
+
+/// Record a span that started at `start` and ends now. Caller is expected
+/// to have checked `obs::enabled()` before taking the start timestamp.
+pub fn record(cat: &'static str, name: String, start: Instant) {
+    push(cat, Cow::Owned(name), start, Instant::now());
+}
+
+/// Record a span with both endpoints supplied — for lifecycle phases whose
+/// boundaries were captured earlier (e.g. a request's enqueue instant).
+pub fn record_between(cat: &'static str, name: String, start: Instant, end: Instant) {
+    push(cat, Cow::Owned(name), start, end);
+}
+
+/// RAII span: records `cat`/`name` from construction to drop. A no-op
+/// (no clock read) when tracing is disabled.
+pub struct SpanGuard(Option<(&'static str, Cow<'static, str>, Instant)>);
+
+impl SpanGuard {
+    /// Explicitly-disabled guard, for call sites that hoist the enabled
+    /// check out of a loop.
+    pub fn off() -> SpanGuard {
+        SpanGuard(None)
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((cat, name, start)) = self.0.take() {
+            push(cat, name, start, Instant::now());
+        }
+    }
+}
+
+/// Span with a static name — zero allocation until the event is buffered.
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    if super::enabled() {
+        SpanGuard(Some((cat, Cow::Borrowed(name), Instant::now())))
+    } else {
+        SpanGuard(None)
+    }
+}
+
+/// Span with a computed name. The `String` is only built by the caller
+/// when tracing is on — pair with an `obs::enabled()` check.
+pub fn span_owned(cat: &'static str, name: String) -> SpanGuard {
+    if super::enabled() {
+        SpanGuard(Some((cat, Cow::Owned(name), Instant::now())))
+    } else {
+        SpanGuard(None)
+    }
+}
+
+/// Flush the calling thread's buffer and take every event recorded so
+/// far. Threads still running keep their unspilled tails — drain after
+/// joining workers.
+pub fn drain() -> Vec<SpanEvent> {
+    LOCAL.with(|l| l.borrow_mut().flush());
+    let mut g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    std::mem::take(&mut *g)
+}
+
+/// Events dropped at the [`MAX_EVENTS`] cap since process start.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Put drained events back into the global buffer — used by callers that
+/// [`drain`] to inspect a window of spans (e.g. the per-op pass in
+/// `report::bench_deploy`) without losing events an enclosing `--trace`
+/// session still wants written out.
+pub fn inject(events: Vec<SpanEvent>) {
+    if events.is_empty() {
+        return;
+    }
+    let mut g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let room = MAX_EVENTS.saturating_sub(g.len());
+    let take = events.len().min(room);
+    DROPPED.fetch_add((events.len() - take) as u64, Ordering::Relaxed);
+    g.extend(events.into_iter().take(take));
+}
+
+/// Serialize events as Chrome trace-event JSON (the `{"traceEvents":[..]}`
+/// object form), loadable in `chrome://tracing` and Perfetto.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
+    let rows: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(&e.name)),
+                ("cat", Json::str(e.cat)),
+                ("ph", Json::str("X")),
+                ("ts", Json::Num(e.ts_us)),
+                ("dur", Json::Num(e.dur_us)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.tid as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(rows)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write events to `path` as Chrome trace-event JSON.
+pub fn write_chrome_trace(path: &std::path::Path, events: &[SpanEvent]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "{}", chrome_trace_json(events))?;
+    f.flush()
+}
+
+/// Per-name aggregate over a set of spans: call count and total self-time.
+/// Exec-level spans are leaves (no nesting within a name), so summed
+/// duration *is* self-time.
+#[derive(Debug, Clone)]
+pub struct OpAgg {
+    pub name: String,
+    pub calls: u64,
+    pub total_us: f64,
+}
+
+impl OpAgg {
+    pub fn mean_us(&self) -> f64 {
+        if self.calls == 0 { 0.0 } else { self.total_us / self.calls as f64 }
+    }
+}
+
+/// Aggregate spans by name (optionally restricted to one category),
+/// sorted by total time descending.
+pub fn aggregate(events: &[SpanEvent], cat: Option<&str>) -> Vec<OpAgg> {
+    let mut by_name: std::collections::BTreeMap<&str, (u64, f64)> = std::collections::BTreeMap::new();
+    for e in events {
+        if let Some(c) = cat {
+            if e.cat != c {
+                continue;
+            }
+        }
+        let slot = by_name.entry(&e.name).or_insert((0, 0.0));
+        slot.0 += 1;
+        slot.1 += e.dur_us;
+    }
+    let mut rows: Vec<OpAgg> = by_name
+        .into_iter()
+        .map(|(name, (calls, total_us))| OpAgg { name: name.to_string(), calls, total_us })
+        .collect();
+    rows.sort_by(|a, b| b.total_us.partial_cmp(&a.total_us).unwrap_or(std::cmp::Ordering::Equal));
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_drain_and_serialize() {
+        let prev = crate::obs::set_enabled(true);
+        {
+            let _g = span("test-trace", "alpha_phase");
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        let t0 = Instant::now();
+        std::thread::sleep(std::time::Duration::from_micros(100));
+        record("test-trace", "beta_phase".to_string(), t0);
+        // worker-thread events land in the global buffer via the TLS destructor
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = span("test-trace", "worker_phase");
+            });
+        });
+        let events = drain();
+        crate::obs::set_enabled(prev);
+        let mine: Vec<&SpanEvent> = events.iter().filter(|e| e.cat == "test-trace").collect();
+        assert!(mine.iter().any(|e| e.name == "alpha_phase"));
+        assert!(mine.iter().any(|e| e.name == "beta_phase"));
+        assert!(mine.iter().any(|e| e.name == "worker_phase"));
+        for e in &mine {
+            assert!(e.dur_us >= 0.0 && e.ts_us >= 0.0);
+        }
+
+        let own: Vec<SpanEvent> = mine.iter().map(|e| (*e).clone()).collect();
+        let json = chrome_trace_json(&own);
+        let text = json.to_string();
+        let parsed = crate::util::json::parse(&text).expect("trace JSON parses");
+        match parsed {
+            Json::Obj(m) => match m.get("traceEvents") {
+                Some(Json::Arr(rows)) => assert!(rows.len() >= 3),
+                other => panic!("traceEvents not an array: {other:?}"),
+            },
+            other => panic!("trace root not an object: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disabled_spans_cost_nothing_and_record_nothing() {
+        let prev = crate::obs::set_enabled(false);
+        {
+            let _g = span("test-trace-off", "should_not_appear");
+        }
+        let events = drain();
+        crate::obs::set_enabled(prev);
+        assert!(events.iter().all(|e| e.cat != "test-trace-off"));
+    }
+
+    #[test]
+    fn aggregate_sums_and_sorts() {
+        let evs = vec![
+            SpanEvent { name: "a".into(), cat: "x", ts_us: 0.0, dur_us: 10.0, tid: 1 },
+            SpanEvent { name: "b".into(), cat: "x", ts_us: 0.0, dur_us: 50.0, tid: 1 },
+            SpanEvent { name: "a".into(), cat: "x", ts_us: 0.0, dur_us: 30.0, tid: 2 },
+            SpanEvent { name: "c".into(), cat: "y", ts_us: 0.0, dur_us: 99.0, tid: 1 },
+        ];
+        let agg = aggregate(&evs, Some("x"));
+        assert_eq!(agg.len(), 2);
+        assert_eq!(agg[0].name, "b");
+        assert_eq!(agg[1].name, "a");
+        assert_eq!(agg[1].calls, 2);
+        assert!((agg[1].total_us - 40.0).abs() < 1e-9);
+        assert!((agg[1].mean_us() - 20.0).abs() < 1e-9);
+    }
+}

@@ -304,6 +304,7 @@ impl Qasso {
                     }
                     self.base.step(params, grads, lr);
                     self.sgd_q(q, qgrads, true, true, true);
+                    let _prj = crate::obs::span("qasso", "ppsg_projection");
                     for site in q.iter_mut() {
                         quant::ppsg_project(site, self.cfg.b_l, self.bu_cur);
                     }
@@ -397,6 +398,7 @@ impl Qasso {
 
         // ---- period start: lines 11-12, saliency partition
         if k == 0 {
+            let _sal = crate::obs::span("qasso", "saliency_partition");
             let scores = saliency::scores(&self.gi, params, grads, c.saliency);
             let eligible: Vec<bool> = self.pruned.iter().map(|p| !p).collect();
             let total_target =
@@ -439,14 +441,19 @@ impl Qasso {
         self.update_site_d(params, grads, q, lr);
 
         // keep all sites feasible under (t,q_m) drift
+        let prj_span = crate::obs::span("qasso", "ppsg_projection");
         for site in q.iter_mut() {
             quant::ppsg_project(site, c.b_l, c.b_u);
         }
+        drop(prj_span);
 
         // ---- eq. (8): base step on everything (the -α∇ part of eq. (9))
+        let base_span = crate::obs::span("qasso", "sgd_base");
         self.base.step(params, grads, lr);
+        drop(base_span);
 
         // ---- eq. (9) second term: forget quantized knowledge in G_R
+        let forget_span = crate::obs::span("qasso", "forgetting");
         for &g in &self.redundant {
             let gamma = self.gamma[g];
             if gamma == 0.0 {
@@ -466,6 +473,7 @@ impl Qasso {
                 params.tensors[ti as usize].data[ei as usize] = x - gamma * scale * xq;
             }
         }
+        drop(forget_span);
 
         // ---- period end: commit this period's redundant set
         if k + 1 == c.prune_steps {

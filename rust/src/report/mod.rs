@@ -485,6 +485,53 @@ pub struct DeployBench {
     /// Weight tensors resident as nibble-packed u4 panels (0 on every
     /// kernel but int4).
     pub u4_sites: usize,
+    /// Per-op self-time breakdown of one traced inference through the
+    /// compressed engine (aggregated per op kind × kernel), sorted by
+    /// total time descending. Measured in a separate traced pass so the
+    /// `compressed_ms` wall-clocks above stay untraced.
+    pub per_op: Vec<OpBreakdown>,
+}
+
+/// One row of the per-op breakdown attached to a [`DeployBench`] row and
+/// printed by `geta profile`: spans aggregated by name, where the name is
+/// the op kind alone (`Relu`) or `op/kernel` for GEMM ops
+/// (`Linear/int8`, `Conv2d/f32+simd`).
+#[derive(Debug, Clone)]
+pub struct OpBreakdown {
+    pub name: String,
+    pub calls: u64,
+    pub total_ms: f64,
+}
+
+/// Run one traced inference through `e` and aggregate the executor spans
+/// per (op kind, kernel). Tracing is flipped on just for this call and
+/// restored after; spans buffered by an enclosing `--trace` session are
+/// preserved (and, if one is active, the pass's own spans stay in its
+/// trace too).
+pub fn profile_per_op(
+    e: &GetaEngine,
+    x: &crate::runtime::HostArray,
+) -> Result<Vec<OpBreakdown>> {
+    let stash = crate::obs::trace::drain();
+    let was_on = crate::obs::set_enabled(true);
+    let res = e.infer(x);
+    crate::obs::set_enabled(was_on);
+    let mine = crate::obs::trace::drain();
+    let agg = crate::obs::trace::aggregate(&mine, Some("exec"));
+    let mut back = stash;
+    if was_on {
+        back.extend(mine);
+    }
+    crate::obs::trace::inject(back);
+    let _ = res?;
+    Ok(agg
+        .into_iter()
+        .map(|a| OpBreakdown {
+            name: a.name,
+            calls: a.calls,
+            total_ms: a.total_us / 1e3,
+        })
+        .collect())
 }
 
 /// Outcome of the shared train→export preamble behind `bench-infer`,
@@ -595,9 +642,9 @@ pub fn bench_deploy(
         crate::util::bench::black_box(e.infer(&x)?); // warm
         let mut best = f64::INFINITY;
         for _ in 0..iters.max(1) {
-            let t0 = std::time::Instant::now();
+            let sw = crate::obs::Stopwatch::start();
             crate::util::bench::black_box(e.infer(&x)?);
-            best = best.min(t0.elapsed().as_secs_f64() * 1e3 / n_batches as f64);
+            best = best.min(sw.elapsed_ms() / n_batches as f64);
         }
         Ok(best)
     };
@@ -607,6 +654,9 @@ pub fn bench_deploy(
         let mut comp = GetaEngine::from_container_kernel(&container, kernel)?;
         comp.threads = threads;
         let compressed_ms = time_ms(&comp)?;
+        // separate traced pass, after the timed sweep: the wall-clocks
+        // above never run with tracing on
+        let per_op = profile_per_op(&comp, &x)?;
         rows.push(DeployBench {
             model: model.to_string(),
             kernel: kernel.label().to_string(),
@@ -621,6 +671,7 @@ pub fn bench_deploy(
             avg_bits: result.avg_bits,
             int_sites: comp.int_sites(),
             u4_sites: comp.u4_sites(),
+            per_op,
         });
     }
     Ok(rows)
@@ -688,7 +739,7 @@ pub fn bench_gemm_kernels(model: &str, batch: usize, iters: usize) -> Result<Gem
     let sweep = |tiled: bool| -> f64 {
         let mut best = f64::INFINITY;
         for _ in 0..iters.max(1) {
-            let t0 = std::time::Instant::now();
+            let sw = crate::obs::Stopwatch::start();
             for (&(m, k, n), (a, b)) in shapes.iter().zip(&data) {
                 let out = if tiled {
                     crate::tensor::matmul(a, b, m, k, n)
@@ -697,7 +748,7 @@ pub fn bench_gemm_kernels(model: &str, batch: usize, iters: usize) -> Result<Gem
                 };
                 crate::util::bench::black_box(out);
             }
-            best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+            best = best.min(sw.elapsed_ms());
         }
         best
     };
@@ -820,6 +871,21 @@ fn deploy_row_json(r: &DeployBench) -> crate::util::json::Json {
         ("group_sparsity", Json::Num(r.group_sparsity)),
         ("int_sites", Json::Num(r.int_sites as f64)),
         ("u4_sites", Json::Num(r.u4_sites as f64)),
+        (
+            "per_op",
+            Json::Arr(
+                r.per_op
+                    .iter()
+                    .map(|o| {
+                        Json::obj(vec![
+                            ("op", Json::str(&o.name)),
+                            ("calls", Json::Num(o.calls as f64)),
+                            ("total_ms", Json::Num(o.total_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -837,8 +903,10 @@ const BENCH_DEPLOY_NOTE: &str =
     "deployment inference summary; regenerate with `make bench-json` or `geta bench-infer \
      --json` (ms values are machine-dependent). Rows carry model, kernel (\"f32\" | \"int8\" | \
      \"int4\"), batch, threads, dense_ms, compressed_ms, speedup, dense_bytes, disk_bytes, \
-     rel_bops, avg_bits, group_sparsity, int_sites, u4_sites, and (integer rows) \
-     speedup_vs_f32. Writers merge by model: a single-model `bench-infer --json` run updates \
+     rel_bops, avg_bits, group_sparsity, int_sites, u4_sites, a per_op self-time breakdown \
+     (op/kernel, calls, total_ms — from one traced pass separate from the timed sweep), and \
+     (integer rows) speedup_vs_f32. Writers merge by model: a single-model `bench-infer \
+     --json` run updates \
      only its own rows. CI regenerates the full file every run, uploads it, and asserts int8 \
      throughput >= f32-dequant and int4 >= int8 (with u4-resident sites) on mlp_tiny and \
      resnet_mini.";

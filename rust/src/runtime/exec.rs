@@ -558,9 +558,18 @@ pub fn forward(
     let mut vals: Vec<Vec<f32>> = Vec::with_capacity(nodes.len());
     let mut aux: Vec<Aux> = Vec::with_capacity(nodes.len());
 
+    // Per-node span tracing: one relaxed load when off; when on, the
+    // clock is read outside the kernel bodies and nothing about
+    // allocation or arithmetic order changes, so logits stay bitwise
+    // identical traced vs untraced.
+    let trace_on = crate::obs::enabled();
+    let simd_tag = if trace_on && tensor::simd_active() { "+simd" } else { "" };
+
     for (id, node) in nodes.iter().enumerate() {
         let dims = &plan.shapes[id];
         let numel = plan.numels[id];
+        let t0 = if trace_on { Some(std::time::Instant::now()) } else { None };
+        let mut kern: &'static str = "";
         let (out, ax): (Vec<f32>, Aux) = match &node.op {
             OpKind::Input => {
                 let Input::F32(xv) = x else {
@@ -604,6 +613,7 @@ pub fn forward(
                 let iw =
                     if with_aux || uw.is_some() { None } else { src.weight_i8(&wname, *site)? };
                 if let Some(uw) = uw {
+                    kern = "int4";
                     anyhow::ensure!(
                         uw.k == din && uw.n == dout,
                         "{}: u4 weight is {}x{}, program expects {din}x{dout}",
@@ -628,6 +638,7 @@ pub fn forward(
                     }
                     (out, Aux::None)
                 } else if let Some(iw) = iw {
+                    kern = "int8";
                     anyhow::ensure!(
                         iw.k == din && iw.n == dout,
                         "{}: int weight is {}x{}, program expects {din}x{dout}",
@@ -653,6 +664,7 @@ pub fn forward(
                     }
                     (out, Aux::None)
                 } else {
+                    kern = "f32";
                     let wq = src.weight(&wname, *site)?;
                     let mut out = arena.alloc_uninit(numel);
                     tensor::matmul_into(&mut out, &vals[node.inputs[0]], &wq, rows, din, dout);
@@ -674,6 +686,7 @@ pub fn forward(
                 let iw =
                     if with_aux || uw.is_some() { None } else { src.weight_i8(&wname, *site)? };
                 if let Some(uw) = uw {
+                    kern = "int4";
                     anyhow::ensure!(
                         uw.k == kdim && uw.n == cout,
                         "{}: u4 weight is {}x{}, program expects {kdim}x{cout}",
@@ -710,6 +723,7 @@ pub fn forward(
                     }
                     (out, Aux::None)
                 } else if let Some(iw) = iw {
+                    kern = "int8";
                     anyhow::ensure!(
                         iw.k == kdim && iw.n == cout,
                         "{}: int weight is {}x{}, program expects {kdim}x{cout}",
@@ -750,6 +764,7 @@ pub fn forward(
                     }
                     (out, Aux::None)
                 } else {
+                    kern = "f32";
                     let wq = src.weight(&wname, *site)?;
                     let mut cols = arena.alloc_uninit(plan.col_sizes[id]);
                     tensor::im2col_into(
@@ -1017,6 +1032,15 @@ pub fn forward(
                 (out, Aux::None)
             }
         };
+        if let Some(t0) = t0 {
+            let phase = if with_aux { "fwd" } else { "exec" };
+            let name = if kern.is_empty() {
+                node.op.label().to_string()
+            } else {
+                format!("{}/{}{}", node.op.label(), kern, simd_tag)
+            };
+            crate::obs::trace::record(phase, name, t0);
+        }
         debug_assert_eq!(out.len(), numel, "{}: shape/val mismatch", node.name);
         vals.push(out);
         if with_aux {

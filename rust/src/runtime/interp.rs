@@ -96,7 +96,10 @@ pub fn run(
     let src = exec::TrainParams { params, q };
 
     // ------------------------------------------------------------ forward
-    let (mut vals, aux) = exec::forward(prog, plan, &src, &input, with_grads, arena)?;
+    let (mut vals, aux) = {
+        let _fwd = crate::obs::span("train", "forward");
+        exec::forward(prog, plan, &src, &input, with_grads, arena)?
+    };
 
     let xi32: Option<&Vec<i32>> = match x {
         HostArray::I32(v) => Some(v),
@@ -106,12 +109,14 @@ pub fn run(
     // --------------------------------------------------------- loss heads
     let out_id = prog.output();
     let out_shape = &plan.shapes[out_id];
+    let loss_span = crate::obs::span("train", "loss");
     let (loss, metric, extra, mut out_cot) = match prog.task.as_str() {
         "image_cls" => image_loss(&vals[out_id], out_shape, y, with_grads)?,
         "span_qa" => span_loss(&vals[out_id], out_shape, y, with_grads)?,
         "lm" => lm_loss(&vals[out_id], out_shape, y, with_grads)?,
         other => anyhow::bail!("unknown task `{other}`"),
     };
+    drop(loss_span);
     if !with_grads {
         let logits = std::mem::take(&mut vals[out_id]);
         arena.reclaim_all(vals);
@@ -130,12 +135,15 @@ pub fn run(
     let mut cots: Vec<Vec<f32>> = (0..nodes.len()).map(|_| Vec::new()).collect();
     cots[out_id] = out_cot.take().expect("training pass produced a cotangent");
 
+    let trace_on = crate::obs::enabled();
+    let bwd_span = crate::obs::span("train", "backward");
     for i in (0..nodes.len()).rev() {
         let cot = std::mem::take(&mut cots[i]);
         if cot.is_empty() {
             continue;
         }
         let node = &nodes[i];
+        let t0 = if trace_on { Some(std::time::Instant::now()) } else { None };
         // accumulate into an input's cotangent buffer
         macro_rules! acc {
             ($j:expr, $g:expr) => {{
@@ -492,7 +500,11 @@ pub fn run(
                 arena.reclaim(cot);
             }
         }
+        if let Some(t0) = t0 {
+            crate::obs::trace::record("bwd", node.op.label().to_string(), t0);
+        }
     }
+    drop(bwd_span);
 
     let logits = std::mem::take(&mut vals[out_id]);
     arena.reclaim_all(vals);

@@ -76,6 +76,34 @@ pub enum OpKind {
     TokenPoolMean,
 }
 
+impl OpKind {
+    /// Stable op-kind label for telemetry span names and the
+    /// `geta profile` per-op table.
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpKind::Input => "Input",
+            OpKind::Embed { .. } => "Embed",
+            OpKind::Linear { .. } => "Linear",
+            OpKind::Conv2d { .. } => "Conv2d",
+            OpKind::BatchNorm { .. } => "BatchNorm",
+            OpKind::LayerNorm { .. } => "LayerNorm",
+            OpKind::Relu => "Relu",
+            OpKind::Gelu => "Gelu",
+            OpKind::ActQuant { .. } => "ActQuant",
+            OpKind::Add => "Add",
+            OpKind::MaxPool2 => "MaxPool2",
+            OpKind::GlobalAvgPool => "GlobalAvgPool",
+            OpKind::Reshape => "Reshape",
+            OpKind::ConcatCls { .. } => "ConcatCls",
+            OpKind::AddPos { .. } => "AddPos",
+            OpKind::Attention { .. } => "Attention",
+            OpKind::PatchMerge { .. } => "PatchMerge",
+            OpKind::TokenPoolCls => "TokenPoolCls",
+            OpKind::TokenPoolMean => "TokenPoolMean",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Node {
     pub name: String,

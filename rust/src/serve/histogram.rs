@@ -213,4 +213,76 @@ mod tests {
         assert_eq!(a.p99_us(), whole.p99_us());
         assert_eq!(a.max_us(), whole.max_us());
     }
+
+    #[test]
+    fn single_sample_pins_every_statistic() {
+        let mut h = LatencyHistogram::new();
+        h.record(us(1234));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min_us(), 1234.0);
+        assert_eq!(h.max_us(), 1234.0);
+        assert_eq!(h.mean_us(), 1234.0);
+        // every quantile of a one-sample histogram is that sample
+        // (bucket bounds clamp to the observed max)
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile_us(q), 1234.0, "quantile {q}");
+        }
+    }
+
+    #[test]
+    fn merge_with_disjoint_bucket_ranges() {
+        // a: all sub-10µs; b: all beyond 1s — no shared buckets
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut whole = LatencyHistogram::new();
+        for v in [2u64, 3, 5, 7, 9] {
+            a.record(us(v));
+            whole.record(us(v));
+        }
+        for v in [1_500_000u64, 2_500_000, 9_000_000] {
+            b.record(us(v));
+            whole.record(us(v));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 8);
+        assert_eq!(a.min_us(), whole.min_us());
+        assert_eq!(a.max_us(), whole.max_us());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile_us(q), whole.quantile_us(q), "quantile {q}");
+        }
+        // the low half still dominates p50; the high tail owns p99
+        assert!(a.p50_us() < 100.0, "p50 {}", a.p50_us());
+        assert!(a.p99_us() > 1e6, "p99 {}", a.p99_us());
+        // empty-into-full and full-into-empty merges are identities
+        let mut empty = LatencyHistogram::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), a.count());
+        assert_eq!(empty.p95_us(), a.p95_us());
+        a.merge(&LatencyHistogram::new());
+        assert_eq!(a.count(), 8);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_under_random_input() {
+        let mut rng = crate::util::rng::Rng::new(20260808);
+        let mut h = LatencyHistogram::new();
+        for _ in 0..5000 {
+            // log-uniform over ~7 decades, hitting many buckets plus both
+            // edge buckets
+            let exp = rng.range(-1.0, 6.5);
+            let us_f = 10f64.powf(exp);
+            h.record(Duration::from_secs_f64(us_f / 1e6));
+        }
+        assert_eq!(h.count(), 5000);
+        let mut prev = 0.0f64;
+        for q in [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let v = h.quantile_us(q);
+            assert!(v >= prev, "quantile {q}: {v} < previous {prev}");
+            prev = v;
+        }
+        assert!(h.p50_us() <= h.p95_us());
+        assert!(h.p95_us() <= h.p99_us());
+        assert!(h.p99_us() <= h.max_us());
+        assert!(h.min_us() <= h.mean_us() && h.mean_us() <= h.max_us());
+    }
 }

@@ -50,11 +50,13 @@ pub use cache::ModelCache;
 pub use histogram::LatencyHistogram;
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::obs;
 use crate::runtime::HostArray;
 use crate::tensor;
 
@@ -136,6 +138,55 @@ pub struct ServeStats {
     pub completed: u64,
     /// `infer_many` calls issued (completed ÷ batches = achieved batch).
     pub batches: u64,
+}
+
+/// The live form of [`ServeStats`]: relaxed atomics, so the shed path —
+/// which runs exactly when the service is overloaded — never takes a
+/// lock, and readers assemble a snapshot without stopping writers.
+#[derive(Debug, Default)]
+struct AtomicStats {
+    accepted: AtomicU64,
+    shed: AtomicU64,
+    completed: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl AtomicStats {
+    fn snapshot(&self) -> ServeStats {
+        ServeStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Handles into the global [`obs::metrics`] registry mirroring the
+/// server's counters (plus the live queue-depth gauge and the latency
+/// summary), so `geta serve --metrics-every` and metric snapshots see
+/// the same numbers [`Server::stats`] reports.
+struct RegistryMirror {
+    accepted: obs::metrics::Counter,
+    shed: obs::metrics::Counter,
+    completed: obs::metrics::Counter,
+    batches: obs::metrics::Counter,
+    queue_depth: obs::metrics::Gauge,
+    latency: obs::metrics::Hist,
+}
+
+impl RegistryMirror {
+    fn new() -> RegistryMirror {
+        let r = obs::metrics::global();
+        RegistryMirror {
+            accepted: r.counter("geta_serve_accepted_total"),
+            shed: r.counter("geta_serve_shed_total"),
+            completed: r.counter("geta_serve_completed_total"),
+            batches: r.counter("geta_serve_batches_total"),
+            queue_depth: r.gauge("geta_serve_queue_depth"),
+            latency: r.histogram("geta_serve_latency_us"),
+        }
+    }
 }
 
 /// A served request's answer plus its measured queue-to-completion
@@ -233,7 +284,8 @@ struct Inner {
     q: Mutex<Queue>,
     cv: Condvar,
     hist: Mutex<LatencyHistogram>,
-    stats: Mutex<ServeStats>,
+    stats: AtomicStats,
+    mirror: RegistryMirror,
 }
 
 impl Inner {
@@ -273,6 +325,7 @@ impl Inner {
             }
             let take = q.items.len().min(self.cfg.max_batch.max(1));
             let batch: Vec<Pending> = q.items.drain(..take).collect();
+            self.mirror.queue_depth.set(q.items.len() as i64);
             if !q.items.is_empty() {
                 // leftover work: hand it to a sibling before we go compute
                 self.cv.notify_one();
@@ -282,6 +335,8 @@ impl Inner {
     }
 
     fn run_batch(&self, batch: Vec<Pending>) {
+        // picked = end of each request's queue wait, start of batch compute
+        let picked = obs::enabled().then(Instant::now);
         let xs: Vec<&HostArray> = batch.iter().map(|p| &p.x).collect();
         let result = if self.serial_workers {
             tensor::serial_scope(|| self.model.infer_many(&xs))
@@ -289,10 +344,20 @@ impl Inner {
             self.model.infer_many(&xs)
         };
         let done = Instant::now();
-        {
-            let mut stats = self.stats.lock().unwrap_or_else(|e| e.into_inner());
-            stats.batches += 1;
-            stats.completed += batch.len() as u64;
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.completed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        self.mirror.batches.inc();
+        self.mirror.completed.add(batch.len() as u64);
+        if let Some(picked) = picked {
+            for p in &batch {
+                obs::trace::record_between("serve", "wait".to_string(), p.enq, picked);
+            }
+            obs::trace::record_between(
+                "serve",
+                format!("infer[{}]", batch.len()),
+                picked,
+                done,
+            );
         }
         match result {
             Ok(outs) if outs.len() == batch.len() => {
@@ -300,7 +365,11 @@ impl Inner {
                 for (p, logits) in batch.into_iter().zip(outs) {
                     let latency = done.saturating_duration_since(p.enq);
                     hist.record(latency);
+                    self.mirror.latency.record(latency);
                     p.slot.fulfill(Ok(Reply { logits, latency }));
+                }
+                if picked.is_some() {
+                    obs::trace::record_between("serve", "reply".to_string(), done, Instant::now());
                 }
             }
             Ok(outs) => {
@@ -357,7 +426,8 @@ impl Server {
             }),
             cv: Condvar::new(),
             hist: Mutex::new(LatencyHistogram::new()),
-            stats: Mutex::new(ServeStats::default()),
+            stats: AtomicStats::default(),
+            mirror: RegistryMirror::new(),
             cfg,
         });
         let workers = (0..nworkers)
@@ -382,8 +452,9 @@ impl Server {
         }
         if q.items.len() >= self.inner.cfg.queue_depth.max(1) {
             drop(q);
-            let mut stats = self.inner.stats.lock().unwrap_or_else(|e| e.into_inner());
-            stats.shed += 1;
+            // lock-free on purpose: shedding happens under overload
+            self.inner.stats.shed.fetch_add(1, Ordering::Relaxed);
+            self.inner.mirror.shed.inc();
             return Err(ServeError::QueueFull {
                 depth: self.inner.cfg.queue_depth.max(1),
             });
@@ -394,18 +465,18 @@ impl Server {
             enq: Instant::now(),
             slot: Arc::clone(&slot),
         });
+        let depth = q.items.len();
         drop(q);
-        {
-            let mut stats = self.inner.stats.lock().unwrap_or_else(|e| e.into_inner());
-            stats.accepted += 1;
-        }
+        self.inner.stats.accepted.fetch_add(1, Ordering::Relaxed);
+        self.inner.mirror.accepted.inc();
+        self.inner.mirror.queue_depth.set(depth as i64);
         self.inner.cv.notify_one();
         Ok(Ticket { slot })
     }
 
     /// Snapshot of the lifetime counters.
     pub fn stats(&self) -> ServeStats {
-        *self.inner.stats.lock().unwrap_or_else(|e| e.into_inner())
+        self.inner.stats.snapshot()
     }
 
     /// Snapshot of the latency histogram so far.
@@ -431,7 +502,7 @@ impl Server {
             h.join().expect("serve worker panicked");
         }
         ServeReport {
-            stats: *self.inner.stats.lock().unwrap_or_else(|e| e.into_inner()),
+            stats: self.inner.stats.snapshot(),
             histogram: self.inner.hist.lock().unwrap_or_else(|e| e.into_inner()).clone(),
         }
     }

@@ -16,6 +16,23 @@ pub use ops::*;
 pub use tile::{configured_threads, serial_scope, set_threads};
 pub use u4::*;
 
+/// True when the `simd` feature is compiled in **and** the running CPU
+/// supports the vector paths the kernels dispatch to (AVX2 on x86_64,
+/// NEON on aarch64). Used by the tracer to tag per-op spans so a trace
+/// records which kernel tier actually ran, not just which was compiled.
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        return std::arch::is_x86_feature_detected!("avx2");
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        return true;
+    }
+    #[allow(unreachable_code)]
+    false
+}
+
 #[derive(Debug, Clone)]
 pub struct Tensor {
     pub name: String,

@@ -5,8 +5,9 @@
 //! `geta bench` CLI subcommand. Results can be appended to a JSON log so
 //! the perf pass (EXPERIMENTS.md §Perf) has a machine-readable trail.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use crate::obs::Stopwatch;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -65,9 +66,9 @@ impl Bencher {
         }
         let mut samples = Vec::with_capacity(self.iters);
         for _ in 0..self.iters {
-            let t0 = Instant::now();
+            let sw = Stopwatch::start();
             black_box(f());
-            samples.push(t0.elapsed());
+            samples.push(sw.elapsed());
         }
         samples.sort();
         let mean = samples.iter().sum::<Duration>() / samples.len() as u32;

@@ -1,0 +1,116 @@
+//! Telemetry acceptance tests.
+//!
+//! The contract the obs subsystem ships under:
+//!   1. **Bitwise identity** — enabling the span tracer must not change a
+//!      single logit bit: all timing wraps the numeric kernels from the
+//!      outside.
+//!   2. **Coverage** — a traced inference pass emits one exec span per
+//!      executed plan node, named by op kind (and kernel kind for the GEMM
+//!      ops), and the drained events serialize to Chrome trace-event JSON
+//!      that our own parser accepts.
+//!   3. **Registry** — the global metrics registry exposes everything it
+//!      holds in Prometheus text form and as a parseable JSON snapshot.
+//!
+//! Tracing state is process-global, so the traced/untraced comparison and
+//! the span-coverage checks run inside ONE test function instead of racing
+//! across the harness's worker threads.
+
+mod common;
+
+use common::art_dir;
+use geta::util::json::Json;
+
+#[test]
+fn traced_inference_is_bitwise_identical_and_covers_the_plan() {
+    let art = geta::report::train_export(&art_dir(), "mlp_tiny", 0.05, 0.5, 8.0).unwrap();
+    let engine = geta::deploy::GetaEngine::from_container_kernel(
+        &art.container,
+        geta::deploy::KernelKind::Int8,
+    )
+    .unwrap();
+    let (_, eval) = geta::data::SynthData::for_model(engine.config(), 1, 32, 1);
+    let idxs: Vec<usize> = (0..eval.len()).collect();
+    let (x, _y) = eval.batch(&idxs);
+
+    // untraced baseline; drop anything previously buffered
+    let prev = geta::obs::set_enabled(false);
+    let base = engine.infer(&x).unwrap();
+    let _ = geta::obs::trace::drain();
+
+    // traced run over identical input
+    geta::obs::set_enabled(true);
+    let traced = engine.infer(&x).unwrap();
+    geta::obs::set_enabled(prev);
+    let events = geta::obs::trace::drain();
+
+    assert_eq!(base.len(), traced.len());
+    for (i, (a, b)) in base.iter().zip(&traced).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "logit {i} differs traced vs untraced: {a} vs {b}"
+        );
+    }
+
+    // per-node exec spans, keyed op/kernel for the GEMM ops
+    let exec: Vec<_> = events.iter().filter(|e| e.cat == "exec").collect();
+    assert!(!exec.is_empty(), "traced inference recorded no exec spans");
+    assert!(
+        exec.iter()
+            .any(|e| e.name.starts_with("Linear/int8") || e.name.starts_with("Linear/f32")),
+        "no kernel-keyed Linear span; names: {:?}",
+        exec.iter().map(|e| e.name.as_str()).collect::<Vec<_>>()
+    );
+    for e in &exec {
+        assert!(e.ts_us >= 0.0 && e.dur_us >= 0.0, "bad span bounds: {e:?}");
+    }
+
+    // the aggregate the profile table prints: every span name accounted
+    let agg = geta::obs::trace::aggregate(&events, Some("exec"));
+    let agg_calls: u64 = agg.iter().map(|r| r.calls).sum();
+    assert_eq!(agg_calls, exec.len() as u64);
+    for w in agg.windows(2) {
+        assert!(w[0].total_us >= w[1].total_us, "aggregate not sorted by total");
+    }
+
+    // drained events round-trip through the Chrome trace-event writer
+    let text = geta::obs::trace::chrome_trace_json(&events).to_string();
+    let parsed = geta::util::json::parse(&text).expect("trace JSON parses");
+    let Json::Obj(m) = parsed else {
+        panic!("trace root is not an object")
+    };
+    let Some(Json::Arr(rows)) = m.get("traceEvents") else {
+        panic!("traceEvents missing or not an array")
+    };
+    assert_eq!(rows.len(), events.len());
+}
+
+#[test]
+fn global_registry_exposes_and_snapshots() {
+    let reg = geta::obs::metrics::global();
+    reg.counter("test_obs_demo_total").add(3);
+    reg.gauge("test_obs_demo_depth").set(-2);
+    reg.histogram("test_obs_demo_us").record_us(150.0);
+
+    let text = reg.exposition();
+    assert!(text.contains("# TYPE test_obs_demo_total counter"));
+    assert!(text.contains("# TYPE test_obs_demo_depth gauge"));
+    assert!(text.contains("# TYPE test_obs_demo_us summary"));
+    assert!(text.contains("test_obs_demo_us_count 1"));
+    for line in text.lines().filter(|l| !l.starts_with('#')) {
+        let mut parts = line.rsplitn(2, ' ');
+        let val = parts.next().unwrap();
+        assert!(val.parse::<f64>().is_ok(), "unparseable sample line: {line}");
+    }
+
+    let path = std::env::temp_dir().join("geta_test_obs_snapshot.json");
+    reg.write_snapshot(&path).unwrap();
+    let doc = geta::util::json::parse_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let Json::Obj(m) = doc else {
+        panic!("snapshot root is not an object")
+    };
+    for key in ["counters", "gauges", "histograms"] {
+        assert!(matches!(m.get(key), Some(Json::Obj(_))), "missing {key}");
+    }
+}
