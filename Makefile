@@ -3,7 +3,7 @@
 # The Rust build and tests do NOT need this — the native reference backend
 # covers the hermetic path (see README.md §Backends).
 
-.PHONY: artifacts vectors test build bench-json bench-serve clean
+.PHONY: artifacts vectors test build bench-json bench-serve bench-train clean
 
 build:
 	cargo build --release
@@ -26,6 +26,14 @@ bench-json:
 # BENCH_serve.json (see README.md §Serving).
 bench-serve:
 	cargo run --release -- bench-serve --model mlp_tiny --json
+
+# training-throughput comparison: the same high-sparsity GETA run twice
+# per thread count — masked-dense vs shrink-as-you-train (executor Plan
+# rebuilt on the sliced subnet after every prune commit; bitwise
+# identical trajectories) — merged into the checked-in BENCH_train.json
+# (see README.md §Shrink-as-you-train).
+bench-train:
+	cargo run --release -- bench-train --model mlp_tiny --sparsity 0.85 --threads-sweep 1,4 --json
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts

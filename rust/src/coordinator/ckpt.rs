@@ -1,0 +1,662 @@
+//! `.getackpt` — resumable training checkpoints, in the `.geta` container
+//! style (versioned, little-endian, strict reader).
+//!
+//! A checkpoint captures *everything* a `geta train --resume` needs to
+//! continue bit-identically: the (possibly shrink-sliced) parameters, the
+//! base optimizer's momentum/moment stores and scalar step count, the
+//! learned quantizer rows, QASSO's forgetting-schedule position, the batch
+//! iterator's shuffle + RNG state, the full per-step loss history (so a
+//! resumed run can emit a complete loss file), the cumulative kept-channel
+//! slice map and the re-plan step log.
+//!
+//! Layout (all integers little-endian; `[str]` = u32 length + UTF-8;
+//! `[store]` = u32 count, then per tensor `[str]` name, u8 ndim,
+//! ndim × u32 dims, numel × f32 data):
+//!
+//! | field | type | meaning |
+//! |---|---|---|
+//! | magic | 4 bytes | `"GCKP"` |
+//! | version | u16 | format version (currently 1) |
+//! | flags | u16 | reserved, must be 0 |
+//! | model | [str] | model name (must match the resuming config) |
+//! | step / total / seed | 3 × u64 | completed steps, schedule length, seed |
+//! | params | [store] | current (possibly sliced) parameters |
+//! | optimizer | [str] + u64 + u8 + stores | name, scalar state, per-param stores |
+//! | qparams | u32 + n × 3 f32 | (d, t, q_m) per quant site |
+//! | qasso | u64, f32, u32, … | step count, b_u, group state (see below) |
+//! | batch iter | u32 + order, u64 pos, u32 bs, u64 rng, u8+u64 spare | shuffle state |
+//! | trace | u32 + rows (u64, f32, u8) | logged (step, loss, stage) rows |
+//! | losses | u32 + n × f32 | per-step loss history, steps 0..step |
+//! | kept map | u32 + entries | cumulative removed indices per tensor/axis |
+//! | replans | u32 + n × u64 | steps after which the plan was rebuilt |
+//!
+//! The reader is strict: bad magic, unknown version, nonzero flags,
+//! truncation, trailing bytes, and any cross-reference violation
+//! (optimizer stores not mirroring the parameter store, slice-map names
+//! not resolving, out-of-range stage codes or shuffle indices) are hard
+//! errors, never best-effort reads.
+
+use anyhow::{Context, Result};
+
+use crate::data::BatchIterState;
+use crate::metrics::TrainTrace;
+use crate::optim::qasso::QassoState;
+use crate::quant::QParams;
+use crate::subnet::KeptMap;
+use crate::tensor::{ParamStore, Tensor};
+
+pub const MAGIC: [u8; 4] = *b"GCKP";
+pub const VERSION: u16 = 1;
+
+/// Allocation caps guarding the strict reader against corrupt lengths.
+const MAX_NUMEL: u64 = 1 << 28;
+const MAX_DIMS: usize = 8;
+const MAX_COUNT: usize = 1 << 24;
+
+/// Stage-name table shared by writer and reader; `TrainTrace` stores
+/// `&'static str` stage labels, so codes map back into this table.
+const STAGES: [&str; 6] = ["warmup", "projection", "joint", "cooldown", "done", "train"];
+
+fn stage_code(name: &str) -> u8 {
+    STAGES.iter().position(|&s| s == name).unwrap_or(5) as u8
+}
+
+/// Everything a resumable training run checkpoints.
+#[derive(Debug, Clone)]
+pub struct TrainCkpt {
+    pub model: String,
+    /// Completed steps; the resumed run continues at this step index.
+    pub step: u64,
+    pub total_steps: u64,
+    pub seed: u64,
+    /// Current parameters, in their live (possibly shrink-sliced) shapes.
+    pub params: ParamStore,
+    pub opt_name: String,
+    pub opt_scalar: u64,
+    /// Base-optimizer per-param stores (momentum / Adam moments), in
+    /// `Optimizer::state_stores` order; empty when not yet allocated.
+    pub opt_stores: Vec<ParamStore>,
+    pub q: Vec<QParams>,
+    pub qasso: QassoState,
+    pub batch: BatchIterState,
+    pub trace: TrainTrace,
+    /// Per-step losses for steps `0..step` (resumed runs append to this,
+    /// so a finished run always has the complete curve).
+    pub losses: Vec<f32>,
+    /// Cumulative slice map in ORIGINAL dense coordinates.
+    pub kept: KeptMap,
+    /// Step counts after which the executor plan was rebuilt.
+    pub replans: Vec<u64>,
+}
+
+impl TrainCkpt {
+    // ------------------------------------------------------------ writing
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::default();
+        w.bytes(&MAGIC);
+        w.u16(VERSION);
+        w.u16(0); // flags
+        w.str(&self.model);
+        w.u64(self.step);
+        w.u64(self.total_steps);
+        w.u64(self.seed);
+        write_store(&mut w, &self.params);
+        w.str(&self.opt_name);
+        w.u64(self.opt_scalar);
+        w.u8(self.opt_stores.len() as u8);
+        for s in &self.opt_stores {
+            write_store(&mut w, s);
+        }
+        w.u32(self.q.len() as u32);
+        for qp in &self.q {
+            w.f32(qp.d);
+            w.f32(qp.t);
+            w.f32(qp.qm);
+        }
+        // qasso scheduling state
+        w.u64(self.qasso.step_count as u64);
+        w.f32(self.qasso.bu_cur);
+        w.u32(self.qasso.pruned.len() as u32);
+        for &p in &self.qasso.pruned {
+            w.u8(p as u8);
+        }
+        w.u32(self.qasso.redundant.len() as u32);
+        for &g in &self.qasso.redundant {
+            w.u32(g as u32);
+        }
+        for &g in &self.qasso.gamma {
+            w.f32(g); // length == pruned.len()
+        }
+        w.u32(self.qasso.gamma_scale.len() as u32);
+        for &s in &self.qasso.gamma_scale {
+            w.f32(s);
+        }
+        // batch iterator
+        w.u32(self.batch.order.len() as u32);
+        for &i in &self.batch.order {
+            w.u32(i as u32);
+        }
+        w.u64(self.batch.pos as u64);
+        w.u32(self.batch.bs as u32);
+        w.u64(self.batch.rng_state);
+        match self.batch.rng_spare {
+            Some(sp) => {
+                w.u8(1);
+                w.u64(sp.to_bits());
+            }
+            None => {
+                w.u8(0);
+                w.u64(0);
+            }
+        }
+        // trace rows
+        w.u32(self.trace.steps.len() as u32);
+        for i in 0..self.trace.steps.len() {
+            w.u64(self.trace.steps[i] as u64);
+            w.f32(self.trace.losses[i]);
+            w.u8(stage_code(self.trace.stages[i]));
+        }
+        // full per-step loss history
+        w.u32(self.losses.len() as u32);
+        for &l in &self.losses {
+            w.f32(l);
+        }
+        // cumulative kept map
+        w.u32(self.kept.removed.len() as u32);
+        for (name, axes) in &self.kept.removed {
+            w.str(name);
+            w.u32(axes.len() as u32);
+            for (&axis, idxs) in axes {
+                w.u32(axis as u32);
+                w.u32(idxs.len() as u32);
+                for &i in idxs {
+                    w.u32(i as u32);
+                }
+            }
+        }
+        w.u32(self.replans.len() as u32);
+        for &r in &self.replans {
+            w.u64(r);
+        }
+        w.0
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    // ------------------------------------------------------------ reading
+    pub fn from_bytes(b: &[u8]) -> Result<TrainCkpt> {
+        let mut r = Reader { b, pos: 0 };
+        let magic = r.take(4)?;
+        anyhow::ensure!(magic == MAGIC, "bad magic {magic:02x?} (not a .getackpt file)");
+        let version = r.u16()?;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported .getackpt version {version} (this build reads {VERSION})"
+        );
+        let flags = r.u16()?;
+        anyhow::ensure!(flags == 0, "unknown .getackpt flags {flags:#06x}");
+        let model = r.str()?;
+        let step = r.u64()?;
+        let total_steps = r.u64()?;
+        anyhow::ensure!(
+            step <= total_steps,
+            "checkpoint step {step} beyond schedule of {total_steps} steps"
+        );
+        let seed = r.u64()?;
+        let params = read_store(&mut r, "params")?;
+        let opt_name = r.str()?;
+        let opt_scalar = r.u64()?;
+        let n_stores = r.u8()? as usize;
+        anyhow::ensure!(n_stores <= 4, "implausible optimizer store count {n_stores}");
+        let mut opt_stores = Vec::with_capacity(n_stores);
+        for si in 0..n_stores {
+            let s = read_store(&mut r, "optimizer state")?;
+            // cross-ref: every state store mirrors the parameter store
+            anyhow::ensure!(
+                s.len() == params.len(),
+                "optimizer store {si}: {} tensors vs {} params",
+                s.len(),
+                params.len()
+            );
+            for (st, pt) in s.tensors.iter().zip(&params.tensors) {
+                anyhow::ensure!(
+                    st.name == pt.name && st.shape == pt.shape,
+                    "optimizer store {si}: `{}` {:?} does not mirror param `{}` {:?}",
+                    st.name,
+                    st.shape,
+                    pt.name,
+                    pt.shape
+                );
+            }
+            opt_stores.push(s);
+        }
+        let n_q = r.count("qparams")?;
+        let mut q = Vec::with_capacity(n_q);
+        for i in 0..n_q {
+            let qp = QParams {
+                d: r.f32()?,
+                t: r.f32()?,
+                qm: r.f32()?,
+            };
+            anyhow::ensure!(
+                qp.d.is_finite() && qp.d > 0.0 && qp.t.is_finite() && qp.qm.is_finite(),
+                "qparam {i}: degenerate values {qp:?}"
+            );
+            q.push(qp);
+        }
+        let q_step_count = r.u64()? as usize;
+        let bu_cur = r.f32()?;
+        let n_groups = r.count("groups")?;
+        let mut pruned = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            pruned.push(r.u8()? != 0);
+        }
+        let n_red = r.count("redundant groups")?;
+        let mut redundant = Vec::with_capacity(n_red);
+        for i in 0..n_red {
+            let g = r.u32()? as usize;
+            anyhow::ensure!(
+                g < n_groups,
+                "redundant[{i}] = {g} out of range for {n_groups} groups"
+            );
+            redundant.push(g);
+        }
+        let mut gamma = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            gamma.push(r.f32()?);
+        }
+        let n_scale = r.count("gamma scales")?;
+        let mut gamma_scale = Vec::with_capacity(n_scale);
+        for _ in 0..n_scale {
+            gamma_scale.push(r.f32()?);
+        }
+        let n_order = r.count("shuffle order")?;
+        let mut order = Vec::with_capacity(n_order);
+        for i in 0..n_order {
+            let v = r.u32()? as usize;
+            anyhow::ensure!(
+                v < n_order,
+                "shuffle order[{i}] = {v} out of range for {n_order} samples"
+            );
+            order.push(v);
+        }
+        let pos = r.u64()? as usize;
+        anyhow::ensure!(
+            pos <= n_order,
+            "shuffle position {pos} beyond order of {n_order}"
+        );
+        let bs = r.u32()? as usize;
+        let rng_state = r.u64()?;
+        let has_spare = r.u8()?;
+        anyhow::ensure!(has_spare <= 1, "bad rng spare flag {has_spare}");
+        let spare_bits = r.u64()?;
+        let rng_spare = (has_spare == 1).then(|| f64::from_bits(spare_bits));
+        let n_rows = r.count("trace rows")?;
+        let mut trace = TrainTrace::default();
+        for i in 0..n_rows {
+            let s = r.u64()? as usize;
+            let l = r.f32()?;
+            let code = r.u8()? as usize;
+            let stage = *STAGES
+                .get(code)
+                .with_context(|| format!("trace row {i}: unknown stage code {code}"))?;
+            trace.push(s, l, stage);
+        }
+        let n_losses = r.count("losses")?;
+        anyhow::ensure!(
+            n_losses as u64 == step,
+            "loss history has {n_losses} entries for {step} completed steps"
+        );
+        let mut losses = Vec::with_capacity(n_losses);
+        for _ in 0..n_losses {
+            losses.push(r.f32()?);
+        }
+        let n_kept = r.count("kept-map tensors")?;
+        let mut kept = KeptMap::default();
+        for _ in 0..n_kept {
+            let name = r.str()?;
+            anyhow::ensure!(
+                params.get(&name).is_some(),
+                "slice map names unknown tensor `{name}`"
+            );
+            let n_axes = r.count("kept-map axes")?;
+            let axes = kept.removed.entry(name.clone()).or_default();
+            for _ in 0..n_axes {
+                let axis = r.u32()? as usize;
+                anyhow::ensure!(axis < MAX_DIMS, "`{name}`: slice axis {axis}");
+                let n_idx = r.count("removed indices")?;
+                let mut idxs = Vec::with_capacity(n_idx);
+                let mut prev: Option<usize> = None;
+                for _ in 0..n_idx {
+                    let i = r.u32()? as usize;
+                    anyhow::ensure!(
+                        prev.map(|p| p < i).unwrap_or(true),
+                        "`{name}` axis {axis}: removed indices not strictly ascending"
+                    );
+                    prev = Some(i);
+                    idxs.push(i);
+                }
+                axes.insert(axis, idxs);
+            }
+        }
+        let n_replans = r.count("replans")?;
+        let mut replans = Vec::with_capacity(n_replans);
+        for _ in 0..n_replans {
+            replans.push(r.u64()?);
+        }
+        anyhow::ensure!(
+            r.pos == r.b.len(),
+            "trailing bytes: {} past the end of the checkpoint",
+            r.b.len() - r.pos
+        );
+        Ok(TrainCkpt {
+            model,
+            step,
+            total_steps,
+            seed,
+            params,
+            opt_name,
+            opt_scalar,
+            opt_stores,
+            q,
+            qasso: QassoState {
+                step_count: q_step_count,
+                bu_cur,
+                pruned,
+                redundant,
+                gamma,
+                gamma_scale,
+            },
+            batch: BatchIterState {
+                order,
+                pos,
+                bs,
+                rng_state,
+                rng_spare,
+            },
+            trace,
+            losses,
+            kept,
+            replans,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TrainCkpt> {
+        let b = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        TrainCkpt::from_bytes(&b)
+    }
+}
+
+fn write_store(w: &mut Writer, s: &ParamStore) {
+    w.u32(s.len() as u32);
+    for t in &s.tensors {
+        w.str(&t.name);
+        w.u8(t.shape.len() as u8);
+        for &d in &t.shape {
+            w.u32(d as u32);
+        }
+        for &x in &t.data {
+            w.f32(x);
+        }
+    }
+}
+
+fn read_store(r: &mut Reader, what: &str) -> Result<ParamStore> {
+    let n = r.count(what)?;
+    let mut s = ParamStore::new();
+    for _ in 0..n {
+        let name = r.str()?;
+        anyhow::ensure!(
+            s.get(&name).is_none(),
+            "{what}: duplicate tensor `{name}`"
+        );
+        let ndim = r.u8()? as usize;
+        anyhow::ensure!(ndim <= MAX_DIMS, "{what}: tensor `{name}` has {ndim} dims");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let numel = shape.iter().map(|&d| d as u64).product::<u64>();
+        anyhow::ensure!(
+            numel <= MAX_NUMEL,
+            "{what}: tensor `{name}` numel {numel} too large"
+        );
+        let raw = r.take(numel as usize * 4)?;
+        let mut data = Vec::with_capacity(numel as usize);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        s.push(Tensor::from_vec(&name, &shape, data));
+    }
+    Ok(s)
+}
+
+#[derive(Default)]
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn bytes(&mut self, b: &[u8]) {
+        self.0.extend_from_slice(b);
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.b.len(),
+            "truncated .getackpt file: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.b.len() - self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n <= MAX_COUNT, "implausible string length {n}");
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|e| anyhow::anyhow!("bad UTF-8 string: {e}"))
+    }
+    /// A u32 list-length field with a sanity bound.
+    fn count(&mut self, what: &str) -> Result<usize> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n <= MAX_COUNT, "implausible {what} count {n}");
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainCkpt {
+        let mut params = ParamStore::new();
+        params.push(Tensor::from_vec("w", &[2, 3], vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]));
+        params.push(Tensor::from_vec("b", &[3], vec![-1.0, 0.0, 1.0]));
+        let mut vel = ParamStore::new();
+        vel.push(Tensor::from_vec("w", &[2, 3], vec![0.0; 6]));
+        vel.push(Tensor::from_vec("b", &[3], vec![0.5, 0.5, 0.5]));
+        let mut trace = TrainTrace::default();
+        trace.push(0, 2.5, "warmup");
+        trace.push(5, 1.5, "joint");
+        let mut kept = KeptMap::default();
+        kept.removed
+            .entry("w".to_string())
+            .or_default()
+            .insert(1, vec![0, 2]);
+        TrainCkpt {
+            model: "mlp_tiny".into(),
+            step: 6,
+            total_steps: 40,
+            seed: 17,
+            params,
+            opt_name: "sgd".into(),
+            opt_scalar: 0,
+            opt_stores: vec![vel],
+            q: vec![QParams::init(1.0, 8.0), QParams::init(0.5, 6.0)],
+            qasso: QassoState {
+                step_count: 6,
+                bu_cur: 9.5,
+                pruned: vec![true, false, true],
+                redundant: vec![1],
+                gamma: vec![0.0, 0.25, 0.0],
+                gamma_scale: vec![1.0, 0.5],
+            },
+            batch: BatchIterState {
+                order: vec![2, 0, 1, 3],
+                pos: 2,
+                bs: 2,
+                rng_state: 0xDEADBEEF,
+                rng_spare: Some(-0.37),
+            },
+            trace,
+            losses: vec![2.5, 2.2, 2.0, 1.8, 1.6, 1.5],
+            kept,
+            replans: vec![4],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_lossless() {
+        let a = sample();
+        let b = TrainCkpt::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(b.model, a.model);
+        assert_eq!((b.step, b.total_steps, b.seed), (a.step, a.total_steps, a.seed));
+        for (x, y) in b.params.tensors.iter().zip(&a.params.tensors) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.shape, y.shape);
+            let xb: Vec<u32> = x.data.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb);
+        }
+        assert_eq!(b.opt_stores.len(), 1);
+        assert_eq!(b.opt_stores[0].tensors[1].data, a.opt_stores[0].tensors[1].data);
+        assert_eq!(b.q.len(), 2);
+        assert_eq!(b.q[1].d.to_bits(), a.q[1].d.to_bits());
+        assert_eq!(b.qasso.pruned, a.qasso.pruned);
+        assert_eq!(b.qasso.redundant, a.qasso.redundant);
+        assert_eq!(b.qasso.bu_cur.to_bits(), a.qasso.bu_cur.to_bits());
+        assert_eq!(b.batch.order, a.batch.order);
+        assert_eq!(b.batch.rng_state, a.batch.rng_state);
+        assert_eq!(
+            b.batch.rng_spare.unwrap().to_bits(),
+            a.batch.rng_spare.unwrap().to_bits()
+        );
+        assert_eq!(b.trace.steps, a.trace.steps);
+        assert_eq!(b.trace.stages, a.trace.stages);
+        assert_eq!(b.losses, a.losses);
+        assert_eq!(b.kept.removed, a.kept.removed);
+        assert_eq!(b.replans, a.replans);
+    }
+
+    #[test]
+    fn reader_rejects_bad_magic() {
+        let mut b = sample().to_bytes();
+        b[0] = b'X';
+        let err = TrainCkpt::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_unknown_version() {
+        let mut b = sample().to_bytes();
+        b[4] = 99;
+        let err = TrainCkpt::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_truncation_at_every_length() {
+        let full = sample().to_bytes();
+        // every strict prefix must fail, never panic or best-effort parse
+        for cut in [6, 20, full.len() / 3, full.len() / 2, full.len() - 1] {
+            let err = TrainCkpt::from_bytes(&full[..cut]).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated") || err.contains("need"),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn reader_rejects_trailing_bytes() {
+        let mut b = sample().to_bytes();
+        b.push(0);
+        let err = TrainCkpt::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_optimizer_store_mismatch() {
+        let mut c = sample();
+        c.opt_stores[0].tensors[0].shape = vec![3, 2];
+        let err = TrainCkpt::from_bytes(&c.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("mirror"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_unknown_slice_map_tensor() {
+        let mut c = sample();
+        let idxs = c.kept.removed.remove("w").unwrap();
+        c.kept.removed.insert("nope".into(), idxs);
+        let err = TrainCkpt::from_bytes(&c.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("unknown tensor"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_loss_history_mismatch() {
+        let mut c = sample();
+        c.losses.pop();
+        let err = TrainCkpt::from_bytes(&c.to_bytes()).unwrap_err().to_string();
+        assert!(err.contains("loss history"), "{err}");
+    }
+}

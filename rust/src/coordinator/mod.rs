@@ -23,6 +23,8 @@
 //! `Compressor` trait, so every method in every paper table runs on an
 //! identical substrate.
 
+pub mod ckpt;
+
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
@@ -32,8 +34,9 @@ use crate::metrics::{self, bops::LayerCost, EvalAccum, TrainTrace};
 use crate::optim::qasso::{Qasso, StageMask};
 use crate::optim::make_optimizer;
 use crate::quant::QParams;
-use crate::runtime::Backend;
-use crate::subnet;
+use crate::runtime::lowering::{OpKind, Program};
+use crate::runtime::{Backend, NativeEngine};
+use crate::subnet::{self, KeptMap};
 use crate::tensor::ParamStore;
 
 /// Pluggable compression method (GETA or a baseline).
@@ -67,6 +70,14 @@ pub trait Compressor {
 
     fn stage_name(&self, _step: usize) -> &'static str {
         "train"
+    }
+
+    /// The QASSO state, when this method is GETA — the shrink-as-you-train
+    /// re-planner and the checkpoint path need its forgetting schedule,
+    /// prune groups and base-optimizer state. Baselines keep `None` and
+    /// train dense without checkpoint support.
+    fn qasso_mut(&mut self) -> Option<&mut Qasso> {
+        None
     }
 }
 
@@ -124,6 +135,29 @@ impl Compressor for GetaCompressor {
     fn stage_name(&self, _step: usize) -> &'static str {
         self.qasso.stage().name()
     }
+
+    fn qasso_mut(&mut self) -> Option<&mut Qasso> {
+        Some(&mut self.qasso)
+    }
+}
+
+/// Knobs for [`Trainer::run_trained_opts`] — the shrink-as-you-train
+/// re-planner and the `.getackpt` checkpoint cadence. `Default` reproduces
+/// the plain dense-masked [`Trainer::run_trained`] loop exactly.
+#[derive(Debug, Clone, Default)]
+pub struct TrainOpts {
+    /// Rebuild the executor Plan on the sliced subnet after every prune
+    /// commit (bitwise identical to dense-masked training; see module docs).
+    pub replan: bool,
+    /// Write `.getackpt` checkpoints to this path.
+    pub ckpt: Option<std::path::PathBuf>,
+    /// Checkpoint every N completed steps (0 = only at halt/finish).
+    pub ckpt_every: usize,
+    /// Resume from a `.getackpt` written by a previous run.
+    pub resume: Option<std::path::PathBuf>,
+    /// Stop after this many completed steps (writes a final checkpoint
+    /// when `ckpt` is set); the run reports `halted` instead of evaluating.
+    pub halt_at: Option<usize>,
 }
 
 /// Result of one full run — the row every paper table is built from.
@@ -146,11 +180,22 @@ pub struct RunResult {
 }
 
 /// A finished run plus the trained state the deployment path consumes.
+/// `params` is always in DENSE coordinates (shrink-sliced tensors are
+/// zero-expanded back), so report/export/deploy run unchanged.
 #[derive(Debug)]
 pub struct Trained {
     pub result: RunResult,
     pub params: ParamStore,
     pub q: Vec<QParams>,
+    /// Per-step training losses for every step of the run (resumed runs
+    /// include the pre-resume history, so the curve is always complete).
+    pub losses: Vec<f32>,
+    /// Step counts after which the executor plan was rebuilt on the
+    /// shrunken subnet (empty for dense-masked runs).
+    pub replans: Vec<usize>,
+    /// True when the run stopped at `TrainOpts::halt_at` before the
+    /// schedule finished — `result` then carries only the trace.
+    pub halted: bool,
 }
 
 pub struct Trainer {
@@ -191,25 +236,122 @@ impl Trainer {
     /// and quantizer rows — the inputs the deployment path (`geta export`,
     /// `deploy::export_to_file`) needs to build a `.geta` artifact.
     pub fn run_trained(&self, method: &mut dyn Compressor) -> Result<Trained> {
-        let mut params = self.engine.init_params(self.exp.seed);
-        let mut q = self
-            .engine
-            .init_qparams(&params, self.exp.qasso.init_bits);
-        let sched = self.exp.schedule();
-        let mut iter = BatchIter::new(self.train_data.len(), self.batch_size(), self.exp.seed + 7);
-        let mut trace = TrainTrace::default();
+        self.run_trained_opts(method, &TrainOpts::default())
+    }
+
+    /// The full training loop with shrink-as-you-train re-planning and
+    /// `.getackpt` checkpointing (see [`TrainOpts`]).
+    ///
+    /// With `replan` set, every QASSO prune commit triggers a re-plan:
+    /// the cumulative kept map is rebuilt from the ORIGINAL groups, the
+    /// live parameters and base-optimizer stores are sliced to kept
+    /// channels, QASSO's group index is rebound, and a fresh executor
+    /// Plan is built on the shrunken program. The switch is bit-exact —
+    /// pruned groups' output-side members are exact zeros, every GEMM
+    /// accumulates in a strict k-ascending f64 fold, and elementwise
+    /// optimizer updates have no cross terms — so losses, eval logits and
+    /// all surviving parameter/optimizer values stay bitwise identical to
+    /// the dense-masked run (CI diffs both at 1 and 4 threads).
+    pub fn run_trained_opts(
+        &self,
+        method: &mut dyn Compressor,
+        opts: &TrainOpts,
+    ) -> Result<Trained> {
         let total = method.total_steps();
-        for step in 0..total {
+        let sched = self.exp.schedule();
+        let needs_qasso = opts.ckpt.is_some() || opts.resume.is_some();
+        anyhow::ensure!(
+            !needs_qasso || method.qasso_mut().is_some(),
+            "--ckpt/--resume support the GETA compressor only (method `{}` has no \
+             checkpointable state)",
+            method.name()
+        );
+        // shrink support is gated on (a) a native backend exposing its
+        // lowered program and (b) an op set whose kernels are proven
+        // slice-invariant (LayerNorm divides by channel count, so
+        // transformers train dense-masked).
+        let orig_program = self.engine.as_native().map(|e| e.program().clone());
+        let can_shrink = orig_program.as_ref().map(|p| replan_supported(p)).unwrap_or(false);
+        if opts.replan && !can_shrink && self.verbose {
+            println!("  --replan: program not slice-invariant here; training dense-masked");
+        }
+
+        // ---------------- state: fresh, or restored from a checkpoint
+        let mut params;
+        let mut q;
+        let mut iter;
+        let mut trace;
+        let mut losses: Vec<f32>;
+        let mut replans: Vec<usize>;
+        let mut kept = KeptMap::default();
+        let mut shrunk: Option<NativeEngine> = None;
+        let mut start = 0usize;
+        if let Some(path) = &opts.resume {
+            let ck = ckpt::TrainCkpt::load(path)?;
+            self.validate_ckpt(&ck, method, total)?;
+            start = ck.step as usize;
+            params = ck.params;
+            q = ck.q;
+            iter = BatchIter::from_state(ck.batch);
+            trace = ck.trace;
+            losses = ck.losses;
+            replans = ck.replans.iter().map(|&r| r as usize).collect();
+            kept = ck.kept;
+            let qasso = method.qasso_mut().expect("validated above");
+            qasso.restore_ckpt_state(ck.qasso);
+            qasso.base_optimizer_mut().set_scalar_state(ck.opt_scalar);
+            qasso.base_optimizer_mut().set_state_stores(ck.opt_stores);
+            if !kept.removed.is_empty() {
+                qasso.rebind(&kept, &params);
+                let prog = orig_program.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "checkpoint holds a sliced subnet but backend `{}` cannot re-plan",
+                        self.engine.platform()
+                    )
+                })?;
+                let sliced_prog = subnet::propagate_slices(prog, &params)?;
+                shrunk = Some(NativeEngine::with_program(
+                    self.engine.manifest().clone(),
+                    sliced_prog,
+                ));
+            }
+            if self.verbose {
+                println!(
+                    "  resumed {} at step {start}/{total} ({} re-plans so far)",
+                    path.display(),
+                    replans.len()
+                );
+            }
+        } else {
+            params = self.engine.init_params(self.exp.seed);
+            q = self.engine.init_qparams(&params, self.exp.qasso.init_bits);
+            iter = BatchIter::new(self.train_data.len(), self.batch_size(), self.exp.seed + 7);
+            trace = TrainTrace::default();
+            losses = Vec::with_capacity(total);
+            replans = Vec::new();
+        }
+        let mut pruned_seen = method
+            .qasso_mut()
+            .map(|qa| qa.pruned_count())
+            .unwrap_or(0);
+
+        // ---------------- the step loop
+        for step in start..total {
             let idxs = iter.next_batch();
             let (x, y) = self.train_data.batch(&idxs);
+            let live: &dyn Backend = match &shrunk {
+                Some(e) => e,
+                None => self.engine.as_ref(),
+            };
             let out = {
                 let _g = crate::obs::span("train", "train_step");
-                self.engine.train_step(&params, &q, &x, &y)?
+                live.train_step(&params, &q, &x, &y)?
             };
             {
                 let _g = crate::obs::span("train", "optim_step");
                 method.step(&mut params, &mut q, &out.grads, &out.qgrads, sched.lr(step), step);
             }
+            losses.push(out.loss);
             if step % self.exp.log_every == 0 || step + 1 == total {
                 trace.push(step, out.loss, method.stage_name(step));
                 if self.verbose {
@@ -222,10 +364,204 @@ impl Trainer {
                     );
                 }
             }
+            // re-plan after a prune commit: the NEXT step runs shrunken
+            if let Some(qasso) = method.qasso_mut() {
+                let live_groups = qasso.n_groups() - qasso.pruned_count();
+                crate::obs::metrics::global()
+                    .gauge("geta_train_live_groups")
+                    .set(live_groups as i64);
+                if opts.replan && can_shrink && qasso.pruned_count() > pruned_seen {
+                    pruned_seen = qasso.pruned_count();
+                    match replan(
+                        orig_program.as_ref().expect("can_shrink implies native"),
+                        self.engine.manifest(),
+                        qasso,
+                        &mut params,
+                        &kept,
+                    ) {
+                        Ok((new_kept, engine)) => {
+                            kept = new_kept;
+                            shrunk = Some(engine);
+                            replans.push(step + 1);
+                            if self.verbose {
+                                println!(
+                                    "  [{:>5}/{total}] re-plan: {} live groups, {} params",
+                                    step + 1,
+                                    live_groups,
+                                    params.total_params()
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            // safe fallback: keep training dense-masked
+                            eprintln!("re-plan at step {} failed ({e:#}); staying dense", step + 1);
+                        }
+                    }
+                }
+            }
+            // checkpoint cadence + halt
+            let done = step + 1;
+            if let Some(path) = &opts.ckpt {
+                let due = (opts.ckpt_every > 0 && done % opts.ckpt_every == 0)
+                    || opts.halt_at == Some(done)
+                    || done == total;
+                if due {
+                    self.save_ckpt(path, method, done, total, &params, &q, &iter, &trace, &losses, &kept, &replans)?;
+                }
+            }
+            if opts.halt_at == Some(done) && done < total {
+                let result = RunResult {
+                    method: method.name(),
+                    model: self.exp.model.clone(),
+                    accuracy: 0.0,
+                    em: None,
+                    f1: None,
+                    per_family: vec![],
+                    rel_bops: 0.0,
+                    avg_bits: Qasso::avg_bits(&q) as f64,
+                    group_sparsity: 0.0,
+                    param_sparsity: 0.0,
+                    final_loss: trace.tail_mean(3),
+                    trace,
+                };
+                let params = expand_store(&kept, &params);
+                return Ok(Trained {
+                    result,
+                    params,
+                    q,
+                    losses,
+                    replans,
+                    halted: true,
+                });
+            }
         }
+        // hand dense-shaped params to finalize/report/export
+        let mut params = expand_store(&kept, &params);
         method.finalize(&mut params, &mut q);
         let result = self.report(method, &params, &q, trace)?;
-        Ok(Trained { result, params, q })
+        Ok(Trained {
+            result,
+            params,
+            q,
+            losses,
+            replans,
+            halted: false,
+        })
+    }
+
+    /// Cross-check a loaded checkpoint against this trainer + method
+    /// before restoring any state.
+    fn validate_ckpt(
+        &self,
+        ck: &ckpt::TrainCkpt,
+        method: &mut dyn Compressor,
+        total: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            ck.model == self.exp.model,
+            "checkpoint is for model `{}`, not `{}`",
+            ck.model,
+            self.exp.model
+        );
+        anyhow::ensure!(
+            ck.total_steps as usize == total,
+            "checkpoint schedule has {} steps, this config has {total}",
+            ck.total_steps
+        );
+        anyhow::ensure!(
+            ck.seed == self.exp.seed,
+            "checkpoint seed {} vs config seed {}",
+            ck.seed,
+            self.exp.seed
+        );
+        let qsites = self.engine.manifest().qsites.len();
+        anyhow::ensure!(
+            ck.q.len() == qsites,
+            "checkpoint has {} quant sites, model has {qsites}",
+            ck.q.len()
+        );
+        let names: Vec<&str> = self
+            .engine
+            .manifest()
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        anyhow::ensure!(
+            ck.params.len() == names.len()
+                && ck.params.tensors.iter().zip(&names).all(|(t, n)| t.name == *n),
+            "checkpoint parameter names do not match model `{}`",
+            self.exp.model
+        );
+        let qasso = method.qasso_mut().expect("checked by caller");
+        anyhow::ensure!(
+            ck.qasso.pruned.len() == qasso.n_groups(),
+            "checkpoint has {} prune groups, model has {}",
+            ck.qasso.pruned.len(),
+            qasso.n_groups()
+        );
+        anyhow::ensure!(
+            ck.qasso.gamma_scale.len() == qsites,
+            "checkpoint has {} gamma scales, model has {qsites} sites",
+            ck.qasso.gamma_scale.len()
+        );
+        anyhow::ensure!(
+            ck.opt_name == qasso.base_optimizer().name(),
+            "checkpoint optimizer `{}` vs configured `{}`",
+            ck.opt_name,
+            qasso.base_optimizer().name()
+        );
+        anyhow::ensure!(
+            ck.batch.order.len() == self.train_data.len() && ck.batch.bs == self.batch_size(),
+            "checkpoint batch state ({} samples, bs {}) does not match data ({} samples, bs {})",
+            ck.batch.order.len(),
+            ck.batch.bs,
+            self.train_data.len(),
+            self.batch_size()
+        );
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn save_ckpt(
+        &self,
+        path: &std::path::Path,
+        method: &mut dyn Compressor,
+        done: usize,
+        total: usize,
+        params: &ParamStore,
+        q: &[QParams],
+        iter: &BatchIter,
+        trace: &TrainTrace,
+        losses: &[f32],
+        kept: &KeptMap,
+        replans: &[usize],
+    ) -> Result<()> {
+        let _g = crate::obs::span("train", "checkpoint");
+        let qasso = method.qasso_mut().expect("checked at loop entry");
+        let ck = ckpt::TrainCkpt {
+            model: self.exp.model.clone(),
+            step: done as u64,
+            total_steps: total as u64,
+            seed: self.exp.seed,
+            params: params.clone(),
+            opt_name: qasso.base_optimizer().name().to_string(),
+            opt_scalar: qasso.base_optimizer().scalar_state(),
+            opt_stores: qasso
+                .base_optimizer()
+                .state_stores()
+                .into_iter()
+                .cloned()
+                .collect(),
+            q: q.to_vec(),
+            qasso: qasso.ckpt_state(),
+            batch: iter.state(),
+            trace: trace.clone(),
+            losses: losses.to_vec(),
+            kept: kept.clone(),
+            replans: replans.iter().map(|&r| r as u64).collect(),
+        };
+        ck.write(path)
     }
 
     fn report(
@@ -338,4 +674,77 @@ impl Trainer {
             }
         }
     }
+}
+
+/// True when every op in the program has a slice-invariant kernel: dropping
+/// exact-zero channels cannot change a bit of any output. LayerNorm (and
+/// anything else normalizing by channel COUNT) is excluded — transformer
+/// families keep training dense-masked.
+pub fn replan_supported(prog: &Program) -> bool {
+    prog.nodes.iter().all(|n| {
+        matches!(
+            n.op,
+            OpKind::Input
+                | OpKind::Linear { .. }
+                | OpKind::Conv2d { .. }
+                | OpKind::BatchNorm { .. }
+                | OpKind::Relu
+                | OpKind::ActQuant { .. }
+                | OpKind::Add
+                | OpKind::MaxPool2
+                | OpKind::GlobalAvgPool
+                | OpKind::Reshape
+        )
+    })
+}
+
+/// Zero-expand every tensor of a (possibly sliced) store back to dense
+/// coordinates. A no-op clone when the kept map is empty.
+fn expand_store(kept: &KeptMap, params: &ParamStore) -> ParamStore {
+    let mut s = ParamStore::new();
+    for t in &params.tensors {
+        s.push(kept.expand(t));
+    }
+    s
+}
+
+/// One shrink re-plan. Builds the new cumulative kept map from the
+/// ORIGINAL groups (monotone: old removed ⊆ new removed, so
+/// `slice(expand(x))` is an exact incremental slice), slices params into a
+/// fresh store, validates coherence via `propagate_slices`, and only then
+/// commits: params and base-optimizer stores swap to the sliced shapes,
+/// QASSO rebinds its group index, and a fresh Plan-bearing engine is
+/// returned. On any error nothing has been mutated — the caller stays on
+/// the dense plan.
+fn replan(
+    prog: &Program,
+    manifest: &crate::runtime::Manifest,
+    qasso: &mut Qasso,
+    params: &mut ParamStore,
+    kept_old: &KeptMap,
+) -> Result<(KeptMap, NativeEngine)> {
+    let fin = crate::obs::span("replan", "finalize");
+    let new_kept = KeptMap::from_groups(qasso.orig_groups(), qasso.pruned_mask());
+    drop(fin);
+    let sl = crate::obs::span("replan", "slice");
+    let mut sliced = ParamStore::new();
+    for t in &params.tensors {
+        sliced.push(new_kept.slice(&kept_old.expand(t)));
+    }
+    drop(sl);
+    let rb = crate::obs::span("replan", "rebuild");
+    let new_prog = subnet::propagate_slices(prog, &sliced)?;
+    let engine = NativeEngine::with_program(manifest.clone(), new_prog);
+    // ---- fallible work done; commit
+    *params = sliced;
+    for store in qasso.base_optimizer_mut().state_stores_mut() {
+        let mut ns = ParamStore::new();
+        for t in &store.tensors {
+            ns.push(new_kept.slice(&kept_old.expand(t)));
+        }
+        *store = ns;
+    }
+    qasso.rebind(&new_kept, params);
+    drop(rb);
+    Ok((new_kept, engine))
 }

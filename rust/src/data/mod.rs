@@ -328,6 +328,41 @@ impl BatchIter {
     pub fn eval_batches(n: usize, bs: usize) -> Vec<Vec<usize>> {
         (0..n / bs).map(|b| (b * bs..(b + 1) * bs).collect()).collect()
     }
+
+    /// Full iterator state for checkpointing: the in-flight epoch order,
+    /// the cursor, and the shuffle RNG. [`BatchIter::from_state`] rebuilds
+    /// an iterator that emits exactly the batches this one would have.
+    pub fn state(&self) -> BatchIterState {
+        let (rng_state, rng_spare) = self.rng.state();
+        BatchIterState {
+            order: self.order.clone(),
+            pos: self.pos,
+            bs: self.bs,
+            rng_state,
+            rng_spare,
+        }
+    }
+
+    /// Rebuild an iterator from [`BatchIter::state`] output.
+    pub fn from_state(s: BatchIterState) -> BatchIter {
+        BatchIter {
+            order: s.order,
+            pos: s.pos,
+            bs: s.bs,
+            rng: Rng::from_state(s.rng_state, s.rng_spare),
+        }
+    }
+}
+
+/// Serializable snapshot of a [`BatchIter`] (the `.getackpt` RNG-state
+/// section).
+#[derive(Debug, Clone)]
+pub struct BatchIterState {
+    pub order: Vec<usize>,
+    pub pos: usize,
+    pub bs: usize,
+    pub rng_state: u64,
+    pub rng_spare: Option<f64>,
 }
 
 /// Sanity helper: does a batch match the manifest's spec?

@@ -3,6 +3,15 @@
 //! Subcommands:
 //!   geta graph  --model <name>                 inspect QADG + search space
 //!   geta train  --model <name> [--sparsity ..] run GETA on one model
+//!                                              (--replan: shrink-as-you-train —
+//!                                              rebuild the executor plan on the
+//!                                              sliced subnet at every prune
+//!                                              commit, bitwise identical to the
+//!                                              masked-dense loop; --ckpt/
+//!                                              --ckpt-every/--halt-at/--resume:
+//!                                              .getackpt checkpointing;
+//!                                              --losses/--logits: Debug-format
+//!                                              determinism probes)
 //!   geta export --model <name> [--out f.geta]  train + write a .geta artifact
 //!   geta infer  --file f.geta [--int8|--int4]  run the packed inference engine
 //!                                              (--int8: integer-domain GEMMs on
@@ -21,6 +30,10 @@
 //!                                              over RPS x batch-window x workers
 //!                                              (--json: BENCH_serve.json at repo
 //!                                              root)
+//!   geta bench-train --model <name> [--json]   training throughput, masked-dense
+//!                                              vs shrink-as-you-train, over
+//!                                              --threads-sweep (--json:
+//!                                              BENCH_train.json at repo root)
 //!   geta profile --model <m> [--int8|--int4]   per-op self-time table (op x
 //!                                              kernel) from a traced inference
 //!                                              pass, plus a Chrome trace-event
@@ -102,6 +115,7 @@ fn main() -> Result<()> {
         Some("bench-infer") => cmd_bench_infer(&a),
         Some("serve") => cmd_serve(&a),
         Some("bench-serve") => cmd_bench_serve(&a),
+        Some("bench-train") => cmd_bench_train(&a),
         Some("profile") => cmd_profile(&a),
         Some("repro") => cmd_repro(&a),
         Some("bench") => cmd_bench(&a),
@@ -117,9 +131,13 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "geta — joint structured pruning + quantization-aware training\n\n\
-                 usage: geta <models|graph|train|export|infer|bench-infer|serve|bench-serve|profile|repro|bench> [options]\n\
+                 usage: geta <models|graph|train|export|infer|bench-infer|serve|bench-serve|bench-train|profile|repro|bench> [options]\n\
                    geta graph --model vgg7_mini\n\
                    geta train --model resnet_mini --sparsity 0.35 --verbose\n\
+                   geta train --model mlp_tiny --sparsity 0.85 --replan --losses losses.txt\n\
+                   geta train --model mlp_tiny --ckpt run.getackpt --halt-at 120\n\
+                   geta train --model mlp_tiny --resume run.getackpt --replan\n\
+                   geta bench-train --model mlp_tiny --sparsity 0.85 --threads-sweep 1,4 --json\n\
                    geta export --model resnet_mini --sparsity 0.5 --out resnet.geta\n\
                    geta infer --file resnet.geta --n 256 --threads 4 [--int8|--int4]\n\
                    geta bench-infer --model resnet_mini --iters 10 --json\n\
@@ -219,14 +237,77 @@ fn cmd_train(a: &Args) -> Result<()> {
     exp.apply_args(a);
     let mut t = Trainer::new(&art_dir(a), exp)?;
     t.verbose = a.flag("verbose");
+    let opts = geta::coordinator::TrainOpts {
+        replan: a.flag("replan"),
+        ckpt: a.opt("ckpt").map(std::path::PathBuf::from),
+        ckpt_every: a.usize_or("ckpt-every", 0),
+        resume: a.opt("resume").map(std::path::PathBuf::from),
+        halt_at: a
+            .opt("halt-at")
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--halt-at `{s}` is not a number"))
+            })
+            .transpose()?,
+    };
     println!(
-        "training {model} on {} samples (platform {}), {} steps",
+        "training {model} on {} samples (platform {}), {} steps{}{}",
         t.train_data.len(),
         t.engine.platform(),
-        t.exp.total_steps()
+        t.exp.total_steps(),
+        if opts.replan { " [shrink-as-you-train]" } else { "" },
+        match &opts.resume {
+            Some(p) => format!(" [resuming from {}]", p.display()),
+            None => String::new(),
+        },
     );
     let mut geta_c = GetaCompressor::new(&t.engine, &t.exp, StageMask::default())?;
-    let r = t.run(&mut geta_c)?;
+    let trained = t.run_trained_opts(&mut geta_c, &opts)?;
+    // --losses <path>: the full per-step loss curve, one Debug-formatted
+    // f32 per line (shortest round-trip representation) — two files diff
+    // equal iff the curves are bitwise equal. This is the CI probe for
+    // shrink-vs-dense and resume-vs-uninterrupted determinism.
+    if let Some(lp) = a.opt("losses") {
+        let mut out = String::with_capacity(trained.losses.len() * 12);
+        for v in &trained.losses {
+            out.push_str(&format!("{v:?}\n"));
+        }
+        std::fs::write(lp, out)?;
+    }
+    // --logits <path>: eval logits of the trained model on the first eval
+    // batch, through the DENSE engine on the zero-expanded parameters —
+    // the coordinate system both modes share (same format as
+    // `geta infer --logits`).
+    if let Some(lp) = a.opt("logits") {
+        let idxs: Vec<usize> = (0..t.batch_size().min(t.eval_data.len())).collect();
+        let (x, y) = t.eval_data.batch(&idxs);
+        let logits = t.engine.eval_logits(&trained.params, &trained.q, &x, &y)?;
+        let mut out = String::with_capacity(logits.len() * 12);
+        for v in &logits {
+            out.push_str(&format!("{v:?}\n"));
+        }
+        std::fs::write(lp, out)?;
+    }
+    if !trained.replans.is_empty() {
+        println!(
+            "re-planned {}x (after steps {:?}); final plan runs kept-channel shapes",
+            trained.replans.len(),
+            trained.replans,
+        );
+    }
+    if trained.halted {
+        println!(
+            "\nhalted at step {} of {}{}",
+            trained.losses.len(),
+            t.exp.total_steps(),
+            match &opts.ckpt {
+                Some(p) => format!(" (checkpoint {})", p.display()),
+                None => String::new(),
+            },
+        );
+        return Ok(());
+    }
+    let r = &trained.result;
     println!(
         "\nresult: acc {:.2}%  rel BOPs {:.2}%  avg bits {:.1}  group sparsity {:.2}  param sparsity {:.2}",
         r.accuracy, r.rel_bops, r.avg_bits, r.group_sparsity, r.param_sparsity
@@ -627,6 +708,62 @@ fn cmd_bench_serve(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench_train(a: &Args) -> Result<()> {
+    let model = resolve_model(a, "mlp_tiny")?;
+    let scale = a.f64_or("steps-scale", 0.25);
+    // high sparsity by default: the shrink win scales with how much of the
+    // net the schedule removes, and the acceptance bar is stated at >= 0.8
+    let sparsity = a.f64_or("sparsity", 0.85);
+    // `--threads` is the single process-wide budget; the sweep flag is
+    // separate so `bench-train` can compare thread counts in one run
+    let threads = if a.opt("threads").is_some() && a.opt("threads-sweep").is_none() {
+        vec![geta::tensor::configured_threads()]
+    } else {
+        list_opt(a, "threads-sweep", &[1usize, 4])?
+    };
+    println!(
+        "bench-train {model}: dense-masked vs shrink-as-you-train, sparsity {sparsity}, \
+         threads {threads:?} (both modes train bitwise identically; this measures wall-clock)",
+    );
+    let rows = geta::report::bench_train(&art_dir(a), &model, scale, sparsity, &threads)?;
+    println!(
+        "\n{:>7} {:>7} {:>6} {:>8} {:>10} {:>13} {:>9} {:>9} {:>10}",
+        "threads", "mode", "steps", "replans", "steps/s", "tail_steps/s", "fwbw_ms", "optim_ms", "replan_ms"
+    );
+    for r in &rows {
+        println!(
+            "{:>7} {:>7} {:>6} {:>8} {:>10.1} {:>13.1} {:>9.2} {:>9.2} {:>10.2}",
+            r.threads,
+            r.mode,
+            r.steps,
+            r.replans,
+            r.steps_per_s,
+            r.tail_steps_per_s,
+            r.train_step_ms,
+            r.optim_step_ms,
+            r.replan_ms,
+        );
+    }
+    for t in &threads {
+        let find = |mode: &str| rows.iter().find(|r| r.threads == *t && r.mode == mode);
+        if let (Some(d), Some(s)) = (find("dense"), find("shrink")) {
+            println!(
+                "  threads {}: post-shrink tail {:.2}x dense (from step {} of {})",
+                t,
+                s.tail_steps_per_s / d.tail_steps_per_s.max(1e-9),
+                s.tail_from_step,
+                s.steps,
+            );
+        }
+    }
+    if a.flag("json") {
+        let path = geta::report::bench_train_json_path();
+        geta::report::write_bench_train_json(&path, &rows)?;
+        println!("\nwrote {}", path.display());
+    }
+    Ok(())
+}
+
 /// `geta profile`: run a traced inference pass and print a per-op
 /// self-time table (op kind x kernel kind, the span names the executor
 /// records), then write the raw spans as Chrome trace-event JSON. The
@@ -634,6 +771,11 @@ fn cmd_bench_serve(a: &Args) -> Result<()> {
 /// `--model`; tracing is switched on only after training finishes, so the
 /// trace holds the `.geta` load phases plus the per-node exec spans — not
 /// the training loop (pass --trace to a `geta train` run for that).
+///
+/// `--replan` (with `--model`) instead traces the in-process training run
+/// itself with shrink-as-you-train on, and prints a second table of the
+/// training-loop phases: `train` (train_step/optim_step/checkpoint) and
+/// `replan` (finalize/slice/rebuild) span aggregates.
 fn cmd_profile(a: &Args) -> Result<()> {
     let kernel = if a.flag("int4") {
         geta::deploy::KernelKind::Int4
@@ -648,9 +790,20 @@ fn cmd_profile(a: &Args) -> Result<()> {
     } else {
         let model = resolve_model(a, "mlp_tiny")?;
         let scale = a.f64_or("steps-scale", 0.12);
-        let sparsity = a.f64_or("sparsity", 0.5);
-        println!("no --file: training {model} in-process (steps-scale {scale})");
-        let art = geta::report::train_export(&art_dir(a), &model, scale, sparsity, 8.0)?;
+        let replan = a.flag("replan");
+        // profiling the re-planner needs a schedule that actually prunes:
+        // default high sparsity when --replan is on
+        let sparsity = a.f64_or("sparsity", if replan { 0.85 } else { 0.5 });
+        println!(
+            "no --file: training {model} in-process (steps-scale {scale}{})",
+            if replan { ", shrink-as-you-train, traced" } else { "" },
+        );
+        if replan {
+            // tracing goes on BEFORE training so the train/replan spans
+            // land in the drain below (and in the Chrome trace)
+            geta::obs::set_enabled(true);
+        }
+        let art = geta::report::train_export_opts(&art_dir(a), &model, scale, sparsity, 8.0, replan)?;
         geta::obs::set_enabled(true);
         geta::deploy::GetaEngine::from_container_kernel(&art.container, kernel)?
     };
@@ -694,6 +847,32 @@ fn cmd_profile(a: &Args) -> Result<()> {
             100.0 * r.total_us / total.max(1e-12),
             r.mean_us(),
         );
+    }
+    // with --replan the drained buffer also holds the traced training
+    // loop: surface the train/replan phase aggregates as their own table
+    // (replan rows are the finalize/slice/rebuild cost of each Plan
+    // rebuild — the price paid once per prune commit for the shrunken
+    // GEMMs every step after)
+    let mut phase_rows: Vec<(&'static str, geta::obs::trace::OpAgg)> = Vec::new();
+    for cat in ["train", "replan"] {
+        for r in geta::obs::trace::aggregate(&events, Some(cat)) {
+            phase_rows.push((cat, r));
+        }
+    }
+    if !phase_rows.is_empty() {
+        println!(
+            "\n{:<28} {:>7} {:>11} {:>11}",
+            "training phase", "calls", "total_ms", "mean_us"
+        );
+        for (cat, r) in &phase_rows {
+            println!(
+                "{:<28} {:>7} {:>11.3} {:>11.1}",
+                format!("{cat}/{}", r.name),
+                r.calls,
+                r.total_us / 1e3,
+                r.mean_us(),
+            );
+        }
     }
     let trace_path = a
         .opt("trace")

@@ -15,6 +15,33 @@ use crate::tensor::ParamStore;
 pub trait Optimizer: Send {
     fn step(&mut self, params: &mut ParamStore, grads: &ParamStore, lr: f32);
     fn name(&self) -> &'static str;
+
+    /// Per-parameter state stores (momentum/moment buffers), in a fixed
+    /// order, for checkpointing and shrink-as-you-train slicing. Stateless
+    /// optimizers (or ones whose lazy buffers are not yet allocated)
+    /// return an empty vec.
+    fn state_stores(&self) -> Vec<&ParamStore> {
+        Vec::new()
+    }
+
+    /// Mutable access to the same stores, in the same order as
+    /// [`Optimizer::state_stores`].
+    fn state_stores_mut(&mut self) -> Vec<&mut ParamStore> {
+        Vec::new()
+    }
+
+    /// Install restored state stores (checkpoint resume). The vec must
+    /// have either zero length (no state yet) or exactly the length this
+    /// optimizer's `state_stores` would return once allocated.
+    fn set_state_stores(&mut self, _stores: Vec<ParamStore>) {}
+
+    /// Scalar step-count state (e.g. Adam's `t`) for checkpointing.
+    fn scalar_state(&self) -> u64 {
+        0
+    }
+
+    /// Restore scalar state saved by [`Optimizer::scalar_state`].
+    fn set_scalar_state(&mut self, _v: u64) {}
 }
 
 /// SGD with optional momentum and decoupled weight decay.
@@ -64,6 +91,18 @@ impl Optimizer for Sgd {
 
     fn name(&self) -> &'static str {
         "sgd"
+    }
+
+    fn state_stores(&self) -> Vec<&ParamStore> {
+        self.velocity.iter().collect()
+    }
+
+    fn state_stores_mut(&mut self) -> Vec<&mut ParamStore> {
+        self.velocity.iter_mut().collect()
+    }
+
+    fn set_state_stores(&mut self, mut stores: Vec<ParamStore>) {
+        self.velocity = stores.pop();
     }
 }
 
@@ -139,6 +178,28 @@ impl Optimizer for Adam {
         } else {
             "adam"
         }
+    }
+
+    fn state_stores(&self) -> Vec<&ParamStore> {
+        self.m.iter().chain(self.v.iter()).collect()
+    }
+
+    fn state_stores_mut(&mut self) -> Vec<&mut ParamStore> {
+        self.m.iter_mut().chain(self.v.iter_mut()).collect()
+    }
+
+    fn set_state_stores(&mut self, mut stores: Vec<ParamStore>) {
+        // order matches state_stores(): [m, v]
+        self.v = stores.pop();
+        self.m = stores.pop();
+    }
+
+    fn scalar_state(&self) -> u64 {
+        self.t
+    }
+
+    fn set_scalar_state(&mut self, v: u64) {
+        self.t = v;
     }
 }
 

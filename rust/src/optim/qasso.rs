@@ -134,6 +134,13 @@ pub struct Qasso {
     pub cfg: QassoConfig,
     pub mask: StageMask,
     groups: Vec<PruneGroup>,
+    /// Pristine copy of the groups in ORIGINAL (dense) coordinates —
+    /// [`Qasso::rebind`] always remaps from these, never from the current
+    /// (possibly already-sliced) `groups`, so repeated re-plans compose.
+    orig_groups: Vec<PruneGroup>,
+    /// tensor index -> quant-site row (-1 for unquantized tensors); tensor
+    /// order never changes across slicing, so this survives rebinds.
+    tensor_site: Vec<i32>,
     gi: GroupIndex,
     /// Per group, aligned with gi.elems: the quant-site row of each element
     /// (-1 when the element's tensor is not a quant site).
@@ -152,6 +159,17 @@ pub struct Qasso {
     // scratch buffers (allocation-free hot loop)
     buf_g: Vec<f32>,
     buf_b: Vec<f32>,
+}
+
+/// Mutable QASSO scheduling state captured in training checkpoints.
+#[derive(Debug, Clone)]
+pub struct QassoState {
+    pub step_count: usize,
+    pub bu_cur: f32,
+    pub pruned: Vec<bool>,
+    pub redundant: Vec<usize>,
+    pub gamma: Vec<f32>,
+    pub gamma_scale: Vec<f32>,
 }
 
 /// Everything the joint stage needs to know about a quant site.
@@ -193,6 +211,8 @@ impl Qasso {
             bu_cur: cfg.init_bits,
             cfg,
             mask: StageMask::default(),
+            orig_groups: groups.clone(),
+            tensor_site,
             groups,
             gi,
             elem_site,
@@ -261,6 +281,84 @@ impl Qasso {
 
     pub fn group_index(&self) -> &GroupIndex {
         &self.gi
+    }
+
+    /// The prune groups in ORIGINAL (dense) coordinates, regardless of any
+    /// rebinds — reporting and cumulative slice maps index through these.
+    pub fn orig_groups(&self) -> &[PruneGroup] {
+        &self.orig_groups
+    }
+
+    /// The base optimizer (momentum/moment state access for checkpointing
+    /// and shrink-as-you-train slicing).
+    pub fn base_optimizer(&self) -> &dyn Optimizer {
+        self.base.as_ref()
+    }
+
+    pub fn base_optimizer_mut(&mut self) -> &mut dyn Optimizer {
+        self.base.as_mut()
+    }
+
+    /// Re-index every group onto a sliced parameter store: member indices
+    /// are remapped from original dense coordinates into kept-channel
+    /// coordinates (removed indices drop out; survivors shift down by the
+    /// number of removed indices below them). Fully-pruned groups end up
+    /// with empty members, so zeroing/saliency over them degenerate to the
+    /// exact no-ops the dense run performs on their all-zero elements —
+    /// QASSO stepping stays bitwise identical after a re-plan.
+    pub fn rebind(&mut self, kept: &crate::subnet::KeptMap, params: &ParamStore) {
+        let mut groups = self.orig_groups.clone();
+        for grp in groups.iter_mut() {
+            for m in grp.members.iter_mut() {
+                let Some(rm) = kept.removed.get(&m.tensor).and_then(|a| a.get(&m.axis))
+                else {
+                    continue;
+                };
+                m.indices = m
+                    .indices
+                    .iter()
+                    .filter(|i| rm.binary_search(i).is_err())
+                    .map(|&i| i - rm.partition_point(|&r| r < i))
+                    .collect();
+            }
+        }
+        self.gi = GroupIndex::build(&groups, params);
+        self.elem_site = self
+            .gi
+            .elems
+            .iter()
+            .map(|list| {
+                list.iter()
+                    .map(|&(ti, _)| self.tensor_site[ti as usize])
+                    .collect()
+            })
+            .collect();
+        self.groups = groups;
+    }
+
+    // -------------------------------------------------- checkpoint state
+    /// Snapshot the mutable scheduling state for `.getackpt` serialization.
+    pub fn ckpt_state(&self) -> QassoState {
+        QassoState {
+            step_count: self.step_count,
+            bu_cur: self.bu_cur,
+            pruned: self.pruned.clone(),
+            redundant: self.redundant.clone(),
+            gamma: self.gamma.clone(),
+            gamma_scale: self.gamma_scale.clone(),
+        }
+    }
+
+    /// Restore state saved by [`Qasso::ckpt_state`]. Vec lengths must
+    /// match this optimizer's group/site counts (the strict reader
+    /// cross-checks them before calling this).
+    pub fn restore_ckpt_state(&mut self, s: QassoState) {
+        self.step_count = s.step_count;
+        self.bu_cur = s.bu_cur;
+        self.pruned = s.pruned;
+        self.redundant = s.redundant;
+        self.gamma = s.gamma;
+        self.gamma_scale = s.gamma_scale;
     }
 
     /// Average learned bit width over sites (reporting).
@@ -726,6 +824,95 @@ mod tests {
         for &g in &opt.gamma {
             assert!((0.0..=1.0).contains(&g), "gamma={g}");
         }
+    }
+
+    #[test]
+    fn rebind_steps_bitwise_match_dense() {
+        // Run two QASSO instances in lockstep: one dense-masked, one that
+        // physically slices params after each prune commit and rebinds.
+        // With grads exactly zero at pruned positions (what real backprop
+        // produces), every surviving value must stay bitwise identical.
+        use crate::subnet::KeptMap;
+        let (params0, groups, sites, q0) = toy();
+        let cfg = cfg_small();
+        let mut dense_p = params0.clone();
+        let mut shrink_p = params0.clone();
+        let mut dense_q = q0.clone();
+        let mut shrink_q = q0.clone();
+        let mut dense = Qasso::new(
+            cfg.clone(),
+            groups.clone(),
+            &sites,
+            Box::new(Sgd::plain()),
+            &dense_p,
+        );
+        let mut shrink = Qasso::new(
+            cfg.clone(),
+            groups.clone(),
+            &sites,
+            Box::new(Sgd::plain()),
+            &shrink_p,
+        );
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut kept = KeptMap::default();
+        let mut pruned_seen = 0;
+        let mut replans = 0;
+        for step in 0..cfg.total_steps() {
+            let mut grads = dense_p.zeros_like();
+            for (ti, t) in dense_p.tensors.iter().enumerate() {
+                for (i, &x) in t.data.iter().enumerate() {
+                    grads.tensors[ti].data[i] = 0.1 * x + rng.normal_f32(0.02);
+                }
+            }
+            // real backprop yields exact zeros at pruned positions
+            let mask = dense.pruned_mask().to_vec();
+            crate::subnet::zero_pruned(&mut grads, &groups, &mask);
+            let mut sgrads = ParamStore::new();
+            for t in &grads.tensors {
+                sgrads.push(kept.slice(t));
+            }
+            let qg = vec![(
+                rng.normal_f32(0.01),
+                rng.normal_f32(0.01),
+                rng.normal_f32(0.01),
+            )];
+            dense.step(&mut dense_p, &mut dense_q, &grads, &qg, 0.05);
+            shrink.step(&mut shrink_p, &mut shrink_q, &sgrads, &qg, 0.05);
+            if dense.pruned_count() > pruned_seen {
+                pruned_seen = dense.pruned_count();
+                let new_kept = KeptMap::from_groups(&groups, dense.pruned_mask());
+                let mut sliced = ParamStore::new();
+                for t in &shrink_p.tensors {
+                    sliced.push(new_kept.slice(&kept.expand(t)));
+                }
+                shrink_p = sliced;
+                shrink.rebind(&new_kept, &shrink_p);
+                assert_eq!(shrink.pruned_count(), dense.pruned_count());
+                kept = new_kept;
+                replans += 1;
+            }
+            // the toy's groups are Out-only, so the full expanded store
+            // (zeros at removed positions) must equal the dense store
+            for (ts, td) in shrink_p.tensors.iter().zip(&dense_p.tensors) {
+                let e = kept.expand(ts);
+                assert_eq!(e.shape, td.shape, "step {step}: {}", td.name);
+                for (i, (a, b)) in e.data.iter().zip(&td.data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "step {step}: {}[{i}] shrink {a} vs dense {b}",
+                        td.name
+                    );
+                }
+            }
+            for (a, b) in shrink_q.iter().zip(&dense_q) {
+                assert_eq!(a.d.to_bits(), b.d.to_bits(), "step {step}: q.d");
+                assert_eq!(a.t.to_bits(), b.t.to_bits(), "step {step}: q.t");
+                assert_eq!(a.qm.to_bits(), b.qm.to_bits(), "step {step}: q.qm");
+            }
+        }
+        assert!(replans >= 1, "prune commits should have triggered re-plans");
+        assert_eq!(dense.pruned_count(), 3);
     }
 
     #[test]

@@ -566,6 +566,21 @@ pub fn train_export(
     sparsity: f64,
     max_bits: f64,
 ) -> Result<TrainedArtifact> {
+    train_export_opts(art_dir, model, steps_scale, sparsity, max_bits, false)
+}
+
+/// [`train_export`] with the shrink-as-you-train re-planner switchable:
+/// `replan` trains on sliced kept-channel plans after every prune commit
+/// (bitwise identical results; `geta profile --replan` uses this to put
+/// real `replan` spans in the trace).
+pub fn train_export_opts(
+    art_dir: &std::path::Path,
+    model: &str,
+    steps_scale: f64,
+    sparsity: f64,
+    max_bits: f64,
+    replan: bool,
+) -> Result<TrainedArtifact> {
     let mut exp = ExperimentConfig::defaults_for(model);
     exp.scale_steps(steps_scale);
     exp.n_train = exp.n_train.min(512);
@@ -578,7 +593,11 @@ pub fn train_export(
     exp.qasso.init_bits = exp.qasso.init_bits.min(max_bits);
     let t = Trainer::new(art_dir, exp)?;
     let mut geta = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default())?;
-    let mut trained = t.run_trained(&mut geta)?;
+    let opts = crate::coordinator::TrainOpts {
+        replan,
+        ..Default::default()
+    };
+    let mut trained = t.run_trained_opts(&mut geta, &opts)?;
     let dense_params = trained.params.clone();
     let cfg = t.engine.manifest().config.clone();
     let space = graph::search_space_for(&cfg)?;
@@ -1167,6 +1186,263 @@ pub fn write_bench_serve_json(path: &std::path::Path, serve: &[ServeBench]) -> R
     let doc = Json::obj(vec![
         ("note", Json::str(BENCH_SERVE_NOTE)),
         ("serve", Json::Arr(rows)),
+    ]);
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
+}
+
+/// One point of the `geta bench-train` sweep: a full GETA training run at
+/// a fixed (mode, threads), measured over the training loop's own spans.
+/// `mode` is `"dense"` (masked-dense loop, the baseline) or `"shrink"`
+/// (`TrainOpts::replan`: the executor Plan is rebuilt on the sliced
+/// subnet after every prune commit). The two modes train bitwise
+/// identically — the comparison is pure wall-clock.
+#[derive(Debug, Clone)]
+pub struct TrainBench {
+    pub model: String,
+    /// `"dense" | "shrink"`.
+    pub mode: String,
+    pub threads: usize,
+    /// Training steps the run executed.
+    pub steps: usize,
+    /// Plan rebuilds the run performed (0 in dense mode).
+    pub replans: usize,
+    /// First step the *shrink* run re-planned after — both modes report
+    /// their tail throughput over the steps from here on, so the tail
+    /// window compares sliced GEMMs against masked-dense GEMMs over the
+    /// same schedule suffix.
+    pub tail_from_step: usize,
+    /// Whole-run training throughput (first to last train step).
+    pub steps_per_s: f64,
+    /// Throughput over the post-shrink tail window.
+    pub tail_steps_per_s: f64,
+    /// Mean forward+backward wall-clock per step.
+    pub train_step_ms: f64,
+    /// Mean optimizer (QASSO) wall-clock per step.
+    pub optim_step_ms: f64,
+    /// Total re-plan cost over the run (finalize + slice + rebuild spans).
+    pub replan_ms: f64,
+    pub group_sparsity: f64,
+}
+
+/// Timing pulled off one traced training run's spans.
+struct TrainTiming {
+    steps: usize,
+    replans: usize,
+    first_replan: usize,
+    steps_per_s: f64,
+    tail_steps_per_s: f64,
+    train_step_ms: f64,
+    optim_step_ms: f64,
+    replan_ms: f64,
+    group_sparsity: f64,
+}
+
+/// Run one GETA training pass (dense-masked or shrink-enabled) with the
+/// span tracer on and distill its timing. `tail_from` fixes the tail
+/// window start; pass `None` to start it at the run's own first re-plan.
+fn timed_train_run(
+    art_dir: &std::path::Path,
+    model: &str,
+    steps_scale: f64,
+    sparsity: f64,
+    replan: bool,
+    tail_from: Option<usize>,
+) -> Result<TrainTiming> {
+    let mut exp = ExperimentConfig::defaults_for(model);
+    exp.scale_steps(steps_scale);
+    exp.n_train = exp.n_train.min(512);
+    exp.n_eval = exp.n_eval.min(256);
+    if sparsity > 0.0 {
+        exp.qasso.target_group_sparsity = sparsity;
+    }
+    let t = Trainer::new(art_dir, exp)?;
+    let mut geta = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default())?;
+    let opts = crate::coordinator::TrainOpts {
+        replan,
+        ..Default::default()
+    };
+    // trace the run: the loop's own train_step/optim_step/replan spans are
+    // the measurement (span overhead is one Instant + push per phase per
+    // step, identical in both modes). Drain first so stale spans from the
+    // caller's session can't leak into this run's aggregate.
+    let prev = crate::obs::set_enabled(true);
+    crate::obs::trace::drain();
+    let trained = t.run_trained_opts(&mut geta, &opts)?;
+    let events = crate::obs::trace::drain();
+    crate::obs::set_enabled(prev);
+    let steps = trained.losses.len();
+    let mut step_spans: Vec<&crate::obs::trace::SpanEvent> = events
+        .iter()
+        .filter(|e| e.cat == "train" && e.name == "train_step")
+        .collect();
+    step_spans.sort_by(|a, b| a.ts_us.partial_cmp(&b.ts_us).unwrap_or(std::cmp::Ordering::Equal));
+    anyhow::ensure!(
+        step_spans.len() == steps,
+        "traced {} train_step spans over {} steps (tracer buffer overflow?)",
+        step_spans.len(),
+        steps
+    );
+    let window_s = |spans: &[&crate::obs::trace::SpanEvent]| -> f64 {
+        match (spans.first(), spans.last()) {
+            (Some(f), Some(l)) => ((l.ts_us + l.dur_us) - f.ts_us) / 1e6,
+            _ => 0.0,
+        }
+    };
+    let first_replan = trained.replans.first().copied().unwrap_or(steps);
+    let tail_from = tail_from.unwrap_or(first_replan).min(steps);
+    let tail = &step_spans[tail_from.min(steps.saturating_sub(1))..];
+    let steps_per_s = steps as f64 / window_s(&step_spans).max(1e-9);
+    let tail_steps_per_s = if tail.len() >= 2 {
+        tail.len() as f64 / window_s(tail).max(1e-9)
+    } else {
+        steps_per_s
+    };
+    let phase_ms = |cat: &str, name: &str| -> f64 {
+        let (calls, total_us) = events
+            .iter()
+            .filter(|e| e.cat == cat && e.name == name)
+            .fold((0u64, 0.0f64), |(c, t), e| (c + 1, t + e.dur_us));
+        total_us / 1e3 / calls.max(1) as f64
+    };
+    let replan_ms: f64 = events
+        .iter()
+        .filter(|e| e.cat == "replan")
+        .map(|e| e.dur_us / 1e3)
+        .sum();
+    Ok(TrainTiming {
+        steps,
+        replans: trained.replans.len(),
+        first_replan,
+        steps_per_s,
+        tail_steps_per_s,
+        train_step_ms: phase_ms("train", "train_step"),
+        optim_step_ms: phase_ms("train", "optim_step"),
+        replan_ms,
+        group_sparsity: trained.result.group_sparsity,
+    })
+}
+
+/// Train `model` twice per thread count — once masked-dense, once with
+/// shrink-as-you-train re-planning — and compare training throughput.
+/// The shrink run goes first so its first re-plan step can anchor BOTH
+/// modes' tail windows: `tail_steps_per_s` then measures sliced-subnet
+/// GEMMs vs masked-dense GEMMs over the same schedule suffix, which is
+/// the number the "pruning pays during training" claim is about.
+pub fn bench_train(
+    art_dir: &std::path::Path,
+    model: &str,
+    steps_scale: f64,
+    sparsity: f64,
+    threads_sweep: &[usize],
+) -> Result<Vec<TrainBench>> {
+    let prev_threads = crate::tensor::configured_threads();
+    let mut rows = Vec::new();
+    for &threads in threads_sweep {
+        crate::tensor::set_threads(threads);
+        let shrink = timed_train_run(art_dir, model, steps_scale, sparsity, true, None)?;
+        let dense = timed_train_run(
+            art_dir,
+            model,
+            steps_scale,
+            sparsity,
+            false,
+            Some(shrink.first_replan),
+        )?;
+        for (mode, t) in [("dense", &dense), ("shrink", &shrink)] {
+            rows.push(TrainBench {
+                model: model.to_string(),
+                mode: mode.to_string(),
+                threads,
+                steps: t.steps,
+                replans: t.replans,
+                tail_from_step: shrink.first_replan,
+                steps_per_s: t.steps_per_s,
+                tail_steps_per_s: t.tail_steps_per_s,
+                train_step_ms: t.train_step_ms,
+                optim_step_ms: t.optim_step_ms,
+                replan_ms: t.replan_ms,
+                group_sparsity: t.group_sparsity,
+            });
+        }
+    }
+    crate::tensor::set_threads(prev_threads);
+    Ok(rows)
+}
+
+/// One `train` row as JSON (field names are the `BENCH_train.json`
+/// schema).
+fn train_row_json(r: &TrainBench) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("model", Json::str(&r.model)),
+        ("mode", Json::str(&r.mode)),
+        ("threads", Json::Num(r.threads as f64)),
+        ("steps", Json::Num(r.steps as f64)),
+        ("replans", Json::Num(r.replans as f64)),
+        ("tail_from_step", Json::Num(r.tail_from_step as f64)),
+        ("steps_per_s", Json::Num(r.steps_per_s)),
+        ("tail_steps_per_s", Json::Num(r.tail_steps_per_s)),
+        ("train_step_ms", Json::Num(r.train_step_ms)),
+        ("optim_step_ms", Json::Num(r.optim_step_ms)),
+        ("replan_ms", Json::Num(r.replan_ms)),
+        ("group_sparsity", Json::Num(r.group_sparsity)),
+    ])
+}
+
+/// Where the training-throughput summary goes (see [`repo_root_file`]).
+/// Checked in like `BENCH_serve.json`, so the shrink-vs-dense training
+/// speed trajectory is diffable across PRs.
+pub fn bench_train_json_path() -> std::path::PathBuf {
+    repo_root_file("BENCH_train.json")
+}
+
+/// The fixed `note` field of `BENCH_train.json` — emitted verbatim on
+/// every write so the checked-in copy regenerates byte-stable apart from
+/// genuinely new measurements.
+const BENCH_TRAIN_NOTE: &str =
+    "training throughput, masked-dense vs shrink-as-you-train; regenerate with `make bench-train` \
+     or `geta bench-train --json` (wall-clocks are machine-dependent). Rows carry model, mode \
+     (dense = masked-dense loop, shrink = executor Plan rebuilt on the sliced subnet after every \
+     prune commit; both train bitwise identically), threads, steps, replans, tail_from_step (the \
+     shrink run's first re-plan step — both modes report tail_steps_per_s over the steps from \
+     there on), steps_per_s, tail_steps_per_s, mean train_step_ms / optim_step_ms per step, total \
+     replan_ms, and group_sparsity. Writers merge by model: a single-model run updates only its \
+     own rows. CI regenerates the file on a high-sparsity run every push, validates this schema, \
+     and asserts shrink tail_steps_per_s >= dense at the same thread count.";
+
+/// Write the checked-in training-throughput summary (`BENCH_train.json`).
+/// **Merge-on-write** by model, like [`write_bench_serve_json`]; rows
+/// sort by (model, threads, mode) so regeneration diffs cleanly.
+pub fn write_bench_train_json(path: &std::path::Path, train: &[TrainBench]) -> Result<()> {
+    use crate::util::json::{self, Json};
+    let fresh: std::collections::BTreeSet<&str> = train.iter().map(|r| r.model.as_str()).collect();
+    let mut rows: Vec<Json> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(doc) = json::parse(&text) {
+            if let Some(arr) = doc.get("train").and_then(|d| d.as_arr()) {
+                for row in arr {
+                    if !fresh.contains(row.str_or("model", "").as_str()) {
+                        rows.push(row.clone());
+                    }
+                }
+            }
+        }
+    }
+    rows.extend(train.iter().map(train_row_json));
+    rows.sort_by(|a, b| {
+        let key = |r: &Json| {
+            (
+                r.str_or("model", ""),
+                r.get("threads").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                r.str_or("mode", ""),
+            )
+        };
+        key(a).cmp(&key(b))
+    });
+    let doc = Json::obj(vec![
+        ("note", Json::str(BENCH_TRAIN_NOTE)),
+        ("train", Json::Arr(rows)),
     ]);
     std::fs::write(path, doc.to_string())?;
     Ok(())

@@ -153,6 +153,14 @@ pub trait Backend {
     fn site_specs(&self) -> Vec<SiteSpec> {
         self.manifest().qsites.clone()
     }
+
+    /// Downcast to the native interpreter engine, when that is what this
+    /// backend is. The shrink-as-you-train re-planner needs the lowered
+    /// program to rebuild a Plan on the sliced subnet; backends that can't
+    /// expose one (compiled HLO) keep the default `None` and train dense.
+    fn as_native(&self) -> Option<&native::NativeEngine> {
+        None
+    }
 }
 
 /// Shared parameter initialization (see [`Backend::init_params`]).

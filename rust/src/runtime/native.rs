@@ -320,6 +320,21 @@ impl NativeEngine {
         })
     }
 
+    /// Build an engine around an already-lowered program — the
+    /// shrink-as-you-train re-planner hands in the sliced program from
+    /// `subnet::propagate_slices` with the original manifest (batch specs
+    /// and quant-site order are slicing-invariant). A fresh Plan and Arena
+    /// are built for the shrunken shapes.
+    pub fn with_program(manifest: Manifest, program: Program) -> NativeEngine {
+        let plan = exec::Plan::new(&program, manifest.batch.batch_size());
+        NativeEngine {
+            manifest,
+            program,
+            plan,
+            arena: std::cell::RefCell::new(exec::Arena::new()),
+        }
+    }
+
     /// The lowered op program this engine executes.
     pub fn program(&self) -> &Program {
         &self.program
@@ -334,6 +349,10 @@ impl NativeEngine {
 impl Backend for NativeEngine {
     fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    fn as_native(&self) -> Option<&NativeEngine> {
+        Some(self)
     }
 
     fn platform(&self) -> String {

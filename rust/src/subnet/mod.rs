@@ -98,6 +98,42 @@ impl KeptMap {
         }
         crate::tensor::Tensor::from_vec(&t.name, &shape, data)
     }
+
+    /// Inverse of [`KeptMap::slice`]: re-insert the removed indices as
+    /// zero rows/columns, restoring the original dense shape. Values at
+    /// kept positions are copied bit-for-bit; removed positions are 0.0.
+    /// `expand(slice(t))` equals `t` wherever `t` was zero at the removed
+    /// positions (the QASSO invariant for pruned groups).
+    pub fn expand(&self, t: &crate::tensor::Tensor) -> crate::tensor::Tensor {
+        let Some(axes) = self.removed.get(&t.name) else {
+            return t.clone();
+        };
+        let mut shape = t.shape.clone();
+        let mut data = t.data.clone();
+        // grow axes one at a time, lowest axis first (the mirror of
+        // slice()'s highest-first order), recomputing strides each pass
+        let mut order: Vec<_> = axes.keys().copied().collect();
+        order.sort_unstable();
+        for axis in order {
+            let rm = &axes[&axis];
+            let newlen = shape[axis] + rm.len();
+            let keep: Vec<usize> = (0..newlen).filter(|i| !rm.contains(i)).collect();
+            debug_assert_eq!(keep.len(), shape[axis]);
+            let inner: usize = shape[axis + 1..].iter().product();
+            let outer: usize = shape[..axis].iter().product();
+            let mut out = vec![0.0f32; outer * newlen * inner];
+            for o in 0..outer {
+                for (ki, &k) in keep.iter().enumerate() {
+                    let src = o * shape[axis] * inner + ki * inner;
+                    let dst = o * newlen * inner + k * inner;
+                    out[dst..dst + inner].copy_from_slice(&data[src..src + inner]);
+                }
+            }
+            shape[axis] = newlen;
+            data = out;
+        }
+        crate::tensor::Tensor::from_vec(&t.name, &shape, data)
+    }
 }
 
 /// One packed, quantized weight tensor.
@@ -201,6 +237,12 @@ pub fn propagate_slices(prog: &Program, sliced: &ParamStore) -> Result<Program> 
                 let wname = format!("{w}.weight");
                 let din = dim_of(&wname, 0)?;
                 let dout = dim_of(&wname, 1)?;
+                anyhow::ensure!(
+                    dout > 0,
+                    "{}: fully pruned (zero kept output units) — cannot build a \
+                     degenerate 0-dim linear",
+                    node.name
+                );
                 let got = *in_shape(0).last().unwrap();
                 anyhow::ensure!(
                     got == din,
@@ -220,6 +262,12 @@ pub fn propagate_slices(prog: &Program, sliced: &ParamStore) -> Result<Program> 
                 let wname = format!("{w}.weight");
                 let cin = dim_of(&wname, 2)?;
                 let cout = dim_of(&wname, 3)?;
+                anyhow::ensure!(
+                    cout > 0,
+                    "{}: fully pruned (zero kept output channels) — cannot build a \
+                     degenerate 0-channel conv",
+                    node.name
+                );
                 let got = *in_shape(0).last().unwrap();
                 anyhow::ensure!(
                     got == cin,
@@ -240,6 +288,11 @@ pub fn propagate_slices(prog: &Program, sliced: &ParamStore) -> Result<Program> 
             OpKind::BatchNorm { p } | OpKind::LayerNorm { p } => {
                 let shape = in_shape(0).clone();
                 let c = *shape.last().unwrap();
+                anyhow::ensure!(
+                    c > 0,
+                    "{}: fully pruned (zero surviving channels reach this norm)",
+                    node.name
+                );
                 anyhow::ensure!(
                     numel_of(&format!("{p}.gamma"))? == c && numel_of(&format!("{p}.beta"))? == c,
                     "{}: norm params not sliced to {c} channels",
@@ -311,6 +364,12 @@ pub fn propagate_slices(prog: &Program, sliced: &ParamStore) -> Result<Program> 
                     node.name
                 );
                 let dim = *s.last().unwrap();
+                anyhow::ensure!(
+                    dim > 0,
+                    "{}: fully pruned (zero kept heads) — attention needs at least \
+                     one surviving head",
+                    node.name
+                );
                 anyhow::ensure!(
                     hd > 0 && dim % hd == 0,
                     "{}: sliced attention dim {dim} not a whole number of {hd}-wide heads \
@@ -693,6 +752,94 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prop_expand_is_inverse_of_slice() {
+        crate::util::prop::check(
+            80,
+            |g| {
+                let rows = 1 + g.size(5);
+                let cols = 2 + g.size(8);
+                let data = g.vec_normal(rows * cols, 1.0);
+                let n_rm_r = g.rng.below(rows);
+                let mut rm_rows: Vec<usize> = (0..n_rm_r).map(|_| g.rng.below(rows)).collect();
+                rm_rows.sort_unstable();
+                rm_rows.dedup();
+                if rm_rows.len() == rows {
+                    rm_rows.pop();
+                }
+                let n_rm_c = g.rng.below(cols);
+                let mut rm_cols: Vec<usize> = (0..n_rm_c).map(|_| g.rng.below(cols)).collect();
+                rm_cols.sort_unstable();
+                rm_cols.dedup();
+                if rm_cols.len() == cols {
+                    rm_cols.pop();
+                }
+                (rows, cols, data, rm_rows, rm_cols)
+            },
+            |(rows, cols, data, rm_rows, rm_cols)| {
+                let mut kept = KeptMap::default();
+                let e = kept.removed.entry("w".to_string()).or_default();
+                e.insert(0, rm_rows.clone());
+                e.insert(1, rm_cols.clone());
+                // zero the removed positions so expand(slice(t)) == t exactly
+                let mut z = data.clone();
+                for r in 0..*rows {
+                    for c in 0..*cols {
+                        if rm_rows.contains(&r) || rm_cols.contains(&c) {
+                            z[r * cols + c] = 0.0;
+                        }
+                    }
+                }
+                let t = Tensor::from_vec("w", &[*rows, *cols], z.clone());
+                let back = kept.expand(&kept.slice(&t));
+                if back.shape != t.shape {
+                    return Err(format!("shape {:?} vs {:?}", back.shape, t.shape));
+                }
+                for (i, (a, b)) in back.data.iter().zip(&t.data).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("[{i}] expand∘slice = {a}, want {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn propagate_slices_rejects_fully_pruned_site() {
+        use crate::graph::builders;
+        use crate::runtime::lowering;
+        use crate::util::json;
+        let cfg = json::parse(
+            r#"{"name": "t", "family": "mlp", "task": "image_cls",
+                "image": {"size": 4, "channels": 1}, "hidden": [6, 4],
+                "num_classes": 3, "quant": {"weight": true, "act": false}}"#,
+        )
+        .unwrap();
+        let sites = builders::quant_site_specs(&cfg).unwrap();
+        let prog = lowering::lower(&cfg, &sites, 2).unwrap();
+        let space = crate::graph::search_space_for(&cfg).unwrap();
+        let params = crate::runtime::init_params_for(
+            &crate::runtime::native::synth_manifest(&cfg).unwrap(),
+            0,
+        );
+        // prune EVERY fc0 hidden unit: zero kept outputs at that site
+        let pruned: Vec<bool> = space
+            .groups
+            .iter()
+            .map(|g| g.label.starts_with("fc0"))
+            .collect();
+        assert!(pruned.iter().any(|&p| p));
+        let kept = KeptMap::from_groups(&space.groups, &pruned);
+        let mut sliced = ParamStore::new();
+        for t in &params.tensors {
+            sliced.push(kept.slice(t));
+        }
+        let err = propagate_slices(&prog, &sliced).unwrap_err().to_string();
+        assert!(err.contains("fc0"), "error should name the node: {err}");
+        assert!(err.contains("fully pruned"), "{err}");
     }
 
     #[test]

@@ -95,9 +95,15 @@ use super::tile::{kernel_threads, TILE_I, TILE_K};
 // small but im2col rows reach ~8k, where f32 accumulation visibly drifts
 // (see `dot_accumulates_in_f64_on_large_inputs`). The tiled kernels block
 // the k axis so a panel of `b` rows stays cache-hot across a block of
-// output rows, unroll k four-wide to cut accumulator traffic, and split
-// output rows across worker threads. The `*_naive` triple loops are the
-// ground truth the property tests compare against and the baseline
+// output rows, unroll k four-wide to cut load/index traffic, and split
+// output rows across worker threads. Per output element the f64
+// accumulation is a strict k-ascending fold (the unroll issues four
+// *sequential* adds, never a grouped 4-term sum), so the tiled kernels are
+// bitwise identical to the `*_naive` triple loops — and, because pruned
+// channels hold exact zeros and adding ±0.0 to the fold is an identity,
+// bitwise identical to the same GEMM with zero rows/columns physically
+// sliced out (the shrink-as-you-train invariant). The `*_naive` loops are
+// the ground truth the property tests compare against and the baseline
 // `BENCH_runtime.json` measures speedups over. With the `simd` feature
 // the inner row workers first try an arch-specific vectorized body
 // (`simd.rs`) that replays the exact same accumulation order, so results
@@ -156,9 +162,12 @@ fn matmul_rows(out: &mut [f32], a: &[f32], b: &[f32], i0: usize, k: usize, n: us
 }
 
 /// Accumulate rows `row0..row0+ilen` of `a @ b` into the f64 tile `acc`
-/// (`ilen × n`, pre-zeroed). With the `simd` feature an arch-specific
-/// body runs first (`simd.rs`); it replays this exact per-column
-/// accumulation order, so the dispatch never changes a single bit.
+/// (`ilen × n`, pre-zeroed). Per column the fold is strictly k-ascending
+/// — the four-wide unroll issues sequential adds — which makes the tile
+/// bitwise equal to [`matmul_naive`] and slice-invariant over exact-zero
+/// `a` entries. With the `simd` feature an arch-specific body runs first
+/// (`simd.rs`); it replays this exact per-column accumulation order, so
+/// the dispatch never changes a single bit.
 fn acc_tile_f32(acc: &mut [f64], a: &[f32], b: &[f32], row0: usize, ilen: usize, k: usize, n: usize) {
     #[cfg(feature = "simd")]
     if super::simd::acc_tile_f32(acc, a, b, row0, ilen, k, n) {
@@ -180,11 +189,17 @@ fn acc_tile_f32(acc: &mut [f64], a: &[f32], b: &[f32], row0: usize, ilen: usize,
                     let b1 = &b[(kb + kk + 1) * n..][..n];
                     let b2 = &b[(kb + kk + 2) * n..][..n];
                     let b3 = &b[(kb + kk + 3) * n..][..n];
+                    // four *sequential* adds per column (not one grouped
+                    // sum): per-column accumulation is then a strict
+                    // k-ascending fold, identical to `matmul_naive`, and
+                    // dropping exact-zero a-terms (naive's skip, or the
+                    // shrink-as-you-train slicing of zeroed channels)
+                    // cannot change a bit of the result.
                     for j in 0..n {
-                        accrow[j] += a0 * b0[j] as f64
-                            + a1 * b1[j] as f64
-                            + a2 * b2[j] as f64
-                            + a3 * b3[j] as f64;
+                        accrow[j] += a0 * b0[j] as f64;
+                        accrow[j] += a1 * b1[j] as f64;
+                        accrow[j] += a2 * b2[j] as f64;
+                        accrow[j] += a3 * b3[j] as f64;
                     }
                 }
                 kk += 4;

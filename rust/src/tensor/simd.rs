@@ -15,9 +15,11 @@
 //!   under the `i8_gemm_fits_i32` gate, so any lane order is bitwise
 //!   equal by construction.
 //! - Float tiles vectorize **across j** (independent output columns):
-//!   each f64 lane replays the scalar expression for its own column —
-//!   multiplies then the same left-associated adds, never FMA — so the
-//!   per-column rounding sequence is unchanged from the scalar kernel.
+//!   each f64 lane replays the scalar fold for its own column — a strict
+//!   k-ascending sequence of mul-then-add steps, never FMA and never a
+//!   grouped multi-term sum — so the per-column rounding sequence is
+//!   unchanged from the scalar kernel (and, like it, invariant to
+//!   dropping exact-zero k-terms, the shrink-as-you-train slicing case).
 //! Dispatch is per accumulation tile: one cached `is_x86_feature_detected!`
 //! check (a relaxed atomic load) per `TILE_I × n` block.
 //!
@@ -168,10 +170,12 @@ mod x86 {
     use super::TILE_K;
     use std::arch::x86_64::*;
 
-    /// 4-wide f64 update of one accumulator row: the scalar expression
-    /// `acc[j] += a0·b0[j] + a1·b1[j] + a2·b2[j] + a3·b3[j]` with the
-    /// same mul-then-left-associated-add order per lane (no FMA), so
-    /// every column rounds exactly as the scalar tile does.
+    /// 4-wide f64 update of one accumulator row: the scalar fold
+    /// `acc[j] += a0·b0[j]; acc[j] += a1·b1[j]; …` — four *sequential*
+    /// mul-then-add steps per lane (no FMA, no grouped 4-term sum), so
+    /// every column rounds exactly as the scalar tile does and the fold
+    /// stays a strict k-ascending sequence (the slice-invariance
+    /// contract in `ops.rs`).
     #[target_feature(enable = "avx2")]
     unsafe fn f64_j4(
         acc: &mut [f64],
@@ -195,19 +199,19 @@ mod x86 {
             let b1v = _mm256_cvtps_pd(_mm_loadu_ps(b1.as_ptr().add(j)));
             let b2v = _mm256_cvtps_pd(_mm_loadu_ps(b2.as_ptr().add(j)));
             let b3v = _mm256_cvtps_pd(_mm_loadu_ps(b3.as_ptr().add(j)));
-            let t = _mm256_add_pd(
-                _mm256_add_pd(
-                    _mm256_add_pd(_mm256_mul_pd(va0, b0v), _mm256_mul_pd(va1, b1v)),
-                    _mm256_mul_pd(va2, b2v),
-                ),
-                _mm256_mul_pd(va3, b3v),
-            );
-            let av = _mm256_loadu_pd(acc.as_ptr().add(j));
-            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(av, t));
+            let mut av = _mm256_loadu_pd(acc.as_ptr().add(j));
+            av = _mm256_add_pd(av, _mm256_mul_pd(va0, b0v));
+            av = _mm256_add_pd(av, _mm256_mul_pd(va1, b1v));
+            av = _mm256_add_pd(av, _mm256_mul_pd(va2, b2v));
+            av = _mm256_add_pd(av, _mm256_mul_pd(va3, b3v));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), av);
             j += 4;
         }
         while j < n {
-            acc[j] += a0 * b0[j] as f64 + a1 * b1[j] as f64 + a2 * b2[j] as f64 + a3 * b3[j] as f64;
+            acc[j] += a0 * b0[j] as f64;
+            acc[j] += a1 * b1[j] as f64;
+            acc[j] += a2 * b2[j] as f64;
+            acc[j] += a3 * b3[j] as f64;
             j += 1;
         }
     }
@@ -572,8 +576,9 @@ mod neon {
     use super::TILE_K;
     use std::arch::aarch64::*;
 
-    /// 2-wide f64 update: same mul-then-left-associated-add order per
-    /// lane as the scalar tile (no FMA).
+    /// 2-wide f64 update: the same four *sequential* mul-then-add steps
+    /// per lane as the scalar tile (no FMA, no grouped 4-term sum), so
+    /// the per-column fold stays strictly k-ascending.
     unsafe fn f64_j4(
         acc: &mut [f64],
         a0: f64,
@@ -596,19 +601,19 @@ mod neon {
             let b1v = vcvt_f64_f32(vld1_f32(b1.as_ptr().add(j)));
             let b2v = vcvt_f64_f32(vld1_f32(b2.as_ptr().add(j)));
             let b3v = vcvt_f64_f32(vld1_f32(b3.as_ptr().add(j)));
-            let t = vaddq_f64(
-                vaddq_f64(
-                    vaddq_f64(vmulq_f64(va0, b0v), vmulq_f64(va1, b1v)),
-                    vmulq_f64(va2, b2v),
-                ),
-                vmulq_f64(va3, b3v),
-            );
-            let av = vld1q_f64(acc.as_ptr().add(j));
-            vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(av, t));
+            let mut av = vld1q_f64(acc.as_ptr().add(j));
+            av = vaddq_f64(av, vmulq_f64(va0, b0v));
+            av = vaddq_f64(av, vmulq_f64(va1, b1v));
+            av = vaddq_f64(av, vmulq_f64(va2, b2v));
+            av = vaddq_f64(av, vmulq_f64(va3, b3v));
+            vst1q_f64(acc.as_mut_ptr().add(j), av);
             j += 2;
         }
         while j < n {
-            acc[j] += a0 * b0[j] as f64 + a1 * b1[j] as f64 + a2 * b2[j] as f64 + a3 * b3[j] as f64;
+            acc[j] += a0 * b0[j] as f64;
+            acc[j] += a1 * b1[j] as f64;
+            acc[j] += a2 * b2[j] as f64;
+            acc[j] += a3 * b3[j] as f64;
             j += 1;
         }
     }

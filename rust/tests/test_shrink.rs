@@ -1,0 +1,275 @@
+//! Shrink-as-you-train contract tests.
+//!
+//! The re-planner's whole promise is **bitwise identity**: physically
+//! slicing the pruned channels out of the live parameters and rebuilding
+//! the executor Plan on the shrunken subnet must not move a single bit of
+//! the training trajectory relative to the masked-dense loop. These tests
+//! state that promise directly — per-step losses, post-training eval
+//! logits and every surviving parameter value are compared with
+//! `f32::to_bits`, never with tolerances — and add the same guarantee for
+//! `.getackpt` halt/resume: a run interrupted at an arbitrary step and
+//! resumed must replay into the exact same bit pattern as one that never
+//! stopped.
+
+mod common;
+
+use common::art_dir;
+use geta::config::ExperimentConfig;
+use geta::coordinator::{Compressor as _, GetaCompressor, TrainOpts, Trained, Trainer};
+use geta::graph;
+use geta::optim::qasso::StageMask;
+use geta::runtime::Backend as _;
+use geta::subnet::KeptMap;
+
+fn small_exp(model: &str, sparsity: f64, scale: f64) -> ExperimentConfig {
+    let mut e = ExperimentConfig::defaults_for(model);
+    e.scale_steps(scale);
+    e.n_train = 256;
+    e.n_eval = 128;
+    e.qasso.target_group_sparsity = sparsity;
+    e
+}
+
+/// Run one GETA training pass and return (trained, final pruned mask,
+/// logits of the first eval batch through the trainer's own engine on the
+/// dense-coordinate params).
+fn run(exp: ExperimentConfig, opts: &TrainOpts) -> (Trained, Vec<bool>, Vec<u32>) {
+    let t = Trainer::new(&art_dir(), exp).expect("backend builds for every lowered family");
+    let mut g = GetaCompressor::new(&*t.engine, &t.exp, StageMask::default()).unwrap();
+    let trained = t.run_trained_opts(&mut g, opts).unwrap();
+    let pruned = g.pruned_mask().expect("GETA exposes a pruned mask").to_vec();
+    let idxs: Vec<usize> = (0..t.batch_size().min(t.eval_data.len())).collect();
+    let (x, y) = t.eval_data.batch(&idxs);
+    let logits = t
+        .engine
+        .eval_logits(&trained.params, &trained.q, &x, &y)
+        .unwrap()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect();
+    (trained, pruned, logits)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Dense-masked vs shrink-enabled training on `model`: same losses, same
+/// logits, same surviving parameters — bitwise — and the shrink run must
+/// actually have re-planned (otherwise this test proves nothing).
+fn assert_shrink_matches_dense(model: &str, sparsity: f64, scale: f64) {
+    let (dense, dense_mask, dense_logits) = run(small_exp(model, sparsity, scale), &TrainOpts::default());
+    let (shrink, shrink_mask, shrink_logits) = run(
+        small_exp(model, sparsity, scale),
+        &TrainOpts {
+            replan: true,
+            ..Default::default()
+        },
+    );
+    assert!(
+        !shrink.replans.is_empty(),
+        "{model}: the schedule pruned nothing — no re-plan ever happened, so the \
+         shrink-vs-dense comparison is vacuous (raise sparsity or steps)"
+    );
+    assert_eq!(dense_mask, shrink_mask, "{model}: final pruned masks diverged");
+    assert_eq!(
+        dense.losses.len(),
+        shrink.losses.len(),
+        "{model}: step counts diverged"
+    );
+    for (i, (d, s)) in dense.losses.iter().zip(&shrink.losses).enumerate() {
+        assert_eq!(
+            d.to_bits(),
+            s.to_bits(),
+            "{model}: loss diverged at step {i} (first re-plan after step {:?}): dense {d:?} vs shrink {s:?}",
+            shrink.replans.first()
+        );
+    }
+    assert_eq!(dense_logits, shrink_logits, "{model}: eval logits diverged");
+    // every SURVIVING parameter bitwise equal. Pruned positions are
+    // excluded on both sides: the shrink run zero-expands them, while the
+    // dense run lets weight decay shave the in-axis rows that multiply
+    // zero activations — dead weight with no forward effect (the loss and
+    // logit identity above is the proof).
+    let cfg = &Trainer::new(&art_dir(), small_exp(model, sparsity, scale))
+        .unwrap()
+        .engine
+        .manifest()
+        .config
+        .clone();
+    let space = graph::search_space_for(cfg).unwrap();
+    let kept = KeptMap::from_groups(&space.groups, &dense_mask);
+    for dt in &dense.params.tensors {
+        let st = shrink.params.get(&dt.name).expect("same tensor set");
+        assert_eq!(
+            bits(&kept.slice(dt).data),
+            bits(&kept.slice(st).data),
+            "{model}: surviving values of `{}` diverged",
+            dt.name
+        );
+    }
+    for (i, (dq, sq)) in dense.q.iter().zip(&shrink.q).enumerate() {
+        assert_eq!(
+            (dq.d.to_bits(), dq.t.to_bits(), dq.qm.to_bits()),
+            (sq.d.to_bits(), sq.t.to_bits(), sq.qm.to_bits()),
+            "{model}: quantizer site {i} diverged"
+        );
+    }
+}
+
+#[test]
+fn shrink_is_bitwise_identical_to_dense_on_mlp() {
+    assert_shrink_matches_dense("mlp_tiny", 0.85, 0.12);
+}
+
+/// The conv + batch-norm path is where bit-exactness is most at risk
+/// (im2col GEMM reductions, per-channel norm statistics): prove the
+/// identity on a real CNN, not just the MLP.
+#[test]
+fn shrink_is_bitwise_identical_to_dense_on_resnet() {
+    assert_shrink_matches_dense("resnet_mini", 0.8, 0.1);
+}
+
+/// Halt a shrink-enabled run mid-schedule (after its first re-plan, so
+/// the checkpoint carries a non-trivial slice map), resume it from the
+/// `.getackpt`, and demand the stitched run be bitwise identical to one
+/// that never stopped — losses, logits, surviving params, quantizers.
+#[test]
+fn halt_resume_is_bitwise_identical_to_uninterrupted() {
+    let model = "mlp_tiny";
+    let exp = || small_exp(model, 0.85, 0.12);
+    let replan = TrainOpts {
+        replan: true,
+        ..Default::default()
+    };
+    let (full, full_mask, full_logits) = run(exp(), &replan);
+    assert!(!full.replans.is_empty(), "schedule never pruned; pick a longer run");
+    // halt two steps after the first re-plan: the checkpoint then holds
+    // sliced params + optimizer stores and a non-empty kept map
+    let halt = (full.replans[0] + 2).min(full.losses.len() - 1);
+    let ckpt = std::env::temp_dir().join(format!(
+        "geta_test_shrink_resume_{}.getackpt",
+        std::process::id()
+    ));
+    let (halted, _, _) = run(
+        exp(),
+        &TrainOpts {
+            replan: true,
+            ckpt: Some(ckpt.clone()),
+            halt_at: Some(halt),
+            ..Default::default()
+        },
+    );
+    assert!(halted.halted, "run must report the halt");
+    assert_eq!(halted.losses.len(), halt, "halted at the wrong step");
+    let (resumed, resumed_mask, resumed_logits) = run(
+        exp(),
+        &TrainOpts {
+            replan: true,
+            resume: Some(ckpt.clone()),
+            ..Default::default()
+        },
+    );
+    std::fs::remove_file(&ckpt).ok();
+    assert!(!resumed.halted);
+    assert_eq!(full_mask, resumed_mask, "final pruned masks diverged across resume");
+    assert_eq!(bits(&full.losses), bits(&resumed.losses), "loss curves diverged across resume");
+    assert_eq!(full_logits, resumed_logits, "eval logits diverged across resume");
+    assert_eq!(
+        full.replans, resumed.replans,
+        "re-plan history diverged across resume"
+    );
+    for ft in &full.params.tensors {
+        let rt = resumed.params.get(&ft.name).expect("same tensor set");
+        assert_eq!(
+            bits(&ft.data),
+            bits(&rt.data),
+            "trained values of `{}` diverged across resume",
+            ft.name
+        );
+    }
+    for (i, (fq, rq)) in full.q.iter().zip(&resumed.q).enumerate() {
+        assert_eq!(
+            (fq.d.to_bits(), fq.t.to_bits(), fq.qm.to_bits()),
+            (rq.d.to_bits(), rq.t.to_bits(), rq.qm.to_bits()),
+            "quantizer site {i} diverged across resume"
+        );
+    }
+}
+
+/// Same halt/resume identity for the plain masked-dense loop (no
+/// re-planning): the checkpoint's kept map is empty and the resume path
+/// must NOT build a shrunken engine.
+#[test]
+fn dense_halt_resume_is_bitwise_identical() {
+    let model = "mlp_tiny";
+    let exp = || small_exp(model, 0.5, 0.12);
+    let (full, _, full_logits) = run(exp(), &TrainOpts::default());
+    let halt = full.losses.len() / 3;
+    let ckpt = std::env::temp_dir().join(format!(
+        "geta_test_dense_resume_{}.getackpt",
+        std::process::id()
+    ));
+    let (halted, _, _) = run(
+        exp(),
+        &TrainOpts {
+            ckpt: Some(ckpt.clone()),
+            halt_at: Some(halt),
+            ..Default::default()
+        },
+    );
+    assert!(halted.halted);
+    let (resumed, _, resumed_logits) = run(
+        exp(),
+        &TrainOpts {
+            resume: Some(ckpt.clone()),
+            ..Default::default()
+        },
+    );
+    std::fs::remove_file(&ckpt).ok();
+    assert_eq!(bits(&full.losses), bits(&resumed.losses), "loss curves diverged across resume");
+    assert_eq!(full_logits, resumed_logits, "eval logits diverged across resume");
+    for ft in &full.params.tensors {
+        let rt = resumed.params.get(&ft.name).expect("same tensor set");
+        assert_eq!(
+            bits(&ft.data),
+            bits(&rt.data),
+            "trained values of `{}` diverged across resume",
+            ft.name
+        );
+    }
+}
+
+/// Periodic checkpointing must not perturb the run: `--ckpt-every` writes
+/// are pure observers of training state.
+#[test]
+fn periodic_checkpoints_do_not_perturb_training() {
+    let model = "mlp_tiny";
+    let exp = || small_exp(model, 0.85, 0.1);
+    let (plain, _, plain_logits) = run(
+        exp(),
+        &TrainOpts {
+            replan: true,
+            ..Default::default()
+        },
+    );
+    let ckpt = std::env::temp_dir().join(format!(
+        "geta_test_periodic_{}.getackpt",
+        std::process::id()
+    ));
+    let (ckpted, _, ckpted_logits) = run(
+        exp(),
+        &TrainOpts {
+            replan: true,
+            ckpt: Some(ckpt.clone()),
+            ckpt_every: 10,
+            ..Default::default()
+        },
+    );
+    // the final periodic checkpoint must itself load cleanly
+    let loaded = geta::coordinator::ckpt::TrainCkpt::load(&ckpt).unwrap();
+    assert_eq!(loaded.model, model);
+    std::fs::remove_file(&ckpt).ok();
+    assert_eq!(bits(&plain.losses), bits(&ckpted.losses));
+    assert_eq!(plain_logits, ckpted_logits);
+}
