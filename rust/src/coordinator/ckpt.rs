@@ -181,8 +181,11 @@ impl TrainCkpt {
         w.0
     }
 
+    /// Crash-safe: goes through [`crate::util::atomic_write`], so a kill
+    /// mid-checkpoint leaves the previous `.getackpt` intact — `--resume`
+    /// never sees a torn file.
     pub fn write(&self, path: &std::path::Path) -> Result<()> {
-        std::fs::write(path, self.to_bytes())
+        crate::util::atomic_write(path, &self.to_bytes())
             .with_context(|| format!("write {}", path.display()))
     }
 
@@ -419,11 +422,12 @@ fn read_store(r: &mut Reader, what: &str) -> Result<ParamStore> {
         for _ in 0..ndim {
             shape.push(r.u32()? as usize);
         }
-        let numel = shape.iter().map(|&d| d as u64).product::<u64>();
-        anyhow::ensure!(
-            numel <= MAX_NUMEL,
-            "{what}: tensor `{name}` numel {numel} too large"
-        );
+        // checked: corrupt dims can otherwise overflow the product
+        let numel = shape
+            .iter()
+            .try_fold(1u64, |acc, &d| acc.checked_mul(d as u64))
+            .filter(|&n| n <= MAX_NUMEL)
+            .ok_or_else(|| anyhow::anyhow!("{what}: tensor `{name}` numel of {shape:?} too large"))?;
         let raw = r.take(numel as usize * 4)?;
         let mut data = Vec::with_capacity(numel as usize);
         for c in raw.chunks_exact(4) {

@@ -207,8 +207,11 @@ impl GetaContainer {
         w.0
     }
 
+    /// Crash-safe: goes through [`crate::util::atomic_write`], so a kill
+    /// mid-export leaves any previous `.geta` at `path` intact — a serving
+    /// process hot-reloading the artifact can never read a torn file.
     pub fn write(&self, path: &std::path::Path) -> Result<()> {
-        std::fs::write(path, self.to_bytes())
+        crate::util::atomic_write(path, &self.to_bytes())
             .with_context(|| format!("write {}", path.display()))
     }
 
@@ -264,8 +267,12 @@ impl GetaContainer {
             for _ in 0..ndim {
                 shape.push(r.u32()? as usize);
             }
-            let numel = shape.iter().map(|&d| d as u64).product::<u64>();
-            anyhow::ensure!(numel <= MAX_NUMEL, "tensor `{name}`: numel {numel} too large");
+            // checked: corrupt dims can otherwise overflow the product
+            let numel = shape
+                .iter()
+                .try_fold(1u64, |acc, &d| acc.checked_mul(d as u64))
+                .filter(|&n| n <= MAX_NUMEL)
+                .ok_or_else(|| anyhow::anyhow!("tensor `{name}`: numel of {shape:?} too large"))?;
             let numel = numel as usize;
             let payload = match r.u8()? {
                 0 => {

@@ -61,15 +61,30 @@
 //!
 //! The **serve** subsystem puts the compressed artifact behind a request
 //! path: `serve::ModelCache` loads each `.geta` model once into an
-//! `Arc<GetaEngine>` shared read-only by every worker, `serve::Server`
-//! fronts it with a bounded queue (typed load-shedding at saturation,
-//! never an unbounded block), a request coalescer that merges queued
-//! requests into one `infer_many` call under a configurable latency
-//! budget — bitwise identical to per-request inference, because each
-//! request keeps its own micro-batch chunk boundaries — and per-request
-//! p50/p95/p99 latency histograms; `serve::loadgen` is the open-loop
+//! `Arc<GetaEngine>` shared read-only by every worker (failed loads are
+//! never cached; `evict` drops replaced artifacts), `serve::Server`
+//! fronts it with a bounded 3-lane priority queue (typed load-shedding
+//! at saturation, never an unbounded block; per-request deadlines
+//! expired in-queue as typed `DeadlineExceeded`), a request coalescer
+//! that merges queued requests into one `infer_many` call under a
+//! configurable latency budget — bitwise identical to per-request
+//! inference, because each request keeps its own micro-batch chunk
+//! boundaries — a **supervised** worker pool (the model call runs under
+//! `catch_unwind`: a panic fails only its own request as typed
+//! `WorkerPanic`, batchmates are re-served solo, and the tainted thread
+//! is retired and respawned), and per-request p50/p95/p99 latency
+//! histograms; `serve::faults` is a seeded, schedule-driven fault
+//! injector (worker panics / latency spikes / poisoned inputs /
+//! transient model errors as a pure function of `(seed, arrival index)`)
+//! behind the `geta bench-serve --faults` chaos soak, zero-cost and
+//! bit-invisible when disarmed; `serve::loadgen` is the open-loop
 //! synthetic load generator behind `geta serve` and `geta bench-serve`
-//! (RPS × batch-window × workers sweeps into `BENCH_serve.json`).
+//! (RPS × batch-window × workers sweeps into `BENCH_serve.json`), whose
+//! pressure mode retries shed submissions under bounded exponential
+//! backoff with deterministic jitter. Artifact writes (`.geta`,
+//! `.getackpt`) go through `util::atomic_write` (temp file + fsync +
+//! rename), so a crash mid-export can never tear the file a server or
+//! `--resume` reads next.
 //!
 //! The **obs** subsystem is the cross-cutting telemetry layer: a span
 //! tracer (per-thread buffers → Chrome trace-event JSON) instrumented at
@@ -80,6 +95,26 @@
 //! via `--trace` / `GETA_TRACE` — with spans kept outside the numeric
 //! kernels so traced and untraced logits are bitwise identical
 //! (`geta profile`, `geta serve --metrics-every`).
+
+// Clippy policy (CI runs `cargo clippy --workspace -- -D warnings`):
+// correctness/suspicious/perf lints stay live; the style lints below are
+// allowed deliberately. The numeric kernels and (de)serializers index with
+// explicit `for i in 0..n` loops and byte-at-a-time copies on purpose —
+// accumulation order is part of the bitwise-determinism contract, so
+// iterator/memcpy rewrites are not behavior-preserving here. Builders like
+// `Arena::new` are internal and not `Default`-shaped APIs; the bench entry
+// points take their full sweep grids as explicit arguments.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::new_without_default,
+    clippy::type_complexity,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+    clippy::len_without_is_empty,
+    clippy::excessive_precision
+)]
 
 pub mod util;
 pub mod obs;

@@ -25,11 +25,26 @@
 //!   geta serve  --model <name> | --file f.geta batched, back-pressured inference
 //!                                              service driven by an open-loop
 //!                                              load generator (--rps/--requests/
-//!                                              --workers/--batch-window-us)
+//!                                              --workers/--batch-window-us;
+//!                                              --deadline-ms N: expire requests
+//!                                              still queued after N ms with a
+//!                                              typed DeadlineExceeded; --faults
+//!                                              <spec> --seed N: arm the
+//!                                              deterministic fault injector)
 //!   geta bench-serve --model <name> [--json]   serving latency/throughput sweep
 //!                                              over RPS x batch-window x workers
 //!                                              (--json: BENCH_serve.json at repo
-//!                                              root)
+//!                                              root). With --faults <spec>
+//!                                              (e.g. panic:0.05,slow:0.05) runs
+//!                                              the chaos soak instead: injected
+//!                                              worker panics / latency spikes /
+//!                                              poisoned inputs / transient model
+//!                                              errors (--seed N, --out f.json;
+//!                                              same seed => byte-identical
+//!                                              summary), asserting liveness,
+//!                                              typed per-request failure, zero
+//!                                              ticket leaks and bitwise survivor
+//!                                              logits
 //!   geta bench-train --model <name> [--json]   training throughput, masked-dense
 //!                                              vs shrink-as-you-train, over
 //!                                              --threads-sweep (--json:
@@ -57,6 +72,18 @@
 //! untraced. `geta serve --metrics-every <secs>` additionally dumps the
 //! process metrics registry (Prometheus text exposition) to stderr on a
 //! timer while the load runs.
+
+// Same clippy policy as lib.rs (the bin is its own crate root): style
+// lints on explicit index loops / wide bench signatures are deliberate.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::new_without_default,
+    clippy::type_complexity,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if
+)]
 
 use anyhow::Result;
 
@@ -144,6 +171,7 @@ fn main() -> Result<()> {
                    geta serve --model mlp_tiny --rps 500 --workers 2 --batch-window-us 500\n\
                    geta serve --file resnet.geta --requests 512 --rps 0\n\
                    geta bench-serve --model mlp_tiny --workers 1,2 --windows-us 0,500 --json\n\
+                   geta bench-serve --model mlp_tiny --faults panic:0.05,slow:0.05 --seed 7\n\
                    geta profile --model mlp_tiny --int8 [--trace trace.json --metrics-out metrics.txt]\n\
                    geta repro all [--steps-scale 0.2]\n\
                    geta bench --iters 20\n\
@@ -578,10 +606,24 @@ fn cmd_serve(a: &Args) -> Result<()> {
         batch_window: std::time::Duration::from_micros(a.usize_or("batch-window-us", 500) as u64),
         max_batch: a.usize_or("max-batch", 8),
     };
+    // --deadline-ms N (0 = none): requests still queued after N ms are
+    // expired with a typed DeadlineExceeded instead of occupying a slot
+    let deadline_ms = a.usize_or("deadline-ms", 0);
     let spec = loadgen::LoadSpec {
         rps: a.f64_or("rps", 500.0),
         requests: a.usize_or("requests", 512),
         clients: a.usize_or("clients", if a.f64_or("rps", 500.0) > 0.0 { 1 } else { 4 }),
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms as u64)),
+        ..Default::default()
+    };
+    // --faults <spec> --seed N arms the deterministic injector (see
+    // serve::faults); unset = the production path, bit-for-bit
+    let plan = match a.opt("faults") {
+        Some(s) => Some(std::sync::Arc::new(geta::serve::FaultPlan::parse(
+            s,
+            a.usize_or("seed", 7) as u64,
+        )?)),
+        None => None,
     };
     println!(
         "serving {key} ({} kernel): {} workers, queue {}, window {}us, max batch {}",
@@ -602,7 +644,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         spec.clients,
         if spec.clients == 1 { "" } else { "s" },
     );
-    let server = Server::start(engine, cfg);
+    let server = Server::start_faulted(engine, cfg, plan.clone());
     // --metrics-every <secs>: dump the process metrics registry (Prometheus
     // text exposition — geta_serve_* counters, queue-depth gauge, latency
     // summary) to stderr on a timer while the load runs
@@ -632,14 +674,29 @@ fn cmd_serve(a: &Args) -> Result<()> {
         eprintln!("--- metrics (final) ---\n{}", geta::obs::metrics::global().exposition());
     }
     println!(
-        "\naccepted {}  shed {}  completed {}  failed {}  batches {} (avg batch {:.2})",
+        "\naccepted {}  shed {}  completed {}  failed {}  expired {}  batches {} (avg batch {:.2})",
         report.stats.accepted,
         report.stats.shed,
         load.completed,
         load.failed,
+        report.stats.expired,
         report.stats.batches,
         load.completed as f64 / report.stats.batches.max(1) as f64,
     );
+    if load.failed > 0 || report.stats.expired > 0 {
+        println!(
+            "failure classes: deadline {}  worker_panic {}  model {}  other {}",
+            load.failed_deadline, load.failed_panic, load.failed_model, load.failed_other,
+        );
+    }
+    if let Some(plan) = &plan {
+        let [p, s, po, t] = plan.injected();
+        println!(
+            "faults injected: panic {p}  slow {s}  poison {po}  transient {t}  \
+             (worker panics {}  restarts {}  dead workers {})",
+            report.stats.worker_panics, report.stats.worker_restarts, report.dead_workers,
+        );
+    }
     println!(
         "throughput {:.0} req/s over {:.2}s",
         load.achieved_rps,
@@ -649,7 +706,100 @@ fn cmd_serve(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `geta bench-serve --faults <spec>`: the chaos soak. Drives a
+/// fault-armed server and **asserts** (exit code, not just a report) the
+/// robustness contract — liveness, typed per-request failure, zero
+/// ticket leaks, bitwise survivor logits. The JSON summary it writes is
+/// deterministic per (model, seed, spec, requests); CI runs it twice and
+/// byte-diffs the two files.
+fn cmd_chaos(a: &Args, spec_str: &str) -> Result<()> {
+    use geta::serve::{faults, loadgen, FaultPlan, ServeConfig};
+    let model = resolve_model(a, "mlp_tiny")?;
+    let kernel = serve_kernel(a);
+    let scale = a.f64_or("steps-scale", 0.08);
+    let sparsity = a.f64_or("sparsity", 0.5);
+    let seed = a.usize_or("seed", 7) as u64;
+    let requests = a.usize_or("requests", 200);
+    let clients = a.usize_or("clients", 4);
+    let plan = std::sync::Arc::new(FaultPlan::parse(spec_str, seed)?);
+    let art = geta::report::train_export(&art_dir(a), &model, scale, sparsity, 8.0)?;
+    let mut engine = geta::deploy::GetaEngine::from_container_kernel(&art.container, kernel)?;
+    engine.threads = 1;
+    let engine = std::sync::Arc::new(engine);
+    let inputs = loadgen::single_sample_inputs(&art.trainer.eval_data, 16);
+    // fault-free reference logits, one per distinct input — survivor
+    // replies must match these bitwise
+    let expected: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| engine.infer(x))
+        .collect::<Result<_>>()?;
+    let cfg = ServeConfig {
+        workers: a.usize_or("workers", 2),
+        queue_depth: a.usize_or("queue-depth", 32),
+        batch_window: std::time::Duration::from_micros(a.usize_or("batch-window-us", 200) as u64),
+        max_batch: a.usize_or("max-batch", 4),
+    };
+    println!(
+        "chaos soak: {model} ({} kernel), {requests} requests x {clients} clients, \
+         faults `{spec_str}` seed {seed}",
+        kernel.label(),
+    );
+    // injected panics are expected traffic here — keep their default
+    // backtrace spew out of the logs for the duration of the soak
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut chaos = faults::chaos_soak(engine, &inputs, &expected, cfg, plan, requests, clients);
+    let _ = std::panic::take_hook();
+    chaos.model = model.clone();
+    println!(
+        "  completed {}  failed: worker_panic {}  model {}  deadline {}  other {}",
+        chaos.completed,
+        chaos.failed_worker_panic,
+        chaos.failed_model,
+        chaos.failed_deadline,
+        chaos.failed_other,
+    );
+    println!(
+        "  injected: panic {}  slow {}  poison {}  transient {}",
+        chaos.injected_panic, chaos.injected_slow, chaos.injected_poison, chaos.injected_transient,
+    );
+    println!(
+        "  mismatched logits {}  unresolved tickets {}  restarts>0 {}  live after {}",
+        chaos.mismatched_logits,
+        chaos.unresolved,
+        chaos.worker_restarts_positive,
+        chaos.server_live_after,
+    );
+    let out = std::path::PathBuf::from(a.opt_or("out", "chaos_serve.json"));
+    geta::report::write_chaos_json(&out, &chaos)?;
+    println!("  wrote {}", out.display());
+    anyhow::ensure!(chaos.unresolved == 0, "chaos soak leaked {} tickets", chaos.unresolved);
+    anyhow::ensure!(
+        chaos.mismatched_logits == 0,
+        "{} surviving requests returned logits differing from the fault-free run",
+        chaos.mismatched_logits
+    );
+    anyhow::ensure!(chaos.failed_other == 0, "untyped failures: {}", chaos.failed_other);
+    anyhow::ensure!(chaos.server_live_after, "server stopped answering after the fault storm");
+    anyhow::ensure!(
+        chaos.completed + chaos.failed_worker_panic + chaos.failed_model + chaos.failed_deadline
+            == chaos.requests,
+        "request accounting does not close"
+    );
+    if chaos.injected_panic > 0 {
+        anyhow::ensure!(
+            chaos.worker_restarts_positive,
+            "panics were injected but no worker was ever respawned"
+        );
+    }
+    println!("chaos soak passed");
+    Ok(())
+}
+
 fn cmd_bench_serve(a: &Args) -> Result<()> {
+    if let Some(spec) = a.opt("faults") {
+        let spec = spec.to_string();
+        return cmd_chaos(a, &spec);
+    }
     let model = resolve_model(a, "mlp_tiny")?;
     let kernel = serve_kernel(a);
     let scale = a.f64_or("steps-scale", 0.08);

@@ -1002,6 +1002,10 @@ pub struct ServeBench {
     pub requests: usize,
     /// Requests admitted to the queue.
     pub accepted: u64,
+    /// Every client `submit` call, retries included — in saturation mode
+    /// `attempts - requests` is pure retry traffic. Kept separate from
+    /// `completed` so retried requests can never inflate throughput rows.
+    pub attempts: usize,
     /// `QueueFull` rejections (open-loop: lost; saturation: retried).
     pub shed: u64,
     /// Requests answered with logits.
@@ -1072,6 +1076,7 @@ pub fn bench_serve(
                     rps,
                     requests,
                     clients: if rps > 0.0 { 1 } else { 4 },
+                    ..Default::default()
                 };
                 let load = loadgen::run(&server, &inputs, &spec);
                 let report = server.shutdown();
@@ -1086,6 +1091,7 @@ pub fn bench_serve(
                     rps_target: rps.max(0.0),
                     requests,
                     accepted: report.stats.accepted,
+                    attempts: load.attempts,
                     shed: report.stats.shed,
                     completed: load.completed,
                     batches: report.stats.batches,
@@ -1117,6 +1123,7 @@ fn serve_row_json(r: &ServeBench) -> crate::util::json::Json {
         ("rps_target", Json::Num(r.rps_target)),
         ("requests", Json::Num(r.requests as f64)),
         ("accepted", Json::Num(r.accepted as f64)),
+        ("attempts", Json::Num(r.attempts as f64)),
         ("shed", Json::Num(r.shed as f64)),
         ("completed", Json::Num(r.completed as f64)),
         ("batches", Json::Num(r.batches as f64)),
@@ -1144,9 +1151,11 @@ const BENCH_SERVE_NOTE: &str =
     "serving latency/throughput sweep; regenerate with `make bench-serve` or `geta bench-serve \
      --json` (latencies are machine-dependent). Rows carry model, kernel, workers, \
      batch_window_us (0 = unbatched, max_batch 1), max_batch, queue_depth, rps_target (0 = \
-     saturation probe with backpressure-aware clients), requests, accepted, shed, completed, \
-     batches, avg_batch, achieved_rps, and latency quantiles p50_us/p95_us/p99_us/mean_us/max_us \
-     from the server's log-bucketed histogram. Writers merge by model: a single-model run \
+     saturation probe with backpressure-aware clients), requests, accepted, attempts (every \
+     submit call, retries included — attempts > requests means the saturation probe retried shed \
+     submissions; completed and achieved_rps count unique completions only, never retry \
+     traffic), shed, completed, batches, avg_batch, achieved_rps, and latency quantiles \
+     p50_us/p95_us/p99_us/mean_us/max_us from the server's log-bucketed histogram. Writers merge by model: a single-model run \
      updates only its own rows. CI regenerates the file on mlp_tiny every run, validates this \
      schema, and asserts saturation throughput with coalescing >= unbatched at the same worker \
      count.";
@@ -1186,6 +1195,53 @@ pub fn write_bench_serve_json(path: &std::path::Path, serve: &[ServeBench]) -> R
     let doc = Json::obj(vec![
         ("note", Json::str(BENCH_SERVE_NOTE)),
         ("serve", Json::Arr(rows)),
+    ]);
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
+}
+
+/// The fixed `note` field of a chaos soak summary.
+const CHAOS_NOTE: &str =
+    "chaos soak summary from `geta bench-serve --faults <spec> --seed N`: requests driven \
+     against a fault-armed server (injected worker panics, latency spikes, poisoned inputs, \
+     transient model errors). Every field is a deterministic function of (model, seed, spec, \
+     requests) — shed totals, batch shapes and raw restart counts depend on thread scheduling \
+     and are deliberately excluded, so two same-seed runs serialize byte-identically (the CI \
+     chaos-smoke contract). mismatched_logits and unresolved must be 0: faults may fail a \
+     request typed, never corrupt a survivor or leak a ticket.";
+
+/// One chaos soak summary as JSON (see [`CHAOS_NOTE`] for the
+/// determinism contract CI byte-diffs against).
+pub fn chaos_json(r: &crate::serve::ChaosReport) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("model", Json::str(&r.model)),
+        ("seed", Json::Num(r.seed as f64)),
+        ("spec", Json::str(&r.spec)),
+        ("requests", Json::Num(r.requests as f64)),
+        ("completed", Json::Num(r.completed as f64)),
+        ("failed_worker_panic", Json::Num(r.failed_worker_panic as f64)),
+        ("failed_model", Json::Num(r.failed_model as f64)),
+        ("failed_deadline", Json::Num(r.failed_deadline as f64)),
+        ("failed_other", Json::Num(r.failed_other as f64)),
+        ("injected_panic", Json::Num(r.injected_panic as f64)),
+        ("injected_slow", Json::Num(r.injected_slow as f64)),
+        ("injected_poison", Json::Num(r.injected_poison as f64)),
+        ("injected_transient", Json::Num(r.injected_transient as f64)),
+        ("mismatched_logits", Json::Num(r.mismatched_logits as f64)),
+        ("unresolved", Json::Num(r.unresolved as f64)),
+        ("worker_restarts_positive", Json::Bool(r.worker_restarts_positive)),
+        ("server_live_after", Json::Bool(r.server_live_after)),
+    ])
+}
+
+/// Write one chaos soak summary to `path` (default `chaos_serve.json`,
+/// gitignored — unlike the BENCH files this is a CI scratch artifact).
+pub fn write_chaos_json(path: &std::path::Path, r: &crate::serve::ChaosReport) -> Result<()> {
+    use crate::util::json::Json;
+    let doc = Json::obj(vec![
+        ("note", Json::str(CHAOS_NOTE)),
+        ("chaos", chaos_json(r)),
     ]);
     std::fs::write(path, doc.to_string())?;
     Ok(())

@@ -41,6 +41,12 @@ impl ModelCache {
 
     /// The engine for a `.geta` artifact — loaded on first request,
     /// shared on every later one.
+    ///
+    /// A **failed** load is never cached: the `?` below returns before
+    /// anything is inserted, so the next `get_or_load` for the same path
+    /// retries from disk — a model that was mid-export (or being repaired)
+    /// becomes servable the moment a valid artifact lands, with no
+    /// process restart. `test_faults.rs` pins this.
     pub fn get_or_load(&self, path: &std::path::Path) -> Result<Arc<GetaEngine>> {
         let key = path.display().to_string();
         let mut engines = self.engines.lock().unwrap_or_else(|e| e.into_inner());
@@ -53,6 +59,18 @@ impl ModelCache {
         let engine = Arc::new(engine);
         engines.insert(key, Arc::clone(&engine));
         Ok(engine)
+    }
+
+    /// Drop the cached engine for `key` (e.g. after its artifact was
+    /// replaced on disk, or a health check condemned it); the next
+    /// `get_or_load` reloads fresh. Returns the evicted engine, which
+    /// in-flight requests may still hold via their own `Arc`s — eviction
+    /// never invalidates a request already being served.
+    pub fn evict(&self, key: &str) -> Option<Arc<GetaEngine>> {
+        self.engines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(key)
     }
 
     /// Seed the cache with an already-built engine (a server that trains

@@ -1,0 +1,529 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a *schedule*, not a dice roll: each request's fate
+//! is a pure function of `(seed, arrival_index)` through a private
+//! xorshift mix — no wall clock, no global RNG — so the same seed and
+//! the same request count mark exactly the same requests with exactly
+//! the same faults on every run, at any worker count. That is what lets
+//! CI run a chaos soak twice and byte-diff the summaries.
+//!
+//! Four fault classes, mirroring how real serving stacks fail:
+//!
+//! | class     | spec key | injected as                                | request outcome          |
+//! |-----------|----------|--------------------------------------------|--------------------------|
+//! | panic     | `panic`  | `panic!` inside the model call (every try) | `ServeError::WorkerPanic`|
+//! | slow      | `slow`   | one-shot sleep before the model call       | completes (late)         |
+//! | poison    | `poison` | input kind corrupted at admission          | `ServeError::Model`      |
+//! | transient | `err`    | one-shot `Err` from the model call         | completes (after retry)  |
+//!
+//! The plan is threaded through [`Server`](super::Server) as an
+//! `Option<Arc<FaultPlan>>`; `None` (the default) adds no branch beyond
+//! one `Option` check per admission and per batch, and the served bits
+//! are identical to a build that never heard of faults. `test_serve.rs`
+//! continues to pin the disarmed path.
+//!
+//! At most one class marks a given request: the unit interval is split
+//! into disjoint probability bands (`panic`, then `slow`, then `poison`,
+//! then `err`), so outcome accounting is exact — under a plan, the soak
+//! in [`chaos_soak`] *knows* how many requests must fail with each typed
+//! error and asserts the server delivered precisely that.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostArray;
+
+use super::loadgen::Backoff;
+use super::{BatchModel, ServeConfig, ServeError, Server, Ticket};
+
+/// The fault classes a [`FaultPlan`] can pin on a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The model call panics while this request is in the batch.
+    Panic,
+    /// The model call sleeps `slow_us` first (once).
+    Slow,
+    /// The request's input is corrupted at admission (wrong dtype).
+    Poison,
+    /// The model call returns `Err` once; the retry succeeds.
+    Transient,
+}
+
+/// Parsed `--faults` spec: per-class probabilities plus the latency-spike
+/// size. Grammar: comma-separated `class:prob[:param]`, e.g.
+/// `panic:0.05,slow:0.1:2000,poison:0.02,err:0.1` (`slow`'s optional
+/// third field is the spike in microseconds, default 2000).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub panic_p: f64,
+    pub slow_p: f64,
+    pub poison_p: f64,
+    pub transient_p: f64,
+    pub slow_us: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            panic_p: 0.0,
+            slow_p: 0.0,
+            poison_p: 0.0,
+            transient_p: 0.0,
+            slow_us: 2000,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse the `--faults` grammar. Errors on unknown classes, bad
+    /// numbers, or probabilities that don't fit in the unit interval
+    /// (classes are disjoint, so they must *sum* to ≤ 1).
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 2 {
+                bail!("fault spec `{part}`: expected class:prob[:param]");
+            }
+            let p: f64 = fields[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault spec `{part}`: bad probability `{}`", fields[1]))?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("fault spec `{part}`: probability {p} outside [0, 1]");
+            }
+            match fields[0] {
+                "panic" => spec.panic_p = p,
+                "slow" => {
+                    spec.slow_p = p;
+                    if let Some(us) = fields.get(2) {
+                        spec.slow_us = us
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("fault spec `{part}`: bad microseconds `{us}`"))?;
+                    }
+                }
+                "poison" => spec.poison_p = p,
+                "err" => spec.transient_p = p,
+                other => bail!("fault spec `{part}`: unknown class `{other}` (panic|slow|poison|err)"),
+            }
+        }
+        let total = spec.panic_p + spec.slow_p + spec.poison_p + spec.transient_p;
+        if total > 1.0 {
+            bail!("fault spec `{s}`: class probabilities sum to {total} > 1 (bands are disjoint)");
+        }
+        Ok(spec)
+    }
+}
+
+/// xorshift64* — the plan's private generator. One mix per request index;
+/// no state is carried between requests, so marking is order-independent.
+fn mix(seed: u64, idx: u64) -> u64 {
+    let mut x = seed ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5DEE_CE66_D1CE_4E5B;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    x = x.wrapping_mul(0x2545_F491_4F6C_DD1D);
+    x ^= x >> 33;
+    x
+}
+
+/// Top 53 bits of a mixed word as a unit-interval f64.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Count of injection events per class, accumulated at admission time
+/// (which is deterministic) — not at fire time (which depends on how
+/// requests happened to coalesce into batches).
+#[derive(Debug, Default)]
+struct Injected {
+    panic: AtomicU64,
+    slow: AtomicU64,
+    poison: AtomicU64,
+    transient: AtomicU64,
+}
+
+/// A seeded, schedule-driven fault injector. See the module docs for the
+/// determinism contract; see [`Server::start_faulted`](super::Server::start_faulted)
+/// for arming one.
+pub struct FaultPlan {
+    seed: u64,
+    spec: FaultSpec,
+    /// One-shot classes (slow, transient) record which request indices
+    /// have already fired, so an isolation retry of a marked request does
+    /// not re-fire the fault. `panic` is intentionally *not* one-shot: a
+    /// panic-marked request brings down every call it rides in, which is
+    /// what forces the typed `WorkerPanic` outcome.
+    spent: Mutex<HashSet<u64>>,
+    injected: Injected,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, spec: FaultSpec) -> FaultPlan {
+        FaultPlan {
+            seed,
+            spec,
+            spent: Mutex::new(HashSet::new()),
+            injected: Injected::default(),
+        }
+    }
+
+    /// `FaultPlan::new` over a parsed `--faults` string.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        Ok(FaultPlan::new(seed, FaultSpec::parse(spec)?))
+    }
+
+    /// The fault (if any) this plan pins on arrival index `idx` — a pure
+    /// function, same answer every call.
+    pub fn fault_for(&self, idx: u64) -> Option<FaultKind> {
+        let u = unit(mix(self.seed, idx));
+        let bands = [
+            (FaultKind::Panic, self.spec.panic_p),
+            (FaultKind::Slow, self.spec.slow_p),
+            (FaultKind::Poison, self.spec.poison_p),
+            (FaultKind::Transient, self.spec.transient_p),
+        ];
+        let mut lo = 0.0;
+        for (kind, p) in bands {
+            if u >= lo && u < lo + p {
+                return Some(kind);
+            }
+            lo += p;
+        }
+        None
+    }
+
+    /// Admission hook: count the mark and, for `Poison`, corrupt the
+    /// input in place (dtype swap — the engine's per-request validation
+    /// rejects it with a typed error, exactly like a malformed client
+    /// payload would be rejected in production).
+    pub(super) fn admit(&self, idx: u64, x: &mut HostArray) {
+        match self.fault_for(idx) {
+            Some(FaultKind::Panic) => {
+                self.injected.panic.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(FaultKind::Slow) => {
+                self.injected.slow.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(FaultKind::Poison) => {
+                self.injected.poison.fetch_add(1, Ordering::Relaxed);
+                *x = match x {
+                    HostArray::F32(_) => HostArray::I32(vec![i32::MIN]),
+                    HostArray::I32(_) => HostArray::F32(vec![f32::NAN]),
+                };
+            }
+            Some(FaultKind::Transient) => {
+                self.injected.transient.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {}
+        }
+    }
+
+    /// Model-call hook, run inside the worker's `catch_unwind` just
+    /// before `infer_many`. Sleeps for unfired `Slow` marks, then either
+    /// panics (any `Panic` mark present) or bails (any unfired
+    /// `Transient` mark — all of them are spent by the one failure, so
+    /// the per-request retry goes through clean).
+    pub(super) fn before_call<I: IntoIterator<Item = u64>>(&self, reqs: I) -> Result<()> {
+        let mut boom: Option<u64> = None;
+        let mut flaky: Option<u64> = None;
+        for idx in reqs {
+            match self.fault_for(idx) {
+                Some(FaultKind::Slow) => {
+                    if self.take_once(idx) {
+                        std::thread::sleep(Duration::from_micros(self.spec.slow_us));
+                    }
+                }
+                Some(FaultKind::Panic) => boom = boom.or(Some(idx)),
+                Some(FaultKind::Transient) => {
+                    if self.take_once(idx) {
+                        flaky = flaky.or(Some(idx));
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some(idx) = boom {
+            panic!("injected worker panic (request #{idx})");
+        }
+        if let Some(idx) = flaky {
+            bail!("injected transient model error (request #{idx})");
+        }
+        Ok(())
+    }
+
+    /// Record a one-shot fault as fired; true exactly once per index.
+    fn take_once(&self, idx: u64) -> bool {
+        self.spent.lock().unwrap_or_else(|e| e.into_inner()).insert(idx)
+    }
+
+    /// Injection counts `[panic, slow, poison, transient]` so far —
+    /// admission-time, hence deterministic for a fixed request count.
+    pub fn injected(&self) -> [u64; 4] {
+        [
+            self.injected.panic.load(Ordering::Relaxed),
+            self.injected.slow.load(Ordering::Relaxed),
+            self.injected.poison.load(Ordering::Relaxed),
+            self.injected.transient.load(Ordering::Relaxed),
+        ]
+    }
+}
+
+/// What one chaos soak observed. Every field is a deterministic function
+/// of `(model artifact, seed, spec, requests)` — counters that depend on
+/// thread scheduling (shed totals, batch shapes, restart *counts*) are
+/// deliberately reduced to booleans or left out, so two same-seed runs
+/// serialize byte-identically (the CI chaos-smoke contract).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChaosReport {
+    pub model: String,
+    pub seed: u64,
+    pub spec: String,
+    pub requests: usize,
+    /// Requests answered with logits.
+    pub completed: usize,
+    pub failed_worker_panic: usize,
+    pub failed_model: usize,
+    pub failed_deadline: usize,
+    /// Any other typed failure (`Dropped`, admission errors surfacing at
+    /// wait time). Zero under every plan — a nonzero value is a bug.
+    pub failed_other: usize,
+    pub injected_panic: u64,
+    pub injected_slow: u64,
+    pub injected_poison: u64,
+    pub injected_transient: u64,
+    /// Successful replies whose logits differed bitwise from the
+    /// fault-free reference. Must be zero: faults may fail a request,
+    /// never corrupt a surviving one.
+    pub mismatched_logits: usize,
+    /// Tickets that neither replied nor failed within the harvest
+    /// timeout. Must be zero: no ticket leaks.
+    pub unresolved: usize,
+    /// True iff the worker restart counter ended positive — implied by
+    /// `injected_panic > 0`, stated as a bool because the raw count
+    /// depends on batching.
+    pub worker_restarts_positive: bool,
+    /// True iff a probe request submitted *after* the fault storm still
+    /// resolved (reply or typed error — either proves liveness).
+    pub server_live_after: bool,
+}
+
+/// Run `requests` requests against a fresh fault-armed [`Server`] and
+/// check every robustness promise at once: liveness, typed per-request
+/// failure, zero ticket leaks, and bitwise parity of surviving logits
+/// against the fault-free `expected` logits (one per entry of `inputs`,
+/// applied round-robin like the submission order).
+///
+/// `clients` threads submit in pressure mode (retry-with-backoff on
+/// `QueueFull`), so arrival indices are exactly `0..requests` and the
+/// plan's marking is reproducible run to run.
+pub fn chaos_soak(
+    model: Arc<dyn BatchModel>,
+    inputs: &[HostArray],
+    expected: &[Vec<f32>],
+    cfg: ServeConfig,
+    plan: Arc<FaultPlan>,
+    requests: usize,
+    clients: usize,
+) -> ChaosReport {
+    assert!(!inputs.is_empty() && inputs.len() == expected.len());
+    let seed = plan.seed;
+    let spec = plan.spec;
+    let server = Server::start_faulted(model, cfg, Some(Arc::clone(&plan)));
+    let clients = clients.max(1);
+
+    // (completed, panic, model, deadline, other, mismatched, unresolved)
+    let mut tally = [0usize; 7];
+    let per_client: Vec<[usize; 7]> = std::thread::scope(|sc| {
+        let server = &server;
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                sc.spawn(move || {
+                    let mut out = [0usize; 7];
+                    let mut tickets: Vec<(usize, Ticket)> = Vec::new();
+                    let mut backoff = Backoff::new(0xC4A0_5EED ^ c as u64);
+                    let mut i = c;
+                    while i < requests {
+                        let x = inputs[i % inputs.len()].clone();
+                        loop {
+                            match server.submit(x.clone()) {
+                                Ok(t) => {
+                                    tickets.push((i % inputs.len(), t));
+                                    backoff.reset();
+                                    break;
+                                }
+                                Err(ServeError::QueueFull { .. }) => {
+                                    std::thread::sleep(backoff.pause());
+                                }
+                                Err(_) => {
+                                    // shutdown mid-soak: counts as unresolved
+                                    out[6] += 1;
+                                    break;
+                                }
+                            }
+                        }
+                        i += clients;
+                    }
+                    for (input_idx, t) in tickets {
+                        match t.wait_timeout_typed(Duration::from_secs(60)) {
+                            Some(Ok(reply)) => {
+                                out[0] += 1;
+                                let want = &expected[input_idx];
+                                let same = reply.logits.len() == want.len()
+                                    && reply
+                                        .logits
+                                        .iter()
+                                        .zip(want)
+                                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                                if !same {
+                                    out[5] += 1;
+                                }
+                            }
+                            Some(Err(ServeError::WorkerPanic { .. })) => out[1] += 1,
+                            Some(Err(ServeError::Model { .. })) => out[2] += 1,
+                            Some(Err(ServeError::DeadlineExceeded { .. })) => out[3] += 1,
+                            Some(Err(_)) => out[4] += 1,
+                            None => out[6] += 1,
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("chaos client panicked"))
+            .collect()
+    });
+    for row in per_client {
+        for (t, v) in tally.iter_mut().zip(row) {
+            *t += v;
+        }
+    }
+
+    // Snapshot injection counts before the probe so they cover exactly
+    // the soak's `requests` arrival indices.
+    let [inj_panic, inj_slow, inj_poison, inj_transient] = plan.injected();
+
+    // Liveness probe: one more request after the storm. Any resolution —
+    // logits or a typed error — proves the server is still answering.
+    let live = match server.submit(inputs[0].clone()) {
+        Ok(t) => t.wait_timeout_typed(Duration::from_secs(60)).is_some(),
+        Err(_) => false,
+    };
+    let report = server.shutdown();
+
+    ChaosReport {
+        model: String::new(),
+        seed,
+        spec: format!(
+            "panic:{}:slow:{}:poison:{}:err:{}:slow_us:{}",
+            spec.panic_p, spec.slow_p, spec.poison_p, spec.transient_p, spec.slow_us
+        ),
+        requests,
+        completed: tally[0],
+        failed_worker_panic: tally[1],
+        failed_model: tally[2],
+        failed_deadline: tally[3],
+        failed_other: tally[4],
+        injected_panic: inj_panic,
+        injected_slow: inj_slow,
+        injected_poison: inj_poison,
+        injected_transient: inj_transient,
+        mismatched_logits: tally[5],
+        unresolved: tally[6],
+        worker_restarts_positive: report.stats.worker_restarts > 0,
+        server_live_after: live,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marking_is_a_pure_function_of_seed_and_index() {
+        let spec = FaultSpec::parse("panic:0.1,slow:0.2,poison:0.1,err:0.2").unwrap();
+        let a = FaultPlan::new(7, spec);
+        let b = FaultPlan::new(7, spec);
+        for idx in 0..2000 {
+            assert_eq!(a.fault_for(idx), b.fault_for(idx));
+            assert_eq!(a.fault_for(idx), a.fault_for(idx), "re-asking must not drift");
+        }
+        let c = FaultPlan::new(8, spec);
+        let diverges = (0..2000).any(|i| a.fault_for(i) != c.fault_for(i));
+        assert!(diverges, "different seeds must mark differently");
+    }
+
+    #[test]
+    fn bands_hit_every_class_and_roughly_match_probabilities() {
+        let spec = FaultSpec::parse("panic:0.1,slow:0.1,poison:0.1,err:0.1").unwrap();
+        let plan = FaultPlan::new(42, spec);
+        let n = 20_000u64;
+        let mut counts = [0usize; 5];
+        for i in 0..n {
+            match plan.fault_for(i) {
+                Some(FaultKind::Panic) => counts[0] += 1,
+                Some(FaultKind::Slow) => counts[1] += 1,
+                Some(FaultKind::Poison) => counts[2] += 1,
+                Some(FaultKind::Transient) => counts[3] += 1,
+                None => counts[4] += 1,
+            }
+        }
+        for (i, &c) in counts[..4].iter().enumerate() {
+            let p = c as f64 / n as f64;
+            assert!((p - 0.1).abs() < 0.02, "class {i} rate {p} far from 0.1");
+        }
+        assert!(counts[4] > 0, "most requests stay unmarked");
+    }
+
+    #[test]
+    fn spec_parser_accepts_the_grammar_and_rejects_garbage() {
+        let s = FaultSpec::parse("panic:0.05,slow:0.1:2500,err:0.2").unwrap();
+        assert_eq!(s.panic_p, 0.05);
+        assert_eq!(s.slow_p, 0.1);
+        assert_eq!(s.slow_us, 2500);
+        assert_eq!(s.transient_p, 0.2);
+        assert_eq!(s.poison_p, 0.0);
+        assert!(FaultSpec::parse("panic").is_err(), "missing probability");
+        assert!(FaultSpec::parse("explode:0.5").is_err(), "unknown class");
+        assert!(FaultSpec::parse("panic:1.5").is_err(), "probability > 1");
+        assert!(FaultSpec::parse("panic:nope").is_err(), "non-numeric");
+        assert!(
+            FaultSpec::parse("panic:0.6,slow:0.6").is_err(),
+            "bands must fit in the unit interval"
+        );
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+    }
+
+    #[test]
+    fn one_shot_classes_fire_once_panic_fires_always() {
+        // A spec that marks everything Transient: band [0, 1).
+        let plan = FaultPlan::new(3, FaultSpec::parse("err:1.0").unwrap());
+        assert!(plan.before_call([5u64]).is_err(), "first call trips the fault");
+        assert!(plan.before_call([5u64]).is_ok(), "retry goes through clean");
+        let boom = FaultPlan::new(3, FaultSpec::parse("panic:1.0").unwrap());
+        for _ in 0..2 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                boom.before_call([5u64])
+            }));
+            assert!(r.is_err(), "panic marks fire on every call");
+        }
+    }
+
+    #[test]
+    fn poison_swaps_the_input_kind() {
+        let plan = FaultPlan::new(1, FaultSpec::parse("poison:1.0").unwrap());
+        let mut x = HostArray::F32(vec![1.0, 2.0]);
+        plan.admit(0, &mut x);
+        assert!(matches!(x, HostArray::I32(_)));
+        assert_eq!(plan.injected(), [0, 0, 1, 0]);
+    }
+}

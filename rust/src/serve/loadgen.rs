@@ -9,22 +9,89 @@
 //! describe the requests the server actually admitted.
 //!
 //! `rps <= 0` flips to **pressure mode**: a closed-loop saturation probe
-//! that retries each rejected submission until admitted. This measures
-//! the server's sustainable throughput under backpressure-aware clients —
-//! the number `bench-serve` compares batched vs unbatched on.
+//! that retries each rejected submission until admitted. Retries pause
+//! under bounded exponential [`Backoff`] with deterministic jitter — a
+//! hot spin would burn a core per client fighting the very workers it is
+//! measuring, and unjittered retries resynchronize into admission
+//! stampedes. This measures the server's sustainable throughput under
+//! backpressure-aware clients — the number `bench-serve` compares
+//! batched vs unbatched on.
+//!
+//! Accounting separates **attempts** (every `submit` call, retries
+//! included) from **submitted** (unique requests) from **completed**
+//! (requests answered with logits): `achieved_rps` is completions per
+//! second, never inflated by retry traffic.
 
 use std::time::{Duration, Instant};
 
 use crate::runtime::HostArray;
 
-use super::{ServeError, Server, Ticket};
+use super::{Priority, ServeError, Server, Ticket};
+
+/// Bounded exponential backoff with deterministic jitter for retrying
+/// shed submissions. The pause sequence is a pure function of the seed
+/// (private xorshift, no global RNG): pauses are drawn uniformly from
+/// `[next/2, next]` and `next` doubles per rejection from
+/// `GETA_BACKOFF_BASE_US` (default 50) up to `GETA_BACKOFF_MAX_US`
+/// (default 5000); an admission resets the ladder.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    next_us: u64,
+    base_us: u64,
+    max_us: u64,
+    rng: u64,
+}
+
+fn env_us(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
+impl Backoff {
+    pub fn new(seed: u64) -> Backoff {
+        let base_us = env_us("GETA_BACKOFF_BASE_US", 50).max(1);
+        let max_us = env_us("GETA_BACKOFF_MAX_US", 5_000).max(base_us);
+        Backoff {
+            next_us: base_us,
+            base_us,
+            max_us,
+            // xorshift has one absorbing state; keep seeds off it
+            rng: seed | 1,
+        }
+    }
+
+    fn rng_next(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// The pause to take after one more rejection (and double the ladder).
+    pub fn pause(&mut self) -> Duration {
+        let span = self.next_us / 2;
+        let jitter = if span == 0 { 0 } else { self.rng_next() % (span + 1) };
+        let sleep_us = (self.next_us - span) + jitter;
+        self.next_us = (self.next_us * 2).min(self.max_us);
+        Duration::from_micros(sleep_us)
+    }
+
+    /// Back to the base pause — call after a successful admission.
+    pub fn reset(&mut self) {
+        self.next_us = self.base_us;
+    }
+}
 
 /// One load-generation run's shape.
 #[derive(Debug, Clone, Copy)]
 pub struct LoadSpec {
     /// Target submissions per second across all clients (`> 0`:
     /// open-loop, shed on `QueueFull`). `<= 0`: pressure mode (retry
-    /// until admitted).
+    /// until admitted, pausing under [`Backoff`]).
     pub rps: f64,
     /// Total requests to submit.
     pub requests: usize,
@@ -32,24 +99,65 @@ pub struct LoadSpec {
     /// across clients; pressure mode uses them to keep the queue full
     /// past a single submitter's syscall rate.
     pub clients: usize,
+    /// Per-request deadline passed to `submit_with` (None = no deadline).
+    pub deadline: Option<Duration>,
+    /// Seeds the per-client backoff jitter streams.
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            rps: 0.0,
+            requests: 0,
+            clients: 1,
+            deadline: None,
+            seed: 0x10AD_6E4E,
+        }
+    }
 }
 
 /// What a load run observed, client-side.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LoadReport {
-    /// Requests the generator attempted (unique requests, not retries).
+    /// Unique requests the generator drove (each counted once, however
+    /// many submission attempts it took).
     pub submitted: usize,
+    /// Every `submit` call, retries included. `attempts - submitted` =
+    /// retry traffic (pressure mode only; open-loop never retries).
+    pub attempts: usize,
     /// Admissions rejected with `QueueFull` (open-loop: lost requests;
     /// pressure mode: retried attempts).
     pub shed: usize,
     /// Requests answered with logits.
     pub completed: usize,
-    /// Requests answered with a model error.
+    /// Requests answered with a typed error (sum of the classes below).
     pub failed: usize,
+    /// … because their queue deadline passed.
+    pub failed_deadline: usize,
+    /// … because the model call panicked with them in the batch.
+    pub failed_panic: usize,
+    /// … because the model call errored (after the bounded retry).
+    pub failed_model: usize,
+    /// … any other typed resolution (`Dropped`; zero in healthy runs).
+    pub failed_other: usize,
     /// First submission to last harvested completion.
     pub wall: Duration,
-    /// `completed / wall` — the throughput the clients actually got.
+    /// `completed / wall` — the throughput the clients actually got
+    /// (completions only; retry attempts never inflate this).
     pub achieved_rps: f64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Tally {
+    submitted: usize,
+    attempts: usize,
+    shed: usize,
+    completed: usize,
+    failed_deadline: usize,
+    failed_panic: usize,
+    failed_model: usize,
+    failed_other: usize,
 }
 
 /// Drive `server` with `spec.requests` requests drawn round-robin from
@@ -64,13 +172,13 @@ pub fn run(server: &Server, inputs: &[HostArray], spec: &LoadSpec) -> LoadReport
         Duration::ZERO
     };
     let t0 = Instant::now();
-    let per_client: Vec<(usize, usize, usize, usize)> = std::thread::scope(|sc| {
+    let per_client: Vec<Tally> = std::thread::scope(|sc| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 sc.spawn(move || {
+                    let mut t = Tally::default();
                     let mut tickets: Vec<Ticket> = Vec::new();
-                    let mut submitted = 0usize;
-                    let mut shed = 0usize;
+                    let mut backoff = Backoff::new(spec.seed ^ (c as u64).wrapping_mul(0x9E37));
                     let mut i = c;
                     'submit: while i < spec.requests {
                         let x = inputs[i % inputs.len()].clone();
@@ -82,42 +190,47 @@ pub fn run(server: &Server, inputs: &[HostArray], spec: &LoadSpec) -> LoadReport
                             if due > now {
                                 std::thread::sleep(due - now);
                             }
-                            submitted += 1;
-                            match server.submit(x) {
-                                Ok(t) => tickets.push(t),
-                                Err(ServeError::QueueFull { .. }) => shed += 1,
-                                Err(ServeError::ShuttingDown) => break 'submit,
+                            t.submitted += 1;
+                            t.attempts += 1;
+                            match server.submit_with(x, Priority::Normal, spec.deadline) {
+                                Ok(tk) => tickets.push(tk),
+                                Err(ServeError::QueueFull { .. }) => t.shed += 1,
+                                Err(_) => break 'submit,
                             }
                         } else {
                             // pressure mode: this request *will* be
                             // admitted; rejections just mean "queue full
-                            // right now"
-                            submitted += 1;
+                            // right now" — pause and come back
+                            t.submitted += 1;
                             loop {
-                                match server.submit(x.clone()) {
-                                    Ok(t) => {
-                                        tickets.push(t);
+                                t.attempts += 1;
+                                match server.submit_with(x.clone(), Priority::Normal, spec.deadline)
+                                {
+                                    Ok(tk) => {
+                                        tickets.push(tk);
+                                        backoff.reset();
                                         break;
                                     }
                                     Err(ServeError::QueueFull { .. }) => {
-                                        shed += 1;
-                                        std::thread::yield_now();
+                                        t.shed += 1;
+                                        std::thread::sleep(backoff.pause());
                                     }
-                                    Err(ServeError::ShuttingDown) => break 'submit,
+                                    Err(_) => break 'submit,
                                 }
                             }
                         }
                         i += clients;
                     }
-                    let mut completed = 0usize;
-                    let mut failed = 0usize;
-                    for t in tickets {
-                        match t.wait() {
-                            Ok(_) => completed += 1,
-                            Err(_) => failed += 1,
+                    for tk in tickets {
+                        match tk.wait_typed() {
+                            Ok(_) => t.completed += 1,
+                            Err(ServeError::DeadlineExceeded { .. }) => t.failed_deadline += 1,
+                            Err(ServeError::WorkerPanic { .. }) => t.failed_panic += 1,
+                            Err(ServeError::Model { .. }) => t.failed_model += 1,
+                            Err(_) => t.failed_other += 1,
                         }
                     }
-                    (submitted, shed, completed, failed)
+                    t
                 })
             })
             .collect();
@@ -131,12 +244,17 @@ pub fn run(server: &Server, inputs: &[HostArray], spec: &LoadSpec) -> LoadReport
         wall,
         ..Default::default()
     };
-    for (submitted, shed, completed, failed) in per_client {
-        r.submitted += submitted;
-        r.shed += shed;
-        r.completed += completed;
-        r.failed += failed;
+    for t in per_client {
+        r.submitted += t.submitted;
+        r.attempts += t.attempts;
+        r.shed += t.shed;
+        r.completed += t.completed;
+        r.failed_deadline += t.failed_deadline;
+        r.failed_panic += t.failed_panic;
+        r.failed_model += t.failed_model;
+        r.failed_other += t.failed_other;
     }
+    r.failed = r.failed_deadline + r.failed_panic + r.failed_model + r.failed_other;
     r.achieved_rps = r.completed as f64 / wall.as_secs_f64().max(1e-9);
     r
 }

@@ -1,40 +1,62 @@
-//! Batched, back-pressured inference serving on top of
-//! [`deploy::GetaEngine`](crate::deploy::GetaEngine).
+//! Batched, back-pressured, **fault-tolerant** inference serving on top
+//! of [`deploy::GetaEngine`](crate::deploy::GetaEngine).
 //!
 //! ```text
-//!              submit()                 coalesce (≤ batch_window,
-//!   clients ─────────────▶ bounded ────▶ ≤ max_batch)        ┌─────────┐
-//!                          queue        worker threads ─────▶│ engine  │
-//!              ServeError::QueueFull      │                  │ (shared,│
-//!   clients ◀───────────── at capacity    │ infer_many       │ Arc)    │
-//!                                         ▼                  └─────────┘
+//!          submit_with(prio,              coalesce (≤ batch_window,
+//!   clients ──deadline)──▶ 3-lane ───────▶ ≤ max_batch)        ┌─────────┐
+//!                          bounded        worker threads ─────▶│ engine  │
+//!          ServeError::    queue            │ catch_unwind     │ (shared,│
+//!   clients ◀─QueueFull─── at capacity      │ + supervision    │ Arc)    │
+//!          ◀─DeadlineExceeded─ on expiry    │ infer_many       └─────────┘
+//!          ◀─WorkerPanic/Model─ per request ▼
 //!                          per-request latency ──▶ LatencyHistogram
 //! ```
 //!
 //! The pieces, each its own module:
 //!
 //! * [`ModelCache`] (`cache`) — loads each `.geta` artifact **once** into
-//!   an `Arc<GetaEngine>` shared read-only by every worker; the
-//!   weight-stationary i8 panels are resident exactly once per model, not
-//!   once per worker.
-//! * [`Server`] (this module) — a bounded request queue with explicit
+//!   an `Arc<GetaEngine>` shared read-only by every worker; a failed load
+//!   is never cached (and [`ModelCache::evict`] can drop a entry whose
+//!   artifact was replaced on disk).
+//! * [`Server`] (this module) — a bounded priority queue with explicit
 //!   load-shedding ([`ServeError::QueueFull`] at capacity, never an
-//!   unbounded block), a request coalescer that merges queued requests
-//!   into one [`BatchModel::infer_many`] call under a configurable
-//!   latency budget (`batch_window`), a worker pool, and per-request
-//!   latency recording into a [`LatencyHistogram`]. Shutdown drains: every
-//!   accepted request completes before [`Server::shutdown`] returns.
+//!   unbounded block), per-request deadlines (entries that expire while
+//!   queued are failed with [`ServeError::DeadlineExceeded`] *before*
+//!   wasting an `infer_many` slot), a request coalescer that merges
+//!   queued requests into one [`BatchModel::infer_many`] call under a
+//!   configurable latency budget (`batch_window`), a **supervised**
+//!   worker pool, and per-request latency recording into a
+//!   [`LatencyHistogram`]. Shutdown drains: every accepted request
+//!   resolves before [`Server::shutdown`] returns — with a reply, a typed
+//!   error, or (backstop) [`ServeError::Dropped`].
+//! * [`faults`] — a seeded, schedule-driven fault injector
+//!   ([`FaultPlan`]) armed via [`Server::start_faulted`]; `None` keeps
+//!   the hot path bitwise identical to an unarmed build.
 //! * [`loadgen`] — an open-loop synthetic load generator (`geta serve` /
-//!   `geta bench-serve`) that submits on a fixed schedule regardless of
-//!   completion, the standard way to surface queueing delay that
-//!   closed-loop clients hide.
+//!   `geta bench-serve`); its pressure mode retries shed submissions
+//!   under bounded exponential [`Backoff`](loadgen::Backoff) with
+//!   deterministic jitter.
+//!
+//! **Failure containment.** The model call runs under
+//! `std::panic::catch_unwind`: a panicking request fails *its own ticket*
+//! with [`ServeError::WorkerPanic`] — batchmates are re-served solo
+//! (bitwise identical results, see below) and the server stays up. A
+//! worker thread that caught a panic is retired after resolving its
+//! batch — panicking mid-kernel can strand thread-local state (e.g. the
+//! [`tensor::serial_scope`] pin) — and a supervisor respawn takes its
+//! place (`ServeStats::worker_restarts`, `geta_serve_worker_restarts`
+//! metric). A model call that returns `Err` gets one bounded solo retry
+//! (transient faults recover; persistent ones fail typed as
+//! [`ServeError::Model`]).
 //!
 //! Determinism: coalescing does **not** change results. The engine's
 //! `infer_many` keeps each request's micro-batch chunk boundaries exactly
 //! as a solo `infer` call would produce them, so batch-statistics
 //! normalization — and therefore every logit — is bitwise identical
-//! whether a request was served alone or merged into a batch, at any
-//! (workers, batch_window) setting. `test_serve.rs` pins this.
+//! whether a request was served alone, merged into a batch, or re-served
+//! solo after a batchmate's fault, at any (workers, batch_window)
+//! setting. `test_serve.rs` pins the clean path; `test_faults.rs` pins
+//! survivor parity under every injected fault class.
 //!
 //! Threading: with more than one worker the server pins the shared tiled
 //! kernels to one thread per worker (`tensor::serial_scope`), so worker
@@ -43,14 +65,16 @@
 //! kernel thread budget.
 
 pub mod cache;
+pub mod faults;
 pub mod histogram;
 pub mod loadgen;
 
 pub use cache::ModelCache;
+pub use faults::{ChaosReport, FaultKind, FaultPlan, FaultSpec};
 pub use histogram::LatencyHistogram;
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -74,9 +98,10 @@ impl BatchModel for crate::deploy::GetaEngine {
     }
 }
 
-/// Typed admission errors — the explicit alternative to blocking the
-/// caller when the service is saturated.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Typed request outcomes other than a reply. Admission errors
+/// (`QueueFull`, `ShuttingDown`) come back from [`Server::submit`]
+/// immediately; the rest resolve a [`Ticket`].
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
     /// The bounded queue is at capacity: the request was **shed**, not
     /// enqueued. Callers retry, back off, or drop — their choice, made
@@ -84,6 +109,19 @@ pub enum ServeError {
     QueueFull { depth: usize },
     /// The server is draining for shutdown and admits no new requests.
     ShuttingDown,
+    /// The request's deadline passed while it sat in the queue; it was
+    /// expired without spending an `infer_many` slot on it.
+    DeadlineExceeded { waited_us: u64 },
+    /// The model call panicked with this request in the batch. The
+    /// worker was supervised: batchmates were re-served, the thread was
+    /// respawned, only this request fails.
+    WorkerPanic { msg: String },
+    /// The model call returned an error for this request (after one
+    /// bounded retry).
+    Model { msg: String },
+    /// Backstop: the request was dropped without a worker answering —
+    /// only reachable if a worker died outside the supervised model call.
+    Dropped,
 }
 
 impl std::fmt::Display for ServeError {
@@ -93,11 +131,45 @@ impl std::fmt::Display for ServeError {
                 write!(f, "request shed: queue at capacity ({depth})")
             }
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::DeadlineExceeded { waited_us } => {
+                write!(f, "deadline exceeded after {waited_us}us in queue")
+            }
+            ServeError::WorkerPanic { msg } => {
+                write!(f, "worker panicked serving this request: {msg}")
+            }
+            // bare message: callers see exactly what the model reported
+            ServeError::Model { msg } => f.write_str(msg),
+            ServeError::Dropped => {
+                write!(f, "request dropped without an answer (unsupervised worker death)")
+            }
         }
     }
 }
 
 impl std::error::Error for ServeError {}
+
+/// Queue lane a request is admitted to. Workers always drain the highest
+/// non-empty lane first; within a lane, FIFO. There is no aging — a
+/// saturated `High` lane starves `Low` by design (shed, don't reorder).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    const COUNT: usize = 3;
+
+    fn lane(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+}
 
 /// Server tuning knobs. The defaults serve single requests immediately
 /// (no added latency) with a small queue; `geta serve` exposes each as a
@@ -106,8 +178,8 @@ impl std::error::Error for ServeError {}
 pub struct ServeConfig {
     /// Worker threads pulling batches off the queue.
     pub workers: usize,
-    /// Bounded queue capacity; submissions beyond it are shed with
-    /// [`ServeError::QueueFull`].
+    /// Bounded queue capacity (all lanes combined); submissions beyond
+    /// it are shed with [`ServeError::QueueFull`].
     pub queue_depth: usize,
     /// How long a worker may hold the oldest queued request back waiting
     /// for more requests to coalesce with. Zero = serve immediately.
@@ -127,17 +199,32 @@ impl Default for ServeConfig {
     }
 }
 
-/// Counters a [`Server`] accumulates over its lifetime.
+/// Counters a [`Server`] accumulates over its lifetime. Invariant after
+/// shutdown: `accepted == completed + expired` (+ any `Dropped`
+/// backstops, which only an unsupervised worker death can produce).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ServeStats {
     /// Requests admitted to the queue.
     pub accepted: u64,
     /// Requests rejected with [`ServeError::QueueFull`].
     pub shed: u64,
-    /// Requests answered (successfully or with a model error).
+    /// Requests answered by a worker (with logits **or** a typed
+    /// failure).
     pub completed: u64,
-    /// `infer_many` calls issued (completed ÷ batches = achieved batch).
+    /// Subset of `completed` answered with a typed failure
+    /// ([`ServeError::Model`] / [`ServeError::WorkerPanic`]).
+    pub failed: u64,
+    /// Requests expired in-queue with [`ServeError::DeadlineExceeded`].
+    pub expired: u64,
+    /// `infer_many` calls issued for whole batches (isolation re-serves
+    /// and retries not included; completed ÷ batches = achieved batch).
     pub batches: u64,
+    /// Bounded solo retries after a model-call `Err`.
+    pub retries: u64,
+    /// Model-call panics caught by the supervisor.
+    pub worker_panics: u64,
+    /// Worker threads retired after a caught panic and respawned.
+    pub worker_restarts: u64,
 }
 
 /// The live form of [`ServeStats`]: relaxed atomics, so the shed path —
@@ -148,7 +235,12 @@ struct AtomicStats {
     accepted: AtomicU64,
     shed: AtomicU64,
     completed: AtomicU64,
+    failed: AtomicU64,
+    expired: AtomicU64,
     batches: AtomicU64,
+    retries: AtomicU64,
+    worker_panics: AtomicU64,
+    worker_restarts: AtomicU64,
 }
 
 impl AtomicStats {
@@ -157,7 +249,12 @@ impl AtomicStats {
             accepted: self.accepted.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
         }
     }
 }
@@ -170,7 +267,11 @@ struct RegistryMirror {
     accepted: obs::metrics::Counter,
     shed: obs::metrics::Counter,
     completed: obs::metrics::Counter,
+    failed: obs::metrics::Counter,
+    expired: obs::metrics::Counter,
     batches: obs::metrics::Counter,
+    panics: obs::metrics::Counter,
+    restarts: obs::metrics::Counter,
     queue_depth: obs::metrics::Gauge,
     latency: obs::metrics::Hist,
 }
@@ -182,7 +283,11 @@ impl RegistryMirror {
             accepted: r.counter("geta_serve_accepted_total"),
             shed: r.counter("geta_serve_shed_total"),
             completed: r.counter("geta_serve_completed_total"),
+            failed: r.counter("geta_serve_failed_total"),
+            expired: r.counter("geta_serve_deadline_expired_total"),
             batches: r.counter("geta_serve_batches_total"),
+            panics: r.counter("geta_serve_worker_panics_total"),
+            restarts: r.counter("geta_serve_worker_restarts"),
             queue_depth: r.gauge("geta_serve_queue_depth"),
             latency: r.histogram("geta_serve_latency_us"),
         }
@@ -198,9 +303,13 @@ pub struct Reply {
 }
 
 /// One-shot completion slot a worker fulfills and a [`Ticket`] waits on.
+/// `answered` tracks fulfillment independently of `done` because the
+/// waiter *takes* the value out — `Pending`'s drop backstop must not
+/// re-fulfill a slot whose answer was already consumed.
 #[derive(Debug)]
 struct ResponseSlot {
-    done: Mutex<Option<Result<Reply, String>>>,
+    done: Mutex<Option<Result<Reply, ServeError>>>,
+    answered: AtomicBool,
     cv: Condvar,
 }
 
@@ -208,13 +317,15 @@ impl ResponseSlot {
     fn new() -> ResponseSlot {
         ResponseSlot {
             done: Mutex::new(None),
+            answered: AtomicBool::new(false),
             cv: Condvar::new(),
         }
     }
 
-    fn fulfill(&self, r: Result<Reply, String>) {
+    fn fulfill(&self, r: Result<Reply, ServeError>) {
         let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
-        debug_assert!(done.is_none(), "response slot fulfilled twice");
+        let was = self.answered.swap(true, Ordering::SeqCst);
+        debug_assert!(!was, "response slot fulfilled twice");
         *done = Some(r);
         self.cv.notify_all();
     }
@@ -229,25 +340,31 @@ pub struct Ticket {
 }
 
 impl Ticket {
-    pub fn wait(self) -> Result<Reply> {
+    /// Block for the typed outcome — the variant callers use to account
+    /// per error class (deadline vs panic vs model error).
+    pub fn wait_typed(self) -> Result<Reply, ServeError> {
         let mut done = self.slot.done.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(r) = done.take() {
-                return r.map_err(|e| anyhow::anyhow!(e));
+                return r;
             }
             done = self.slot.cv.wait(done).unwrap_or_else(|e| e.into_inner());
         }
     }
 
-    /// Like [`wait`](Self::wait) but gives up after `timeout`, returning
-    /// `None` (the request remains in flight and its latency is still
-    /// recorded server-side).
-    pub fn wait_timeout(self, timeout: Duration) -> Option<Result<Reply>> {
+    pub fn wait(self) -> Result<Reply> {
+        self.wait_typed().map_err(anyhow::Error::new)
+    }
+
+    /// Like [`wait_typed`](Self::wait_typed) but gives up after
+    /// `timeout`, returning `None` (the request remains in flight and
+    /// its latency is still recorded server-side).
+    pub fn wait_timeout_typed(self, timeout: Duration) -> Option<Result<Reply, ServeError>> {
         let deadline = Instant::now() + timeout;
         let mut done = self.slot.done.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(r) = done.take() {
-                return Some(r.map_err(|e| anyhow::anyhow!(e)));
+                return Some(r);
             }
             let now = Instant::now();
             if now >= deadline {
@@ -261,19 +378,77 @@ impl Ticket {
             done = d;
         }
     }
+
+    pub fn wait_timeout(self, timeout: Duration) -> Option<Result<Reply>> {
+        self.wait_timeout_typed(timeout)
+            .map(|r| r.map_err(anyhow::Error::new))
+    }
 }
 
 struct Pending {
     x: HostArray,
     enq: Instant,
+    /// Absolute expiry instant, from `submit_with`'s relative deadline.
+    deadline: Option<Instant>,
+    /// Admission-order index — the coordinate a [`FaultPlan`] marks on.
+    arrival: u64,
     slot: Arc<ResponseSlot>,
 }
 
+impl Drop for Pending {
+    /// Backstop for the no-ticket-leaks guarantee: a `Pending` that dies
+    /// unfulfilled (worker death outside the supervised call, future
+    /// logic bug) still resolves its ticket, as [`ServeError::Dropped`].
+    fn drop(&mut self) {
+        if !self.slot.answered.load(Ordering::SeqCst) {
+            self.slot.fulfill(Err(ServeError::Dropped));
+        }
+    }
+}
+
 struct Queue {
-    items: VecDeque<Pending>,
+    /// One FIFO per [`Priority`], drained highest-priority-first.
+    lanes: [VecDeque<Pending>; Priority::COUNT],
+    /// Admission counter; assigns each accepted request its arrival
+    /// index (dense, in admission order — what fault plans key on).
+    arrivals: u64,
     /// False once shutdown begins: no new admissions, workers drain what
     /// remains and exit.
     open: bool,
+}
+
+impl Queue {
+    fn total(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
+
+    /// Enqueue instant of the oldest entry across all lanes (each lane
+    /// is FIFO, so lane fronts are lane-oldest).
+    fn oldest_enq(&self) -> Option<Instant> {
+        self.lanes.iter().filter_map(|l| l.front().map(|p| p.enq)).min()
+    }
+
+    /// Next request in priority order.
+    fn pop_next(&mut self) -> Option<Pending> {
+        self.lanes.iter_mut().find_map(VecDeque::pop_front)
+    }
+}
+
+/// A model-call attempt's outcome, with panics reified as values.
+enum Call {
+    Ok(Vec<Vec<f32>>),
+    Err(String),
+    Panic(String),
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 struct Inner {
@@ -281,120 +456,276 @@ struct Inner {
     cfg: ServeConfig,
     /// Pin kernels to one thread inside each worker (workers > 1).
     serial_workers: bool,
+    /// Armed fault injector; `None` (the default) costs one branch per
+    /// admission and per model call and changes no served bit.
+    faults: Option<Arc<FaultPlan>>,
     q: Mutex<Queue>,
     cv: Condvar,
     hist: Mutex<LatencyHistogram>,
     stats: AtomicStats,
     mirror: RegistryMirror,
+    /// Live worker threads; respawned replacements are pushed here, and
+    /// shutdown joins until it drains.
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Monotonic spawn counter (names respawned threads distinctly).
+    spawn_gen: AtomicU64,
 }
 
 impl Inner {
-    /// Block until a batch is ready (coalescing up to `batch_window` /
-    /// `max_batch`), or return `None` when the queue is closed and empty.
+    /// Block until a batch of live (non-expired) requests is ready
+    /// (coalescing up to `batch_window` / `max_batch`), or return `None`
+    /// when the queue is closed and empty. Entries whose deadline passed
+    /// while queued are expired here — typed, without spending an
+    /// `infer_many` slot.
     fn next_batch(&self) -> Option<Vec<Pending>> {
-        let mut q = self.q.lock().unwrap_or_else(|e| e.into_inner());
         loop {
-            if q.items.is_empty() {
-                if !q.open {
-                    return None;
+            let (batch, expired) = {
+                let mut q = self.q.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    if q.total() == 0 {
+                        if !q.open {
+                            return None;
+                        }
+                        q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+                        continue;
+                    }
+                    // Coalesce: the latency budget runs from the *oldest*
+                    // queued request, so the window bounds added latency
+                    // per request, not per wait. A closing queue serves
+                    // immediately.
+                    let window_end = q.oldest_enq().expect("non-empty queue has an oldest entry")
+                        + self.cfg.batch_window;
+                    while q.open && q.total() < self.cfg.max_batch {
+                        let now = Instant::now();
+                        if now >= window_end {
+                            break;
+                        }
+                        let (qq, timeout) = self
+                            .cv
+                            .wait_timeout(q, window_end - now)
+                            .unwrap_or_else(|e| e.into_inner());
+                        q = qq;
+                        if q.total() == 0 || timeout.timed_out() {
+                            break;
+                        }
+                    }
+                    if q.total() == 0 {
+                        // another worker drained the queue while we coalesced
+                        continue;
+                    }
+                    break;
                 }
-                q = self.cv.wait(q).unwrap_or_else(|e| e.into_inner());
-                continue;
-            }
-            // Coalesce: the latency budget runs from the *oldest* queued
-            // request, so the window bounds added latency per request, not
-            // per wait. A closing queue serves immediately.
-            let deadline = q.items[0].enq + self.cfg.batch_window;
-            while q.open && q.items.len() < self.cfg.max_batch {
                 let now = Instant::now();
-                if now >= deadline {
-                    break;
+                let mut batch = Vec::new();
+                let mut expired = Vec::new();
+                while batch.len() < self.cfg.max_batch.max(1) {
+                    let Some(p) = q.pop_next() else { break };
+                    if p.deadline.is_some_and(|d| now >= d) {
+                        expired.push(p);
+                    } else {
+                        batch.push(p);
+                    }
                 }
-                let (qq, timeout) = self
-                    .cv
-                    .wait_timeout(q, deadline - now)
-                    .unwrap_or_else(|e| e.into_inner());
-                q = qq;
-                if q.items.is_empty() || timeout.timed_out() {
-                    break;
+                self.mirror.queue_depth.set(q.total() as i64);
+                if q.total() > 0 {
+                    // leftover work: hand it to a sibling before we go compute
+                    self.cv.notify_one();
                 }
+                (batch, expired)
+            };
+            // queue lock released: resolve the dead-on-arrival entries
+            let now = Instant::now();
+            for p in expired {
+                self.expire(p, now);
             }
-            if q.items.is_empty() {
-                // another worker drained the queue while we coalesced
-                continue;
+            if !batch.is_empty() {
+                return Some(batch);
             }
-            let take = q.items.len().min(self.cfg.max_batch.max(1));
-            let batch: Vec<Pending> = q.items.drain(..take).collect();
-            self.mirror.queue_depth.set(q.items.len() as i64);
-            if !q.items.is_empty() {
-                // leftover work: hand it to a sibling before we go compute
-                self.cv.notify_one();
-            }
-            return Some(batch);
+            // everything popped had already expired — wait for live work
         }
     }
 
-    fn run_batch(&self, batch: Vec<Pending>) {
+    /// One model-call attempt over `batch`, with the armed fault hook and
+    /// the panic boundary. Worker panics become [`Call::Panic`] values
+    /// (and count into `worker_panics`); they never unwind further.
+    fn invoke(&self, batch: &[Pending]) -> Call {
+        let run = || -> Result<Vec<Vec<f32>>> {
+            if let Some(plan) = &self.faults {
+                plan.before_call(batch.iter().map(|p| p.arrival))?;
+            }
+            let xs: Vec<&HostArray> = batch.iter().map(|p| &p.x).collect();
+            if self.serial_workers {
+                tensor::serial_scope(|| self.model.infer_many(&xs))
+            } else {
+                self.model.infer_many(&xs)
+            }
+        };
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(run)) {
+            Ok(Ok(outs)) => Call::Ok(outs),
+            Ok(Err(e)) => Call::Err(format!("{e:#}")),
+            Err(payload) => {
+                self.stats.worker_panics.fetch_add(1, Ordering::Relaxed);
+                self.mirror.panics.inc();
+                Call::Panic(panic_message(payload.as_ref()))
+            }
+        }
+    }
+
+    fn fulfill_ok(&self, p: Pending, logits: Vec<f32>, done_at: Instant) {
+        let latency = done_at.saturating_duration_since(p.enq);
+        self.hist.lock().unwrap_or_else(|e| e.into_inner()).record(latency);
+        self.mirror.latency.record(latency);
+        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.mirror.completed.inc();
+        p.slot.fulfill(Ok(Reply { logits, latency }));
+    }
+
+    /// Resolve a request with a typed failure. Failed requests count as
+    /// completed (the ticket is answered) but never enter the latency
+    /// histogram, which describes successful replies only.
+    fn fail(&self, p: Pending, e: ServeError) {
+        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.stats.failed.fetch_add(1, Ordering::Relaxed);
+        self.mirror.completed.inc();
+        self.mirror.failed.inc();
+        p.slot.fulfill(Err(e));
+    }
+
+    fn expire(&self, p: Pending, now: Instant) {
+        let waited = now.saturating_duration_since(p.enq);
+        self.stats.expired.fetch_add(1, Ordering::Relaxed);
+        self.mirror.expired.inc();
+        p.slot.fulfill(Err(ServeError::DeadlineExceeded {
+            waited_us: waited.as_micros() as u64,
+        }));
+    }
+
+    /// Resolve one request given its first solo call outcome. `Err` gets
+    /// one bounded retry (transient faults recover); a panic fails typed
+    /// with no retry. Returns true if a panic was caught here.
+    fn resolve_solo(&self, p: Pending, call: Call) -> bool {
+        match call {
+            Call::Ok(mut outs) if outs.len() == 1 => {
+                self.fulfill_ok(p, outs.pop().expect("length checked"), Instant::now());
+                false
+            }
+            Call::Ok(outs) => {
+                self.fail(
+                    p,
+                    ServeError::Model {
+                        msg: format!("model returned {} outputs for 1 request", outs.len()),
+                    },
+                );
+                false
+            }
+            Call::Err(_) => {
+                self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                match self.invoke(std::slice::from_ref(&p)) {
+                    Call::Ok(mut outs) if outs.len() == 1 => {
+                        self.fulfill_ok(p, outs.pop().expect("length checked"), Instant::now());
+                        false
+                    }
+                    Call::Ok(outs) => {
+                        self.fail(
+                            p,
+                            ServeError::Model {
+                                msg: format!("model returned {} outputs for 1 request", outs.len()),
+                            },
+                        );
+                        false
+                    }
+                    Call::Err(second) => {
+                        self.fail(p, ServeError::Model { msg: second });
+                        false
+                    }
+                    Call::Panic(msg) => {
+                        self.fail(p, ServeError::WorkerPanic { msg });
+                        true
+                    }
+                }
+            }
+            Call::Panic(msg) => {
+                self.fail(p, ServeError::WorkerPanic { msg });
+                true
+            }
+        }
+    }
+
+    /// Serve one coalesced batch to resolution. Returns true if any model
+    /// call panicked under this thread (the caller retires it).
+    fn run_batch(&self, batch: Vec<Pending>) -> bool {
         // picked = end of each request's queue wait, start of batch compute
         let picked = obs::enabled().then(Instant::now);
-        let xs: Vec<&HostArray> = batch.iter().map(|p| &p.x).collect();
-        let result = if self.serial_workers {
-            tensor::serial_scope(|| self.model.infer_many(&xs))
-        } else {
-            self.model.infer_many(&xs)
-        };
-        let done = Instant::now();
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
-        self.stats.completed.fetch_add(batch.len() as u64, Ordering::Relaxed);
         self.mirror.batches.inc();
-        self.mirror.completed.add(batch.len() as u64);
+        let call = self.invoke(&batch);
+        let done = Instant::now();
         if let Some(picked) = picked {
             for p in &batch {
                 obs::trace::record_between("serve", "wait".to_string(), p.enq, picked);
             }
-            obs::trace::record_between(
-                "serve",
-                format!("infer[{}]", batch.len()),
-                picked,
-                done,
-            );
+            obs::trace::record_between("serve", format!("infer[{}]", batch.len()), picked, done);
         }
-        match result {
-            Ok(outs) if outs.len() == batch.len() => {
-                let mut hist = self.hist.lock().unwrap_or_else(|e| e.into_inner());
+        match call {
+            Call::Ok(outs) if outs.len() == batch.len() => {
                 for (p, logits) in batch.into_iter().zip(outs) {
-                    let latency = done.saturating_duration_since(p.enq);
-                    hist.record(latency);
-                    self.mirror.latency.record(latency);
-                    p.slot.fulfill(Ok(Reply { logits, latency }));
+                    self.fulfill_ok(p, logits, done);
                 }
                 if picked.is_some() {
                     obs::trace::record_between("serve", "reply".to_string(), done, Instant::now());
                 }
+                false
             }
-            Ok(outs) => {
-                let msg = format!(
-                    "model returned {} outputs for a batch of {}",
-                    outs.len(),
-                    batch.len()
-                );
-                for p in batch {
-                    p.slot.fulfill(Err(msg.clone()));
+            first => {
+                let mut tainted = matches!(first, Call::Panic(_));
+                if batch.len() == 1 {
+                    let p = batch.into_iter().next().expect("length checked");
+                    tainted |= self.resolve_solo(p, first);
+                } else {
+                    // A coalesced batch failed as a unit. Re-serve each
+                    // request alone so one bad request cannot take down its
+                    // batchmates — solo logits are bitwise identical to
+                    // coalesced ones, so survivors lose nothing.
+                    drop(first);
+                    for p in batch {
+                        let call = self.invoke(std::slice::from_ref(&p));
+                        tainted |= self.resolve_solo(p, call);
+                    }
                 }
-            }
-            Err(e) => {
-                // a failed batch fails its requests, never the server
-                let msg = format!("{e:#}");
-                for p in batch {
-                    p.slot.fulfill(Err(msg.clone()));
-                }
+                tainted
             }
         }
     }
 
-    fn worker_loop(&self) {
-        while let Some(batch) = self.next_batch() {
-            self.run_batch(batch);
+    fn spawn_worker(inner: &Arc<Inner>, id: usize) {
+        let nth = inner.spawn_gen.fetch_add(1, Ordering::Relaxed);
+        let name = if nth < inner.cfg.workers.max(1) as u64 {
+            format!("geta-serve-{id}")
+        } else {
+            format!("geta-serve-{id}r{nth}")
+        };
+        let me = Arc::clone(inner);
+        match std::thread::Builder::new().name(name).spawn(move || Inner::worker_loop(&me, id)) {
+            Ok(h) => inner.handles.lock().unwrap_or_else(|e| e.into_inner()).push(h),
+            // Out of threads: degraded but safe — remaining workers (or
+            // the shutdown backstop drain) still resolve every ticket.
+            Err(e) => eprintln!("[serve] could not spawn worker {id}: {e}"),
+        }
+    }
+
+    fn worker_loop(inner: &Arc<Inner>, id: usize) {
+        while let Some(batch) = inner.next_batch() {
+            if inner.run_batch(batch) {
+                // The model call panicked under this thread. Its batch is
+                // fully resolved (typed), but the unwind may have stranded
+                // thread-local state — serial_scope's kernel pin restores
+                // non-guarded, for one — so retire the thread and hand the
+                // loop to a fresh replacement.
+                inner.stats.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                inner.mirror.restarts.inc();
+                Inner::spawn_worker(inner, id);
+                return;
+            }
         }
     }
 }
@@ -404,53 +735,82 @@ impl Inner {
 pub struct ServeReport {
     pub stats: ServeStats,
     pub histogram: LatencyHistogram,
+    /// Worker threads that died *outside* the supervised model call
+    /// (join error at shutdown). Always 0 unless serving code itself —
+    /// not the model — panicked; reported, never re-raised.
+    pub dead_workers: usize,
 }
 
-/// The serving front end: bounded admission, request coalescing, a worker
-/// pool over one shared [`BatchModel`], per-request latency histograms.
-/// See the module docs for the architecture.
+/// The serving front end: bounded admission with priorities and
+/// deadlines, request coalescing, a supervised worker pool over one
+/// shared [`BatchModel`], per-request latency histograms. See the module
+/// docs for the architecture and the failure-containment contract.
 pub struct Server {
     inner: Arc<Inner>,
-    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     pub fn start(model: Arc<dyn BatchModel>, cfg: ServeConfig) -> Server {
+        Server::start_faulted(model, cfg, None)
+    }
+
+    /// [`start`](Self::start) with an armed fault injector. `None` is
+    /// the production path: beyond one `Option` check per admission and
+    /// per model call, the server is bit-for-bit the unarmed one.
+    pub fn start_faulted(
+        model: Arc<dyn BatchModel>,
+        cfg: ServeConfig,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Server {
         let nworkers = cfg.workers.max(1);
         let inner = Arc::new(Inner {
             model,
             serial_workers: nworkers > 1,
+            faults,
             q: Mutex::new(Queue {
-                items: VecDeque::new(),
+                lanes: std::array::from_fn(|_| VecDeque::new()),
+                arrivals: 0,
                 open: true,
             }),
             cv: Condvar::new(),
             hist: Mutex::new(LatencyHistogram::new()),
             stats: AtomicStats::default(),
             mirror: RegistryMirror::new(),
+            handles: Mutex::new(Vec::with_capacity(nworkers)),
+            spawn_gen: AtomicU64::new(0),
             cfg,
         });
-        let workers = (0..nworkers)
-            .map(|i| {
-                let inner = Arc::clone(&inner);
-                std::thread::Builder::new()
-                    .name(format!("geta-serve-{i}"))
-                    .spawn(move || inner.worker_loop())
-                    .expect("spawn serve worker")
-            })
-            .collect();
-        Server { inner, workers }
+        for i in 0..nworkers {
+            Inner::spawn_worker(&inner, i);
+        }
+        Server { inner }
     }
 
-    /// Admit one request. `Ok(Ticket)` means the request **will** be
-    /// answered (drain-on-shutdown included); `Err` is immediate, typed,
-    /// and never blocks.
+    /// Admit one request at [`Priority::Normal`] with no deadline.
+    /// `Ok(Ticket)` means the request **will** be answered
+    /// (drain-on-shutdown included); `Err` is immediate, typed, and
+    /// never blocks.
     pub fn submit(&self, x: HostArray) -> Result<Ticket, ServeError> {
+        self.submit_with(x, Priority::Normal, None)
+    }
+
+    /// Admit one request into a priority lane, optionally with a
+    /// deadline relative to now. A request still queued when its
+    /// deadline passes is failed with [`ServeError::DeadlineExceeded`]
+    /// instead of occupying an `infer_many` slot; once a worker picks it
+    /// up it runs to completion regardless.
+    pub fn submit_with(
+        &self,
+        x: HostArray,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, ServeError> {
+        let mut x = x;
         let mut q = self.inner.q.lock().unwrap_or_else(|e| e.into_inner());
         if !q.open {
             return Err(ServeError::ShuttingDown);
         }
-        if q.items.len() >= self.inner.cfg.queue_depth.max(1) {
+        if q.total() >= self.inner.cfg.queue_depth.max(1) {
             drop(q);
             // lock-free on purpose: shedding happens under overload
             self.inner.stats.shed.fetch_add(1, Ordering::Relaxed);
@@ -459,13 +819,21 @@ impl Server {
                 depth: self.inner.cfg.queue_depth.max(1),
             });
         }
+        let arrival = q.arrivals;
+        q.arrivals += 1;
+        if let Some(plan) = &self.inner.faults {
+            plan.admit(arrival, &mut x);
+        }
         let slot = Arc::new(ResponseSlot::new());
-        q.items.push_back(Pending {
+        let now = Instant::now();
+        q.lanes[priority.lane()].push_back(Pending {
             x,
-            enq: Instant::now(),
+            enq: now,
+            deadline: deadline.map(|d| now + d),
+            arrival,
             slot: Arc::clone(&slot),
         });
-        let depth = q.items.len();
+        let depth = q.total();
         drop(q);
         self.inner.stats.accepted.fetch_add(1, Ordering::Relaxed);
         self.inner.mirror.accepted.inc();
@@ -486,24 +854,50 @@ impl Server {
 
     /// Number of requests currently queued (not yet picked up).
     pub fn queued(&self) -> usize {
-        self.inner.q.lock().unwrap_or_else(|e| e.into_inner()).items.len()
+        self.inner.q.lock().unwrap_or_else(|e| e.into_inner()).total()
     }
 
     /// Stop admissions, **drain every accepted request**, join the
-    /// workers, and return the final accounting. No accepted request is
-    /// lost: tickets taken before shutdown all resolve.
+    /// workers (including any respawned mid-drain), and return the final
+    /// accounting. No accepted request is lost: tickets taken before
+    /// shutdown all resolve — a dead worker is reported in
+    /// [`ServeReport::dead_workers`], never re-raised as a panic.
     pub fn shutdown(self) -> ServeReport {
         {
             let mut q = self.inner.q.lock().unwrap_or_else(|e| e.into_inner());
             q.open = false;
         }
         self.inner.cv.notify_all();
-        for h in self.workers {
-            h.join().expect("serve worker panicked");
+        let mut dead_workers = 0usize;
+        // Joined one at a time because a supervised respawn can push a new
+        // handle while we drain: a retiring worker pushes its replacement
+        // before exiting, so its join implies the replacement is visible.
+        // The guard must drop inside the closure: on edition 2021 a
+        // `while let` scrutinee keeps its temporaries alive through the
+        // body, which would hold the handles lock across `join()` and
+        // deadlock against a respawning worker pushing its handle.
+        let pop_handle = || self.inner.handles.lock().unwrap_or_else(|e| e.into_inner()).pop();
+        while let Some(h) = pop_handle() {
+            if h.join().is_err() {
+                dead_workers += 1;
+            }
         }
+        // Backstop: if workers died unsupervised they may have stranded
+        // queued requests; dropping them resolves each ticket with
+        // `ServeError::Dropped` (see `Pending::drop`).
+        let stranded: Vec<Pending> = {
+            let mut q = self.inner.q.lock().unwrap_or_else(|e| e.into_inner());
+            let mut v = Vec::new();
+            while let Some(p) = q.pop_next() {
+                v.push(p);
+            }
+            v
+        };
+        drop(stranded);
         ServeReport {
             stats: self.inner.stats.snapshot(),
             histogram: self.inner.hist.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+            dead_workers,
         }
     }
 }

@@ -12,3 +12,74 @@ pub mod cli;
 pub mod bench;
 pub mod prop;
 pub mod table;
+
+/// Crash-safe file replacement: write `bytes` to a temp file in the
+/// target's directory, fsync it, then atomically rename over `path`
+/// (same-filesystem rename is atomic on every platform we build for).
+///
+/// The invariant callers get: **at every instant, `path` either holds
+/// its previous complete contents or the new complete contents** — a
+/// crash, kill, or full disk mid-write leaves the previous artifact
+/// intact and readable. `.geta` containers and `.getackpt` training
+/// checkpoints (what `--resume` replays from) both write through here;
+/// `test_deploy.rs` / `test_shrink.rs` pin the mid-write-crash story.
+///
+/// The temp name embeds the pid so two processes exporting side by side
+/// cannot collide on the scratch file; last rename wins the target,
+/// which is the same guarantee plain `fs::write` had. On any error the
+/// scratch file is cleaned up.
+pub fn atomic_write(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "artifact".to_string());
+    let tmp = path.with_file_name(format!(".{name}.{}.tmp", std::process::id()));
+    let res = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        // data must be durable *before* the rename publishes it, or a
+        // power cut could publish a hole
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        // best effort: make the rename itself durable (directory entry)
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    })();
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn atomic_write_replaces_and_survives_a_simulated_crash() {
+        let dir = std::env::temp_dir().join(format!("geta_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("artifact.bin");
+
+        super::atomic_write(&target, b"generation-1").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"generation-1");
+
+        // A crash mid-write is a stray truncated temp file; the published
+        // artifact must be untouched by its existence.
+        let stray = dir.join(format!(".artifact.bin.{}.tmp", std::process::id()));
+        std::fs::write(&stray, b"gen").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"generation-1");
+
+        // The next successful write claims the scratch name and replaces
+        // the artifact whole.
+        super::atomic_write(&target, b"generation-2-longer").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"generation-2-longer");
+        assert!(!stray.exists(), "scratch file is consumed by the rename");
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -35,3 +35,37 @@ pub fn skip_or_panic(model: &str, err: &anyhow::Error) {
     assert!(!pjrt_ready, "{model} backend should be available but failed: {err}");
     eprintln!("skipping {model}: {err}");
 }
+
+/// Corruption sweep for a strict binary reader (`parses` returns whether
+/// the bytes parsed): at every 64-byte window boundary, (a) the prefix
+/// truncated there must *fail* — typed, never a panic — and (b) flipping
+/// one bit there must never panic the reader (a typed error or a benign
+/// payload change are both acceptable; silent acceptance of a truncation
+/// is not). Pins the crash-safety half of the serving story: a torn or
+/// damaged artifact must be rejected, not served.
+#[allow(dead_code)]
+pub fn assert_corruption_safe(label: &str, bytes: &[u8], parses: &dyn Fn(&[u8]) -> bool) {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    assert!(parses(bytes), "{label}: pristine bytes must parse");
+    let mut off = 0;
+    while off < bytes.len() {
+        match catch_unwind(AssertUnwindSafe(|| parses(&bytes[..off]))) {
+            Ok(ok) => assert!(
+                !ok,
+                "{label}: truncation to {off}/{} bytes parsed as valid",
+                bytes.len()
+            ),
+            Err(_) => panic!("{label}: truncation to {off} bytes panicked the reader"),
+        }
+        let mut flipped = bytes.to_vec();
+        flipped[off] ^= 0x80;
+        assert!(
+            catch_unwind(AssertUnwindSafe(|| {
+                parses(&flipped);
+            }))
+            .is_ok(),
+            "{label}: flipping bit 7 of byte {off} panicked the reader"
+        );
+        off += 64;
+    }
+}

@@ -184,6 +184,21 @@ fn roundtrip(model: &str, sparsity: f64, check_speed: bool) {
     }
 }
 
+/// A `.geta` container damaged on disk — truncated or bit-flipped at any
+/// 64-byte window — must be rejected with a typed error (truncations) and
+/// must never panic or over-allocate the strict reader (bit flips may at
+/// worst land in payload bits and parse benignly). This is the artifact a
+/// server loads at request time; damage has to fail the load, not the
+/// process (`ModelCache` then retries once a valid artifact lands).
+#[test]
+fn corrupt_geta_containers_fail_typed_never_panic() {
+    let art = geta::report::train_export(&art_dir(), "mlp_tiny", 0.1, 0.5, 8.0).unwrap();
+    let bytes = art.container.to_bytes();
+    common::assert_corruption_safe(".geta", &bytes, &|b| {
+        deploy::GetaContainer::from_bytes(b).is_ok()
+    });
+}
+
 #[test]
 fn roundtrip_mlp() {
     roundtrip("mlp_tiny", 0.5, true);

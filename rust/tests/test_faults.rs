@@ -1,0 +1,504 @@
+//! Fault-tolerance obligations (`geta::serve` under an armed
+//! [`FaultPlan`]):
+//!
+//! 1. **Typed per-request failure** — under every injected fault class
+//!    the victim fails with the matching `ServeError` variant; its
+//!    batchmates are unaffected.
+//! 2. **Survivor parity** — every request that completes under a fault
+//!    storm returns logits bitwise identical to a fault-free run.
+//! 3. **Supervision** — a model-call panic retires the worker thread and
+//!    a respawn takes its place; the server keeps serving and shuts down
+//!    with zero dead workers.
+//! 4. **Deadlines** — requests whose deadline passes in-queue fail typed
+//!    with `DeadlineExceeded` without spending a model call.
+//! 5. **No ticket leaks** — every accepted request resolves (reply or
+//!    typed error), pinned by the chaos soak's `unresolved == 0`.
+//! 6. **Determinism** — same seed, same spec, same request count ⇒
+//!    byte-identical `ChaosReport`, the contract CI's chaos-smoke job
+//!    byte-diffs on.
+//!
+//! Fault marking is a pure function of `(seed, arrival index)`, so the
+//! tests *derive* the expected outcome of each request from
+//! `FaultPlan::fault_for` instead of hard-coding counts; seeds are
+//! searched (cheaply, over the pure function) until the classes a test
+//! needs are all represented.
+
+mod common;
+
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use common::art_dir;
+use geta::deploy::{GetaContainer, GetaEngine, KernelKind};
+use geta::runtime::HostArray;
+use geta::serve::loadgen::Backoff;
+use geta::serve::{
+    faults, BatchModel, FaultKind, FaultPlan, FaultSpec, ModelCache, Priority, ServeConfig,
+    ServeError, Server,
+};
+
+struct Setup {
+    container: GetaContainer,
+    singles: Vec<HostArray>,
+}
+
+fn setup() -> &'static Setup {
+    static CELL: OnceLock<Setup> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let art = geta::report::train_export(&art_dir(), "mlp_tiny", 0.1, 0.5, 8.0)
+            .expect("mlp_tiny trains natively");
+        let singles = geta::serve::loadgen::single_sample_inputs(&art.trainer.eval_data, 8);
+        Setup {
+            container: art.container,
+            singles,
+        }
+    })
+}
+
+fn engine() -> Arc<GetaEngine> {
+    let mut e = GetaEngine::from_container_kernel(&setup().container, KernelKind::Int8)
+        .expect("container round-trips");
+    e.threads = 1;
+    Arc::new(e)
+}
+
+/// First seed whose plan marks at least one request of every kind in
+/// `need` — and leaves at least one request unmarked — within the first
+/// `n` arrival indices. Pure-function search: no server involved.
+fn seed_with(spec: FaultSpec, n: u64, need: &[FaultKind]) -> u64 {
+    (0..10_000u64)
+        .find(|&s| {
+            let plan = FaultPlan::new(s, spec);
+            let marks: Vec<_> = (0..n).map(|i| plan.fault_for(i)).collect();
+            need.iter().all(|k| marks.contains(&Some(*k))) && marks.contains(&None)
+        })
+        .expect("a seed covering every needed class exists")
+}
+
+// ---------------------------------------------------------------- 1 + 2 + 3
+#[test]
+fn injected_faults_fail_typed_and_survivors_stay_bitwise_intact() {
+    let s = setup();
+    let e = engine();
+    let n = 24u64;
+    let spec = FaultSpec::parse("panic:0.2,poison:0.2,err:0.2").unwrap();
+    let seed = seed_with(
+        spec,
+        n,
+        &[FaultKind::Panic, FaultKind::Poison, FaultKind::Transient],
+    );
+    let plan = Arc::new(FaultPlan::new(seed, spec));
+    let marks: Vec<Option<FaultKind>> = (0..n).map(|i| plan.fault_for(i)).collect();
+    let n_panic = marks.iter().filter(|m| **m == Some(FaultKind::Panic)).count();
+    let n_poison = marks.iter().filter(|m| **m == Some(FaultKind::Poison)).count();
+
+    let direct: Vec<Vec<f32>> = s.singles.iter().map(|x| e.infer(x).unwrap()).collect();
+    let server = Server::start_faulted(
+        e,
+        ServeConfig {
+            workers: 2,
+            queue_depth: 64,
+            batch_window: Duration::from_micros(300),
+            max_batch: 4,
+        },
+        Some(Arc::clone(&plan)),
+    );
+    // one submitter thread ⇒ arrival indices equal submission order
+    let tickets: Vec<_> = (0..n as usize)
+        .map(|i| {
+            let x = s.singles[i % s.singles.len()].clone();
+            (i, server.submit(x).expect("queue has room"))
+        })
+        .collect();
+    for (i, t) in tickets {
+        let outcome = t.wait_typed();
+        match marks[i] {
+            Some(FaultKind::Panic) => {
+                let err = outcome.expect_err("panic-marked request must fail");
+                assert!(
+                    matches!(err, ServeError::WorkerPanic { .. }),
+                    "request {i}: expected WorkerPanic, got {err:?}"
+                );
+            }
+            Some(FaultKind::Poison) => {
+                let err = outcome.expect_err("poisoned request must fail");
+                match &err {
+                    ServeError::Model { msg } => assert!(
+                        msg.contains("model expects"),
+                        "request {i}: poison must surface the engine's input validation: {msg}"
+                    ),
+                    other => panic!("request {i}: expected Model error, got {other:?}"),
+                }
+            }
+            // Slow completes late, Transient recovers, unmarked just works —
+            // and all of them must match the fault-free logits bit for bit.
+            _ => {
+                let reply = outcome.unwrap_or_else(|e| panic!("request {i} failed: {e:?}"));
+                let want = &direct[i % s.singles.len()];
+                assert_eq!(reply.logits.len(), want.len());
+                assert!(
+                    reply.logits.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "request {i}: survivor logits drifted under the fault storm"
+                );
+            }
+        }
+    }
+    let report = server.shutdown();
+    assert_eq!(report.stats.accepted, n);
+    assert_eq!(report.stats.completed, n, "every ticket answered by a worker");
+    assert_eq!(report.stats.failed, (n_panic + n_poison) as u64);
+    assert_eq!(report.stats.expired, 0);
+    assert!(report.stats.worker_panics >= n_panic as u64);
+    assert!(
+        report.stats.worker_restarts >= 1,
+        "a caught panic must retire and respawn the worker"
+    );
+    assert_eq!(report.dead_workers, 0, "supervised workers exit cleanly");
+    let [inj_panic, _, inj_poison, _] = plan.injected();
+    assert_eq!(inj_panic as usize, n_panic);
+    assert_eq!(inj_poison as usize, n_poison);
+    // failures never enter the latency histogram
+    assert_eq!(
+        report.histogram.count(),
+        n - (n_panic + n_poison) as u64
+    );
+}
+
+// ---------------------------------------------------------------- transient
+#[test]
+fn transient_errors_recover_via_one_bounded_retry() {
+    let s = setup();
+    let e = engine();
+    let direct: Vec<Vec<f32>> = s.singles.iter().map(|x| e.infer(x).unwrap()).collect();
+    let n = 10usize;
+    // every request transient, max_batch 1 ⇒ every first call errs and
+    // every retry succeeds: exactly n retries, zero failures
+    let plan = Arc::new(FaultPlan::new(5, FaultSpec::parse("err:1.0").unwrap()));
+    let server = Server::start_faulted(
+        e,
+        ServeConfig {
+            workers: 1,
+            queue_depth: 64,
+            batch_window: Duration::ZERO,
+            max_batch: 1,
+        },
+        Some(plan),
+    );
+    let tickets: Vec<_> = (0..n)
+        .map(|i| server.submit(s.singles[i % s.singles.len()].clone()).unwrap())
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let reply = t.wait_typed().expect("transient faults must recover");
+        let want = &direct[i % s.singles.len()];
+        assert!(
+            reply.logits.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "request {i}: retried logits drifted"
+        );
+    }
+    let report = server.shutdown();
+    assert_eq!(report.stats.retries, n as u64);
+    assert_eq!(report.stats.failed, 0);
+    assert_eq!(report.stats.completed, n as u64);
+    assert_eq!(report.stats.worker_restarts, 0, "errors are not panics");
+}
+
+/// Deliberately slow model (same double as test_serve.rs): makes queue
+/// occupancy deterministic.
+struct SleepyModel {
+    delay: Duration,
+}
+
+impl BatchModel for SleepyModel {
+    fn infer_many(&self, xs: &[&HostArray]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.delay);
+        Ok(xs.iter().map(|x| vec![x.len() as f32]).collect())
+    }
+}
+
+fn tiny_request() -> HostArray {
+    HostArray::F32(vec![1.0, 2.0])
+}
+
+/// Block until the queue is empty (the busy request was picked up).
+fn wait_queue_empty(server: &Server) {
+    for _ in 0..2000 {
+        if server.queued() == 0 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("queue never drained to the worker");
+}
+
+// ---------------------------------------------------------------- 4
+#[test]
+fn deadlines_expire_queued_requests_typed_without_a_model_call() {
+    let server = Server::start(
+        Arc::new(SleepyModel {
+            delay: Duration::from_millis(40),
+        }),
+        ServeConfig {
+            workers: 1,
+            queue_depth: 64,
+            batch_window: Duration::ZERO,
+            max_batch: 1,
+        },
+    );
+    // occupy the single worker for 40ms…
+    let busy = server.submit(tiny_request()).unwrap();
+    wait_queue_empty(&server);
+    // …then queue requests that can only expire behind it
+    let k = 4usize;
+    let doomed: Vec<_> = (0..k)
+        .map(|_| {
+            server
+                .submit_with(tiny_request(), Priority::Normal, Some(Duration::from_millis(1)))
+                .unwrap()
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(10)); // all k are now past-deadline
+    for t in doomed {
+        match t.wait_typed() {
+            Err(ServeError::DeadlineExceeded { waited_us }) => {
+                assert!(waited_us >= 1_000, "must report at least the 1ms deadline, got {waited_us}us");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+    busy.wait_typed().expect("no-deadline request completes");
+    // expiry cost no model call and the server is still live
+    let probe = server.submit(tiny_request()).unwrap();
+    probe.wait_typed().expect("server live after expiries");
+    let report = server.shutdown();
+    assert_eq!(report.stats.expired, k as u64);
+    assert_eq!(report.stats.completed, 2);
+    assert_eq!(report.stats.failed, 0, "expiry is not a worker failure");
+    assert_eq!(
+        report.stats.accepted,
+        report.stats.completed + report.stats.expired,
+        "accounting must close: accepted == completed + expired"
+    );
+    assert_eq!(report.stats.batches, 2, "expired requests never reach infer_many");
+    assert_eq!(report.histogram.count(), 2);
+}
+
+// ---------------------------------------------------------------- priority
+#[test]
+fn high_priority_lane_is_served_before_older_low_priority_work() {
+    let server = Server::start(
+        Arc::new(SleepyModel {
+            delay: Duration::from_millis(20),
+        }),
+        ServeConfig {
+            workers: 1,
+            queue_depth: 64,
+            batch_window: Duration::ZERO,
+            max_batch: 1,
+        },
+    );
+    let busy = server.submit(tiny_request()).unwrap();
+    wait_queue_empty(&server);
+    // two Low requests enqueued *before* one High
+    let lows: Vec<_> = (0..2)
+        .map(|_| server.submit_with(tiny_request(), Priority::Low, None).unwrap())
+        .collect();
+    let high = server.submit_with(tiny_request(), Priority::High, None).unwrap();
+    let h = high.wait_typed().expect("high-priority served");
+    let low_replies: Vec<_> = lows
+        .into_iter()
+        .map(|t| t.wait_typed().expect("low-priority served eventually"))
+        .collect();
+    // High was submitted last (shortest possible wait) yet served first
+    // (earliest completion): its measured latency must undercut both Low
+    // latencies by at least one 20ms service slot.
+    for (i, l) in low_replies.iter().enumerate() {
+        assert!(
+            h.latency < l.latency,
+            "lane order violated: high latency {:?} !< low[{i}] latency {:?}",
+            h.latency,
+            l.latency
+        );
+    }
+    busy.wait_typed().unwrap();
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------- 5
+#[test]
+fn chaos_soak_leaks_no_tickets_and_accounts_every_outcome() {
+    let s = setup();
+    let e = engine();
+    let requests = 120usize;
+    let spec = FaultSpec::parse("panic:0.1,slow:0.05:500,poison:0.1,err:0.15").unwrap();
+    let seed = seed_with(
+        spec,
+        requests as u64,
+        &[
+            FaultKind::Panic,
+            FaultKind::Slow,
+            FaultKind::Poison,
+            FaultKind::Transient,
+        ],
+    );
+    let plan = Arc::new(FaultPlan::new(seed, spec));
+    // expected marks from a twin plan (pure function of seed + index)
+    let twin = FaultPlan::new(seed, spec);
+    let marks: Vec<_> = (0..requests as u64).map(|i| twin.fault_for(i)).collect();
+    let count = |k: FaultKind| marks.iter().filter(|m| **m == Some(k)).count();
+    let (n_panic, n_slow, n_poison, n_transient) = (
+        count(FaultKind::Panic),
+        count(FaultKind::Slow),
+        count(FaultKind::Poison),
+        count(FaultKind::Transient),
+    );
+    let expected: Vec<Vec<f32>> = s.singles.iter().map(|x| e.infer(x).unwrap()).collect();
+    let chaos = faults::chaos_soak(
+        e,
+        &s.singles,
+        &expected,
+        ServeConfig {
+            workers: 2,
+            queue_depth: 16,
+            batch_window: Duration::from_micros(200),
+            max_batch: 4,
+        },
+        plan,
+        requests,
+        3,
+    );
+    assert_eq!(chaos.unresolved, 0, "no ticket may leak");
+    assert_eq!(chaos.mismatched_logits, 0, "survivors must be bitwise intact");
+    assert_eq!(chaos.failed_other, 0);
+    assert_eq!(chaos.failed_deadline, 0, "no deadlines were set");
+    assert!(chaos.server_live_after, "server must answer after the storm");
+    // the soak's outcome is *exactly* determined by the marking
+    assert_eq!(chaos.injected_panic as usize, n_panic);
+    assert_eq!(chaos.injected_slow as usize, n_slow);
+    assert_eq!(chaos.injected_poison as usize, n_poison);
+    assert_eq!(chaos.injected_transient as usize, n_transient);
+    assert_eq!(chaos.failed_worker_panic, n_panic);
+    assert_eq!(chaos.failed_model, n_poison);
+    assert_eq!(
+        chaos.completed,
+        requests - n_panic - n_poison,
+        "slow + transient + unmarked all complete"
+    );
+    assert!(chaos.worker_restarts_positive, "panics must drive respawns");
+}
+
+/// Cheap deterministic model with engine-like input validation: doubles as
+/// the fault-free reference for the determinism soak (the real engine is
+/// exercised by the soak above; this one pins byte-level repeatability).
+struct StrictModel;
+
+impl BatchModel for StrictModel {
+    fn infer_many(&self, xs: &[&HostArray]) -> anyhow::Result<Vec<Vec<f32>>> {
+        xs.iter()
+            .enumerate()
+            .map(|(r, x)| match x {
+                HostArray::F32(v) => Ok(vec![v.iter().sum::<f32>(), v.len() as f32]),
+                HostArray::I32(_) => anyhow::bail!("request {r}: model expects F32 inputs"),
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------- 6
+#[test]
+fn same_seed_chaos_soaks_produce_identical_reports() {
+    let inputs = vec![
+        HostArray::F32(vec![1.0, 2.0, 3.0]),
+        HostArray::F32(vec![0.5, -1.5]),
+    ];
+    let expected: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|x| match x {
+            HostArray::F32(v) => vec![v.iter().sum::<f32>(), v.len() as f32],
+            HostArray::I32(_) => unreachable!(),
+        })
+        .collect();
+    let spec = FaultSpec::parse("panic:0.1,slow:0.05:200,poison:0.1,err:0.1").unwrap();
+    let seed = seed_with(
+        spec,
+        60,
+        &[FaultKind::Panic, FaultKind::Poison, FaultKind::Transient],
+    );
+    let cfg = ServeConfig {
+        workers: 2,
+        queue_depth: 8,
+        batch_window: Duration::from_micros(100),
+        max_batch: 4,
+    };
+    let run = || {
+        faults::chaos_soak(
+            Arc::new(StrictModel),
+            &inputs,
+            &expected,
+            cfg.clone(),
+            Arc::new(FaultPlan::new(seed, spec)),
+            60,
+            2,
+        )
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a, b, "same seed + spec + requests must reproduce exactly");
+    assert_eq!(a.unresolved, 0);
+    assert_eq!(a.mismatched_logits, 0);
+    assert!(a.injected_panic > 0 && a.injected_poison > 0 && a.injected_transient > 0);
+    assert_eq!(
+        a.completed,
+        60 - a.failed_worker_panic - a.failed_model,
+        "accounting closes in both runs"
+    );
+}
+
+// ---------------------------------------------------------------- cache
+#[test]
+fn model_cache_never_caches_failed_loads_and_evicts_cleanly() {
+    let s = setup();
+    let path = std::env::temp_dir().join("geta_test_faults_cache.geta");
+    let key = path.display().to_string();
+    let cache = ModelCache::new(KernelKind::Int8);
+    // a torn/garbage artifact must fail the load *and leave no entry*
+    std::fs::write(&path, b"definitely not a geta container").unwrap();
+    assert!(cache.get_or_load(&path).is_err());
+    assert_eq!(cache.len(), 0, "failed loads are never cached");
+    // the moment a valid artifact lands on the same path, it serves —
+    // no restart, no stale negative entry
+    std::fs::write(&path, s.container.to_bytes()).unwrap();
+    let a = cache.get_or_load(&path).expect("repaired artifact loads");
+    assert_eq!(cache.len(), 1);
+    // eviction drops the entry but never an in-flight Arc
+    let evicted = cache.evict(&key).expect("entry was cached");
+    assert!(Arc::ptr_eq(&a, &evicted));
+    assert!(cache.is_empty());
+    assert!(a.infer(&s.singles[0]).is_ok(), "evicted engines still serve holders");
+    assert!(cache.evict(&key).is_none(), "double evict is a no-op");
+    let b = cache.get_or_load(&path).expect("reload after evict");
+    assert!(!Arc::ptr_eq(&a, &b), "evict forces a fresh load");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------- backoff
+#[test]
+fn backoff_is_deterministic_bounded_and_resettable() {
+    let mut a = Backoff::new(123);
+    let mut b = Backoff::new(123);
+    let seq_a: Vec<Duration> = (0..12).map(|_| a.pause()).collect();
+    let seq_b: Vec<Duration> = (0..12).map(|_| b.pause()).collect();
+    assert_eq!(seq_a, seq_b, "same seed ⇒ same jittered pause sequence");
+    let max = Duration::from_micros(5_000);
+    for (i, p) in seq_a.iter().enumerate() {
+        assert!(*p > Duration::ZERO, "pause {i} must actually pause");
+        assert!(*p <= max, "pause {i} = {p:?} exceeds the ladder cap");
+    }
+    // the ladder grows: late pauses sit near the cap
+    assert!(seq_a[11] >= Duration::from_micros(2_500));
+    // different seeds jitter differently (with overwhelming probability)
+    let mut c = Backoff::new(77);
+    let seq_c: Vec<Duration> = (0..12).map(|_| c.pause()).collect();
+    assert_ne!(seq_a, seq_c, "jitter streams must be seed-dependent");
+    // an admission resets the ladder to the base pause
+    a.reset();
+    assert!(a.pause() <= Duration::from_micros(50));
+}

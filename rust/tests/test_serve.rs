@@ -311,9 +311,14 @@ fn load_generator_accounting_is_consistent() {
             rps: 0.0, // pressure mode: every request is eventually admitted
             requests: 40,
             clients: 2,
+            ..Default::default()
         },
     );
     assert_eq!(load.submitted, 40);
+    assert!(
+        load.attempts >= load.submitted,
+        "attempts counts every submit call, including shed retries"
+    );
     assert_eq!(load.completed, 40, "pressure mode loses no requests");
     assert_eq!(load.failed, 0);
     let report = server.shutdown();

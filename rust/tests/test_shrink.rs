@@ -240,6 +240,34 @@ fn dense_halt_resume_is_bitwise_identical() {
     }
 }
 
+/// A `.getackpt` damaged on disk — truncated or bit-flipped at any
+/// 64-byte window — must fail `--resume` with a typed error, never a
+/// panic: these are exactly the bytes a crash-interrupted run reads back
+/// (`util::atomic_write` makes torn files unreachable in practice; this
+/// sweep covers damage from any other source).
+#[test]
+fn corrupt_checkpoints_fail_typed_never_panic() {
+    let ckpt = std::env::temp_dir().join(format!(
+        "geta_test_ckpt_corrupt_{}.getackpt",
+        std::process::id()
+    ));
+    let (halted, _, _) = run(
+        small_exp("mlp_tiny", 0.85, 0.12),
+        &TrainOpts {
+            replan: true,
+            ckpt: Some(ckpt.clone()),
+            halt_at: Some(4),
+            ..Default::default()
+        },
+    );
+    assert!(halted.halted);
+    let bytes = std::fs::read(&ckpt).unwrap();
+    std::fs::remove_file(&ckpt).ok();
+    common::assert_corruption_safe(".getackpt", &bytes, &|b| {
+        geta::coordinator::ckpt::TrainCkpt::from_bytes(b).is_ok()
+    });
+}
+
 /// Periodic checkpointing must not perturb the run: `--ckpt-every` writes
 /// are pure observers of training state.
 #[test]
